@@ -1,0 +1,113 @@
+//! End-to-end validation driver: train the L2 transformer through the AOT
+//! train-step artifact under the Rust training supervisor, with
+//! fused-kernel (online) ABFT verification on every protected GEMM.
+//!
+//! Three runs on the same data stream:
+//!   1. clean        — no faults;
+//!   2. protected    — periodic compute-SEU injection, V-ABFT detection +
+//!                     step rollback/re-execution (the paper's system);
+//!   3. unprotected  — same faults, verification ignored (what SDCs do to
+//!                     a training run).
+//!
+//! The protected loss curve tracks the clean one; the unprotected one
+//! spikes/diverges. Results are appended to EXPERIMENTS.md by hand (see
+//! §End-to-end there).
+//!
+//! ```text
+//! cargo run --release --example training_supervisor -- [--steps 200]
+//!     [--fault-every 10] [--fault-mag 1000] [--log-every 10]
+//! ```
+
+use vabft::cli::Args;
+use vabft::runtime::{artifacts_dir, PjrtRuntime};
+use vabft::train::{StepFault, SyntheticCorpus, Trainer, TrainerConfig};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let steps = args.opt_or("steps", 200usize);
+    let fault_every = args.opt_or("fault-every", 10usize);
+    // Default: an overflow-class SDC (an exponent-bit flip driving the
+    // accumulator to Inf) — §2.1's catastrophic case. NaN poisons the
+    // gradients of an unprotected run permanently; the supervisor's
+    // rollback absorbs it. Finite magnitudes (--fault-mag 1e4) are
+    // self-limiting through RMSNorm and mostly show as loss spikes.
+    let fault_mag = args.opt_or("fault-mag", f32::INFINITY);
+    let log_every = args.opt_or("log-every", 10usize);
+
+    let rt = PjrtRuntime::from_artifacts(&artifacts_dir())?;
+    println!("loaded artifacts on {}; training {steps} steps per run\n", rt.platform());
+
+    let run = |label: &str, inject: bool, rollback: bool| -> anyhow::Result<Vec<f32>> {
+        let cfg = TrainerConfig { rollback_on_detection: rollback, ..Default::default() };
+        let mut trainer = Trainer::new(&rt, cfg)?;
+        let (b, s) = trainer.batch_dims();
+        let mut corpus = SyntheticCorpus::new(256, 1234);
+        let mut losses = Vec::with_capacity(steps);
+        let t0 = std::time::Instant::now();
+        for step in 0..steps {
+            let toks = corpus.batch(b, s + 1);
+            let fault = if inject && step > 0 && step % fault_every == 0 {
+                Some(StepFault {
+                    gemm_index: step % 8, // rotate across the protected GEMMs
+                    row: (step * 13) % 512,
+                    col: (step * 7) % 128,
+                    delta: fault_mag,
+                })
+            } else {
+                None
+            };
+            let out = trainer.step(&toks, fault)?;
+            losses.push(out.loss);
+            if step % log_every == 0 {
+                println!(
+                    "[{label:<12}] step {step:>4}  loss {:.4}  ratio {:>9.3}  {}{}",
+                    out.loss,
+                    out.ratio,
+                    if out.retried { "DETECTED→ROLLBACK+RETRY " } else { "" },
+                    if fault.is_some() && !out.retried { "FAULT APPLIED SILENTLY" } else { "" },
+                );
+            }
+        }
+        println!(
+            "[{label:<12}] done in {:?}; detections {}; final loss {:.4}\n",
+            t0.elapsed(),
+            trainer.detections,
+            losses.last().unwrap()
+        );
+        Ok(losses)
+    };
+
+    let clean = run("clean", false, true)?;
+    let protected = run("protected", true, true)?;
+    let unprotected = run("unprotected", true, false)?;
+
+    // Summary: protected tracks clean; unprotected deviates.
+    let tail = steps.saturating_sub(steps / 5).max(1);
+    let avg = |v: &[f32]| v[tail..].iter().sum::<f32>() / (v.len() - tail) as f32;
+    let (ac, ap, au) = (avg(&clean), avg(&protected), avg(&unprotected));
+    println!("== loss curve summary (mean over final 20% of steps) ==");
+    println!("clean        {ac:.4}");
+    println!("protected    {ap:.4}   (gap to clean {:+.4})", ap - ac);
+    println!("unprotected  {au:.4}   (gap to clean {:+.4})", au - ac);
+    let spike = |v: &[f32]| v.windows(2).map(|w| w[1] - w[0]).fold(0.0f32, f32::max);
+    println!(
+        "largest single-step loss spike: clean {:+.3}, protected {:+.3}, unprotected {:+.3}",
+        spike(&clean),
+        spike(&protected),
+        spike(&unprotected)
+    );
+    assert!(
+        (ap - ac).abs() < 0.15,
+        "protected run must track clean (gap {})",
+        ap - ac
+    );
+    assert!(
+        au.is_nan()
+            || au > ac + 0.05
+            || spike(&unprotected) > spike(&clean).max(0.05) * 5.0,
+        "unprotected run should be visibly worse (tail {au} vs clean {ac}, spike {})",
+        spike(&unprotected)
+    );
+    println!("\ntraining supervisor e2e OK — record these numbers in EXPERIMENTS.md");
+    Ok(())
+}

@@ -1,0 +1,179 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO text artifacts for the Rust
+runtime (L3).
+
+Run once via ``make artifacts``. Python never executes on the request
+path; the Rust binary loads the HLO text with
+``HloModuleProto::from_text_file`` and runs it on the PJRT CPU client.
+
+HLO *text* is the interchange format (NOT ``lowered.compile()`` or proto
+``.serialize()``): jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction
+ids that xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts:
+  ftgemm_f32      — standalone fused ABFT-GEMM (serving building block)
+  ftgemm_f32_correct — same with in-kernel localization + correction
+  train_step      — transformer SGD step with fused verification
+  model_fwd       — transformer inference with fused verification
+plus manifest.tsv (machine-readable, parsed by rust/src/runtime/manifest.rs)
+and manifest.json (human-readable).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.vabft_gemm import vabft_matmul
+
+# Standalone fused-GEMM artifact shape (serving example): activations
+# [M, K] × weights [K, N].
+FTGEMM_M, FTGEMM_K, FTGEMM_N = 64, 128, 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def ftgemm_entry(correct: bool):
+    def fn(a, b, fault):
+        out = vabft_matmul(
+            a, b, fault, bm=FTGEMM_M, bk=FTGEMM_K, correct=correct
+        )
+        return out["c"], out["ratio"], out["d1"], out["loc"]
+
+    spec_a = jax.ShapeDtypeStruct((FTGEMM_M, FTGEMM_K), jnp.float32)
+    spec_b = jax.ShapeDtypeStruct((FTGEMM_K, FTGEMM_N), jnp.float32)
+    spec_f = jax.ShapeDtypeStruct((4,), jnp.float32)
+    return jax.jit(fn).lower(spec_a, spec_b, spec_f)
+
+
+def train_step_entry():
+    param_specs = [
+        jax.ShapeDtypeStruct(s, jnp.float32) for s in model.param_shapes()
+    ]
+    tok_spec = jax.ShapeDtypeStruct((model.BATCH, model.SEQ + 1), jnp.int32)
+    lr_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    fault_spec = jax.ShapeDtypeStruct((4,), jnp.float32)
+
+    def fn(*args):
+        params = list(args[: len(param_specs)])
+        tokens, lr, fault = args[len(param_specs) :]
+        return model.train_step(params, tokens, lr, fault)
+
+    return jax.jit(fn).lower(*param_specs, tok_spec, lr_spec, fault_spec)
+
+
+def model_fwd_entry():
+    param_specs = [
+        jax.ShapeDtypeStruct(s, jnp.float32) for s in model.param_shapes()
+    ]
+    tok_spec = jax.ShapeDtypeStruct((model.BATCH, model.SEQ), jnp.int32)
+    fault_spec = jax.ShapeDtypeStruct((4,), jnp.float32)
+
+    def fn(*args):
+        params = list(args[: len(param_specs)])
+        tokens, fault = args[len(param_specs) :]
+        return model.fwd_eval(params, tokens, fault)
+
+    return jax.jit(fn).lower(*param_specs, tok_spec, fault_spec)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated artifact names to (re)build",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    param_meta = {
+        "n_params": str(len(model.param_shapes())),
+        "batch": f"{model.BATCH},{model.SEQ + 1}",
+        "lr_input": "1",
+        "fault_input": "1",
+        "n_protected_gemms": str(model.N_PROTECTED),
+        "d_model": str(model.D_MODEL),
+        "vocab": str(model.VOCAB),
+    }
+    for i, s in enumerate(model.param_shapes()):
+        param_meta[f"param{i}"] = ",".join(str(d) for d in s)
+
+    artifacts = [
+        (
+            "ftgemm_f32",
+            lambda: ftgemm_entry(correct=False),
+            {
+                "m": str(FTGEMM_M),
+                "k": str(FTGEMM_K),
+                "n": str(FTGEMM_N),
+                "dtype": "f32",
+                "outputs": "c,ratio,d1,loc",
+            },
+        ),
+        (
+            "ftgemm_f32_correct",
+            lambda: ftgemm_entry(correct=True),
+            {
+                "m": str(FTGEMM_M),
+                "k": str(FTGEMM_K),
+                "n": str(FTGEMM_N),
+                "dtype": "f32",
+                "outputs": "c,ratio,d1,loc",
+                "correct": "1",
+            },
+        ),
+        ("train_step", train_step_entry, dict(param_meta)),
+        (
+            "model_fwd",
+            model_fwd_entry,
+            {**param_meta, "batch": f"{model.BATCH},{model.SEQ}"},
+        ),
+    ]
+
+    manifest_lines = []
+    manifest_json = []
+    for name, build, meta in artifacts:
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        if only is not None and name not in only:
+            if os.path.exists(path):
+                manifest_lines.append(_tsv_line(name, fname, meta))
+                manifest_json.append({"name": name, "file": fname, **meta})
+                continue
+        print(f"lowering {name}…", flush=True)
+        text = to_hlo_text(build())
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {len(text)} chars to {path}", flush=True)
+        manifest_lines.append(_tsv_line(name, fname, meta))
+        manifest_json.append({"name": name, "file": fname, **meta})
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("# name\tfile\tkey=value…  (parsed by rust/src/runtime/manifest.rs)\n")
+        f.write("\n".join(manifest_lines) + "\n")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest_json, f, indent=2)
+    print("manifest written.")
+
+
+def _tsv_line(name, fname, meta):
+    kvs = "\t".join(f"{k}={v}" for k, v in sorted(meta.items()))
+    return f"{name}\t{fname}\t{kvs}"
+
+
+if __name__ == "__main__":
+    sys.exit(main())

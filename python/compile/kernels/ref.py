@@ -1,0 +1,101 @@
+"""Pure-jnp oracle for the fused ABFT-GEMM kernel.
+
+Implements the same computation as ``vabft_gemm.vabft_matmul`` with plain
+jnp ops — the correctness reference pytest checks the Pallas kernel
+against. Every formula mirrors the paper:
+
+* checksum encoding (Eq. 1–4) in FP32,
+* verification difference D1/D2 (Eq. 7–8),
+* V-ABFT threshold (Algorithm 1) with the extrema-variance bound
+  (Theorem 1),
+* localization j = D2/D1 − 1 (Eq. 9) and correction C −= D1 (Eq. 10).
+"""
+
+import jax.numpy as jnp
+
+from .vabft_gemm import C_SIGMA, b_row_checksums, b_summary_stats, default_emax_f32
+
+_T_FLOOR = 1e-30
+
+
+def ref_vabft_matmul(
+    a,
+    b,
+    fault=None,
+    *,
+    out_dtype=None,
+    emax=None,
+    c_sigma=C_SIGMA,
+    correct=False,
+    loc_tol=0.45,
+):
+    """Reference implementation; same outputs as ``vabft_matmul``."""
+    m, k = a.shape
+    _, n = b.shape
+    out_dtype = out_dtype or a.dtype
+    if emax is None:
+        emax = default_emax_f32(max(n, k))
+    if fault is None:
+        fault = jnp.array([-1.0, -1.0, 0.0, 0.0], jnp.float32)
+
+    bsum = b_row_checksums(b)
+    bstats = b_summary_stats(b)
+
+    acc = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    ck = jnp.matmul(
+        a.astype(jnp.float32), bsum, preferred_element_type=jnp.float32
+    )
+
+    # fault injection on the accumulator
+    rows = jnp.arange(m, dtype=jnp.float32)[:, None]
+    cols = jnp.arange(n, dtype=jnp.float32)[None, :]
+    hit = (rows == fault[0]) & (cols == fault[1])
+    acc = acc + jnp.where(hit, fault[2] * fault[3], 0.0)
+
+    wvec = jnp.arange(1, n + 1, dtype=jnp.float32)
+    row_sums = jnp.sum(acc, axis=1)
+    w_sums = jnp.sum(acc * wvec[None, :], axis=1)
+    d1 = row_sums - ck[:, 0]
+    d2 = w_sums - ck[:, 1]
+
+    af = a.astype(jnp.float32)
+    mu_a = jnp.mean(af, axis=1)
+    sig2_a = jnp.maximum(
+        (jnp.max(af, axis=1) - mu_a) * (mu_a - jnp.min(af, axis=1)), 0.0
+    )
+    sig_a = jnp.sqrt(sig2_a)
+    nf = float(n)
+    t_det = nf * jnp.abs(mu_a) * bstats[0]
+    t_var23 = c_sigma * jnp.sqrt(
+        nf * mu_a * mu_a * bstats[2] + nf * nf * sig2_a * bstats[1]
+    )
+    t_var4 = c_sigma * jnp.sqrt(nf) * sig_a * jnp.sqrt(bstats[2])
+    thr = emax * (t_det + t_var23 + t_var4) + _T_FLOOR
+
+    # Same Inf/NaN sanitization as the kernel (see vabft_gemm._kernel).
+    raw = jnp.abs(d1) / thr
+    row_finite = jnp.all(jnp.isfinite(acc), axis=1)
+    ratio = jnp.where(row_finite & jnp.isfinite(raw), raw, 1e30)
+    flagged = ratio > 1.0
+    wj = d2 / jnp.where(d1 == 0.0, 1.0, d1)
+    wr = jnp.round(wj)
+    consistent = (
+        flagged
+        & (jnp.abs(wj - wr) <= loc_tol)
+        & (wr >= 1.0)
+        & (wr <= nf)
+        & jnp.isfinite(wj)
+    )
+    loc = jnp.where(consistent, wr - 1.0, -1.0)
+    if correct:
+        colmask = cols == loc[:, None]
+        acc = acc - jnp.where(colmask & consistent[:, None], d1[:, None], 0.0)
+
+    return {
+        "c": acc.astype(out_dtype),
+        "acc": acc,
+        "ratio": ratio,
+        "d1": d1,
+        "loc": loc,
+        "threshold": thr,
+    }

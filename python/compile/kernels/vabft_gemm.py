@@ -1,0 +1,361 @@
+"""L1: fused ABFT-GEMM Pallas kernel with in-kernel V-ABFT verification.
+
+This is the paper's "online / fused-kernel ABFT" (§3.6) re-thought for the
+TPU programming model (DESIGN.md §Hardware-Adaptation):
+
+* the GEMM is tiled over a (M/bm, K/bk) grid; the FP32 accumulator tile
+  lives across the K grid dimension (the CUDA version kept it in
+  registers/shared memory per threadblock; here BlockSpec + the revisiting
+  output ref express the same HBM<->VMEM schedule);
+* operand tiles feed the MXU via ``preferred_element_type=float32``
+  (tensor-core WMMA -> MXU systolic array);
+* on the last K step -- while the result is still in the FP32 accumulator,
+  i.e. *before* output quantization -- the kernel computes the row-checksum
+  difference D1, the position-weighted difference D2, the V-ABFT threshold
+  (Algorithm 1) from single-pass A-row statistics, and optionally corrects
+  a localized single-event upset in place (Eq. 10).
+
+Verifying pre-quantization is what gives low-precision GEMM FP32-level
+thresholds (e_max ~ 1e-6) -- the ~1000x detection-granularity headline.
+
+The kernel MUST run with ``interpret=True``: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Interpret mode
+lowers to plain HLO, which both pytest and the Rust runtime consume.
+
+A fault-injection input emulates a compute SEU: ``fault = [row, col,
+delta, enable]`` adds ``delta`` to accumulator element (row, col) after
+accumulation but before verification -- exactly where a real upset would
+corrupt the output path.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Confidence multiplier c_sigma (paper: 2.5 ~ 99% Gaussian coverage).
+C_SIGMA = 2.5
+
+# Tiny floor so clean-but-zero thresholds never divide by zero.
+_T_FLOOR = 1e-30
+
+# Finite sentinel for "row is poisoned by Inf/NaN" — large enough to flag,
+# finite so XLA max-reductions cannot drop it.
+_RATIO_SENTINEL = 1e30
+
+
+def default_emax_f32(depth: int, margin: float = 4.0) -> float:
+    """e_max law for FP32 accumulation with per-step rounding.
+
+    Mirrors the Rust ``EmaxTable::for_model`` sequential law
+    (1.2*sqrt(n) + 2)*u_f32 with a safety margin for XLA's (unspecified,
+    possibly vectorized-sequential) reduction order.
+    """
+    u = 2.0 ** -24
+    return margin * ((1.2 * depth ** 0.5 + 2.0) * u)
+
+
+def b_row_checksums(b):
+    """[B*r1 | B*r2] per row of B, computed in FP32 (fused/online ABFT
+    keeps encodings in the datapath -- they are never quantized to the
+    operand dtype)."""
+    bf = b.astype(jnp.float32)
+    n = b.shape[1]
+    w = jnp.arange(1, n + 1, dtype=jnp.float32)
+    r1 = jnp.sum(bf, axis=1)
+    r2 = jnp.sum(bf * w[None, :], axis=1)
+    return jnp.stack([r1, r2], axis=1)  # [K, 2]
+
+
+def b_summary_stats(b):
+    """V-ABFT B-side aggregates (Algorithm 1 lines 3-6):
+    [sum_k |mu_Bk|, sum_k mu_Bk^2, sum_k sigma_Bk^2] with the
+    extrema-variance bound sigma^2 <= (max-mu)(mu-min)."""
+    bf = b.astype(jnp.float32)
+    mu = jnp.mean(bf, axis=1)
+    mx = jnp.max(bf, axis=1)
+    mn = jnp.min(bf, axis=1)
+    sig2 = jnp.maximum((mx - mu) * (mu - mn), 0.0)
+    return jnp.stack(
+        [jnp.sum(jnp.abs(mu)), jnp.sum(mu * mu), jnp.sum(sig2)]
+    )  # [3]
+
+
+def _kernel(
+    a_ref,
+    b_ref,
+    bsum_ref,
+    bstats_ref,
+    fault_ref,
+    c_ref,
+    acc_ref,
+    ck_ref,
+    astats_ref,
+    ratio_ref,
+    d1_ref,
+    loc_ref,
+    *,
+    k_steps: int,
+    k_total: int,
+    n: int,
+    bm: int,
+    emax: float,
+    c_sigma: float,
+    correct: bool,
+    loc_tol: float,
+):
+    i = pl.program_id(0)
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        ck_ref[...] = jnp.zeros_like(ck_ref)
+        astats_ref[...] = jnp.concatenate(
+            [
+                jnp.zeros((bm, 1), jnp.float32),
+                jnp.full((bm, 1), -jnp.inf, jnp.float32),
+                jnp.full((bm, 1), jnp.inf, jnp.float32),
+                jnp.zeros((bm, 1), jnp.float32),
+            ],
+            axis=1,
+        )
+
+    a = a_ref[...]
+    af = a.astype(jnp.float32)
+    # MXU matmul with FP32 accumulation (tensor-core / Cube analogue).
+    acc_ref[...] += jax.lax.dot_general(
+        a,
+        b_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # Checksum path: A-tile x [Br1 | Br2], same datapath, FP32 throughout.
+    ck_ref[...] += jax.lax.dot_general(
+        af,
+        bsum_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # Single-pass A-row statistics (Algorithm 1 lines 1-2), fused into the
+    # K loop: running sum / max / min.
+    st = astats_ref[...]
+    astats_ref[...] = jnp.stack(
+        [
+            st[:, 0] + jnp.sum(af, axis=1),
+            jnp.maximum(st[:, 1], jnp.max(af, axis=1)),
+            jnp.minimum(st[:, 2], jnp.min(af, axis=1)),
+            st[:, 3],
+        ],
+        axis=1,
+    )
+
+    @pl.when(kk == k_steps - 1)
+    def _epilogue():
+        # --- fault injection: a compute SEU lands in the accumulator ----
+        frow, fcol, fdelta, fen = (
+            fault_ref[0],
+            fault_ref[1],
+            fault_ref[2],
+            fault_ref[3],
+        )
+        local = frow - (i * bm).astype(jnp.float32)
+        rows = jax.lax.broadcasted_iota(jnp.float32, (bm, n), 0)
+        cols = jax.lax.broadcasted_iota(jnp.float32, (bm, n), 1)
+        hit = (rows == local) & (cols == fcol)
+        acc_ref[...] += jnp.where(hit, fdelta * fen, 0.0)
+
+        acc = acc_ref[...]
+        # --- verification difference, pre-quantization (online ABFT) ----
+        wvec = jax.lax.broadcasted_iota(jnp.float32, (1, n), 1) + 1.0
+        row_sums = jnp.sum(acc, axis=1)
+        w_sums = jnp.sum(acc * wvec, axis=1)
+        ck = ck_ref[...]
+        d1 = row_sums - ck[:, 0]
+        d2 = w_sums - ck[:, 1]
+
+        # --- V-ABFT threshold (Algorithm 1) -----------------------------
+        st2 = astats_ref[...]
+        mu_a = st2[:, 0] / float(k_total)
+        sig2_a = jnp.maximum((st2[:, 1] - mu_a) * (mu_a - st2[:, 2]), 0.0)
+        sig_a = jnp.sqrt(sig2_a)
+        s_absmu = bstats_ref[0]
+        s_mu2 = bstats_ref[1]
+        s_sig2 = bstats_ref[2]
+        nf = float(n)
+        t_det = nf * jnp.abs(mu_a) * s_absmu
+        t_var23 = c_sigma * jnp.sqrt(
+            nf * mu_a * mu_a * s_sig2 + nf * nf * sig2_a * s_mu2
+        )
+        t_var4 = c_sigma * jnp.sqrt(nf) * sig_a * jnp.sqrt(s_sig2)
+        thr = emax * (t_det + t_var23 + t_var4) + _T_FLOOR
+
+        # Detection ratio, sanitized to a finite sentinel: XLA's max
+        # reduction may drop NaN (and a NaN threshold would launder an
+        # Inf fault into NaN), so Inf/NaN anywhere in the row — the
+        # catastrophic overflow class of §2.1 — must surface as a large
+        # *finite* ratio that survives every downstream max().
+        raw = jnp.abs(d1) / thr
+        row_finite = jnp.all(jnp.isfinite(acc), axis=1)
+        ratio = jnp.where(
+            row_finite & jnp.isfinite(raw), raw, _RATIO_SENTINEL
+        )
+        flagged = ratio > 1.0
+
+        # --- localization + online correction (Eq. 9-10) ----------------
+        wj = d2 / jnp.where(d1 == 0.0, 1.0, d1)  # ~ j+1
+        wr = jnp.round(wj)
+        consistent = (
+            flagged
+            & (jnp.abs(wj - wr) <= loc_tol)
+            & (wr >= 1.0)
+            & (wr <= nf)
+            & jnp.isfinite(wj)
+        )
+        loc = jnp.where(consistent, wr - 1.0, -1.0)
+        if correct:
+            colmask = cols == loc[:, None]
+            fix = jnp.where(
+                colmask & consistent[:, None], d1[:, None], 0.0
+            )
+            acc = acc - fix
+            acc_ref[...] = acc
+
+        ratio_ref[...] = ratio[:, None]
+        d1_ref[...] = d1[:, None]
+        loc_ref[...] = loc[:, None]
+        # --- output quantization happens only now ------------------------
+        c_ref[...] = acc.astype(c_ref.dtype)
+
+
+def vabft_matmul(
+    a,
+    b,
+    fault=None,
+    *,
+    out_dtype=None,
+    bm=None,
+    bk=None,
+    emax=None,
+    c_sigma=C_SIGMA,
+    correct=False,
+    loc_tol=0.45,
+    interpret=True,
+):
+    """Fused ABFT-protected matmul: ``C = A @ B`` with in-kernel V-ABFT.
+
+    Returns a dict with:
+      c      -- [M, N] product in ``out_dtype`` (default: A's dtype)
+      acc    -- [M, N] FP32 accumulator (pre-quantization values)
+      ratio  -- [M] verification ratio |D1| / T  (>1 -> fault detected)
+      d1     -- [M] raw verification difference
+      loc    -- [M] localized fault column (or -1)
+
+    ``fault`` is ``[row, col, delta, enable]`` (f32): adds ``delta`` to
+    accumulator element (row, col) pre-verification when ``enable > 0``.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"shape mismatch {a.shape} @ {b.shape}"
+    out_dtype = out_dtype or a.dtype
+    bm = bm or min(m, 128)
+    bk = bk or min(k, 512)
+    assert m % bm == 0, f"M={m} not divisible by bm={bm}"
+    assert k % bk == 0, f"K={k} not divisible by bk={bk}"
+    k_steps = k // bk
+    if emax is None:
+        emax = default_emax_f32(max(n, k))
+    if fault is None:
+        fault = jnp.array([-1.0, -1.0, 0.0, 0.0], jnp.float32)
+
+    bsum = b_row_checksums(b)  # [K, 2] f32
+    bstats = b_summary_stats(b)  # [3]   f32
+
+    kernel = partial(
+        _kernel,
+        k_steps=k_steps,
+        k_total=k,
+        n=n,
+        bm=bm,
+        emax=float(emax),
+        c_sigma=float(c_sigma),
+        correct=correct,
+        loc_tol=float(loc_tol),
+    )
+    grid = (m // bm, k_steps)
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, kk: (i, kk)),
+            pl.BlockSpec((bk, n), lambda i, kk: (kk, 0)),
+            pl.BlockSpec((bk, 2), lambda i, kk: (kk, 0)),
+            pl.BlockSpec((3,), lambda i, kk: (0,)),
+            pl.BlockSpec((4,), lambda i, kk: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, n), lambda i, kk: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i, kk: (i, 0)),
+            pl.BlockSpec((bm, 2), lambda i, kk: (i, 0)),
+            pl.BlockSpec((bm, 4), lambda i, kk: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, kk: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, kk: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, kk: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), out_dtype),
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((m, 2), jnp.float32),
+            jax.ShapeDtypeStruct((m, 4), jnp.float32),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b, bsum, bstats, fault)
+    c, acc, _ck, _astats, ratio, d1, loc = outs
+    return {
+        "c": c,
+        "acc": acc,
+        "ratio": ratio[:, 0],
+        "d1": d1[:, 0],
+        "loc": loc[:, 0],
+    }
+
+
+def protected_matmul_factory(gemm_id: int, **kw):
+    """A differentiable protected matmul bound to a static GEMM id.
+
+    Returns ``f(x, w, fault) -> (y_f32, max_ratio)`` where ``fault`` is the
+    model-wide ``[gemm_id, row, col, delta]`` vector; the fault applies
+    only when its id matches. The backward pass uses plain matmuls (ABFT
+    protects the forward path; see DESIGN.md).
+    """
+
+    @jax.custom_vjp
+    def f(x, w, fault):
+        y, r = _fwd_compute(x, w, fault)
+        return y, r
+
+    def _fwd_compute(x, w, fault):
+        enable = jnp.where(fault[0] == float(gemm_id), 1.0, 0.0)
+        local_fault = jnp.array(
+            [0.0, 0.0, 0.0, 0.0], jnp.float32
+        ).at[0].set(fault[1]).at[1].set(fault[2]).at[2].set(fault[3]).at[3].set(enable)
+        out = vabft_matmul(x, w, local_fault, **kw)
+        return out["acc"], jnp.max(out["ratio"])
+
+    def f_fwd(x, w, fault):
+        y, r = _fwd_compute(x, w, fault)
+        return (y, r), (x, w)
+
+    def f_bwd(res, cot):
+        x, w = res
+        gy, _gr = cot
+        gx = gy @ w.T.astype(gy.dtype)
+        gw = x.T.astype(gy.dtype) @ gy
+        return gx, gw, jnp.zeros(4, jnp.float32)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f

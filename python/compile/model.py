@@ -1,0 +1,158 @@
+"""L2: GPT-style transformer with ABFT-protected matmuls.
+
+Every projection in the model (QKV, attention output, both FFN layers)
+routes through the L1 fused ABFT-GEMM Pallas kernel; the forward pass
+aggregates the maximum verification ratio max|E|/T across all protected
+GEMMs, which the Rust training supervisor monitors (ratio > 1 ⇒ a fault
+tripped a V-ABFT threshold ⇒ discard the step and re-execute).
+
+A model-wide ``fault = [gemm_id, row, col, delta]`` input routes an
+injected accumulator corruption to exactly one protected GEMM — the
+experiment hook for the end-to-end driver.
+
+Architecture (sized so a few hundred CPU training steps are minutes, not
+hours; scales by constants only):
+    vocab 256 (byte-level), seq 64, d_model 128, 2 layers, 4 heads,
+    FFN 4×d. Tied unembedding. Parameter-free RMSNorm.
+
+Parameter order (the Rust supervisor relies on it; aot.py writes it into
+the manifest):
+    0: embed   [V, D]
+    1: pos     [S, D]
+    per layer l (2 + 4l …): wqkv [D, 3D], wo [D, D], w1 [D, F], w2 [F, D]
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.vabft_gemm import protected_matmul_factory
+
+# ---- configuration ---------------------------------------------------------
+
+VOCAB = 256
+SEQ = 64
+D_MODEL = 128
+N_LAYERS = 2
+N_HEADS = 4
+D_FF = 4 * D_MODEL
+BATCH = 8
+
+# Protected GEMM ids, in call order: layer l contributes ids
+# 4l+0 (qkv), 4l+1 (wo), 4l+2 (w1), 4l+3 (w2).
+N_PROTECTED = 4 * N_LAYERS
+
+
+def param_shapes():
+    shapes = [(VOCAB, D_MODEL), (SEQ, D_MODEL)]
+    for _ in range(N_LAYERS):
+        shapes += [
+            (D_MODEL, 3 * D_MODEL),
+            (D_MODEL, D_MODEL),
+            (D_MODEL, D_FF),
+            (D_FF, D_MODEL),
+        ]
+    return shapes
+
+
+def init_params(key):
+    shapes = param_shapes()
+    keys = jax.random.split(key, len(shapes))
+    out = []
+    for k, s in zip(keys, shapes):
+        std = 0.02 if len(s) < 2 or s == (VOCAB, D_MODEL) or s == (SEQ, D_MODEL) else s[0] ** -0.5
+        out.append(jax.random.normal(k, s, jnp.float32) * std)
+    return out
+
+
+# Pre-built protected matmul closures, one per GEMM id. bm sized to the
+# flattened token dimension (BATCH*SEQ = 512 → bm 128 tiles).
+_PROTECTED = [
+    protected_matmul_factory(gid, bm=128, bk=128) for gid in range(N_PROTECTED)
+]
+
+
+def _rmsnorm(x):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _attention(x, wqkv, wo, fault, gid0):
+    """Causal multi-head attention; QKV and output projections protected."""
+    bs, d = x.shape  # [B*S, D]
+    qkv, r1 = _PROTECTED[gid0](x, wqkv, fault)  # [B*S, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=1)
+
+    def heads(t):
+        return t.reshape(-1, SEQ, N_HEADS, d // N_HEADS).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)  # [B, H, S, Dh]
+    scale = (d // N_HEADS) ** -0.5
+    att = jnp.einsum("bhsd,bhtd->bhst", q, k) * scale
+    mask = jnp.tril(jnp.ones((SEQ, SEQ), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    y = jnp.einsum("bhst,bhtd->bhsd", att, v)
+    y = y.transpose(0, 2, 1, 3).reshape(bs, d)
+    y, r2 = _PROTECTED[gid0 + 1](y, wo, fault)
+    return y, jnp.maximum(r1, r2)
+
+
+def _ffn(x, w1, w2, fault, gid0):
+    h, r1 = _PROTECTED[gid0](x, w1, fault)
+    h = jax.nn.gelu(h)
+    y, r2 = _PROTECTED[gid0 + 1](h, w2, fault)
+    return y, jnp.maximum(r1, r2)
+
+
+def forward(params, tokens, fault):
+    """Logits + max verification ratio.
+
+    tokens: i32[B, S]; fault: f32[4] = [gemm_id, row, col, delta]
+    (gemm_id < 0 disables injection).
+    """
+    embed, pos = params[0], params[1]
+    x = embed[tokens] + pos[None, :, :]  # [B, S, D]
+    x = x.reshape(-1, D_MODEL)  # [B*S, D]
+    ratio = jnp.float32(0.0)
+    for l in range(N_LAYERS):
+        wqkv, wo, w1, w2 = params[2 + 4 * l : 6 + 4 * l]
+        h, r = _attention(_rmsnorm(x), wqkv, wo, fault, 4 * l)
+        x = x + h
+        ratio = jnp.maximum(ratio, r)
+        h, r = _ffn(_rmsnorm(x), w1, w2, fault, 4 * l + 2)
+        x = x + h
+        ratio = jnp.maximum(ratio, r)
+    x = _rmsnorm(x)
+    logits = x @ embed.T  # tied unembedding (unprotected epilogue)
+    return logits.reshape(-1, SEQ, VOCAB), ratio
+
+
+def loss_fn(params, tokens_with_targets, fault):
+    """Next-token cross entropy. tokens_with_targets: i32[B, S+1]."""
+    inp = tokens_with_targets[:, :-1]
+    tgt = tokens_with_targets[:, 1:]
+    logits, ratio = forward(params, inp, fault)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll), ratio
+
+
+@partial(jax.jit, static_argnums=())
+def train_step(params, tokens, lr, fault):
+    """One SGD step. Returns (new_params…, loss, ratio) as a flat tuple.
+
+    When the returned ratio exceeds 1 the supervisor must discard
+    new_params (they were computed from a corrupted forward pass).
+    """
+    (loss, ratio), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, tokens, fault
+    )
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return tuple(new_params) + (loss, ratio)
+
+
+def fwd_eval(params, tokens, fault):
+    """Inference entry point: logits + ratio (serving artifact)."""
+    logits, ratio = forward(params, tokens, fault)
+    return logits, ratio

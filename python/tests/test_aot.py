@@ -1,0 +1,66 @@
+"""AOT pipeline tests: lowering produces parseable HLO text with the right
+entry signatures, and the manifest matches the model contract."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+jax.config.update("jax_platforms", "cpu")
+
+from compile import aot, model
+
+
+def test_ftgemm_entry_lowers_to_hlo_text():
+    text = aot.to_hlo_text(aot.ftgemm_entry(correct=False))
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # f32[64,128] input signature appears in the module
+    assert f"f32[{aot.FTGEMM_M},{aot.FTGEMM_K}]" in text
+    # interpret-mode pallas must lower to plain HLO: no custom-calls that
+    # the CPU PJRT client cannot execute
+    assert "custom_call_target=\"Mosaic\"" not in text
+
+
+def test_manifest_contract_matches_model():
+    shapes = model.param_shapes()
+    meta_batch = f"{model.BATCH},{model.SEQ + 1}"
+    # mirror of what aot.main() writes; the real file is covered by the
+    # rust integration tests
+    assert len(shapes) == 2 + 4 * model.N_LAYERS
+    assert meta_batch.count(",") == 1
+
+
+@pytest.mark.skipif(
+    not os.path.exists(
+        os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.tsv")
+    ),
+    reason="artifacts not built",
+)
+def test_written_manifest_lists_all_artifacts():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.tsv")
+    with open(path) as f:
+        text = f.read()
+    for name in ["ftgemm_f32", "ftgemm_f32_correct", "train_step", "model_fwd"]:
+        assert name in text, f"{name} missing from manifest"
+    # param shape metadata round-trips
+    for i, s in enumerate(model.param_shapes()):
+        assert f"param{i}=" + ",".join(str(d) for d in s) in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(
+        os.path.join(os.path.dirname(__file__), "../../artifacts/train_step.hlo.txt")
+    ),
+    reason="artifacts not built",
+)
+def test_written_hlo_is_parseable_text():
+    path = os.path.join(
+        os.path.dirname(__file__), "../../artifacts/train_step.hlo.txt"
+    )
+    with open(path) as f:
+        head = f.read(4096)
+    assert head.startswith("HloModule")
+    # int32 token input present
+    assert f"s32[{model.BATCH},{model.SEQ + 1}]" in head or "s32[" in head

@@ -1,0 +1,192 @@
+"""L1 kernel correctness: Pallas fused ABFT-GEMM vs the pure-jnp oracle.
+
+The core correctness signal for the compile path: the kernel must (a)
+compute the same product, checksums, thresholds and verdicts as ref.py,
+(b) never flag clean data, (c) detect/localize/correct injected faults.
+Hypothesis sweeps shapes and dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_platforms", "cpu")
+
+from compile.kernels.ref import ref_vabft_matmul
+from compile.kernels.vabft_gemm import (
+    b_row_checksums,
+    b_summary_stats,
+    default_emax_f32,
+    vabft_matmul,
+)
+
+
+def rand(key, shape, dtype=jnp.float32, mean=0.0, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale + mean).astype(
+        dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n,bm,bk", [
+    (32, 64, 48, 32, 64),     # single tile
+    (64, 128, 96, 32, 64),    # multi-tile both dims
+    (128, 256, 64, 64, 64),   # deeper K loop
+    (8, 8, 8, 8, 8),          # minimal
+])
+def test_kernel_matches_ref(m, k, n, bm, bk):
+    a = rand(0, (m, k))
+    b = rand(1, (k, n))
+    out = vabft_matmul(a, b, bm=bm, bk=bk)
+    ref = ref_vabft_matmul(a, b)
+    np.testing.assert_allclose(out["acc"], ref["acc"], rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(out["c"], ref["c"], rtol=1e-5, atol=1e-4)
+    # D1 is a difference of near-equal sums: compare against the threshold
+    # scale rather than elementwise (reduction orders differ slightly).
+    thr = np.asarray(ref["threshold"])
+    assert np.all(np.abs(np.asarray(out["d1"])) < thr)
+    assert float(jnp.max(out["ratio"])) < 1.0
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtypes(dtype):
+    a = rand(2, (32, 64), dtype)
+    b = rand(3, (64, 32), dtype)
+    out = vabft_matmul(a, b, bm=32, bk=64)
+    assert out["c"].dtype == dtype
+    assert out["acc"].dtype == jnp.float32
+    # product sanity vs fp32 matmul
+    ref = jnp.matmul(
+        a.astype(jnp.float32), b.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(out["acc"], ref, rtol=2e-2, atol=2e-1)
+    assert float(jnp.max(out["ratio"])) < 1.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mt=st.integers(1, 4),
+    kt=st.integers(1, 4),
+    n=st.sampled_from([8, 24, 56, 96]),
+    seed=st.integers(0, 2**31 - 1),
+    mean=st.sampled_from([0.0, 1.0, -0.5]),
+    bf16=st.booleans(),
+)
+def test_kernel_vs_ref_hypothesis(mt, kt, n, seed, mean, bf16):
+    bm, bk = 16, 32
+    m, k = mt * bm, kt * bk
+    dtype = jnp.bfloat16 if bf16 else jnp.float32
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    a = (jax.random.normal(k1, (m, k)) + mean).astype(dtype)
+    b = (jax.random.normal(k2, (k, n)) + mean).astype(dtype)
+    out = vabft_matmul(a, b, bm=bm, bk=bk)
+    ref = ref_vabft_matmul(a, b)
+    np.testing.assert_allclose(out["acc"], ref["acc"], rtol=1e-4, atol=1e-2)
+    # clean data must never flag — the zero-FPR invariant
+    assert float(jnp.max(out["ratio"])) < 1.0, "false positive on clean data"
+
+
+# ---------------------------------------------------------------------------
+# detection / localization / correction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("frow,fcol,fdelta", [
+    (0, 0, 10.0),
+    (31, 47, -25.0),
+    (17, 3, 3.0),
+])
+def test_fault_detected_and_localized(frow, fcol, fdelta):
+    a = rand(4, (32, 64), mean=0.5)
+    b = rand(5, (64, 48), mean=0.5)
+    fault = jnp.array([frow, fcol, fdelta, 1.0], jnp.float32)
+    out = vabft_matmul(a, b, fault, bm=32, bk=64)
+    assert float(out["ratio"][frow]) > 1.0
+    assert int(out["loc"][frow]) == fcol
+    assert abs(float(out["d1"][frow]) - fdelta) < 0.05 * abs(fdelta) + 1e-2
+    # unaffected rows stay clean
+    mask = np.arange(32) != frow
+    assert float(np.max(np.asarray(out["ratio"])[mask])) < 1.0
+
+
+def test_in_kernel_correction_restores_clean_product():
+    a = rand(6, (64, 128))
+    b = rand(7, (128, 64))
+    clean = vabft_matmul(a, b, bm=32, bk=64)
+    fault = jnp.array([9.0, 13.0, 50.0, 1.0], jnp.float32)
+    fixed = vabft_matmul(a, b, fault, bm=32, bk=64, correct=True)
+    diff = float(jnp.max(jnp.abs(fixed["acc"] - clean["acc"])))
+    # residual = D1's rounding noise, far below the fault magnitude
+    assert diff < 1e-3, diff
+    assert float(fixed["ratio"][9]) > 1.0  # it was seen
+
+
+def test_kernel_fault_matches_ref_fault():
+    a = rand(8, (32, 32))
+    b = rand(9, (32, 32))
+    fault = jnp.array([5.0, 6.0, 7.0, 1.0], jnp.float32)
+    out = vabft_matmul(a, b, fault, bm=16, bk=16)
+    ref = ref_vabft_matmul(a, b, fault)
+    np.testing.assert_allclose(out["acc"], ref["acc"], rtol=1e-5, atol=1e-4)
+    assert int(out["loc"][5]) == int(ref["loc"][5]) == 6
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    frow=st.integers(0, 31),
+    fcol=st.integers(0, 31),
+    logmag=st.floats(0.5, 4.0),
+    sign=st.booleans(),
+)
+def test_detect_correct_roundtrip_hypothesis(seed, frow, fcol, logmag, sign):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (32, 64), jnp.float32)
+    b = jax.random.normal(k2, (64, 32), jnp.float32)
+    delta = (10.0 ** logmag) * (1.0 if sign else -1.0)
+    fault = jnp.array([frow, fcol, delta, 1.0], jnp.float32)
+    out = vabft_matmul(a, b, fault, bm=32, bk=64, correct=True)
+    clean = vabft_matmul(a, b, bm=32, bk=64)
+    assert float(out["ratio"][frow]) > 1.0
+    assert int(out["loc"][frow]) == fcol
+    assert float(jnp.max(jnp.abs(out["acc"] - clean["acc"]))) < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# threshold building blocks
+# ---------------------------------------------------------------------------
+
+
+def test_b_row_checksums_formulas():
+    b = jnp.array([[1.0, 2.0, 3.0], [4.0, 5.0, 6.0]], jnp.float32)
+    cs = b_row_checksums(b)
+    np.testing.assert_allclose(cs[:, 0], [6.0, 15.0])
+    np.testing.assert_allclose(cs[:, 1], [14.0, 32.0])  # 1·1+2·2+3·3 …
+
+
+def test_b_summary_stats_extrema_bound():
+    b = jnp.array([[1.0, -1.0, 1.0, -1.0]], jnp.float32)
+    s = b_summary_stats(b)
+    # mu=0, sigma² bound = (1-0)(0+1) = 1
+    np.testing.assert_allclose(s, [0.0, 0.0, 1.0], atol=1e-7)
+
+
+def test_default_emax_grows_with_depth():
+    assert default_emax_f32(4096) > default_emax_f32(64)
+    assert default_emax_f32(1024) < 1e-4  # stays FP32-scale
+
+
+def test_zero_matrices_do_not_flag():
+    a = jnp.zeros((16, 32), jnp.float32)
+    b = jnp.zeros((32, 16), jnp.float32)
+    out = vabft_matmul(a, b, bm=16, bk=32)
+    assert float(jnp.max(out["ratio"])) < 1.0
+    assert float(jnp.max(jnp.abs(out["c"]))) == 0.0

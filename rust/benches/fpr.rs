@@ -1,0 +1,68 @@
+//! Paper §6.4: false positive rate — zero across all distributions and
+//! precisions (BF16/FP16/FP32), offline and online verification.
+
+use vabft::abft::{FtGemm, Verdict, VerifyPolicy};
+use vabft::bench_harness::BenchMode;
+use vabft::fp::Precision;
+use vabft::gemm::{AccumModel, GemmEngine};
+use vabft::matrix::Matrix;
+use vabft::report::Table;
+use vabft::rng::{Distribution, Xoshiro256pp};
+use vabft::threshold::VabftThreshold;
+
+fn main() {
+    let mode = BenchMode::from_env();
+    mode.banner("fpr");
+    // paper: 100k trials/config; quick: 200 multiplies × 32 rows ≈ 6.4k
+    // row-verifications per config; full: 3000 × 32 ≈ 100k.
+    let multiplies = mode.pick(200, 3000);
+
+    let precisions = [Precision::Bf16, Precision::F16, Precision::F32];
+    let dists = Distribution::paper_suite();
+
+    let mut t = Table::new(
+        "§6.4 — False positives over clean row verifications (must all be 0)",
+        &["Precision", "Distribution", "mode", "rows checked", "false positives"],
+    );
+    let mut total_fp = 0usize;
+    for p in precisions {
+        let model = if p == Precision::F32 {
+            AccumModel::gpu_highprec(p)
+        } else {
+            AccumModel::wide(p)
+        };
+        for (name, d) in &dists {
+            for online in [false, true] {
+                let ft = FtGemm::new(
+                    GemmEngine::new(model),
+                    Box::new(VabftThreshold::default()),
+                    VerifyPolicy::detect_only(online),
+                );
+                let mut rows = 0usize;
+                let mut fp = 0usize;
+                let mut rng = Xoshiro256pp::from_stream(0xF9, p.bits() as u64);
+                for i in 0..multiplies {
+                    let (m, k, n) = (32, 96 + (i % 3) * 32, 64);
+                    let a = Matrix::sample_in(m, k, d, model.input, &mut rng);
+                    let b = Matrix::sample_in(k, n, d, model.input, &mut rng);
+                    let out = ft.multiply(&a, &b).unwrap();
+                    rows += out.report.rows_checked;
+                    if out.report.verdict != Verdict::Clean {
+                        fp += out.report.detections.len();
+                    }
+                }
+                total_fp += fp;
+                t.row(vec![
+                    p.name().to_string(),
+                    name.to_string(),
+                    if online { "online" } else { "offline" }.to_string(),
+                    rows.to_string(),
+                    fp.to_string(),
+                ]);
+            }
+        }
+    }
+    t.print();
+    println!("TOTAL false positives: {total_fp}   (paper §6.4: 0 across all configs)");
+    assert_eq!(total_fp, 0, "FPR must be zero");
+}

@@ -1,0 +1,106 @@
+//! Paper §6.7: real model data — 0% FPR on LLaMA-7B / GPT-2 / ViT-B/32
+//! weight matrices.
+//!
+//! Checkpoints are not available in this sandbox; per DESIGN.md §6 we use
+//! synthetic weight tensors with the published shapes and layer-statistic
+//! profiles (V-ABFT consumes only row-wise max/min/mean), plus — when AOT
+//! artifacts exist — the actual weights of our own trained L2 transformer.
+
+use vabft::bench_harness::BenchMode;
+use vabft::experiments::run_real_model;
+use vabft::report::Table;
+
+fn main() {
+    let mode = BenchMode::from_env();
+    mode.banner("real_model");
+    // scale divides the published dims; layers per family; GEMMs per matrix
+    let (scale, layers, gemms) = mode.pick((16, 2, 3), (4, 8, 6));
+
+    let mut t = Table::new(
+        "§6.7 — Real-model-profile weights: V-ABFT false positives",
+        &["Model family", "weight matrices", "row verifications", "false positives"],
+    );
+    let mut total_fp = 0;
+    for family in ["llama-7b", "gpt2", "vit-b32"] {
+        let row = run_real_model(family, scale, layers, gemms, true, 0x6E7);
+        total_fp += row.false_positives;
+        t.row(vec![
+            row.family,
+            row.matrices.to_string(),
+            row.verifications.to_string(),
+            row.false_positives.to_string(),
+        ]);
+    }
+    t.print();
+    println!("(shapes scaled 1/{scale}; {layers} layers per family)");
+
+    // Our own trained transformer's weights, via the AOT training path.
+    trained_weights_check(&mode);
+
+    println!("\nPaper §6.7: LLaMA-7B 111 matrices 0% FPR; GPT-2 5379 verifications 0% FPR;");
+    println!("  ViT-B/32 5937 sampled verifications 0% FPR.");
+    assert_eq!(total_fp, 0);
+}
+
+/// Train the L2 transformer for a few steps through the PJRT artifact and
+/// verify its *trained* weight tensors with V-ABFT (skips without
+/// artifacts).
+fn trained_weights_check(mode: &BenchMode) {
+    use vabft::abft::{FtGemm, Verdict, VerifyPolicy};
+    use vabft::fp::Precision;
+    use vabft::gemm::{AccumModel, GemmEngine};
+    use vabft::matrix::Matrix;
+    use vabft::rng::{Distribution, Xoshiro256pp};
+    use vabft::runtime::{artifacts_dir, PjrtRuntime};
+    use vabft::threshold::VabftThreshold;
+    use vabft::train::{SyntheticCorpus, Trainer, TrainerConfig};
+
+    let dir = artifacts_dir();
+    if !dir.join("manifest.tsv").exists() {
+        println!("\n[trained-weights check skipped: run `make artifacts`]");
+        return;
+    }
+    let rt = PjrtRuntime::from_artifacts(&dir).expect("artifacts");
+    let mut trainer = Trainer::new(&rt, TrainerConfig::default()).expect("trainer");
+    let (b, s) = trainer.batch_dims();
+    let mut corpus = SyntheticCorpus::new(256, 3);
+    let steps = mode.pick(5, 40);
+    for _ in 0..steps {
+        let toks = corpus.batch(b, s + 1);
+        trainer.step(&toks, None).expect("step");
+    }
+
+    let model = AccumModel::wide(Precision::Bf16);
+    let ft = FtGemm::new(
+        GemmEngine::new(model),
+        Box::new(VabftThreshold::default()),
+        VerifyPolicy::detect_only(true),
+    );
+    let mut rng = Xoshiro256pp::seed_from_u64(77);
+    let mut checked = 0;
+    let mut fp = 0;
+    for (p, shape) in trainer.params().iter().zip(trainer.param_shapes()) {
+        if shape.len() != 2 || shape[0] < 16 {
+            continue;
+        }
+        let (k, n) = (shape[0] as usize, shape[1] as usize);
+        let w = Matrix::from_vec(k, n, p.iter().map(|&x| x as f64).collect());
+        let a = Matrix::sample_in(
+            16,
+            k,
+            &Distribution::Normal { mean: 0.0, std: 1.0 },
+            model.input,
+            &mut rng,
+        );
+        let out = ft.multiply(&a, &w.quantized(Precision::Bf16)).unwrap();
+        checked += out.report.rows_checked;
+        if out.report.verdict != Verdict::Clean {
+            fp += out.report.detections.len();
+        }
+    }
+    println!(
+        "\ntrained L2 transformer weights ({} steps): {} verifications, {} false positives",
+        trainer.steps_run, checked, fp
+    );
+    assert_eq!(fp, 0);
+}

@@ -1,0 +1,55 @@
+//! Paper Table 1: measured e_max scaling behaviour on the (simulated)
+//! Ascend 910B NPU — BF16/FP16 wide accumulation vs FP32 per-step.
+//!
+//! Quick: sizes 128–1024, few trials. `--full`: 128–8192.
+
+use vabft::bench_harness::BenchMode;
+use vabft::calibrate::{CalibrationProtocol, EmaxTable, Platform};
+use vabft::fp::Precision;
+use vabft::report::{sci, Table};
+
+fn main() {
+    let mode = BenchMode::from_env();
+    mode.banner("t1_emax_npu");
+    let sizes = mode.pick(vec![128, 256, 512, 1024], vec![128, 256, 512, 1024, 2048, 4096, 8192]);
+    let trials = mode.pick(4, 30);
+
+    let mut table = Table::new(
+        "Table 1 — measured e_max scaling on NPU (910B accumulation models)",
+        &["Precision", "u", "e_max (measured max)", "e_max/u", "Scales with N?", "paper"],
+    );
+    for p in [Precision::Bf16, Precision::F16, Precision::F32] {
+        let model = Platform::Npu.model_for(p);
+        let proto = CalibrationProtocol {
+            sizes: sizes.clone(),
+            trials_per_size: trials,
+            ..Default::default()
+        };
+        let res = proto.run(model, false);
+        let max_e = res.points.iter().fold(0.0f64, |m, pt| m.max(pt.emax));
+        let u = model.out.unit_roundoff();
+        let scaling = if res.cv < 0.2 { "No" } else { "Yes (prop sqrtN)" };
+        let paper = EmaxTable::recommended(Platform::Npu, p);
+        table.row(vec![
+            p.name().to_string(),
+            sci(u),
+            sci(max_e),
+            format!("{:.1}", max_e / u),
+            scaling.to_string(),
+            paper.label(),
+        ]);
+        let detail: Vec<String> =
+            res.points.iter().map(|pt| format!("{}:{}", pt.n, sci(pt.emax))).collect();
+        println!("  {} per-size: {}", p.name(), detail.join("  "));
+        println!(
+            "  {} fitted: {}  CV {:.1}%  R2(sqrtN) {:.2}",
+            p.name(),
+            res.fitted.label(),
+            res.cv * 100.0,
+            res.r2_sqrt_n
+        );
+    }
+    println!();
+    table.print();
+    println!("Paper Table 1: BF16 8e-3 (~2u, no scaling); FP16 1e-3 (~2u, no); FP32 2e-6*sqrt(N/1024).");
+}

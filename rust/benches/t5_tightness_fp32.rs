@@ -1,0 +1,47 @@
+//! Paper Table 5: threshold tightness, FP32, U(−1,1), FP64 baseline.
+
+use vabft::bench_harness::BenchMode;
+use vabft::calibrate::{EmaxTable, Platform};
+use vabft::experiments::{run_tightness, TightnessConfig};
+use vabft::fp::Precision;
+use vabft::gemm::AccumModel;
+use vabft::report::{ratio, sci, Table};
+use vabft::rng::Distribution;
+use vabft::threshold::AabftThreshold;
+
+fn main() {
+    let mode = BenchMode::from_env();
+    mode.banner("t5_tightness_fp32");
+    let cfg = TightnessConfig {
+        label: "FP32, U(-1,1), FP64 baseline".into(),
+        model: AccumModel::cpu(Precision::F32),
+        dist: Distribution::uniform_pm1(),
+        sizes: mode.pick(vec![128, 256, 512], vec![128, 256, 512, 1024, 2048]),
+        trials: mode.pick(5, 100),
+        rows: Some(mode.pick(32, 256)),
+        aabft: AabftThreshold::paper_repro(),
+        vabft_emax: EmaxTable::recommended(Platform::Cpu, Precision::F32),
+        wide_checksums: false,
+        seed: 0x7502,
+    };
+    let rows = run_tightness(&cfg);
+    let mut t = Table::new(
+        "Table 5 — Threshold Tightness (FP32, U(-1,1), FP64 baseline)",
+        &["Size", "Actual Diff", "A-ABFT", "V-ABFT", "A-Tight", "V-Tight", "FP(A)", "FP(V)"],
+    );
+    for r in &rows {
+        t.row(vec![
+            format!("{}x{}", r.n, r.n),
+            sci(r.actual),
+            sci(r.aabft_threshold),
+            sci(r.vabft_threshold),
+            ratio(r.a_tight()),
+            ratio(r.v_tight()),
+            r.fp_aabft.to_string(),
+            r.fp_vabft.to_string(),
+        ]);
+    }
+    t.print();
+    println!("Paper Table 5: A-ABFT 2.23e-3@128 … 1.42e-1@2048 (321-633x);");
+    println!("  V-ABFT 9.19e-5@128 … 2.94e-3@2048 (7-20x); zero FP for both.");
+}

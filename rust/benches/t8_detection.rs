@@ -1,0 +1,88 @@
+//! Paper Table 8: V-ABFT detection rate by exponent-bit position, BF16,
+//! matrix size (128, 1024, 256), four distributions.
+
+use vabft::bench_harness::BenchMode;
+use vabft::inject::{Campaign, CampaignConfig};
+use vabft::report::{pct, Table};
+use vabft::rng::Distribution;
+use vabft::threshold::VabftThreshold;
+
+fn main() {
+    let mode = BenchMode::from_env();
+    mode.banner("t8_detection");
+    let trials = mode.pick(128, 2048);
+    let shape = mode.pick((64, 512, 128), (128, 1024, 256));
+
+    let dists = Distribution::paper_suite();
+    let mut results = Vec::new();
+    let mut fp_total = 0usize;
+    let mut rows_total = 0usize;
+    for (name, d) in &dists {
+        let mut cfg = CampaignConfig::table8(d.clone(), trials);
+        cfg.shape = shape;
+        let res = Campaign::new(cfg).run(&VabftThreshold::default());
+        fp_total += res.false_positives;
+        rows_total += res.clean_rows_checked;
+        results.push((*name, res));
+    }
+
+    let mut t = Table::new(
+        &format!("Table 8 — V-ABFT Detection Rate (%) for BF16, shape {shape:?}"),
+        &["Bit", "N(1e-6,1)", "N(1,1)", "U(-1,1)", "TruncN"],
+    );
+    let bits: Vec<u32> = results[0].1.bits.iter().map(|b| b.bit).collect();
+    for (i, bit) in bits.iter().enumerate() {
+        let label = if *bit == 7 { "7 (exp LSB)".to_string() } else { bit.to_string() };
+        let mut row = vec![label];
+        for (_, res) in &results {
+            row.push(pct(res.bits[i].detection_rate()));
+        }
+        t.row(row);
+    }
+    t.print();
+
+    // Amplifying (0→1) flips only: the catastrophic direction. 1→0 flips
+    // on unit-scale operands shrink one contribution toward zero — an
+    // error smaller than the GEMM's own rounding envelope for low bits,
+    // sub-threshold for ANY zero-FPR method (see EXPERIMENTS.md notes).
+    let mut t01 = Table::new(
+        "Table 8b — DR (%) for amplifying (0→1) exponent flips only",
+        &["Bit", "N(1e-6,1)", "N(1,1)", "U(-1,1)", "TruncN"],
+    );
+    for (i, bit) in bits.iter().enumerate() {
+        let mut row = vec![bit.to_string()];
+        for (_, res) in &results {
+            let b = &res.bits[i];
+            row.push(if b.trials_0to1 > 0 {
+                pct(100.0 * b.detected_0to1 as f64 / b.trials_0to1 as f64)
+            } else {
+                "-".to_string()
+            });
+        }
+        t01.row(row);
+    }
+    t01.print();
+    println!("clean rows checked {rows_total}, false positives {fp_total} (paper: 0)");
+    println!("Paper Table 8: bits 11-14 all 100%; bit 10 >99.8%; bit 9 73-100%;");
+    println!("  bit 8 36-70%; bit 7 0-20% (small magnitude changes, expected).");
+
+    // localization detail
+    let mut t2 = Table::new(
+        "Localization rate (%) among detected (not in paper; diagnostic)",
+        &["Bit", "N(1e-6,1)", "N(1,1)", "U(-1,1)", "TruncN"],
+    );
+    for (i, bit) in bits.iter().enumerate() {
+        let mut row = vec![bit.to_string()];
+        for (_, res) in &results {
+            let b = &res.bits[i];
+            let loc = if b.detected > 0 {
+                100.0 * b.localized as f64 / b.detected as f64
+            } else {
+                0.0
+            };
+            row.push(pct(loc));
+        }
+        t2.row(row);
+    }
+    t2.print();
+}

@@ -1,0 +1,242 @@
+//! Checksum encoding (paper §2.2, Eq. 1–3).
+//!
+//! Row-checksum encoding appends two columns to B:
+//! `B^r = [B | B·r1 | B·r2]` with `r1 = 1` (detection) and
+//! `r2 = [1, 2, …, N]ᵀ` (localization). The product `C^f = A·B^r` then
+//! carries `C^{r1} = A·B·r1` and `C^{r2} = A·B·r2` in its last two columns
+//! — computed by the same GEMM hardware/schedule as C itself.
+//!
+//! Column encoding (`A^c` with c1/c2 rows prepended) is also provided; the
+//! paper's evaluation uses row checksums (single-event-upset model), and
+//! that is what [`crate::abft::FtGemm`] verifies by default.
+
+use crate::gemm::GemmEngine;
+use crate::matrix::Matrix;
+
+/// The linear position weight w(j) = j + 1 used by r2 (Eq. 9's
+/// `j = D2/D1 − 1` inversion assumes exactly this).
+#[inline]
+pub fn position_weight(j: usize) -> f64 {
+    (j + 1) as f64
+}
+
+/// B·r1 per row of B: the plain row sums of the *input-quantized* row
+/// (the GEMM consumes B on the input grid, so the checksum must cover
+/// exactly those values), reduced with the engine's schedule and stored on
+/// the engine's *input* grid (hardware stores the encoded columns in the
+/// operand precision).
+pub fn r1_checksum_of_b(b: &Matrix, engine: &GemmEngine) -> Vec<f64> {
+    let input = engine.model().input;
+    let grid = offline_checksum_grid(engine);
+    let mut row_q = vec![0.0; b.cols()];
+    (0..b.rows())
+        .map(|k| {
+            quantize_row(b.row(k), input, &mut row_q);
+            grid.quantize(engine.reduce(&row_q))
+        })
+        .collect()
+}
+
+/// B·r2 per row of B: position-weighted row sums (input-quantized data,
+/// input-grid storage).
+pub fn r2_checksum_of_b(b: &Matrix, engine: &GemmEngine) -> Vec<f64> {
+    let input = engine.model().input;
+    let grid = offline_checksum_grid(engine);
+    let weights: Vec<f64> = (0..b.cols()).map(position_weight).collect();
+    let mut row_q = vec![0.0; b.cols()];
+    (0..b.rows())
+        .map(|k| {
+            quantize_row(b.row(k), input, &mut row_q);
+            grid.quantize(engine.dot(&row_q, &weights))
+        })
+        .collect()
+}
+
+fn quantize_row(src: &[f64], p: crate::fp::Precision, dst: &mut [f64]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = p.quantize(s);
+    }
+}
+
+/// Storage grid of offline checksum columns: the *finer* of the input and
+/// output precisions. For BF16→BF16 GEMM this is BF16 (the encoded columns
+/// are ordinary operands); for FP8→FP16 GEMM the checksums live in FP16 —
+/// §3.6's rule that FP8 verification is governed by the output precision
+/// requires encodings at least that fine (an FP8 checksum of a ~K-element
+/// sum would drown the signal in input-grid quantization).
+pub fn offline_checksum_grid(engine: &GemmEngine) -> crate::fp::Precision {
+    let m = engine.model();
+    if m.out.mantissa_bits() > m.input.mantissa_bits() {
+        m.out
+    } else {
+        m.input
+    }
+}
+
+/// Row/column checksum encodings of an operand pair.
+#[derive(Debug, Clone)]
+pub struct ChecksumEncoding {
+    /// `B^r = [B | B·r1 | B·r2]`, shape K × (N+2).
+    pub b_encoded: Matrix,
+    /// Original N (number of data columns in `b_encoded`).
+    pub n: usize,
+    /// Checksum columns stored in the *work* precision instead of the
+    /// input precision — the fused-kernel (online) configuration, where
+    /// the encodings never leave the FP32 datapath (§3.6). Offline
+    /// encodings live on the input grid like any other GEMM operand.
+    pub wide: bool,
+}
+
+impl ChecksumEncoding {
+    /// Encode B with row checksums under the engine's schedule, checksum
+    /// columns stored on the *input* grid (offline ABFT: the encoded
+    /// columns are ordinary GEMM inputs, e.g. BF16 on an NPU).
+    pub fn encode_b(b: &Matrix, engine: &GemmEngine) -> ChecksumEncoding {
+        Self::encode_b_impl(b, engine, false)
+    }
+
+    /// Encode B with checksum columns kept in the work precision (FP32)
+    /// — the fused-kernel/online configuration that enables e_max ≈ 1e-6
+    /// thresholds for low-precision GEMM (§3.6). Pair with
+    /// [`crate::gemm::GemmEngine::matmul_mixed`] so the engine does not
+    /// requantize the wide columns.
+    pub fn encode_b_wide(b: &Matrix, engine: &GemmEngine) -> ChecksumEncoding {
+        Self::encode_b_impl(b, engine, true)
+    }
+
+    fn encode_b_impl(b: &Matrix, engine: &GemmEngine, wide: bool) -> ChecksumEncoding {
+        let (k, n) = (b.rows(), b.cols());
+        let input = engine.model().input;
+        let grid = if wide { engine.model().work } else { offline_checksum_grid(engine) };
+        let weights: Vec<f64> = (0..n).map(position_weight).collect();
+        let mut be = Matrix::zeros(k, n + 2);
+        let mut row_q = vec![0.0; n];
+        for row in 0..k {
+            be.row_mut(row)[..n].copy_from_slice(b.row(row));
+            // Checksums must cover the values the GEMM actually consumes:
+            // the input-quantized row.
+            quantize_row(b.row(row), input, &mut row_q);
+            be.set(row, n, grid.quantize(engine.reduce(&row_q)));
+            be.set(row, n + 1, grid.quantize(engine.dot(&row_q, &weights)));
+        }
+        ChecksumEncoding { b_encoded: be, n, wide }
+    }
+
+    /// Number of trailing columns the engine must not requantize to the
+    /// input grid (always the two checksum columns: they are stored on
+    /// their own grid — work precision when `wide`, the finer of
+    /// input/output otherwise — and `matmul_mixed`'s work-precision
+    /// quantization is a no-op for values already on a coarser grid).
+    pub fn wide_cols(&self) -> usize {
+        2
+    }
+
+    /// Split an encoded product `C^f = A·B^r` into (C, C^{r1}, C^{r2}).
+    pub fn split_product(&self, cf: &Matrix) -> (Matrix, Vec<f64>, Vec<f64>) {
+        assert_eq!(cf.cols(), self.n + 2);
+        let m = cf.rows();
+        let mut c = Matrix::zeros(m, self.n);
+        let mut cr1 = Vec::with_capacity(m);
+        let mut cr2 = Vec::with_capacity(m);
+        for i in 0..m {
+            let row = cf.row(i);
+            c.row_mut(i).copy_from_slice(&row[..self.n]);
+            cr1.push(row[self.n]);
+            cr2.push(row[self.n + 1]);
+        }
+        (c, cr1, cr2)
+    }
+}
+
+/// Column-checksum encoding of A: `A^c = [A; c1·A; c2·A]`, shape (M+2) × K.
+/// Provided for full Huang–Abraham coverage (2D localization, multi-error
+/// settings); engine-scheduled like the row encoding.
+pub fn encode_a_columns(a: &Matrix, engine: &GemmEngine) -> Matrix {
+    let (m, k) = (a.rows(), a.cols());
+    let input = engine.model().input;
+    let mut ae = Matrix::zeros(m + 2, k);
+    for i in 0..m {
+        ae.row_mut(i).copy_from_slice(a.row(i));
+    }
+    // c1·A and c2·A are column-wise reductions of A.
+    let mut col = vec![0.0; m];
+    let mut colw = vec![0.0; m];
+    for j in 0..k {
+        for i in 0..m {
+            col[i] = a.get(i, j);
+            colw[i] = position_weight(i) * a.get(i, j);
+        }
+        ae.set(m, j, input.quantize(engine.reduce(&col)));
+        ae.set(m + 1, j, input.quantize(engine.reduce(&colw)));
+    }
+    ae
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::Precision;
+    use crate::gemm::AccumModel;
+    use crate::rng::{Distribution, Xoshiro256pp};
+
+    fn engine_f64() -> GemmEngine {
+        GemmEngine::new(AccumModel::cpu(Precision::F64))
+    }
+
+    #[test]
+    fn r1_is_row_sums() {
+        let b = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r1 = r1_checksum_of_b(&b, &engine_f64());
+        assert_eq!(r1, vec![6.0, 15.0]);
+    }
+
+    #[test]
+    fn r2_is_position_weighted() {
+        let b = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r2 = r2_checksum_of_b(&b, &engine_f64());
+        // 1·1 + 2·2 + 3·3 = 14; 1·4 + 2·5 + 3·6 = 32
+        assert_eq!(r2, vec![14.0, 32.0]);
+    }
+
+    #[test]
+    fn encode_split_roundtrip() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let d = Distribution::uniform_pm1();
+        let b = Matrix::sample(8, 5, &d, &mut rng);
+        let a = Matrix::sample(4, 8, &d, &mut rng);
+        let engine = engine_f64();
+        let enc = ChecksumEncoding::encode_b(&b, &engine);
+        assert_eq!(enc.b_encoded.cols(), 7);
+        let cf = engine.matmul_mixed(&a, &enc.b_encoded, enc.wide_cols()).c;
+        let (c, cr1, cr2) = enc.split_product(&cf);
+        assert_eq!(c.cols(), 5);
+        assert_eq!(cr1.len(), 4);
+        assert_eq!(cr2.len(), 4);
+        // checksum column ≈ row sums of C (exact up to fp error)
+        for i in 0..4 {
+            let rs: f64 = c.row(i).iter().sum();
+            assert!((cr1[i] - rs).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn checksums_are_stored_in_input_precision() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let d = Distribution::normal_1_1();
+        let b = Matrix::sample(16, 9, &d, &mut rng);
+        let engine = GemmEngine::new(AccumModel::wide(Precision::Bf16));
+        let r1 = r1_checksum_of_b(&b, &engine);
+        for v in r1 {
+            assert_eq!(Precision::Bf16.quantize(v), v);
+        }
+    }
+
+    #[test]
+    fn column_encoding_shape_and_values() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let ae = encode_a_columns(&a, &engine_f64());
+        assert_eq!((ae.rows(), ae.cols()), (4, 2));
+        assert_eq!(ae.row(2), &[4.0, 6.0]); // column sums
+        assert_eq!(ae.row(3), &[1.0 + 2.0 * 3.0, 2.0 + 2.0 * 4.0]); // weighted
+    }
+}

@@ -1,0 +1,157 @@
+//! Benchmark harness (criterion substitute — criterion is not in the
+//! offline registry).
+//!
+//! Provides warmup + timed iterations with median/p95 statistics, and the
+//! quick/full mode switch the table benches use: `cargo bench` runs quick
+//! (reduced sizes/trials, minutes); `cargo bench -- --full` or
+//! `VABFT_BENCH_FULL=1` reproduces the paper's exact sizes and trial
+//! counts.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over repeated runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub p95: Duration,
+}
+
+impl Stats {
+    pub fn summary(&self) -> String {
+        format!(
+            "median {:?}  mean {:?}  min {:?}  p95 {:?}  (n={})",
+            self.median, self.mean, self.min, self.p95, self.iters
+        )
+    }
+
+    /// Throughput given an amount of work per iteration.
+    pub fn per_second(&self, work_per_iter: f64) -> f64 {
+        work_per_iter / self.median.as_secs_f64()
+    }
+}
+
+/// Time `f` with warmup. Runs at least `min_iters` and until `min_time`
+/// elapses (whichever is later).
+pub fn bench(mut f: impl FnMut(), min_iters: usize, min_time: Duration) -> Stats {
+    // warmup
+    f();
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed() < min_time {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    stats_of(&mut samples)
+}
+
+/// Quick one-shot measurement (no warmup) for expensive workloads.
+pub fn time_once(f: impl FnOnce()) -> Duration {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed()
+}
+
+fn stats_of(samples: &mut [Duration]) -> Stats {
+    samples.sort();
+    let n = samples.len();
+    let sum: Duration = samples.iter().sum();
+    Stats {
+        iters: n,
+        mean: sum / n as u32,
+        median: samples[n / 2],
+        min: samples[0],
+        max: samples[n - 1],
+        p95: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+    }
+}
+
+/// Bench execution mode: quick (default) or full paper-scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BenchMode {
+    Quick,
+    Full,
+}
+
+impl BenchMode {
+    /// Parse from process args (`--full`) or env (`VABFT_BENCH_FULL=1`).
+    pub fn from_env() -> BenchMode {
+        let args: Vec<String> = std::env::args().collect();
+        if args.iter().any(|a| a == "--full")
+            || std::env::var("VABFT_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+        {
+            BenchMode::Full
+        } else {
+            BenchMode::Quick
+        }
+    }
+
+    pub fn is_full(self) -> bool {
+        self == BenchMode::Full
+    }
+
+    /// Pick quick/full variant.
+    pub fn pick<T>(self, quick: T, full: T) -> T {
+        match self {
+            BenchMode::Quick => quick,
+            BenchMode::Full => full,
+        }
+    }
+
+    pub fn banner(self, bench_name: &str) {
+        println!(
+            "[{}] mode = {} (pass --full or set VABFT_BENCH_FULL=1 for paper-scale runs)\n",
+            bench_name,
+            match self {
+                BenchMode::Quick => "QUICK",
+                BenchMode::Full => "FULL",
+            }
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let s = bench(
+            || {
+                std::hint::black_box((0..1000).sum::<u64>());
+            },
+            50,
+            Duration::from_millis(5),
+        );
+        assert!(s.iters >= 50);
+        assert!(s.min <= s.median);
+        assert!(s.median <= s.max);
+        assert!(s.p95 <= s.max);
+    }
+
+    #[test]
+    fn mode_pick() {
+        assert_eq!(BenchMode::Quick.pick(1, 2), 1);
+        assert_eq!(BenchMode::Full.pick(1, 2), 2);
+    }
+
+    #[test]
+    fn throughput() {
+        let s = Stats {
+            iters: 1,
+            mean: Duration::from_secs(2),
+            median: Duration::from_secs(2),
+            min: Duration::from_secs(2),
+            max: Duration::from_secs(2),
+            p95: Duration::from_secs(2),
+        };
+        assert_eq!(s.per_second(10.0), 5.0);
+    }
+}

@@ -1,0 +1,410 @@
+//! e_max determination: recommended values, scaling models and the
+//! one-time calibration protocol (paper §3.6, Tables 1/2/7).
+//!
+//! e_max is the maximum relative verification error of a platform's GEMM,
+//! defined empirically as `max |E| / |checksum|` over calibration trials.
+//! §3.6's key insight: e_max is governed by the **accumulation and output
+//! precision**, not the input precision — BF16/FP16/FP8 GEMMs with FP32
+//! internal accumulation all behave as "one output rounding", giving
+//! e_max ≈ 2·u_output independent of K, while FP32 per-step accumulation
+//! gives e_max ∝ √K.
+
+use crate::fp::Precision;
+use crate::gemm::{AccumModel, GemmEngine, ReduceStrategy};
+use crate::matrix::Matrix;
+use crate::rng::{Distribution, Rng, Xoshiro256pp};
+
+/// Scaling law of e_max with the reduction length n.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EmaxModel {
+    /// e_max independent of n.
+    Constant(f64),
+    /// e_max = coeff·√n + offset (the GPU FP32/FP64 and NPU FP32 law).
+    SqrtN { coeff: f64, offset: f64 },
+}
+
+impl EmaxModel {
+    /// Evaluate at reduction length `n`.
+    pub fn eval(&self, n: usize) -> f64 {
+        match *self {
+            EmaxModel::Constant(c) => c,
+            EmaxModel::SqrtN { coeff, offset } => coeff * (n as f64).sqrt() + offset,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            EmaxModel::Constant(c) => format!("{c:.2e}"),
+            EmaxModel::SqrtN { coeff, offset } => format!("{coeff:.2e}·√N + {offset:.2e}"),
+        }
+    }
+}
+
+/// The platforms whose accumulation behaviour the paper measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Platform {
+    /// Intel Xeon: FMA/SIMD tree reduction → constant e_max.
+    Cpu,
+    /// NVIDIA H100: per-step rounding for FP32/FP64 (√N), wide accumulation
+    /// for BF16/FP16/FP8 (constant 2u_out).
+    Gpu,
+    /// Ascend 910B: wide accumulation for BF16/FP16, per-step FP32 (√N).
+    Npu,
+}
+
+impl Platform {
+    pub fn name(self) -> &'static str {
+        match self {
+            Platform::Cpu => "CPU (Xeon)",
+            Platform::Gpu => "GPU (H100)",
+            Platform::Npu => "NPU (910B)",
+        }
+    }
+
+    /// The accumulation model this platform uses for a given operand
+    /// precision (DESIGN.md §3 substitution table).
+    pub fn model_for(self, p: Precision) -> AccumModel {
+        match (self, p) {
+            (Platform::Cpu, _) => AccumModel::cpu(p),
+            (Platform::Gpu, Precision::F64) | (Platform::Gpu, Precision::F32) => {
+                AccumModel::gpu_highprec(p)
+            }
+            (Platform::Npu, Precision::F64) | (Platform::Npu, Precision::F32) => {
+                AccumModel::gpu_highprec(p)
+            }
+            (_, Precision::F8E4M3) | (_, Precision::F8E5M2) => AccumModel::fp8(p),
+            (_, low) => AccumModel::wide(low),
+        }
+    }
+}
+
+/// Recommended e_max values (paper Table 7) plus the rule for arbitrary
+/// models. `lookup` is what the production threshold path uses.
+#[derive(Debug, Clone, Default)]
+pub struct EmaxTable;
+
+impl EmaxTable {
+    /// Table 7 rows, as (platform, precision) → model.
+    pub fn recommended(platform: Platform, p: Precision) -> EmaxModel {
+        match (platform, p) {
+            (Platform::Cpu, Precision::F64) => EmaxModel::Constant(6e-16),
+            (Platform::Cpu, Precision::F32) => EmaxModel::Constant(4e-7),
+            (Platform::Gpu, Precision::F64) => {
+                EmaxModel::SqrtN { coeff: 1.0e-17, offset: 2.5e-16 }
+            }
+            (Platform::Gpu, Precision::F32) => {
+                EmaxModel::SqrtN { coeff: 5.0e-9, offset: 1.2e-7 }
+            }
+            (Platform::Gpu, Precision::Bf16) | (Platform::Npu, Precision::Bf16) => {
+                EmaxModel::Constant(8e-3)
+            }
+            (Platform::Gpu, Precision::F16) | (Platform::Npu, Precision::F16) => {
+                EmaxModel::Constant(1e-3)
+            }
+            // §3.6: FP8's effective e_max equals the FP16 value (FP16 output).
+            (_, Precision::F8E4M3) | (_, Precision::F8E5M2) => EmaxModel::Constant(1e-3),
+            // Table 1/7: NPU FP32 = 2e-6·√(N/1024) = 6.25e-8·√N
+            (Platform::Npu, Precision::F32) => {
+                EmaxModel::SqrtN { coeff: 2e-6 / 32.0, offset: 0.0 }
+            }
+            (Platform::Npu, Precision::F64) => {
+                // Not measured in the paper; use the GPU FP64 law.
+                EmaxModel::SqrtN { coeff: 1.0e-17, offset: 2.5e-16 }
+            }
+            (Platform::Cpu, low) => {
+                // CPU low-precision GEMM still quantizes at the output.
+                EmaxModel::Constant(2.5 * low.unit_roundoff())
+            }
+        }
+    }
+
+    /// e_max rule for an arbitrary [`AccumModel`] and verification point.
+    ///
+    /// `online = true` means verification reads the pre-quantization
+    /// accumulator (fused-kernel ABFT): the governing precision is then the
+    /// *work* precision, giving FP32-level e_max for low-precision GEMM —
+    /// the paper's ~1000× granularity result.
+    pub fn for_model(model: AccumModel, online: bool) -> EmaxModel {
+        let governing = if online { model.work } else { model.out };
+        if model.quantizes_output() && !online {
+            // One dominant rounding at the output: e_max ≈ 2u_out with a
+            // small margin (the NPU BF16 value 8e-3 ≈ 2.05·2^-8).
+            return EmaxModel::Constant(2.05 * governing.unit_roundoff());
+        }
+        // Verification error accumulated in the work precision.
+        let u = model.work.unit_roundoff();
+        match model.strategy {
+            ReduceStrategy::Pairwise => EmaxModel::Constant(6.0 * u),
+            ReduceStrategy::Sequential | ReduceStrategy::Fma => EmaxModel::SqrtN {
+                coeff: 1.2 * u,
+                offset: 2.0 * u,
+            },
+        }
+    }
+}
+
+/// One calibration measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct CalibrationPoint {
+    pub n: usize,
+    /// max |E| / |checksum| observed.
+    pub emax: f64,
+    /// mean |E| / |checksum|.
+    pub mean_rel: f64,
+    pub trials: usize,
+}
+
+/// Result of a calibration sweep plus fitted scaling law.
+#[derive(Debug, Clone)]
+pub struct CalibrationResult {
+    pub model: AccumModel,
+    pub online: bool,
+    pub points: Vec<CalibrationPoint>,
+    /// Recommended e_max law: observed max + 20% margin, shape chosen by
+    /// the √N fit quality (paper's protocol, §3.6).
+    pub fitted: EmaxModel,
+    /// Coefficient of variation of e_max across sizes.
+    pub cv: f64,
+    /// R² of the e_max ~ √N linear fit.
+    pub r2_sqrt_n: f64,
+}
+
+/// The paper's one-time calibration protocol (§3.6):
+/// 1. positive matrices with |N(1,1)| elements,
+/// 2. relative verification error over many trials at representative sizes,
+/// 3. e_max = observed max + 20% safety margin.
+#[derive(Debug, Clone)]
+pub struct CalibrationProtocol {
+    pub sizes: Vec<usize>,
+    pub trials_per_size: usize,
+    pub distribution: Distribution,
+    pub seed: u64,
+}
+
+impl Default for CalibrationProtocol {
+    fn default() -> Self {
+        CalibrationProtocol {
+            sizes: vec![128, 256, 512, 1024, 2048],
+            trials_per_size: 20,
+            distribution: Distribution::calibration(),
+            seed: 0xCA11B,
+        }
+    }
+}
+
+impl CalibrationProtocol {
+    /// Run the protocol for one accumulation model / verification point.
+    pub fn run(&self, model: AccumModel, online: bool) -> CalibrationResult {
+        let engine = GemmEngine::new(model);
+        let mut points = Vec::new();
+        for (si, &n) in self.sizes.iter().enumerate() {
+            let mut emax = 0.0f64;
+            let mut sum_rel = 0.0;
+            for trial in 0..self.trials_per_size {
+                let mut rng =
+                    Xoshiro256pp::from_stream(self.seed ^ (si as u64) << 32, trial as u64);
+                let rel = self.one_trial(&engine, n, online, &mut rng);
+                emax = emax.max(rel);
+                sum_rel += rel;
+            }
+            points.push(CalibrationPoint {
+                n,
+                emax,
+                mean_rel: sum_rel / self.trials_per_size as f64,
+                trials: self.trials_per_size,
+            });
+        }
+        let (fitted, cv, r2) = fit_points(&points);
+        CalibrationResult { model, online, points, fitted, cv, r2_sqrt_n: r2 }
+    }
+
+    /// One trial: max over rows of |E_i| / |checksum_i| for an n×n GEMM.
+    fn one_trial(&self, engine: &GemmEngine, n: usize, online: bool, rng: &mut impl Rng) -> f64 {
+        // Rectangular shrink for speed: rows beyond what's needed for a
+        // max-statistic add little; use min(n, 64) rows of A.
+        let m = n.min(64);
+        let model = engine.model();
+        let mut a = Matrix::sample(m, n, &self.distribution, rng);
+        let mut b = Matrix::sample(n, n, &self.distribution, rng);
+        // Keep checksums within the narrow formats' range: |N(1,1)| row
+        // sums of an n×n product grow ∝ n², overflowing FP16 (max 65504)
+        // beyond n ≈ 200. Scaling the operands by 1/√n leaves every
+        // *relative* error — and hence e_max — unchanged.
+        let scale = 1.0 / (n as f64).sqrt();
+        for v in a.data_mut() {
+            *v *= scale;
+        }
+        for v in b.data_mut() {
+            *v *= scale;
+        }
+        a.quantize(model.input);
+        b.quantize(model.input);
+        // Checksum column: online keeps encodings in the datapath (work
+        // precision); offline stores them like operands, on the finer of
+        // the input/output grids (FP8 GEMM carries FP16 checksums — §3.6's
+        // output-precision rule; see abft::encode::offline_checksum_grid).
+        let grid = if online {
+            model.work
+        } else if model.out.mantissa_bits() > model.input.mantissa_bits() {
+            model.out
+        } else {
+            model.input
+        };
+        let benc: Vec<f64> =
+            (0..n).map(|k| grid.quantize(engine.reduce(b.row(k)))).collect();
+        // One GEMM over [B | Br1]:
+        let mut bext = Matrix::zeros(n, n + 1);
+        for k in 0..n {
+            bext.row_mut(k)[..n].copy_from_slice(b.row(k));
+            bext.set(k, n, benc[k]);
+        }
+        // The checksum column is pre-quantized to `grid`; pass it as a
+        // wide column so the engine doesn't coarsen it back to the input
+        // grid (work-precision requantization is a no-op for it).
+        let out = engine.matmul_mixed(&a, &bext, 1);
+        let cmat = if online { &out.acc } else { &out.c };
+        let mut worst = 0.0f64;
+        for i in 0..m {
+            let row = cmat.row(i);
+            let checksum = row[n];
+            let rowsum = engine.reduce(&row[..n]);
+            let e = (checksum - rowsum).abs();
+            let denom = checksum.abs().max(f64::MIN_POSITIVE);
+            worst = worst.max(e / denom);
+        }
+        worst
+    }
+}
+
+/// Fit a calibration sweep: CV, R² of e_max vs √n, and the recommended law
+/// (constant when CV is small, √N law otherwise), with 20% margin.
+pub fn fit_points(points: &[CalibrationPoint]) -> (EmaxModel, f64, f64) {
+    let n = points.len() as f64;
+    let mean_e = points.iter().map(|p| p.emax).sum::<f64>() / n;
+    let var_e =
+        points.iter().map(|p| (p.emax - mean_e).powi(2)).sum::<f64>() / n;
+    let cv = if mean_e > 0.0 { var_e.sqrt() / mean_e } else { 0.0 };
+
+    // Least squares: emax = a·√n + b
+    let xs: Vec<f64> = points.iter().map(|p| (p.n as f64).sqrt()).collect();
+    let ys: Vec<f64> = points.iter().map(|p| p.emax).collect();
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxy: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sxx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+    let syy: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+    let slope = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+    let intercept = my - slope * mx;
+    let r2 = if sxx > 0.0 && syy > 0.0 { (sxy * sxy) / (sxx * syy) } else { 0.0 };
+
+    let fitted = if cv < 0.15 || slope <= 0.0 {
+        // flat: constant = observed max + 20%
+        let max_e = points.iter().fold(0.0f64, |m, p| m.max(p.emax));
+        EmaxModel::Constant(max_e * 1.2)
+    } else {
+        EmaxModel::SqrtN { coeff: slope * 1.2, offset: intercept.max(0.0) * 1.2 }
+    };
+    (fitted, cv, r2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table7_values_match_paper() {
+        assert_eq!(
+            EmaxTable::recommended(Platform::Cpu, Precision::F64),
+            EmaxModel::Constant(6e-16)
+        );
+        assert_eq!(
+            EmaxTable::recommended(Platform::Npu, Precision::Bf16),
+            EmaxModel::Constant(8e-3)
+        );
+        // NPU FP32 at N=1024 must give 2e-6 (Table 1).
+        let m = EmaxTable::recommended(Platform::Npu, Precision::F32);
+        assert!((m.eval(1024) - 2e-6).abs() < 1e-12);
+        // GPU FP32 law at N=1024: 5e-9*32 + 1.2e-7 = 2.8e-7
+        let g = EmaxTable::recommended(Platform::Gpu, Precision::F32);
+        assert!((g.eval(1024) - 2.8e-7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn online_emax_is_about_1000x_finer_for_bf16() {
+        // §3.6's headline: fused-kernel verification of a BF16 GEMM gets
+        // FP32-level e_max (~1e-6) vs offline ~1e-3–1e-2.
+        let model = AccumModel::wide(Precision::Bf16);
+        let offline = EmaxTable::for_model(model, false).eval(1024);
+        let online = EmaxTable::for_model(model, true).eval(1024);
+        assert!(offline / online > 500.0, "offline {offline} vs online {online}");
+        assert!(offline > 5e-3 && offline < 2e-2);
+        assert!(online < 1e-5);
+    }
+
+    #[test]
+    fn calibration_reproduces_constant_law_for_wide_models() {
+        let proto = CalibrationProtocol {
+            sizes: vec![64, 256, 1024],
+            trials_per_size: 5,
+            ..Default::default()
+        };
+        let res = proto.run(AccumModel::wide(Precision::Bf16), false);
+        assert!(res.cv < 0.5, "wide model CV should be smallish: {}", res.cv);
+        // e_max near 2u_bf16 = 7.8e-3, certainly within (0.5u, 8u)
+        for p in &res.points {
+            let ratio = p.emax / Precision::Bf16.unit_roundoff();
+            assert!(ratio > 0.3 && ratio < 8.0, "n={} ratio={ratio}", p.n);
+        }
+    }
+
+    #[test]
+    fn calibration_reproduces_sqrtn_growth_for_perstep_fp32() {
+        let proto = CalibrationProtocol {
+            sizes: vec![64, 256, 1024, 4096],
+            trials_per_size: 4,
+            ..Default::default()
+        };
+        let res = proto.run(AccumModel::npu_fp32(), false);
+        let first = res.points.first().unwrap().emax;
+        let last = res.points.last().unwrap().emax;
+        // 64 → 4096 is 8× in √N; demand at least 2.5× growth.
+        assert!(last / first > 2.5, "expected √N growth: {first} → {last}");
+    }
+
+    #[test]
+    fn calibration_cpu_model_is_flat() {
+        let proto = CalibrationProtocol {
+            sizes: vec![64, 256, 1024, 4096],
+            trials_per_size: 4,
+            ..Default::default()
+        };
+        let res = proto.run(AccumModel::cpu(Precision::F32), false);
+        let first = res.points.first().unwrap().emax;
+        let last = res.points.last().unwrap().emax;
+        assert!(
+            last / first < 3.0,
+            "pairwise reduction should be near-flat: {first} → {last}"
+        );
+    }
+
+    #[test]
+    fn fit_recovers_sqrt_law() {
+        let pts: Vec<CalibrationPoint> = [64usize, 256, 1024, 4096]
+            .iter()
+            .map(|&n| CalibrationPoint {
+                n,
+                emax: 3e-9 * (n as f64).sqrt() + 1e-8,
+                mean_rel: 0.0,
+                trials: 1,
+            })
+            .collect();
+        let (fitted, _cv, r2) = fit_points(&pts);
+        assert!(r2 > 0.999);
+        match fitted {
+            EmaxModel::SqrtN { coeff, .. } => {
+                assert!((coeff / (3e-9 * 1.2) - 1.0).abs() < 0.05)
+            }
+            _ => panic!("expected sqrt law, got {fitted:?}"),
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Minimal command-line argument parsing (clap substitute).
+//!
+//! Supports `subcommand --flag --key value --key=value positional` — all
+//! the binaries and examples in this crate need.
+
+use std::collections::HashMap;
+use std::str::FromStr;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: HashMap<String, String>,
+    bools: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from process args (skipping argv[0]).
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    /// Parse from an iterator of argument strings.
+    pub fn parse_from(args: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        // first non-flag token is the subcommand
+        if let Some(first) = iter.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = iter.next();
+            }
+        }
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.bools.push(body.to_string());
+                }
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Boolean flag present? (`--foo` with no value, or `--foo=true`).
+    pub fn flag(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+            || self.flags.get(name).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    /// String option.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed option with default; exits with a message on parse failure.
+    pub fn opt_or<T: FromStr>(&self, name: &str, default: T) -> T {
+        match self.flags.get(name) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("error: invalid value '{v}' for --{name}");
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("serve --workers 4 --online --size=128 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.opt_or("workers", 0usize), 4);
+        assert!(a.flag("online"));
+        assert_eq!(a.opt_or("size", 0usize), 128);
+        assert_eq!(a.positionals(), &["extra".to_string()]);
+    }
+
+    #[test]
+    fn no_subcommand_when_flag_first() {
+        let a = parse("--full");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("full"));
+        // A flag followed by a bare token consumes it as its value — the
+        // documented `--key value` form.
+        let b = parse("--mode bench");
+        assert_eq!(b.opt("mode"), Some("bench"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.opt_or("trials", 100usize), 100);
+        assert!(!a.flag("online"));
+        assert_eq!(a.opt("missing"), None);
+    }
+
+    #[test]
+    fn value_flags_consume_next_token() {
+        let a = parse("cmd --k v --b");
+        assert_eq!(a.opt("k"), Some("v"));
+        assert!(a.flag("b"));
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse("cmd --mean -1.5");
+        assert_eq!(a.opt_or("mean", 0.0f64), -1.5);
+    }
+}

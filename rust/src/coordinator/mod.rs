@@ -1,0 +1,21 @@
+//! L3 coordinator: a fault-tolerant GEMM service.
+//!
+//! This is the production harness the paper's §6.8 integration implies
+//! (FTAN-GEMM on Ascend): a request router + worker pool that
+//!
+//! 1. registers weight matrices once (checksum encoding + V-ABFT summary
+//!    precomputed — the serving fast path),
+//! 2. accepts activation×weight multiply requests,
+//! 3. executes them under the configured accumulation model (native
+//!    engines or PJRT artifacts),
+//! 4. verifies / corrects / recomputes per policy, and
+//! 5. exposes counters + latency histograms.
+//!
+//! Built on std threads + channels (the offline registry has no tokio; a
+//! CPU-bound verification pipeline wants a thread pool, not an async
+//! reactor). Backpressure comes from the bounded submission channel.
+
+mod service;
+pub use service::{
+    Coordinator, CoordinatorConfig, GemmRequest, GemmResponse, InjectSpec, WeightId,
+};

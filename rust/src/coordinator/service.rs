@@ -1,0 +1,343 @@
+//! The coordinator service implementation.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::abft::{FtGemm, FtGemmOutput, PreparedWeight, Verdict, VerifyPolicy};
+use crate::fp::Precision;
+use crate::gemm::{AccumModel, GemmEngine};
+use crate::inject::{BitFlip, InjectionSite};
+use crate::matrix::Matrix;
+use crate::metrics::ServiceMetrics;
+use crate::threshold::{Threshold, VabftThreshold};
+
+/// Identifier of a registered weight matrix.
+pub type WeightId = u32;
+
+/// Optional fault injection attached to a request (for campaigns and
+/// demos): flips `bit` of the output element at `site` before
+/// verification.
+#[derive(Debug, Clone, Copy)]
+pub struct InjectSpec {
+    pub site: InjectionSite,
+    pub bit: u32,
+}
+
+/// A protected-multiply request.
+#[derive(Debug)]
+pub struct GemmRequest {
+    pub a: Matrix,
+    pub weight: WeightId,
+    pub inject: Option<InjectSpec>,
+}
+
+/// The response: the (possibly repaired) product and its verdict.
+#[derive(Debug)]
+pub struct GemmResponse {
+    pub id: u64,
+    pub result: Result<FtGemmOutput, String>,
+    pub latency: std::time::Duration,
+}
+
+/// Coordinator configuration.
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    /// Bounded queue depth (backpressure: submit blocks when full).
+    pub queue_depth: usize,
+    pub model: AccumModel,
+    pub policy: VerifyPolicy,
+    /// Threshold algorithm factory (each worker gets one instance).
+    pub threshold: Arc<dyn Fn() -> Box<dyn Threshold> + Send + Sync>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: 2,
+            queue_depth: 64,
+            model: AccumModel::wide(Precision::Bf16),
+            policy: VerifyPolicy::default(),
+            threshold: Arc::new(|| Box::new(VabftThreshold::default())),
+        }
+    }
+}
+
+struct Job {
+    id: u64,
+    req: GemmRequest,
+    reply: Sender<GemmResponse>,
+    submitted: Instant,
+}
+
+/// The fault-tolerant GEMM service.
+pub struct Coordinator {
+    tx: Option<SyncSender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    weights: Arc<RwLock<HashMap<WeightId, Arc<PreparedWeight>>>>,
+    metrics: Arc<ServiceMetrics>,
+    next_id: AtomicU64,
+    ft_template: Arc<FtGemm>,
+}
+
+impl Coordinator {
+    /// Start the worker pool.
+    pub fn start(cfg: CoordinatorConfig) -> Coordinator {
+        let (tx, rx) = sync_channel::<Job>(cfg.queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let weights: Arc<RwLock<HashMap<WeightId, Arc<PreparedWeight>>>> =
+            Arc::new(RwLock::new(HashMap::new()));
+        let metrics = Arc::new(ServiceMetrics::new());
+
+        let mut handles = Vec::new();
+        for wid in 0..cfg.workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let weights = Arc::clone(&weights);
+            let metrics = Arc::clone(&metrics);
+            let ft = FtGemm::new(
+                GemmEngine::new(cfg.model),
+                (cfg.threshold)(),
+                cfg.policy,
+            );
+            let model = cfg.model;
+            let policy = cfg.policy;
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("ftgemm-worker-{wid}"))
+                    .spawn(move || worker_loop(rx, weights, metrics, ft, model, policy))
+                    .expect("spawn worker"),
+            );
+        }
+        let ft_template = Arc::new(FtGemm::new(
+            GemmEngine::new(cfg.model),
+            (cfg.threshold)(),
+            cfg.policy,
+        ));
+        Coordinator {
+            tx: Some(tx),
+            handles,
+            weights,
+            metrics,
+            next_id: AtomicU64::new(0),
+            ft_template,
+        }
+    }
+
+    /// Register (or replace) a weight matrix: encodes checksums and
+    /// precomputes the threshold summary once.
+    pub fn register_weight(&self, id: WeightId, b: &Matrix) {
+        let prepared = Arc::new(self.ft_template.prepare(b));
+        self.weights.write().unwrap().insert(id, prepared);
+    }
+
+    /// Submit a request; returns a receiver for the response. Blocks when
+    /// the queue is full (backpressure).
+    pub fn submit(&self, req: GemmRequest) -> Receiver<GemmResponse> {
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.jobs_submitted.inc();
+        self.tx
+            .as_ref()
+            .expect("coordinator already shut down")
+            .send(Job { id, req, reply: reply_tx, submitted: Instant::now() })
+            .expect("worker pool hung up");
+        reply_rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn call(&self, req: GemmRequest) -> GemmResponse {
+        self.submit(req).recv().expect("worker dropped reply")
+    }
+
+    pub fn metrics(&self) -> &ServiceMetrics {
+        &self.metrics
+    }
+
+    /// Drain the queue and join all workers.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<Job>>>,
+    weights: Arc<RwLock<HashMap<WeightId, Arc<PreparedWeight>>>>,
+    metrics: Arc<ServiceMetrics>,
+    ft: FtGemm,
+    model: AccumModel,
+    policy: VerifyPolicy,
+) {
+    loop {
+        // Hold the lock only while receiving.
+        let job = match rx.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => return, // all senders gone: shutdown
+        };
+        let prepared = weights.read().unwrap().get(&job.req.weight).cloned();
+        let result = match prepared {
+            None => Err(format!("unknown weight id {}", job.req.weight)),
+            Some(w) => {
+                let grid = if policy.online { model.work } else { model.out };
+                let inject = job.req.inject;
+                let inject_fn = inject.map(|spec| {
+                    move |out: &mut crate::gemm::GemmOutput| {
+                        let flip = BitFlip::new(spec.bit, grid);
+                        let tgt =
+                            if policy.online { &mut out.acc } else { &mut out.c };
+                        let old = tgt.get(spec.site.row, spec.site.col);
+                        let (new, _) = flip.apply(old);
+                        tgt.set(spec.site.row, spec.site.col, new);
+                    }
+                });
+                match &inject_fn {
+                    Some(f) => ft.multiply_prepared(&job.req.a, &w, Some(f)),
+                    None => ft.multiply_prepared(&job.req.a, &w, None),
+                }
+                .map_err(|e| e.to_string())
+            }
+        };
+        if let Ok(out) = &result {
+            match out.report.verdict {
+                Verdict::Clean => {}
+                Verdict::Corrected => {
+                    metrics.faults_detected.add(out.report.detections.len() as u64);
+                    metrics
+                        .faults_corrected
+                        .add(out.report.detections.iter().filter(|d| d.corrected).count() as u64);
+                }
+                Verdict::Recomputed | Verdict::Flagged => {
+                    metrics.faults_detected.add(out.report.detections.len() as u64);
+                    metrics.rows_recomputed.add(out.report.rows_recomputed as u64);
+                }
+            }
+        }
+        metrics.jobs_completed.inc();
+        metrics.latency.record(job.submitted.elapsed());
+        let _ = job.reply.send(GemmResponse {
+            id: job.id,
+            result,
+            latency: job.submitted.elapsed(),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Distribution, Xoshiro256pp};
+
+    fn coordinator(workers: usize) -> (Coordinator, Matrix) {
+        let cfg = CoordinatorConfig {
+            workers,
+            queue_depth: 16,
+            model: AccumModel::wide(Precision::Bf16),
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let b = Matrix::sample_in(
+            64,
+            32,
+            &Distribution::normal_1_1(),
+            Precision::Bf16,
+            &mut rng,
+        );
+        c.register_weight(7, &b);
+        (c, b)
+    }
+
+    fn activation(seed: u64) -> Matrix {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        Matrix::sample_in(8, 64, &Distribution::normal_1_1(), Precision::Bf16, &mut rng)
+    }
+
+    #[test]
+    fn clean_requests_round_trip() {
+        let (c, _b) = coordinator(2);
+        let resp = c.call(GemmRequest { a: activation(2), weight: 7, inject: None });
+        let out = resp.result.expect("ok");
+        assert_eq!(out.report.verdict, Verdict::Clean);
+        assert_eq!(out.c.rows(), 8);
+        assert_eq!(out.c.cols(), 32);
+        assert_eq!(c.metrics().jobs_completed.get(), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn unknown_weight_errors() {
+        let (c, _b) = coordinator(1);
+        let resp = c.call(GemmRequest { a: activation(3), weight: 99, inject: None });
+        assert!(resp.result.is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn injected_fault_is_detected_and_repaired() {
+        let (c, _b) = coordinator(1);
+        let resp = c.call(GemmRequest {
+            a: activation(4),
+            weight: 7,
+            inject: Some(InjectSpec { site: InjectionSite { row: 2, col: 5 }, bit: 13 }),
+        });
+        let out = resp.result.expect("ok");
+        assert_ne!(out.report.verdict, Verdict::Clean);
+        assert!(c.metrics().faults_detected.get() >= 1);
+        // online policy + bit 13 flip on fp32 accumulator → huge D1 →
+        // localize + correct (or recompute); output must verify clean:
+        let clean = c.call(GemmRequest { a: activation(4), weight: 7, inject: None });
+        let cm = clean.result.unwrap().c;
+        assert!(out.c.max_abs_diff(&cm) < 1e-2, "diff {}", out.c.max_abs_diff(&cm));
+        c.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_requests() {
+        let (c, _b) = coordinator(4);
+        let receivers: Vec<_> = (0..32)
+            .map(|i| c.submit(GemmRequest { a: activation(10 + i), weight: 7, inject: None }))
+            .collect();
+        for r in receivers {
+            let resp = r.recv().unwrap();
+            assert!(resp.result.is_ok());
+        }
+        assert_eq!(c.metrics().jobs_completed.get(), 32);
+        c.shutdown();
+    }
+
+    #[test]
+    fn weight_replacement_takes_effect() {
+        let (c, b) = coordinator(1);
+        // replace weight 7 with its negation; outputs should flip sign
+        let mut neg = b.clone();
+        for v in neg.data_mut() {
+            *v = -*v;
+        }
+        let a = activation(5);
+        let before = c.call(GemmRequest { a: a.clone(), weight: 7, inject: None });
+        c.register_weight(7, &neg);
+        let after = c.call(GemmRequest { a, weight: 7, inject: None });
+        let x = before.result.unwrap().c;
+        let y = after.result.unwrap().c;
+        let mut maxsum = 0.0f64;
+        for (p, q) in x.data().iter().zip(y.data()) {
+            maxsum = maxsum.max((p + q).abs());
+        }
+        assert!(maxsum < 1e-6, "outputs should negate: {maxsum}");
+        c.shutdown();
+    }
+}

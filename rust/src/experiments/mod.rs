@@ -1,0 +1,12 @@
+//! Reusable experiment drivers behind the paper-table benches.
+//!
+//! Each bench in `rust/benches/` is a thin main over one of these drivers,
+//! so the measurement logic itself is unit-tested library code.
+
+pub mod overhead;
+pub mod real_model;
+pub mod tightness;
+
+pub use overhead::{run_overhead, OverheadConfig, OverheadRow};
+pub use real_model::{model_weight_profiles, run_real_model, RealModelRow, WeightProfile};
+pub use tightness::{run_tightness, validate_dd_baseline, TightnessConfig, TightnessRow};

@@ -1,0 +1,141 @@
+//! Performance-overhead experiment (paper §6.8).
+//!
+//! Compares, on identical operands:
+//! * plain GEMM (no protection),
+//! * FT-GEMM (encode + encoded GEMM + V-ABFT threshold + verify + correct),
+//! * FT-GEMM with pre-encoded weights (the serving hot path),
+//! * DMR (double modular redundancy: run the GEMM twice and compare) —
+//!   the paper's >200%-overhead strawman.
+//!
+//! Also isolates the threshold-computation share (paper: <2%).
+
+use std::time::{Duration, Instant};
+
+use crate::abft::{FtGemm, VerifyPolicy};
+use crate::gemm::{AccumModel, GemmEngine};
+use crate::matrix::Matrix;
+use crate::rng::{Distribution, Xoshiro256pp};
+use crate::threshold::{Threshold, ThresholdContext, VabftThreshold};
+
+#[derive(Debug, Clone)]
+pub struct OverheadConfig {
+    pub model: AccumModel,
+    pub shape: (usize, usize, usize),
+    pub dist: Distribution,
+    /// Timed repetitions (median reported).
+    pub reps: usize,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct OverheadRow {
+    pub label: String,
+    pub median: Duration,
+    /// Overhead vs the plain GEMM baseline, percent.
+    pub overhead_pct: f64,
+}
+
+fn median_time(reps: usize, mut f: impl FnMut()) -> Duration {
+    let mut samples = Vec::with_capacity(reps);
+    f(); // warmup
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    samples[samples.len() / 2]
+}
+
+/// Run the overhead comparison; first row is the plain-GEMM baseline.
+pub fn run_overhead(cfg: &OverheadConfig) -> Vec<OverheadRow> {
+    let (m, k, n) = cfg.shape;
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    let a = Matrix::sample_in(m, k, &cfg.dist, cfg.model.input, &mut rng);
+    let b = Matrix::sample_in(k, n, &cfg.dist, cfg.model.input, &mut rng);
+    let engine = GemmEngine::new(cfg.model);
+    let ft = FtGemm::new(
+        GemmEngine::new(cfg.model),
+        Box::new(VabftThreshold::default()),
+        VerifyPolicy::default(),
+    );
+    let prepared = ft.prepare(&b);
+
+    let base = median_time(cfg.reps, || {
+        std::hint::black_box(engine.matmul(&a, &b));
+    });
+    let ft_full = median_time(cfg.reps, || {
+        std::hint::black_box(ft.multiply(&a, &b).unwrap());
+    });
+    let ft_prep = median_time(cfg.reps, || {
+        std::hint::black_box(ft.multiply_prepared(&a, &prepared, None).unwrap());
+    });
+    let dmr = median_time(cfg.reps, || {
+        let c1 = engine.matmul(&a, &b);
+        let c2 = engine.matmul(&a, &b);
+        std::hint::black_box(c1.c.max_abs_diff(&c2.c));
+    });
+    // threshold computation alone
+    let vab = VabftThreshold::default();
+    let ctx = ThresholdContext::online(cfg.model);
+    let thr_only = median_time(cfg.reps, || {
+        std::hint::black_box(vab.thresholds(&a, &b, &ctx));
+    });
+    let thr_prep = median_time(cfg.reps, || {
+        std::hint::black_box(vab.thresholds_prepared(&a, &prepared.stats, &ctx));
+    });
+
+    let pct = |d: Duration| {
+        100.0 * (d.as_secs_f64() - base.as_secs_f64()) / base.as_secs_f64()
+    };
+    vec![
+        OverheadRow { label: "plain GEMM".into(), median: base, overhead_pct: 0.0 },
+        OverheadRow {
+            label: "FT-GEMM (encode per call)".into(),
+            median: ft_full,
+            overhead_pct: pct(ft_full),
+        },
+        OverheadRow {
+            label: "FT-GEMM (prepared weights)".into(),
+            median: ft_prep,
+            overhead_pct: pct(ft_prep),
+        },
+        OverheadRow { label: "DMR (2x GEMM + compare)".into(), median: dmr, overhead_pct: pct(dmr) },
+        OverheadRow {
+            label: "threshold only (full)".into(),
+            median: thr_only,
+            overhead_pct: 100.0 * thr_only.as_secs_f64() / base.as_secs_f64(),
+        },
+        OverheadRow {
+            label: "threshold only (prepared)".into(),
+            median: thr_prep,
+            overhead_pct: 100.0 * thr_prep.as_secs_f64() / base.as_secs_f64(),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::Precision;
+
+    #[test]
+    fn dmr_costs_about_double_and_ft_much_less() {
+        let cfg = OverheadConfig {
+            model: AccumModel::wide(Precision::Bf16),
+            shape: (64, 256, 128),
+            dist: Distribution::normal_1_1(),
+            reps: 3,
+            seed: 5,
+        };
+        let rows = run_overhead(&cfg);
+        let base = rows[0].median.as_secs_f64();
+        let ft_prep = rows[2].median.as_secs_f64();
+        let dmr = rows[3].median.as_secs_f64();
+        assert!(dmr > base * 1.5, "DMR should ≈ double: {rows:?}");
+        assert!(
+            ft_prep < dmr,
+            "prepared FT-GEMM must beat DMR: {ft_prep} vs {dmr}"
+        );
+    }
+}

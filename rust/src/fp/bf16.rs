@@ -1,0 +1,126 @@
+//! bfloat16 storage type (1 sign, 8 exponent, 7 mantissa).
+//!
+//! BF16 shares FP32's exponent range, which is exactly why the paper's
+//! Table 8 bit-flip study targets its 8 exponent bits (encoding bits 7–14):
+//! a single exponent flip can scale a value by up to 2^128.
+
+use super::rounding::FloatSpec;
+
+/// A bfloat16 value stored as its 16-bit encoding.
+///
+/// Arithmetic is intentionally not implemented on the storage type: the
+/// GEMM engines ([`crate::gemm`]) carry values in f64 and quantize at the
+/// points dictated by the accumulation model, which is the behaviour under
+/// study. `Bf16` exists to (a) hold bit-exact encodings for the fault
+/// injector and (b) convert correctly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const SPEC: FloatSpec = FloatSpec::BF16;
+    pub const ZERO: Bf16 = Bf16(0);
+    pub const ONE: Bf16 = Bf16(0x3F80);
+
+    /// Convert from f64 with round-to-nearest-even.
+    pub fn from_f64(x: f64) -> Bf16 {
+        Bf16(Self::SPEC.encode(x) as u16)
+    }
+
+    /// Convert from f32 with round-to-nearest-even.
+    pub fn from_f32(x: f32) -> Bf16 {
+        Self::from_f64(x as f64)
+    }
+
+    /// Exact widening conversion.
+    pub fn to_f64(self) -> f64 {
+        Self::SPEC.decode(self.0 as u32)
+    }
+
+    /// Exact widening conversion (bf16 ⊂ f32).
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    /// Raw encoding.
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    /// From raw encoding.
+    pub fn from_bits(bits: u16) -> Bf16 {
+        Bf16(bits)
+    }
+
+    /// Flip bit `pos` (0 = LSB .. 15 = sign) of the encoding.
+    pub fn flip_bit(self, pos: u32) -> Bf16 {
+        debug_assert!(pos < 16);
+        Bf16(self.0 ^ (1 << pos))
+    }
+
+    pub fn is_nan(self) -> bool {
+        self.to_f64().is_nan()
+    }
+
+    pub fn is_infinite(self) -> bool {
+        self.to_f64().is_infinite()
+    }
+}
+
+impl From<f32> for Bf16 {
+    fn from(x: f32) -> Self {
+        Bf16::from_f32(x)
+    }
+}
+
+impl From<Bf16> for f32 {
+    fn from(x: Bf16) -> Self {
+        x.to_f32()
+    }
+}
+
+impl std::fmt::Display for Bf16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_f32_matches_decode() {
+        for enc in (0u16..=0xFFFF).step_by(7) {
+            let b = Bf16(enc);
+            let via_f32 = b.to_f32() as f64;
+            let via_spec = b.to_f64();
+            if via_f32.is_nan() {
+                assert!(via_spec.is_nan());
+            } else {
+                assert_eq!(via_f32, via_spec, "enc={enc:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn one_constant() {
+        assert_eq!(Bf16::ONE.to_f64(), 1.0);
+        assert_eq!(Bf16::from_f64(1.0), Bf16::ONE);
+    }
+
+    #[test]
+    fn exponent_flip_magnitude() {
+        // Flipping exponent bit k multiplies the value by 2^(2^(k-7)) (for
+        // a 0→1 flip) — the catastrophic-amplification property from §2.1.
+        let one = Bf16::from_f64(1.0); // exponent field 127 = 0b01111111
+        // bit 14 (exponent MSB) is 0 for 1.0; flipping gives exp 255 → inf/nan range
+        let flipped = one.flip_bit(14);
+        assert!(flipped.to_f64().is_infinite() || flipped.to_f64().is_nan());
+        // bit 7 (exponent LSB) is 1 for 1.0; flipping gives exp 126 → 0.5
+        assert_eq!(one.flip_bit(7).to_f64(), 0.5);
+        // sign bit
+        assert_eq!(one.flip_bit(15).to_f64(), -1.0);
+        // mantissa MSB: 1.0 → 1.5
+        assert_eq!(one.flip_bit(6).to_f64(), 1.5);
+    }
+}

@@ -1,0 +1,80 @@
+//! IEEE binary16 storage type (1 sign, 5 exponent, 10 mantissa).
+
+use super::rounding::FloatSpec;
+
+/// An IEEE half-precision value stored as its 16-bit encoding.
+///
+/// See [`super::bf16::Bf16`] for why arithmetic lives in the GEMM engines
+/// rather than on the storage type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct F16(pub u16);
+
+impl F16 {
+    pub const SPEC: FloatSpec = FloatSpec::F16;
+    pub const ZERO: F16 = F16(0);
+    pub const ONE: F16 = F16(0x3C00);
+
+    /// Convert from f64 with round-to-nearest-even.
+    pub fn from_f64(x: f64) -> F16 {
+        F16(Self::SPEC.encode(x) as u16)
+    }
+
+    pub fn from_f32(x: f32) -> F16 {
+        Self::from_f64(x as f64)
+    }
+
+    /// Exact widening conversion.
+    pub fn to_f64(self) -> f64 {
+        Self::SPEC.decode(self.0 as u32)
+    }
+
+    pub fn to_f32(self) -> f32 {
+        self.to_f64() as f32
+    }
+
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    pub fn from_bits(bits: u16) -> F16 {
+        F16(bits)
+    }
+
+    /// Flip bit `pos` (0 = LSB .. 15 = sign) of the encoding.
+    pub fn flip_bit(self, pos: u32) -> F16 {
+        debug_assert!(pos < 16);
+        F16(self.0 ^ (1 << pos))
+    }
+
+    pub fn is_nan(self) -> bool {
+        self.to_f64().is_nan()
+    }
+}
+
+impl std::fmt::Display for F16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_and_range() {
+        assert_eq!(F16::ONE.to_f64(), 1.0);
+        assert_eq!(F16::from_f64(65504.0).to_f64(), 65504.0);
+        assert!(F16::from_f64(1e6).to_f64().is_infinite());
+        // FP16 subnormal floor
+        assert_eq!(F16::from_f64(6e-8).to_f64(), 5.960464477539063e-8);
+    }
+
+    #[test]
+    fn exponent_layout() {
+        // 1.0 = 0x3C00: exponent field at bits 10..=14.
+        assert_eq!(F16::ONE.flip_bit(10).to_f64(), 0.5); // exp LSB 1→0
+        assert_eq!(F16::ONE.flip_bit(15).to_f64(), -1.0); // sign
+        assert_eq!(F16::ONE.flip_bit(9).to_f64(), 1.5); // mantissa MSB
+    }
+}

@@ -1,0 +1,113 @@
+//! OCP FP8 storage types: E4M3 (saturating, no Inf) and E5M2 (IEEE-like).
+//!
+//! §3.6 of the paper observes that FP8 GEMM on modern accelerators runs
+//! FP8 inputs through an FP32 accumulator with FP16 output, so the
+//! *verification* error is governed by the output precision — e_max ≈
+//! 2·u_FP16 ≈ 1e-3 — not by FP8's coarse u. These types exist so the GEMM
+//! engines can quantize operands to genuine FP8 grids and the experiments
+//! can confirm that rule.
+
+use super::rounding::FloatSpec;
+
+/// FP8 E4M3: 1 sign, 4 exponent, 3 mantissa. Max finite 448, no Inf;
+/// overflow saturates (H100 conversion semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct F8E4M3(pub u8);
+
+/// FP8 E5M2: 1 sign, 5 exponent, 2 mantissa. IEEE-like with Inf/NaN.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct F8E5M2(pub u8);
+
+macro_rules! fp8_impl {
+    ($ty:ident, $spec:expr) => {
+        impl $ty {
+            pub const SPEC: FloatSpec = $spec;
+
+            pub fn from_f64(x: f64) -> $ty {
+                $ty(Self::SPEC.encode(x) as u8)
+            }
+
+            pub fn from_f32(x: f32) -> $ty {
+                Self::from_f64(x as f64)
+            }
+
+            /// Exact widening conversion.
+            pub fn to_f64(self) -> f64 {
+                Self::SPEC.decode(self.0 as u32)
+            }
+
+            pub fn to_bits(self) -> u8 {
+                self.0
+            }
+
+            pub fn from_bits(bits: u8) -> $ty {
+                $ty(bits)
+            }
+
+            /// Flip bit `pos` (0 = LSB .. 7 = sign) of the encoding.
+            pub fn flip_bit(self, pos: u32) -> $ty {
+                debug_assert!(pos < 8);
+                $ty(self.0 ^ (1 << pos))
+            }
+
+            pub fn is_nan(self) -> bool {
+                self.to_f64().is_nan()
+            }
+        }
+
+        impl std::fmt::Display for $ty {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "{}", self.to_f64())
+            }
+        }
+    };
+}
+
+fp8_impl!(F8E4M3, FloatSpec::E4M3);
+fp8_impl!(F8E5M2, FloatSpec::E5M2);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e4m3_value_table_spots() {
+        assert_eq!(F8E4M3::from_f64(1.0).to_f64(), 1.0);
+        assert_eq!(F8E4M3::from_f64(448.0).to_f64(), 448.0);
+        assert_eq!(F8E4M3::from_f64(500.0).to_f64(), 448.0); // saturates
+        assert_eq!(F8E4M3::from_f64(0.0625).to_f64(), 0.0625);
+        // min subnormal 2^-9
+        assert_eq!(F8E4M3::from_f64(0.001953125).to_f64(), 0.001953125);
+    }
+
+    #[test]
+    fn e5m2_value_table_spots() {
+        assert_eq!(F8E5M2::from_f64(1.0).to_f64(), 1.0);
+        assert_eq!(F8E5M2::from_f64(57344.0).to_f64(), 57344.0);
+        assert!(F8E5M2::from_f64(1e6).to_f64().is_infinite());
+        // min subnormal 2^-16
+        let ms = 2.0f64.powi(-16);
+        assert_eq!(F8E5M2::from_f64(ms).to_f64(), ms);
+    }
+
+    #[test]
+    fn all_encodings_roundtrip() {
+        for enc in 0u8..=255 {
+            let v = F8E4M3(enc).to_f64();
+            if !v.is_nan() {
+                assert_eq!(F8E4M3::from_f64(v).to_f64(), v);
+            }
+            let w = F8E5M2(enc).to_f64();
+            if !w.is_nan() {
+                assert_eq!(F8E5M2::from_f64(w).to_f64(), w);
+            }
+        }
+    }
+
+    #[test]
+    fn quantization_grid_is_coarse() {
+        // u = 2^-4 for E4M3: 1.0 and 1.125 are adjacent.
+        assert_eq!(F8E4M3::from_f64(1.05).to_f64(), 1.0);
+        assert_eq!(F8E4M3::from_f64(1.07).to_f64(), 1.125);
+    }
+}

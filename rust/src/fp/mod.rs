@@ -1,0 +1,234 @@
+//! Software floating-point substrate.
+//!
+//! Mixed-precision GEMM simulation requires *controllable* rounding: the
+//! paper's e_max analysis (§3.6) hinges on exactly where rounding happens
+//! (per accumulation step vs. once at output) and in which format. The
+//! `half` crate is not available offline, and it would not give us FP8 or
+//! a high-precision baseline anyway, so this module implements:
+//!
+//! * [`Precision`] — format descriptors (BF16, FP16, FP8 E4M3/E5M2, FP32,
+//!   FP64) with unit roundoff, bit layout and quantization.
+//! * [`bf16::Bf16`], [`f16::F16`], [`fp8::F8E4M3`], [`fp8::F8E5M2`] —
+//!   bit-exact storage types used by the fault injector (bit flips operate
+//!   on the stored encodings).
+//! * [`dd::Dd`] — double-double (~106-bit significand) arithmetic, the
+//!   stand-in for the paper's mpmath 100-decimal-place baseline.
+//!
+//! All conversions use round-to-nearest-even with subnormal and Inf/NaN
+//! handling, matching IEEE 754 semantics for the custom widths.
+
+pub mod bf16;
+pub mod dd;
+pub mod f16;
+pub mod fp8;
+pub mod rounding;
+
+pub use bf16::Bf16;
+pub use f16::F16;
+pub use fp8::{F8E4M3, F8E5M2};
+
+/// Floating-point format descriptor.
+///
+/// `unit_roundoff` follows the paper's convention (u = 2^-(t+1) with t
+/// stored mantissa bits is the *round-to-nearest* unit roundoff; the paper
+/// quotes u = 2^-8 for BF16 and u = 2^-24 for FP32, i.e. 2^-(mant_bits+1)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// bfloat16: 1 sign, 8 exponent, 7 mantissa. u = 2^-8.
+    Bf16,
+    /// IEEE binary16: 1 sign, 5 exponent, 10 mantissa. u = 2^-11.
+    F16,
+    /// FP8 E4M3 (OCP): 1 sign, 4 exponent, 3 mantissa. u = 2^-4.
+    F8E4M3,
+    /// FP8 E5M2 (OCP): 1 sign, 5 exponent, 2 mantissa. u = 2^-3.
+    F8E5M2,
+    /// IEEE binary32. u = 2^-24.
+    F32,
+    /// IEEE binary64. u = 2^-53.
+    F64,
+}
+
+impl Precision {
+    /// All formats, low → high precision.
+    pub const ALL: [Precision; 6] = [
+        Precision::F8E5M2,
+        Precision::F8E4M3,
+        Precision::Bf16,
+        Precision::F16,
+        Precision::F32,
+        Precision::F64,
+    ];
+
+    /// Number of stored mantissa (fraction) bits.
+    pub fn mantissa_bits(self) -> u32 {
+        match self {
+            Precision::Bf16 => 7,
+            Precision::F16 => 10,
+            Precision::F8E4M3 => 3,
+            Precision::F8E5M2 => 2,
+            Precision::F32 => 23,
+            Precision::F64 => 52,
+        }
+    }
+
+    /// Number of exponent bits.
+    pub fn exponent_bits(self) -> u32 {
+        match self {
+            Precision::Bf16 => 8,
+            Precision::F16 => 5,
+            Precision::F8E4M3 => 4,
+            Precision::F8E5M2 => 5,
+            Precision::F32 => 8,
+            Precision::F64 => 11,
+        }
+    }
+
+    /// Total storage width in bits.
+    pub fn bits(self) -> u32 {
+        1 + self.exponent_bits() + self.mantissa_bits()
+    }
+
+    /// Unit roundoff u = 2^-(mant_bits + 1) (round-to-nearest).
+    pub fn unit_roundoff(self) -> f64 {
+        (2.0f64).powi(-(self.mantissa_bits() as i32 + 1))
+    }
+
+    /// Exponent bias (2^(e-1) - 1).
+    pub fn bias(self) -> i32 {
+        (1 << (self.exponent_bits() - 1)) - 1
+    }
+
+    /// Quantize an f64 to this format (round-to-nearest-even), returning
+    /// the nearest representable value as f64. This is the primitive that
+    /// the accumulation models in [`crate::gemm`] are built on.
+    ///
+    /// BF16 uses a fast two-step path (f64→f32 in hardware, then an
+    /// integer round of the low 16 bits). The composition can differ from
+    /// a single direct rounding only when the f32 step lands exactly on a
+    /// BF16 tie point (relative deviation < 2⁻²⁴, i.e. one BF16 ulp choice
+    /// on a ~2⁻¹⁶ fraction of inputs) — immaterial for every experiment,
+    /// and idempotence/monotonicity are preserved. Bit-level consumers
+    /// (the fault injector) use [`Bf16::from_f64`], which stays exact.
+    #[inline]
+    pub fn quantize(self, x: f64) -> f64 {
+        match self {
+            Precision::F64 => x,
+            Precision::F32 => x as f32 as f64,
+            Precision::Bf16 => {
+                let f = x as f32;
+                let b = f.to_bits();
+                if !f.is_finite() {
+                    return f as f64; // Inf/NaN pass through
+                }
+                let rounded = b.wrapping_add(0x7FFF + ((b >> 16) & 1));
+                f32::from_bits(rounded & 0xFFFF_0000) as f64
+            }
+            Precision::F16 => F16::from_f64(x).to_f64(),
+            Precision::F8E4M3 => F8E4M3::from_f64(x).to_f64(),
+            Precision::F8E5M2 => F8E5M2::from_f64(x).to_f64(),
+        }
+    }
+
+    /// Short lowercase name used in CLIs, artifact names and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Bf16 => "bf16",
+            Precision::F16 => "fp16",
+            Precision::F8E4M3 => "fp8e4m3",
+            Precision::F8E5M2 => "fp8e5m2",
+            Precision::F32 => "fp32",
+            Precision::F64 => "fp64",
+        }
+    }
+
+    /// Parse a precision name as accepted by [`Precision::name`] plus a
+    /// few aliases (`f32`, `float32`, ...).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "bf16" | "bfloat16" => Some(Precision::Bf16),
+            "fp16" | "f16" | "float16" | "half" => Some(Precision::F16),
+            "fp8" | "fp8e4m3" | "e4m3" => Some(Precision::F8E4M3),
+            "fp8e5m2" | "e5m2" => Some(Precision::F8E5M2),
+            "fp32" | "f32" | "float32" | "single" => Some(Precision::F32),
+            "fp64" | "f64" | "float64" | "double" => Some(Precision::F64),
+            _ => None,
+        }
+    }
+
+    /// Index of the least-significant exponent bit in the storage encoding
+    /// (bit positions count from 0 = LSB of the encoding). For BF16 this is
+    /// 7, matching the paper's "bits 7–14" exponent range in Table 8.
+    pub fn exponent_lsb(self) -> u32 {
+        self.mantissa_bits()
+    }
+
+    /// Index of the sign bit in the storage encoding.
+    pub fn sign_bit(self) -> u32 {
+        self.bits() - 1
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_roundoff_matches_paper() {
+        // Paper §1: u = 2^-8 for BF16, u = 2^-24 for FP32.
+        assert_eq!(Precision::Bf16.unit_roundoff(), 2.0f64.powi(-8));
+        assert_eq!(Precision::F32.unit_roundoff(), 2.0f64.powi(-24));
+        // Table 1: FP16 u = 2^-11.
+        assert_eq!(Precision::F16.unit_roundoff(), 2.0f64.powi(-11));
+        assert_eq!(Precision::F64.unit_roundoff(), 2.0f64.powi(-53));
+    }
+
+    #[test]
+    fn bit_layout() {
+        assert_eq!(Precision::Bf16.bits(), 16);
+        assert_eq!(Precision::F16.bits(), 16);
+        assert_eq!(Precision::F8E4M3.bits(), 8);
+        assert_eq!(Precision::F8E5M2.bits(), 8);
+        // BF16 exponent occupies bits 7..=14, sign bit 15 (Table 8's
+        // "bits 7-15" injection range).
+        assert_eq!(Precision::Bf16.exponent_lsb(), 7);
+        assert_eq!(Precision::Bf16.sign_bit(), 15);
+        assert_eq!(Precision::Bf16.bias(), 127);
+        assert_eq!(Precision::F16.bias(), 15);
+        assert_eq!(Precision::F8E4M3.bias(), 7);
+    }
+
+    #[test]
+    fn quantize_f32_roundtrip() {
+        for &x in &[0.0, 1.0, -1.5, 3.14159, 1e-30, -2.5e20] {
+            assert_eq!(Precision::F32.quantize(x), x as f32 as f64);
+        }
+    }
+
+    #[test]
+    fn quantize_is_idempotent() {
+        let mut state = 0x9E3779B97F4A7C15u64;
+        for p in Precision::ALL {
+            for _ in 0..200 {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let x = ((state >> 11) as f64 / (1u64 << 53) as f64 - 0.5) * 8.0;
+                let q = p.quantize(x);
+                assert_eq!(p.quantize(q), q, "{p:?} not idempotent at {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        for p in Precision::ALL {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        assert_eq!(Precision::parse("float32"), Some(Precision::F32));
+        assert_eq!(Precision::parse("nonsense"), None);
+    }
+}

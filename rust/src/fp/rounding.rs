@@ -1,0 +1,376 @@
+//! Generic binary floating-point encode/decode with round-to-nearest-even.
+//!
+//! All narrow formats in this crate (BF16, FP16, FP8 E4M3/E5M2) are defined
+//! by a [`FloatSpec`] and share one correctly-rounded conversion path from
+//! f64. Handles normals, subnormals, signed zero, Inf/NaN, saturating
+//! formats without an infinity (E4M3), and rounding overflow into the next
+//! exponent or into Inf.
+
+/// Static description of a binary floating-point format (≤ 32 bits wide).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FloatSpec {
+    /// Exponent field width in bits.
+    pub exp_bits: u32,
+    /// Stored mantissa (fraction) width in bits.
+    pub man_bits: u32,
+    /// Whether the all-ones exponent encodes Inf/NaN (IEEE style). When
+    /// false (FP8 E4M3), the all-ones exponent holds normal numbers except
+    /// the all-ones mantissa, which is NaN; overflow saturates to the
+    /// largest finite value (matching H100 saturating conversions).
+    pub has_inf: bool,
+}
+
+impl FloatSpec {
+    pub const BF16: FloatSpec = FloatSpec { exp_bits: 8, man_bits: 7, has_inf: true };
+    pub const F16: FloatSpec = FloatSpec { exp_bits: 5, man_bits: 10, has_inf: true };
+    pub const E4M3: FloatSpec = FloatSpec { exp_bits: 4, man_bits: 3, has_inf: false };
+    pub const E5M2: FloatSpec = FloatSpec { exp_bits: 5, man_bits: 2, has_inf: true };
+
+    /// Exponent bias.
+    pub const fn bias(self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Total width in bits (sign + exponent + mantissa).
+    pub const fn bits(self) -> u32 {
+        1 + self.exp_bits + self.man_bits
+    }
+
+    /// Largest finite value of the format.
+    pub fn max_finite(self) -> f64 {
+        let bias = self.bias();
+        if self.has_inf {
+            // exp field 2^eb - 2, mantissa all ones: (2 - 2^-m) * 2^bias
+            (2.0 - (2.0f64).powi(-(self.man_bits as i32))) * (2.0f64).powi(bias)
+        } else {
+            // E4M3: exp field all ones, mantissa 111...0 (all-ones is NaN)
+            let e_max = ((1 << self.exp_bits) - 1) - bias;
+            (2.0 - (2.0f64).powi(-(self.man_bits as i32 - 1))) * (2.0f64).powi(e_max)
+        }
+    }
+
+    /// Smallest positive normal value, 2^(1 - bias).
+    pub fn min_normal(self) -> f64 {
+        (2.0f64).powi(1 - self.bias())
+    }
+
+    /// Smallest positive subnormal value, 2^(1 - bias - man_bits).
+    pub fn min_subnormal(self) -> f64 {
+        (2.0f64).powi(1 - self.bias() - self.man_bits as i32)
+    }
+
+    /// Encoding of the canonical quiet NaN.
+    pub fn nan_bits(self) -> u32 {
+        if self.has_inf {
+            // exponent all ones, MSB of mantissa set
+            let exp_all = ((1u32 << self.exp_bits) - 1) << self.man_bits;
+            exp_all | (1 << (self.man_bits - 1))
+        } else {
+            // E4M3: S.1111.111
+            (1u32 << (self.exp_bits + self.man_bits)) - 1
+        }
+    }
+
+    /// Encoding of +Inf (only meaningful when `has_inf`).
+    pub fn inf_bits(self) -> u32 {
+        ((1u32 << self.exp_bits) - 1) << self.man_bits
+    }
+
+    /// Encode an f64 into this format with round-to-nearest-even.
+    #[inline]
+    pub fn encode(self, x: f64) -> u32 {
+        let bits64 = x.to_bits();
+        let sign = ((bits64 >> 63) & 1) as u32;
+        let sign_enc = sign << (self.exp_bits + self.man_bits);
+
+        if x.is_nan() {
+            return sign_enc | self.nan_bits();
+        }
+        if x.is_infinite() {
+            return if self.has_inf {
+                sign_enc | self.inf_bits()
+            } else {
+                // Saturating format: ±Inf maps to NaN per OCP FP8 spec.
+                sign_enc | self.nan_bits()
+            };
+        }
+        if x == 0.0 {
+            return sign_enc; // preserves signed zero
+        }
+
+        // Decompose |x| into sig * 2^(e - 52) with sig in [2^52, 2^53).
+        let mut e = ((bits64 >> 52) & 0x7FF) as i32 - 1023;
+        let mut sig = bits64 & ((1u64 << 52) - 1);
+        if ((bits64 >> 52) & 0x7FF) == 0 {
+            // f64 subnormal: normalize.
+            let shift = sig.leading_zeros() - 11; // bring MSB to bit 52
+            sig <<= shift;
+            e = -1022 - shift as i32;
+        } else {
+            sig |= 1u64 << 52;
+        }
+
+        let bias = self.bias();
+        let e_min = 1 - bias; // smallest normal exponent
+        let e_max = if self.has_inf {
+            bias
+        } else {
+            ((1 << self.exp_bits) - 1) - bias
+        };
+
+        // Total right shift from the 53-bit significand to the target.
+        let base_shift = 52 - self.man_bits;
+        let extra = if e < e_min { (e_min - e) as u32 } else { 0 };
+        let shift = base_shift + extra;
+
+        let (mut t_sig, rounded_up);
+        if shift >= 63 {
+            // Value far below the subnormal range: rounds to zero unless it
+            // is at least half the smallest subnormal.
+            let half_min_sub = self.min_subnormal() / 2.0;
+            let ax = x.abs();
+            t_sig = if ax > half_min_sub { 1 } else { 0 }; // exactly half → even (0)
+            rounded_up = false;
+            let _ = rounded_up;
+            return sign_enc | t_sig as u32;
+        } else {
+            let mask = (1u64 << shift) - 1;
+            let rem = sig & mask;
+            t_sig = sig >> shift;
+            let half = 1u64 << (shift - 1);
+            if rem > half || (rem == half && (t_sig & 1) == 1) {
+                t_sig += 1;
+                rounded_up = true;
+            } else {
+                rounded_up = false;
+            }
+            let _ = rounded_up;
+        }
+
+        let mut e_out = if extra > 0 { e_min } else { e };
+        // Rounding may carry into the next binade (or promote a subnormal
+        // to the smallest normal, which the encoding handles for free).
+        if t_sig >= (1u64 << (self.man_bits + 1)) {
+            t_sig >>= 1;
+            e_out += 1;
+        }
+
+        if extra > 0 && t_sig < (1u64 << self.man_bits) {
+            // Subnormal result: exponent field 0, no implicit bit.
+            return sign_enc | t_sig as u32;
+        }
+
+        if e_out > e_max {
+            return if self.has_inf {
+                sign_enc | self.inf_bits()
+            } else {
+                // Saturate (H100-style FP8 conversion).
+                self.encode(if sign == 1 { -self.max_finite() } else { self.max_finite() })
+            };
+        }
+        if !self.has_inf && e_out == e_max {
+            // E4M3: top binade loses its top mantissa code to NaN.
+            let man = (t_sig as u32) & ((1 << self.man_bits) - 1);
+            if man == (1 << self.man_bits) - 1 {
+                // would collide with NaN — saturate to max finite
+                let exp_field = ((e_out + bias) as u32) << self.man_bits;
+                return sign_enc | exp_field | (((1 << self.man_bits) - 1) - 1);
+            }
+        }
+
+        let exp_field = ((e_out + bias) as u32) << self.man_bits;
+        let man_field = (t_sig as u32) & ((1 << self.man_bits) - 1);
+        sign_enc | exp_field | man_field
+    }
+
+    /// Decode an encoding of this format to f64 (exact).
+    ///
+    /// Hot path (it runs once per element per quantization): the result is
+    /// assembled directly as f64 bits — every value of a ≤ 32-bit format is
+    /// exactly representable in f64, so no rounding and no `powi` calls.
+    #[inline]
+    pub fn decode(self, enc: u32) -> f64 {
+        let man_mask = (1u32 << self.man_bits) - 1;
+        let exp_mask = (1u32 << self.exp_bits) - 1;
+        let sign = (enc >> (self.exp_bits + self.man_bits)) & 1;
+        let exp_field = (enc >> self.man_bits) & exp_mask;
+        let man = enc & man_mask;
+        let sign_bits = (sign as u64) << 63;
+        let bias = self.bias();
+
+        if exp_field == exp_mask {
+            if self.has_inf {
+                return if man == 0 {
+                    f64::from_bits(sign_bits | 0x7FF0_0000_0000_0000)
+                } else {
+                    f64::NAN
+                };
+            } else if man == man_mask {
+                return f64::NAN; // E4M3 NaN
+            }
+            // else: fall through, E4M3 normal in the top binade
+        }
+        if exp_field == 0 {
+            // Subnormal (or zero): man · 2^(1 − bias − man_bits), built as
+            // an exact product of two f64s (both exact integers/powers).
+            if man == 0 {
+                return f64::from_bits(sign_bits);
+            }
+            let k = 1 - bias - self.man_bits as i32;
+            let scale = f64::from_bits(((1023 + k) as u64) << 52);
+            let v = man as f64 * scale;
+            return if sign == 1 { -v } else { v };
+        }
+        // Normal: widen exponent to f64 bias, shift mantissa into place.
+        let e64 = (exp_field as i64 - bias as i64 + 1023) as u64;
+        let m64 = (man as u64) << (52 - self.man_bits);
+        f64::from_bits(sign_bits | (e64 << 52) | m64)
+    }
+
+    /// Round an f64 to the nearest representable value of this format.
+    pub fn quantize(self, x: f64) -> f64 {
+        self.decode(self.encode(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_known_values() {
+        let s = FloatSpec::BF16;
+        assert_eq!(s.quantize(1.0), 1.0);
+        assert_eq!(s.quantize(-2.0), -2.0);
+        // 1 + 2^-8 is exactly halfway between 1.0 and 1 + 2^-7 → even (1.0)
+        assert_eq!(s.quantize(1.0 + 2.0f64.powi(-8)), 1.0);
+        // just above halfway rounds up
+        assert_eq!(s.quantize(1.0 + 2.0f64.powi(-8) + 1e-6), 1.0 + 2.0f64.powi(-7));
+        // bf16 of pi = 3.140625
+        assert_eq!(s.quantize(std::f64::consts::PI), 3.140625);
+        assert_eq!(s.max_finite(), 3.3895313892515355e38);
+        assert!(s.quantize(1e39).is_infinite());
+    }
+
+    #[test]
+    fn bf16_matches_f32_truncation_semantics() {
+        // BF16 quantization must equal rounding the f32 to 8 mantissa bits.
+        // Cross-check against an independent path: f32 bits + RNE by hand.
+        let s = FloatSpec::BF16;
+        let mut state = 12345u64;
+        for _ in 0..10_000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let f = f32::from_bits((state >> 32) as u32);
+            if !f.is_finite() {
+                continue;
+            }
+            let got = s.quantize(f as f64);
+            // reference: round f32 to bf16 via integer arithmetic
+            let b = f.to_bits();
+            let lsb = (b >> 16) & 1;
+            let rounded = b.wrapping_add(0x7FFF + lsb);
+            let ref_bits = (rounded >> 16) as u16;
+            let ref_val = f32::from_bits((ref_bits as u32) << 16) as f64;
+            if ref_val.is_nan() || got.is_nan() {
+                continue; // overflow-to-inf edge differences are tested above
+            }
+            assert_eq!(got, ref_val, "mismatch at {f}");
+        }
+    }
+
+    #[test]
+    fn f16_known_values() {
+        let s = FloatSpec::F16;
+        assert_eq!(s.quantize(1.0), 1.0);
+        assert_eq!(s.max_finite(), 65504.0);
+        assert_eq!(s.min_normal(), 6.103515625e-5);
+        assert_eq!(s.min_subnormal(), 5.960464477539063e-8);
+        assert!(s.quantize(65520.0).is_infinite()); // above halfway to 65536
+        assert_eq!(s.quantize(65519.0), 65504.0);
+        // subnormal rounding
+        assert_eq!(s.quantize(s.min_subnormal() * 1.4), s.min_subnormal());
+        assert_eq!(s.quantize(s.min_subnormal() * 0.6), s.min_subnormal());
+        assert_eq!(s.quantize(s.min_subnormal() * 0.4), 0.0);
+        // exactly half the min subnormal ties to even → 0
+        assert_eq!(s.quantize(s.min_subnormal() * 0.5), 0.0);
+    }
+
+    #[test]
+    fn e4m3_saturation_and_nan() {
+        let s = FloatSpec::E4M3;
+        assert_eq!(s.max_finite(), 448.0);
+        assert_eq!(s.quantize(448.0), 448.0);
+        assert_eq!(s.quantize(1e9), 448.0); // saturates, no inf
+        assert_eq!(s.quantize(-1e9), -448.0);
+        assert!(s.quantize(f64::NAN).is_nan());
+        assert!(s.decode(0x7F).is_nan());
+        assert!(s.decode(0xFF).is_nan());
+        // 464 is closer to 448 than to the (nonexistent) 480 → but also in
+        // the saturating regime either way.
+        assert_eq!(s.quantize(464.0), 448.0);
+        assert_eq!(s.min_subnormal(), 2.0f64.powi(-9));
+    }
+
+    #[test]
+    fn e5m2_is_ieee_like() {
+        let s = FloatSpec::E5M2;
+        assert_eq!(s.max_finite(), 57344.0);
+        assert!(s.quantize(1e9).is_infinite());
+        assert_eq!(s.quantize(1.0), 1.0);
+        assert_eq!(s.quantize(1.26), 1.25);
+    }
+
+    #[test]
+    fn signed_zero_preserved() {
+        for s in [FloatSpec::BF16, FloatSpec::F16, FloatSpec::E4M3, FloatSpec::E5M2] {
+            assert_eq!(s.quantize(0.0).to_bits(), 0.0f64.to_bits());
+            assert_eq!(s.quantize(-0.0).to_bits(), (-0.0f64).to_bits());
+        }
+    }
+
+    #[test]
+    fn quantize_idempotent_exhaustive_fp8() {
+        // FP8 formats are small enough to test every encoding.
+        for s in [FloatSpec::E4M3, FloatSpec::E5M2] {
+            for enc in 0u32..=0xFF {
+                let v = s.decode(enc);
+                if v.is_nan() {
+                    assert!(s.decode(s.encode(v)).is_nan());
+                } else {
+                    assert_eq!(
+                        s.decode(s.encode(v)),
+                        v,
+                        "roundtrip failed for enc {enc:#x} -> {v}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_exhaustive_f16_roundtrip() {
+        let s = FloatSpec::F16;
+        for enc in 0u32..=0xFFFF {
+            let v = s.decode(enc);
+            if v.is_nan() {
+                continue;
+            }
+            let back = s.encode(v);
+            assert_eq!(s.decode(back), v, "enc {enc:#x}");
+        }
+    }
+
+    #[test]
+    fn monotonic_rounding() {
+        // Quantization must be monotone non-decreasing.
+        let s = FloatSpec::E4M3;
+        let mut prev = f64::NEG_INFINITY;
+        let mut x = -500.0;
+        while x < 500.0 {
+            let q = s.quantize(x);
+            assert!(q >= prev, "non-monotone at {x}: {q} < {prev}");
+            prev = q;
+            x += 0.0437;
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Exact (double-double) reference GEMM and reductions.
+//!
+//! Substitute for the paper's mpmath 100-dp baseline (see DESIGN.md §6):
+//! used to measure *true* rounding errors of the verification paths in the
+//! FP64 tightness experiment (Table 4) and as the correctness oracle in
+//! tests.
+
+use crate::fp::dd::Dd;
+use crate::matrix::Matrix;
+
+/// Exact product C = A·B, each element accumulated in double-double and
+/// rounded once to f64 at the end.
+pub fn matmul_dd(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "shape mismatch");
+    let (m, n) = (a.rows(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    // ikj order with a dd accumulator panel per output row.
+    let mut accs = vec![Dd::ZERO; n];
+    for i in 0..m {
+        for acc in accs.iter_mut() {
+            *acc = Dd::ZERO;
+        }
+        let arow = a.row(i);
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = b.row(kk);
+            for (acc, &bv) in accs.iter_mut().zip(brow) {
+                *acc = acc.mul_acc(av, bv);
+            }
+        }
+        for (j, acc) in accs.iter().enumerate() {
+            c.set(i, j, acc.to_f64());
+        }
+    }
+    c
+}
+
+/// Exact row sums of M in double-double (kept as `Dd` so callers can
+/// subtract f64 path results without losing the small difference).
+pub fn row_sums_dd(m: &Matrix) -> Vec<Dd> {
+    (0..m.rows()).map(|i| Dd::sum(m.row(i))).collect()
+}
+
+/// Exact dot in double-double.
+pub fn dot_dd(a: &[f64], b: &[f64]) -> Dd {
+    Dd::dot(a, b)
+}
+
+/// Exact verification reference for row `i` of C = A·B: the true value of
+/// Σ_n Σ_k A[i][k]·B[k][n], computed as Σ_k A[i][k]·rowsum_dd(B)[k] in
+/// double-double. O(MK + KN) for all rows, not O(MKN).
+pub fn exact_row_checksums(a: &Matrix, b: &Matrix) -> Vec<Dd> {
+    let brs = row_sums_dd(b);
+    (0..a.rows())
+        .map(|i| {
+            let arow = a.row(i);
+            let mut acc = Dd::ZERO;
+            for (k, &av) in arow.iter().enumerate() {
+                acc = acc.add(brs[k].mul_f64(av));
+            }
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Distribution, Xoshiro256pp};
+
+    #[test]
+    fn dd_gemm_matches_integer_arithmetic() {
+        // Integer-valued matrices multiply exactly in f64 too; dd must agree
+        // bit-for-bit.
+        let a = Matrix::from_fn(5, 7, |i, j| ((i * 7 + j) % 13) as f64 - 6.0);
+        let b = Matrix::from_fn(7, 4, |i, j| ((i * 4 + j) % 11) as f64 - 5.0);
+        let c = matmul_dd(&a, &b);
+        for i in 0..5 {
+            for j in 0..4 {
+                let mut s = 0.0;
+                for k in 0..7 {
+                    s += a.get(i, k) * b.get(k, j);
+                }
+                assert_eq!(c.get(i, j), s);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_checksums_equal_brute_force() {
+        let mut rng = Xoshiro256pp::seed_from_u64(21);
+        let a = Matrix::sample(6, 9, &Distribution::uniform_pm1(), &mut rng);
+        let b = Matrix::sample(9, 8, &Distribution::uniform_pm1(), &mut rng);
+        let fast = exact_row_checksums(&a, &b);
+        // brute force: dd GEMM then dd row sums
+        let c = matmul_dd(&a, &b);
+        for i in 0..6 {
+            let mut acc = Dd::ZERO;
+            // re-accumulate in dd over the exact products
+            for k in 0..9 {
+                for j in 0..8 {
+                    acc = acc.mul_acc(a.get(i, k), b.get(k, j));
+                }
+            }
+            let _ = &c;
+            assert!(
+                (fast[i].sub(acc)).to_f64().abs() < 1e-25,
+                "row {i}: {} vs {}",
+                fast[i].to_f64(),
+                acc.to_f64()
+            );
+        }
+    }
+}

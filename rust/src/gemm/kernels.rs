@@ -1,0 +1,317 @@
+//! Native inner loops for the accumulation models.
+//!
+//! Each kernel reproduces one *rounding schedule*, which §3.6 of the paper
+//! shows is the variable that determines e_max:
+//!
+//! * `seq_*` — one rounding per multiply and per add, strictly in order
+//!   (dependency chain along K). Verification error grows ∝ √K. This is
+//!   the paper's "per-step rounding" regime: NPU FP32 and (empirically)
+//!   H100 FP32/FP64.
+//! * `fma_*` — one rounding per fused multiply-add step; same √K law with
+//!   a smaller constant. Provided for ablations.
+//! * `pairwise_*` — tree reduction; error depth is log₂K, so e_max is
+//!   near-constant in K. This is the paper's CPU (Xeon/FMA/SIMD) regime.
+//!
+//! The loops are written ikj (products broadcast across the output row) so
+//! the compiler can vectorize across N — the accumulators for different
+//! output columns are independent, so vectorization does not alter the
+//! per-element rounding schedule.
+
+/// f64 → f32 conversion of a slice (one rounding per element).
+pub fn to_f32_vec(xs: &[f64]) -> Vec<f32> {
+    xs.iter().map(|&x| x as f32).collect()
+}
+
+macro_rules! kernels_for {
+    ($seq:ident, $fma:ident, $pair:ident, $seq_reduce:ident, $pair_reduce:ident,
+     $seq_dot:ident, $fma_dot:ident, $ty:ty) => {
+        /// Sequential-rounding GEMM: C[i][j] = fl(... fl(fl(c + fl(a·b))))
+        /// with one product rounding and one add rounding per K step.
+        pub fn $seq(a: &[$ty], b: &[$ty], m: usize, k: usize, n: usize) -> Vec<$ty> {
+            debug_assert_eq!(a.len(), m * k);
+            debug_assert_eq!(b.len(), k * n);
+            let mut c = vec![0 as $ty; m * n];
+            for i in 0..m {
+                let crow = &mut c[i * n..(i + 1) * n];
+                for kk in 0..k {
+                    let av = a[i * k + kk];
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv; // round(mul) then round(add)
+                    }
+                }
+            }
+            c
+        }
+
+        /// FMA GEMM: one rounding per step via fused multiply-add.
+        pub fn $fma(a: &[$ty], b: &[$ty], m: usize, k: usize, n: usize) -> Vec<$ty> {
+            debug_assert_eq!(a.len(), m * k);
+            debug_assert_eq!(b.len(), k * n);
+            let mut c = vec![0 as $ty; m * n];
+            for i in 0..m {
+                let crow = &mut c[i * n..(i + 1) * n];
+                for kk in 0..k {
+                    let av = a[i * k + kk];
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv = av.mul_add(bv, *cv);
+                    }
+                }
+            }
+            c
+        }
+
+        /// Pairwise (tree) GEMM: products rounded once, then summed by
+        /// adjacent-pair combination — reduction depth ⌈log₂K⌉.
+        ///
+        /// Processes output columns in blocks so the K×NB product buffer
+        /// stays cache-resident and every tree level vectorizes across the
+        /// block.
+        pub fn $pair(a: &[$ty], b: &[$ty], m: usize, k: usize, n: usize) -> Vec<$ty> {
+            debug_assert_eq!(a.len(), m * k);
+            debug_assert_eq!(b.len(), k * n);
+            const NB: usize = 64;
+            let mut c = vec![0 as $ty; m * n];
+            let mut buf = vec![0 as $ty; k.max(1) * NB];
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let mut j0 = 0;
+                while j0 < n {
+                    let jw = NB.min(n - j0);
+                    // products
+                    for kk in 0..k {
+                        let av = arow[kk];
+                        let brow = &b[kk * n + j0..kk * n + j0 + jw];
+                        let dst = &mut buf[kk * NB..kk * NB + jw];
+                        for (d, &bv) in dst.iter_mut().zip(brow) {
+                            *d = av * bv;
+                        }
+                    }
+                    // pairwise tree along k, vectorized across the block
+                    let mut len = k;
+                    while len > 1 {
+                        let half = len / 2;
+                        for p in 0..half {
+                            let (lo, hi) = buf.split_at_mut((2 * p + 1) * NB);
+                            let dst = &mut lo[2 * p * NB..2 * p * NB + jw];
+                            let src = &hi[..jw];
+                            for (d, &s) in dst.iter_mut().zip(src) {
+                                *d += s;
+                            }
+                        }
+                        // compact: move pair sums (at even slots) down
+                        for p in 0..half {
+                            if p != 2 * p {
+                                buf.copy_within(2 * p * NB..2 * p * NB + jw, p * NB);
+                            }
+                        }
+                        if len % 2 == 1 {
+                            buf.copy_within((len - 1) * NB..(len - 1) * NB + jw, half * NB);
+                            len = half + 1;
+                        } else {
+                            len = half;
+                        }
+                    }
+                    let dst = &mut c[i * n + j0..i * n + j0 + jw];
+                    dst.copy_from_slice(&buf[..jw]);
+                    j0 += jw;
+                }
+            }
+            c
+        }
+
+        /// Sequential-rounding sum.
+        pub fn $seq_reduce(xs: &[$ty]) -> $ty {
+            let mut acc = 0 as $ty;
+            for &x in xs {
+                acc += x;
+            }
+            acc
+        }
+
+        /// Pairwise (tree) sum, matching the tree shape of the pairwise
+        /// GEMM kernel (adjacent pairs, odd element carried).
+        pub fn $pair_reduce(xs: &[$ty]) -> $ty {
+            if xs.is_empty() {
+                return 0 as $ty;
+            }
+            let mut buf: Vec<$ty> = xs.to_vec();
+            let mut len = buf.len();
+            while len > 1 {
+                let half = len / 2;
+                for p in 0..half {
+                    buf[p] = buf[2 * p] + buf[2 * p + 1];
+                }
+                if len % 2 == 1 {
+                    buf[half] = buf[len - 1];
+                    len = half + 1;
+                } else {
+                    len = half;
+                }
+            }
+            buf[0]
+        }
+
+        /// Sequential-rounding dot product.
+        pub fn $seq_dot(a: &[$ty], b: &[$ty]) -> $ty {
+            debug_assert_eq!(a.len(), b.len());
+            let mut acc = 0 as $ty;
+            for (&x, &y) in a.iter().zip(b) {
+                acc += x * y;
+            }
+            acc
+        }
+
+        /// FMA dot product.
+        pub fn $fma_dot(a: &[$ty], b: &[$ty]) -> $ty {
+            debug_assert_eq!(a.len(), b.len());
+            let mut acc = 0 as $ty;
+            for (&x, &y) in a.iter().zip(b) {
+                acc = x.mul_add(y, acc);
+            }
+            acc
+        }
+    };
+}
+
+kernels_for!(
+    seq_gemm_f32,
+    fma_gemm_f32,
+    pairwise_gemm_f32,
+    seq_reduce_f32,
+    pairwise_reduce_f32,
+    seq_dot_f32,
+    fma_dot_f32,
+    f32
+);
+kernels_for!(
+    seq_gemm_f64,
+    fma_gemm_f64,
+    pairwise_gemm_f64,
+    seq_reduce_f64,
+    pairwise_reduce_f64,
+    seq_dot_f64,
+    fma_dot_f64,
+    f64
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::dd::Dd;
+    use crate::rng::{Distribution, Xoshiro256pp};
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let d = Distribution::uniform_pm1();
+        (0..n).map(|_| d.sample(&mut rng)).collect()
+    }
+
+    #[test]
+    fn small_gemm_agrees_across_kernels() {
+        let (m, k, n) = (4, 6, 5);
+        let a = rand_vec(m * k, 1);
+        let b = rand_vec(k * n, 2);
+        let s = seq_gemm_f64(&a, &b, m, k, n);
+        let f = fma_gemm_f64(&a, &b, m, k, n);
+        let p = pairwise_gemm_f64(&a, &b, m, k, n);
+        // Exact reference via double-double.
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = Dd::ZERO;
+                for kk in 0..k {
+                    acc = acc.mul_acc(a[i * k + kk], b[kk * n + j]);
+                }
+                let exact = acc.to_f64();
+                for (name, c) in [("seq", &s), ("fma", &f), ("pair", &p)] {
+                    let got = c[i * n + j];
+                    assert!(
+                        (got - exact).abs() <= 1e-13 * exact.abs().max(1.0),
+                        "{name} [{i}][{j}]: {got} vs {exact}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pairwise_gemm_matches_pairwise_reduce() {
+        // The GEMM kernel's tree must equal the standalone reduction on the
+        // same products — otherwise verification paths would diverge.
+        let (m, k, n) = (3, 13, 70); // k odd and n > NB exercise edges
+        let a = rand_vec(m * k, 3);
+        let b = rand_vec(k * n, 4);
+        let c = pairwise_gemm_f64(&a, &b, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let prods: Vec<f64> = (0..k).map(|kk| a[i * k + kk] * b[kk * n + j]).collect();
+                let want = pairwise_reduce_f64(&prods);
+                assert_eq!(c[i * n + j], want, "[{i}][{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn seq_gemm_matches_seq_dot() {
+        let (m, k, n) = (2, 37, 9);
+        let a = rand_vec(m * k, 5);
+        let b = rand_vec(k * n, 6);
+        let c = seq_gemm_f64(&a, &b, m, k, n);
+        let bt: Vec<f64> = {
+            let mut t = vec![0.0; n * k];
+            for kk in 0..k {
+                for j in 0..n {
+                    t[j * k + kk] = b[kk * n + j];
+                }
+            }
+            t
+        };
+        for i in 0..m {
+            for j in 0..n {
+                let want = seq_dot_f64(&a[i * k..(i + 1) * k], &bt[j * k..(j + 1) * k]);
+                assert_eq!(c[i * n + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn f32_kernels_round_like_f32() {
+        // A value that cancels differently in f32 vs f64 must show the f32
+        // schedule: big + small - big loses the small term sequentially.
+        let a = vec![1.0f32, 1.0, 1.0];
+        let b = vec![1e8f32, 1.0, -1e8];
+        assert_eq!(seq_dot_f32(&a, &b), 0.0); // 1e8 + 1 → 1e8 in f32
+        // pairwise: (1e8 + 1) + (-1e8) = 1e8 + -1e8... pairs are
+        // (p0+p1) + p2 = 1e8 + (-1e8) = 0 as well for len 3.
+        // Use len 4 to get ((p0+p1)+(p2+p3)):
+        let xs = [1e8f32, -1e8, 1.0, 1.0];
+        assert_eq!(pairwise_reduce_f32(&xs), 2.0); // (0) + (2)
+        assert_eq!(seq_reduce_f32(&xs), 2.0);
+        let xs2 = [1e8f32, 1.0, 1.0, -1e8];
+        assert_eq!(pairwise_reduce_f32(&xs2), 0.0); // (1e8) + (1-1e8) = 1e8-99999999=?
+        assert_eq!(seq_reduce_f32(&xs2), 0.0);
+    }
+
+    #[test]
+    fn pairwise_error_grows_slower_than_sequential() {
+        // The structural property behind the CPU-vs-GPU e_max shapes.
+        let n = 1 << 16;
+        let xs = rand_vec(n, 7);
+        let xs32 = to_f32_vec(&xs);
+        let exact = Dd::sum(&xs32.iter().map(|&x| x as f64).collect::<Vec<_>>()).to_f64();
+        let seq_err = (seq_reduce_f32(&xs32) as f64 - exact).abs();
+        let pair_err = (pairwise_reduce_f32(&xs32) as f64 - exact).abs();
+        assert!(
+            pair_err <= seq_err.max(1e-6),
+            "pairwise {pair_err} should not exceed sequential {seq_err}"
+        );
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(pairwise_reduce_f64(&[]), 0.0);
+        assert_eq!(pairwise_reduce_f64(&[3.5]), 3.5);
+        assert_eq!(seq_reduce_f64(&[]), 0.0);
+    }
+}

@@ -1,0 +1,481 @@
+//! GEMM engines with pluggable accumulation models.
+//!
+//! The paper's central empirical claim about e_max (§3.6) is that the
+//! verification error of a GEMM is determined by *where rounding happens*:
+//!
+//! | Paper platform              | Rounding schedule                     | e_max behaviour        |
+//! |-----------------------------|---------------------------------------|------------------------|
+//! | CPU (Xeon, FMA/SIMD)        | tree-shaped reduction, depth log K    | ≈ constant (4–6u)      |
+//! | GPU H100 FP32/FP64          | per-step rounding along K             | ∝ √N                   |
+//! | GPU/NPU BF16/FP16/FP8       | FP32 accumulate, round once at output | ≈ 2·u_output, constant |
+//! | NPU 910B FP32               | per-step rounding in FP32             | ∝ √N                   |
+//!
+//! [`AccumModel`] encodes a schedule as (input precision, work precision,
+//! reduction strategy, output precision); [`GemmEngine`] executes it. The
+//! engine returns both the output-rounded matrix and the pre-quantization
+//! accumulator (`GemmOutput::acc`) so the ABFT layer can implement both
+//! *offline* verification (on the stored low-precision C) and *online /
+//! fused-kernel* verification (on the FP32 accumulator, §3.6) — the 1000×
+//! detection-granularity result.
+
+pub mod exact;
+pub mod kernels;
+
+use crate::fp::Precision;
+use crate::matrix::Matrix;
+
+/// How a sum over K (or N) is reduced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReduceStrategy {
+    /// Strict left-to-right accumulation; one rounding for the product and
+    /// one for the add per step. Error ∝ √K. (GPU FP32/FP64, NPU FP32.)
+    Sequential,
+    /// Fused multiply-add: one rounding per step. Error ∝ √K, smaller
+    /// constant. (Ablation of the CPU model.)
+    Fma,
+    /// Adjacent-pair tree reduction; depth ⌈log₂K⌉, near-constant error.
+    /// (CPU SIMD/blocked model.)
+    Pairwise,
+}
+
+impl ReduceStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            ReduceStrategy::Sequential => "sequential",
+            ReduceStrategy::Fma => "fma",
+            ReduceStrategy::Pairwise => "pairwise",
+        }
+    }
+}
+
+/// A complete accumulation model: the rounding schedule of one platform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct AccumModel {
+    /// Precision the *operands* are stored in. Operands are quantized onto
+    /// this grid before the multiply (a no-op if they are already on it).
+    pub input: Precision,
+    /// Precision of the multiply-accumulate datapath.
+    pub work: Precision,
+    /// Reduction order within the datapath.
+    pub strategy: ReduceStrategy,
+    /// Precision the result is rounded to when written back.
+    pub out: Precision,
+}
+
+impl AccumModel {
+    /// CPU (Xeon) model: tree reduction in the operand precision.
+    /// Reproduces Table 2's "≈ constant" e_max rows.
+    pub fn cpu(p: Precision) -> AccumModel {
+        AccumModel { input: p, work: p, strategy: ReduceStrategy::Pairwise, out: p }
+    }
+
+    /// GPU high-precision model (H100 FP32/FP64): per-step rounding.
+    /// Reproduces Table 2's "∝ √N" rows.
+    pub fn gpu_highprec(p: Precision) -> AccumModel {
+        AccumModel { input: p, work: p, strategy: ReduceStrategy::Sequential, out: p }
+    }
+
+    /// NPU (Ascend 910B) FP32 model: per-step FP32 rounding (Table 1 row 3).
+    pub fn npu_fp32() -> AccumModel {
+        Self::gpu_highprec(Precision::F32)
+    }
+
+    /// Mixed-precision ("wide") accumulation: low-precision inputs, FP32
+    /// accumulate, one output rounding — the GPU/NPU BF16/FP16 model with
+    /// e_max ≈ 2·u_out (Tables 1, 2 and 7).
+    pub fn wide(low: Precision) -> AccumModel {
+        AccumModel {
+            input: low,
+            work: Precision::F32,
+            strategy: ReduceStrategy::Sequential,
+            out: low,
+        }
+    }
+
+    /// FP8 model: FP8 inputs, FP32 accumulate, **FP16 output** — §3.6's
+    /// observation that FP8 GEMM inherits FP16's e_max.
+    pub fn fp8(input: Precision) -> AccumModel {
+        assert!(
+            matches!(input, Precision::F8E4M3 | Precision::F8E5M2),
+            "fp8 model needs an FP8 input format"
+        );
+        AccumModel {
+            input,
+            work: Precision::F32,
+            strategy: ReduceStrategy::Sequential,
+            out: Precision::F16,
+        }
+    }
+
+    /// True if the output rounding step actually loses information
+    /// (out coarser than work) — the regime where online (pre-quantization)
+    /// verification beats offline by ~1000× (§3.6).
+    pub fn quantizes_output(&self) -> bool {
+        self.out.mantissa_bits() < self.work.mantissa_bits()
+    }
+
+    /// Human-readable label for reports.
+    pub fn label(&self) -> String {
+        if self.input == self.work && self.work == self.out {
+            format!("{}[{}]", self.work.name(), self.strategy.name())
+        } else {
+            format!(
+                "{}->{}[{}]->{}",
+                self.input.name(),
+                self.work.name(),
+                self.strategy.name(),
+                self.out.name()
+            )
+        }
+    }
+}
+
+/// Result of a modelled GEMM.
+#[derive(Debug, Clone)]
+pub struct GemmOutput {
+    /// The result as written back: rounded to `model.out`.
+    pub c: Matrix,
+    /// The pre-output-rounding accumulator (in `model.work` precision).
+    /// Equal to `c` when the model does not quantize its output.
+    pub acc: Matrix,
+}
+
+/// Executes GEMMs and reductions under an [`AccumModel`].
+#[derive(Debug, Clone)]
+pub struct GemmEngine {
+    model: AccumModel,
+}
+
+impl GemmEngine {
+    pub fn new(model: AccumModel) -> GemmEngine {
+        GemmEngine { model }
+    }
+
+    pub fn model(&self) -> AccumModel {
+        self.model
+    }
+
+    /// C = A·B under the engine's accumulation model.
+    pub fn matmul(&self, a: &Matrix, b: &Matrix) -> GemmOutput {
+        self.matmul_mixed(a, b, 0)
+    }
+
+    /// C = A·B where the last `b_wide_cols` columns of B are kept in the
+    /// *work* precision instead of being quantized to the input grid —
+    /// the fused-kernel ABFT configuration in which checksum encodings
+    /// never leave the FP32 datapath (§3.6). `b_wide_cols = 0` is a plain
+    /// modelled GEMM.
+    pub fn matmul_mixed(&self, a: &Matrix, b: &Matrix, b_wide_cols: usize) -> GemmOutput {
+        assert_eq!(a.cols(), b.rows(), "GEMM shape mismatch {}x{} · {}x{}",
+            a.rows(), a.cols(), b.rows(), b.cols());
+        assert!(b_wide_cols <= b.cols());
+        let m = self.model;
+        let (rows, k, cols) = (a.rows(), a.cols(), b.cols());
+
+        // 1. Quantize operands to the input grid (no-op when already
+        //    there); wide B columns quantize to the work grid instead.
+        let aq = quantize_data(a.data(), m.input);
+        let bq = if b_wide_cols == 0 {
+            quantize_data(b.data(), m.input)
+        } else {
+            let split = cols - b_wide_cols;
+            let mut out = Vec::with_capacity(b.data().len());
+            for r in 0..k {
+                let row = b.row(r);
+                out.extend(row[..split].iter().map(|&x| m.input.quantize(x)));
+                out.extend(row[split..].iter().map(|&x| m.work.quantize(x)));
+            }
+            out
+        };
+
+        // 2. Multiply-accumulate in the work precision.
+        let acc_data: Vec<f64> = match m.work {
+            Precision::F64 => run_kernel_f64(&aq, &bq, rows, k, cols, m.strategy),
+            Precision::F32 => {
+                let a32 = kernels::to_f32_vec(&aq);
+                let b32 = kernels::to_f32_vec(&bq);
+                run_kernel_f32(&a32, &b32, rows, k, cols, m.strategy)
+            }
+            other => generic_gemm(&aq, &bq, rows, k, cols, other, m.strategy),
+        };
+        let acc = Matrix::from_vec(rows, cols, acc_data);
+
+        // 3. Round the write-back to the output precision.
+        let c = if m.quantizes_output() || m.out != m.work {
+            acc.quantized(m.out)
+        } else {
+            acc.clone()
+        };
+        GemmOutput { c, acc }
+    }
+
+    /// fl-sum of a slice under the engine's work precision and strategy —
+    /// the primitive both ABFT verification paths are built from, so that
+    /// the checksum arithmetic matches the hardware being modelled.
+    pub fn reduce(&self, xs: &[f64]) -> f64 {
+        reduce_in(xs, self.model.work, self.model.strategy)
+    }
+
+    /// fl-dot-product under the engine's work precision and strategy.
+    pub fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
+        dot_in(a, b, self.model.work, self.model.strategy)
+    }
+}
+
+/// fl-sum in an arbitrary precision/strategy.
+pub fn reduce_in(xs: &[f64], p: Precision, strategy: ReduceStrategy) -> f64 {
+    match p {
+        Precision::F64 => match strategy {
+            ReduceStrategy::Sequential | ReduceStrategy::Fma => kernels::seq_reduce_f64(xs),
+            ReduceStrategy::Pairwise => kernels::pairwise_reduce_f64(xs),
+        },
+        Precision::F32 => {
+            let v = kernels::to_f32_vec(xs);
+            (match strategy {
+                ReduceStrategy::Sequential | ReduceStrategy::Fma => kernels::seq_reduce_f32(&v),
+                ReduceStrategy::Pairwise => kernels::pairwise_reduce_f32(&v),
+            }) as f64
+        }
+        other => generic_reduce(xs, other, strategy),
+    }
+}
+
+/// fl-dot in an arbitrary precision/strategy.
+pub fn dot_in(a: &[f64], b: &[f64], p: Precision, strategy: ReduceStrategy) -> f64 {
+    match p {
+        Precision::F64 => match strategy {
+            ReduceStrategy::Sequential => kernels::seq_dot_f64(a, b),
+            ReduceStrategy::Fma => kernels::fma_dot_f64(a, b),
+            ReduceStrategy::Pairwise => {
+                let prods: Vec<f64> = a.iter().zip(b).map(|(&x, &y)| x * y).collect();
+                kernels::pairwise_reduce_f64(&prods)
+            }
+        },
+        Precision::F32 => {
+            let a32 = kernels::to_f32_vec(a);
+            let b32 = kernels::to_f32_vec(b);
+            (match strategy {
+                ReduceStrategy::Sequential => kernels::seq_dot_f32(&a32, &b32),
+                ReduceStrategy::Fma => kernels::fma_dot_f32(&a32, &b32),
+                ReduceStrategy::Pairwise => {
+                    let prods: Vec<f32> =
+                        a32.iter().zip(&b32).map(|(&x, &y)| x * y).collect();
+                    kernels::pairwise_reduce_f32(&prods)
+                }
+            }) as f64
+        }
+        other => {
+            let prods: Vec<f64> =
+                a.iter().zip(b).map(|(&x, &y)| other.quantize(x * y)).collect();
+            generic_reduce(&prods, other, strategy)
+        }
+    }
+}
+
+fn quantize_data(xs: &[f64], p: Precision) -> Vec<f64> {
+    if p == Precision::F64 {
+        xs.to_vec()
+    } else {
+        xs.iter().map(|&x| p.quantize(x)).collect()
+    }
+}
+
+fn run_kernel_f64(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    s: ReduceStrategy,
+) -> Vec<f64> {
+    match s {
+        ReduceStrategy::Sequential => kernels::seq_gemm_f64(a, b, m, k, n),
+        ReduceStrategy::Fma => kernels::fma_gemm_f64(a, b, m, k, n),
+        ReduceStrategy::Pairwise => kernels::pairwise_gemm_f64(a, b, m, k, n),
+    }
+}
+
+fn run_kernel_f32(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    s: ReduceStrategy,
+) -> Vec<f64> {
+    let c = match s {
+        ReduceStrategy::Sequential => kernels::seq_gemm_f32(a, b, m, k, n),
+        ReduceStrategy::Fma => kernels::fma_gemm_f32(a, b, m, k, n),
+        ReduceStrategy::Pairwise => kernels::pairwise_gemm_f32(a, b, m, k, n),
+    };
+    c.into_iter().map(|x| x as f64).collect()
+}
+
+/// Slow generic path: every multiply and add individually quantized to an
+/// arbitrary precision. Used for ablations (e.g. true per-step BF16
+/// accumulation, the "offline low-precision" regime) and small tests.
+fn generic_gemm(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    p: Precision,
+    s: ReduceStrategy,
+) -> Vec<f64> {
+    let mut c = vec![0.0; m * n];
+    let mut prods = vec![0.0; k];
+    for i in 0..m {
+        for j in 0..n {
+            for kk in 0..k {
+                prods[kk] = p.quantize(a[i * k + kk] * b[kk * n + j]);
+            }
+            c[i * n + j] = generic_reduce(&prods, p, s);
+        }
+    }
+    c
+}
+
+fn generic_reduce(xs: &[f64], p: Precision, s: ReduceStrategy) -> f64 {
+    match s {
+        ReduceStrategy::Sequential | ReduceStrategy::Fma => {
+            let mut acc = 0.0;
+            for &x in xs {
+                acc = p.quantize(acc + x);
+            }
+            acc
+        }
+        ReduceStrategy::Pairwise => {
+            if xs.is_empty() {
+                return 0.0;
+            }
+            let mut buf = xs.to_vec();
+            let mut len = buf.len();
+            while len > 1 {
+                let half = len / 2;
+                for i in 0..half {
+                    buf[i] = p.quantize(buf[2 * i] + buf[2 * i + 1]);
+                }
+                if len % 2 == 1 {
+                    buf[half] = buf[len - 1];
+                    len = half + 1;
+                } else {
+                    len = half;
+                }
+            }
+            buf[0]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Distribution, Xoshiro256pp};
+
+    fn pair(m: usize, k: usize, n: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let d = Distribution::uniform_pm1();
+        (Matrix::sample(m, k, &d, &mut rng), Matrix::sample(k, n, &d, &mut rng))
+    }
+
+    #[test]
+    fn all_models_approximate_exact() {
+        let (a, b) = pair(16, 32, 12, 1);
+        let exact = exact::matmul_dd(&a, &b);
+        let models = [
+            AccumModel::cpu(Precision::F64),
+            AccumModel::cpu(Precision::F32),
+            AccumModel::gpu_highprec(Precision::F64),
+            AccumModel::gpu_highprec(Precision::F32),
+            AccumModel::npu_fp32(),
+            AccumModel::wide(Precision::Bf16),
+            AccumModel::wide(Precision::F16),
+            AccumModel::fp8(Precision::F8E4M3),
+        ];
+        for model in models {
+            let out = GemmEngine::new(model).matmul(&a, &b);
+            // Error budget: K·u_input·max|ab| with K=32 — generous bound.
+            let u = model.input.unit_roundoff();
+            let budget = 64.0 * 32.0 * u;
+            let diff = out.c.max_abs_diff(&exact);
+            assert!(diff <= budget, "{}: diff {diff} > {budget}", model.label());
+        }
+    }
+
+    #[test]
+    fn wide_model_output_is_on_low_grid_but_acc_is_not() {
+        let (a, b) = pair(8, 64, 8, 2);
+        let out = GemmEngine::new(AccumModel::wide(Precision::Bf16)).matmul(&a, &b);
+        for &v in out.c.data() {
+            assert_eq!(Precision::Bf16.quantize(v), v, "c not on bf16 grid");
+        }
+        // The accumulator must retain sub-BF16 information for some element
+        // (probability of all 64 accumulations landing on the bf16 grid is nil).
+        assert!(out.acc.data().iter().any(|&v| Precision::Bf16.quantize(v) != v));
+        // And acc rounds to c.
+        for (cv, av) in out.c.data().iter().zip(out.acc.data()) {
+            assert_eq!(*cv, Precision::Bf16.quantize(*av));
+        }
+    }
+
+    #[test]
+    fn fp8_model_outputs_fp16() {
+        let (a, b) = pair(4, 16, 4, 3);
+        let out = GemmEngine::new(AccumModel::fp8(Precision::F8E4M3)).matmul(&a, &b);
+        for &v in out.c.data() {
+            assert_eq!(Precision::F16.quantize(v), v);
+        }
+    }
+
+    #[test]
+    fn engine_reduce_matches_gemm_rowsum_schedule() {
+        // Verification relies on reduce() applying the same schedule the
+        // GEMM kernel used. For the sequential model, summing the products
+        // of a 1xK · Kx1 GEMM must equal dot().
+        let (a, b) = pair(1, 100, 1, 4);
+        let eng = GemmEngine::new(AccumModel::gpu_highprec(Precision::F32));
+        let out = eng.matmul(&a, &b);
+        let d = eng.dot(a.row(0), &b.transpose().row(0).to_vec());
+        assert_eq!(out.acc.get(0, 0), d);
+    }
+
+    #[test]
+    fn seq_f32_error_grows_with_k_but_wide_output_error_does_not() {
+        // Structural check of the two e_max regimes (full experiment in
+        // benches): per-step FP32 error grows with K; BF16-output error is
+        // dominated by the final rounding at every K.
+        let mut worst_seq = vec![];
+        let mut worst_wide = vec![];
+        for &k in &[64usize, 1024] {
+            let (a, b) = pair(4, k, 4, 5 + k as u64);
+            let exact = exact::matmul_dd(&a, &b);
+            let seq = GemmEngine::new(AccumModel::npu_fp32()).matmul(&a, &b);
+            let wide = GemmEngine::new(AccumModel::wide(Precision::Bf16)).matmul(&a, &b);
+            let scale = exact.max_abs();
+            worst_seq.push(seq.c.max_abs_diff(&exact) / scale);
+            worst_wide.push(wide.c.max_abs_diff(&exact) / scale / Precision::Bf16.unit_roundoff());
+        }
+        assert!(worst_seq[1] > worst_seq[0], "fp32 per-step error should grow: {worst_seq:?}");
+        // Wide-model relative error stays within a few u_bf16 at both sizes.
+        for w in &worst_wide {
+            assert!(*w < 8.0, "wide model error should be O(u_bf16): {worst_wide:?}");
+        }
+    }
+
+    #[test]
+    fn generic_path_matches_native_for_f32() {
+        // The generic per-op quantization path must agree exactly with the
+        // native f32 kernels (they implement the same schedule).
+        let (a, b) = pair(3, 17, 5, 6);
+        let aq = quantize_data(a.data(), Precision::F32);
+        let bq = quantize_data(b.data(), Precision::F32);
+        for s in [ReduceStrategy::Sequential, ReduceStrategy::Pairwise] {
+            let gen = generic_gemm(&aq, &bq, 3, 17, 5, Precision::F32, s);
+            let a32 = kernels::to_f32_vec(&aq);
+            let b32 = kernels::to_f32_vec(&bq);
+            let nat = run_kernel_f32(&a32, &b32, 3, 17, 5, s);
+            assert_eq!(gen, nat, "strategy {s:?}");
+        }
+    }
+}

@@ -1,0 +1,486 @@
+//! Bit-flip fault injection (paper §6.1, Tables 8/9).
+//!
+//! Soft errors are modelled as single-event upsets: one bit of one stored
+//! element of the GEMM output flips. Injection operates on the *encoding*
+//! of the element in its storage precision (e.g. the 16 bits of a BF16
+//! value), so exponent/sign/mantissa semantics are exact:
+//!
+//! * BF16 layout: bit 15 = sign, bits 14..7 = exponent, bits 6..0 mantissa.
+//!   Table 8's "bit 7 (exp LSB)" … "bit 14" rows map directly.
+//! * Flips that land in the exponent scale the value by 2^(2^k)-class
+//!   factors (§2.1) — the catastrophic class ABFT must catch.
+
+use crate::fp::{Bf16, F16, Precision, F8E4M3, F8E5M2};
+use crate::gemm::AccumModel;
+use crate::matrix::Matrix;
+use crate::rng::{Distribution, Rng, Xoshiro256pp};
+
+/// Flip direction of the targeted bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FlipDirection {
+    ZeroToOne,
+    OneToZero,
+}
+
+/// A single bit flip at a bit position of an element's encoding.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BitFlip {
+    /// Bit position, 0 = encoding LSB.
+    pub bit: u32,
+    /// Storage precision whose encoding is flipped.
+    pub precision: Precision,
+}
+
+impl BitFlip {
+    pub fn new(bit: u32, precision: Precision) -> BitFlip {
+        assert!(bit < precision.bits(), "bit {bit} out of range for {precision}");
+        BitFlip { bit, precision }
+    }
+
+    /// Apply to a value: returns (flipped value, direction taken).
+    pub fn apply(&self, x: f64) -> (f64, FlipDirection) {
+        match self.precision {
+            Precision::Bf16 => {
+                let enc = Bf16::from_f64(x);
+                let dir = direction_of(enc.to_bits() as u64, self.bit);
+                (enc.flip_bit(self.bit).to_f64(), dir)
+            }
+            Precision::F16 => {
+                let enc = F16::from_f64(x);
+                let dir = direction_of(enc.to_bits() as u64, self.bit);
+                (enc.flip_bit(self.bit).to_f64(), dir)
+            }
+            Precision::F8E4M3 => {
+                let enc = F8E4M3::from_f64(x);
+                let dir = direction_of(enc.to_bits() as u64, self.bit);
+                (enc.flip_bit(self.bit).to_f64(), dir)
+            }
+            Precision::F8E5M2 => {
+                let enc = F8E5M2::from_f64(x);
+                let dir = direction_of(enc.to_bits() as u64, self.bit);
+                (enc.flip_bit(self.bit).to_f64(), dir)
+            }
+            Precision::F32 => {
+                let enc = (x as f32).to_bits();
+                let dir = direction_of(enc as u64, self.bit);
+                (f32::from_bits(enc ^ (1 << self.bit)) as f64, dir)
+            }
+            Precision::F64 => {
+                let enc = x.to_bits();
+                let dir = direction_of(enc, self.bit);
+                (f64::from_bits(enc ^ (1u64 << self.bit)), dir)
+            }
+        }
+    }
+
+    /// Whether this bit is in the exponent field.
+    pub fn is_exponent_bit(&self) -> bool {
+        let p = self.precision;
+        self.bit >= p.exponent_lsb() && self.bit < p.sign_bit()
+    }
+
+    /// Whether this bit is the sign bit.
+    pub fn is_sign_bit(&self) -> bool {
+        self.bit == self.precision.sign_bit()
+    }
+}
+
+fn direction_of(bits: u64, bit: u32) -> FlipDirection {
+    if (bits >> bit) & 1 == 0 {
+        FlipDirection::ZeroToOne
+    } else {
+        FlipDirection::OneToZero
+    }
+}
+
+/// Location of an injection in the output matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectionSite {
+    pub row: usize,
+    pub col: usize,
+}
+
+/// Inject `flip` at `site` of `c` (which must hold values on the flip's
+/// precision grid). Returns the (old, new, direction) triple.
+pub fn inject(c: &mut Matrix, site: InjectionSite, flip: BitFlip) -> (f64, f64, FlipDirection) {
+    let old = c.get(site.row, site.col);
+    let (new, dir) = flip.apply(old);
+    c.set(site.row, site.col, new);
+    (old, new, dir)
+}
+
+/// Where the upset strikes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InjectTarget {
+    /// A stored element of the operand matrix B (weights/activations in
+    /// memory) — the SEU corrupts the multiply's *input* after checksum
+    /// encoding; the error propagates to one output column. This is the
+    /// configuration that reproduces Table 8's detection-rate ladder
+    /// (bit-7 flips change B elements by ~|b|, far below row thresholds;
+    /// bit-14 flips overflow unit-scale operands to Inf — 100% caught).
+    InputB,
+    /// A stored element of the output C (compute/output-register upset).
+    OutputC,
+}
+
+/// Configuration of a detection-rate campaign (Tables 8/9).
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    /// GEMM shape (M, K, N) — Table 8 uses (128, 1024, 256).
+    pub shape: (usize, usize, usize),
+    /// Operand distribution.
+    pub dist: Distribution,
+    /// Accumulation model (precision under test).
+    pub model: AccumModel,
+    /// Bit positions to test.
+    pub bits: Vec<u32>,
+    /// Injections per bit position.
+    pub trials_per_bit: usize,
+    /// Fresh operand matrices every this many trials (amortizes the GEMM
+    /// across injections; each injection targets a fresh random site).
+    pub trials_per_matrix: usize,
+    /// Verify online (accumulator) or offline (stored output).
+    pub online: bool,
+    /// Injection target (see [`InjectTarget`]).
+    pub target: InjectTarget,
+    /// Override the threshold e_max (None = context default). Table 8
+    /// uses the FTAN-GEMM deployment value 1e-3 (FP16-level, §3.6
+    /// practical recommendations), which reproduces the paper's
+    /// per-distribution detection rates.
+    pub emax_override: Option<crate::calibrate::EmaxModel>,
+    pub seed: u64,
+}
+
+impl CampaignConfig {
+    /// Table 8 configuration for one distribution: BF16 operands, fused
+    /// (FP32-accumulator) verification with the FTAN-GEMM deployment
+    /// e_max of 1e-3 (FP16-level — §3.6's practical recommendation),
+    /// upsets striking stored B elements. This is the configuration whose
+    /// per-distribution detection ladder matches the paper's Table 8.
+    pub fn table8(dist: Distribution, trials_per_bit: usize) -> CampaignConfig {
+        CampaignConfig {
+            shape: (128, 1024, 256),
+            dist,
+            model: AccumModel::wide(Precision::Bf16),
+            bits: (7..=14).collect(),
+            trials_per_bit,
+            trials_per_matrix: 64,
+            online: true,
+            target: InjectTarget::InputB,
+            emax_override: Some(crate::calibrate::EmaxModel::Constant(1e-3)),
+            seed: 0x7AB1E8,
+        }
+    }
+}
+
+/// Per-bit campaign outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct BitResult {
+    pub bit: u32,
+    pub trials: usize,
+    pub detected: usize,
+    pub localized: usize,
+    /// Trials where the flip produced a value identical after requantize
+    /// (impossible for true bit flips, kept as a sanity counter).
+    pub no_effect: usize,
+    pub detected_0to1: usize,
+    pub trials_0to1: usize,
+}
+
+impl BitResult {
+    pub fn detection_rate(&self) -> f64 {
+        if self.trials == 0 {
+            0.0
+        } else {
+            100.0 * self.detected as f64 / self.trials as f64
+        }
+    }
+}
+
+/// A detection-rate campaign over bit positions.
+pub struct Campaign {
+    pub config: CampaignConfig,
+}
+
+/// Outcome of one injection trial.
+struct Trial {
+    dir: FlipDirection,
+    no_effect: bool,
+    detected: bool,
+    localized: bool,
+}
+
+/// Outcome of a whole campaign plus the clean-run false positive count.
+#[derive(Debug, Clone)]
+pub struct CampaignResult {
+    pub bits: Vec<BitResult>,
+    pub clean_rows_checked: usize,
+    pub false_positives: usize,
+}
+
+impl Campaign {
+    pub fn new(config: CampaignConfig) -> Campaign {
+        Campaign { config }
+    }
+
+    /// Run with the given threshold algorithm.
+    pub fn run(&self, threshold: &dyn crate::threshold::Threshold) -> CampaignResult {
+        use crate::abft::encode::ChecksumEncoding;
+        use crate::abft::verify::{check_row, localize, weight_vector, Localization};
+        use crate::gemm::GemmEngine;
+        use crate::threshold::ThresholdContext;
+
+        let cfg = &self.config;
+        let (m, k, n) = cfg.shape;
+        let engine = GemmEngine::new(cfg.model);
+        let mut ctx = if cfg.online {
+            ThresholdContext::online(cfg.model)
+        } else {
+            ThresholdContext::offline(cfg.model)
+        };
+        if let Some(emax) = cfg.emax_override {
+            ctx = ctx.with_emax(emax);
+        }
+        let grid = if cfg.online { cfg.model.work } else { cfg.model.out };
+        let weights = weight_vector(n);
+
+        let mut results: Vec<BitResult> = cfg
+            .bits
+            .iter()
+            .map(|&bit| BitResult {
+                bit,
+                trials: 0,
+                detected: 0,
+                localized: 0,
+                no_effect: 0,
+                detected_0to1: 0,
+                trials_0to1: 0,
+            })
+            .collect();
+        let mut clean_rows_checked = 0usize;
+        let mut false_positives = 0usize;
+
+        let matrices_needed =
+            (cfg.trials_per_bit + cfg.trials_per_matrix - 1) / cfg.trials_per_matrix;
+        for mat_idx in 0..matrices_needed {
+            let mut rng = Xoshiro256pp::from_stream(cfg.seed, mat_idx as u64);
+            let a = Matrix::sample_in(m, k, &cfg.dist, cfg.model.input, &mut rng);
+            let b = Matrix::sample_in(k, n, &cfg.dist, cfg.model.input, &mut rng);
+            let enc = if cfg.online {
+                ChecksumEncoding::encode_b_wide(&b, &engine)
+            } else {
+                ChecksumEncoding::encode_b(&b, &engine)
+            };
+            let out = engine.matmul_mixed(&a, &enc.b_encoded, enc.wide_cols());
+            let src = if cfg.online { &out.acc } else { &out.c };
+            let (c, cr1, cr2) = enc.split_product(src);
+            let (acc, _, _) = enc.split_product(&out.acc);
+            let thresholds = threshold.thresholds(&a, &b, &ctx);
+
+            // FPR sweep on the clean product (every row, once per matrix).
+            for i in 0..m {
+                let rc = check_row(c.row(i), cr1[i], cr2[i], thresholds[i], &engine, &weights);
+                clean_rows_checked += 1;
+                if rc.flagged {
+                    false_positives += 1;
+                }
+            }
+
+            // Injection trials for each bit.
+            let trials_this_matrix = cfg
+                .trials_per_matrix
+                .min(cfg.trials_per_bit - mat_idx * cfg.trials_per_matrix);
+            for (bi, &bit) in cfg.bits.iter().enumerate() {
+                for t in 0..trials_this_matrix {
+                    let mut trng = Xoshiro256pp::from_stream(
+                        cfg.seed ^ 0xB17F11F,
+                        ((mat_idx * cfg.bits.len() + bi) * cfg.trials_per_matrix + t) as u64,
+                    );
+                    let r = match cfg.target {
+                        InjectTarget::OutputC => {
+                            // SEU in the stored output: one row affected.
+                            let flip = BitFlip::new(bit, grid);
+                            let site = InjectionSite {
+                                row: trng.uniform_u64(m as u64) as usize,
+                                col: trng.uniform_u64(n as u64) as usize,
+                            };
+                            let mut row_data = c.row(site.row).to_vec();
+                            let old = row_data[site.col];
+                            let (new, dir) = flip.apply(old);
+                            row_data[site.col] = new;
+                            let rc = check_row(
+                                &row_data,
+                                cr1[site.row],
+                                cr2[site.row],
+                                thresholds[site.row],
+                                &engine,
+                                &weights,
+                            );
+                            let localized = rc.flagged
+                                && matches!(
+                                    localize(rc.d1, rc.d2, n, 0.45),
+                                    Localization::Column(j) if j == site.col
+                                );
+                            Trial { dir, no_effect: new == old, detected: rc.flagged, localized }
+                        }
+                        InjectTarget::InputB => {
+                            // SEU in a stored B element (memory upset in a
+                            // weight/activation): the checksums were encoded
+                            // from the clean B, so the corrupted column j of
+                            // C disagrees with them. Every row is perturbed
+                            // by a_ik·δ; detection = any row flags.
+                            let flip = BitFlip::new(bit, cfg.model.input);
+                            let bk = trng.uniform_u64(k as u64) as usize;
+                            let bj = trng.uniform_u64(n as u64) as usize;
+                            let old_b = b.get(bk, bj);
+                            let (new_b, dir) = flip.apply(old_b);
+                            let delta = new_b - old_b;
+                            let mut detected = false;
+                            let mut localized = false;
+                            let mut row_buf = vec![0.0; n];
+                            for i in 0..m {
+                                row_buf.copy_from_slice(c.row(i));
+                                // perturb via the FP32 accumulator, then
+                                // re-round to the verified grid
+                                let perturbed = acc.get(i, bj) + a.get(i, bk) * delta;
+                                row_buf[bj] = grid.quantize(perturbed);
+                                let rc = check_row(
+                                    &row_buf,
+                                    cr1[i],
+                                    cr2[i],
+                                    thresholds[i],
+                                    &engine,
+                                    &weights,
+                                );
+                                if rc.flagged {
+                                    detected = true;
+                                    if matches!(
+                                        localize(rc.d1, rc.d2, n, 0.45),
+                                        Localization::Column(j) if j == bj
+                                    ) {
+                                        localized = true;
+                                    }
+                                    break;
+                                }
+                            }
+                            Trial { dir, no_effect: delta == 0.0, detected, localized }
+                        }
+                    };
+                    let br = &mut results[bi];
+                    br.trials += 1;
+                    if r.dir == FlipDirection::ZeroToOne {
+                        br.trials_0to1 += 1;
+                    }
+                    if r.no_effect {
+                        br.no_effect += 1;
+                    }
+                    if r.detected {
+                        br.detected += 1;
+                        if r.dir == FlipDirection::ZeroToOne {
+                            br.detected_0to1 += 1;
+                        }
+                        if r.localized {
+                            br.localized += 1;
+                        }
+                    }
+                }
+            }
+        }
+        CampaignResult { bits: results, clean_rows_checked, false_positives }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::threshold::VabftThreshold;
+
+    #[test]
+    fn flip_directions_and_fields() {
+        let f = BitFlip::new(14, Precision::Bf16);
+        assert!(f.is_exponent_bit());
+        assert!(!f.is_sign_bit());
+        let s = BitFlip::new(15, Precision::Bf16);
+        assert!(s.is_sign_bit());
+        let (v, dir) = s.apply(2.0);
+        assert_eq!(v, -2.0);
+        assert_eq!(dir, FlipDirection::ZeroToOne);
+        let m = BitFlip::new(0, Precision::Bf16);
+        assert!(!m.is_exponent_bit());
+    }
+
+    #[test]
+    fn exponent_flip_is_large() {
+        // Bit 13 (second-highest exponent bit) flip on 1.5: exponent 127 =
+        // 0111_1111 → flipping bit 6 of the field (value 64) gives 2^-64 scale.
+        let f = BitFlip::new(13, Precision::Bf16);
+        let (v, _) = f.apply(1.5);
+        assert!(v == 1.5 * 2.0f64.powi(-64), "{v}");
+    }
+
+    #[test]
+    fn inject_mutates_matrix() {
+        let mut c = Matrix::from_fn(4, 4, |_, _| 1.0);
+        let (old, new, _) =
+            inject(&mut c, InjectionSite { row: 1, col: 2 }, BitFlip::new(7, Precision::Bf16));
+        assert_eq!(old, 1.0);
+        assert_eq!(new, 0.5); // exp LSB of 1.0 is 1 → flips to 0 → 0.5
+        assert_eq!(c.get(1, 2), 0.5);
+    }
+
+    #[test]
+    fn small_campaign_detects_high_exponent_bits() {
+        let mut cfg = CampaignConfig::table8(Distribution::normal_1_1(), 16);
+        cfg.shape = (16, 128, 32); // shrink for test speed
+        cfg.trials_per_matrix = 16;
+        let res = Campaign::new(cfg.clone()).run(&VabftThreshold::default());
+        assert_eq!(res.false_positives, 0, "FPR must be zero");
+        // Amplifying (0→1) flips in the top exponent bits must always be
+        // caught; the exponent MSB (bit 14) overflows unit-scale operands
+        // to Inf in either direction.
+        for br in res.bits.iter().filter(|b| b.bit >= 10) {
+            if br.trials_0to1 > 0 {
+                assert_eq!(
+                    br.detected_0to1, br.trials_0to1,
+                    "bit {}: 0→1 DR {}/{}",
+                    br.bit, br.detected_0to1, br.trials_0to1
+                );
+            }
+        }
+        // Bit 14 (exp MSB): 0→1 overflows to Inf (always caught); the few
+        // 1→0 flips on N(1,1)'s |b| ≥ 2 tail produce ~|b|-sized errors
+        // that can sit near the threshold at this tiny test shape.
+        let b14 = res.bits.iter().find(|b| b.bit == 14).unwrap();
+        assert!(
+            b14.detection_rate() >= 80.0,
+            "bit 14 (exp MSB): DR {}%",
+            b14.detection_rate()
+        );
+
+        // Output-register injection variant (offline: the BF16 bit
+        // positions address the stored C encoding): top bits flag too.
+        cfg.target = InjectTarget::OutputC;
+        cfg.online = false;
+        cfg.emax_override = None;
+        let res2 = Campaign::new(cfg).run(&VabftThreshold::default());
+        assert_eq!(res2.false_positives, 0);
+        for br in res2.bits.iter().filter(|b| b.bit >= 11) {
+            if br.trials_0to1 > 0 {
+                assert_eq!(br.detected_0to1, br.trials_0to1, "bit {} (OutputC)", br.bit);
+            }
+        }
+    }
+
+    #[test]
+    fn campaign_is_deterministic() {
+        let mut cfg = CampaignConfig::table8(Distribution::uniform_01(), 8);
+        cfg.shape = (8, 64, 16);
+        cfg.trials_per_matrix = 8;
+        let r1 = Campaign::new(cfg.clone()).run(&VabftThreshold::default());
+        let r2 = Campaign::new(cfg).run(&VabftThreshold::default());
+        for (a, b) in r1.bits.iter().zip(&r2.bits) {
+            assert_eq!(a.detected, b.detected);
+            assert_eq!(a.trials, b.trials);
+        }
+    }
+}

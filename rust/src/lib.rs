@@ -1,0 +1,84 @@
+//! # V-ABFT — variance-based adaptive thresholds for fault-tolerant GEMM
+//!
+//! A from-scratch reproduction of *“V-ABFT: Variance-Based Adaptive
+//! Threshold for Fault-Tolerant Matrix Multiplication in Mixed-Precision
+//! Deep Learning”* (Gao, Hua & Chen, 2026) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L1** — a fused ABFT-GEMM Pallas kernel (build-time Python, lowered
+//!   to HLO text) that verifies checksums *before* output quantization.
+//! * **L2** — a JAX transformer whose matmuls route through the L1 kernel;
+//!   forward/loss/train-step are AOT-lowered once to `artifacts/*.hlo.txt`.
+//! * **L3** — this crate: the fault-tolerant GEMM runtime. It owns the
+//!   event loop, the verification pipeline (detect → localize → correct →
+//!   recompute), fault-injection campaigns, threshold algorithms
+//!   (V-ABFT and the A-ABFT / analytical / SEA baselines), the e_max
+//!   calibration protocol, and the PJRT runtime that executes the AOT
+//!   artifacts. Python is never on the request path.
+//!
+//! ## Quick start
+//!
+//! ```
+//! use vabft::prelude::*;
+//!
+//! // Build two matrices, run a protected multiply, inject a fault, recover.
+//! let mut rng = Xoshiro256pp::seed_from_u64(7);
+//! let a = Matrix::sample(64, 96, &Distribution::Normal { mean: 0.0, std: 1.0 }, &mut rng);
+//! let b = Matrix::sample(96, 32, &Distribution::Normal { mean: 0.0, std: 1.0 }, &mut rng);
+//!
+//! let engine = GemmEngine::new(AccumModel::wide(Precision::Bf16));
+//! let policy = VerifyPolicy::default();
+//! let mut ft = FtGemm::new(engine, Box::new(VabftThreshold::default()), policy);
+//! let out = ft.multiply(&a, &b).unwrap();
+//! assert_eq!(out.c.rows(), 64);
+//! assert_eq!(out.report.verdict, Verdict::Clean);
+//! ```
+//!
+//! See `examples/` for fault-injection campaigns, e_max calibration, a
+//! serving-style coordinator and the end-to-end training supervisor.
+
+pub mod bench_harness;
+pub mod calibrate;
+pub mod cli;
+pub mod coordinator;
+pub mod experiments;
+pub mod fp;
+pub mod gemm;
+pub mod inject;
+pub mod matrix;
+pub mod metrics;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod threshold;
+pub mod train;
+
+pub mod abft {
+    //! Algorithm-Based Fault Tolerance core: checksum encoding,
+    //! verification, localization and online correction (paper §2.2),
+    //! plus block-wise tiling (§5.2).
+    pub mod blockwise;
+    pub mod encode;
+    pub mod ftgemm;
+    pub mod verify;
+    pub use blockwise::*;
+    pub use encode::*;
+    pub use ftgemm::*;
+    pub use verify::*;
+}
+
+/// Convenient re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::abft::{
+        ChecksumEncoding, FtGemm, FtGemmOutput, Verdict, VerifyPolicy, VerifyReport,
+    };
+    pub use crate::calibrate::{CalibrationProtocol, EmaxModel, EmaxTable, Platform};
+    pub use crate::fp::{dd::Dd, Precision};
+    pub use crate::gemm::{AccumModel, GemmEngine};
+    pub use crate::inject::{BitFlip, Campaign, CampaignConfig, FlipDirection, InjectionSite};
+    pub use crate::matrix::{Matrix, RowStats};
+    pub use crate::rng::{Distribution, Rng, SplitMix64, Xoshiro256pp};
+    pub use crate::threshold::{
+        AabftThreshold, AnalyticalThreshold, SeaThreshold, Threshold, VabftThreshold,
+    };
+}

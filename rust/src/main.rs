@@ -1,0 +1,266 @@
+//! `vabft` — command-line front end for the V-ABFT fault-tolerant GEMM
+//! library.
+//!
+//! ```text
+//! vabft calibrate  [--platform cpu|gpu|npu] [--precision fp32] [--trials N] [--online]
+//! vabft campaign   [--precision bf16] [--dist n11|nz|u|u01|trunc] [--trials N] [--online]
+//! vabft tightness  [--precision fp32] [--sizes 128,256,512] [--trials N]
+//! vabft artifacts  [--dir artifacts]     # list AOT artifacts
+//! vabft info                             # e_max table, subcommands
+//! ```
+
+use vabft::calibrate::{CalibrationProtocol, EmaxTable, Platform};
+use vabft::cli::Args;
+use vabft::fp::Precision;
+use vabft::inject::{Campaign, CampaignConfig};
+use vabft::report::{pct, ratio, sci, Table};
+use vabft::rng::Distribution;
+use vabft::threshold::{AabftThreshold, Threshold, ThresholdContext, VabftThreshold};
+
+fn main() {
+    let args = Args::parse();
+    match args.subcommand.as_deref() {
+        Some("calibrate") => cmd_calibrate(&args),
+        Some("campaign") => cmd_campaign(&args),
+        Some("tightness") => cmd_tightness(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("info") | None => cmd_info(),
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'");
+            eprintln!("usage: vabft [calibrate|campaign|tightness|artifacts|info] [--flags]");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_precision(args: &Args, default: Precision) -> Precision {
+    match args.opt("precision") {
+        None => default,
+        Some(s) => Precision::parse(s).unwrap_or_else(|| {
+            eprintln!("unknown precision '{s}'");
+            std::process::exit(2);
+        }),
+    }
+}
+
+fn parse_platform(args: &Args) -> Platform {
+    match args.opt("platform").unwrap_or("gpu") {
+        "cpu" => Platform::Cpu,
+        "gpu" => Platform::Gpu,
+        "npu" => Platform::Npu,
+        other => {
+            eprintln!("unknown platform '{other}'");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_dist(args: &Args) -> Distribution {
+    match args.opt("dist").unwrap_or("n11") {
+        "n11" => Distribution::normal_1_1(),
+        "nz" => Distribution::near_zero_normal(),
+        "u" => Distribution::uniform_pm1(),
+        "u01" => Distribution::uniform_01(),
+        "trunc" => Distribution::truncated_normal(),
+        other => {
+            eprintln!("unknown distribution '{other}' (n11|nz|u|u01|trunc)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_calibrate(args: &Args) {
+    let platform = parse_platform(args);
+    let precision = parse_precision(args, Precision::F32);
+    let online = args.flag("online");
+    let model = platform.model_for(precision);
+    let proto = CalibrationProtocol {
+        trials_per_size: args.opt_or("trials", 10),
+        ..Default::default()
+    };
+    println!(
+        "calibrating {} / {} (strategy {:?}, online={online})…",
+        platform.name(),
+        precision,
+        model.strategy
+    );
+    let res = proto.run(model, online);
+    let mut t = Table::new(
+        &format!("e_max calibration — {} {}", platform.name(), precision),
+        &["N", "e_max", "e_max/u", "mean rel", "trials"],
+    );
+    let u = if online { model.work } else { model.out }.unit_roundoff();
+    for p in &res.points {
+        t.row(vec![
+            p.n.to_string(),
+            sci(p.emax),
+            format!("{:.1}", p.emax / u),
+            sci(p.mean_rel),
+            p.trials.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "fitted law: {}   CV {:.1}%   R²(√N) {:.2}",
+        res.fitted.label(),
+        res.cv * 100.0,
+        res.r2_sqrt_n
+    );
+    println!(
+        "Table 7 recommended: {}",
+        EmaxTable::recommended(platform, precision).label()
+    );
+}
+
+fn cmd_campaign(args: &Args) {
+    let precision = parse_precision(args, Precision::Bf16);
+    let dist = parse_dist(args);
+    let trials = args.opt_or("trials", 512usize);
+    let mut cfg = CampaignConfig::table8(dist.clone(), trials);
+    cfg.model = Platform::Npu.model_for(precision);
+    // table8 defaults to fused (online) verification with the deployment
+    // e_max; --offline switches to post-hoc verification, whose threshold
+    // must revert to the output-precision default.
+    if args.flag("offline") {
+        cfg.online = false;
+        cfg.emax_override = None;
+    }
+    if let Some(shape) = args.opt("shape") {
+        let d: Vec<usize> = shape.split(',').map(|s| s.parse().unwrap()).collect();
+        assert_eq!(d.len(), 3, "--shape M,K,N");
+        cfg.shape = (d[0], d[1], d[2]);
+    }
+    println!(
+        "campaign: {} {} shape {:?} trials/bit {} online={}",
+        precision,
+        dist.label(),
+        cfg.shape,
+        trials,
+        cfg.online
+    );
+    let res = Campaign::new(cfg).run(&VabftThreshold::default());
+    let mut t = Table::new(
+        &format!("Detection rate — {} {}", precision, dist.label()),
+        &["bit", "DR %", "localized %", "trials", "0→1 DR %"],
+    );
+    for b in &res.bits {
+        t.row(vec![
+            b.bit.to_string(),
+            pct(b.detection_rate()),
+            pct(100.0 * b.localized as f64 / b.trials.max(1) as f64),
+            b.trials.to_string(),
+            if b.trials_0to1 > 0 {
+                pct(100.0 * b.detected_0to1 as f64 / b.trials_0to1 as f64)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    t.print();
+    println!(
+        "clean rows checked: {}   false positives: {}",
+        res.clean_rows_checked, res.false_positives
+    );
+}
+
+fn cmd_tightness(args: &Args) {
+    use vabft::abft::encode::ChecksumEncoding;
+    use vabft::gemm::GemmEngine;
+    use vabft::matrix::Matrix;
+    use vabft::rng::Xoshiro256pp;
+
+    let precision = parse_precision(args, Precision::F32);
+    let trials = args.opt_or("trials", 5usize);
+    let sizes: Vec<usize> = args
+        .opt("sizes")
+        .unwrap_or("128,256,512")
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let model = Platform::Gpu.model_for(precision);
+    let engine = GemmEngine::new(model);
+    let ctx = ThresholdContext::offline(model);
+    let vab = VabftThreshold::default();
+    let aab = AabftThreshold::paper_repro();
+    let dist = Distribution::uniform_pm1();
+
+    let mut t = Table::new(
+        &format!("Threshold tightness — {} U(-1,1)", precision),
+        &["Size", "Actual Diff", "A-ABFT", "V-ABFT", "A-Tight", "V-Tight"],
+    );
+    for &n in &sizes {
+        let mut worst_e = 0.0f64;
+        let mut a_th = 0.0;
+        let mut v_th = 0.0;
+        for trial in 0..trials {
+            let mut rng = Xoshiro256pp::from_stream(n as u64, trial as u64);
+            let m = n.min(32);
+            let a = Matrix::sample_in(m, n, &dist, model.input, &mut rng);
+            let b = Matrix::sample_in(n, n, &dist, model.input, &mut rng);
+            let enc = ChecksumEncoding::encode_b(&b, &engine);
+            let out = engine.matmul_mixed(&a, &enc.b_encoded, enc.wide_cols());
+            let (c, cr1, _) = enc.split_product(&out.c);
+            for i in 0..m {
+                let e = (cr1[i] - engine.reduce(c.row(i))).abs();
+                worst_e = worst_e.max(e);
+            }
+            a_th = aab.thresholds(&a, &b, &ctx)[0];
+            v_th = vab.thresholds(&a, &b, &ctx).iter().cloned().fold(0.0, f64::max);
+        }
+        t.row(vec![
+            format!("{n}x{n}"),
+            sci(worst_e),
+            sci(a_th),
+            sci(v_th),
+            ratio(a_th / worst_e),
+            ratio(v_th / worst_e),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_artifacts(args: &Args) {
+    let dir = std::path::PathBuf::from(args.opt("dir").unwrap_or("artifacts"));
+    match vabft::runtime::PjrtRuntime::from_artifacts(&dir) {
+        Err(e) => {
+            eprintln!("failed to load artifacts from {}: {e:#}", dir.display());
+            eprintln!("run `make artifacts` first");
+            std::process::exit(1);
+        }
+        Ok(rt) => {
+            println!("platform: {}", rt.platform());
+            let mut t = Table::new("AOT artifacts", &["name", "file", "meta"]);
+            for e in &rt.manifest().entries {
+                let mut meta: Vec<String> =
+                    e.meta.iter().map(|(k, v)| format!("{k}={v}")).collect();
+                meta.sort();
+                t.row(vec![e.name.clone(), e.file.clone(), meta.join(" ")]);
+            }
+            t.print();
+        }
+    }
+}
+
+fn cmd_info() {
+    println!("V-ABFT: variance-based adaptive thresholds for fault-tolerant GEMM\n");
+    let mut t = Table::new(
+        "Recommended e_max (paper Table 7)",
+        &["Platform", "Precision", "e_max", "N-dependence"],
+    );
+    for platform in [Platform::Cpu, Platform::Gpu, Platform::Npu] {
+        for p in [Precision::F64, Precision::F32, Precision::Bf16, Precision::F16] {
+            let m = EmaxTable::recommended(platform, p);
+            t.row(vec![
+                platform.name().to_string(),
+                p.name().to_string(),
+                m.label(),
+                match m {
+                    vabft::calibrate::EmaxModel::Constant(_) => "constant".into(),
+                    vabft::calibrate::EmaxModel::SqrtN { .. } => "∝ √N".into(),
+                },
+            ]);
+        }
+    }
+    t.print();
+    println!("subcommands: calibrate | campaign | tightness | artifacts | info");
+}

@@ -1,0 +1,283 @@
+//! Dense row-major matrices with single-pass row statistics.
+//!
+//! Values are carried as f64 regardless of the *logical* precision: the
+//! GEMM engines quantize at exactly the points the accumulation model
+//! dictates (see [`crate::gemm`]), which is the behaviour the paper
+//! studies. A matrix whose elements all lie on the BF16 grid *is* a BF16
+//! matrix for every experiment in the paper; carrying them in f64 adds no
+//! information and keeps one code path for all six precisions.
+
+use crate::fp::Precision;
+use crate::rng::{Distribution, Rng};
+
+mod stats;
+pub use stats::RowStats;
+
+/// Dense row-major matrix of f64 carriers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a row-major vector (length must equal rows × cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Build by evaluating `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Sample each element i.i.d. from `dist`.
+    pub fn sample<R: Rng + ?Sized>(
+        rows: usize,
+        cols: usize,
+        dist: &Distribution,
+        rng: &mut R,
+    ) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        dist.sample_into(&mut m.data, rng);
+        m
+    }
+
+    /// Sample and quantize every element onto `precision`'s grid — the
+    /// standard way to create a "BF16 matrix" etc. for the experiments.
+    pub fn sample_in(
+        rows: usize,
+        cols: usize,
+        dist: &Distribution,
+        precision: Precision,
+        rng: &mut impl Rng,
+    ) -> Matrix {
+        let mut m = Self::sample(rows, cols, dist, rng);
+        m.quantize(precision);
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Flat row-major data.
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Quantize every element onto `precision`'s grid in place.
+    pub fn quantize(&mut self, precision: Precision) {
+        if precision == Precision::F64 {
+            return;
+        }
+        for v in &mut self.data {
+            *v = precision.quantize(*v);
+        }
+    }
+
+    /// A copy quantized to `precision`.
+    pub fn quantized(&self, precision: Precision) -> Matrix {
+        let mut m = self.clone();
+        m.quantize(precision);
+        m
+    }
+
+    /// Transpose (copying).
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// Single-pass (max, min, mean) statistics of row `i` — the only
+    /// statistics V-ABFT needs (Algorithm 1), O(n) per row.
+    pub fn row_stats(&self, i: usize) -> RowStats {
+        RowStats::of(self.row(i))
+    }
+
+    /// Single-pass (max, min, mean) without the diagnostic variance —
+    /// the production threshold path (see [`RowStats::fast`]).
+    #[inline]
+    pub fn row_stats_fast(&self, i: usize) -> RowStats {
+        RowStats::fast(self.row(i))
+    }
+
+    /// Statistics of every row.
+    pub fn all_row_stats(&self) -> Vec<RowStats> {
+        (0..self.rows).map(|i| self.row_stats(i)).collect()
+    }
+
+    /// Column sums: out[j] = Σ_i M[i][j] (plain f64 accumulation).
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (o, &v) in out.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    /// Row sums: out[i] = Σ_j M[i][j].
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.rows).map(|i| self.row(i).iter().sum()).collect()
+    }
+
+    /// Max |element|.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &v| m.max(v.abs()))
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Element-wise maximum absolute difference against another matrix.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f64, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+
+    /// Take ownership of the data.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// View of the first `r` rows (copying).
+    pub fn top_rows(&self, r: usize) -> Matrix {
+        assert!(r <= self.rows);
+        Matrix { rows: r, cols: self.cols, data: self.data[..r * self.cols].to_vec() }
+    }
+}
+
+impl std::fmt::Display for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show_rows = self.rows.min(6);
+        for i in 0..show_rows {
+            let row = self.row(i);
+            let shown: Vec<String> =
+                row.iter().take(8).map(|v| format!("{v:>11.4e}")).collect();
+            let ell = if self.cols > 8 { ", ..." } else { "" };
+            writeln!(f, "  [{}{}]", shown.join(", "), ell)?;
+        }
+        if self.rows > show_rows {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Matrix::from_fn(3, 4, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m.get(0, 0), 0.0);
+        assert_eq!(m.get(2, 3), 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let m = Matrix::sample(5, 7, &Distribution::uniform_pm1(), &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().get(3, 2), m.get(2, 3));
+    }
+
+    #[test]
+    fn sums() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m.row_sums(), vec![6.0, 15.0]);
+        assert_eq!(m.col_sums(), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn quantize_snaps_to_grid() {
+        let mut m = Matrix::from_vec(1, 2, vec![1.0 + 2e-4, -3.14159]);
+        m.quantize(Precision::Bf16);
+        assert_eq!(m.get(0, 0), 1.0); // 1+2e-4 rounds to 1.0 in bf16
+        assert_eq!(m.get(0, 1), -3.140625);
+    }
+
+    #[test]
+    fn sample_in_lands_on_grid() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let m = Matrix::sample_in(8, 8, &Distribution::normal_1_1(), Precision::F16, &mut rng);
+        for &v in m.data() {
+            assert_eq!(Precision::F16.quantize(v), v);
+        }
+    }
+
+    #[test]
+    fn norms_and_diffs() {
+        let a = Matrix::from_vec(1, 3, vec![3.0, 0.0, 4.0]);
+        assert_eq!(a.fro_norm(), 5.0);
+        assert_eq!(a.max_abs(), 4.0);
+        let b = Matrix::from_vec(1, 3, vec![3.0, 1.0, 4.5]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Single-pass row statistics — the O(n) primitive behind V-ABFT.
+//!
+//! Algorithm 1 in the paper needs, per row: mean, max, min (for the
+//! extrema-variance bound) — nothing else. `RowStats` computes these in
+//! one fused pass and also records the exact sum of squares so tests can
+//! compare the extrema bound against the true variance (Theorem 1's
+//! guarantee is `var ≤ (max-μ)(μ-min)`).
+
+/// Summary statistics of one row, computed in a single pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RowStats {
+    pub n: usize,
+    pub mean: f64,
+    pub max: f64,
+    pub min: f64,
+    /// True population variance (kept for tests/diagnostics; the V-ABFT
+    /// production path uses only `extrema_var_bound`).
+    pub variance: f64,
+}
+
+impl RowStats {
+    /// Production single-pass statistics: max/min/mean only — all V-ABFT
+    /// needs (Algorithm 1). `variance` is set to NaN; use [`RowStats::of`]
+    /// when the true variance is wanted for diagnostics/tests.
+    #[inline]
+    pub fn fast(xs: &[f64]) -> RowStats {
+        assert!(!xs.is_empty(), "row statistics of empty slice");
+        let n = xs.len();
+        // 4 independent accumulator lanes break the serial max/min/add
+        // dependency chains so the loop vectorizes.
+        let mut mx = [f64::NEG_INFINITY; 4];
+        let mut mn = [f64::INFINITY; 4];
+        let mut sm = [0.0f64; 4];
+        let chunks = xs.chunks_exact(4);
+        let rem = chunks.remainder();
+        for c in chunks {
+            for l in 0..4 {
+                mx[l] = mx[l].max(c[l]);
+                mn[l] = mn[l].min(c[l]);
+                sm[l] += c[l];
+            }
+        }
+        let mut max = mx[0].max(mx[1]).max(mx[2]).max(mx[3]);
+        let mut min = mn[0].min(mn[1]).min(mn[2]).min(mn[3]);
+        let mut sum = sm[0] + sm[1] + sm[2] + sm[3];
+        for &x in rem {
+            max = max.max(x);
+            min = min.min(x);
+            sum += x;
+        }
+        RowStats { n, mean: sum / n as f64, max, min, variance: f64::NAN }
+    }
+
+    /// Compute statistics of `xs`. Panics on empty input.
+    pub fn of(xs: &[f64]) -> RowStats {
+        assert!(!xs.is_empty(), "row statistics of empty slice");
+        let n = xs.len();
+        let mut max = f64::NEG_INFINITY;
+        let mut min = f64::INFINITY;
+        let mut sum = 0.0;
+        for &x in xs {
+            max = max.max(x);
+            min = min.min(x);
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        // Second pass for a numerically stable variance (diagnostics only;
+        // the hot path in gemm/fused_stats.rs skips it).
+        let mut ss = 0.0;
+        for &x in xs {
+            let d = x - mean;
+            ss += d * d;
+        }
+        RowStats { n, mean, max, min, variance: ss / n as f64 }
+    }
+
+    /// Theorem 1 (extrema-variance bound): σ² ≤ (max − μ)(μ − min).
+    ///
+    /// Tight when mass clusters at the extremes; a constant-factor
+    /// overestimate for well-spread data — conservative, hence safe for
+    /// thresholds. Both factors are ≥ 0 by definition of max/min/mean;
+    /// we clamp at 0 against roundoff.
+    #[inline]
+    pub fn extrema_var_bound(&self) -> f64 {
+        ((self.max - self.mean) * (self.mean - self.min)).max(0.0)
+    }
+
+    /// √ of the extrema variance bound.
+    #[inline]
+    pub fn extrema_std_bound(&self) -> f64 {
+        self.extrema_var_bound().sqrt()
+    }
+
+    /// Largest absolute element (max(|max|, |min|)) — used by the A-ABFT
+    /// baseline's `y` parameter and by the analytical bounds.
+    #[inline]
+    pub fn max_abs(&self) -> f64 {
+        self.max.abs().max(self.min.abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Distribution, Xoshiro256pp};
+
+    #[test]
+    fn basic_stats() {
+        let s = RowStats::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.variance, 1.25);
+        assert_eq!(s.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn extrema_bound_dominates_variance() {
+        // Property test over many random rows: Theorem 1 must hold.
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let dists = [
+            Distribution::near_zero_normal(),
+            Distribution::normal_1_1(),
+            Distribution::uniform_pm1(),
+            Distribution::truncated_normal(),
+            Distribution::calibration(),
+        ];
+        for d in &dists {
+            for len in [2usize, 3, 17, 256, 1024] {
+                let xs: Vec<f64> = (0..len).map(|_| d.sample(&mut rng)).collect();
+                let s = RowStats::of(&xs);
+                assert!(
+                    s.variance <= s.extrema_var_bound() * (1.0 + 1e-12) + 1e-300,
+                    "Theorem 1 violated: var={} bound={} dist={} len={}",
+                    s.variance,
+                    s.extrema_var_bound(),
+                    d.label(),
+                    len
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn extrema_bound_tight_at_two_point_mass() {
+        // Half the mass at each extreme: bound equals variance exactly.
+        let xs = [1.0, -1.0, 1.0, -1.0];
+        let s = RowStats::of(&xs);
+        assert!((s.variance - s.extrema_var_bound()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn constant_row_has_zero_bound() {
+        let s = RowStats::of(&[5.0; 100]);
+        assert_eq!(s.extrema_var_bound(), 0.0);
+        assert_eq!(s.variance, 0.0);
+    }
+
+    #[test]
+    fn single_element_row() {
+        let s = RowStats::of(&[42.0]);
+        assert_eq!(s.mean, 42.0);
+        assert_eq!(s.extrema_var_bound(), 0.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Lightweight metrics: counters and latency histograms for the
+//! coordinator's hot path (lock-free, allocation-free on record).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter { v: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Log₂-bucketed latency histogram: bucket i counts durations in
+/// [2^i, 2^(i+1)) microseconds. 48 buckets cover ns..days.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..48).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(self.buckets.len() - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
+    }
+
+    /// Approximate quantile (upper edge of the bucket containing it).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return Duration::from_micros(1 << (i + 1));
+            }
+        }
+        Duration::from_micros(1 << 47)
+    }
+}
+
+/// Aggregated coordinator metrics.
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    pub jobs_submitted: Counter,
+    pub jobs_completed: Counter,
+    pub faults_detected: Counter,
+    pub faults_corrected: Counter,
+    pub rows_recomputed: Counter,
+    pub latency: Histogram,
+}
+
+impl ServiceMetrics {
+    pub fn new() -> ServiceMetrics {
+        Default::default()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "jobs={}/{} detected={} corrected={} recomputed_rows={} mean={:?} p95={:?}",
+            self.jobs_completed.get(),
+            self.jobs_submitted.get(),
+            self.faults_detected.get(),
+            self.faults_corrected.get(),
+            self.rows_recomputed.get(),
+            self.latency.mean(),
+            self.latency.quantile(0.95),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let h = Histogram::new();
+        for us in [10u64, 20, 40, 80, 100, 1000, 10000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 7);
+        assert!(h.quantile(0.5) >= Duration::from_micros(32));
+        assert!(h.quantile(1.0) >= Duration::from_micros(10000));
+        assert!(h.mean() >= Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,154 @@
+//! Paper-style table rendering for benches and examples.
+//!
+//! Every bench regenerates one of the paper's tables; this module prints
+//! them in aligned ASCII (and Markdown) with the same row/column structure
+//! so EXPERIMENTS.md can record paper-vs-measured side by side.
+
+/// A simple table with aligned columns.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as aligned ASCII.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (w.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as GitHub Markdown.
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("### {}\n\n", self.title));
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+        println!();
+    }
+}
+
+/// Scientific notation like the paper's tables (e.g. "1.27e-14").
+pub fn sci(x: f64) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    format!("{x:.2e}")
+}
+
+/// Tightness ratio like the paper ("164×"); "-" for non-finite.
+pub fn ratio(x: f64) -> String {
+    if !x.is_finite() {
+        return "-".to_string();
+    }
+    if x >= 100.0 {
+        format!("{x:.0}x")
+    } else if x >= 10.0 {
+        format!("{x:.0}x")
+    } else {
+        format!("{x:.1}x")
+    }
+}
+
+/// Percentage with two decimals ("99.96").
+pub fn pct(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["Size", "Value"]);
+        t.row(vec!["128x128".into(), "1.27e-14".into()]);
+        t.row(vec!["2048x2048".into(), "8.22e-13".into()]);
+        let r = t.render();
+        assert!(r.contains("Demo"));
+        assert!(r.contains("128x128"));
+        let lines: Vec<&str> = r.lines().collect();
+        // all data lines equal width
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.render_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("|---|---|"));
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(sci(0.0), "0");
+        assert_eq!(sci(1.27e-14), "1.27e-14");
+        assert_eq!(ratio(163.7), "164x");
+        assert_eq!(ratio(7.4), "7.4x");
+        assert_eq!(ratio(f64::INFINITY), "-");
+        assert_eq!(pct(99.957), "99.96");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

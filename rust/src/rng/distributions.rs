@@ -1,0 +1,175 @@
+//! Sampling distributions used across the paper's experiments (§6.1).
+
+use super::Rng;
+
+/// A sampling distribution for matrix elements.
+///
+/// The paper's experimental section (§6.1) tests four distributions;
+/// §3.6's calibration protocol adds |N(1,1)|. All are provided here in
+/// parametric form, plus `Constant` (useful in tests) and `Scaled`
+/// composition for building weight-like tensors.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Distribution {
+    /// Normal N(mean, std²).
+    Normal { mean: f64, std: f64 },
+    /// Uniform U(lo, hi).
+    Uniform { lo: f64, hi: f64 },
+    /// N(mean, std²) truncated (by rejection) to [lo, hi].
+    TruncatedNormal { mean: f64, std: f64, lo: f64, hi: f64 },
+    /// |N(mean, std²)| — the paper's calibration distribution (§3.6 step 1,
+    /// "positive matrices with |N(1,1)| elements").
+    AbsNormal { mean: f64, std: f64 },
+    /// Every element equal to `value` (degenerate; exercises the
+    /// extrema-variance bound's zero-variance edge).
+    Constant { value: f64 },
+}
+
+impl Distribution {
+    /// §6.1 "N(1e-6, 1)": near-zero mean, normalized-activation-like.
+    pub fn near_zero_normal() -> Distribution {
+        Distribution::Normal { mean: 1e-6, std: 1.0 }
+    }
+
+    /// §6.1 "N(1,1)": non-zero mean, the A-ABFT stress test.
+    pub fn normal_1_1() -> Distribution {
+        Distribution::Normal { mean: 1.0, std: 1.0 }
+    }
+
+    /// §6.1 "U(-1,1)".
+    pub fn uniform_pm1() -> Distribution {
+        Distribution::Uniform { lo: -1.0, hi: 1.0 }
+    }
+
+    /// Table 6's BF16 setup uses U(0,1).
+    pub fn uniform_01() -> Distribution {
+        Distribution::Uniform { lo: 0.0, hi: 1.0 }
+    }
+
+    /// §6.1 "Truncated N(0,1) in [-1,1]".
+    pub fn truncated_normal() -> Distribution {
+        Distribution::TruncatedNormal { mean: 0.0, std: 1.0, lo: -1.0, hi: 1.0 }
+    }
+
+    /// §3.6 calibration distribution |N(1,1)|.
+    pub fn calibration() -> Distribution {
+        Distribution::AbsNormal { mean: 1.0, std: 1.0 }
+    }
+
+    /// The paper's four evaluation distributions in Table 8 column order.
+    pub fn paper_suite() -> [(&'static str, Distribution); 4] {
+        [
+            ("N(1e-6,1)", Self::near_zero_normal()),
+            ("N(1,1)", Self::normal_1_1()),
+            ("U(-1,1)", Self::uniform_pm1()),
+            ("TruncN", Self::truncated_normal()),
+        ]
+    }
+
+    /// Draw one sample.
+    pub fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        match *self {
+            Distribution::Normal { mean, std } => mean + std * rng.standard_normal(),
+            Distribution::Uniform { lo, hi } => rng.uniform(lo, hi),
+            Distribution::TruncatedNormal { mean, std, lo, hi } => {
+                assert!(lo < hi, "empty truncation interval");
+                loop {
+                    let x = mean + std * rng.standard_normal();
+                    if x >= lo && x <= hi {
+                        return x;
+                    }
+                }
+            }
+            Distribution::AbsNormal { mean, std } => (mean + std * rng.standard_normal()).abs(),
+            Distribution::Constant { value } => value,
+        }
+    }
+
+    /// Fill a slice with samples.
+    pub fn sample_into<R: Rng + ?Sized>(&self, out: &mut [f64], rng: &mut R) {
+        for v in out.iter_mut() {
+            *v = self.sample(rng);
+        }
+    }
+
+    /// Short display name for reports.
+    pub fn label(&self) -> String {
+        match *self {
+            Distribution::Normal { mean, std } => format!("N({mean},{std})"),
+            Distribution::Uniform { lo, hi } => format!("U({lo},{hi})"),
+            Distribution::TruncatedNormal { lo, hi, .. } => format!("TruncN[{lo},{hi}]"),
+            Distribution::AbsNormal { mean, std } => format!("|N({mean},{std})|"),
+            Distribution::Constant { value } => format!("Const({value})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn moments(d: &Distribution, n: usize) -> (f64, f64) {
+        let mut rng = Xoshiro256pp::seed_from_u64(1234);
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        for _ in 0..n {
+            let x = d.sample(&mut rng);
+            sum += x;
+            sumsq += x * x;
+        }
+        let mean = sum / n as f64;
+        (mean, sumsq / n as f64 - mean * mean)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let (m, v) = moments(&Distribution::Normal { mean: 2.0, std: 3.0 }, 100_000);
+        assert!((m - 2.0).abs() < 0.05);
+        assert!((v - 9.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn uniform_moments_and_range() {
+        let d = Distribution::uniform_pm1();
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        for _ in 0..10_000 {
+            let x = d.sample(&mut rng);
+            assert!((-1.0..1.0).contains(&x));
+        }
+        let (m, v) = moments(&d, 100_000);
+        assert!(m.abs() < 0.01);
+        assert!((v - 1.0 / 3.0).abs() < 0.01); // Var U(-1,1) = 1/3
+    }
+
+    #[test]
+    fn truncated_normal_respects_bounds() {
+        let d = Distribution::truncated_normal();
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        for _ in 0..10_000 {
+            let x = d.sample(&mut rng);
+            assert!((-1.0..=1.0).contains(&x));
+        }
+        // Truncating N(0,1) to ±1σ gives variance ≈ 0.2912
+        let (m, v) = moments(&d, 200_000);
+        assert!(m.abs() < 0.01);
+        assert!((v - 0.2912).abs() < 0.01, "var {v}");
+    }
+
+    #[test]
+    fn abs_normal_is_positive() {
+        let d = Distribution::calibration();
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        for _ in 0..10_000 {
+            assert!(d.sample(&mut rng) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn constant_distribution() {
+        let d = Distribution::Constant { value: 4.25 };
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        for _ in 0..10 {
+            assert_eq!(d.sample(&mut rng), 4.25);
+        }
+    }
+}

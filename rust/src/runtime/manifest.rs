@@ -1,0 +1,110 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! Format: `manifest.tsv`, one artifact per line,
+//! `name \t file \t key=value \t key=value …` — trivially parseable without
+//! a JSON dependency (serde is not in the offline registry); aot.py also
+//! writes a human-oriented manifest.json with the same content.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// One artifact: a lowered HLO-text module plus its metadata
+/// (shapes, dtypes, parameter layouts — whatever the producer recorded).
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub meta: HashMap<String, String>,
+}
+
+impl ArtifactEntry {
+    /// Typed metadata accessor.
+    pub fn meta_parse<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.meta.get(key).and_then(|v| v.parse().ok())
+    }
+
+    /// Comma-separated usize list, e.g. `shape=128,256`.
+    pub fn meta_dims(&self, key: &str) -> Option<Vec<usize>> {
+        let v = self.meta.get(key)?;
+        v.split(',').map(|s| s.trim().parse().ok()).collect()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut fields = line.split('\t');
+            let name = fields
+                .next()
+                .ok_or_else(|| anyhow!("line {}: missing name", lineno + 1))?
+                .to_string();
+            let file = fields
+                .next()
+                .ok_or_else(|| anyhow!("line {}: missing file", lineno + 1))?
+                .to_string();
+            let mut meta = HashMap::new();
+            for kv in fields {
+                if let Some((k, v)) = kv.split_once('=') {
+                    meta.insert(k.trim().to_string(), v.trim().to_string());
+                }
+            }
+            entries.push(ArtifactEntry { name, file, meta });
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_manifest() {
+        let text = "# comment\n\
+                    ftgemm_bf16\tftgemm_bf16.hlo.txt\tm=8\tk=64\tn=32\tdtype=bf16\n\
+                    \n\
+                    train_step\ttrain_step.hlo.txt\tparams=5\tloss_index=5\n";
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.get("ftgemm_bf16").unwrap();
+        assert_eq!(e.file, "ftgemm_bf16.hlo.txt");
+        assert_eq!(e.meta_parse::<usize>("k"), Some(64));
+        assert_eq!(e.meta.get("dtype").map(|s| s.as_str()), Some("bf16"));
+        assert!(m.get("missing").is_none());
+    }
+
+    #[test]
+    fn dims_helper() {
+        let m = Manifest::parse("x\tx.hlo\tshape=128,256,8\n").unwrap();
+        assert_eq!(m.entries[0].meta_dims("shape"), Some(vec![128, 256, 8]));
+    }
+
+    #[test]
+    fn malformed_line_errors() {
+        assert!(Manifest::parse("onlyname\n").is_err());
+    }
+}

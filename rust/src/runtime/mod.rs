@@ -1,0 +1,165 @@
+//! PJRT runtime: load and execute the AOT artifacts from the Rust hot
+//! path.
+//!
+//! Python runs once at build time (`make artifacts`): `python/compile/aot.py`
+//! lowers the L2 JAX model (whose matmuls route through the L1 Pallas
+//! fused ABFT-GEMM kernel) to **HLO text** and writes a manifest. This
+//! module loads those files with `HloModuleProto::from_text_file`, compiles
+//! them on the PJRT CPU client and executes them with concrete inputs —
+//! Python is never on the request path.
+//!
+//! HLO *text* (not a serialized `HloModuleProto`) is the interchange
+//! format: jax ≥ 0.5 emits protos with 64-bit instruction ids that the
+//! crate's xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+mod manifest;
+pub use manifest::{ArtifactEntry, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Default artifact directory, overridable with VABFT_ARTIFACTS.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("VABFT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// A loaded-and-compiled artifact registry backed by a PJRT CPU client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client with an empty registry.
+    pub fn new() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtRuntime { client, executables: HashMap::new(), manifest: Manifest::default() })
+    }
+
+    /// Create a runtime and load every artifact listed in
+    /// `<dir>/manifest.tsv`.
+    pub fn from_artifacts(dir: &Path) -> Result<PjrtRuntime> {
+        let mut rt = Self::new()?;
+        let manifest = Manifest::load(&dir.join("manifest.tsv"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        for entry in manifest.entries.clone() {
+            rt.load(&entry.name, &dir.join(&entry.file))?;
+        }
+        rt.manifest = manifest;
+        Ok(rt)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load one HLO-text artifact and compile it under `name`.
+    pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute an artifact with literal inputs. The jax side lowers with
+    /// `return_tuple=True`, so the single output is a tuple that we
+    /// decompose into its elements.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple result of {name}: {e:?}"))
+    }
+
+    /// Execute with f32 tensor inputs given as (data, dims) pairs, and
+    /// return every output as a flat f32 vector.
+    pub fn execute_f32(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| literal_f32(data, dims))
+            .collect::<Result<_>>()?;
+        let outs = self.execute(name, &literals)?;
+        outs.iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// Build an f32 literal with the given dimensions.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch: {dims:?} vs {}", data.len());
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
+}
+
+/// Build an i32 literal with the given dimensions.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration tests that need real artifacts live in
+    /// `rust/tests/runtime_integration.rs` and skip gracefully when
+    /// `make artifacts` has not run. Here we only test the pieces that
+    /// don't require artifacts.
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.element_count(), 6);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3, 3]).is_err());
+    }
+
+    #[test]
+    fn runtime_construction_and_missing_artifact() {
+        let rt = PjrtRuntime::new().expect("cpu client");
+        assert!(!rt.has("nope"));
+        assert!(rt.execute("nope", &[]).is_err());
+        assert!(!rt.platform().is_empty());
+    }
+}

@@ -1,0 +1,90 @@
+//! Worst-case analytical threshold (Higham-style), the classical baseline
+//! the paper's introduction cites as 10⁴–10⁵× looser than actual errors.
+//!
+//! Standard forward-error bound for a length-s accumulation:
+//! `|fl(Σx) − Σx| ≤ γ_s · Σ|x|` with `γ_s = s·u / (1 − s·u)`. Applied to
+//! the verification difference, both paths accumulate over N and K, so we
+//! bound with depth s = N + K against the full absolute mass
+//! `Σ_k |A_mk| · Σ_n |B_kn|`.
+
+use super::{Threshold, ThresholdContext};
+use crate::matrix::Matrix;
+
+/// Higham worst-case threshold.
+#[derive(Debug, Clone, Default)]
+pub struct AnalyticalThreshold;
+
+impl AnalyticalThreshold {
+    /// γ_s = s·u / (1 − s·u); saturates to infinity when s·u ≥ 1 (the
+    /// bound is vacuous there, which the paper notes for low precision).
+    pub fn gamma(s: usize, u: f64) -> f64 {
+        let su = s as f64 * u;
+        if su >= 1.0 {
+            f64::INFINITY
+        } else {
+            su / (1.0 - su)
+        }
+    }
+}
+
+impl Threshold for AnalyticalThreshold {
+    fn name(&self) -> &'static str {
+        "Analytical (Higham)"
+    }
+
+    fn thresholds(&self, a: &Matrix, b: &Matrix, ctx: &ThresholdContext) -> Vec<f64> {
+        assert_eq!(a.cols(), b.rows());
+        let (k, n) = (b.rows(), b.cols());
+        let p = if ctx.online { ctx.model.work } else { ctx.model.out };
+        let u = p.unit_roundoff();
+        let g = Self::gamma(n + k, u);
+        // Row-wise absolute mass of B: Σ_n |B_kn| per row k.
+        let b_abs_rs: Vec<f64> =
+            (0..k).map(|r| b.row(r).iter().map(|v| v.abs()).sum()).collect();
+        (0..a.rows())
+            .map(|i| {
+                let mass: f64 = a
+                    .row(i)
+                    .iter()
+                    .zip(&b_abs_rs)
+                    .map(|(&av, &bs)| av.abs() * bs)
+                    .sum();
+                // ×2: both verification paths contribute a γ-bounded error.
+                2.0 * g * mass
+            })
+            .collect()
+    }
+
+    fn complexity(&self) -> &'static str {
+        "O(n) — absolute sums"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::Precision;
+    use crate::gemm::AccumModel;
+
+    #[test]
+    fn gamma_basics() {
+        let u = Precision::F64.unit_roundoff();
+        assert!((AnalyticalThreshold::gamma(10, u) - 10.0 * u).abs() < 1e-20);
+        assert!(AnalyticalThreshold::gamma(1 << 55, u).is_infinite());
+    }
+
+    #[test]
+    fn bound_is_conservative_by_construction() {
+        // For all-ones 64×64: mass per row = 64·64 = 4096,
+        // T = 2·γ_128·4096 in FP32.
+        let a = Matrix::from_fn(4, 64, |_, _| 1.0);
+        let b = Matrix::from_fn(64, 64, |_, _| 1.0);
+        let ctx = ThresholdContext::offline(AccumModel::gpu_highprec(Precision::F32));
+        let th = AnalyticalThreshold.thresholds(&a, &b, &ctx);
+        let u = Precision::F32.unit_roundoff();
+        let want = 2.0 * AnalyticalThreshold::gamma(128, u) * 4096.0;
+        assert!((th[0] - want).abs() < 1e-9);
+        // ~10^4 × the actual error scale (which is ~u·N·val ≈ 2e-4):
+        assert!(th[0] > 0.01);
+    }
+}

@@ -1,0 +1,223 @@
+//! Threshold determination for ABFT verification.
+//!
+//! The fundamental tension (paper §2.2): a threshold must exceed every
+//! legitimate floating-point rounding difference between the two
+//! verification paths (else false positives), yet sit as low as possible
+//! (else real faults slip through). This module provides the paper's
+//! contribution and its three baselines behind one trait:
+//!
+//! * [`VabftThreshold`] — **V-ABFT** (§3): direct statistical modelling of
+//!   the verification difference using only per-row max/min/mean (O(n)).
+//! * [`AabftThreshold`] — **A-ABFT** (Braun, Halder & Wunderlich, DSN'14),
+//!   reproduced per §4.1: probabilistic inner-product bound, 3σ threshold.
+//! * [`AnalyticalThreshold`] — Higham-style worst-case γ_n bound.
+//! * [`SeaThreshold`] — Simplified Error Analysis (Roy-Chowdhury &
+//!   Banerjee, FTCS'93) — reconstructed first-order deterministic bound.
+
+mod aabft;
+mod analytical;
+mod sea;
+mod vabft;
+
+pub use aabft::{AabftThreshold, YMode};
+pub use analytical::AnalyticalThreshold;
+pub use sea::SeaThreshold;
+pub use vabft::{BSummary, VabftThreshold};
+
+use crate::calibrate::EmaxModel;
+use crate::gemm::AccumModel;
+use crate::matrix::Matrix;
+
+/// Everything a threshold algorithm may consult about the verification
+/// setting. The decisive field is `online`: fused-kernel verification reads
+/// the FP32 accumulator (e_max ≈ 1e-6) while offline verification sees the
+/// quantized output (e_max ≈ 2·u_out) — §3.6.
+#[derive(Debug, Clone, Copy)]
+pub struct ThresholdContext {
+    /// Accumulation model of the GEMM being verified.
+    pub model: AccumModel,
+    /// Verify before (true) or after (false) output quantization.
+    pub online: bool,
+    /// Override the e_max law (None = derive from `model`/`online` via
+    /// [`crate::calibrate::EmaxTable::for_model`]).
+    pub emax_override: Option<EmaxModel>,
+}
+
+impl ThresholdContext {
+    pub fn offline(model: AccumModel) -> ThresholdContext {
+        ThresholdContext { model, online: false, emax_override: None }
+    }
+
+    pub fn online(model: AccumModel) -> ThresholdContext {
+        ThresholdContext { model, online: true, emax_override: None }
+    }
+
+    pub fn with_emax(mut self, emax: EmaxModel) -> ThresholdContext {
+        self.emax_override = Some(emax);
+        self
+    }
+
+    /// The e_max value for reduction length `n`.
+    pub fn emax(&self, n: usize) -> f64 {
+        self.emax_override
+            .unwrap_or_else(|| crate::calibrate::EmaxTable::for_model(self.model, self.online))
+            .eval(n)
+    }
+}
+
+/// A threshold algorithm: maps (A, B, context) to one detection threshold
+/// per row of C = A·B, bounding |checksum − rowsum| on fault-free data.
+pub trait Threshold: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Per-row thresholds for verifying C = A·B.
+    fn thresholds(&self, a: &Matrix, b: &Matrix, ctx: &ThresholdContext) -> Vec<f64>;
+
+    /// Serving fast path: thresholds against a weight matrix whose summary
+    /// was precomputed once (see [`PreparedBStats`]). The default falls
+    /// back to the full two-operand path; V-ABFT overrides it to skip the
+    /// O(KN) pass over B entirely.
+    fn thresholds_prepared(
+        &self,
+        a: &Matrix,
+        prepared: &PreparedBStats,
+        ctx: &ThresholdContext,
+    ) -> Vec<f64> {
+        self.thresholds(a, &prepared.b, ctx)
+    }
+
+    /// Asymptotic cost per row of A, for the complexity comparison
+    /// (§4.4): V-ABFT is O(K) (one max/min/mean pass), A-ABFT O(pK).
+    fn complexity(&self) -> &'static str {
+        "O(n)"
+    }
+}
+
+/// Precomputed per-weight-matrix state shared across many requests in the
+/// serving coordinator: the matrix itself (baselines need it) plus the
+/// one-pass V-ABFT summary.
+#[derive(Debug, Clone)]
+pub struct PreparedBStats {
+    pub b: Matrix,
+    pub bsum: BSummary,
+}
+
+impl PreparedBStats {
+    pub fn of(b: &Matrix) -> PreparedBStats {
+        PreparedBStats { b: b.clone(), bsum: BSummary::of(b) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::Precision;
+    use crate::gemm::GemmEngine;
+    use crate::rng::{Distribution, Xoshiro256pp};
+
+    /// Shared harness: every algorithm must produce thresholds that are
+    /// positive and that bound the actual verification difference on clean
+    /// data (zero false positives) for a basket of distributions.
+    fn check_no_false_positives(t: &dyn Threshold, model: AccumModel, dist: &Distribution) {
+        let engine = GemmEngine::new(model);
+        let ctx = ThresholdContext::offline(model);
+        for (m, k, n, seed) in [(16usize, 64usize, 32usize, 1u64), (8, 128, 64, 2)] {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            let a = Matrix::sample_in(m, k, dist, model.input, &mut rng);
+            let b = Matrix::sample_in(k, n, dist, model.input, &mut rng);
+            let ths = t.thresholds(&a, &b, &ctx);
+            assert_eq!(ths.len(), m);
+            // Build verification difference without faults.
+            let benc = crate::abft::encode::r1_checksum_of_b(&b, &engine);
+            let mut bext = Matrix::zeros(k, n + 1);
+            for r in 0..k {
+                bext.row_mut(r)[..n].copy_from_slice(b.row(r));
+                bext.set(r, n, benc[r]);
+            }
+            let out = engine.matmul(&a, &bext);
+            for i in 0..m {
+                let row = out.c.row(i);
+                let e = (row[n] - engine.reduce(&row[..n])).abs();
+                assert!(
+                    ths[i] >= e,
+                    "{}: FP at row {i}: threshold {:.3e} < diff {:.3e} ({}, {:?})",
+                    t.name(),
+                    ths[i],
+                    e,
+                    dist.label(),
+                    model
+                );
+                assert!(ths[i].is_finite() && ths[i] >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn no_false_positives_all_algorithms_fp32() {
+        let model = AccumModel::gpu_highprec(Precision::F32);
+        let dists = [
+            Distribution::near_zero_normal(),
+            Distribution::normal_1_1(),
+            Distribution::uniform_pm1(),
+            Distribution::truncated_normal(),
+        ];
+        let algos: Vec<Box<dyn Threshold>> = vec![
+            Box::new(VabftThreshold::default()),
+            Box::new(AabftThreshold::computed_y()),
+            Box::new(AnalyticalThreshold::default()),
+            Box::new(SeaThreshold::default()),
+        ];
+        for algo in &algos {
+            for d in &dists {
+                check_no_false_positives(algo.as_ref(), model, d);
+            }
+        }
+    }
+
+    #[test]
+    fn no_false_positives_vabft_bf16() {
+        let model = AccumModel::wide(Precision::Bf16);
+        for d in [Distribution::uniform_01(), Distribution::normal_1_1()] {
+            check_no_false_positives(&VabftThreshold::default(), model, &d);
+        }
+    }
+
+    #[test]
+    fn tightness_ordering_holds() {
+        // The paper's Table 3/4/5 shape: V-ABFT < A-ABFT < SEA ≤ Analytical
+        // on U(-1,1) data (allow SEA/Analytical to swap nowhere).
+        let model = AccumModel::gpu_highprec(Precision::F32);
+        let ctx = ThresholdContext::offline(model);
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let d = Distribution::uniform_pm1();
+        let a = Matrix::sample_in(8, 256, &d, model.input, &mut rng);
+        let b = Matrix::sample_in(256, 256, &d, model.input, &mut rng);
+        let v = VabftThreshold::default().thresholds(&a, &b, &ctx);
+        let aa = AabftThreshold::paper_repro().thresholds(&a, &b, &ctx);
+        let an = AnalyticalThreshold::default().thresholds(&a, &b, &ctx);
+        let se = SeaThreshold::default().thresholds(&a, &b, &ctx);
+        for i in 0..8 {
+            assert!(v[i] < aa[i], "row {i}: V {:.3e} !< A {:.3e}", v[i], aa[i]);
+            assert!(aa[i] < an[i], "row {i}: A {:.3e} !< Higham {:.3e}", aa[i], an[i]);
+            assert!(se[i] < an[i], "row {i}: SEA {:.3e} !< Higham {:.3e}", se[i], an[i]);
+        }
+    }
+
+    #[test]
+    fn online_thresholds_are_much_tighter_for_bf16() {
+        // §3.6: verifying the FP32 accumulator instead of the BF16 output
+        // tightens the threshold by ~1000×.
+        let model = AccumModel::wide(Precision::Bf16);
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let d = Distribution::uniform_01();
+        let a = Matrix::sample_in(4, 128, &d, model.input, &mut rng);
+        let b = Matrix::sample_in(128, 128, &d, model.input, &mut rng);
+        let t = VabftThreshold::default();
+        let off = t.thresholds(&a, &b, &ThresholdContext::offline(model));
+        let on = t.thresholds(&a, &b, &ThresholdContext::online(model));
+        for i in 0..4 {
+            let ratio = off[i] / on[i];
+            assert!(ratio > 100.0, "row {i}: ratio {ratio}");
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! V-ABFT: the paper's variance-based adaptive threshold (§3, Algorithm 1).
+//!
+//! Directly models the verification difference
+//! `E = |fl(Σ_n fl(Σ_k A_mk B_kn)) − fl(Σ_k A_mk fl(Σ_n B_kn))|`
+//! by decomposing both operands into row mean + scaled fluctuation
+//! (Eq. 15–16), expanding into four terms (Eq. 21) and bounding:
+//!
+//! ```text
+//! T_m = e_max · ( N·|μ_Am|·Σ_k|μ_Bk|                         (deterministic)
+//!        + c_σ·√( N·μ_Am²·Σ_k σ_Bk² + N²·σ_Am²·Σ_k μ_Bk² )   (terms 2+3)
+//!        + c_σ·√N·σ_Am·√(Σ_k σ_Bk²) )                        (term 4)
+//! ```
+//!
+//! with every σ² replaced by the extrema-variance bound
+//! σ² ≤ (max−μ)(μ−min) (Theorem 1), so the whole computation needs only a
+//! single max/min/mean pass per row: O(K) per row of A, O(KN) once for B.
+
+use super::{Threshold, ThresholdContext};
+use crate::calibrate::EmaxModel;
+use crate::matrix::{Matrix, RowStats};
+
+/// Reusable per-B summary: Σ_k |μ_Bk|, Σ_k μ_Bk², Σ_k σ_Bk² (extrema
+/// bound), plus N. Serving workloads verify many A's against one weight
+/// matrix B, so this is computed once and shared (see
+/// [`VabftThreshold::prepare_b`]).
+#[derive(Debug, Clone, Copy)]
+pub struct BSummary {
+    pub n: usize,
+    pub k: usize,
+    pub sum_abs_mu: f64,
+    pub sum_mu_sq: f64,
+    pub sum_sigma_sq: f64,
+}
+
+impl BSummary {
+    /// One pass over B's rows.
+    pub fn of(b: &Matrix) -> BSummary {
+        let (k, n) = (b.rows(), b.cols());
+        let mut sum_abs_mu = 0.0;
+        let mut sum_mu_sq = 0.0;
+        let mut sum_sigma_sq = 0.0;
+        for r in 0..k {
+            let s = b.row_stats_fast(r);
+            sum_abs_mu += s.mean.abs();
+            sum_mu_sq += s.mean * s.mean;
+            sum_sigma_sq += s.extrema_var_bound();
+        }
+        BSummary { n, k, sum_abs_mu, sum_mu_sq, sum_sigma_sq }
+    }
+}
+
+/// The V-ABFT threshold algorithm.
+#[derive(Debug, Clone)]
+pub struct VabftThreshold {
+    /// Confidence multiplier c_σ (paper default 2.5 ≈ 99% Gaussian
+    /// coverage; raise for lower FPR tolerance).
+    pub c_sigma: f64,
+    /// Optional fixed e_max law (None = derive from the context).
+    pub emax: Option<EmaxModel>,
+}
+
+impl Default for VabftThreshold {
+    fn default() -> Self {
+        VabftThreshold { c_sigma: 2.5, emax: None }
+    }
+}
+
+impl VabftThreshold {
+    pub fn with_c_sigma(c_sigma: f64) -> VabftThreshold {
+        VabftThreshold { c_sigma, emax: None }
+    }
+
+    pub fn with_emax(emax: EmaxModel) -> VabftThreshold {
+        VabftThreshold { c_sigma: 2.5, emax: Some(emax) }
+    }
+
+    /// Precompute the B-side summary (one pass over B).
+    pub fn prepare_b(&self, b: &Matrix) -> BSummary {
+        BSummary::of(b)
+    }
+
+    /// Algorithm 1 for a single row of A, given its stats and the B
+    /// summary. `emax` must already be evaluated at the reduction length.
+    #[inline]
+    pub fn row_threshold(&self, a_stats: &RowStats, bsum: &BSummary, emax: f64) -> f64 {
+        let n = bsum.n as f64;
+        let mu_a = a_stats.mean;
+        let sigma_a = a_stats.extrema_std_bound();
+
+        // line 7: deterministic bias term
+        let t_det = n * mu_a.abs() * bsum.sum_abs_mu;
+        // line 8: variance of terms 2 and 3 (independent → variances add)
+        let t_var23 = self.c_sigma
+            * (n * mu_a * mu_a * bsum.sum_sigma_sq
+                + n * n * sigma_a * sigma_a * bsum.sum_mu_sq)
+                .sqrt();
+        // line 9: interaction term (second-order fluctuation)
+        let t_var4 = self.c_sigma * n.sqrt() * sigma_a * bsum.sum_sigma_sq.sqrt();
+
+        emax * (t_det + t_var23 + t_var4)
+    }
+
+    /// The e_max used for a given context and reduction length.
+    pub fn effective_emax(&self, ctx: &ThresholdContext, n: usize) -> f64 {
+        match self.emax {
+            Some(m) => m.eval(n),
+            None => ctx.emax(n),
+        }
+    }
+}
+
+impl Threshold for VabftThreshold {
+    fn name(&self) -> &'static str {
+        "V-ABFT"
+    }
+
+    fn thresholds(&self, a: &Matrix, b: &Matrix, ctx: &ThresholdContext) -> Vec<f64> {
+        assert_eq!(a.cols(), b.rows());
+        let bsum = BSummary::of(b);
+        // Reduction length governing e_max: the longer of the two
+        // verification paths' accumulations (row sums over N, dot over K).
+        let red_len = b.cols().max(a.cols());
+        let emax = self.effective_emax(ctx, red_len);
+        (0..a.rows())
+            .map(|m| self.row_threshold(&a.row_stats_fast(m), &bsum, emax))
+            .collect()
+    }
+
+    fn thresholds_prepared(
+        &self,
+        a: &Matrix,
+        prepared: &super::PreparedBStats,
+        ctx: &ThresholdContext,
+    ) -> Vec<f64> {
+        let bsum = &prepared.bsum;
+        let red_len = bsum.n.max(a.cols());
+        let emax = self.effective_emax(ctx, red_len);
+        (0..a.rows())
+            .map(|m| self.row_threshold(&a.row_stats_fast(m), bsum, emax))
+            .collect()
+    }
+
+    fn complexity(&self) -> &'static str {
+        "O(n) — single max/min/mean pass"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::Precision;
+    use crate::gemm::AccumModel;
+    use crate::rng::{Distribution, Xoshiro256pp};
+
+    fn ctx_fp32() -> ThresholdContext {
+        ThresholdContext::offline(AccumModel::gpu_highprec(Precision::F32))
+    }
+
+    #[test]
+    fn zero_matrices_give_zero_threshold() {
+        let a = Matrix::zeros(4, 8);
+        let b = Matrix::zeros(8, 8);
+        let t = VabftThreshold::default().thresholds(&a, &b, &ctx_fp32());
+        assert!(t.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn constant_matrices_have_pure_deterministic_term() {
+        // Constant rows ⇒ σ = 0 everywhere ⇒ T = e_max · N·|μ_A|·Σ|μ_B|.
+        let a = Matrix::from_fn(2, 16, |_, _| 2.0);
+        let b = Matrix::from_fn(16, 32, |_, _| 3.0);
+        let ctx = ctx_fp32();
+        let th = VabftThreshold::default().thresholds(&a, &b, &ctx);
+        let emax = ctx.emax(32);
+        let expect = emax * (32.0 * 2.0 * (16.0 * 3.0));
+        for &t in &th {
+            assert!((t - expect).abs() < 1e-12 * expect);
+        }
+    }
+
+    #[test]
+    fn zero_mean_data_is_dominated_by_interaction_term() {
+        // For zero-mean matrices Term 4 dominates (paper §3.3 "physical
+        // interpretation"). Check T scales ~√N when means are ~0.
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let d = Distribution::Normal { mean: 0.0, std: 1.0 };
+        let k = 64;
+        let a = Matrix::sample(1, k, &d, &mut rng);
+        let t = VabftThreshold::with_emax(EmaxModel::Constant(1e-6));
+        let bs_small = BSummary::of(&Matrix::sample(k, 64, &d, &mut rng));
+        let bs_big = BSummary::of(&Matrix::sample(k, 4096, &d, &mut rng));
+        let astats = a.row_stats(0);
+        let t_small = t.row_threshold(&astats, &bs_small, 1e-6);
+        let t_big = t.row_threshold(&astats, &bs_big, 1e-6);
+        // N grew 64× ⇒ √N-dominated growth would be 8×; the N·μ² terms are
+        // tiny since sample means are O(1/√N). Allow [4, 24].
+        let ratio = t_big / t_small;
+        assert!((4.0..24.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn prepared_b_path_matches_one_shot_path() {
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let d = Distribution::normal_1_1();
+        let a = Matrix::sample(5, 32, &d, &mut rng);
+        let b = Matrix::sample(32, 48, &d, &mut rng);
+        let algo = VabftThreshold::default();
+        let ctx = ctx_fp32();
+        let one_shot = algo.thresholds(&a, &b, &ctx);
+        let bsum = algo.prepare_b(&b);
+        let emax = algo.effective_emax(&ctx, 48);
+        for i in 0..5 {
+            // row_stats (two-pass) vs row_stats_fast (4-lane) sum in
+            // different orders; the means agree to roundoff.
+            let t = algo.row_threshold(&a.row_stats(i), &bsum, emax);
+            assert!(
+                (t - one_shot[i]).abs() <= 1e-12 * one_shot[i].abs(),
+                "{t} vs {}",
+                one_shot[i]
+            );
+        }
+    }
+
+    #[test]
+    fn threshold_scales_linearly_with_emax() {
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let d = Distribution::uniform_pm1();
+        let a = Matrix::sample(3, 16, &d, &mut rng);
+        let b = Matrix::sample(16, 16, &d, &mut rng);
+        let ctx = ctx_fp32();
+        let t1 = VabftThreshold::with_emax(EmaxModel::Constant(1e-7))
+            .thresholds(&a, &b, &ctx);
+        let t2 = VabftThreshold::with_emax(EmaxModel::Constant(2e-7))
+            .thresholds(&a, &b, &ctx);
+        for (x, y) in t1.iter().zip(&t2) {
+            assert!((y / x - 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn c_sigma_only_scales_random_terms() {
+        let a = Matrix::from_fn(1, 8, |_, j| if j % 2 == 0 { 1.0 } else { -1.0 });
+        let b = Matrix::from_fn(8, 8, |i, j| ((i + j) % 3) as f64 - 1.0);
+        let ctx = ctx_fp32();
+        let lo = VabftThreshold::with_c_sigma(1.0).thresholds(&a, &b, &ctx)[0];
+        let hi = VabftThreshold::with_c_sigma(2.0).thresholds(&a, &b, &ctx)[0];
+        // det term is ~0 here (zero-mean A row), so doubling c_σ ≈ doubles T.
+        assert!((hi / lo - 2.0).abs() < 0.05, "{hi} vs {lo}");
+    }
+}

@@ -1,0 +1,95 @@
+//! Synthetic training corpus for the end-to-end driver.
+//!
+//! Byte-level sequences drawn from a randomized affine-recurrence language:
+//! within a sequence, `x_{t+1} = (a·x_t + b) mod V` with per-sequence
+//! (a, b) drawn from a small dictionary, plus occasional uniform noise
+//! tokens. A transformer learns this quickly, giving a visibly decreasing
+//! loss in a few hundred steps — exactly what the training-supervisor
+//! experiment needs to show fault-induced loss spikes vs. protected runs.
+
+use crate::rng::{Rng, Xoshiro256pp};
+
+/// Deterministic synthetic corpus generator.
+pub struct SyntheticCorpus {
+    vocab: usize,
+    rng: Xoshiro256pp,
+    /// Dictionary of (a, b) recurrence parameters.
+    rules: Vec<(u64, u64)>,
+    noise: f64,
+}
+
+impl SyntheticCorpus {
+    pub fn new(vocab: usize, seed: u64) -> SyntheticCorpus {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let rules = (0..4)
+            .map(|_| {
+                // odd multipliers are invertible mod 2^k vocab sizes
+                (rng.uniform_u64(vocab as u64 / 2) * 2 + 1, rng.uniform_u64(vocab as u64))
+            })
+            .collect();
+        SyntheticCorpus { vocab, rng, rules, noise: 0.02 }
+    }
+
+    /// One batch of token sequences, shape B×(S+1) flattened row-major
+    /// (the +1 column provides next-token targets).
+    pub fn batch(&mut self, b: usize, s_plus_1: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(b * s_plus_1);
+        for _ in 0..b {
+            let (a, c) = self.rules[self.rng.uniform_u64(self.rules.len() as u64) as usize];
+            let mut x = self.rng.uniform_u64(self.vocab as u64);
+            for _ in 0..s_plus_1 {
+                out.push(x as i32);
+                x = if self.rng.next_f64() < self.noise {
+                    self.rng.uniform_u64(self.vocab as u64)
+                } else {
+                    (a.wrapping_mul(x).wrapping_add(c)) % self.vocab as u64
+                };
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shape_and_range() {
+        let mut c = SyntheticCorpus::new(256, 7);
+        let b = c.batch(4, 65);
+        assert_eq!(b.len(), 4 * 65);
+        assert!(b.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn sequences_are_mostly_predictable() {
+        // Each sequence follows one affine rule except noise positions:
+        // verify ≥90% of transitions match one of the dictionary rules.
+        let mut c = SyntheticCorpus::new(256, 8);
+        let rules = c.rules.clone();
+        let s = 65;
+        let batch = c.batch(8, s);
+        let mut hits = 0;
+        let mut total = 0;
+        for seq in batch.chunks(s) {
+            for w in seq.windows(2) {
+                total += 1;
+                if rules
+                    .iter()
+                    .any(|&(a, b)| (a.wrapping_mul(w[0] as u64).wrapping_add(b)) % 256 == w[1] as u64)
+                {
+                    hits += 1;
+                }
+            }
+        }
+        assert!(hits as f64 / total as f64 > 0.9, "{hits}/{total}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = SyntheticCorpus::new(128, 1);
+        let mut b = SyntheticCorpus::new(128, 1);
+        assert_eq!(a.batch(2, 17), b.batch(2, 17));
+    }
+}

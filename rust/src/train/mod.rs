@@ -1,0 +1,266 @@
+//! Training supervisor: the end-to-end validation driver.
+//!
+//! Runs the AOT-compiled L2 train step (a GPT-style transformer whose
+//! matmuls route through the L1 fused ABFT-GEMM Pallas kernel) from Rust,
+//! supervising every step's verification signal:
+//!
+//! * the artifact returns, besides the updated parameters and the loss,
+//!   the maximum verification ratio `max_i |E_i| / T_i` across every
+//!   protected GEMM in the model — fused-kernel (online) ABFT, computed on
+//!   the FP32 accumulator before any quantization (paper §3.6);
+//! * a ratio > 1 means some row tripped its V-ABFT threshold: the
+//!   supervisor discards the step's updates and re-executes (a transient
+//!   SEU does not repeat), keeping the loss curve clean;
+//! * faults are injected through a dedicated kernel input (layer/row/col/
+//!   delta), emulating a compute SEU inside a designated GEMM.
+//!
+//! The artifact contract (see `python/compile/aot.py`):
+//! inputs  `[p_0 … p_{P-1}, tokens i32[B,S+1], lr f32[], fault f32[4]]`,
+//! outputs `[p'_0 … p'_{P-1}, loss f32[], ratio f32[]]`,
+//! manifest metadata `n_params=P`, `param<i>=<dims>`, `batch=B,S+1`.
+
+mod data;
+pub use data::SyntheticCorpus;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::rng::{Rng, Xoshiro256pp};
+use crate::runtime::{literal_f32, literal_i32, ArtifactEntry, PjrtRuntime};
+
+/// Supervisor configuration.
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub artifact: String,
+    pub lr: f32,
+    pub seed: u64,
+    /// Discard + re-execute steps whose verification ratio exceeds 1.
+    pub rollback_on_detection: bool,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            artifact: "train_step".to_string(),
+            lr: 3e-2,
+            seed: 42,
+            rollback_on_detection: true,
+        }
+    }
+}
+
+/// A fault to inject into one protected GEMM of the step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepFault {
+    /// Which protected GEMM (kernel call index) to corrupt.
+    pub gemm_index: usize,
+    pub row: usize,
+    pub col: usize,
+    /// Additive corruption of the FP32 accumulator element.
+    pub delta: f32,
+}
+
+/// Outcome of one supervised step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepOutcome {
+    pub loss: f32,
+    /// max over protected GEMMs and rows of |E| / T.
+    pub ratio: f32,
+    /// Whether the parameter update was applied.
+    pub applied: bool,
+    /// Whether the step was re-executed after a detection.
+    pub retried: bool,
+}
+
+/// The training supervisor.
+pub struct Trainer<'rt> {
+    rt: &'rt PjrtRuntime,
+    cfg: TrainerConfig,
+    entry: ArtifactEntry,
+    params: Vec<Vec<f32>>,
+    shapes: Vec<Vec<i64>>,
+    /// tokens shape [B, S+1]
+    batch_shape: Vec<i64>,
+    pub steps_run: usize,
+    pub detections: usize,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Set up from the runtime's manifest and initialize parameters.
+    pub fn new(rt: &'rt PjrtRuntime, cfg: TrainerConfig) -> Result<Trainer<'rt>> {
+        let entry = rt
+            .manifest()
+            .get(&cfg.artifact)
+            .ok_or_else(|| anyhow!("artifact '{}' not in manifest", cfg.artifact))?
+            .clone();
+        anyhow::ensure!(rt.has(&cfg.artifact), "artifact '{}' not compiled", cfg.artifact);
+        let n_params: usize = entry
+            .meta_parse("n_params")
+            .ok_or_else(|| anyhow!("manifest missing n_params"))?;
+        let mut shapes = Vec::with_capacity(n_params);
+        for i in 0..n_params {
+            let dims = entry
+                .meta_dims(&format!("param{i}"))
+                .ok_or_else(|| anyhow!("manifest missing param{i}"))?;
+            shapes.push(dims.into_iter().map(|d| d as i64).collect::<Vec<i64>>());
+        }
+        let batch_shape: Vec<i64> = entry
+            .meta_dims("batch")
+            .ok_or_else(|| anyhow!("manifest missing batch"))?
+            .into_iter()
+            .map(|d| d as i64)
+            .collect();
+
+        let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+        let params = shapes
+            .iter()
+            .map(|dims| init_tensor(dims, &mut rng))
+            .collect();
+        Ok(Trainer {
+            rt,
+            cfg,
+            entry,
+            params,
+            shapes,
+            batch_shape,
+            steps_run: 0,
+            detections: 0,
+        })
+    }
+
+    /// Batch size and sequence length expected by the artifact
+    /// (tokens shape is [B, S+1]: inputs plus next-token targets).
+    pub fn batch_dims(&self) -> (usize, usize) {
+        (self.batch_shape[0] as usize, self.batch_shape[1] as usize - 1)
+    }
+
+    pub fn entry(&self) -> &ArtifactEntry {
+        &self.entry
+    }
+
+    pub fn params(&self) -> &[Vec<f32>] {
+        &self.params
+    }
+
+    pub fn param_shapes(&self) -> &[Vec<i64>] {
+        &self.shapes
+    }
+
+    /// Corrupt one stored parameter element (memory-SEU experiment hook).
+    pub fn flip_param_bit(&mut self, tensor: usize, index: usize, bit: u32) {
+        let v = self.params[tensor][index];
+        self.params[tensor][index] = f32::from_bits(v.to_bits() ^ (1 << bit));
+    }
+
+    /// Run one supervised step on a token batch (`tokens.len()` must be
+    /// B·(S+1)).
+    pub fn step(&mut self, tokens: &[i32], fault: Option<StepFault>) -> Result<StepOutcome> {
+        let (outs, loss, ratio) = self.execute(tokens, fault)?;
+        self.steps_run += 1;
+        let detected = ratio > 1.0 || !ratio.is_finite();
+        if !detected {
+            self.apply_updates(outs);
+            return Ok(StepOutcome { loss, ratio, applied: true, retried: false });
+        }
+        self.detections += 1;
+        if !self.cfg.rollback_on_detection {
+            // Unprotected mode: apply the corrupted update anyway (the
+            // "what would have happened" baseline for the experiments).
+            self.apply_updates(outs);
+            return Ok(StepOutcome { loss, ratio, applied: true, retried: false });
+        }
+        // Detection: discard, re-execute without the transient fault.
+        let (outs2, loss2, ratio2) = self.execute(tokens, None)?;
+        anyhow::ensure!(
+            ratio2 <= 1.0,
+            "verification still failing after re-execution (ratio {ratio2})"
+        );
+        self.apply_updates(outs2);
+        Ok(StepOutcome { loss: loss2, ratio, applied: true, retried: true })
+    }
+
+    fn execute(
+        &self,
+        tokens: &[i32],
+        fault: Option<StepFault>,
+    ) -> Result<(Vec<Vec<f32>>, f32, f32)> {
+        let mut inputs: Vec<(&[f32], &[i64])> = Vec::with_capacity(self.params.len() + 3);
+        for (p, s) in self.params.iter().zip(&self.shapes) {
+            inputs.push((p.as_slice(), s.as_slice()));
+        }
+        let fault_vec: [f32; 4] = match fault {
+            None => [-1.0, 0.0, 0.0, 0.0],
+            Some(f) => [f.gemm_index as f32, f.row as f32, f.col as f32, f.delta],
+        };
+        let lr = [self.cfg.lr];
+
+        // Mixed dtypes: build literals directly.
+        let mut literals = Vec::with_capacity(inputs.len() + 3);
+        for (data, dims) in &inputs {
+            literals.push(literal_f32(data, dims)?);
+        }
+        literals.push(literal_i32(tokens, &self.batch_shape)?);
+        literals.push(literal_f32(&lr, &[])?);
+        literals.push(literal_f32(&fault_vec, &[4])?);
+
+        let outs = self
+            .rt
+            .execute(&self.cfg.artifact, &literals)
+            .context("train step execution")?;
+        anyhow::ensure!(
+            outs.len() == self.params.len() + 2,
+            "expected {} outputs, got {}",
+            self.params.len() + 2,
+            outs.len()
+        );
+        let mut new_params = Vec::with_capacity(self.params.len());
+        for lit in outs.iter().take(self.params.len()) {
+            new_params.push(lit.to_vec::<f32>().map_err(|e| anyhow!("param out: {e:?}"))?);
+        }
+        let loss: f32 = outs[self.params.len()]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss out: {e:?}"))?[0];
+        let ratio: f32 = outs[self.params.len() + 1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("ratio out: {e:?}"))?[0];
+        Ok((new_params, loss, ratio))
+    }
+
+    fn apply_updates(&mut self, new_params: Vec<Vec<f32>>) {
+        self.params = new_params;
+    }
+}
+
+/// Scaled-normal initialization: N(0, 1/√fan_in) for matrices, N(0, 0.02)
+/// for embeddings/vectors.
+fn init_tensor(dims: &[i64], rng: &mut impl Rng) -> Vec<f32> {
+    let n: i64 = dims.iter().product();
+    let std = if dims.len() >= 2 {
+        1.0 / (dims[0] as f64).sqrt()
+    } else {
+        0.02
+    };
+    (0..n).map(|_| (rng.standard_normal() * std) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_tensor_scales_with_fan_in() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let t = init_tensor(&[400, 100], &mut rng);
+        assert_eq!(t.len(), 40_000);
+        let var: f64 =
+            t.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / t.len() as f64;
+        assert!((var - 1.0 / 400.0).abs() < 2e-4, "var {var}");
+    }
+
+    #[test]
+    fn fault_encoding() {
+        let f = StepFault { gemm_index: 2, row: 3, col: 5, delta: 8.0 };
+        // mirrors the encoding in execute()
+        let v = [f.gemm_index as f32, f.row as f32, f.col as f32, f.delta];
+        assert_eq!(v, [2.0, 3.0, 5.0, 8.0]);
+    }
+}

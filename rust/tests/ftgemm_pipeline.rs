@@ -1,0 +1,207 @@
+//! Cross-module integration: encode → modelled GEMM → threshold → verify
+//! → localize → correct, across precisions, distributions and policies.
+
+use vabft::prelude::*;
+use vabft::gemm::ReduceStrategy;
+use vabft::threshold::{AabftThreshold, ThresholdContext};
+
+fn operands(seed: u64, m: usize, k: usize, n: usize, d: &Distribution) -> (Matrix, Matrix) {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (Matrix::sample(m, k, d, &mut rng), Matrix::sample(k, n, d, &mut rng))
+}
+
+fn all_models() -> Vec<AccumModel> {
+    vec![
+        AccumModel::cpu(Precision::F64),
+        AccumModel::cpu(Precision::F32),
+        AccumModel::gpu_highprec(Precision::F64),
+        AccumModel::gpu_highprec(Precision::F32),
+        AccumModel::wide(Precision::Bf16),
+        AccumModel::wide(Precision::F16),
+        AccumModel::fp8(Precision::F8E4M3),
+    ]
+}
+
+#[test]
+fn clean_multiplies_verify_clean_across_models_and_distributions() {
+    let dists = [
+        Distribution::near_zero_normal(),
+        Distribution::normal_1_1(),
+        Distribution::uniform_pm1(),
+        Distribution::truncated_normal(),
+    ];
+    for model in all_models() {
+        for (di, d) in dists.iter().enumerate() {
+            for policy in [VerifyPolicy::default(), VerifyPolicy::offline()] {
+                let ft = FtGemm::new(
+                    GemmEngine::new(model),
+                    Box::new(VabftThreshold::default()),
+                    policy,
+                );
+                let (a, b) = operands(40 + di as u64, 24, 48, 32, d);
+                let out = ft.multiply(&a, &b).unwrap();
+                assert_eq!(
+                    out.report.verdict,
+                    Verdict::Clean,
+                    "{:?} {} online={} — {:?}",
+                    model,
+                    d.label(),
+                    policy.online,
+                    out.report.detections.first()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn exponent_flips_recovered_end_to_end_bf16() {
+    // The paper's core story at system level: BF16 GEMM + online V-ABFT
+    // catches exponent-bit flips and repairs them in place.
+    let model = AccumModel::wide(Precision::Bf16);
+    let ft = FtGemm::new(
+        GemmEngine::new(model),
+        Box::new(VabftThreshold::default()),
+        VerifyPolicy::default(),
+    );
+    let d = Distribution::normal_1_1();
+    let mut recovered = 0;
+    let trials = 40;
+    for t in 0..trials {
+        let (a, b) = operands(100 + t, 16, 64, 24, &d);
+        let clean = ft.multiply(&a, &b).unwrap().c;
+        let mut rng = Xoshiro256pp::seed_from_u64(900 + t);
+        let site = InjectionSite {
+            row: rng.uniform_u64(16) as usize,
+            col: rng.uniform_u64(24) as usize,
+        };
+        // exponent bits 10..14 on the FP32 accumulator view
+        let bit = 23 + rng.uniform_u64(5) as u32; // f32 exponent bits 23..27
+        let out = ft
+            .multiply_with_injection(&a, &b, |o| {
+                let flip = BitFlip::new(bit, Precision::F32);
+                let old = o.acc.get(site.row, site.col);
+                let (new, _) = flip.apply(old);
+                o.acc.set(site.row, site.col, new);
+                o.c.set(site.row, site.col, Precision::Bf16.quantize(new));
+            })
+            .unwrap();
+        assert_ne!(out.report.verdict, Verdict::Clean, "trial {t}: missed");
+        if out.c.max_abs_diff(&clean) < 1e-2 {
+            recovered += 1;
+        }
+    }
+    assert!(
+        recovered >= trials - 2,
+        "only {recovered}/{trials} recovered to the clean product"
+    );
+}
+
+#[test]
+fn online_detects_faults_far_below_offline_threshold() {
+    // §3.6's 1000× granularity: a fault of magnitude ~100·u_f32·|C| is
+    // invisible to offline BF16 verification but caught online.
+    let model = AccumModel::wide(Precision::Bf16);
+    let online = FtGemm::new(
+        GemmEngine::new(model),
+        Box::new(VabftThreshold::default()),
+        VerifyPolicy::detect_only(true),
+    );
+    let offline = FtGemm::new(
+        GemmEngine::new(model),
+        Box::new(VabftThreshold::default()),
+        VerifyPolicy::detect_only(false),
+    );
+    let d = Distribution::uniform_01();
+    let (a, b) = operands(7, 8, 128, 64, &d);
+    // fault magnitude: tiny vs the BF16-scale offline threshold
+    // (≈ 2·u_bf16·|checksum| ≈ 10), clear vs FP32 verification noise
+    // (online threshold ≈ 1e-3).
+    let delta = 0.05;
+    let mut caught_online = 0;
+    let mut caught_offline = 0;
+    for t in 0..10 {
+        let site = InjectionSite { row: t % 8, col: (3 * t) % 64 };
+        let inject = |o: &mut vabft::gemm::GemmOutput| {
+            let v = o.acc.get(site.row, site.col);
+            o.acc.set(site.row, site.col, v + delta);
+            o.c.set(site.row, site.col, Precision::Bf16.quantize(v + delta));
+        };
+        if online.multiply_with_injection(&a, &b, inject).unwrap().report.verdict
+            != Verdict::Clean
+        {
+            caught_online += 1;
+        }
+        let inject2 = |o: &mut vabft::gemm::GemmOutput| {
+            let v = o.acc.get(site.row, site.col);
+            o.acc.set(site.row, site.col, v + delta);
+            o.c.set(site.row, site.col, Precision::Bf16.quantize(v + delta));
+        };
+        if offline.multiply_with_injection(&a, &b, inject2).unwrap().report.verdict
+            != Verdict::Clean
+        {
+            caught_offline += 1;
+        }
+    }
+    assert!(caught_online >= 8, "online caught only {caught_online}/10");
+    assert!(
+        caught_offline <= 2,
+        "offline should miss sub-BF16 faults, caught {caught_offline}/10"
+    );
+}
+
+#[test]
+fn aabft_baseline_also_detects_but_with_larger_thresholds() {
+    let model = AccumModel::gpu_highprec(Precision::F32);
+    let d = Distribution::uniform_pm1();
+    let (a, b) = operands(8, 16, 128, 128, &d);
+    let ctx = ThresholdContext::offline(model);
+    let v = VabftThreshold::default().thresholds(&a, &b, &ctx);
+    let aa = AabftThreshold::paper_repro().thresholds(&a, &b, &ctx);
+    // A-ABFT threshold strictly larger (the paper's Table 5 gap; the gap
+    // here is smaller than the paper's because the default context uses
+    // the conservative rule-based e_max — the T5 bench uses the Table 7
+    // calibrated values and reproduces the full 321×-vs-13× spread).
+    for i in 0..16 {
+        assert!(aa[i] > v[i] * 2.0, "row {i}: A {} vs V {}", aa[i], v[i]);
+    }
+    // but both catch a 1.0-magnitude upset
+    let ft = FtGemm::new(
+        GemmEngine::new(model),
+        Box::new(AabftThreshold::paper_repro()),
+        VerifyPolicy::default(),
+    );
+    let out = ft
+        .multiply_with_injection(&a, &b, |o| {
+            let x = o.acc.get(2, 2);
+            o.acc.set(2, 2, x + 1.0);
+            o.c.set(2, 2, (x + 1.0_f64) as f32 as f64);
+        })
+        .unwrap();
+    assert_ne!(out.report.verdict, Verdict::Clean);
+}
+
+#[test]
+fn strategy_changes_error_but_not_results_materially() {
+    // Ablation: sequential vs pairwise vs fma give the same product to
+    // within the model's error budget, but different verification noise.
+    let d = Distribution::uniform_pm1();
+    let (a, b) = operands(9, 8, 256, 64, &d);
+    let mut cs = Vec::new();
+    for strategy in [
+        ReduceStrategy::Sequential,
+        ReduceStrategy::Fma,
+        ReduceStrategy::Pairwise,
+    ] {
+        let model = AccumModel {
+            input: Precision::F32,
+            work: Precision::F32,
+            strategy,
+            out: Precision::F32,
+        };
+        cs.push(GemmEngine::new(model).matmul(&a, &b).c);
+    }
+    for pair in cs.windows(2) {
+        assert!(pair[0].max_abs_diff(&pair[1]) < 1e-3);
+    }
+}

@@ -1,0 +1,212 @@
+//! Integration tests over the AOT artifacts: the python-compiled L1/L2
+//! HLO modules executed through the Rust PJRT runtime.
+//!
+//! These tests require `make artifacts` to have run; they skip (pass
+//! vacuously, with a note on stderr) when the artifact directory is
+//! missing so `cargo test` stays green on a fresh checkout.
+
+use vabft::rng::{Rng, Xoshiro256pp};
+use vabft::runtime::{artifacts_dir, literal_f32, literal_i32, PjrtRuntime};
+use vabft::train::{StepFault, SyntheticCorpus, Trainer, TrainerConfig};
+
+fn runtime_or_skip() -> Option<PjrtRuntime> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!(
+            "skipping: no artifacts at {} (run `make artifacts`)",
+            dir.display()
+        );
+        return None;
+    }
+    Some(PjrtRuntime::from_artifacts(&dir).expect("artifacts load"))
+}
+
+fn rand_f32(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..n).map(|_| (rng.standard_normal() as f32) * scale).collect()
+}
+
+#[test]
+fn ftgemm_artifact_clean_run_verifies() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let e = rt.manifest().get("ftgemm_f32").expect("manifest entry").clone();
+    let (m, k, n) = (
+        e.meta_parse::<usize>("m").unwrap(),
+        e.meta_parse::<usize>("k").unwrap(),
+        e.meta_parse::<usize>("n").unwrap(),
+    );
+    let a = rand_f32(m * k, 1, 1.0);
+    let b = rand_f32(k * n, 2, 1.0);
+    let fault = [-1.0f32, -1.0, 0.0, 0.0];
+    let outs = rt
+        .execute_f32(
+            "ftgemm_f32",
+            &[
+                (&a, &[m as i64, k as i64]),
+                (&b, &[k as i64, n as i64]),
+                (&fault, &[4]),
+            ],
+        )
+        .expect("execute");
+    // outputs: c [m,n], ratio [m], d1 [m], loc [m]
+    assert_eq!(outs[0].len(), m * n);
+    assert_eq!(outs[1].len(), m);
+    let max_ratio = outs[1].iter().cloned().fold(0.0f32, f32::max);
+    assert!(max_ratio < 1.0, "clean run flagged: max ratio {max_ratio}");
+    // numerics: spot check C[0][0] against an f64 dot
+    let c00: f64 = (0..k).map(|kk| a[kk] as f64 * b[kk * n] as f64).sum();
+    assert!(
+        (outs[0][0] as f64 - c00).abs() < 1e-3,
+        "C[0][0] {} vs {}",
+        outs[0][0],
+        c00
+    );
+}
+
+#[test]
+fn ftgemm_artifact_detects_and_localizes_fault() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let e = rt.manifest().get("ftgemm_f32").unwrap().clone();
+    let (m, k, n) = (
+        e.meta_parse::<usize>("m").unwrap(),
+        e.meta_parse::<usize>("k").unwrap(),
+        e.meta_parse::<usize>("n").unwrap(),
+    );
+    let a = rand_f32(m * k, 3, 1.0);
+    let b = rand_f32(k * n, 4, 1.0);
+    let (frow, fcol, fdelta) = (7usize, 11usize, 25.0f32);
+    let fault = [frow as f32, fcol as f32, fdelta, 1.0];
+    let outs = rt
+        .execute_f32(
+            "ftgemm_f32",
+            &[
+                (&a, &[m as i64, k as i64]),
+                (&b, &[k as i64, n as i64]),
+                (&fault, &[4]),
+            ],
+        )
+        .unwrap();
+    let ratio = &outs[1];
+    let d1 = &outs[2];
+    let loc = &outs[3];
+    assert!(ratio[frow] > 1.0, "fault not detected: ratio {}", ratio[frow]);
+    assert!((d1[frow] - fdelta).abs() < 0.1, "d1 {} vs {}", d1[frow], fdelta);
+    assert_eq!(loc[frow] as i64, fcol as i64, "localization failed");
+    // other rows stay clean
+    for (i, &r) in ratio.iter().enumerate() {
+        if i != frow {
+            assert!(r < 1.0, "row {i} falsely flagged ({r})");
+        }
+    }
+}
+
+#[test]
+fn ftgemm_correct_artifact_repairs_in_kernel() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let e = rt.manifest().get("ftgemm_f32_correct").unwrap().clone();
+    let (m, k, n) = (
+        e.meta_parse::<usize>("m").unwrap(),
+        e.meta_parse::<usize>("k").unwrap(),
+        e.meta_parse::<usize>("n").unwrap(),
+    );
+    let a = rand_f32(m * k, 5, 1.0);
+    let b = rand_f32(k * n, 6, 1.0);
+    let clean_fault = [-1.0f32, -1.0, 0.0, 0.0];
+    let dims: [&[i64]; 3] = [&[m as i64, k as i64], &[k as i64, n as i64], &[4]];
+    let clean = rt
+        .execute_f32(
+            "ftgemm_f32_correct",
+            &[(&a, dims[0]), (&b, dims[1]), (&clean_fault, dims[2])],
+        )
+        .unwrap();
+    let fault = [3.0f32, 9.0, -40.0, 1.0];
+    let fixed = rt
+        .execute_f32(
+            "ftgemm_f32_correct",
+            &[(&a, dims[0]), (&b, dims[1]), (&fault, dims[2])],
+        )
+        .unwrap();
+    // In-kernel correction: output C matches the clean run everywhere.
+    let mut worst = 0.0f32;
+    for (x, y) in clean[0].iter().zip(&fixed[0]) {
+        worst = worst.max((x - y).abs());
+    }
+    assert!(worst < 1e-2, "corrected output differs by {worst}");
+    // and the fault was seen (ratio > 1 for row 3)
+    assert!(fixed[1][3] > 1.0);
+}
+
+#[test]
+fn train_step_artifact_loss_decreases_and_detects_faults() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = TrainerConfig::default();
+    let mut trainer = Trainer::new(&rt, cfg).expect("trainer setup");
+    let (b, s) = trainer.batch_dims();
+    let mut corpus = SyntheticCorpus::new(256, 9);
+
+    // a few clean steps: loss must drop from the ~ln(256)=5.55 start
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..8 {
+        let toks = corpus.batch(b, s + 1);
+        let out = trainer.step(&toks, None).expect("step");
+        assert!(out.ratio < 1.0, "clean step flagged ({})", out.ratio);
+        first.get_or_insert(out.loss);
+        last = out.loss;
+    }
+    assert!(
+        last < first.unwrap(),
+        "loss should decrease: {} -> {last}",
+        first.unwrap()
+    );
+
+    // a faulted step must be detected and retried
+    let toks = corpus.batch(b, s + 1);
+    let out = trainer
+        .step(
+            &toks,
+            Some(StepFault { gemm_index: 2, row: 17, col: 3, delta: 300.0 }),
+        )
+        .expect("faulted step");
+    assert!(out.ratio > 1.0, "fault missed (ratio {})", out.ratio);
+    assert!(out.retried, "supervisor should have re-executed");
+    assert!(out.applied);
+    assert_eq!(trainer.detections, 1);
+}
+
+#[test]
+fn model_fwd_artifact_runs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let e = rt.manifest().get("model_fwd").unwrap().clone();
+    let n_params: usize = e.meta_parse("n_params").unwrap();
+    let batch = e.meta_dims("batch").unwrap();
+    let vocab: usize = e.meta_parse("vocab").unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(11);
+
+    let mut literals = Vec::new();
+    for i in 0..n_params {
+        let dims: Vec<i64> = e
+            .meta_dims(&format!("param{i}"))
+            .unwrap()
+            .into_iter()
+            .map(|d| d as i64)
+            .collect();
+        let n: i64 = dims.iter().product();
+        let data: Vec<f32> = (0..n)
+            .map(|_| (rng.standard_normal() * 0.05) as f32)
+            .collect();
+        literals.push(literal_f32(&data, &dims).unwrap());
+    }
+    let toks: Vec<i32> = (0..batch[0] * batch[1])
+        .map(|_| rng.uniform_u64(vocab as u64) as i32)
+        .collect();
+    literals.push(literal_i32(&toks, &[batch[0] as i64, batch[1] as i64]).unwrap());
+    literals.push(literal_f32(&[-1.0, 0.0, 0.0, 0.0], &[4]).unwrap());
+
+    let outs = rt.execute("model_fwd", &literals).expect("model_fwd");
+    assert_eq!(outs.len(), 2); // logits, ratio
+    let logits = outs[0].to_vec::<f32>().unwrap();
+    assert_eq!(logits.len(), batch[0] * batch[1] * vocab);
+    let ratio = outs[1].to_vec::<f32>().unwrap()[0];
+    assert!(ratio < 1.0, "clean forward flagged ({ratio})");
+}
