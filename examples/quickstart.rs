@@ -7,7 +7,7 @@
 
 use vabft::prelude::*;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> vabft::error::Result<()> {
     // 1. Operands: a BF16 activation × weight multiply (the mixed-precision
     //    deep-learning setting the paper targets).
     let mut rng = Xoshiro256pp::seed_from_u64(2026);

@@ -7,6 +7,7 @@
 //! ```text
 //! cargo run --release --example serving -- [--requests N] [--workers W]
 //!     [--fault-rate 0.05] [--offline] [--pjrt]
+//!     [--threads T] [--mc M --kc K --nc N]   # per-worker engine config
 //! ```
 
 use std::sync::Arc;
@@ -17,7 +18,7 @@ use vabft::coordinator::{Coordinator, CoordinatorConfig, GemmRequest, InjectSpec
 use vabft::inject::InjectionSite;
 use vabft::prelude::*;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> vabft::error::Result<()> {
     let args = Args::parse();
     let requests = args.opt_or("requests", 200usize);
     let workers = args.opt_or("workers", 2usize);
@@ -35,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         model: AccumModel::wide(Precision::Bf16),
         policy: if online { VerifyPolicy::default() } else { VerifyPolicy::offline() },
         threshold: Arc::new(|| Box::new(VabftThreshold::default())),
+        parallelism: vabft::gemm::ParallelismConfig::from_args(&args),
     };
     let coord = Coordinator::start(cfg);
 
@@ -97,14 +99,14 @@ fn main() -> anyhow::Result<()> {
 
 /// Same serving story, but the GEMM + verification runs inside the
 /// AOT-compiled Pallas fused kernel, executed through PJRT.
-fn serve_pjrt(requests: usize, fault_rate: f64) -> anyhow::Result<()> {
+fn serve_pjrt(requests: usize, fault_rate: f64) -> vabft::error::Result<()> {
     use vabft::runtime::{artifacts_dir, PjrtRuntime};
 
     let rt = PjrtRuntime::from_artifacts(&artifacts_dir())?;
     let e = rt
         .manifest()
         .get("ftgemm_f32_correct")
-        .ok_or_else(|| anyhow::anyhow!("ftgemm_f32_correct not in manifest"))?
+        .ok_or_else(|| vabft::anyhow!("ftgemm_f32_correct not in manifest"))?
         .clone();
     let (m, k, n) = (
         e.meta_parse::<usize>("m").unwrap(),

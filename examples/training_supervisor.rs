@@ -22,7 +22,7 @@ use vabft::cli::Args;
 use vabft::runtime::{artifacts_dir, PjrtRuntime};
 use vabft::train::{StepFault, SyntheticCorpus, Trainer, TrainerConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> vabft::error::Result<()> {
     let args = Args::parse();
     let steps = args.opt_or("steps", 200usize);
     let fault_every = args.opt_or("fault-every", 10usize);
@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
     let rt = PjrtRuntime::from_artifacts(&artifacts_dir())?;
     println!("loaded artifacts on {}; training {steps} steps per run\n", rt.platform());
 
-    let run = |label: &str, inject: bool, rollback: bool| -> anyhow::Result<Vec<f32>> {
+    let run = |label: &str, inject: bool, rollback: bool| -> vabft::error::Result<Vec<f32>> {
         let cfg = TrainerConfig { rollback_on_detection: rollback, ..Default::default() };
         let mut trainer = Trainer::new(&rt, cfg)?;
         let (b, s) = trainer.batch_dims();

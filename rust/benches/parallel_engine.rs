@@ -1,0 +1,93 @@
+//! Tiled parallel engine vs the naive reference kernels: wall-clock at
+//! serving-relevant sizes, with the bitwise schedule-equality check run on
+//! every measured output (speed is worthless here if the schedule moved).
+//!
+//! Quick mode: 512³ FP32 (the acceptance shape — the 4-thread engine must
+//! beat the naive kernel). Full mode adds 1024³ and the FP64 path.
+//!
+//! ```text
+//! cargo bench --bench parallel_engine [-- --full]
+//! ```
+
+use std::time::Duration;
+
+use vabft::bench_harness::{time_once, BenchMode};
+use vabft::gemm::{kernels, tiled, ParallelismConfig, ReduceStrategy};
+use vabft::report::Table;
+use vabft::rng::{Rng, Xoshiro256pp};
+
+fn rand_f32(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..n).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect()
+}
+
+fn best_of(reps: usize, mut f: impl FnMut() -> Duration) -> Duration {
+    (0..reps.max(1)).map(|_| f()).min().unwrap()
+}
+
+fn main() {
+    let mode = BenchMode::from_env();
+    mode.banner("parallel_engine");
+    let reps = mode.pick(2, 4);
+    let sizes: Vec<usize> = mode.pick(vec![512], vec![512, 1024]);
+    let par_from_cli = ParallelismConfig::from_args(&vabft::cli::Args::parse());
+    let thread_counts: Vec<usize> = if par_from_cli.threads > 1 {
+        vec![par_from_cli.threads]
+    } else {
+        vec![1, 2, 4]
+    };
+
+    for &s in &sizes {
+        let (m, k, n) = (s, s, s);
+        let a = rand_f32(m * k, 1);
+        let b = rand_f32(k * n, 2);
+        for strategy in
+            [ReduceStrategy::Sequential, ReduceStrategy::Fma, ReduceStrategy::Pairwise]
+        {
+            let mut reference = Vec::new();
+            let t_naive = best_of(reps, || {
+                time_once(|| reference = kernels::reference_gemm_f32(&a, &b, m, k, n, strategy))
+            });
+            let flops = 2.0 * (m * k * n) as f64;
+
+            let mut table = Table::new(
+                &format!("fp32 {m}x{k}x{n} [{}]", strategy.name()),
+                &["engine", "best", "GFLOP/s", "speedup", "bitwise"],
+            );
+            table.row(vec![
+                "naive ikj".into(),
+                format!("{t_naive:?}"),
+                format!("{:.2}", flops / t_naive.as_secs_f64() / 1e9),
+                "1.00x".into(),
+                "ref".into(),
+            ]);
+            for &threads in &thread_counts {
+                let par = ParallelismConfig::with_threads(threads).tiles(par_from_cli.tiles);
+                let mut out = Vec::new();
+                let t_tiled = best_of(reps, || {
+                    time_once(|| out = tiled::gemm_f32(&a, &b, m, k, n, strategy, &par))
+                });
+                let equal = out == reference;
+                assert!(equal, "schedule invariant violated at {threads} threads");
+                let speedup = t_naive.as_secs_f64() / t_tiled.as_secs_f64();
+                table.row(vec![
+                    format!("tiled x{threads}"),
+                    format!("{t_tiled:?}"),
+                    format!("{:.2}", flops / t_tiled.as_secs_f64() / 1e9),
+                    format!("{speedup:.2}x"),
+                    "OK".into(),
+                ]);
+                // The acceptance bar: at 512³ FP32 and 4 threads the
+                // parallel engine must beat the naive kernel wall-clock.
+                if s >= 512 && threads >= 4 {
+                    assert!(
+                        speedup > 1.0,
+                        "parallel engine slower than naive at {s}³ x{threads} ({speedup:.2}x)"
+                    );
+                }
+            }
+            table.print();
+        }
+    }
+    println!("parallel_engine: all outputs bitwise-equal to the naive reference");
+}

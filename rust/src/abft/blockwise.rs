@@ -7,13 +7,18 @@
 //! reliable detection while keeping overhead within the GEMM pipeline's
 //! slack". Per-block verification also localizes the fault in K (which
 //! block) in addition to the output column.
+//!
+//! [`BlockwiseFtGemm`] is the `block_k = KC` parameterization of the
+//! shared pipeline in [`crate::abft::pipeline`] — the same
+//! detect/localize/correct/recompute implementation [`crate::abft::FtGemm`]
+//! runs at `block_k = K`, executing on the same tiled parallel engine.
 
-use crate::abft::encode::ChecksumEncoding;
-use crate::abft::verify::{check_row, localize, weight_vector, Localization};
-use crate::abft::{Detection, Verdict, VerifyPolicy, VerifyReport};
+use crate::abft::pipeline;
+use crate::abft::{VerifyPolicy, VerifyReport};
+use crate::error::Result;
 use crate::gemm::GemmEngine;
 use crate::matrix::Matrix;
-use crate::threshold::{Threshold, ThresholdContext, VabftThreshold};
+use crate::threshold::{Threshold, VabftThreshold};
 
 /// Output of a block-wise protected multiply.
 #[derive(Debug, Clone)]
@@ -29,7 +34,7 @@ pub struct BlockwiseOutput {
 /// Block-wise fault-tolerant GEMM over K tiles.
 pub struct BlockwiseFtGemm {
     engine: GemmEngine,
-    threshold: VabftThreshold,
+    threshold: Box<dyn Threshold>,
     policy: VerifyPolicy,
     /// K tile depth (paper's NPU configuration uses 1024).
     pub block_k: usize,
@@ -38,12 +43,28 @@ pub struct BlockwiseFtGemm {
 impl BlockwiseFtGemm {
     pub fn new(engine: GemmEngine, block_k: usize, policy: VerifyPolicy) -> BlockwiseFtGemm {
         assert!(block_k > 0);
-        BlockwiseFtGemm { engine, threshold: VabftThreshold::default(), policy, block_k }
+        BlockwiseFtGemm {
+            engine,
+            threshold: Box::new(VabftThreshold::default()),
+            policy,
+            block_k,
+        }
     }
 
+    /// Replace the default V-ABFT threshold algorithm.
     pub fn with_threshold(mut self, t: VabftThreshold) -> Self {
+        self.threshold = Box::new(t);
+        self
+    }
+
+    /// Replace the threshold algorithm with any [`Threshold`].
+    pub fn with_threshold_box(mut self, t: Box<dyn Threshold>) -> Self {
         self.threshold = t;
         self
+    }
+
+    pub fn engine(&self) -> &GemmEngine {
+        &self.engine
     }
 
     /// Protected multiply with optional per-block fault injection
@@ -53,116 +74,26 @@ impl BlockwiseFtGemm {
         a: &Matrix,
         b: &Matrix,
         mut inject: impl FnMut(usize, &mut Matrix),
-    ) -> anyhow::Result<BlockwiseOutput> {
-        assert_eq!(a.cols(), b.rows());
-        let (m, k, n) = (a.rows(), a.cols(), b.cols());
-        let model = self.engine.model();
-        let ctx = if self.policy.online {
-            ThresholdContext::online(model)
-        } else {
-            ThresholdContext::offline(model)
-        };
-        let grid = if self.policy.online { model.work } else { model.out };
-        let weights = weight_vector(n);
-        let blocks = (k + self.block_k - 1) / self.block_k;
-
-        let mut acc = Matrix::zeros(m, n);
-        let mut detections = Vec::new();
-        let mut detection_blocks = Vec::new();
-        let mut rows_recomputed = 0usize;
-
-        for bi in 0..blocks {
-            let k0 = bi * self.block_k;
-            let k1 = (k0 + self.block_k).min(k);
-            // Slice the K block (copying; block reuse patterns would cache
-            // these in a real pipeline).
-            let a_blk = Matrix::from_fn(m, k1 - k0, |i, j| a.get(i, k0 + j));
-            let b_blk = Matrix::from_fn(k1 - k0, n, |i, j| b.get(k0 + i, j));
-
-            let enc = if self.policy.online {
-                ChecksumEncoding::encode_b_wide(&b_blk, &self.engine)
-            } else {
-                ChecksumEncoding::encode_b(&b_blk, &self.engine)
-            };
-            let mut out = self.engine.matmul_mixed(&a_blk, &enc.b_encoded, enc.wide_cols());
-            inject(bi, &mut out.acc);
-            let src = if self.policy.online { &out.acc } else { &out.c };
-            let (mut part, cr1, cr2) = enc.split_product(src);
-
-            // Per-block thresholds: reduction depth is the BLOCK depth, so
-            // e_max (and hence T) is evaluated at max(n, bk), not K.
-            let th = self.threshold.thresholds(&a_blk, &b_blk, &ctx);
-
-            for i in 0..m {
-                let rc = check_row(part.row(i), cr1[i], cr2[i], th[i], &self.engine, &weights);
-                if !rc.flagged {
-                    continue;
-                }
-                let mut det = Detection {
-                    row: i,
-                    col: None,
-                    d1: rc.d1,
-                    d2: rc.d2,
-                    threshold: rc.threshold,
-                    corrected: false,
-                };
-                if self.policy.correct {
-                    if let Localization::Column(j) =
-                        localize(rc.d1, rc.d2, n, self.policy.localize_tol)
-                    {
-                        det.col = Some(j);
-                        let fixed = part.get(i, j) - rc.d1;
-                        part.set(i, j, grid.quantize(fixed));
-                        det.corrected = true;
-                    }
-                }
-                if !det.corrected && self.policy.recompute {
-                    let a_row = Matrix::from_vec(1, k1 - k0, a_blk.row(i).to_vec());
-                    let rec = self.engine.matmul(&a_row, &b_blk);
-                    let src_row =
-                        if self.policy.online { rec.acc } else { rec.c };
-                    part.row_mut(i).copy_from_slice(src_row.row(0));
-                    rows_recomputed += 1;
-                }
-                detections.push(det);
-                detection_blocks.push(bi);
-            }
-
-            // Aggregate the verified partial into the running sum (work
-            // precision; the final output rounding happens once below).
-            for i in 0..m {
-                let dst = acc.row_mut(i);
-                for (d, &s) in dst.iter_mut().zip(part.row(i)) {
-                    *d = model.work.quantize(*d + s);
-                }
-            }
-        }
-
-        let verdict = if detections.is_empty() {
-            Verdict::Clean
-        } else if rows_recomputed > 0 {
-            Verdict::Recomputed
-        } else if detections.iter().all(|d| d.corrected) {
-            Verdict::Corrected
-        } else {
-            Verdict::Flagged
-        };
-        let c = acc.quantized(model.out);
+    ) -> Result<BlockwiseOutput> {
+        let out = pipeline::run_blocks(
+            &self.engine,
+            self.threshold.as_ref(),
+            &self.policy,
+            a,
+            b,
+            self.block_k,
+            |bi, o| inject(bi, &mut o.acc),
+        )?;
         Ok(BlockwiseOutput {
-            c,
-            report: VerifyReport {
-                verdict,
-                detections,
-                rows_checked: m * blocks,
-                rows_recomputed,
-            },
-            detection_blocks,
-            blocks,
+            c: out.c,
+            report: out.report,
+            detection_blocks: out.detection_blocks,
+            blocks: out.blocks,
         })
     }
 
     /// Protected multiply without injection.
-    pub fn multiply(&self, a: &Matrix, b: &Matrix) -> anyhow::Result<BlockwiseOutput> {
+    pub fn multiply(&self, a: &Matrix, b: &Matrix) -> Result<BlockwiseOutput> {
         self.multiply_with_injection(a, b, |_, _| {})
     }
 }
@@ -170,9 +101,11 @@ impl BlockwiseFtGemm {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::abft::Verdict;
     use crate::fp::Precision;
-    use crate::gemm::AccumModel;
+    use crate::gemm::{AccumModel, ParallelismConfig};
     use crate::rng::{Distribution, Xoshiro256pp};
+    use crate::threshold::ThresholdContext;
 
     fn operands(seed: u64, m: usize, k: usize, n: usize) -> (Matrix, Matrix) {
         let mut rng = Xoshiro256pp::seed_from_u64(seed);
@@ -243,5 +176,24 @@ mod tests {
             t_blk < t_full / 2.0,
             "block threshold {t_blk} should be ≪ full {t_full}"
         );
+    }
+
+    #[test]
+    fn blockwise_results_independent_of_engine_parallelism() {
+        // The unified pipeline runs on the tiled engine; per-block partials
+        // (and hence thresholds, detections and outputs) must not depend on
+        // the engine's thread count.
+        let (a, b) = operands(5, 6, 96, 12);
+        let model = AccumModel::wide(Precision::Bf16);
+        let serial = BlockwiseFtGemm::new(GemmEngine::new(model), 32, VerifyPolicy::default());
+        let parallel = BlockwiseFtGemm::new(
+            GemmEngine::with_parallelism(model, ParallelismConfig::with_threads(4)),
+            32,
+            VerifyPolicy::default(),
+        );
+        let x = serial.multiply(&a, &b).unwrap();
+        let y = parallel.multiply(&a, &b).unwrap();
+        assert_eq!(x.c.data(), y.c.data(), "blockwise output must be thread-invariant");
+        assert_eq!(x.report.verdict, y.report.verdict);
     }
 }

@@ -7,9 +7,16 @@
 //! row against the adaptive threshold, correct single-event upsets in
 //! place, and recompute rows whose syndrome is inconsistent with a single
 //! upset.
+//!
+//! [`FtGemm`] is the monolithic (`block_k = K`) parameterization of the
+//! shared pipeline in [`crate::abft::pipeline`];
+//! [`crate::abft::BlockwiseFtGemm`] is the same pipeline at
+//! `block_k = KC`. The detect/localize/correct/recompute stages are
+//! implemented exactly once, there.
 
 use crate::abft::encode::ChecksumEncoding;
-use crate::abft::verify::{check_row, correct_in_place, localize, weight_vector, Localization, RowCheck};
+use crate::abft::pipeline;
+use crate::error::Result;
 use crate::gemm::{GemmEngine, GemmOutput};
 use crate::matrix::Matrix;
 use crate::threshold::{PreparedBStats, Threshold, ThresholdContext};
@@ -155,11 +162,8 @@ impl FtGemm {
     }
 
     /// Protected multiply: C = A·B with detection / correction per policy.
-    pub fn multiply(&self, a: &Matrix, b: &Matrix) -> anyhow::Result<FtGemmOutput> {
-        let enc = self.encode(b);
-        let out = self.engine.matmul_mixed(a, &enc.b_encoded, enc.wide_cols());
-        let thresholds = self.threshold.thresholds(a, b, &self.ctx());
-        self.verify_encoded(a, b, &enc, out, thresholds)
+    pub fn multiply(&self, a: &Matrix, b: &Matrix) -> Result<FtGemmOutput> {
+        self.multiply_with_injection(a, b, |_| {})
     }
 
     /// Protected multiply against a prepared weight (serving hot path: no
@@ -169,13 +173,31 @@ impl FtGemm {
         a: &Matrix,
         w: &PreparedWeight,
         inject: Option<&dyn Fn(&mut GemmOutput)>,
-    ) -> anyhow::Result<FtGemmOutput> {
+    ) -> Result<FtGemmOutput> {
         let mut out = self.engine.matmul_mixed(a, &w.enc.b_encoded, w.enc.wide_cols());
         if let Some(f) = inject {
             f(&mut out);
         }
         let thresholds = self.threshold.thresholds_prepared(a, &w.stats, &self.ctx());
-        self.verify_encoded(a, &w.stats.b, &w.enc, out, thresholds)
+        let weights = crate::abft::verify::weight_vector(w.enc.n);
+        let bv = pipeline::verify_block(
+            &self.engine,
+            &self.policy,
+            &w.enc,
+            &thresholds,
+            &weights,
+            out,
+            a,
+            &w.stats.b,
+        );
+        let verdict = pipeline::verdict_of(&bv.detections, bv.rows_recomputed);
+        let report = VerifyReport {
+            verdict,
+            rows_checked: a.rows(),
+            rows_recomputed: bv.rows_recomputed,
+            detections: bv.detections,
+        };
+        Ok(FtGemmOutput { c: pipeline::finalize(bv.part, &self.engine), report })
     }
 
     /// Protected multiply with fault injection between compute and verify
@@ -185,123 +207,27 @@ impl FtGemm {
         a: &Matrix,
         b: &Matrix,
         inject: impl FnOnce(&mut GemmOutput),
-    ) -> anyhow::Result<FtGemmOutput> {
-        let enc = self.encode(b);
-        let mut out = self.engine.matmul_mixed(a, &enc.b_encoded, enc.wide_cols());
-        inject(&mut out);
-        let thresholds = self.threshold.thresholds(a, b, &self.ctx());
-        self.verify_encoded(a, b, &enc, out, thresholds)
+    ) -> Result<FtGemmOutput> {
+        // Monolithic = the shared pipeline at block_k = K (one tile).
+        let mut inject = Some(inject);
+        let out = pipeline::run_blocks(
+            &self.engine,
+            self.threshold.as_ref(),
+            &self.policy,
+            a,
+            b,
+            a.cols().max(1),
+            |_, o| {
+                if let Some(f) = inject.take() {
+                    f(o)
+                }
+            },
+        )?;
+        Ok(FtGemmOutput { c: out.c, report: out.report })
     }
 
     fn ctx(&self) -> ThresholdContext {
-        let model = self.engine.model();
-        if self.policy.online {
-            ThresholdContext::online(model)
-        } else {
-            ThresholdContext::offline(model)
-        }
-    }
-
-    /// Verify an already-computed encoded product.
-    fn verify_encoded(
-        &self,
-        a: &Matrix,
-        b: &Matrix,
-        enc: &ChecksumEncoding,
-        out: GemmOutput,
-        thresholds: Vec<f64>,
-    ) -> anyhow::Result<FtGemmOutput> {
-        let model = self.engine.model();
-
-        // Online verification reads the accumulator; offline the stored C.
-        let src = if self.policy.online { &out.acc } else { &out.c };
-        let (mut c_src, cr1, cr2) = enc.split_product(src);
-        let n = enc.n;
-        let weights = weight_vector(n);
-        // Precision the verified matrix's elements live on:
-        let grid = if self.policy.online { model.work } else { model.out };
-
-        let mut detections = Vec::new();
-        let mut rows_recomputed = 0usize;
-        for i in 0..c_src.rows() {
-            let rc: RowCheck =
-                check_row(c_src.row(i), cr1[i], cr2[i], thresholds[i], &self.engine, &weights);
-            if !rc.flagged {
-                continue;
-            }
-            let mut det = Detection {
-                row: i,
-                col: None,
-                d1: rc.d1,
-                d2: rc.d2,
-                threshold: rc.threshold,
-                corrected: false,
-            };
-            if self.policy.correct {
-                if let Localization::Column(j) = localize(rc.d1, rc.d2, n, self.policy.localize_tol)
-                {
-                    det.col = Some(j);
-                    correct_in_place(&mut c_src, i, j, rc.d1, grid);
-                    det.corrected = true;
-                    if self.policy.reverify {
-                        let rc2 = check_row(
-                            c_src.row(i),
-                            cr1[i],
-                            cr2[i],
-                            thresholds[i],
-                            &self.engine,
-                            &weights,
-                        );
-                        if rc2.flagged {
-                            det.corrected = false; // correction didn't verify
-                        }
-                    }
-                }
-            }
-            if !det.corrected && self.policy.recompute {
-                self.recompute_row(a, b, &mut c_src, i);
-                rows_recomputed += 1;
-            }
-            detections.push(det);
-        }
-
-        let verdict = if detections.is_empty() {
-            Verdict::Clean
-        } else if rows_recomputed > 0 {
-            Verdict::Recomputed
-        } else if detections.iter().all(|d| d.corrected) {
-            Verdict::Corrected
-        } else {
-            Verdict::Flagged
-        };
-
-        // Final output is on the out grid regardless of where we verified.
-        let c = if self.policy.online && model.quantizes_output() {
-            c_src.quantized(model.out)
-        } else if self.policy.online {
-            c_src
-        } else {
-            c_src
-        };
-
-        Ok(FtGemmOutput {
-            c,
-            report: VerifyReport {
-                verdict,
-                detections,
-                rows_checked: a.rows(),
-                rows_recomputed,
-            },
-        })
-    }
-
-    /// Recompute a single output row (1×K · K×N GEMM) — the escalation
-    /// path for uncorrectable syndromes.
-    fn recompute_row(&self, a: &Matrix, b: &Matrix, c: &mut Matrix, row: usize) {
-        let a_row = Matrix::from_vec(1, a.cols(), a.row(row).to_vec());
-        let out = self.engine.matmul(&a_row, b);
-        let src = if self.policy.online { out.acc } else { out.c };
-        c.row_mut(row).copy_from_slice(src.row(0));
+        pipeline::threshold_ctx(&self.engine, &self.policy)
     }
 }
 

@@ -1,0 +1,244 @@
+//! The shared FT-GEMM verification pipeline.
+//!
+//! [`crate::abft::FtGemm`] and [`crate::abft::BlockwiseFtGemm`] used to be
+//! two divergent code paths; they are now two parameterizations of the
+//! K-tiled pipeline in this module:
+//!
+//! * **monolithic** — `block_k = K`: one tile, one encode/verify pass
+//!   (the classic Huang–Abraham shape);
+//! * **blockwise** (paper §5.2) — `block_k = KC`: per-K-block checksum
+//!   rows are carried through the same engine, each partial product is
+//!   verified at reduction depth `bk` (tighter thresholds) and faults are
+//!   additionally localized in K (which block).
+//!
+//! Per tile the pipeline runs detect → localize → correct → re-verify →
+//! recompute with *one* implementation of each stage, then aggregates the
+//! verified partials in the work precision and rounds to the output grid
+//! once. The GEMMs themselves execute on the tiled parallel engine
+//! ([`crate::gemm::tiled`]), whose schedule-preservation invariant is what
+//! keeps every threshold valid here regardless of thread count.
+
+use crate::abft::encode::ChecksumEncoding;
+use crate::abft::verify::{check_row, correct_in_place, localize, weight_vector, Localization};
+use crate::abft::{Detection, Verdict, VerifyPolicy, VerifyReport};
+use crate::error::Result;
+use crate::gemm::{GemmEngine, GemmOutput};
+use crate::matrix::Matrix;
+use crate::threshold::{Threshold, ThresholdContext};
+
+/// Result of a full pipeline run.
+pub(crate) struct PipelineOutput {
+    /// Aggregated (possibly repaired) product on the model's output grid.
+    pub c: Matrix,
+    pub report: VerifyReport,
+    /// K-block index of each detection (parallel to `report.detections`).
+    pub detection_blocks: Vec<usize>,
+    pub blocks: usize,
+}
+
+/// Verified partial product of one K-block.
+pub(crate) struct BlockVerify {
+    /// The (possibly corrected/recomputed) data columns, on the verify
+    /// grid (work precision online, output precision offline).
+    pub part: Matrix,
+    pub detections: Vec<Detection>,
+    pub rows_recomputed: usize,
+}
+
+/// The threshold context matching a policy's verification point.
+pub(crate) fn threshold_ctx(engine: &GemmEngine, policy: &VerifyPolicy) -> ThresholdContext {
+    let model = engine.model();
+    if policy.online {
+        ThresholdContext::online(model)
+    } else {
+        ThresholdContext::offline(model)
+    }
+}
+
+/// Verify one encoded (partial) product: per row, detect → localize →
+/// correct (→ re-verify) → recompute, per the policy. `a_blk`/`b_blk` are
+/// the operands that produced `out` (the full operands for the monolithic
+/// case) and feed the recomputation escalation path. `weights` is the
+/// position-weight vector of length `enc.n` (hoisted by callers: it
+/// depends only on N, not on the block).
+pub(crate) fn verify_block(
+    engine: &GemmEngine,
+    policy: &VerifyPolicy,
+    enc: &ChecksumEncoding,
+    thresholds: &[f64],
+    weights: &[f64],
+    out: GemmOutput,
+    a_blk: &Matrix,
+    b_blk: &Matrix,
+) -> BlockVerify {
+    let model = engine.model();
+    // Online verification reads the accumulator; offline the stored C.
+    let src = if policy.online { &out.acc } else { &out.c };
+    let (mut part, cr1, cr2) = enc.split_product(src);
+    let n = enc.n;
+    debug_assert_eq!(weights.len(), n);
+    // Precision the verified elements live on:
+    let grid = if policy.online { model.work } else { model.out };
+
+    let mut detections = Vec::new();
+    let mut rows_recomputed = 0usize;
+    for i in 0..part.rows() {
+        let rc = check_row(part.row(i), cr1[i], cr2[i], thresholds[i], engine, weights);
+        if !rc.flagged {
+            continue;
+        }
+        let mut det = Detection {
+            row: i,
+            col: None,
+            d1: rc.d1,
+            d2: rc.d2,
+            threshold: rc.threshold,
+            corrected: false,
+        };
+        if policy.correct {
+            if let Localization::Column(j) = localize(rc.d1, rc.d2, n, policy.localize_tol) {
+                det.col = Some(j);
+                correct_in_place(&mut part, i, j, rc.d1, grid);
+                det.corrected = true;
+                if policy.reverify {
+                    let rc2 =
+                        check_row(part.row(i), cr1[i], cr2[i], thresholds[i], engine, weights);
+                    if rc2.flagged {
+                        det.corrected = false; // correction didn't verify
+                    }
+                }
+            }
+        }
+        if !det.corrected && policy.recompute {
+            recompute_row(engine, policy, a_blk, b_blk, &mut part, i);
+            rows_recomputed += 1;
+        }
+        detections.push(det);
+    }
+    BlockVerify { part, detections, rows_recomputed }
+}
+
+/// Recompute one row of a (partial) product — a 1×bk · bk×N GEMM — the
+/// escalation path for syndromes inconsistent with a single upset.
+pub(crate) fn recompute_row(
+    engine: &GemmEngine,
+    policy: &VerifyPolicy,
+    a_blk: &Matrix,
+    b_blk: &Matrix,
+    part: &mut Matrix,
+    row: usize,
+) {
+    let a_row = Matrix::from_vec(1, a_blk.cols(), a_blk.row(row).to_vec());
+    let rec = engine.matmul(&a_row, b_blk);
+    let src = if policy.online { rec.acc } else { rec.c };
+    part.row_mut(row).copy_from_slice(src.row(0));
+}
+
+/// Collapse per-detection outcomes into the multiply's verdict.
+pub(crate) fn verdict_of(detections: &[Detection], rows_recomputed: usize) -> Verdict {
+    if detections.is_empty() {
+        Verdict::Clean
+    } else if rows_recomputed > 0 {
+        Verdict::Recomputed
+    } else if detections.iter().all(|d| d.corrected) {
+        Verdict::Corrected
+    } else {
+        Verdict::Flagged
+    }
+}
+
+/// Finalize a verified accumulator: one rounding onto the output grid
+/// (a no-op when the verify grid already equals the output grid).
+pub(crate) fn finalize(acc: Matrix, engine: &GemmEngine) -> Matrix {
+    acc.quantized(engine.model().out)
+}
+
+/// Run the K-tiled FT pipeline: for each `block_k`-deep tile of K, encode
+/// the B-block checksums, execute on the engine, apply the injection hook,
+/// verify/correct/recompute, then aggregate verified partials in the work
+/// precision and round once at the end.
+///
+/// `inject(block_index, encoded_output)` is the experiment hook; it sees
+/// the *encoded* partial product (data + checksum columns).
+pub(crate) fn run_blocks(
+    engine: &GemmEngine,
+    threshold: &dyn Threshold,
+    policy: &VerifyPolicy,
+    a: &Matrix,
+    b: &Matrix,
+    block_k: usize,
+    mut inject: impl FnMut(usize, &mut GemmOutput),
+) -> Result<PipelineOutput> {
+    assert_eq!(
+        a.cols(),
+        b.rows(),
+        "FT-GEMM shape mismatch {}x{} · {}x{}",
+        a.rows(),
+        a.cols(),
+        b.rows(),
+        b.cols()
+    );
+    assert!(block_k > 0, "block_k must be positive");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let model = engine.model();
+    let ctx = threshold_ctx(engine, policy);
+    let blocks = (k + block_k - 1) / block_k;
+    let single = blocks == 1;
+    // Position weights depend only on N — hoisted out of the block loop.
+    let weights = weight_vector(n);
+
+    let mut acc = Matrix::zeros(m, n);
+    let mut detections = Vec::new();
+    let mut detection_blocks = Vec::new();
+    let mut rows_recomputed = 0usize;
+
+    for bi in 0..blocks {
+        let k0 = bi * block_k;
+        let k1 = (k0 + block_k).min(k);
+        // Monolithic case: borrow the operands, no copy.
+        let (a_own, b_own);
+        let (a_blk, b_blk): (&Matrix, &Matrix) = if single {
+            (a, b)
+        } else {
+            a_own = Matrix::from_fn(m, k1 - k0, |i, j| a.get(i, k0 + j));
+            b_own = Matrix::from_fn(k1 - k0, n, |i, j| b.get(k0 + i, j));
+            (&a_own, &b_own)
+        };
+
+        let enc = if policy.online {
+            ChecksumEncoding::encode_b_wide(b_blk, engine)
+        } else {
+            ChecksumEncoding::encode_b(b_blk, engine)
+        };
+        let mut out = engine.matmul_mixed(a_blk, &enc.b_encoded, enc.wide_cols());
+        inject(bi, &mut out);
+
+        // Per-block thresholds: the reduction depth seen by verification
+        // is the BLOCK depth, so e_max (and hence T) tightens with bk.
+        let thresholds = threshold.thresholds(a_blk, b_blk, &ctx);
+        let bv = verify_block(engine, policy, &enc, &thresholds, &weights, out, a_blk, b_blk);
+
+        rows_recomputed += bv.rows_recomputed;
+        let tagged = detection_blocks.len() + bv.detections.len();
+        detection_blocks.resize(tagged, bi);
+        detections.extend(bv.detections);
+
+        // Aggregate the verified partial into the running sum (work
+        // precision; the single output rounding happens in finalize).
+        for i in 0..m {
+            let dst = acc.row_mut(i);
+            for (dv, &sv) in dst.iter_mut().zip(bv.part.row(i)) {
+                *dv = model.work.quantize(*dv + sv);
+            }
+        }
+    }
+
+    let verdict = verdict_of(&detections, rows_recomputed);
+    let c = finalize(acc, engine);
+    Ok(PipelineOutput {
+        c,
+        report: VerifyReport { verdict, detections, rows_checked: m * blocks, rows_recomputed },
+        detection_blocks,
+        blocks,
+    })
+}

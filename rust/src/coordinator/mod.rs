@@ -5,9 +5,12 @@
 //!
 //! 1. registers weight matrices once (checksum encoding + V-ABFT summary
 //!    precomputed — the serving fast path),
-//! 2. accepts activation×weight multiply requests,
-//! 3. executes them under the configured accumulation model (native
-//!    engines or PJRT artifacts),
+//! 2. accepts activation×weight multiply requests, singly (`submit`) or
+//!    batched (`submit_batch`, one tagged receiver per request),
+//! 3. executes them on the tiled parallel GEMM engine under the
+//!    configured accumulation model (`CoordinatorConfig::parallelism`
+//!    sets each worker's intra-op threads/tiles; results are bitwise
+//!    independent of that setting),
 //! 4. verifies / corrects / recomputes per policy, and
 //! 5. exposes counters + latency histograms.
 //!

@@ -9,7 +9,7 @@ use std::time::Instant;
 
 use crate::abft::{FtGemm, FtGemmOutput, PreparedWeight, Verdict, VerifyPolicy};
 use crate::fp::Precision;
-use crate::gemm::{AccumModel, GemmEngine};
+use crate::gemm::{AccumModel, GemmEngine, ParallelismConfig};
 use crate::inject::{BitFlip, InjectionSite};
 use crate::matrix::Matrix;
 use crate::metrics::ServiceMetrics;
@@ -52,6 +52,11 @@ pub struct CoordinatorConfig {
     pub policy: VerifyPolicy,
     /// Threshold algorithm factory (each worker gets one instance).
     pub threshold: Arc<dyn Fn() -> Box<dyn Threshold> + Send + Sync>,
+    /// Per-worker GEMM engine execution config (tiles + intra-op threads).
+    /// Results are identical for any value (schedule preservation); this
+    /// only trades per-request latency against worker-level throughput —
+    /// keep `workers × parallelism.threads` ≤ the core count.
+    pub parallelism: ParallelismConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -62,6 +67,7 @@ impl Default for CoordinatorConfig {
             model: AccumModel::wide(Precision::Bf16),
             policy: VerifyPolicy::default(),
             threshold: Arc::new(|| Box::new(VabftThreshold::default())),
+            parallelism: ParallelismConfig::serial(),
         }
     }
 }
@@ -98,7 +104,7 @@ impl Coordinator {
             let weights = Arc::clone(&weights);
             let metrics = Arc::clone(&metrics);
             let ft = FtGemm::new(
-                GemmEngine::new(cfg.model),
+                GemmEngine::with_parallelism(cfg.model, cfg.parallelism),
                 (cfg.threshold)(),
                 cfg.policy,
             );
@@ -112,7 +118,7 @@ impl Coordinator {
             );
         }
         let ft_template = Arc::new(FtGemm::new(
-            GemmEngine::new(cfg.model),
+            GemmEngine::with_parallelism(cfg.model, cfg.parallelism),
             (cfg.threshold)(),
             cfg.policy,
         ));
@@ -136,6 +142,12 @@ impl Coordinator {
     /// Submit a request; returns a receiver for the response. Blocks when
     /// the queue is full (backpressure).
     pub fn submit(&self, req: GemmRequest) -> Receiver<GemmResponse> {
+        self.submit_tagged(req).1
+    }
+
+    /// Submit a request and also return the id its response will carry
+    /// (`GemmResponse::id`) — the building block of [`Self::submit_batch`].
+    pub fn submit_tagged(&self, req: GemmRequest) -> (u64, Receiver<GemmResponse>) {
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.jobs_submitted.inc();
@@ -144,7 +156,20 @@ impl Coordinator {
             .expect("coordinator already shut down")
             .send(Job { id, req, reply: reply_tx, submitted: Instant::now() })
             .expect("worker pool hung up");
-        reply_rx
+        (id, reply_rx)
+    }
+
+    /// Batched submit: enqueue every request (in order, sharing the
+    /// backpressure of the bounded queue) and return one `(id, receiver)`
+    /// pair per request, in the same order. Requests of one batch fan out
+    /// across the worker pool and complete independently; the ids tie the
+    /// responses back to their requests.
+    pub fn submit_batch(
+        &self,
+        reqs: Vec<GemmRequest>,
+    ) -> Vec<(u64, Receiver<GemmResponse>)> {
+        self.metrics.batches_submitted.inc();
+        reqs.into_iter().map(|r| self.submit_tagged(r)).collect()
     }
 
     /// Convenience: submit and wait.
@@ -317,6 +342,48 @@ mod tests {
         }
         assert_eq!(c.metrics().jobs_completed.get(), 32);
         c.shutdown();
+    }
+
+    #[test]
+    fn submit_batch_ids_match_responses() {
+        let (c, _b) = coordinator(3);
+        let reqs: Vec<GemmRequest> = (0..12)
+            .map(|i| GemmRequest { a: activation(40 + i), weight: 7, inject: None })
+            .collect();
+        let pending = c.submit_batch(reqs);
+        assert_eq!(pending.len(), 12);
+        for (id, rx) in pending {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.id, id, "response routed to the wrong receiver");
+            assert!(resp.result.is_ok());
+        }
+        assert_eq!(c.metrics().batches_submitted.get(), 1);
+        assert_eq!(c.metrics().jobs_completed.get(), 12);
+        c.shutdown();
+    }
+
+    #[test]
+    fn worker_parallelism_config_is_applied() {
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            parallelism: crate::gemm::ParallelismConfig::with_threads(2),
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg);
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let b = Matrix::sample_in(64, 32, &Distribution::normal_1_1(), Precision::Bf16, &mut rng);
+        c.register_weight(1, &b);
+        // Same request through a serial coordinator must give bitwise the
+        // same product (schedule preservation end to end).
+        let (cs, _) = coordinator(1);
+        cs.register_weight(1, &b);
+        let a = activation(41);
+        let x = c.call(GemmRequest { a: a.clone(), weight: 1, inject: None });
+        let y = cs.call(GemmRequest { a, weight: 1, inject: None });
+        let (x, y) = (x.result.unwrap().c, y.result.unwrap().c);
+        assert_eq!(x.data(), y.data());
+        c.shutdown();
+        cs.shutdown();
     }
 
     #[test]

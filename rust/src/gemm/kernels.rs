@@ -16,10 +16,52 @@
 //! the compiler can vectorize across N — the accumulators for different
 //! output columns are independent, so vectorization does not alter the
 //! per-element rounding schedule.
+//!
+//! These kernels are the **schedule reference**: production GEMMs run on
+//! the tiled parallel engine in [`crate::gemm::tiled`], whose contract is
+//! bitwise equality with the functions here for every strategy, tile
+//! shape and thread count (`tests/tiled_equivalence.rs`). Change a
+//! schedule here and the engine, the e_max calibrations and the
+//! equivalence tests all move together — or not at all.
+
+use super::ReduceStrategy;
 
 /// f64 → f32 conversion of a slice (one rounding per element).
 pub fn to_f32_vec(xs: &[f64]) -> Vec<f32> {
     xs.iter().map(|&x| x as f32).collect()
+}
+
+/// Dispatch to the f32 reference kernel of a strategy — the single place
+/// callers (CLI, benches, equivalence tests) get the naive baseline from.
+pub fn reference_gemm_f32(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    strategy: ReduceStrategy,
+) -> Vec<f32> {
+    match strategy {
+        ReduceStrategy::Sequential => seq_gemm_f32(a, b, m, k, n),
+        ReduceStrategy::Fma => fma_gemm_f32(a, b, m, k, n),
+        ReduceStrategy::Pairwise => pairwise_gemm_f32(a, b, m, k, n),
+    }
+}
+
+/// Dispatch to the f64 reference kernel of a strategy.
+pub fn reference_gemm_f64(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    strategy: ReduceStrategy,
+) -> Vec<f64> {
+    match strategy {
+        ReduceStrategy::Sequential => seq_gemm_f64(a, b, m, k, n),
+        ReduceStrategy::Fma => fma_gemm_f64(a, b, m, k, n),
+        ReduceStrategy::Pairwise => pairwise_gemm_f64(a, b, m, k, n),
+    }
 }
 
 macro_rules! kernels_for {

@@ -17,9 +17,26 @@
 //! *offline* verification (on the stored low-precision C) and *online /
 //! fused-kernel* verification (on the FP32 accumulator, §3.6) — the 1000×
 //! detection-granularity result.
+//!
+//! ## Execution: the tiled parallel engine
+//!
+//! Engine execution is delegated to [`tiled`]: an (MC, KC, NC)
+//! cache-blocked, [`std::thread::scope`]-parallel engine configured by
+//! [`ParallelismConfig`] (`GemmEngine::with_parallelism`). Its contract is
+//! **schedule preservation**: results are bitwise-identical to the naive
+//! reference kernels in [`kernels`] for every strategy, tile shape and
+//! thread count, because parallelism and blocking are applied only across
+//! output rows/columns — never across K inside one element's reduction
+//! chain. The rounding-schedule table above (and every calibrated e_max)
+//! therefore holds unchanged on the parallel engine; "make it faster"
+//! means tuning [`TileConfig`] and thread counts, not re-deriving
+//! thresholds. The invariant is locked in by `tests/tiled_equivalence.rs`.
 
 pub mod exact;
 pub mod kernels;
+pub mod tiled;
+
+pub use tiled::{ParallelismConfig, TileConfig};
 
 use crate::fp::Precision;
 use crate::matrix::Matrix;
@@ -140,19 +157,38 @@ pub struct GemmOutput {
     pub acc: Matrix,
 }
 
-/// Executes GEMMs and reductions under an [`AccumModel`].
+/// Executes GEMMs and reductions under an [`AccumModel`], on the tiled
+/// parallel engine ([`tiled`]).
 #[derive(Debug, Clone)]
 pub struct GemmEngine {
     model: AccumModel,
+    par: ParallelismConfig,
 }
 
 impl GemmEngine {
+    /// Serial engine (1 worker, default tiles). Numerically identical to
+    /// every other [`ParallelismConfig`] by the schedule-preservation
+    /// invariant.
     pub fn new(model: AccumModel) -> GemmEngine {
-        GemmEngine { model }
+        GemmEngine { model, par: ParallelismConfig::serial() }
+    }
+
+    /// Engine with an explicit execution configuration.
+    pub fn with_parallelism(model: AccumModel, par: ParallelismConfig) -> GemmEngine {
+        GemmEngine { model, par }
     }
 
     pub fn model(&self) -> AccumModel {
         self.model
+    }
+
+    pub fn parallelism(&self) -> ParallelismConfig {
+        self.par
+    }
+
+    /// Swap the execution configuration (does not change results).
+    pub fn set_parallelism(&mut self, par: ParallelismConfig) {
+        self.par = par;
     }
 
     /// C = A·B under the engine's accumulation model.
@@ -188,15 +224,17 @@ impl GemmEngine {
             out
         };
 
-        // 2. Multiply-accumulate in the work precision.
+        // 2. Multiply-accumulate in the work precision, on the tiled
+        //    parallel engine (bitwise-equal to the reference kernels).
         let acc_data: Vec<f64> = match m.work {
-            Precision::F64 => run_kernel_f64(&aq, &bq, rows, k, cols, m.strategy),
+            Precision::F64 => tiled::gemm_f64(&aq, &bq, rows, k, cols, m.strategy, &self.par),
             Precision::F32 => {
                 let a32 = kernels::to_f32_vec(&aq);
                 let b32 = kernels::to_f32_vec(&bq);
-                run_kernel_f32(&a32, &b32, rows, k, cols, m.strategy)
+                let c = tiled::gemm_f32(&a32, &b32, rows, k, cols, m.strategy, &self.par);
+                c.into_iter().map(|x| x as f64).collect()
             }
-            other => generic_gemm(&aq, &bq, rows, k, cols, other, m.strategy),
+            other => tiled::gemm_generic(&aq, &bq, rows, k, cols, other, m.strategy, &self.par),
         };
         let acc = Matrix::from_vec(rows, cols, acc_data);
 
@@ -280,41 +318,11 @@ fn quantize_data(xs: &[f64], p: Precision) -> Vec<f64> {
     }
 }
 
-fn run_kernel_f64(
-    a: &[f64],
-    b: &[f64],
-    m: usize,
-    k: usize,
-    n: usize,
-    s: ReduceStrategy,
-) -> Vec<f64> {
-    match s {
-        ReduceStrategy::Sequential => kernels::seq_gemm_f64(a, b, m, k, n),
-        ReduceStrategy::Fma => kernels::fma_gemm_f64(a, b, m, k, n),
-        ReduceStrategy::Pairwise => kernels::pairwise_gemm_f64(a, b, m, k, n),
-    }
-}
-
-fn run_kernel_f32(
-    a: &[f32],
-    b: &[f32],
-    m: usize,
-    k: usize,
-    n: usize,
-    s: ReduceStrategy,
-) -> Vec<f64> {
-    let c = match s {
-        ReduceStrategy::Sequential => kernels::seq_gemm_f32(a, b, m, k, n),
-        ReduceStrategy::Fma => kernels::fma_gemm_f32(a, b, m, k, n),
-        ReduceStrategy::Pairwise => kernels::pairwise_gemm_f32(a, b, m, k, n),
-    };
-    c.into_iter().map(|x| x as f64).collect()
-}
-
-/// Slow generic path: every multiply and add individually quantized to an
-/// arbitrary precision. Used for ablations (e.g. true per-step BF16
-/// accumulation, the "offline low-precision" regime) and small tests.
-fn generic_gemm(
+/// Slow generic reference path: every multiply and add individually
+/// quantized to an arbitrary precision. Used for ablations (e.g. true
+/// per-step BF16 accumulation, the "offline low-precision" regime) and as
+/// the naive reference the tiled generic path must match bitwise.
+pub fn generic_gemm(
     a: &[f64],
     b: &[f64],
     m: usize,
@@ -336,7 +344,7 @@ fn generic_gemm(
     c
 }
 
-fn generic_reduce(xs: &[f64], p: Precision, s: ReduceStrategy) -> f64 {
+pub(crate) fn generic_reduce(xs: &[f64], p: Precision, s: ReduceStrategy) -> f64 {
     match s {
         ReduceStrategy::Sequential | ReduceStrategy::Fma => {
             let mut acc = 0.0;
@@ -470,12 +478,37 @@ mod tests {
         let (a, b) = pair(3, 17, 5, 6);
         let aq = quantize_data(a.data(), Precision::F32);
         let bq = quantize_data(b.data(), Precision::F32);
+        let a32 = kernels::to_f32_vec(&aq);
+        let b32 = kernels::to_f32_vec(&bq);
         for s in [ReduceStrategy::Sequential, ReduceStrategy::Pairwise] {
             let gen = generic_gemm(&aq, &bq, 3, 17, 5, Precision::F32, s);
-            let a32 = kernels::to_f32_vec(&aq);
-            let b32 = kernels::to_f32_vec(&bq);
-            let nat = run_kernel_f32(&a32, &b32, 3, 17, 5, s);
+            let nat: Vec<f64> = kernels::reference_gemm_f32(&a32, &b32, 3, 17, 5, s)
+                .into_iter()
+                .map(|x| x as f64)
+                .collect();
             assert_eq!(gen, nat, "strategy {s:?}");
+        }
+    }
+
+    #[test]
+    fn engine_results_independent_of_parallelism() {
+        // GemmEngine-level schedule preservation: same model, different
+        // ParallelismConfig, bitwise-identical c and acc.
+        let (a, b) = pair(13, 37, 21, 7);
+        for model in [
+            AccumModel::cpu(Precision::F64),
+            AccumModel::gpu_highprec(Precision::F32),
+            AccumModel::wide(Precision::Bf16),
+            AccumModel::cpu(Precision::Bf16), // generic work-precision path
+        ] {
+            let base = GemmEngine::new(model).matmul(&a, &b);
+            for threads in [2usize, 4] {
+                let par = ParallelismConfig::with_threads(threads)
+                    .tiles(TileConfig::new(4, 16, 8));
+                let out = GemmEngine::with_parallelism(model, par).matmul(&a, &b);
+                assert_eq!(out.acc.data(), base.acc.data(), "{model:?} t={threads}");
+                assert_eq!(out.c.data(), base.c.data(), "{model:?} t={threads}");
+            }
         }
     }
 }

@@ -1,0 +1,455 @@
+//! Tiled, multi-threaded GEMM execution with a **schedule-preservation
+//! guarantee**.
+//!
+//! The naive kernels in [`crate::gemm::kernels`] define, per output
+//! element, a *rounding schedule*: the exact order in which the K products
+//! are rounded and combined. V-ABFT's whole threshold model (and every
+//! calibrated e_max in [`crate::calibrate`]) is a statement about that
+//! schedule — so a faster engine is only admissible if it provably does
+//! not change it.
+//!
+//! This engine gets its speed from the two transformations that are
+//! schedule-neutral, and only those:
+//!
+//! * **Parallelism across output rows.** Each worker owns a disjoint
+//!   panel of C rows. Different output elements never share an
+//!   accumulator, so assigning rows to threads cannot reorder any
+//!   element's K-chain. Workers are scoped [`std::thread::scope`] threads
+//!   writing through disjoint `chunks_mut` panels — no locks, no atomics,
+//!   no cross-worker communication.
+//! * **Cache blocking over (K, N) — never *within* one element's
+//!   reduction.** For the sequential / FMA schedules, K-blocks are
+//!   visited in ascending order with the accumulator carried in place, so
+//!   element (i, j) still sees products k = 0, 1, …, K−1 in exactly the
+//!   reference order. For the pairwise schedule the reduction tree shape
+//!   depends on the *full* K, so products are staged for the whole K
+//!   extent (per column block) and the tree is identical to
+//!   [`crate::gemm::kernels`]'s — column-block width only changes which
+//!   *elements* share a buffer, not any element's tree.
+//!
+//! The resulting invariant — tiled/parallel output bitwise-equal to the
+//! naive reference for every strategy, tile shape and thread count — is
+//! enforced by `tests/tiled_equivalence.rs` and by unit tests below.
+
+use super::ReduceStrategy;
+use crate::fp::Precision;
+
+/// Cache-blocking tile sizes (elements, not bytes).
+///
+/// `mc` bounds the row-panel a worker iterates at a time, `kc` the K-block
+/// kept hot while streaming B, `nc` the column-block width (also the
+/// product-buffer width of the pairwise schedule). Any positive values are
+/// valid; the defaults target ~L2-resident B panels for f32.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileConfig {
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+}
+
+impl TileConfig {
+    pub const DEFAULT: TileConfig = TileConfig { mc: 64, kc: 256, nc: 128 };
+
+    pub fn new(mc: usize, kc: usize, nc: usize) -> TileConfig {
+        assert!(mc > 0 && kc > 0 && nc > 0, "tile sizes must be positive");
+        TileConfig { mc, kc, nc }
+    }
+}
+
+impl Default for TileConfig {
+    fn default() -> Self {
+        TileConfig::DEFAULT
+    }
+}
+
+/// Execution configuration of the tiled engine: worker count + tiles.
+///
+/// Results are **bitwise identical for every value of this struct** (the
+/// schedule-preservation invariant); it only trades wall-clock time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelismConfig {
+    /// Worker threads. 1 = run on the caller's thread (no spawns).
+    pub threads: usize,
+    pub tiles: TileConfig,
+}
+
+impl ParallelismConfig {
+    /// Single-threaded, default tiles — the library default, so plain
+    /// `GemmEngine::new` behaves like a deterministic serial engine.
+    pub fn serial() -> ParallelismConfig {
+        ParallelismConfig { threads: 1, tiles: TileConfig::DEFAULT }
+    }
+
+    /// `threads` workers, default tiles.
+    pub fn with_threads(threads: usize) -> ParallelismConfig {
+        ParallelismConfig { threads: threads.max(1), tiles: TileConfig::DEFAULT }
+    }
+
+    /// One worker per available hardware thread.
+    pub fn auto() -> ParallelismConfig {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ParallelismConfig { threads, tiles: TileConfig::DEFAULT }
+    }
+
+    /// Replace the tile configuration.
+    pub fn tiles(mut self, tiles: TileConfig) -> ParallelismConfig {
+        self.tiles = tiles;
+        self
+    }
+
+    /// Parse from CLI flags: `--threads N --mc M --kc K --nc N`
+    /// (`--threads 0` means auto). Shared by the `vabft` binary and the
+    /// bench harness mains.
+    pub fn from_args(args: &crate::cli::Args) -> ParallelismConfig {
+        let mut par = match args.opt_or("threads", 1usize) {
+            0 => ParallelismConfig::auto(),
+            t => ParallelismConfig::with_threads(t),
+        };
+        let d = TileConfig::DEFAULT;
+        par.tiles = TileConfig::new(
+            args.opt_or("mc", d.mc),
+            args.opt_or("kc", d.kc),
+            args.opt_or("nc", d.nc),
+        );
+        par
+    }
+}
+
+impl Default for ParallelismConfig {
+    fn default() -> Self {
+        ParallelismConfig::serial()
+    }
+}
+
+macro_rules! tiled_kernels {
+    ($gemm:ident, $panel:ident, $ty:ty) => {
+        /// Tiled multi-threaded GEMM, bitwise-equal to the naive kernel of
+        /// the same strategy in [`crate::gemm::kernels`].
+        pub fn $gemm(
+            a: &[$ty],
+            b: &[$ty],
+            m: usize,
+            k: usize,
+            n: usize,
+            strategy: ReduceStrategy,
+            par: &ParallelismConfig,
+        ) -> Vec<$ty> {
+            debug_assert_eq!(a.len(), m * k);
+            debug_assert_eq!(b.len(), k * n);
+            let mut c = vec![0 as $ty; m * n];
+            if m == 0 || n == 0 {
+                return c;
+            }
+            let threads = par.threads.max(1).min(m);
+            if threads == 1 {
+                $panel(a, b, &mut c, 0, m, k, n, strategy, par.tiles);
+                return c;
+            }
+            // Disjoint contiguous row panels per worker; no worker ever
+            // touches another's accumulators, so the per-element schedule
+            // is untouched by construction.
+            let rows_per = (m + threads - 1) / threads;
+            let tiles = par.tiles;
+            std::thread::scope(|s| {
+                for (ci, chunk) in c.chunks_mut(rows_per * n).enumerate() {
+                    let i0 = ci * rows_per;
+                    s.spawn(move || {
+                        let rows = chunk.len() / n;
+                        $panel(a, b, chunk, i0, rows, k, n, strategy, tiles);
+                    });
+                }
+            });
+            c
+        }
+
+        /// One worker's row panel: rows `i0 .. i0 + rows` of C, written to
+        /// `c` (a `rows × n` slice).
+        fn $panel(
+            a: &[$ty],
+            b: &[$ty],
+            c: &mut [$ty],
+            i0: usize,
+            rows: usize,
+            k: usize,
+            n: usize,
+            strategy: ReduceStrategy,
+            t: TileConfig,
+        ) {
+            debug_assert_eq!(c.len(), rows * n);
+            match strategy {
+                // Sequential / FMA: K-blocks ascending with the accumulator
+                // carried in C — element (i, j) sees k = 0..K in reference
+                // order; (kc, nc, mc) blocking only improves locality.
+                ReduceStrategy::Sequential => {
+                    let mut k0 = 0;
+                    while k0 < k {
+                        let k1 = (k0 + t.kc).min(k);
+                        let mut j0 = 0;
+                        while j0 < n {
+                            let j1 = (j0 + t.nc).min(n);
+                            let mut r0 = 0;
+                            while r0 < rows {
+                                let r1 = (r0 + t.mc).min(rows);
+                                for r in r0..r1 {
+                                    let arow = &a[(i0 + r) * k..(i0 + r + 1) * k];
+                                    let (cs, ce) = (r * n + j0, r * n + j1);
+                                    for kk in k0..k1 {
+                                        let av = arow[kk];
+                                        let brow = &b[kk * n + j0..kk * n + j1];
+                                        let crow = &mut c[cs..ce];
+                                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                                            *cv += av * bv; // round(mul), round(add)
+                                        }
+                                    }
+                                }
+                                r0 = r1;
+                            }
+                            j0 = j1;
+                        }
+                        k0 = k1;
+                    }
+                }
+                ReduceStrategy::Fma => {
+                    let mut k0 = 0;
+                    while k0 < k {
+                        let k1 = (k0 + t.kc).min(k);
+                        let mut j0 = 0;
+                        while j0 < n {
+                            let j1 = (j0 + t.nc).min(n);
+                            let mut r0 = 0;
+                            while r0 < rows {
+                                let r1 = (r0 + t.mc).min(rows);
+                                for r in r0..r1 {
+                                    let arow = &a[(i0 + r) * k..(i0 + r + 1) * k];
+                                    let (cs, ce) = (r * n + j0, r * n + j1);
+                                    for kk in k0..k1 {
+                                        let av = arow[kk];
+                                        let brow = &b[kk * n + j0..kk * n + j1];
+                                        let crow = &mut c[cs..ce];
+                                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                                            *cv = av.mul_add(bv, *cv); // one rounding
+                                        }
+                                    }
+                                }
+                                r0 = r1;
+                            }
+                            j0 = j1;
+                        }
+                        k0 = k1;
+                    }
+                }
+                // Pairwise: the tree shape depends on the full K, so the
+                // products of one (row, column-block) are staged for the
+                // whole K extent and reduced by the exact adjacent-pair /
+                // odd-carry tree of the reference kernel. The column-block
+                // width (nc) decides buffer residency only.
+                ReduceStrategy::Pairwise => {
+                    let bw = t.nc.min(n).max(1);
+                    let mut buf = vec![0 as $ty; k.max(1) * bw];
+                    for r in 0..rows {
+                        let arow = &a[(i0 + r) * k..(i0 + r + 1) * k];
+                        let mut j0 = 0;
+                        while j0 < n {
+                            let jw = bw.min(n - j0);
+                            // products (one rounding each)
+                            for kk in 0..k {
+                                let av = arow[kk];
+                                let brow = &b[kk * n + j0..kk * n + j0 + jw];
+                                let dst = &mut buf[kk * jw..kk * jw + jw];
+                                for (d, &bv) in dst.iter_mut().zip(brow) {
+                                    *d = av * bv;
+                                }
+                            }
+                            // adjacent-pair tree along k, odd element carried
+                            let mut len = k;
+                            while len > 1 {
+                                let half = len / 2;
+                                for p in 0..half {
+                                    let (lo, hi) = buf.split_at_mut((2 * p + 1) * jw);
+                                    let dst = &mut lo[2 * p * jw..2 * p * jw + jw];
+                                    let src = &hi[..jw];
+                                    for (d, &s) in dst.iter_mut().zip(src) {
+                                        *d += s;
+                                    }
+                                }
+                                for p in 1..half {
+                                    buf.copy_within(2 * p * jw..2 * p * jw + jw, p * jw);
+                                }
+                                if len % 2 == 1 {
+                                    buf.copy_within((len - 1) * jw..(len - 1) * jw + jw, half * jw);
+                                    len = half + 1;
+                                } else {
+                                    len = half;
+                                }
+                            }
+                            c[r * n + j0..r * n + j0 + jw].copy_from_slice(&buf[..jw]);
+                            j0 += jw;
+                        }
+                    }
+                }
+            }
+        }
+    };
+}
+
+tiled_kernels!(gemm_f32, panel_f32, f32);
+tiled_kernels!(gemm_f64, panel_f64, f64);
+
+/// Tiled multi-threaded GEMM in an arbitrary (software-rounded) work
+/// precision — the generic ablation path, parallelized over rows. Every
+/// element is computed exactly as in [`crate::gemm::generic_gemm`].
+pub fn gemm_generic(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    p: Precision,
+    strategy: ReduceStrategy,
+    par: &ParallelismConfig,
+) -> Vec<f64> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f64; m * n];
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let threads = par.threads.max(1).min(m);
+    let panel = |a: &[f64], b: &[f64], c: &mut [f64], i0: usize, rows: usize| {
+        let mut prods = vec![0.0f64; k];
+        for r in 0..rows {
+            let arow = &a[(i0 + r) * k..(i0 + r + 1) * k];
+            for j in 0..n {
+                for (kk, pr) in prods.iter_mut().enumerate() {
+                    *pr = p.quantize(arow[kk] * b[kk * n + j]);
+                }
+                c[r * n + j] = super::generic_reduce(&prods, p, strategy);
+            }
+        }
+    };
+    if threads == 1 {
+        panel(a, b, &mut c, 0, m);
+        return c;
+    }
+    let rows_per = (m + threads - 1) / threads;
+    std::thread::scope(|s| {
+        for (ci, chunk) in c.chunks_mut(rows_per * n).enumerate() {
+            let i0 = ci * rows_per;
+            let panel = &panel;
+            s.spawn(move || {
+                let rows = chunk.len() / n;
+                panel(a, b, chunk, i0, rows);
+            });
+        }
+    });
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::kernels;
+    use crate::rng::{Distribution, Xoshiro256pp};
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let d = Distribution::uniform_pm1();
+        (0..n).map(|_| d.sample(&mut rng)).collect()
+    }
+
+    fn configs() -> Vec<ParallelismConfig> {
+        let mut out = Vec::new();
+        for threads in [1usize, 2, 4] {
+            for tiles in [
+                TileConfig::DEFAULT,
+                TileConfig::new(1, 3, 5),   // degenerate tiny tiles
+                TileConfig::new(2, 7, 64),  // odd K blocks
+                TileConfig::new(8, 512, 16),
+            ] {
+                out.push(ParallelismConfig { threads, tiles });
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn tiled_f64_bitwise_equals_reference_all_strategies() {
+        // Ragged sizes on purpose: odd K (pairwise carry), n > nc, m not a
+        // multiple of the thread count.
+        let (m, k, n) = (7, 29, 83);
+        let a = rand_vec(m * k, 1);
+        let b = rand_vec(k * n, 2);
+        let refs = [
+            (ReduceStrategy::Sequential, kernels::seq_gemm_f64(&a, &b, m, k, n)),
+            (ReduceStrategy::Fma, kernels::fma_gemm_f64(&a, &b, m, k, n)),
+            (ReduceStrategy::Pairwise, kernels::pairwise_gemm_f64(&a, &b, m, k, n)),
+        ];
+        for par in configs() {
+            for (strategy, want) in &refs {
+                let got = gemm_f64(&a, &b, m, k, n, *strategy, &par);
+                assert_eq!(&got, want, "{strategy:?} diverged under {par:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_f32_bitwise_equals_reference_all_strategies() {
+        let (m, k, n) = (9, 64, 33);
+        let a: Vec<f32> = rand_vec(m * k, 3).iter().map(|&x| x as f32).collect();
+        let b: Vec<f32> = rand_vec(k * n, 4).iter().map(|&x| x as f32).collect();
+        let refs = [
+            (ReduceStrategy::Sequential, kernels::seq_gemm_f32(&a, &b, m, k, n)),
+            (ReduceStrategy::Fma, kernels::fma_gemm_f32(&a, &b, m, k, n)),
+            (ReduceStrategy::Pairwise, kernels::pairwise_gemm_f32(&a, &b, m, k, n)),
+        ];
+        for par in configs() {
+            for (strategy, want) in &refs {
+                let got = gemm_f32(&a, &b, m, k, n, *strategy, &par);
+                assert_eq!(&got, want, "{strategy:?} diverged under {par:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn generic_tiled_matches_generic_reference() {
+        let (m, k, n) = (5, 21, 18);
+        let p = Precision::Bf16;
+        let a: Vec<f64> = rand_vec(m * k, 5).iter().map(|&x| p.quantize(x)).collect();
+        let b: Vec<f64> = rand_vec(k * n, 6).iter().map(|&x| p.quantize(x)).collect();
+        for strategy in
+            [ReduceStrategy::Sequential, ReduceStrategy::Fma, ReduceStrategy::Pairwise]
+        {
+            let want = crate::gemm::generic_gemm(&a, &b, m, k, n, p, strategy);
+            for par in configs() {
+                let got = gemm_generic(&a, &b, m, k, n, p, strategy, &par);
+                assert_eq!(got, want, "{strategy:?} diverged under {par:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let par = ParallelismConfig::with_threads(4);
+        assert!(gemm_f64(&[], &[], 0, 0, 0, ReduceStrategy::Sequential, &par).is_empty());
+        // k = 0: all zeros, any shape
+        let c = gemm_f64(&[], &[], 3, 0, 2, ReduceStrategy::Pairwise, &par);
+        assert_eq!(c, vec![0.0; 6]);
+        // single row, more threads than rows
+        let c1 = gemm_f64(&[2.0, 3.0], &[10.0, 100.0], 1, 2, 1, ReduceStrategy::Sequential, &par);
+        assert_eq!(c1, vec![2.0 * 10.0 + 3.0 * 100.0]);
+    }
+
+    #[test]
+    fn from_args_parses_flags() {
+        let args = crate::cli::Args::parse_from(
+            "x --threads 4 --mc 32 --kc 128 --nc 64".split_whitespace().map(String::from),
+        );
+        let par = ParallelismConfig::from_args(&args);
+        assert_eq!(par.threads, 4);
+        assert_eq!(par.tiles, TileConfig::new(32, 128, 64));
+        let auto = crate::cli::Args::parse_from(
+            "x --threads 0".split_whitespace().map(String::from),
+        );
+        assert!(ParallelismConfig::from_args(&auto).threads >= 1);
+    }
+}

@@ -16,6 +16,20 @@
 //!   calibration protocol, and the PJRT runtime that executes the AOT
 //!   artifacts. Python is never on the request path.
 //!
+//! ## The execution layer: tiled, parallel, schedule-preserving
+//!
+//! All GEMMs run on the cache-blocked, multi-threaded engine in
+//! [`gemm::tiled`] (configured by [`gemm::ParallelismConfig`]). Its load-
+//! bearing invariant: **every output element's K-reduction order is
+//! bitwise-identical to the naive reference kernels** in
+//! [`gemm::kernels`], for all three [`gemm::ReduceStrategy`] variants.
+//! V-ABFT's variance model characterizes *where rounding happens* along
+//! each element's accumulation chain, so the engine parallelizes and
+//! tiles only across output rows and columns — never across K within one
+//! element — and e_max calibrated on the naive kernels remains valid at
+//! any thread count or tile shape (locked in by
+//! `tests/tiled_equivalence.rs`).
+//!
 //! ## Quick start
 //!
 //! ```
@@ -28,7 +42,7 @@
 //!
 //! let engine = GemmEngine::new(AccumModel::wide(Precision::Bf16));
 //! let policy = VerifyPolicy::default();
-//! let mut ft = FtGemm::new(engine, Box::new(VabftThreshold::default()), policy);
+//! let ft = FtGemm::new(engine, Box::new(VabftThreshold::default()), policy);
 //! let out = ft.multiply(&a, &b).unwrap();
 //! assert_eq!(out.c.rows(), 64);
 //! assert_eq!(out.report.verdict, Verdict::Clean);
@@ -41,6 +55,7 @@ pub mod bench_harness;
 pub mod calibrate;
 pub mod cli;
 pub mod coordinator;
+pub mod error;
 pub mod experiments;
 pub mod fp;
 pub mod gemm;
@@ -57,9 +72,14 @@ pub mod abft {
     //! Algorithm-Based Fault Tolerance core: checksum encoding,
     //! verification, localization and online correction (paper §2.2),
     //! plus block-wise tiling (§5.2).
+    //!
+    //! [`FtGemm`] (monolithic, block_k = K) and [`BlockwiseFtGemm`]
+    //! (per-K-block verification) are two parameterizations of one shared
+    //! verification pipeline (the private `pipeline` module).
     pub mod blockwise;
     pub mod encode;
     pub mod ftgemm;
+    pub(crate) mod pipeline;
     pub mod verify;
     pub use blockwise::*;
     pub use encode::*;
@@ -70,11 +90,12 @@ pub mod abft {
 /// Convenient re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::abft::{
-        ChecksumEncoding, FtGemm, FtGemmOutput, Verdict, VerifyPolicy, VerifyReport,
+        BlockwiseFtGemm, BlockwiseOutput, ChecksumEncoding, FtGemm, FtGemmOutput, Verdict,
+        VerifyPolicy, VerifyReport,
     };
     pub use crate::calibrate::{CalibrationProtocol, EmaxModel, EmaxTable, Platform};
     pub use crate::fp::{dd::Dd, Precision};
-    pub use crate::gemm::{AccumModel, GemmEngine};
+    pub use crate::gemm::{AccumModel, GemmEngine, ParallelismConfig, TileConfig};
     pub use crate::inject::{BitFlip, Campaign, CampaignConfig, FlipDirection, InjectionSite};
     pub use crate::matrix::{Matrix, RowStats};
     pub use crate::rng::{Distribution, Rng, SplitMix64, Xoshiro256pp};

@@ -5,6 +5,9 @@
 //! vabft calibrate  [--platform cpu|gpu|npu] [--precision fp32] [--trials N] [--online]
 //! vabft campaign   [--precision bf16] [--dist n11|nz|u|u01|trunc] [--trials N] [--online]
 //! vabft tightness  [--precision fp32] [--sizes 128,256,512] [--trials N]
+//! vabft gemm       [--m 512 --k 512 --n 512] [--strategy seq|fma|pairwise]
+//!                  [--threads T] [--mc M --kc K --nc N] [--reps R]
+//!                  # tiled parallel engine vs naive kernel (bitwise-checked)
 //! vabft artifacts  [--dir artifacts]     # list AOT artifacts
 //! vabft info                             # e_max table, subcommands
 //! ```
@@ -23,11 +26,12 @@ fn main() {
         Some("calibrate") => cmd_calibrate(&args),
         Some("campaign") => cmd_campaign(&args),
         Some("tightness") => cmd_tightness(&args),
+        Some("gemm") => cmd_gemm(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("info") | None => cmd_info(),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
-            eprintln!("usage: vabft [calibrate|campaign|tightness|artifacts|info] [--flags]");
+            eprintln!("usage: vabft [calibrate|campaign|tightness|gemm|artifacts|info] [--flags]");
             std::process::exit(2);
         }
     }
@@ -219,6 +223,72 @@ fn cmd_tightness(args: &Args) {
     t.print();
 }
 
+/// Tiled parallel engine vs the naive reference kernel: wall-clock
+/// comparison plus a bitwise equality check (the schedule-preservation
+/// invariant, end to end). `ParallelismConfig` comes straight from the
+/// CLI flags (`--threads/--mc/--kc/--nc`).
+fn cmd_gemm(args: &Args) {
+    use vabft::bench_harness::time_once;
+    use vabft::gemm::{kernels, tiled, ParallelismConfig, ReduceStrategy};
+    use vabft::rng::Xoshiro256pp;
+    use vabft::rng::Rng;
+
+    let m = args.opt_or("m", 512usize);
+    let k = args.opt_or("k", 512usize);
+    let n = args.opt_or("n", 512usize);
+    let reps = args.opt_or("reps", 3usize);
+    let strategy = match args.opt("strategy").unwrap_or("seq") {
+        "seq" | "sequential" => ReduceStrategy::Sequential,
+        "fma" => ReduceStrategy::Fma,
+        "pair" | "pairwise" => ReduceStrategy::Pairwise,
+        other => {
+            eprintln!("unknown strategy '{other}' (seq|fma|pairwise)");
+            std::process::exit(2);
+        }
+    };
+    let par = ParallelismConfig::from_args(args);
+    println!(
+        "fp32 GEMM {m}x{k}x{n}, strategy {}, threads {}, tiles (mc {}, kc {}, nc {})",
+        strategy.name(),
+        par.threads,
+        par.tiles.mc,
+        par.tiles.kc,
+        par.tiles.nc
+    );
+
+    let mut rng = Xoshiro256pp::seed_from_u64(0xBE);
+    let a: Vec<f32> = (0..m * k).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
+
+    let naive = |a: &[f32], b: &[f32]| kernels::reference_gemm_f32(a, b, m, k, n, strategy);
+
+    let mut t =
+        Table::new("Tiled parallel engine vs naive kernel", &["engine", "best", "speedup"]);
+    let mut t_naive = std::time::Duration::MAX;
+    let mut t_tiled = std::time::Duration::MAX;
+    let mut c_naive = Vec::new();
+    let mut c_tiled = Vec::new();
+    for _ in 0..reps.max(1) {
+        let mut out = Vec::new();
+        let d = time_once(|| out = naive(&a, &b));
+        t_naive = t_naive.min(d);
+        c_naive = out;
+        let mut out2 = Vec::new();
+        let d2 = time_once(|| out2 = tiled::gemm_f32(&a, &b, m, k, n, strategy, &par));
+        t_tiled = t_tiled.min(d2);
+        c_tiled = out2;
+    }
+    assert_eq!(c_naive, c_tiled, "schedule invariant violated: outputs differ");
+    t.row(vec!["naive ikj".into(), format!("{t_naive:?}"), "1.00x".into()]);
+    t.row(vec![
+        format!("tiled x{}", par.threads),
+        format!("{t_tiled:?}"),
+        format!("{:.2}x", t_naive.as_secs_f64() / t_tiled.as_secs_f64()),
+    ]);
+    t.print();
+    println!("bitwise equality: OK ({} elements)", c_naive.len());
+}
+
 fn cmd_artifacts(args: &Args) {
     let dir = std::path::PathBuf::from(args.opt("dir").unwrap_or("artifacts"));
     match vabft::runtime::PjrtRuntime::from_artifacts(&dir) {
@@ -262,5 +332,5 @@ fn cmd_info() {
         }
     }
     t.print();
-    println!("subcommands: calibrate | campaign | tightness | artifacts | info");
+    println!("subcommands: calibrate | campaign | tightness | gemm | artifacts | info");
 }

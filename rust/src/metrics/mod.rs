@@ -98,6 +98,7 @@ impl Histogram {
 pub struct ServiceMetrics {
     pub jobs_submitted: Counter,
     pub jobs_completed: Counter,
+    pub batches_submitted: Counter,
     pub faults_detected: Counter,
     pub faults_corrected: Counter,
     pub rows_recomputed: Counter,
@@ -111,9 +112,10 @@ impl ServiceMetrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "jobs={}/{} detected={} corrected={} recomputed_rows={} mean={:?} p95={:?}",
+            "jobs={}/{} batches={} detected={} corrected={} recomputed_rows={} mean={:?} p95={:?}",
             self.jobs_completed.get(),
             self.jobs_submitted.get(),
+            self.batches_submitted.get(),
             self.faults_detected.get(),
             self.faults_corrected.get(),
             self.rows_recomputed.get(),

@@ -9,7 +9,8 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::error::{Context, Result};
 
 /// One artifact: a lowered HLO-text module plus its metadata
 /// (shapes, dtypes, parameter layouts — whatever the producer recorded).

@@ -13,12 +13,15 @@
 //! crate's xla_extension 0.5.1 rejects; the text parser reassigns ids.
 
 mod manifest;
+pub mod xla_stub;
 pub use manifest::{ArtifactEntry, Manifest};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::error::{Context, Result};
+use xla_stub as xla;
 
 /// Default artifact directory, overridable with VABFT_ARTIFACTS.
 pub fn artifacts_dir() -> PathBuf {
@@ -119,7 +122,7 @@ impl PjrtRuntime {
 /// Build an f32 literal with the given dimensions.
 pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
     let n: i64 = dims.iter().product();
-    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch: {dims:?} vs {}", data.len());
+    crate::ensure!(n as usize == data.len(), "shape/data mismatch: {dims:?} vs {}", data.len());
     xla::Literal::vec1(data)
         .reshape(dims)
         .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
@@ -128,7 +131,7 @@ pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
 /// Build an i32 literal with the given dimensions.
 pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
     let n: i64 = dims.iter().product();
-    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    crate::ensure!(n as usize == data.len(), "shape/data mismatch");
     xla::Literal::vec1(data)
         .reshape(dims)
         .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))

@@ -1,0 +1,233 @@
+//! Offline stand-in for the `xla` (xla_extension / PJRT) crate.
+//!
+//! The offline registry has no XLA bindings, so this module provides the
+//! small API surface [`crate::runtime`] is written against:
+//!
+//! * [`Literal`] — typed host tensors (f32 / i32 / tuple) with reshape,
+//!   flattening and element counts. Fully functional.
+//! * [`PjRtClient`] / [`HloModuleProto`] / [`XlaComputation`] — artifact
+//!   loading parses and retains the HLO text, but `compile` reports that
+//!   no real PJRT backend is linked. The integration tests skip when
+//!   artifacts are absent, so `cargo test` stays green; linking a real
+//!   `xla_extension` only requires swapping this module back for the
+//!   crate of the same shape.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring the binding crate's (Debug-printable status).
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+type Result<T> = std::result::Result<T, XlaError>;
+
+/// Element types a [`Literal`] can hold.
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Native element types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    #[doc(hidden)]
+    fn wrap(data: Vec<Self>) -> LiteralData;
+    #[doc(hidden)]
+    fn unwrap(data: &LiteralData) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> LiteralData {
+        LiteralData::F32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<f32>> {
+        match data {
+            LiteralData::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> LiteralData {
+        LiteralData::I32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<i32>> {
+        match data {
+            LiteralData::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A host tensor: flat data plus dimensions.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: LiteralData,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data.to_vec()) }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(XlaError(format!(
+                "reshape: {} elements cannot take shape {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Flatten to a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .ok_or_else(|| XlaError("literal element type mismatch".to_string()))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            LiteralData::Tuple(v) => Ok(v),
+            _ => Ok(vec![self]),
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::Tuple(v) => v.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A parsed HLO-text module (text retained verbatim).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| XlaError(format!("read {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// A computation wrapping a parsed module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    module: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { module: proto.clone() }
+    }
+}
+
+/// The PJRT client. Construction succeeds (the registry itself is pure
+/// Rust); only `compile` requires the real backend.
+#[derive(Debug)]
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { platform: "cpu-stub (no PJRT backend linked)" })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError(
+            "no XLA/PJRT backend linked in this offline build; \
+             swap runtime::xla_stub for a real xla_extension binding to \
+             execute AOT artifacts"
+                .to_string(),
+        ))
+    }
+}
+
+/// A compiled executable. Never constructed by the stub (compile errors),
+/// but the type must exist so the runtime's execute path typechecks.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<B: Borrow<Literal>>(&self, _inputs: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError("stub executable cannot run".to_string()))
+    }
+}
+
+/// A device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError("stub buffer holds no data".to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_and_flatten() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn client_exists_but_compile_is_gated() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(!c.platform_name().is_empty());
+        let m = HloModuleProto { text: "HloModule test".to_string() };
+        assert!(c.compile(&XlaComputation::from_proto(&m)).is_err());
+    }
+
+    #[test]
+    fn non_tuple_literal_untuples_to_itself() {
+        let l = Literal::vec1(&[7i32]);
+        let parts = l.to_tuple().unwrap();
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].to_vec::<i32>().unwrap(), vec![7]);
+    }
+}

@@ -22,7 +22,8 @@
 mod data;
 pub use data::SyntheticCorpus;
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::error::{Context, Result};
 
 use crate::rng::{Rng, Xoshiro256pp};
 use crate::runtime::{literal_f32, literal_i32, ArtifactEntry, PjrtRuntime};
@@ -92,7 +93,7 @@ impl<'rt> Trainer<'rt> {
             .get(&cfg.artifact)
             .ok_or_else(|| anyhow!("artifact '{}' not in manifest", cfg.artifact))?
             .clone();
-        anyhow::ensure!(rt.has(&cfg.artifact), "artifact '{}' not compiled", cfg.artifact);
+        crate::ensure!(rt.has(&cfg.artifact), "artifact '{}' not compiled", cfg.artifact);
         let n_params: usize = entry
             .meta_parse("n_params")
             .ok_or_else(|| anyhow!("manifest missing n_params"))?;
@@ -170,7 +171,7 @@ impl<'rt> Trainer<'rt> {
         }
         // Detection: discard, re-execute without the transient fault.
         let (outs2, loss2, ratio2) = self.execute(tokens, None)?;
-        anyhow::ensure!(
+        crate::ensure!(
             ratio2 <= 1.0,
             "verification still failing after re-execution (ratio {ratio2})"
         );
@@ -206,7 +207,7 @@ impl<'rt> Trainer<'rt> {
             .rt
             .execute(&self.cfg.artifact, &literals)
             .context("train step execution")?;
-        anyhow::ensure!(
+        crate::ensure!(
             outs.len() == self.params.len() + 2,
             "expected {} outputs, got {}",
             self.params.len() + 2,

@@ -18,6 +18,7 @@ fn setup(workers: usize, online: bool) -> Coordinator {
             VerifyPolicy::offline()
         },
         threshold: Arc::new(|| Box::new(VabftThreshold::default())),
+        ..Default::default()
     };
     Coordinator::start(cfg)
 }

@@ -79,7 +79,7 @@ fn prop_no_false_positives_vabft() {
             let ft = FtGemm::new(
                 GemmEngine::new(model),
                 Box::new(VabftThreshold::default()),
-                if online { VerifyPolicy::detect_only(true) } else { VerifyPolicy::detect_only(false) },
+                VerifyPolicy::detect_only(online),
             );
             let out = ft.multiply(&a, &b).unwrap();
             assert_eq!(
@@ -187,6 +187,7 @@ fn prop_coordinator_routing_is_exact() {
         model: AccumModel::cpu(Precision::F32),
         policy: VerifyPolicy::default(),
         threshold: Arc::new(|| Box::new(VabftThreshold::default())),
+        ..Default::default()
     };
     let c = Coordinator::start(cfg);
     let mut cases = Cases::new(0xC00D);

@@ -1,0 +1,161 @@
+//! Schedule-preservation property tests for the tiled parallel engine
+//! (hand-rolled generators — the proptest crate is not in the offline
+//! registry; failing cases print their full configuration).
+//!
+//! The invariant V-ABFT depends on: for randomized (m, k, n, seed,
+//! AccumModel, tile sizes, thread counts 1/2/4), the tiled engine's output
+//! **and** pre-quantization accumulator are *bitwise equal* to the naive
+//! reference kernels, for all three `ReduceStrategy` variants. The
+//! reference is computed here from `gemm::kernels` / `gemm::generic_gemm`
+//! directly — independently of the engine's dispatch code — so a
+//! regression in either layer trips the test.
+
+use vabft::gemm::{
+    generic_gemm, kernels, AccumModel, GemmEngine, ParallelismConfig, ReduceStrategy, TileConfig,
+};
+use vabft::prelude::*;
+
+struct Cases {
+    rng: Xoshiro256pp,
+}
+
+impl Cases {
+    fn new(seed: u64) -> Cases {
+        Cases { rng: Xoshiro256pp::seed_from_u64(seed) }
+    }
+
+    fn dims(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.uniform_u64((hi - lo + 1) as u64) as usize
+    }
+
+    /// (input, work, out) triples covering all three kernel dispatch
+    /// paths: native f64, native f32, and the generic soft-float path.
+    fn precisions(&mut self) -> (Precision, Precision, Precision) {
+        match self.rng.uniform_u64(6) {
+            0 => (Precision::F64, Precision::F64, Precision::F64),
+            1 => (Precision::F32, Precision::F32, Precision::F32),
+            2 => (Precision::Bf16, Precision::F32, Precision::Bf16), // wide
+            3 => (Precision::F16, Precision::F32, Precision::F16),   // wide
+            4 => (Precision::F8E4M3, Precision::F32, Precision::F16), // fp8
+            _ => (Precision::Bf16, Precision::Bf16, Precision::Bf16), // generic
+        }
+    }
+}
+
+/// The naive reference: input quantization + reference kernel + one output
+/// rounding, mirroring the engine contract without touching its dispatch.
+fn reference(model: AccumModel, a: &Matrix, b: &Matrix) -> (Vec<f64>, Vec<f64>) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let aq: Vec<f64> = a.data().iter().map(|&x| model.input.quantize(x)).collect();
+    let bq: Vec<f64> = b.data().iter().map(|&x| model.input.quantize(x)).collect();
+    let acc: Vec<f64> = match model.work {
+        Precision::F64 => kernels::reference_gemm_f64(&aq, &bq, m, k, n, model.strategy),
+        Precision::F32 => {
+            let a32: Vec<f32> = aq.iter().map(|&x| x as f32).collect();
+            let b32: Vec<f32> = bq.iter().map(|&x| x as f32).collect();
+            kernels::reference_gemm_f32(&a32, &b32, m, k, n, model.strategy)
+                .into_iter()
+                .map(|x| x as f64)
+                .collect()
+        }
+        other => generic_gemm(&aq, &bq, m, k, n, other, model.strategy),
+    };
+    let c: Vec<f64> = if model.out != model.work {
+        acc.iter().map(|&x| model.out.quantize(x)).collect()
+    } else {
+        acc.clone()
+    };
+    (c, acc)
+}
+
+fn tile_grid() -> Vec<TileConfig> {
+    vec![
+        TileConfig::DEFAULT,
+        TileConfig::new(1, 3, 5),  // degenerate tiny tiles, odd K blocks
+        TileConfig::new(2, 7, 13), // ragged everything
+        TileConfig::new(8, 64, 16),
+    ]
+}
+
+#[test]
+fn prop_tiled_engine_bitwise_equals_naive_reference() {
+    let mut cases = Cases::new(0x711ED);
+    for case in 0..24 {
+        let (m, k, n) = (cases.dims(1, 12), cases.dims(1, 48), cases.dims(1, 32));
+        let (input, work, out) = cases.precisions();
+        let d = Distribution::normal_1_1();
+        let a = Matrix::sample(m, k, &d, &mut cases.rng);
+        let b = Matrix::sample(k, n, &d, &mut cases.rng);
+        for strategy in
+            [ReduceStrategy::Sequential, ReduceStrategy::Fma, ReduceStrategy::Pairwise]
+        {
+            let model = AccumModel { input, work, strategy, out };
+            let (want_c, want_acc) = reference(model, &a, &b);
+            for threads in [1usize, 2, 4] {
+                for tiles in tile_grid() {
+                    let par = ParallelismConfig { threads, tiles };
+                    let got = GemmEngine::with_parallelism(model, par).matmul(&a, &b);
+                    assert_eq!(
+                        got.acc.data(),
+                        want_acc.as_slice(),
+                        "case {case}: acc diverged ({m}x{k}x{n}, {model:?}, {par:?})"
+                    );
+                    assert_eq!(
+                        got.c.data(),
+                        want_c.as_slice(),
+                        "case {case}: c diverged ({m}x{k}x{n}, {model:?}, {par:?})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn larger_shapes_cross_tile_boundaries() {
+    // A few fixed shapes that are guaranteed to exercise multiple K-blocks,
+    // multiple column blocks and uneven row panels at every thread count.
+    let mut cases = Cases::new(0x5EED);
+    let d = Distribution::uniform_pm1();
+    for &(m, k, n) in &[(16usize, 130usize, 70usize), (7, 257, 33), (5, 64, 129)] {
+        let a = Matrix::sample(m, k, &d, &mut cases.rng);
+        let b = Matrix::sample(k, n, &d, &mut cases.rng);
+        for model in [
+            AccumModel::gpu_highprec(Precision::F32),
+            AccumModel::cpu(Precision::F64),
+            AccumModel::wide(Precision::Bf16),
+        ] {
+            let (want_c, want_acc) = reference(model, &a, &b);
+            for threads in [1usize, 2, 4] {
+                let par = ParallelismConfig::with_threads(threads)
+                    .tiles(TileConfig::new(4, 32, 24));
+                let got = GemmEngine::with_parallelism(model, par).matmul(&a, &b);
+                assert_eq!(got.acc.data(), want_acc.as_slice(), "{model:?} t={threads}");
+                assert_eq!(got.c.data(), want_c.as_slice(), "{model:?} t={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn encoded_multiply_is_thread_invariant() {
+    // The ABFT layer multiplies *encoded* operands via matmul_mixed with
+    // wide checksum columns; that path must also be schedule-invariant.
+    let mut rng = Xoshiro256pp::seed_from_u64(0xABF7);
+    let d = Distribution::normal_1_1();
+    let a = Matrix::sample(9, 80, &d, &mut rng);
+    let b = Matrix::sample(80, 24, &d, &mut rng);
+    let model = AccumModel::wide(Precision::Bf16);
+    let base_engine = GemmEngine::new(model);
+    let enc = vabft::abft::ChecksumEncoding::encode_b_wide(&b, &base_engine);
+    let base = base_engine.matmul_mixed(&a, &enc.b_encoded, enc.wide_cols());
+    for threads in [2usize, 4] {
+        for tiles in tile_grid() {
+            let par = ParallelismConfig { threads, tiles };
+            let engine = GemmEngine::with_parallelism(model, par);
+            let got = engine.matmul_mixed(&a, &enc.b_encoded, enc.wide_cols());
+            assert_eq!(got.acc.data(), base.acc.data(), "{par:?}");
+            assert_eq!(got.c.data(), base.c.data(), "{par:?}");
+        }
+    }
+}
