@@ -1,12 +1,16 @@
 //! Serving demo: the L3 coordinator as a fault-tolerant GEMM service —
-//! register transformer-layer weights once, stream activation batches
-//! through the worker pool with a configurable soft-error rate, and report
-//! throughput / latency / detection counters. Optionally routes the GEMMs
-//! through the AOT-compiled L1 Pallas kernel via PJRT (`--pjrt`).
+//! register transformer-layer weights once (checksum encodings + V-ABFT
+//! statistics cached in the coordinator's LRU, the weight-stationary fast
+//! path), stream activation batches through the worker pool with a
+//! configurable soft-error rate, and report throughput / latency /
+//! detection counters. Also demos the handle-based request path
+//! (`register_weights` → `submit_prepared`), which skips the id lookup
+//! entirely. Optionally routes the GEMMs through the AOT-compiled L1
+//! Pallas kernel via PJRT (`--pjrt`).
 //!
 //! ```text
 //! cargo run --release --example serving -- [--requests N] [--workers W]
-//!     [--fault-rate 0.05] [--offline] [--pjrt]
+//!     [--fault-rate 0.05] [--offline] [--block-k B] [--pjrt]
 //!     [--threads T] [--mc M --kc K --nc N]   # per-worker engine config
 //! ```
 
@@ -14,7 +18,9 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use vabft::cli::Args;
-use vabft::coordinator::{Coordinator, CoordinatorConfig, GemmRequest, InjectSpec};
+use vabft::coordinator::{
+    Coordinator, CoordinatorConfig, GemmRequest, InjectSpec, PreparedGemmRequest,
+};
 use vabft::inject::InjectionSite;
 use vabft::prelude::*;
 
@@ -30,6 +36,7 @@ fn main() -> vabft::error::Result<()> {
     }
 
     let (k, n) = (256usize, 128usize);
+    let block_k = args.opt_or("block-k", 0usize); // 0 = monolithic
     let cfg = CoordinatorConfig {
         workers,
         queue_depth: 32,
@@ -37,14 +44,19 @@ fn main() -> vabft::error::Result<()> {
         policy: if online { VerifyPolicy::default() } else { VerifyPolicy::offline() },
         threshold: Arc::new(|| Box::new(VabftThreshold::default())),
         parallelism: vabft::gemm::ParallelismConfig::from_args(&args),
+        weight_capacity: 64,
+        block_k: if block_k == 0 { None } else { Some(block_k) },
     };
     let coord = Coordinator::start(cfg);
 
-    // Register a few "layers" of weights (encoded + summarized once).
+    // Register a few "layers" of weights: checksum encoding + V-ABFT
+    // statistics computed once per layer, cached in the coordinator's LRU
+    // — every request after this is pure weight-stationary warm path.
     let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let mut handles = Vec::new();
     for wid in 0..4u32 {
         let b = Matrix::sample_in(k, n, &Distribution::normal_1_1(), Precision::Bf16, &mut rng);
-        coord.register_weight(wid, &b);
+        handles.push(coord.register_weights(wid, &b));
     }
     println!("registered 4 weight matrices ({k}x{n}), {workers} workers, online={online}");
 
@@ -92,6 +104,37 @@ fn main() -> vabft::error::Result<()> {
     println!("metrics: {}", coord.metrics().summary());
     assert_eq!(verdicts[1] + verdicts[2], injected, "every injected fault must be caught");
     assert_eq!(verdicts[3], 0);
+
+    // Handle-based fast path: the caller holds the PreparedWeights handle,
+    // so the request skips the id → cache lookup and stays valid across
+    // evictions/re-registrations (useful for pinned hot layers).
+    let t1 = Instant::now();
+    let warm = requests.min(64);
+    let pending: Vec<_> = (0..warm)
+        .map(|i| {
+            let a = Matrix::sample_in(
+                16,
+                k,
+                &Distribution::near_zero_normal(),
+                Precision::Bf16,
+                &mut rng,
+            );
+            coord.submit_prepared(PreparedGemmRequest {
+                a,
+                weights: Arc::clone(&handles[i % handles.len()]),
+                inject: None,
+            })
+        })
+        .collect();
+    for r in pending {
+        let out = r.recv().unwrap().result.unwrap();
+        assert_eq!(out.report.verdict, Verdict::Clean);
+    }
+    let wall1 = t1.elapsed();
+    println!(
+        "handle path: {warm} requests in {wall1:?} ({:.0} req/s)",
+        warm as f64 / wall1.as_secs_f64()
+    );
     coord.shutdown();
     println!("serving demo OK");
     Ok(())

@@ -1,0 +1,124 @@
+//! Weight-stationary FT-GEMM: cold (checksum encode + B statistics per
+//! call) vs warm (`PreparedWeights` computed once) — the serving-shaped
+//! amortization the coordinator's `register_weights` path relies on.
+//!
+//! Serving shape: a small activation batch (M = 8) against square weights
+//! (quick: 512², full: adds 1024²), across all three reduction strategies.
+//! Every measured pair is checked for **bitwise-identical outputs and
+//! identical verification decisions** — speed from amortization, never
+//! from changing the rounding schedule. The acceptance bar: at ≥512²
+//! weights the warm path must beat cold encode-per-call.
+//!
+//! ```text
+//! cargo bench --bench prepared_vs_cold [-- --full]
+//! ```
+
+use std::time::Duration;
+
+use vabft::abft::{FtGemm, Verdict, VerifyPolicy};
+use vabft::bench_harness::{time_once, BenchMode};
+use vabft::fp::Precision;
+use vabft::gemm::{AccumModel, GemmEngine, ReduceStrategy};
+use vabft::matrix::Matrix;
+use vabft::report::Table;
+use vabft::rng::{Distribution, Xoshiro256pp};
+use vabft::threshold::VabftThreshold;
+
+fn best_of(reps: usize, mut f: impl FnMut() -> Duration) -> Duration {
+    (0..reps.max(1)).map(|_| f()).min().unwrap()
+}
+
+fn main() {
+    let mode = BenchMode::from_env();
+    mode.banner("prepared_vs_cold");
+    let reps = mode.pick(3, 5);
+    let sizes: Vec<usize> = mode.pick(vec![512], vec![512, 1024]);
+    let m = 8usize; // serving batch: the regime where encode cost dominates
+
+    let mut rng = Xoshiro256pp::seed_from_u64(0xC01D);
+    let d = Distribution::normal_1_1();
+
+    for &s in &sizes {
+        let (k, n) = (s, s);
+        let a = Matrix::sample_in(m, k, &d, Precision::Bf16, &mut rng);
+        let b = Matrix::sample_in(k, n, &d, Precision::Bf16, &mut rng);
+
+        let mut table = Table::new(
+            &format!("FT-GEMM {m}x{k}x{n} — cold vs PreparedWeights"),
+            &["strategy", "cold best", "warm best", "speedup", "bitwise"],
+        );
+        for strategy in
+            [ReduceStrategy::Sequential, ReduceStrategy::Fma, ReduceStrategy::Pairwise]
+        {
+            let model = AccumModel {
+                input: Precision::Bf16,
+                work: Precision::F32,
+                strategy,
+                out: Precision::Bf16,
+            };
+            let ft = FtGemm::new(
+                GemmEngine::new(model),
+                Box::new(VabftThreshold::default()),
+                VerifyPolicy::default(),
+            );
+            let prepared = ft.prepare(&b);
+
+            let mut cold = None;
+            let t_cold = best_of(reps, || {
+                time_once(|| cold = Some(ft.multiply(&a, &b).unwrap()))
+            });
+            let mut warm = None;
+            let t_warm = best_of(reps, || {
+                time_once(|| warm = Some(ft.multiply_prepared(&a, &prepared, None).unwrap()))
+            });
+            let (cold, warm) = (cold.unwrap(), warm.unwrap());
+
+            // Identity gate: outputs bitwise-equal, decisions identical.
+            assert_eq!(
+                cold.c.data(),
+                warm.c.data(),
+                "warm output diverged from cold at {s}² [{}]",
+                strategy.name()
+            );
+            assert_eq!(cold.report.verdict, warm.report.verdict);
+            assert_eq!(cold.report.verdict, Verdict::Clean, "clean data must verify clean");
+            assert_eq!(cold.report.detections.len(), warm.report.detections.len());
+
+            // Decision parity under an injected upset (detect + localize).
+            let inject = |o: &mut vabft::gemm::GemmOutput| {
+                let v = o.acc.get(3, 7);
+                o.acc.set(3, 7, v + 8.0);
+                o.c.set(3, 7, Precision::Bf16.quantize(v + 8.0));
+            };
+            let cold_f = ft.multiply_with_injection(&a, &b, inject).unwrap();
+            let inj: &dyn Fn(usize, &mut vabft::gemm::GemmOutput) = &|_, o| inject(o);
+            let warm_f = ft.multiply_prepared(&a, &prepared, Some(inj)).unwrap();
+            assert_eq!(cold_f.report.verdict, warm_f.report.verdict);
+            assert_eq!(cold_f.report.detections.len(), warm_f.report.detections.len());
+            assert_eq!(cold_f.report.detections[0].row, warm_f.report.detections[0].row);
+            assert_eq!(cold_f.report.detections[0].col, warm_f.report.detections[0].col);
+            assert_eq!(cold_f.c.data(), warm_f.c.data());
+
+            let speedup = t_cold.as_secs_f64() / t_warm.as_secs_f64();
+            // Acceptance bar: warm must beat cold at ≥512² weights.
+            if s >= 512 {
+                assert!(
+                    speedup > 1.0,
+                    "prepared path not faster at {s}² [{}]: {speedup:.2}x",
+                    strategy.name()
+                );
+            }
+            table.row(vec![
+                strategy.name().into(),
+                format!("{t_cold:?}"),
+                format!("{t_warm:?}"),
+                format!("{speedup:.2}x"),
+                "OK".into(),
+            ]);
+        }
+        table.print();
+    }
+    println!(
+        "prepared_vs_cold: warm path bitwise-identical (outputs + decisions) and faster at ≥512²"
+    );
+}

@@ -9,11 +9,12 @@
 //! block) in addition to the output column.
 //!
 //! [`BlockwiseFtGemm`] is the `block_k = KC` parameterization of the
-//! shared pipeline in [`crate::abft::pipeline`] — the same
+//! shared (private) `pipeline` module — the same
 //! detect/localize/correct/recompute implementation [`crate::abft::FtGemm`]
 //! runs at `block_k = K`, executing on the same tiled parallel engine.
 
 use crate::abft::pipeline;
+use crate::abft::prepared::PreparedWeights;
 use crate::abft::{VerifyPolicy, VerifyReport};
 use crate::error::Result;
 use crate::gemm::GemmEngine;
@@ -23,15 +24,38 @@ use crate::threshold::{Threshold, VabftThreshold};
 /// Output of a block-wise protected multiply.
 #[derive(Debug, Clone)]
 pub struct BlockwiseOutput {
+    /// The (possibly corrected) product, on the model's output grid.
     pub c: Matrix,
+    /// What verification saw and did, across all K-blocks.
     pub report: VerifyReport,
     /// Which K-block each detection occurred in (parallel to
     /// `report.detections`).
     pub detection_blocks: Vec<usize>,
+    /// Number of K-blocks the multiply was tiled into.
     pub blocks: usize,
 }
 
 /// Block-wise fault-tolerant GEMM over K tiles.
+///
+/// ```
+/// use vabft::prelude::*;
+///
+/// let mut rng = Xoshiro256pp::seed_from_u64(1);
+/// let d = Distribution::normal_1_1();
+/// let a = Matrix::sample(8, 96, &d, &mut rng);
+/// let b = Matrix::sample(96, 16, &d, &mut rng);
+///
+/// let engine = GemmEngine::new(AccumModel::wide(Precision::Bf16));
+/// let bw = BlockwiseFtGemm::new(engine, 32, VerifyPolicy::default());
+/// let out = bw.multiply(&a, &b).unwrap();
+/// assert_eq!(out.blocks, 3);                       // 96 = 3 × 32
+/// assert_eq!(out.report.verdict, Verdict::Clean);
+///
+/// // Weight-stationary: prepare once, multiply many times — bitwise-equal.
+/// let w = bw.prepare(&b);
+/// let warm = bw.multiply_prepared(&a, &w).unwrap();
+/// assert_eq!(warm.c.data(), out.c.data());
+/// ```
 pub struct BlockwiseFtGemm {
     engine: GemmEngine,
     threshold: Box<dyn Threshold>,
@@ -41,6 +65,7 @@ pub struct BlockwiseFtGemm {
 }
 
 impl BlockwiseFtGemm {
+    /// Build a blockwise executor with the default V-ABFT threshold.
     pub fn new(engine: GemmEngine, block_k: usize, policy: VerifyPolicy) -> BlockwiseFtGemm {
         assert!(block_k > 0);
         BlockwiseFtGemm {
@@ -63,8 +88,16 @@ impl BlockwiseFtGemm {
         self
     }
 
+    /// The engine this executor runs on.
     pub fn engine(&self) -> &GemmEngine {
         &self.engine
+    }
+
+    /// Precompute per-K-block checksum encodings and statistics for a
+    /// weight matrix at this executor's `block_k` granularity. See
+    /// [`PreparedWeights`].
+    pub fn prepare(&self, b: &Matrix) -> PreparedWeights {
+        PreparedWeights::prepare_blockwise(b, &self.engine, &self.policy, self.block_k)
     }
 
     /// Protected multiply with optional per-block fault injection
@@ -95,6 +128,45 @@ impl BlockwiseFtGemm {
     /// Protected multiply without injection.
     pub fn multiply(&self, a: &Matrix, b: &Matrix) -> Result<BlockwiseOutput> {
         self.multiply_with_injection(a, b, |_, _| {})
+    }
+
+    /// Protected multiply against prepared weights (the weight-stationary
+    /// warm path): per-block encodings and statistics come from the
+    /// handle, so no per-request O(K·N) work on B remains. Bitwise-equal
+    /// to [`BlockwiseFtGemm::multiply`]. Errors if the handle's block
+    /// granularity, model or verification point does not match.
+    pub fn multiply_prepared(&self, a: &Matrix, w: &PreparedWeights) -> Result<BlockwiseOutput> {
+        self.multiply_prepared_with_injection(a, w, |_, _| {})
+    }
+
+    /// Prepared-path multiply with per-block fault injection into the
+    /// partial accumulator (the experiment hook).
+    pub fn multiply_prepared_with_injection(
+        &self,
+        a: &Matrix,
+        w: &PreparedWeights,
+        mut inject: impl FnMut(usize, &mut Matrix),
+    ) -> Result<BlockwiseOutput> {
+        crate::ensure!(
+            w.block_k() == self.block_k,
+            "PreparedWeights block_k {} does not match executor block_k {}",
+            w.block_k(),
+            self.block_k
+        );
+        let out = pipeline::run_prepared(
+            &self.engine,
+            self.threshold.as_ref(),
+            &self.policy,
+            a,
+            w,
+            |bi, o| inject(bi, &mut o.acc),
+        )?;
+        Ok(BlockwiseOutput {
+            c: out.c,
+            report: out.report,
+            detection_blocks: out.detection_blocks,
+            blocks: out.blocks,
+        })
     }
 }
 

@@ -9,27 +9,18 @@
 //! upset.
 //!
 //! [`FtGemm`] is the monolithic (`block_k = K`) parameterization of the
-//! shared pipeline in [`crate::abft::pipeline`];
+//! shared (private) `pipeline` module;
 //! [`crate::abft::BlockwiseFtGemm`] is the same pipeline at
 //! `block_k = KC`. The detect/localize/correct/recompute stages are
-//! implemented exactly once, there.
+//! implemented exactly once, there. [`crate::abft::PreparedWeights`]
+//! caches the weight-side state for either parameterization.
 
-use crate::abft::encode::ChecksumEncoding;
 use crate::abft::pipeline;
+use crate::abft::prepared::PreparedWeights;
 use crate::error::Result;
 use crate::gemm::{GemmEngine, GemmOutput};
 use crate::matrix::Matrix;
-use crate::threshold::{PreparedBStats, Threshold, ThresholdContext};
-
-/// A weight matrix prepared for repeated protected multiplies: checksum
-/// encoding and threshold summary computed once (the serving fast path —
-/// vLLM-style coordinators multiply thousands of activations against the
-/// same weights).
-#[derive(Debug, Clone)]
-pub struct PreparedWeight {
-    pub enc: ChecksumEncoding,
-    pub stats: PreparedBStats,
-}
+use crate::threshold::Threshold;
 
 /// What the verification pipeline is allowed to do.
 #[derive(Debug, Clone, Copy)]
@@ -97,11 +88,15 @@ pub enum Verdict {
 /// One detected fault.
 #[derive(Debug, Clone, Copy)]
 pub struct Detection {
+    /// Output row the fault was detected in.
     pub row: usize,
     /// Localized column, if the syndrome was consistent.
     pub col: Option<usize>,
+    /// Verification difference D1 = rowsum − checksum (≈ fault magnitude).
     pub d1: f64,
+    /// Weighted verification difference D2 (≈ w(j) · fault magnitude).
     pub d2: f64,
+    /// The detection threshold |D1| was compared against.
     pub threshold: f64,
     /// True if the row was corrected in place; false means recomputed or
     /// left flagged.
@@ -111,9 +106,13 @@ pub struct Detection {
 /// Verification report for one multiply.
 #[derive(Debug, Clone)]
 pub struct VerifyReport {
+    /// Collapsed outcome across every checked row.
     pub verdict: Verdict,
+    /// Every row that exceeded its threshold.
     pub detections: Vec<Detection>,
+    /// Rows verified (M per K-block).
     pub rows_checked: usize,
+    /// Rows recomputed via the escalation path.
     pub rows_recomputed: usize,
 }
 
@@ -122,10 +121,29 @@ pub struct VerifyReport {
 pub struct FtGemmOutput {
     /// The (possibly corrected) product, on the model's output grid.
     pub c: Matrix,
+    /// What verification saw and did.
     pub report: VerifyReport,
 }
 
 /// Fault-tolerant GEMM executor.
+///
+/// ```
+/// use vabft::prelude::*;
+///
+/// let mut rng = Xoshiro256pp::seed_from_u64(1);
+/// let d = Distribution::normal_1_1();
+/// let a = Matrix::sample(16, 32, &d, &mut rng);
+/// let b = Matrix::sample(32, 24, &d, &mut rng);
+///
+/// let ft = FtGemm::new(
+///     GemmEngine::new(AccumModel::wide(Precision::Bf16)),
+///     Box::new(VabftThreshold::default()),
+///     VerifyPolicy::default(),
+/// );
+/// let out = ft.multiply(&a, &b).unwrap();
+/// assert_eq!(out.report.verdict, Verdict::Clean);
+/// assert_eq!((out.c.rows(), out.c.cols()), (16, 24));
+/// ```
 pub struct FtGemm {
     engine: GemmEngine,
     threshold: Box<dyn Threshold>,
@@ -133,32 +151,35 @@ pub struct FtGemm {
 }
 
 impl FtGemm {
+    /// Build an executor from an engine, a threshold algorithm and a
+    /// verification policy.
     pub fn new(engine: GemmEngine, threshold: Box<dyn Threshold>, policy: VerifyPolicy) -> FtGemm {
         FtGemm { engine, threshold, policy }
     }
 
+    /// The engine this executor runs on.
     pub fn engine(&self) -> &GemmEngine {
         &self.engine
     }
 
+    /// The verification policy this executor applies.
     pub fn policy(&self) -> VerifyPolicy {
         self.policy
     }
 
-    /// Encode a weight matrix for this executor's verification mode:
-    /// online policies keep checksum columns in the FP32 datapath
-    /// (fused-kernel ABFT), offline policies store them on the input grid.
-    fn encode(&self, b: &Matrix) -> ChecksumEncoding {
-        if self.policy.online {
-            ChecksumEncoding::encode_b_wide(b, &self.engine)
-        } else {
-            ChecksumEncoding::encode_b(b, &self.engine)
-        }
+    /// Precompute checksum encoding + threshold statistics for a weight
+    /// matrix at monolithic granularity (`block_k = K`) — the serving fast
+    /// path: vLLM-style coordinators multiply thousands of activations
+    /// against the same weights. See [`PreparedWeights`].
+    pub fn prepare(&self, b: &Matrix) -> PreparedWeights {
+        PreparedWeights::prepare(b, &self.engine, &self.policy)
     }
 
-    /// Precompute encoding + threshold summary for a weight matrix.
-    pub fn prepare(&self, b: &Matrix) -> PreparedWeight {
-        PreparedWeight { enc: self.encode(b), stats: PreparedBStats::of(b) }
+    /// Precompute weight-side state at `block_k` granularity (per-K-block
+    /// encodings and statistics, paper §5.2). The resulting handle also
+    /// drives [`crate::abft::BlockwiseFtGemm::multiply_prepared`].
+    pub fn prepare_blockwise(&self, b: &Matrix, block_k: usize) -> PreparedWeights {
+        PreparedWeights::prepare_blockwise(b, &self.engine, &self.policy, block_k)
     }
 
     /// Protected multiply: C = A·B with detection / correction per policy.
@@ -166,38 +187,38 @@ impl FtGemm {
         self.multiply_with_injection(a, b, |_| {})
     }
 
-    /// Protected multiply against a prepared weight (serving hot path: no
-    /// re-encoding, no O(KN) statistics pass).
+    /// Protected multiply against prepared weights (serving hot path: no
+    /// re-encoding, no O(K·N) statistics pass over B). Outputs and
+    /// verification decisions are bitwise-identical to the cold path *at
+    /// the handle's block granularity*: to [`FtGemm::multiply`] for a
+    /// monolithic handle ([`FtGemm::prepare`]), to
+    /// [`crate::abft::BlockwiseFtGemm::multiply`] at the matching
+    /// `block_k` for a blockwise handle — blockwise partials are
+    /// aggregated with intermediate work-precision roundings, so the two
+    /// granularities legitimately differ from each other by O(u).
+    ///
+    /// `inject`, if given, is the experiment hook: it is invoked once per
+    /// prepared K-block (once total for a monolithic handle) with the
+    /// block index and the encoded partial product.
     pub fn multiply_prepared(
         &self,
         a: &Matrix,
-        w: &PreparedWeight,
-        inject: Option<&dyn Fn(&mut GemmOutput)>,
+        w: &PreparedWeights,
+        inject: Option<&dyn Fn(usize, &mut GemmOutput)>,
     ) -> Result<FtGemmOutput> {
-        let mut out = self.engine.matmul_mixed(a, &w.enc.b_encoded, w.enc.wide_cols());
-        if let Some(f) = inject {
-            f(&mut out);
-        }
-        let thresholds = self.threshold.thresholds_prepared(a, &w.stats, &self.ctx());
-        let weights = crate::abft::verify::weight_vector(w.enc.n);
-        let bv = pipeline::verify_block(
+        let out = pipeline::run_prepared(
             &self.engine,
+            self.threshold.as_ref(),
             &self.policy,
-            &w.enc,
-            &thresholds,
-            &weights,
-            out,
             a,
-            &w.stats.b,
-        );
-        let verdict = pipeline::verdict_of(&bv.detections, bv.rows_recomputed);
-        let report = VerifyReport {
-            verdict,
-            rows_checked: a.rows(),
-            rows_recomputed: bv.rows_recomputed,
-            detections: bv.detections,
-        };
-        Ok(FtGemmOutput { c: pipeline::finalize(bv.part, &self.engine), report })
+            w,
+            |bi, o| {
+                if let Some(f) = inject {
+                    f(bi, o)
+                }
+            },
+        )?;
+        Ok(FtGemmOutput { c: out.c, report: out.report })
     }
 
     /// Protected multiply with fault injection between compute and verify
@@ -224,10 +245,6 @@ impl FtGemm {
             },
         )?;
         Ok(FtGemmOutput { c: out.c, report: out.report })
-    }
-
-    fn ctx(&self) -> ThresholdContext {
-        pipeline::threshold_ctx(&self.engine, &self.policy)
     }
 }
 

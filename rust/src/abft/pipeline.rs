@@ -19,6 +19,7 @@
 //! keeps every threshold valid here regardless of thread count.
 
 use crate::abft::encode::ChecksumEncoding;
+use crate::abft::prepared::PreparedWeights;
 use crate::abft::verify::{check_row, correct_in_place, localize, weight_vector, Localization};
 use crate::abft::{Detection, Verdict, VerifyPolicy, VerifyReport};
 use crate::error::Result;
@@ -153,10 +154,11 @@ pub(crate) fn finalize(acc: Matrix, engine: &GemmEngine) -> Matrix {
     acc.quantized(engine.model().out)
 }
 
-/// Run the K-tiled FT pipeline: for each `block_k`-deep tile of K, encode
-/// the B-block checksums, execute on the engine, apply the injection hook,
-/// verify/correct/recompute, then aggregate verified partials in the work
-/// precision and round once at the end.
+/// Run the K-tiled FT pipeline cold: prepare the weight-side state for
+/// this call (per-block checksum encodings + statistics), then run the
+/// prepared pipeline. Routing the cold path through [`run_prepared`] is
+/// what makes the warm (weight-stationary) path bitwise-identical *by
+/// construction* — there is exactly one execution path.
 ///
 /// `inject(block_index, encoded_output)` is the experiment hook; it sees
 /// the *encoded* partial product (data + checksum columns).
@@ -167,7 +169,7 @@ pub(crate) fn run_blocks(
     a: &Matrix,
     b: &Matrix,
     block_k: usize,
-    mut inject: impl FnMut(usize, &mut GemmOutput),
+    inject: impl FnMut(usize, &mut GemmOutput),
 ) -> Result<PipelineOutput> {
     assert_eq!(
         a.cols(),
@@ -179,11 +181,39 @@ pub(crate) fn run_blocks(
         b.cols()
     );
     assert!(block_k > 0, "block_k must be positive");
-    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let w = PreparedWeights::prepare_blockwise(b, engine, policy, block_k);
+    run_prepared(engine, threshold, policy, a, &w, inject)
+}
+
+/// Run the K-tiled FT pipeline against a [`PreparedWeights`] handle (the
+/// weight-stationary warm path): per prepared K-block, execute the cached
+/// encoded multiply, apply the injection hook, verify/correct/recompute
+/// against the cached statistics, then aggregate verified partials in the
+/// work precision and round once at the end.
+///
+/// Per-block thresholds are evaluated at the BLOCK reduction depth, so
+/// e_max (and hence T) tightens with `block_k` exactly as on the cold
+/// path. Shape or model/policy mismatches return an error.
+pub(crate) fn run_prepared(
+    engine: &GemmEngine,
+    threshold: &dyn Threshold,
+    policy: &VerifyPolicy,
+    a: &Matrix,
+    w: &PreparedWeights,
+    mut inject: impl FnMut(usize, &mut GemmOutput),
+) -> Result<PipelineOutput> {
+    w.check_compatible(engine, policy)?;
+    crate::ensure!(
+        a.cols() == w.k(),
+        "FT-GEMM shape mismatch: A is {}x{}, prepared weights cover K = {}",
+        a.rows(),
+        a.cols(),
+        w.k()
+    );
+    let (m, n) = (a.rows(), w.n());
     let model = engine.model();
-    let ctx = threshold_ctx(engine, policy);
-    let blocks = (k + block_k - 1) / block_k;
-    let single = blocks == 1;
+    let ctx = *w.ctx();
+    let blocks = w.num_blocks();
     // Position weights depend only on N — hoisted out of the block loop.
     let weights = weight_vector(n);
 
@@ -192,31 +222,32 @@ pub(crate) fn run_blocks(
     let mut detection_blocks = Vec::new();
     let mut rows_recomputed = 0usize;
 
-    for bi in 0..blocks {
-        let k0 = bi * block_k;
-        let k1 = (k0 + block_k).min(k);
-        // Monolithic case: borrow the operands, no copy.
-        let (a_own, b_own);
-        let (a_blk, b_blk): (&Matrix, &Matrix) = if single {
-            (a, b)
+    for (bi, blk) in w.blocks().iter().enumerate() {
+        // Monolithic case: borrow A, no copy.
+        let a_own;
+        let a_blk: &Matrix = if blk.k0 == 0 && blk.k1 == w.k() {
+            a
         } else {
-            a_own = Matrix::from_fn(m, k1 - k0, |i, j| a.get(i, k0 + j));
-            b_own = Matrix::from_fn(k1 - k0, n, |i, j| b.get(k0 + i, j));
-            (&a_own, &b_own)
+            a_own = Matrix::from_fn(m, blk.k1 - blk.k0, |i, j| a.get(i, blk.k0 + j));
+            &a_own
         };
 
-        let enc = if policy.online {
-            ChecksumEncoding::encode_b_wide(b_blk, engine)
-        } else {
-            ChecksumEncoding::encode_b(b_blk, engine)
-        };
-        let mut out = engine.matmul_mixed(a_blk, &enc.b_encoded, enc.wide_cols());
+        let mut out = engine.matmul_mixed(a_blk, &blk.enc.b_encoded, blk.enc.wide_cols());
         inject(bi, &mut out);
 
-        // Per-block thresholds: the reduction depth seen by verification
-        // is the BLOCK depth, so e_max (and hence T) tightens with bk.
-        let thresholds = threshold.thresholds(a_blk, b_blk, &ctx);
-        let bv = verify_block(engine, policy, &enc, &thresholds, &weights, out, a_blk, b_blk);
+        // Per-block thresholds from the cached B-side statistics; V-ABFT
+        // skips its O(K·N) pass over B entirely here.
+        let thresholds = threshold.thresholds_prepared(a_blk, &blk.stats, &ctx);
+        let bv = verify_block(
+            engine,
+            policy,
+            &blk.enc,
+            &thresholds,
+            &weights,
+            out,
+            a_blk,
+            &blk.stats.b,
+        );
 
         rows_recomputed += bv.rows_recomputed;
         let tagged = detection_blocks.len() + bv.detections.len();

@@ -1,0 +1,345 @@
+//! Weight-stationary serving state: [`PreparedWeights`].
+//!
+//! In inference serving the weight matrix B is reused across every request
+//! while the activations A change per request. The cold FT-GEMM path
+//! re-derives, per call, (a) B's checksum encoding (two engine-scheduled
+//! reductions per row of B, §2.2), (b) the V-ABFT B-side statistics
+//! (max/min/mean per K-block, Algorithm 1) and (c) the threshold context —
+//! all of which depend only on B, the accumulation model and the
+//! verification point. [`PreparedWeights`] computes those once, with the
+//! **same rounding schedule** as the live path, so every calibrated e_max
+//! stays valid and the warm path is bitwise-identical to the cold path in
+//! both outputs and verification decisions.
+//!
+//! This converts per-request `O(K·N · requests)` encode work into `O(K·N)`
+//! once per weight registration — the amortization argument of
+//! arithmetic-intensity-guided fault tolerance applied to the serving
+//! north star.
+//!
+//! The handle is block-granular: prepared at `block_k = K` it drives the
+//! monolithic [`crate::abft::FtGemm`] path, prepared at `block_k = KC` it
+//! drives [`crate::abft::BlockwiseFtGemm`] with per-K-block encodings and
+//! statistics (paper §5.2), each block verified at its own (tighter)
+//! reduction depth.
+//!
+//! ```
+//! use vabft::prelude::*;
+//!
+//! let mut rng = Xoshiro256pp::seed_from_u64(7);
+//! let d = Distribution::Normal { mean: 0.0, std: 1.0 };
+//! let a = Matrix::sample(8, 64, &d, &mut rng);
+//! let b = Matrix::sample(64, 32, &d, &mut rng);
+//!
+//! let ft = FtGemm::new(
+//!     GemmEngine::new(AccumModel::wide(Precision::Bf16)),
+//!     Box::new(VabftThreshold::default()),
+//!     VerifyPolicy::default(),
+//! );
+//! let cold = ft.multiply(&a, &b).unwrap();
+//! let w = ft.prepare(&b); // encode + statistics, once
+//! let warm = ft.multiply_prepared(&a, &w, None).unwrap();
+//! assert_eq!(cold.c.data(), warm.c.data()); // bitwise-identical
+//! assert_eq!(cold.report.verdict, warm.report.verdict);
+//! ```
+
+use crate::abft::encode::ChecksumEncoding;
+use crate::abft::pipeline;
+use crate::abft::VerifyPolicy;
+use crate::error::Result;
+use crate::gemm::{AccumModel, GemmEngine};
+use crate::matrix::Matrix;
+use crate::threshold::{BSummary, PreparedBStats, ThresholdContext};
+
+/// One K-block of a prepared weight matrix: its checksum encoding plus the
+/// statistics the threshold algorithms consume.
+#[derive(Debug, Clone)]
+pub struct PreparedBlock {
+    /// First K index covered by this block (inclusive).
+    pub k0: usize,
+    /// One past the last K index covered by this block.
+    pub k1: usize,
+    /// `[B_blk | B_blk·r1 | B_blk·r2]`, encoded under the engine's
+    /// schedule; checksum columns on the grid the verification policy
+    /// dictates (work precision online, input/output grid offline).
+    pub enc: ChecksumEncoding,
+    /// The block's data plus its one-pass V-ABFT summary (Σ|μ|, Σμ², Σσ²
+    /// with the extrema bound) — what [`crate::threshold::Threshold::thresholds_prepared`]
+    /// consumes.
+    pub stats: PreparedBStats,
+}
+
+/// A weight matrix prepared once for repeated protected multiplies — the
+/// weight-stationary serving fast path.
+///
+/// Holds, per K-block of granularity `block_k`:
+///
+/// * the ABFT column-checksum encoding of B (so no per-request encode),
+/// * the V-ABFT B-side statistics (so the per-request threshold cost is
+///   `O(M·K)` over A only, not `O(K·N)` over B),
+/// * and the resolved [`ThresholdContext`] for the accumulation model and
+///   verification point it was prepared under.
+///
+/// Everything is computed with the same engine-scheduled arithmetic as the
+/// cold path, so warm-path outputs and detect/localize decisions are
+/// **bitwise-identical** to encode-per-call — guaranteed structurally: the
+/// cold pipeline itself routes through a freshly-prepared handle.
+///
+/// A handle is valid for any engine with the same [`AccumModel`] and any
+/// [`crate::gemm::ParallelismConfig`] (schedule preservation), but is tied
+/// to the verification point (`policy.online`) it was prepared for;
+/// [`PreparedWeights::check_compatible`] enforces both.
+#[derive(Debug, Clone)]
+pub struct PreparedWeights {
+    blocks: Vec<PreparedBlock>,
+    k: usize,
+    n: usize,
+    block_k: usize,
+    model: AccumModel,
+    online: bool,
+    ctx: ThresholdContext,
+}
+
+impl PreparedWeights {
+    /// Prepare a weight matrix at monolithic granularity (`block_k = K`,
+    /// one encoding/statistics block — the [`crate::abft::FtGemm`] shape).
+    pub fn prepare(b: &Matrix, engine: &GemmEngine, policy: &VerifyPolicy) -> PreparedWeights {
+        Self::prepare_blockwise(b, engine, policy, b.rows().max(1))
+    }
+
+    /// Prepare a weight matrix at `block_k` granularity: one checksum
+    /// encoding and one statistics summary per K-block, matching the
+    /// blockwise pipeline's tiling (paper §5.2). Each block's thresholds
+    /// are later evaluated at the block's own reduction depth.
+    pub fn prepare_blockwise(
+        b: &Matrix,
+        engine: &GemmEngine,
+        policy: &VerifyPolicy,
+        block_k: usize,
+    ) -> PreparedWeights {
+        assert!(block_k > 0, "block_k must be positive");
+        let (k, n) = (b.rows(), b.cols());
+        let blocks_count = (k + block_k - 1) / block_k;
+        let mut blocks = Vec::with_capacity(blocks_count);
+        for bi in 0..blocks_count {
+            let k0 = bi * block_k;
+            let k1 = (k0 + block_k).min(k);
+            // The slice must be built exactly as the live pipeline builds
+            // it, so the encodings cover bit-for-bit the same operand.
+            // Owning the block (one O(K·N) copy, also paid by the cold
+            // path that prepares per call) is the price of a handle with
+            // no lifetime ties: the copy feeds the recompute-escalation
+            // operand and the non-V-ABFT threshold fallback.
+            let b_blk = if k0 == 0 && k1 == k {
+                b.clone()
+            } else {
+                Matrix::from_fn(k1 - k0, n, |i, j| b.get(k0 + i, j))
+            };
+            let enc = if policy.online {
+                ChecksumEncoding::encode_b_wide(&b_blk, engine)
+            } else {
+                ChecksumEncoding::encode_b(&b_blk, engine)
+            };
+            let bsum = BSummary::of(&b_blk);
+            blocks.push(PreparedBlock { k0, k1, enc, stats: PreparedBStats { b: b_blk, bsum } });
+        }
+        PreparedWeights {
+            blocks,
+            k,
+            n,
+            block_k,
+            model: engine.model(),
+            online: policy.online,
+            ctx: pipeline::threshold_ctx(engine, policy),
+        }
+    }
+
+    /// K (rows of the prepared weight matrix).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// N (columns of the prepared weight matrix).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The K-block granularity this handle was prepared at.
+    pub fn block_k(&self) -> usize {
+        self.block_k
+    }
+
+    /// Number of K-blocks (`ceil(K / block_k)`).
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// The per-block encodings and statistics.
+    pub fn blocks(&self) -> &[PreparedBlock] {
+        &self.blocks
+    }
+
+    /// The resolved threshold context (accumulation model + verification
+    /// point) the handle was prepared under.
+    pub fn ctx(&self) -> &ThresholdContext {
+        &self.ctx
+    }
+
+    /// The accumulation model the encodings were computed under.
+    pub fn model(&self) -> AccumModel {
+        self.model
+    }
+
+    /// True if prepared for online (pre-quantization accumulator)
+    /// verification; false for offline.
+    pub fn online(&self) -> bool {
+        self.online
+    }
+
+    /// Approximate resident size in bytes (data + encodings + statistics)
+    /// — useful for sizing the coordinator's weight cache.
+    pub fn bytes(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|blk| {
+                (blk.enc.b_encoded.data().len() + blk.stats.b.data().len())
+                    * std::mem::size_of::<f64>()
+            })
+            .sum()
+    }
+
+    /// Verify this handle matches an executor's accumulation model and
+    /// verification point. The encodings depend on both: a mismatch would
+    /// silently change what the checksums cover, so it is an error rather
+    /// than a recompute.
+    pub fn check_compatible(&self, engine: &GemmEngine, policy: &VerifyPolicy) -> Result<()> {
+        crate::ensure!(
+            self.model == engine.model(),
+            "PreparedWeights model mismatch: prepared under {:?}, engine runs {:?}",
+            self.model,
+            engine.model()
+        );
+        crate::ensure!(
+            self.online == policy.online,
+            "PreparedWeights verification-point mismatch: prepared online={}, policy online={}",
+            self.online,
+            policy.online
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abft::{BlockwiseFtGemm, FtGemm, Verdict};
+    use crate::fp::Precision;
+    use crate::gemm::ReduceStrategy;
+    use crate::rng::{Distribution, Xoshiro256pp};
+    use crate::threshold::VabftThreshold;
+
+    fn operands(seed: u64, m: usize, k: usize, n: usize) -> (Matrix, Matrix) {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let d = Distribution::normal_1_1();
+        (Matrix::sample(m, k, &d, &mut rng), Matrix::sample(k, n, &d, &mut rng))
+    }
+
+    fn ft(model: AccumModel, policy: VerifyPolicy) -> FtGemm {
+        FtGemm::new(GemmEngine::new(model), Box::new(VabftThreshold::default()), policy)
+    }
+
+    #[test]
+    fn warm_path_is_bitwise_identical_all_strategies() {
+        let (a, b) = operands(1, 8, 96, 24);
+        for strategy in
+            [ReduceStrategy::Sequential, ReduceStrategy::Fma, ReduceStrategy::Pairwise]
+        {
+            let model = AccumModel {
+                input: Precision::Bf16,
+                work: Precision::F32,
+                strategy,
+                out: Precision::Bf16,
+            };
+            for policy in [VerifyPolicy::default(), VerifyPolicy::offline()] {
+                let g = ft(model, policy);
+                let cold = g.multiply(&a, &b).unwrap();
+                let w = g.prepare(&b);
+                let warm = g.multiply_prepared(&a, &w, None).unwrap();
+                assert_eq!(cold.c.data(), warm.c.data(), "{strategy:?} online={}", policy.online);
+                assert_eq!(cold.report.verdict, warm.report.verdict);
+                assert_eq!(cold.report.detections.len(), warm.report.detections.len());
+            }
+        }
+    }
+
+    #[test]
+    fn warm_blockwise_is_bitwise_identical() {
+        let (a, b) = operands(2, 6, 100, 16); // ragged: 100 = 3×32 + 4
+        let model = AccumModel::wide(Precision::Bf16);
+        let bw = BlockwiseFtGemm::new(GemmEngine::new(model), 32, VerifyPolicy::default());
+        let cold = bw.multiply(&a, &b).unwrap();
+        let w = bw.prepare(&b);
+        assert_eq!(w.num_blocks(), 4);
+        assert_eq!(w.block_k(), 32);
+        let warm = bw.multiply_prepared(&a, &w).unwrap();
+        assert_eq!(cold.c.data(), warm.c.data());
+        assert_eq!(cold.report.verdict, warm.report.verdict);
+        assert_eq!(cold.blocks, warm.blocks);
+    }
+
+    #[test]
+    fn warm_path_detection_decisions_match_cold_under_injection() {
+        let (a, b) = operands(3, 8, 64, 32);
+        let model = AccumModel::wide(Precision::Bf16);
+        let g = ft(model, VerifyPolicy::default());
+        let inject = |o: &mut crate::gemm::GemmOutput| {
+            let v = o.acc.get(3, 7);
+            o.acc.set(3, 7, v + 4.0);
+            o.c.set(3, 7, Precision::Bf16.quantize(v + 4.0));
+        };
+        let cold = g.multiply_with_injection(&a, &b, inject).unwrap();
+        let w = g.prepare(&b);
+        let inj: &dyn Fn(usize, &mut crate::gemm::GemmOutput) = &|_, o| inject(o);
+        let warm = g.multiply_prepared(&a, &w, Some(inj)).unwrap();
+        assert_eq!(cold.report.verdict, Verdict::Corrected);
+        assert_eq!(warm.report.verdict, Verdict::Corrected);
+        assert_eq!(cold.report.detections.len(), warm.report.detections.len());
+        assert_eq!(cold.report.detections[0].row, warm.report.detections[0].row);
+        assert_eq!(cold.report.detections[0].col, warm.report.detections[0].col);
+        assert_eq!(cold.c.data(), warm.c.data());
+    }
+
+    #[test]
+    fn prepared_blocks_cover_k_exactly() {
+        let (_, b) = operands(4, 1, 70, 8);
+        let engine = GemmEngine::new(AccumModel::cpu(Precision::F64));
+        let w = PreparedWeights::prepare_blockwise(&b, &engine, &VerifyPolicy::default(), 32);
+        assert_eq!(w.num_blocks(), 3);
+        assert_eq!(w.k(), 70);
+        assert_eq!(w.n(), 8);
+        let spans: Vec<(usize, usize)> = w.blocks().iter().map(|bl| (bl.k0, bl.k1)).collect();
+        assert_eq!(spans, vec![(0, 32), (32, 64), (64, 70)]);
+        assert!(w.bytes() > 0);
+    }
+
+    #[test]
+    fn incompatible_engine_or_policy_is_rejected() {
+        let (a, b) = operands(5, 4, 32, 16);
+        let g_online = ft(AccumModel::wide(Precision::Bf16), VerifyPolicy::default());
+        let w = g_online.prepare(&b);
+        // Same weights, offline executor: verification point mismatch.
+        let g_offline = ft(AccumModel::wide(Precision::Bf16), VerifyPolicy::offline());
+        assert!(g_offline.multiply_prepared(&a, &w, None).is_err());
+        // Different accumulation model: encoding grid mismatch.
+        let g_f64 = ft(AccumModel::cpu(Precision::F64), VerifyPolicy::default());
+        assert!(g_f64.multiply_prepared(&a, &w, None).is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let (_, b) = operands(6, 1, 32, 16);
+        let g = ft(AccumModel::wide(Precision::Bf16), VerifyPolicy::default());
+        let w = g.prepare(&b);
+        let (a_bad, _) = operands(7, 4, 48, 16);
+        assert!(g.multiply_prepared(&a_bad, &w, None).is_err());
+    }
+}

@@ -12,15 +12,22 @@ use std::time::{Duration, Instant};
 /// Timing statistics over repeated runs.
 #[derive(Debug, Clone, Copy)]
 pub struct Stats {
+    /// Timed iterations.
     pub iters: usize,
+    /// Mean duration.
     pub mean: Duration,
+    /// Median duration.
     pub median: Duration,
+    /// Fastest iteration.
     pub min: Duration,
+    /// Slowest iteration.
     pub max: Duration,
+    /// 95th-percentile duration.
     pub p95: Duration,
 }
 
 impl Stats {
+    /// One-line human-readable summary.
     pub fn summary(&self) -> String {
         format!(
             "median {:?}  mean {:?}  min {:?}  p95 {:?}  (n={})",
@@ -76,7 +83,9 @@ fn stats_of(samples: &mut [Duration]) -> Stats {
 /// Bench execution mode: quick (default) or full paper-scale.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BenchMode {
+    /// Reduced sizes/trials (default; minutes).
     Quick,
+    /// The paper's exact sizes and trial counts.
     Full,
 }
 
@@ -93,6 +102,7 @@ impl BenchMode {
         }
     }
 
+    /// True in full (paper-scale) mode.
     pub fn is_full(self) -> bool {
         self == BenchMode::Full
     }
@@ -105,6 +115,7 @@ impl BenchMode {
         }
     }
 
+    /// Print the standard mode banner benches lead with.
     pub fn banner(self, bench_name: &str) {
         println!(
             "[{}] mode = {} (pass --full or set VABFT_BENCH_FULL=1 for paper-scale runs)\n",

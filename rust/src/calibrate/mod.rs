@@ -32,6 +32,7 @@ impl EmaxModel {
         }
     }
 
+    /// Human-readable form of the law.
     pub fn label(&self) -> String {
         match *self {
             EmaxModel::Constant(c) => format!("{c:.2e}"),
@@ -53,6 +54,7 @@ pub enum Platform {
 }
 
 impl Platform {
+    /// Display name of the platform ("CPU (Xeon)" etc.).
     pub fn name(self) -> &'static str {
         match self {
             Platform::Cpu => "CPU (Xeon)",
@@ -146,19 +148,24 @@ impl EmaxTable {
 /// One calibration measurement.
 #[derive(Debug, Clone, Copy)]
 pub struct CalibrationPoint {
+    /// Matrix size (square GEMM of this side length).
     pub n: usize,
     /// max |E| / |checksum| observed.
     pub emax: f64,
     /// mean |E| / |checksum|.
     pub mean_rel: f64,
+    /// Trials this point aggregates.
     pub trials: usize,
 }
 
 /// Result of a calibration sweep plus fitted scaling law.
 #[derive(Debug, Clone)]
 pub struct CalibrationResult {
+    /// The accumulation model that was calibrated.
     pub model: AccumModel,
+    /// Whether the pre-quantization accumulator was verified.
     pub online: bool,
+    /// One point per calibrated size.
     pub points: Vec<CalibrationPoint>,
     /// Recommended e_max law: observed max + 20% margin, shape chosen by
     /// the √N fit quality (paper's protocol, §3.6).
@@ -175,9 +182,13 @@ pub struct CalibrationResult {
 /// 3. e_max = observed max + 20% safety margin.
 #[derive(Debug, Clone)]
 pub struct CalibrationProtocol {
+    /// Representative sizes to measure (paper: 128…2048).
     pub sizes: Vec<usize>,
+    /// Trials per size (max statistic over all of them).
     pub trials_per_size: usize,
+    /// Operand distribution (the paper's |N(1,1)|).
     pub distribution: Distribution,
+    /// Base RNG seed; trials use deterministic (size, trial) substreams.
     pub seed: u64,
 }
 

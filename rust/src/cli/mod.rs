@@ -9,6 +9,7 @@ use std::str::FromStr;
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First non-flag token, e.g. `gemm` in `vabft gemm --threads 4`.
     pub subcommand: Option<String>,
     flags: HashMap<String, String>,
     bools: Vec<String>,
@@ -70,6 +71,7 @@ impl Args {
         }
     }
 
+    /// Positional (non-flag) arguments after the subcommand.
     pub fn positionals(&self) -> &[String] {
         &self.positionals
     }

@@ -3,10 +3,14 @@
 //! This is the production harness the paper's §6.8 integration implies
 //! (FTAN-GEMM on Ascend): a request router + worker pool that
 //!
-//! 1. registers weight matrices once (checksum encoding + V-ABFT summary
-//!    precomputed — the serving fast path),
-//! 2. accepts activation×weight multiply requests, singly (`submit`) or
-//!    batched (`submit_batch`, one tagged receiver per request),
+//! 1. registers weight matrices once (`register_weights`: checksum
+//!    encoding + V-ABFT statistics + threshold context precomputed into a
+//!    [`crate::abft::PreparedWeights`] handle, kept in an LRU cache keyed
+//!    by [`WeightId`] — the weight-stationary serving fast path;
+//!    re-registering an id replaces the cached entry),
+//! 2. accepts activation×weight multiply requests, singly (`submit`),
+//!    batched (`submit_batch`, one tagged receiver per request), or
+//!    handle-based (`submit_prepared`, bypassing the id lookup),
 //! 3. executes them on the tiled parallel GEMM engine under the
 //!    configured accumulation model (`CoordinatorConfig::parallelism`
 //!    sets each worker's intra-op threads/tiles; results are bitwise
@@ -20,5 +24,6 @@
 
 mod service;
 pub use service::{
-    Coordinator, CoordinatorConfig, GemmRequest, GemmResponse, InjectSpec, WeightId,
+    Coordinator, CoordinatorConfig, GemmRequest, GemmResponse, InjectSpec, PreparedGemmRequest,
+    WeightHandle, WeightId,
 };

@@ -3,13 +3,13 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::abft::{FtGemm, FtGemmOutput, PreparedWeight, Verdict, VerifyPolicy};
+use crate::abft::{FtGemm, FtGemmOutput, PreparedWeights, Verdict, VerifyPolicy};
 use crate::fp::Precision;
-use crate::gemm::{AccumModel, GemmEngine, ParallelismConfig};
+use crate::gemm::{AccumModel, GemmEngine, GemmOutput, ParallelismConfig};
 use crate::inject::{BitFlip, InjectionSite};
 use crate::matrix::Matrix;
 use crate::metrics::ServiceMetrics;
@@ -18,37 +18,68 @@ use crate::threshold::{Threshold, VabftThreshold};
 /// Identifier of a registered weight matrix.
 pub type WeightId = u32;
 
+/// A shared handle to a prepared weight matrix, as returned by
+/// [`Coordinator::register_weights`]. Requests carrying a handle
+/// ([`PreparedGemmRequest`]) bypass the id → weights cache lookup entirely
+/// and stay valid even after the id is evicted or re-registered.
+pub type WeightHandle = Arc<PreparedWeights>;
+
 /// Optional fault injection attached to a request (for campaigns and
 /// demos): flips `bit` of the output element at `site` before
 /// verification.
 #[derive(Debug, Clone, Copy)]
 pub struct InjectSpec {
+    /// Output element to corrupt.
     pub site: InjectionSite,
+    /// Bit position to flip, addressing the verified grid's encoding
+    /// (FP32 online, the output precision offline).
     pub bit: u32,
 }
 
-/// A protected-multiply request.
+/// A protected-multiply request against a registered weight id.
 #[derive(Debug)]
 pub struct GemmRequest {
+    /// Activation matrix (M × K).
     pub a: Matrix,
+    /// Which registered weight matrix to multiply against.
     pub weight: WeightId,
+    /// Optional fault injection (campaigns/demos).
+    pub inject: Option<InjectSpec>,
+}
+
+/// The handle-based variant of [`GemmRequest`]: carries the prepared
+/// weights directly instead of a [`WeightId`], so no cache lookup happens
+/// on the hot path and eviction/re-registration cannot affect the request.
+#[derive(Debug)]
+pub struct PreparedGemmRequest {
+    /// Activation matrix (M × K).
+    pub a: Matrix,
+    /// The prepared weights to multiply against.
+    pub weights: WeightHandle,
+    /// Optional fault injection (campaigns/demos).
     pub inject: Option<InjectSpec>,
 }
 
 /// The response: the (possibly repaired) product and its verdict.
 #[derive(Debug)]
 pub struct GemmResponse {
+    /// The id assigned at submission (see [`Coordinator::submit_tagged`]).
     pub id: u64,
+    /// The protected multiply's output, or an error string.
     pub result: Result<FtGemmOutput, String>,
+    /// Queue + execution time, submission to completion.
     pub latency: std::time::Duration,
 }
 
 /// Coordinator configuration.
 pub struct CoordinatorConfig {
+    /// Worker threads executing protected multiplies.
     pub workers: usize,
     /// Bounded queue depth (backpressure: submit blocks when full).
     pub queue_depth: usize,
+    /// Accumulation model every worker's engine runs.
     pub model: AccumModel,
+    /// Verification policy applied to every request.
     pub policy: VerifyPolicy,
     /// Threshold algorithm factory (each worker gets one instance).
     pub threshold: Arc<dyn Fn() -> Box<dyn Threshold> + Send + Sync>,
@@ -57,6 +88,14 @@ pub struct CoordinatorConfig {
     /// only trades per-request latency against worker-level throughput —
     /// keep `workers × parallelism.threads` ≤ the core count.
     pub parallelism: ParallelismConfig,
+    /// Capacity of the LRU cache of prepared weights, in entries.
+    /// Registering beyond it evicts the least-recently-used weight; id
+    /// requests against an evicted weight error (handles stay valid).
+    pub weight_capacity: usize,
+    /// K-block granularity weights are prepared at (None = monolithic,
+    /// `block_k = K`). Blockwise preparation gives per-block thresholds
+    /// (tighter, paper §5.2) at the cost of one encoding per block.
+    pub block_k: Option<usize>,
 }
 
 impl Default for CoordinatorConfig {
@@ -68,25 +107,113 @@ impl Default for CoordinatorConfig {
             policy: VerifyPolicy::default(),
             threshold: Arc::new(|| Box::new(VabftThreshold::default())),
             parallelism: ParallelismConfig::serial(),
+            weight_capacity: 1024,
+            block_k: None,
         }
     }
 }
 
+/// LRU map of prepared weights keyed by [`WeightId`]. Insertions replace
+/// (invalidate) existing entries; lookups refresh recency; overflow evicts
+/// the least-recently-used entry.
+///
+/// Guarded by a `Mutex` (recency refresh mutates on lookup). The critical
+/// section is a map probe + `Arc` clone — nanoseconds against the
+/// µs-to-ms GEMM each request then runs; shard the cache or move to
+/// per-entry atomic ticks if worker counts ever make this contend.
+struct WeightCache {
+    cap: usize,
+    tick: u64,
+    map: HashMap<WeightId, (u64, WeightHandle)>,
+}
+
+impl WeightCache {
+    fn new(cap: usize) -> WeightCache {
+        WeightCache { cap: cap.max(1), tick: 0, map: HashMap::new() }
+    }
+
+    fn get(&mut self, id: WeightId) -> Option<WeightHandle> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(&id).map(|e| {
+            e.0 = tick;
+            Arc::clone(&e.1)
+        })
+    }
+
+    fn insert(&mut self, id: WeightId, w: WeightHandle) {
+        self.tick += 1;
+        // Replacement = invalidation: the old Arc is dropped here; jobs
+        // dequeued after this point resolve to the new weights.
+        self.map.insert(id, (self.tick, w));
+        if self.map.len() > self.cap {
+            let lru = self.map.iter().min_by_key(|&(_, &(t, _))| t).map(|(&k, _)| k);
+            if let Some(lru) = lru {
+                self.map.remove(&lru);
+            }
+        }
+    }
+
+    fn contains(&self, id: WeightId) -> bool {
+        self.map.contains_key(&id)
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+enum Payload {
+    ById(GemmRequest),
+    Handle(PreparedGemmRequest),
+}
+
 struct Job {
     id: u64,
-    req: GemmRequest,
+    payload: Payload,
     reply: Sender<GemmResponse>,
     submitted: Instant,
 }
 
 /// The fault-tolerant GEMM service.
+///
+/// ```
+/// use std::sync::Arc;
+/// use vabft::coordinator::{Coordinator, CoordinatorConfig, GemmRequest, PreparedGemmRequest};
+/// use vabft::prelude::*;
+///
+/// let coord = Coordinator::start(CoordinatorConfig::default());
+/// let mut rng = Xoshiro256pp::seed_from_u64(1);
+/// let d = Distribution::normal_1_1();
+/// let b = Matrix::sample_in(64, 32, &d, Precision::Bf16, &mut rng);
+///
+/// // Register once: checksum encoding + V-ABFT statistics cached (LRU).
+/// let handle = coord.register_weights(7, &b);
+///
+/// // Request by id…
+/// let a = Matrix::sample_in(8, 64, &d, Precision::Bf16, &mut rng);
+/// let resp = coord.call(GemmRequest { a: a.clone(), weight: 7, inject: None });
+/// let by_id = resp.result.unwrap();
+/// assert_eq!(by_id.report.verdict, Verdict::Clean);
+///
+/// // …or by handle (no cache lookup, immune to eviction/re-registration).
+/// let resp = coord.call_prepared(PreparedGemmRequest {
+///     a,
+///     weights: Arc::clone(&handle),
+///     inject: None,
+/// });
+/// let by_handle = resp.result.unwrap();
+/// assert_eq!(by_handle.c.data(), by_id.c.data()); // bitwise-identical
+/// coord.shutdown();
+/// ```
 pub struct Coordinator {
     tx: Option<SyncSender<Job>>,
     handles: Vec<JoinHandle<()>>,
-    weights: Arc<RwLock<HashMap<WeightId, Arc<PreparedWeight>>>>,
+    weights: Arc<Mutex<WeightCache>>,
     metrics: Arc<ServiceMetrics>,
     next_id: AtomicU64,
     ft_template: Arc<FtGemm>,
+    block_k: Option<usize>,
 }
 
 impl Coordinator {
@@ -94,8 +221,7 @@ impl Coordinator {
     pub fn start(cfg: CoordinatorConfig) -> Coordinator {
         let (tx, rx) = sync_channel::<Job>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
-        let weights: Arc<RwLock<HashMap<WeightId, Arc<PreparedWeight>>>> =
-            Arc::new(RwLock::new(HashMap::new()));
+        let weights = Arc::new(Mutex::new(WeightCache::new(cfg.weight_capacity)));
         let metrics = Arc::new(ServiceMetrics::new());
 
         let mut handles = Vec::new();
@@ -129,14 +255,40 @@ impl Coordinator {
             metrics,
             next_id: AtomicU64::new(0),
             ft_template,
+            block_k: cfg.block_k,
         }
     }
 
     /// Register (or replace) a weight matrix: encodes checksums and
-    /// precomputes the threshold summary once.
+    /// precomputes the per-block threshold statistics once, inserts the
+    /// result into the LRU cache under `id`, and returns the shared handle
+    /// for direct (id-free) submission. Re-registering an id **replaces**
+    /// the cached entry — later requests for the id never see state from
+    /// the previous matrix.
+    pub fn register_weights(&self, id: WeightId, b: &Matrix) -> WeightHandle {
+        let prepared = Arc::new(match self.block_k {
+            None => self.ft_template.prepare(b),
+            Some(bk) => self.ft_template.prepare_blockwise(b, bk),
+        });
+        self.weights.lock().unwrap().insert(id, Arc::clone(&prepared));
+        prepared
+    }
+
+    /// Back-compat alias of [`Coordinator::register_weights`] (discarding
+    /// the handle).
     pub fn register_weight(&self, id: WeightId, b: &Matrix) {
-        let prepared = Arc::new(self.ft_template.prepare(b));
-        self.weights.write().unwrap().insert(id, prepared);
+        let _ = self.register_weights(id, b);
+    }
+
+    /// Whether `id` is currently resident in the weight cache (it may have
+    /// been evicted by LRU pressure or never registered).
+    pub fn weight_resident(&self, id: WeightId) -> bool {
+        self.weights.lock().unwrap().contains(id)
+    }
+
+    /// Number of weight matrices currently resident in the cache.
+    pub fn weights_resident(&self) -> usize {
+        self.weights.lock().unwrap().len()
     }
 
     /// Submit a request; returns a receiver for the response. Blocks when
@@ -148,13 +300,30 @@ impl Coordinator {
     /// Submit a request and also return the id its response will carry
     /// (`GemmResponse::id`) — the building block of [`Self::submit_batch`].
     pub fn submit_tagged(&self, req: GemmRequest) -> (u64, Receiver<GemmResponse>) {
+        self.enqueue(Payload::ById(req))
+    }
+
+    /// Submit a handle-based request (see [`PreparedGemmRequest`]).
+    pub fn submit_prepared(&self, req: PreparedGemmRequest) -> Receiver<GemmResponse> {
+        self.submit_prepared_tagged(req).1
+    }
+
+    /// Handle-based variant of [`Self::submit_tagged`].
+    pub fn submit_prepared_tagged(
+        &self,
+        req: PreparedGemmRequest,
+    ) -> (u64, Receiver<GemmResponse>) {
+        self.enqueue(Payload::Handle(req))
+    }
+
+    fn enqueue(&self, payload: Payload) -> (u64, Receiver<GemmResponse>) {
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.jobs_submitted.inc();
         self.tx
             .as_ref()
             .expect("coordinator already shut down")
-            .send(Job { id, req, reply: reply_tx, submitted: Instant::now() })
+            .send(Job { id, payload, reply: reply_tx, submitted: Instant::now() })
             .expect("worker pool hung up");
         (id, reply_rx)
     }
@@ -177,6 +346,12 @@ impl Coordinator {
         self.submit(req).recv().expect("worker dropped reply")
     }
 
+    /// Convenience: submit a handle-based request and wait.
+    pub fn call_prepared(&self, req: PreparedGemmRequest) -> GemmResponse {
+        self.submit_prepared(req).recv().expect("worker dropped reply")
+    }
+
+    /// Service counters and latency histograms.
     pub fn metrics(&self) -> &ServiceMetrics {
         &self.metrics
     }
@@ -201,7 +376,7 @@ impl Drop for Coordinator {
 
 fn worker_loop(
     rx: Arc<Mutex<Receiver<Job>>>,
-    weights: Arc<RwLock<HashMap<WeightId, Arc<PreparedWeight>>>>,
+    weights: Arc<Mutex<WeightCache>>,
     metrics: Arc<ServiceMetrics>,
     ft: FtGemm,
     model: AccumModel,
@@ -213,27 +388,39 @@ fn worker_loop(
             Ok(j) => j,
             Err(_) => return, // all senders gone: shutdown
         };
-        let prepared = weights.read().unwrap().get(&job.req.weight).cloned();
-        let result = match prepared {
-            None => Err(format!("unknown weight id {}", job.req.weight)),
-            Some(w) => {
-                let grid = if policy.online { model.work } else { model.out };
-                let inject = job.req.inject;
-                let inject_fn = inject.map(|spec| {
-                    move |out: &mut crate::gemm::GemmOutput| {
-                        let flip = BitFlip::new(spec.bit, grid);
-                        let tgt =
-                            if policy.online { &mut out.acc } else { &mut out.c };
-                        let old = tgt.get(spec.site.row, spec.site.col);
-                        let (new, _) = flip.apply(old);
-                        tgt.set(spec.site.row, spec.site.col, new);
+        // Resolve the request to (activation, prepared weights, injection).
+        let resolved: Result<(Matrix, WeightHandle, Option<InjectSpec>), String> =
+            match job.payload {
+                Payload::ById(req) => match weights.lock().unwrap().get(req.weight) {
+                    None => Err(format!("unknown or evicted weight id {}", req.weight)),
+                    Some(w) => Ok((req.a, w, req.inject)),
+                },
+                Payload::Handle(req) => Ok((req.a, req.weights, req.inject)),
+            };
+        let result = match resolved {
+            Err(e) => Err(e),
+            Ok((a, w, inject)) => {
+                let run = match inject {
+                    None => ft.multiply_prepared(&a, &w, None),
+                    Some(spec) => {
+                        let grid = if policy.online { model.work } else { model.out };
+                        // A single-event upset strikes once: inject into
+                        // the first K-block's partial only, even when the
+                        // weights are prepared blockwise.
+                        let f = move |bi: usize, out: &mut GemmOutput| {
+                            if bi != 0 {
+                                return;
+                            }
+                            let flip = BitFlip::new(spec.bit, grid);
+                            let tgt = if policy.online { &mut out.acc } else { &mut out.c };
+                            let old = tgt.get(spec.site.row, spec.site.col);
+                            let (new, _) = flip.apply(old);
+                            tgt.set(spec.site.row, spec.site.col, new);
+                        };
+                        ft.multiply_prepared(&a, &w, Some(&f))
                     }
-                });
-                match &inject_fn {
-                    Some(f) => ft.multiply_prepared(&job.req.a, &w, Some(f)),
-                    None => ft.multiply_prepared(&job.req.a, &w, None),
-                }
-                .map_err(|e| e.to_string())
+                };
+                run.map_err(|e| e.to_string())
             }
         };
         if let Ok(out) = &result {
@@ -407,4 +594,32 @@ mod tests {
         assert!(maxsum < 1e-6, "outputs should negate: {maxsum}");
         c.shutdown();
     }
+
+    #[test]
+    fn handle_requests_bypass_the_cache() {
+        let (c, b) = coordinator(1);
+        let handle = c.register_weights(8, &b);
+        let a = activation(6);
+        let by_id = c.call(GemmRequest { a: a.clone(), weight: 8, inject: None });
+        let by_handle = c.call_prepared(PreparedGemmRequest {
+            a: a.clone(),
+            weights: Arc::clone(&handle),
+            inject: None,
+        });
+        let (x, y) = (by_id.result.unwrap().c, by_handle.result.unwrap().c);
+        assert_eq!(x.data(), y.data(), "id and handle paths must be bitwise-identical");
+        // A handle outlives re-registration of its id.
+        let mut other = b.clone();
+        for v in other.data_mut() {
+            *v = -*v;
+        }
+        c.register_weights(8, &other);
+        let still = c.call_prepared(PreparedGemmRequest { a, weights: handle, inject: None });
+        assert_eq!(still.result.unwrap().c.data(), x.data());
+        c.shutdown();
+    }
+
+    // LRU eviction semantics (capacity, recency refresh, evicted-id
+    // errors, handle survival) are pinned by the richer integration test
+    // `tests/weight_cache.rs::lru_eviction_errors_by_id_but_handles_survive`.
 }

@@ -62,7 +62,9 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// Attach context to failures, mirroring `anyhow::Context`.
 pub trait Context<T> {
+    /// Prefix the error (or turn `None` into an error) with `c`.
     fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Like [`Context::context`], with the message built lazily.
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
 }
 

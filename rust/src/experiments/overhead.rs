@@ -17,19 +17,27 @@ use crate::matrix::Matrix;
 use crate::rng::{Distribution, Xoshiro256pp};
 use crate::threshold::{Threshold, ThresholdContext, VabftThreshold};
 
+/// Configuration of the overhead comparison.
 #[derive(Debug, Clone)]
 pub struct OverheadConfig {
+    /// Accumulation model under test.
     pub model: AccumModel,
+    /// GEMM shape (M, K, N).
     pub shape: (usize, usize, usize),
+    /// Operand distribution.
     pub dist: Distribution,
     /// Timed repetitions (median reported).
     pub reps: usize,
+    /// RNG seed for the operands.
     pub seed: u64,
 }
 
+/// One row of the overhead table.
 #[derive(Debug, Clone)]
 pub struct OverheadRow {
+    /// What was measured.
     pub label: String,
+    /// Median wall-clock over the repetitions.
     pub median: Duration,
     /// Overhead vs the plain GEMM baseline, percent.
     pub overhead_pct: f64,
@@ -82,7 +90,7 @@ pub fn run_overhead(cfg: &OverheadConfig) -> Vec<OverheadRow> {
         std::hint::black_box(vab.thresholds(&a, &b, &ctx));
     });
     let thr_prep = median_time(cfg.reps, || {
-        std::hint::black_box(vab.thresholds_prepared(&a, &prepared.stats, &ctx));
+        std::hint::black_box(vab.thresholds_prepared(&a, &prepared.blocks()[0].stats, &ctx));
     });
 
     let pct = |d: Duration| {

@@ -19,9 +19,13 @@ use crate::threshold::{AabftThreshold, Threshold, ThresholdContext, VabftThresho
 pub struct TightnessConfig {
     /// Display label ("FP64, U(-1,1), dd baseline").
     pub label: String,
+    /// Accumulation model under test.
     pub model: AccumModel,
+    /// Operand distribution.
     pub dist: Distribution,
+    /// Matrix sizes n (B is n×n).
     pub sizes: Vec<usize>,
+    /// Trials per size.
     pub trials: usize,
     /// Rows of A per trial (paper uses m = n; quick mode samples fewer
     /// rows — the max statistic converges quickly).
@@ -33,28 +37,36 @@ pub struct TightnessConfig {
     /// Keep checksum columns in work precision (fused-style encoding —
     /// Table 6's BF16 setup).
     pub wide_checksums: bool,
+    /// Base RNG seed; trials use deterministic substreams.
     pub seed: u64,
 }
 
 /// One row of the resulting table.
 #[derive(Debug, Clone, Copy)]
 pub struct TightnessRow {
+    /// Matrix size (B is n×n).
     pub n: usize,
     /// max observed |E| across trials and rows.
     pub actual: f64,
+    /// Largest A-ABFT threshold issued.
     pub aabft_threshold: f64,
+    /// Largest V-ABFT threshold issued.
     pub vabft_threshold: f64,
     /// Observed clean-data false positives (must be 0 for both).
     pub fp_aabft: usize,
+    /// V-ABFT clean-data false positives.
     pub fp_vabft: usize,
+    /// Clean rows verified.
     pub rows_checked: usize,
 }
 
 impl TightnessRow {
+    /// A-ABFT tightness (threshold / actual; lower is better).
     pub fn a_tight(&self) -> f64 {
         self.aabft_threshold / self.actual
     }
 
+    /// V-ABFT tightness (threshold / actual; lower is better).
     pub fn v_tight(&self) -> f64 {
         self.vabft_threshold / self.actual
     }

@@ -17,8 +17,11 @@ use super::rounding::FloatSpec;
 pub struct Bf16(pub u16);
 
 impl Bf16 {
+    /// The format descriptor (8 exponent bits, 7 mantissa bits).
     pub const SPEC: FloatSpec = FloatSpec::BF16;
+    /// Positive zero.
     pub const ZERO: Bf16 = Bf16(0);
+    /// The encoding of 1.0.
     pub const ONE: Bf16 = Bf16(0x3F80);
 
     /// Convert from f64 with round-to-nearest-even.
@@ -57,10 +60,12 @@ impl Bf16 {
         Bf16(self.0 ^ (1 << pos))
     }
 
+    /// NaN test on the decoded value.
     pub fn is_nan(self) -> bool {
         self.to_f64().is_nan()
     }
 
+    /// Infinity test on the decoded value.
     pub fn is_infinite(self) -> bool {
         self.to_f64().is_infinite()
     }

@@ -15,7 +15,9 @@
 /// A double-double number: the unevaluated sum `hi + lo`, |lo| ≤ ulp(hi)/2.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Dd {
+    /// Leading component (the f64 nearest the represented value).
     pub hi: f64,
+    /// Trailing error component.
     pub lo: f64,
 }
 
@@ -45,7 +47,9 @@ fn two_prod(a: f64, b: f64) -> (f64, f64) {
 }
 
 impl Dd {
+    /// Additive identity.
     pub const ZERO: Dd = Dd { hi: 0.0, lo: 0.0 };
+    /// Multiplicative identity.
     pub const ONE: Dd = Dd { hi: 1.0, lo: 0.0 };
 
     /// Lift an f64 exactly.
@@ -88,11 +92,13 @@ impl Dd {
         Dd { hi, lo }
     }
 
+    /// dd − dd.
     #[inline]
     pub fn sub(self, other: Dd) -> Dd {
         self.add(other.neg())
     }
 
+    /// Negation (exact).
     #[inline]
     pub fn neg(self) -> Dd {
         Dd { hi: -self.hi, lo: -self.lo }
@@ -133,6 +139,7 @@ impl Dd {
         Dd { hi, lo }.add_f64(q3)
     }
 
+    /// Absolute value.
     pub fn abs(self) -> Dd {
         if self.hi < 0.0 || (self.hi == 0.0 && self.lo < 0.0) {
             self.neg()

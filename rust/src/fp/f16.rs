@@ -10,8 +10,11 @@ use super::rounding::FloatSpec;
 pub struct F16(pub u16);
 
 impl F16 {
+    /// The format descriptor (5 exponent bits, 10 mantissa bits).
     pub const SPEC: FloatSpec = FloatSpec::F16;
+    /// Positive zero.
     pub const ZERO: F16 = F16(0);
+    /// The encoding of 1.0.
     pub const ONE: F16 = F16(0x3C00);
 
     /// Convert from f64 with round-to-nearest-even.
@@ -19,6 +22,7 @@ impl F16 {
         F16(Self::SPEC.encode(x) as u16)
     }
 
+    /// Convert from f32 with round-to-nearest-even.
     pub fn from_f32(x: f32) -> F16 {
         Self::from_f64(x as f64)
     }
@@ -28,14 +32,17 @@ impl F16 {
         Self::SPEC.decode(self.0 as u32)
     }
 
+    /// Widening conversion to f32 (exact: f16 ⊂ f32).
     pub fn to_f32(self) -> f32 {
         self.to_f64() as f32
     }
 
+    /// Raw encoding.
     pub fn to_bits(self) -> u16 {
         self.0
     }
 
+    /// From raw encoding.
     pub fn from_bits(bits: u16) -> F16 {
         F16(bits)
     }
@@ -46,6 +53,7 @@ impl F16 {
         F16(self.0 ^ (1 << pos))
     }
 
+    /// NaN test on the decoded value.
     pub fn is_nan(self) -> bool {
         self.to_f64().is_nan()
     }

@@ -21,12 +21,15 @@ pub struct F8E5M2(pub u8);
 macro_rules! fp8_impl {
     ($ty:ident, $spec:expr) => {
         impl $ty {
+            /// The format descriptor.
             pub const SPEC: FloatSpec = $spec;
 
+            /// Convert from f64 with round-to-nearest-even.
             pub fn from_f64(x: f64) -> $ty {
                 $ty(Self::SPEC.encode(x) as u8)
             }
 
+            /// Convert from f32 with round-to-nearest-even.
             pub fn from_f32(x: f32) -> $ty {
                 Self::from_f64(x as f64)
             }
@@ -36,10 +39,12 @@ macro_rules! fp8_impl {
                 Self::SPEC.decode(self.0 as u32)
             }
 
+            /// Raw encoding.
             pub fn to_bits(self) -> u8 {
                 self.0
             }
 
+            /// From raw encoding.
             pub fn from_bits(bits: u8) -> $ty {
                 $ty(bits)
             }
@@ -50,6 +55,7 @@ macro_rules! fp8_impl {
                 $ty(self.0 ^ (1 << pos))
             }
 
+            /// NaN test on the decoded value.
             pub fn is_nan(self) -> bool {
                 self.to_f64().is_nan()
             }

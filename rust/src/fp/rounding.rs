@@ -21,9 +21,13 @@ pub struct FloatSpec {
 }
 
 impl FloatSpec {
+    /// bfloat16: 8 exponent bits, 7 mantissa bits, IEEE Inf/NaN.
     pub const BF16: FloatSpec = FloatSpec { exp_bits: 8, man_bits: 7, has_inf: true };
+    /// IEEE binary16: 5 exponent bits, 10 mantissa bits.
     pub const F16: FloatSpec = FloatSpec { exp_bits: 5, man_bits: 10, has_inf: true };
+    /// OCP FP8 E4M3: saturating, no Inf (overflow → max finite).
     pub const E4M3: FloatSpec = FloatSpec { exp_bits: 4, man_bits: 3, has_inf: false };
+    /// OCP FP8 E5M2: IEEE-like with Inf/NaN.
     pub const E5M2: FloatSpec = FloatSpec { exp_bits: 5, man_bits: 2, has_inf: true };
 
     /// Exponent bias.

@@ -56,6 +56,7 @@ pub enum ReduceStrategy {
 }
 
 impl ReduceStrategy {
+    /// Short lowercase name used in CLIs and reports.
     pub fn name(self) -> &'static str {
         match self {
             ReduceStrategy::Sequential => "sequential",
@@ -178,10 +179,12 @@ impl GemmEngine {
         GemmEngine { model, par }
     }
 
+    /// The accumulation model this engine executes.
     pub fn model(&self) -> AccumModel {
         self.model
     }
 
+    /// The execution (threads + tiles) configuration.
     pub fn parallelism(&self) -> ParallelismConfig {
         self.par
     }

@@ -42,14 +42,20 @@ use crate::fp::Precision;
 /// valid; the defaults target ~L2-resident B panels for f32.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TileConfig {
+    /// Row-panel height a worker iterates at a time.
     pub mc: usize,
+    /// K-block depth kept hot while streaming B.
     pub kc: usize,
+    /// Column-block width (also the pairwise product-buffer width).
     pub nc: usize,
 }
 
 impl TileConfig {
+    /// The measured defaults: ~L2-resident B panels for f32 (see
+    /// `docs/PERFORMANCE.md` for the tuning rationale).
     pub const DEFAULT: TileConfig = TileConfig { mc: 64, kc: 256, nc: 128 };
 
+    /// Construct from explicit tile sizes (all must be positive).
     pub fn new(mc: usize, kc: usize, nc: usize) -> TileConfig {
         assert!(mc > 0 && kc > 0 && nc > 0, "tile sizes must be positive");
         TileConfig { mc, kc, nc }
@@ -70,6 +76,7 @@ impl Default for TileConfig {
 pub struct ParallelismConfig {
     /// Worker threads. 1 = run on the caller's thread (no spawns).
     pub threads: usize,
+    /// Cache-blocking tile sizes.
     pub tiles: TileConfig,
 }
 

@@ -18,7 +18,10 @@ use crate::rng::{Distribution, Rng, Xoshiro256pp};
 /// Flip direction of the targeted bit.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum FlipDirection {
+    /// The bit was 0 and became 1 (the amplifying direction for exponent
+    /// bits — Table 8's "0→1" column).
     ZeroToOne,
+    /// The bit was 1 and became 0.
     OneToZero,
 }
 
@@ -32,6 +35,7 @@ pub struct BitFlip {
 }
 
 impl BitFlip {
+    /// A flip of `bit` in `precision`'s encoding (asserts `bit` in range).
     pub fn new(bit: u32, precision: Precision) -> BitFlip {
         assert!(bit < precision.bits(), "bit {bit} out of range for {precision}");
         BitFlip { bit, precision }
@@ -96,7 +100,9 @@ fn direction_of(bits: u64, bit: u32) -> FlipDirection {
 /// Location of an injection in the output matrix.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct InjectionSite {
+    /// Output row.
     pub row: usize,
+    /// Output column.
     pub col: usize,
 }
 
@@ -148,6 +154,7 @@ pub struct CampaignConfig {
     /// practical recommendations), which reproduces the paper's
     /// per-distribution detection rates.
     pub emax_override: Option<crate::calibrate::EmaxModel>,
+    /// Base RNG seed; trials use deterministic substreams.
     pub seed: u64,
 }
 
@@ -176,18 +183,25 @@ impl CampaignConfig {
 /// Per-bit campaign outcome.
 #[derive(Debug, Clone, Copy)]
 pub struct BitResult {
+    /// Bit position tested.
     pub bit: u32,
+    /// Injection trials performed.
     pub trials: usize,
+    /// Trials where the fault was detected.
     pub detected: usize,
+    /// Detected trials whose column was correctly localized.
     pub localized: usize,
     /// Trials where the flip produced a value identical after requantize
     /// (impossible for true bit flips, kept as a sanity counter).
     pub no_effect: usize,
+    /// Detected trials among the 0→1 (amplifying) flips.
     pub detected_0to1: usize,
+    /// Trials whose flip direction was 0→1.
     pub trials_0to1: usize,
 }
 
 impl BitResult {
+    /// Detection rate in percent (Table 8's DR column).
     pub fn detection_rate(&self) -> f64 {
         if self.trials == 0 {
             0.0
@@ -199,6 +213,7 @@ impl BitResult {
 
 /// A detection-rate campaign over bit positions.
 pub struct Campaign {
+    /// The campaign's configuration.
     pub config: CampaignConfig,
 }
 
@@ -213,12 +228,16 @@ struct Trial {
 /// Outcome of a whole campaign plus the clean-run false positive count.
 #[derive(Debug, Clone)]
 pub struct CampaignResult {
+    /// Per-bit results in the configured bit order.
     pub bits: Vec<BitResult>,
+    /// Clean (uninjected) rows verified for the FPR sweep.
     pub clean_rows_checked: usize,
+    /// Clean rows that flagged — must be zero for a sound threshold.
     pub false_positives: usize,
 }
 
 impl Campaign {
+    /// Build a campaign from its configuration.
     pub fn new(config: CampaignConfig) -> Campaign {
         Campaign { config }
     }

@@ -48,8 +48,22 @@
 //! assert_eq!(out.report.verdict, Verdict::Clean);
 //! ```
 //!
+//! ## Weight-stationary serving
+//!
+//! Inference serving reuses one weight matrix B across every request.
+//! [`abft::PreparedWeights`] caches B's checksum encoding, the V-ABFT
+//! B-side statistics and the resolved threshold context once per weight —
+//! computed with the same rounding schedule as the live path, so the warm
+//! path is bitwise-identical to encode-per-call in outputs and
+//! verification decisions. The [`coordinator`] keeps prepared weights in
+//! an LRU cache keyed by weight id (`register_weights`), and requests can
+//! also carry the handle directly. See `docs/ARCHITECTURE.md` and
+//! `docs/PERFORMANCE.md` at the repository root.
+//!
 //! See `examples/` for fault-injection campaigns, e_max calibration, a
 //! serving-style coordinator and the end-to-end training supervisor.
+
+#![warn(missing_docs)]
 
 pub mod bench_harness;
 pub mod calibrate;
@@ -75,23 +89,26 @@ pub mod abft {
     //!
     //! [`FtGemm`] (monolithic, block_k = K) and [`BlockwiseFtGemm`]
     //! (per-K-block verification) are two parameterizations of one shared
-    //! verification pipeline (the private `pipeline` module).
+    //! verification pipeline (the private `pipeline` module); both accept
+    //! [`PreparedWeights`] for the weight-stationary serving fast path.
     pub mod blockwise;
     pub mod encode;
     pub mod ftgemm;
     pub(crate) mod pipeline;
+    pub mod prepared;
     pub mod verify;
     pub use blockwise::*;
     pub use encode::*;
     pub use ftgemm::*;
+    pub use prepared::*;
     pub use verify::*;
 }
 
 /// Convenient re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::abft::{
-        BlockwiseFtGemm, BlockwiseOutput, ChecksumEncoding, FtGemm, FtGemmOutput, Verdict,
-        VerifyPolicy, VerifyReport,
+        BlockwiseFtGemm, BlockwiseOutput, ChecksumEncoding, FtGemm, FtGemmOutput, PreparedBlock,
+        PreparedWeights, Verdict, VerifyPolicy, VerifyReport,
     };
     pub use crate::calibrate::{CalibrationProtocol, EmaxModel, EmaxTable, Platform};
     pub use crate::fp::{dd::Dd, Precision};

@@ -8,6 +8,11 @@
 //! vabft gemm       [--m 512 --k 512 --n 512] [--strategy seq|fma|pairwise]
 //!                  [--threads T] [--mc M --kc K --nc N] [--reps R]
 //!                  # tiled parallel engine vs naive kernel (bitwise-checked)
+//! vabft gemm --prepared
+//!                  [--m 8 --k 512 --n 512] [--precision bf16] [--reps R]
+//!                  [--block-k B] [--offline] [--threads T]
+//!                  # weight-stationary FT-GEMM: cold encode-per-call vs
+//!                  # PreparedWeights warm path (bitwise-checked)
 //! vabft artifacts  [--dir artifacts]     # list AOT artifacts
 //! vabft info                             # e_max table, subcommands
 //! ```
@@ -226,8 +231,12 @@ fn cmd_tightness(args: &Args) {
 /// Tiled parallel engine vs the naive reference kernel: wall-clock
 /// comparison plus a bitwise equality check (the schedule-preservation
 /// invariant, end to end). `ParallelismConfig` comes straight from the
-/// CLI flags (`--threads/--mc/--kc/--nc`).
+/// CLI flags (`--threads/--mc/--kc/--nc`). With `--prepared`, runs the
+/// weight-stationary FT-GEMM comparison instead (see `cmd_gemm_prepared`).
 fn cmd_gemm(args: &Args) {
+    if args.flag("prepared") {
+        return cmd_gemm_prepared(args);
+    }
     use vabft::bench_harness::time_once;
     use vabft::gemm::{kernels, tiled, ParallelismConfig, ReduceStrategy};
     use vabft::rng::Xoshiro256pp;
@@ -287,6 +296,86 @@ fn cmd_gemm(args: &Args) {
     ]);
     t.print();
     println!("bitwise equality: OK ({} elements)", c_naive.len());
+}
+
+/// Weight-stationary FT-GEMM comparison: the cold path (checksum encode +
+/// B statistics per call) vs the warm path (`PreparedWeights` computed
+/// once). Serving-shaped by default: a small activation batch against a
+/// large weight matrix. Asserts bitwise-identical outputs and identical
+/// verdicts — the prepared path is a pure amortization, never a numerical
+/// change.
+fn cmd_gemm_prepared(args: &Args) {
+    use vabft::abft::{BlockwiseFtGemm, VerifyPolicy};
+    use vabft::bench_harness::time_once;
+    use vabft::gemm::{AccumModel, GemmEngine, ParallelismConfig};
+    use vabft::matrix::Matrix;
+    use vabft::rng::Xoshiro256pp;
+
+    let m = args.opt_or("m", 8usize);
+    let k = args.opt_or("k", 512usize);
+    let n = args.opt_or("n", 512usize);
+    let reps = args.opt_or("reps", 5usize).max(1);
+    let block_k = args.opt_or("block-k", 0usize); // 0 = monolithic
+    let precision = parse_precision(args, Precision::Bf16);
+    let online = !args.flag("offline");
+    let model = if precision == Precision::F32 || precision == Precision::F64 {
+        AccumModel::gpu_highprec(precision)
+    } else {
+        AccumModel::wide(precision)
+    };
+    let policy = if online { VerifyPolicy::default() } else { VerifyPolicy::offline() };
+    let par = ParallelismConfig::from_args(args);
+    // Cold and warm legs must share one accumulation grouping to compare
+    // bitwise; block_k = K is exactly the monolithic parameterization.
+    let bk = if block_k == 0 { k.max(1) } else { block_k };
+    let bw = BlockwiseFtGemm::new(GemmEngine::with_parallelism(model, par), bk, policy);
+    println!(
+        "weight-stationary FT-GEMM {m}x{k}x{n}, model {}, online={online}, block_k={}",
+        model.label(),
+        if block_k == 0 { "K (monolithic)".to_string() } else { block_k.to_string() }
+    );
+
+    let mut rng = Xoshiro256pp::seed_from_u64(0xFEED);
+    let d = vabft::rng::Distribution::normal_1_1();
+    let a = Matrix::sample_in(m, k, &d, model.input, &mut rng);
+    let b = Matrix::sample_in(k, n, &d, model.input, &mut rng);
+
+    // Prepare once (timed separately — the registration cost).
+    let mut prepared = None;
+    let t_prepare = time_once(|| prepared = Some(bw.prepare(&b)));
+    let prepared = prepared.unwrap();
+
+    let mut t_cold = std::time::Duration::MAX;
+    let mut t_warm = std::time::Duration::MAX;
+    let mut cold = None;
+    let mut warm = None;
+    for _ in 0..reps {
+        let mut out = None;
+        let dur = time_once(|| out = Some(bw.multiply(&a, &b).unwrap()));
+        t_cold = t_cold.min(dur);
+        cold = out;
+        let mut out2 = None;
+        let dur2 = time_once(|| out2 = Some(bw.multiply_prepared(&a, &prepared).unwrap()));
+        t_warm = t_warm.min(dur2);
+        warm = out2;
+    }
+    let (cold, warm) = (cold.unwrap(), warm.unwrap());
+    assert_eq!(cold.c.data(), warm.c.data(), "warm path must be bitwise-identical");
+    assert_eq!(cold.report.verdict, warm.report.verdict, "verdicts must match");
+
+    let mut t = Table::new(
+        "Cold (encode per call) vs warm (PreparedWeights)",
+        &["path", "best", "speedup"],
+    );
+    t.row(vec!["cold".into(), format!("{t_cold:?}"), "1.00x".into()]);
+    t.row(vec![
+        "warm".into(),
+        format!("{t_warm:?}"),
+        format!("{:.2}x", t_cold.as_secs_f64() / t_warm.as_secs_f64()),
+    ]);
+    t.print();
+    println!("prepare (once): {t_prepare:?}  —  amortized across every request");
+    println!("bitwise equality + identical verdicts: OK");
 }
 
 fn cmd_artifacts(args: &Args) {

@@ -70,22 +70,26 @@ impl Matrix {
         m
     }
 
+    /// Number of rows.
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Element (i, j).
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> f64 {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[i * self.cols + j]
     }
 
+    /// Set element (i, j).
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: f64) {
         debug_assert!(i < self.rows && j < self.cols);
@@ -110,6 +114,7 @@ impl Matrix {
         &self.data
     }
 
+    /// Mutable flat row-major data.
     #[inline]
     pub fn data_mut(&mut self) -> &mut [f64] {
         &mut self.data

@@ -9,9 +9,13 @@
 /// Summary statistics of one row, computed in a single pass.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RowStats {
+    /// Number of elements.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Largest element.
     pub max: f64,
+    /// Smallest element.
     pub min: f64,
     /// True population variance (kept for tests/diagnostics; the V-ABFT
     /// production path uses only `extrema_var_bound`).

@@ -11,20 +11,24 @@ pub struct Counter {
 }
 
 impl Counter {
+    /// Zeroed counter.
     pub const fn new() -> Counter {
         Counter { v: AtomicU64::new(0) }
     }
 
+    /// Increment by one.
     #[inline]
     pub fn inc(&self) {
         self.v.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Increment by `n`.
     #[inline]
     pub fn add(&self, n: u64) {
         self.v.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.v.load(Ordering::Relaxed)
     }
@@ -46,6 +50,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// Empty histogram.
     pub fn new() -> Histogram {
         Histogram {
             buckets: (0..48).map(|_| AtomicU64::new(0)).collect(),
@@ -54,6 +59,7 @@ impl Histogram {
         }
     }
 
+    /// Record one duration.
     #[inline]
     pub fn record(&self, d: Duration) {
         let us = d.as_micros() as u64;
@@ -63,10 +69,12 @@ impl Histogram {
         self.sum_us.fetch_add(us, Ordering::Relaxed);
     }
 
+    /// Number of recorded durations.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean recorded duration (zero when empty).
     pub fn mean(&self) -> Duration {
         let c = self.count();
         if c == 0 {
@@ -96,20 +104,29 @@ impl Histogram {
 /// Aggregated coordinator metrics.
 #[derive(Debug, Default)]
 pub struct ServiceMetrics {
+    /// Requests accepted into the queue.
     pub jobs_submitted: Counter,
+    /// Requests fully processed (including errored lookups).
     pub jobs_completed: Counter,
+    /// Batches accepted via `submit_batch`.
     pub batches_submitted: Counter,
+    /// Rows that exceeded their detection threshold.
     pub faults_detected: Counter,
+    /// Detections repaired in place via localization.
     pub faults_corrected: Counter,
+    /// Rows recomputed via the escalation path.
     pub rows_recomputed: Counter,
+    /// Submission-to-completion latency distribution.
     pub latency: Histogram,
 }
 
 impl ServiceMetrics {
+    /// All-zero metrics.
     pub fn new() -> ServiceMetrics {
         Default::default()
     }
 
+    /// One-line human-readable summary of every counter.
     pub fn summary(&self) -> String {
         format!(
             "jobs={}/{} batches={} detected={} corrected={} recomputed_rows={} mean={:?} p95={:?}",

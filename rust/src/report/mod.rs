@@ -7,12 +7,16 @@
 /// A simple table with aligned columns.
 #[derive(Debug, Clone)]
 pub struct Table {
+    /// Table caption.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows (each the same width as `headers`).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with a caption and headers.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -21,6 +25,7 @@ impl Table {
         }
     }
 
+    /// Append a row (must match the header count).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
         self.rows.push(cells);
@@ -76,6 +81,7 @@ impl Table {
         out
     }
 
+    /// Print the ASCII rendering to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
         println!();

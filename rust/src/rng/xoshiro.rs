@@ -10,6 +10,7 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Construct from a raw 64-bit seed.
     pub fn new(seed: u64) -> SplitMix64 {
         SplitMix64 { state: seed }
     }

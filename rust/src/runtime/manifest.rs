@@ -16,8 +16,11 @@ use crate::error::{Context, Result};
 /// (shapes, dtypes, parameter layouts — whatever the producer recorded).
 #[derive(Debug, Clone, Default)]
 pub struct ArtifactEntry {
+    /// Artifact name (the key [`Manifest::get`] resolves).
     pub name: String,
+    /// HLO-text file, relative to the manifest's directory.
     pub file: String,
+    /// Producer-recorded metadata (shapes, dtypes, parameter layout).
     pub meta: HashMap<String, String>,
 }
 
@@ -37,16 +40,19 @@ impl ArtifactEntry {
 /// The parsed manifest.
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
+    /// Every artifact, in file order.
     pub entries: Vec<ArtifactEntry>,
 }
 
 impl Manifest {
+    /// Read and parse a `manifest.tsv`.
     pub fn load(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
         Self::parse(&text)
     }
 
+    /// Parse manifest text (see the module docs for the format).
     pub fn parse(text: &str) -> Result<Manifest> {
         let mut entries = Vec::new();
         for (lineno, line) in text.lines().enumerate() {
@@ -74,6 +80,7 @@ impl Manifest {
         Ok(Manifest { entries })
     }
 
+    /// Look up an artifact by name.
     pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
         self.entries.iter().find(|e| e.name == name)
     }

@@ -57,10 +57,12 @@ impl PjrtRuntime {
         Ok(rt)
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
@@ -80,10 +82,12 @@ impl PjrtRuntime {
         Ok(())
     }
 
+    /// Whether an artifact is loaded and compiled under `name`.
     pub fn has(&self, name: &str) -> bool {
         self.executables.contains_key(name)
     }
 
+    /// Names of every compiled artifact.
     pub fn names(&self) -> Vec<&str> {
         self.executables.keys().map(|s| s.as_str()).collect()
     }

@@ -109,6 +109,7 @@ impl Literal {
         }
     }
 
+    /// Total element count (tuples sum their elements).
     pub fn element_count(&self) -> usize {
         match &self.data {
             LiteralData::F32(v) => v.len(),
@@ -117,6 +118,7 @@ impl Literal {
         }
     }
 
+    /// The literal's dimensions.
     pub fn dims(&self) -> &[i64] {
         &self.dims
     }
@@ -125,10 +127,12 @@ impl Literal {
 /// A parsed HLO-text module (text retained verbatim).
 #[derive(Debug, Clone)]
 pub struct HloModuleProto {
+    /// The module's HLO text.
     pub text: String,
 }
 
 impl HloModuleProto {
+    /// Read an HLO-text file.
     pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| XlaError(format!("read {path}: {e}")))?;
@@ -144,6 +148,7 @@ pub struct XlaComputation {
 }
 
 impl XlaComputation {
+    /// Wrap a parsed module.
     pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
         XlaComputation { module: proto.clone() }
     }
@@ -157,14 +162,17 @@ pub struct PjRtClient {
 }
 
 impl PjRtClient {
+    /// Construct the (stub) CPU client.
     pub fn cpu() -> Result<PjRtClient> {
         Ok(PjRtClient { platform: "cpu-stub (no PJRT backend linked)" })
     }
 
+    /// The platform's display name.
     pub fn platform_name(&self) -> String {
         self.platform.to_string()
     }
 
+    /// Compile a computation — always errors in the stub (no backend).
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         Err(XlaError(
             "no XLA/PJRT backend linked in this offline build; \
@@ -183,6 +191,7 @@ pub struct PjRtLoadedExecutable {
 }
 
 impl PjRtLoadedExecutable {
+    /// Execute with literal inputs — always errors in the stub.
     pub fn execute<B: Borrow<Literal>>(&self, _inputs: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
         Err(XlaError("stub executable cannot run".to_string()))
     }
@@ -195,6 +204,7 @@ pub struct PjRtBuffer {
 }
 
 impl PjRtBuffer {
+    /// Fetch the buffer to host — always errors in the stub.
     pub fn to_literal_sync(&self) -> Result<Literal> {
         Err(XlaError("stub buffer holds no data".to_string()))
     }

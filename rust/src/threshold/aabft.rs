@@ -36,6 +36,7 @@ pub enum YMode {
 /// The A-ABFT threshold baseline.
 #[derive(Debug, Clone)]
 pub struct AabftThreshold {
+    /// How the magnitude parameter y is determined.
     pub y_mode: YMode,
     /// σ multiplier (3 in the original: ≈99.7% coverage).
     pub n_sigma: f64,

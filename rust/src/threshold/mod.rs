@@ -44,14 +44,17 @@ pub struct ThresholdContext {
 }
 
 impl ThresholdContext {
+    /// Context for offline (post-quantization) verification.
     pub fn offline(model: AccumModel) -> ThresholdContext {
         ThresholdContext { model, online: false, emax_override: None }
     }
 
+    /// Context for online (fused-kernel, pre-quantization) verification.
     pub fn online(model: AccumModel) -> ThresholdContext {
         ThresholdContext { model, online: true, emax_override: None }
     }
 
+    /// Override the e_max law (e.g. with a calibrated value).
     pub fn with_emax(mut self, emax: EmaxModel) -> ThresholdContext {
         self.emax_override = Some(emax);
         self
@@ -67,7 +70,25 @@ impl ThresholdContext {
 
 /// A threshold algorithm: maps (A, B, context) to one detection threshold
 /// per row of C = A·B, bounding |checksum − rowsum| on fault-free data.
+///
+/// ```
+/// use vabft::prelude::*;
+/// use vabft::threshold::ThresholdContext;
+///
+/// let mut rng = Xoshiro256pp::seed_from_u64(3);
+/// let d = Distribution::uniform_pm1();
+/// let model = AccumModel::gpu_highprec(Precision::F32);
+/// let a = Matrix::sample_in(8, 256, &d, model.input, &mut rng);
+/// let b = Matrix::sample_in(256, 256, &d, model.input, &mut rng);
+///
+/// let ctx = ThresholdContext::offline(model);
+/// let algo: &dyn Threshold = &VabftThreshold::default();
+/// let t = algo.thresholds(&a, &b, &ctx);
+/// assert_eq!(t.len(), 8); // one threshold per row of C
+/// assert!(t.iter().all(|&x| x.is_finite() && x > 0.0));
+/// ```
 pub trait Threshold: Send + Sync {
+    /// Display name of the algorithm (used by reports and benches).
     fn name(&self) -> &'static str;
 
     /// Per-row thresholds for verifying C = A·B.
@@ -95,14 +116,20 @@ pub trait Threshold: Send + Sync {
 
 /// Precomputed per-weight-matrix state shared across many requests in the
 /// serving coordinator: the matrix itself (baselines need it) plus the
-/// one-pass V-ABFT summary.
+/// one-pass V-ABFT summary. One of these is cached per K-block inside
+/// [`crate::abft::PreparedWeights`].
 #[derive(Debug, Clone)]
 pub struct PreparedBStats {
+    /// The (block of the) weight matrix — the fallback operand for
+    /// threshold algorithms without a prepared fast path, and the
+    /// recomputation-escalation operand.
     pub b: Matrix,
+    /// One-pass V-ABFT summary of `b` (Σ|μ|, Σμ², Σσ² per Theorem 1).
     pub bsum: BSummary,
 }
 
 impl PreparedBStats {
+    /// One pass over B: clone the data and build the V-ABFT summary.
     pub fn of(b: &Matrix) -> PreparedBStats {
         PreparedBStats { b: b.clone(), bsum: BSummary::of(b) }
     }

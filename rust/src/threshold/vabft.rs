@@ -25,10 +25,15 @@ use crate::matrix::{Matrix, RowStats};
 /// [`VabftThreshold::prepare_b`]).
 #[derive(Debug, Clone, Copy)]
 pub struct BSummary {
+    /// Columns of B (the row-sum reduction length).
     pub n: usize,
+    /// Rows of B (the dot-product reduction length).
     pub k: usize,
+    /// Σ_k |μ_Bk| — drives the deterministic bias term.
     pub sum_abs_mu: f64,
+    /// Σ_k μ_Bk² — drives variance term 3.
     pub sum_mu_sq: f64,
+    /// Σ_k σ_Bk² under the extrema bound — drives terms 2 and 4.
     pub sum_sigma_sq: f64,
 }
 
@@ -66,10 +71,12 @@ impl Default for VabftThreshold {
 }
 
 impl VabftThreshold {
+    /// Default e_max law, custom confidence multiplier.
     pub fn with_c_sigma(c_sigma: f64) -> VabftThreshold {
         VabftThreshold { c_sigma, emax: None }
     }
 
+    /// Default c_σ, fixed e_max law (e.g. a Table 7 calibrated value).
     pub fn with_emax(emax: EmaxModel) -> VabftThreshold {
         VabftThreshold { c_sigma: 2.5, emax: Some(emax) }
     }

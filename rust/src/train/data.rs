@@ -19,6 +19,7 @@ pub struct SyntheticCorpus {
 }
 
 impl SyntheticCorpus {
+    /// Corpus over `vocab` tokens with a seeded rule dictionary.
     pub fn new(vocab: usize, seed: u64) -> SyntheticCorpus {
         let mut rng = Xoshiro256pp::seed_from_u64(seed);
         let rules = (0..4)

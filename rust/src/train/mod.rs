@@ -31,8 +31,11 @@ use crate::runtime::{literal_f32, literal_i32, ArtifactEntry, PjrtRuntime};
 /// Supervisor configuration.
 #[derive(Debug, Clone)]
 pub struct TrainerConfig {
+    /// Manifest name of the train-step artifact.
     pub artifact: String,
+    /// Learning rate passed to the step.
     pub lr: f32,
+    /// Parameter-initialization seed.
     pub seed: u64,
     /// Discard + re-execute steps whose verification ratio exceeds 1.
     pub rollback_on_detection: bool,
@@ -54,7 +57,9 @@ impl Default for TrainerConfig {
 pub struct StepFault {
     /// Which protected GEMM (kernel call index) to corrupt.
     pub gemm_index: usize,
+    /// Accumulator row to corrupt.
     pub row: usize,
+    /// Accumulator column to corrupt.
     pub col: usize,
     /// Additive corruption of the FP32 accumulator element.
     pub delta: f32,
@@ -63,6 +68,7 @@ pub struct StepFault {
 /// Outcome of one supervised step.
 #[derive(Debug, Clone, Copy)]
 pub struct StepOutcome {
+    /// The step's loss.
     pub loss: f32,
     /// max over protected GEMMs and rows of |E| / T.
     pub ratio: f32,
@@ -81,7 +87,9 @@ pub struct Trainer<'rt> {
     shapes: Vec<Vec<i64>>,
     /// tokens shape [B, S+1]
     batch_shape: Vec<i64>,
+    /// Steps executed (including re-executions).
     pub steps_run: usize,
+    /// Steps whose verification ratio tripped.
     pub detections: usize,
 }
 
@@ -134,14 +142,17 @@ impl<'rt> Trainer<'rt> {
         (self.batch_shape[0] as usize, self.batch_shape[1] as usize - 1)
     }
 
+    /// The train-step artifact's manifest entry.
     pub fn entry(&self) -> &ArtifactEntry {
         &self.entry
     }
 
+    /// Current parameter tensors (flat, one per shape).
     pub fn params(&self) -> &[Vec<f32>] {
         &self.params
     }
 
+    /// Shapes of the parameter tensors.
     pub fn param_shapes(&self) -> &[Vec<i64>] {
         &self.shapes
     }

@@ -1,0 +1,174 @@
+//! Coordinator weight-cache semantics: re-registration must fully
+//! invalidate cached checksums/statistics (never serve a verification
+//! decision computed from the old B), LRU eviction must only affect
+//! id-based lookups, and the warm path must stay bitwise-faithful to a
+//! freshly-started coordinator.
+
+use std::sync::Arc;
+
+use vabft::coordinator::{
+    Coordinator, CoordinatorConfig, GemmRequest, InjectSpec, PreparedGemmRequest,
+};
+use vabft::inject::InjectionSite;
+use vabft::prelude::*;
+
+const K: usize = 96;
+const N: usize = 48;
+
+fn weights(seed: u64) -> Matrix {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    Matrix::sample_in(K, N, &Distribution::normal_1_1(), Precision::Bf16, &mut rng)
+}
+
+fn act(seed: u64) -> Matrix {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    Matrix::sample_in(8, K, &Distribution::normal_1_1(), Precision::Bf16, &mut rng)
+}
+
+fn start(capacity: usize) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        weight_capacity: capacity,
+        ..Default::default()
+    })
+}
+
+/// Re-registering a weight id with a different matrix must evict the stale
+/// checksum encoding and statistics. If any stale state survived, a clean
+/// request against the new B would be verified against the old B's
+/// checksums — a massive D1 on every row — so `Verdict::Clean` plus
+/// bitwise equality with a fresh coordinator proves full invalidation.
+#[test]
+fn reregistration_fully_invalidates_stale_state() {
+    let (b1, b2) = (weights(1), weights(2));
+    let a = act(3);
+
+    let c = start(16);
+    c.register_weights(7, &b1);
+    let out1 = c.call(GemmRequest { a: a.clone(), weight: 7, inject: None }).result.unwrap();
+    assert_eq!(out1.report.verdict, Verdict::Clean);
+
+    c.register_weights(7, &b2);
+    let out2 = c.call(GemmRequest { a: a.clone(), weight: 7, inject: None }).result.unwrap();
+    assert_eq!(
+        out2.report.verdict,
+        Verdict::Clean,
+        "stale checksums/stats served after re-registration"
+    );
+    assert!(
+        out1.c.max_abs_diff(&out2.c) > 0.0,
+        "distinct weights must give distinct products"
+    );
+
+    // Ground truth: a coordinator that has only ever seen b2.
+    let fresh = start(16);
+    fresh.register_weights(7, &b2);
+    let want = fresh.call(GemmRequest { a, weight: 7, inject: None }).result.unwrap();
+    assert_eq!(
+        out2.c.data(),
+        want.c.data(),
+        "post-re-registration output must be bitwise-identical to a fresh registration"
+    );
+    fresh.shutdown();
+    c.shutdown();
+}
+
+/// After re-registration, detection still works against the *new* weights:
+/// an injected upset is caught and the repaired output matches the new
+/// clean product — decisions are computed from the new B's state.
+#[test]
+fn detection_after_reregistration_uses_new_weights() {
+    let (b1, b2) = (weights(4), weights(5));
+    let a = act(6);
+
+    let c = start(16);
+    c.register_weights(1, &b1);
+    let _ = c.call(GemmRequest { a: a.clone(), weight: 1, inject: None });
+    c.register_weights(1, &b2);
+
+    let clean = c.call(GemmRequest { a: a.clone(), weight: 1, inject: None }).result.unwrap();
+    let faulty = c
+        .call(GemmRequest {
+            a,
+            weight: 1,
+            inject: Some(InjectSpec { site: InjectionSite { row: 2, col: 5 }, bit: 25 }),
+        })
+        .result
+        .unwrap();
+    assert_ne!(faulty.report.verdict, Verdict::Clean, "fault missed after re-registration");
+    // Repair recovers the new-B product to within ~one BF16 output ulp at
+    // this magnitude (values ≈ 96 → ulp 0.5); an un-invalidated stale
+    // checksum would leave an O(|value|) corruption instead.
+    assert!(
+        faulty.c.max_abs_diff(&clean.c) < 1.0,
+        "repair should recover the new-B product: diff {}",
+        faulty.c.max_abs_diff(&clean.c)
+    );
+    c.shutdown();
+}
+
+/// LRU eviction: the least-recently-used id drops out at capacity; its id
+/// lookups error, while resident ids and explicit handles keep working.
+#[test]
+fn lru_eviction_errors_by_id_but_handles_survive() {
+    let c = start(2);
+    let h1 = c.register_weights(1, &weights(10));
+    let h2 = c.register_weights(2, &weights(11));
+
+    // Touch 1: now 2 is least-recently-used.
+    assert!(c.call(GemmRequest { a: act(20), weight: 1, inject: None }).result.is_ok());
+    c.register_weights(3, &weights(12));
+
+    assert!(c.weight_resident(1));
+    assert!(!c.weight_resident(2), "LRU entry must be evicted at capacity");
+    assert!(c.weight_resident(3));
+
+    let err = c.call(GemmRequest { a: act(21), weight: 2, inject: None });
+    assert!(err.result.is_err(), "evicted id must error, not silently serve stale weights");
+
+    // The evicted weight's handle still works (no cache lookup)…
+    let via_handle = c.call_prepared(PreparedGemmRequest {
+        a: act(21),
+        weights: Arc::clone(&h2),
+        inject: None,
+    });
+    assert_eq!(via_handle.result.unwrap().report.verdict, Verdict::Clean);
+    // …and so does a resident id's handle.
+    let via_h1 = c.call_prepared(PreparedGemmRequest { a: act(22), weights: h1, inject: None });
+    assert!(via_h1.result.is_ok());
+    c.shutdown();
+}
+
+/// Blockwise-prepared coordinator: weights registered at block_k
+/// granularity still verify clean and catch injected faults, and the
+/// cache invalidation semantics are identical.
+#[test]
+fn blockwise_prepared_coordinator_serves_and_invalidates() {
+    let c = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        block_k: Some(32), // K = 96 → 3 blocks per weight
+        ..Default::default()
+    });
+    let (b1, b2) = (weights(30), weights(31));
+    let a = act(32);
+
+    c.register_weights(5, &b1);
+    let out = c.call(GemmRequest { a: a.clone(), weight: 5, inject: None }).result.unwrap();
+    assert_eq!(out.report.verdict, Verdict::Clean);
+    assert_eq!(out.report.rows_checked, 8 * 3, "per-block verification: M rows × 3 blocks");
+
+    c.register_weights(5, &b2);
+    let out2 = c.call(GemmRequest { a: a.clone(), weight: 5, inject: None }).result.unwrap();
+    assert_eq!(out2.report.verdict, Verdict::Clean, "stale blockwise state after re-register");
+
+    let faulty = c
+        .call(GemmRequest {
+            a,
+            weight: 5,
+            inject: Some(InjectSpec { site: InjectionSite { row: 1, col: 3 }, bit: 26 }),
+        })
+        .result
+        .unwrap();
+    assert_ne!(faulty.report.verdict, Verdict::Clean);
+    c.shutdown();
+}
