@@ -1,0 +1,236 @@
+//! Microkernel-level bench + the CI **bitwise smoke gate**.
+//!
+//! Three sections:
+//!
+//! 1. **Equality gate** — packed and unpacked engines vs the naive
+//!    reference kernels at small ragged sizes, all three strategies,
+//!    f32/f64 and the generic BF16 path, several thread counts and
+//!    micro shapes. Every output is asserted bitwise-equal; **timing is
+//!    reported but never asserted**, so this is safe (and mandatory) on
+//!    every CI push — see `.github/workflows/ci.yml`.
+//! 2. **MR/NR sweep** — GFLOP/s of the packed FP32 FMA path per
+//!    microkernel shape, the measured input to the tuning recipe in
+//!    `docs/PERFORMANCE.md`.
+//! 3. **quantize_slice micro-bench** — batched vs per-element
+//!    `Precision::quantize` on the BF16/FP16 paths (the satellite fix:
+//!    powi-free `FloatSpec` constants + one dispatch per slice).
+//!
+//! Emits `BENCH_gemm_micro.json` next to `BENCH_gemm.json`.
+//!
+//! ```text
+//! cargo bench --bench microkernel [-- --full]
+//! ```
+
+use std::time::{Duration, Instant};
+
+use vabft::bench_harness::{time_once, BenchMode, BenchRecord, BenchRecords};
+use vabft::fp::Precision;
+use vabft::gemm::{
+    generic_gemm, kernels, tiled, MicroConfig, ParallelismConfig, ReduceStrategy, TileConfig,
+};
+use vabft::report::Table;
+use vabft::rng::{Rng, Xoshiro256pp};
+
+fn rand_f64(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..n).map(|_| rng.next_f64() * 2.0 - 1.0).collect()
+}
+
+fn best_of(reps: usize, mut f: impl FnMut() -> Duration) -> Duration {
+    (0..reps.max(1)).map(|_| f()).min().unwrap()
+}
+
+fn gflops(m: usize, k: usize, n: usize, t: Duration) -> f64 {
+    2.0 * (m * k * n) as f64 / t.as_secs_f64() / 1e9
+}
+
+/// Section 1: the bitwise gate over ragged shapes.
+fn equality_gate(records: &mut BenchRecords, mode: BenchMode) {
+    let shapes: Vec<(usize, usize, usize)> = mode.pick(
+        vec![(96, 160, 112), (33, 257, 65), (7, 1, 129)],
+        vec![(96, 160, 112), (33, 257, 65), (7, 1, 129), (384, 384, 384)],
+    );
+    let micros = [MicroConfig::DEFAULT, MicroConfig::new(4, 8), MicroConfig::new(3, 5)];
+    for &(m, k, n) in &shapes {
+        let case = format!("{m}x{k}x{n}");
+        let a64 = rand_f64(m * k, 11);
+        let b64 = rand_f64(k * n, 12);
+        let a32: Vec<f32> = a64.iter().map(|&x| x as f32).collect();
+        let b32: Vec<f32> = b64.iter().map(|&x| x as f32).collect();
+        for strategy in
+            [ReduceStrategy::Sequential, ReduceStrategy::Fma, ReduceStrategy::Pairwise]
+        {
+            let ref32 = kernels::reference_gemm_f32(&a32, &b32, m, k, n, strategy);
+            let ref64 = kernels::reference_gemm_f64(&a64, &b64, m, k, n, strategy);
+            for threads in [1usize, 3] {
+                for micro in micros {
+                    let par = ParallelismConfig::with_threads(threads).micro(micro);
+                    let p32 = tiled::gemm_f32(&a32, &b32, m, k, n, strategy, &par);
+                    assert!(
+                        p32 == ref32,
+                        "f32 packed diverged: {case} {strategy:?} x{threads} {micro:?}"
+                    );
+                    let p64 = tiled::gemm_f64(&a64, &b64, m, k, n, strategy, &par);
+                    assert!(
+                        p64 == ref64,
+                        "f64 packed diverged: {case} {strategy:?} x{threads} {micro:?}"
+                    );
+                    let u32out = tiled::gemm_unpacked_f32(&a32, &b32, m, k, n, strategy, &par);
+                    assert!(u32out == ref32, "f32 unpacked diverged: {case} {strategy:?}");
+                }
+            }
+        }
+        // Generic BF16 path against its naive reference.
+        let p = Precision::Bf16;
+        let mut aq = a64.clone();
+        let mut bq = b64.clone();
+        p.quantize_slice(&mut aq);
+        p.quantize_slice(&mut bq);
+        for strategy in
+            [ReduceStrategy::Sequential, ReduceStrategy::Fma, ReduceStrategy::Pairwise]
+        {
+            let want = generic_gemm(&aq, &bq, m, k, n, p, strategy);
+            for tiles in [TileConfig::DEFAULT, TileConfig::new(4, 5, 7)] {
+                let par = ParallelismConfig::with_threads(2).tiles(tiles);
+                let got = tiled::gemm_generic(&aq, &bq, m, k, n, p, strategy, &par);
+                assert!(got == want, "generic diverged: {case} {strategy:?} {tiles:?}");
+            }
+        }
+        records.push(BenchRecord {
+            case,
+            precision: "all".into(),
+            strategy: "all".into(),
+            engine: "equality-gate".into(),
+            threads: 0,
+            unit: "GFLOP/s".into(),
+            value: 0.0,
+            speedup_vs_baseline: 1.0,
+            bitwise_equal: true,
+        });
+    }
+    println!("equality gate: all engines bitwise-equal to the reference kernels\n");
+}
+
+/// Section 2: MR/NR sweep of the packed FP32 FMA path.
+fn mr_nr_sweep(records: &mut BenchRecords, mode: BenchMode) {
+    let s = mode.pick(256, 512);
+    let (m, k, n) = (s, s, s);
+    let reps = mode.pick(2, 3);
+    let case = format!("{m}x{k}x{n}");
+    let a64 = rand_f64(m * k, 21);
+    let b64 = rand_f64(k * n, 22);
+    let a: Vec<f32> = a64.iter().map(|&x| x as f32).collect();
+    let b: Vec<f32> = b64.iter().map(|&x| x as f32).collect();
+    let strategy = ReduceStrategy::Fma;
+    let reference = kernels::reference_gemm_f32(&a, &b, m, k, n, strategy);
+    let mut table = Table::new(
+        &format!("packed fp32 {case} [fma], 1 thread, per micro shape"),
+        &["mr x nr", "best", "GFLOP/s", "bitwise"],
+    );
+    let mut baseline = 0.0f64;
+    for (mr, nr) in [(2, 8), (4, 4), (4, 8), (8, 4), (8, 8), (4, 16), (8, 16), (16, 4), (6, 6)] {
+        let par = ParallelismConfig::serial().micro(MicroConfig::new(mr, nr));
+        let mut out = Vec::new();
+        let t = best_of(reps, || {
+            time_once(|| out = tiled::gemm_f32(&a, &b, m, k, n, strategy, &par))
+        });
+        assert!(out == reference, "mr{mr}nr{nr} diverged");
+        let g = gflops(m, k, n, t);
+        if (mr, nr) == (8, 8) {
+            baseline = g;
+        }
+        table.row(vec![
+            format!("{mr} x {nr}"),
+            format!("{t:?}"),
+            format!("{g:.2}"),
+            "OK".into(),
+        ]);
+        records.push(BenchRecord {
+            case: case.clone(),
+            precision: "fp32".into(),
+            strategy: strategy.name().into(),
+            engine: format!("mr{mr}nr{nr}"),
+            threads: 1,
+            unit: "GFLOP/s".into(),
+            value: g,
+            speedup_vs_baseline: 1.0,
+            bitwise_equal: true,
+        });
+    }
+    table.print();
+    println!("(default 8x8 = {baseline:.2} GFLOP/s; see docs/PERFORMANCE.md for the recipe)\n");
+}
+
+/// Section 3: batched vs per-element quantization.
+fn quantize_bench(records: &mut BenchRecords, mode: BenchMode) {
+    let len = 1usize << mode.pick(15, 18);
+    let reps = mode.pick(20, 50);
+    // Mix of normal-range and subnormal-range values: the subnormal-flush
+    // branch is where the old powi-derived constants sat.
+    let xs: Vec<f64> = rand_f64(len, 31)
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| if i % 4 == 0 { x * 1e-41 } else { x * 4.0 })
+        .collect();
+    let mut table = Table::new(
+        &format!("quantize: per-element vs quantize_slice ({len} values)"),
+        &["precision", "per-call", "slice", "Melem/s slice", "speedup"],
+    );
+    for p in [Precision::Bf16, Precision::F16, Precision::F8E4M3] {
+        let mut per_call_out = Vec::new();
+        let t_call = best_of(reps, || {
+            time_once(|| per_call_out = xs.iter().map(|&x| p.quantize(x)).collect::<Vec<f64>>())
+        });
+        let mut slice_out = Vec::new();
+        let t_slice = best_of(reps, || {
+            let mut v = xs.clone();
+            let t0 = Instant::now();
+            p.quantize_slice(&mut v);
+            let dt = t0.elapsed();
+            slice_out = v;
+            dt
+        });
+        for (a, b) in per_call_out.iter().zip(&slice_out) {
+            assert_eq!(a.to_bits(), b.to_bits(), "quantize_slice diverged for {p:?}");
+        }
+        let speedup = t_call.as_secs_f64() / t_slice.as_secs_f64();
+        let melems = len as f64 / t_slice.as_secs_f64() / 1e6;
+        table.row(vec![
+            p.name().into(),
+            format!("{t_call:?}"),
+            format!("{t_slice:?}"),
+            format!("{melems:.1}"),
+            format!("{speedup:.2}x"),
+        ]);
+        for (engine, t, sp) in
+            [("quantize", t_call, 1.0), ("quantize_slice", t_slice, speedup)]
+        {
+            records.push(BenchRecord {
+                case: format!("quantize {len}"),
+                precision: p.name().into(),
+                strategy: "-".into(),
+                engine: engine.into(),
+                threads: 1,
+                unit: "Melem/s".into(),
+                value: len as f64 / t.as_secs_f64() / 1e6,
+                speedup_vs_baseline: sp,
+                bitwise_equal: true,
+            });
+        }
+    }
+    table.print();
+}
+
+fn main() {
+    let mode = BenchMode::from_env();
+    mode.banner("microkernel");
+    let mut records = BenchRecords::new("microkernel");
+    equality_gate(&mut records, mode);
+    mr_nr_sweep(&mut records, mode);
+    quantize_bench(&mut records, mode);
+    match records.write("BENCH_gemm_micro.json") {
+        Ok(path) => println!("\ntrajectory written to {}", path.display()),
+        Err(e) => eprintln!("\nwarning: could not write BENCH_gemm_micro.json: {e}"),
+    }
+    println!("microkernel: bitwise gate passed");
+}

@@ -1,9 +1,14 @@
-//! Tiled parallel engine vs the naive reference kernels: wall-clock at
-//! serving-relevant sizes, with the bitwise schedule-equality check run on
-//! every measured output (speed is worthless here if the schedule moved).
+//! Engine trajectory bench: **naive → unpacked (PR 1) → packed (PR 3)**
+//! at serving-relevant sizes, with the bitwise schedule-equality check
+//! run on every measured output (speed is worthless here if the schedule
+//! moved), plus the generic-precision BF16 path. Emits the
+//! machine-readable trajectory to `BENCH_gemm.json` at the repo root
+//! (override with `VABFT_BENCH_JSON`).
 //!
-//! Quick mode: 512³ FP32 (the acceptance shape — the 4-thread engine must
-//! beat the naive kernel). Full mode adds 1024³ and the FP64 path.
+//! Quick mode: 512³ FP32 + a small generic-BF16 shape. Full mode adds
+//! 1024³, the FP64 path, and asserts the acceptance bars:
+//! packed ≥ 1.5× unpacked at 1024³ FP32 FMA, and the blocked generic
+//! path beating the naive generic reference.
 //!
 //! ```text
 //! cargo bench --bench parallel_engine [-- --full]
@@ -11,8 +16,9 @@
 
 use std::time::Duration;
 
-use vabft::bench_harness::{time_once, BenchMode};
-use vabft::gemm::{kernels, tiled, ParallelismConfig, ReduceStrategy};
+use vabft::bench_harness::{time_once, BenchMode, BenchRecord, BenchRecords};
+use vabft::fp::Precision;
+use vabft::gemm::{generic_gemm, kernels, tiled, ParallelismConfig, ReduceStrategy};
 use vabft::report::Table;
 use vabft::rng::{Rng, Xoshiro256pp};
 
@@ -21,8 +27,127 @@ fn rand_f32(n: usize, seed: u64) -> Vec<f32> {
     (0..n).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect()
 }
 
+fn rand_f64(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..n).map(|_| rng.next_f64() * 2.0 - 1.0).collect()
+}
+
 fn best_of(reps: usize, mut f: impl FnMut() -> Duration) -> Duration {
     (0..reps.max(1)).map(|_| f()).min().unwrap()
+}
+
+fn gflops(m: usize, k: usize, n: usize, t: Duration) -> f64 {
+    2.0 * (m * k * n) as f64 / t.as_secs_f64() / 1e9
+}
+
+#[allow(clippy::too_many_arguments)]
+fn record(
+    records: &mut BenchRecords,
+    case: &str,
+    precision: &str,
+    strategy: &str,
+    engine: &str,
+    threads: usize,
+    value: f64,
+    speedup: f64,
+) {
+    records.push(BenchRecord {
+        case: case.into(),
+        precision: precision.into(),
+        strategy: strategy.into(),
+        engine: engine.into(),
+        threads,
+        unit: "GFLOP/s".into(),
+        value,
+        speedup_vs_baseline: speedup,
+        bitwise_equal: true, // asserted before recording
+    });
+}
+
+/// One (size, element type) section: naive reference, then unpacked and
+/// packed engines per thread count. Returns (best unpacked, best packed)
+/// FMA-strategy times for the acceptance bar.
+macro_rules! engine_section {
+    ($records:expr, $reps:expr, $thread_counts:expr, $base_par:expr, $m:expr, $k:expr, $n:expr,
+     $prec_name:expr, $a:expr, $b:expr, $naive:expr, $unpacked:expr, $packed:expr) => {{
+        let (m, k, n) = ($m, $k, $n);
+        let case = format!("{m}x{k}x{n}");
+        let mut best_unpacked_fma = Duration::MAX;
+        let mut best_packed_fma = Duration::MAX;
+        for strategy in
+            [ReduceStrategy::Sequential, ReduceStrategy::Fma, ReduceStrategy::Pairwise]
+        {
+            let mut reference = Vec::new();
+            let t_naive =
+                best_of($reps, || time_once(|| reference = $naive(&$a, &$b, strategy)));
+            let mut table = Table::new(
+                &format!("{} {case} [{}]", $prec_name, strategy.name()),
+                &["engine", "best", "GFLOP/s", "speedup", "bitwise"],
+            );
+            table.row(vec![
+                "naive ikj".into(),
+                format!("{t_naive:?}"),
+                format!("{:.2}", gflops(m, k, n, t_naive)),
+                "1.00x".into(),
+                "ref".into(),
+            ]);
+            record(
+                $records, &case, $prec_name, strategy.name(), "naive", 1,
+                gflops(m, k, n, t_naive), 1.0,
+            );
+            for &threads in $thread_counts {
+                // Honor the CLI tile/micro flags (--mc/--kc/--nc/--mr/--nr).
+                let par = ParallelismConfig::with_threads(threads)
+                    .tiles($base_par.tiles)
+                    .micro($base_par.micro);
+                for (engine_name, is_packed) in [("unpacked", false), ("packed", true)] {
+                    let mut out = Vec::new();
+                    let t = best_of($reps, || {
+                        time_once(|| {
+                            out = if is_packed {
+                                $packed(&$a, &$b, m, k, n, strategy, &par)
+                            } else {
+                                $unpacked(&$a, &$b, m, k, n, strategy, &par)
+                            }
+                        })
+                    });
+                    assert!(
+                        out == reference,
+                        "schedule invariant violated: {engine_name} x{threads} {strategy:?}"
+                    );
+                    let speedup = t_naive.as_secs_f64() / t.as_secs_f64();
+                    table.row(vec![
+                        format!("{engine_name} x{threads}"),
+                        format!("{t:?}"),
+                        format!("{:.2}", gflops(m, k, n, t)),
+                        format!("{speedup:.2}x"),
+                        "OK".into(),
+                    ]);
+                    record(
+                        $records, &case, $prec_name, strategy.name(), engine_name, threads,
+                        gflops(m, k, n, t), speedup,
+                    );
+                    if strategy == ReduceStrategy::Fma {
+                        if is_packed {
+                            best_packed_fma = best_packed_fma.min(t);
+                        } else {
+                            best_unpacked_fma = best_unpacked_fma.min(t);
+                        }
+                    }
+                    // The PR-1 acceptance bar, now also demanded of the
+                    // packed engine: beat the naive kernel at 512³ ×4.
+                    if m >= 512 && threads >= 4 {
+                        assert!(
+                            speedup > 1.0,
+                            "{engine_name} slower than naive at {case} x{threads} ({speedup:.2}x)"
+                        );
+                    }
+                }
+            }
+            table.print();
+        }
+        (best_unpacked_fma, best_packed_fma)
+    }};
 }
 
 fn main() {
@@ -36,58 +161,103 @@ fn main() {
     } else {
         vec![1, 2, 4]
     };
+    let mut records = BenchRecords::new("parallel_engine");
 
     for &s in &sizes {
         let (m, k, n) = (s, s, s);
-        let a = rand_f32(m * k, 1);
-        let b = rand_f32(k * n, 2);
-        for strategy in
-            [ReduceStrategy::Sequential, ReduceStrategy::Fma, ReduceStrategy::Pairwise]
-        {
-            let mut reference = Vec::new();
-            let t_naive = best_of(reps, || {
-                time_once(|| reference = kernels::reference_gemm_f32(&a, &b, m, k, n, strategy))
-            });
-            let flops = 2.0 * (m * k * n) as f64;
-
-            let mut table = Table::new(
-                &format!("fp32 {m}x{k}x{n} [{}]", strategy.name()),
-                &["engine", "best", "GFLOP/s", "speedup", "bitwise"],
+        let a32 = rand_f32(m * k, 1);
+        let b32 = rand_f32(k * n, 2);
+        let naive32 =
+            |a: &[f32], b: &[f32], st: ReduceStrategy| kernels::reference_gemm_f32(a, b, m, k, n, st);
+        let (best_unpacked, best_packed) = engine_section!(
+            &mut records, reps, &thread_counts, par_from_cli, m, k, n, "fp32", a32, b32,
+            naive32, tiled::gemm_unpacked_f32, tiled::gemm_f32
+        );
+        // Acceptance bar (full mode, 1024³): the packed engine must be
+        // ≥ 1.5× the PR-1 unpacked engine on the FP32 FMA path.
+        if mode.is_full() && s >= 1024 {
+            let ratio = best_unpacked.as_secs_f64() / best_packed.as_secs_f64();
+            println!("acceptance: packed vs unpacked fp32 fma at {s}³ = {ratio:.2}x");
+            assert!(
+                ratio >= 1.5,
+                "packed engine below the 1.5x acceptance bar vs unpacked at {s}³ ({ratio:.2}x)"
             );
-            table.row(vec![
-                "naive ikj".into(),
-                format!("{t_naive:?}"),
-                format!("{:.2}", flops / t_naive.as_secs_f64() / 1e9),
-                "1.00x".into(),
-                "ref".into(),
-            ]);
-            for &threads in &thread_counts {
-                let par = ParallelismConfig::with_threads(threads).tiles(par_from_cli.tiles);
-                let mut out = Vec::new();
-                let t_tiled = best_of(reps, || {
-                    time_once(|| out = tiled::gemm_f32(&a, &b, m, k, n, strategy, &par))
-                });
-                let equal = out == reference;
-                assert!(equal, "schedule invariant violated at {threads} threads");
-                let speedup = t_naive.as_secs_f64() / t_tiled.as_secs_f64();
-                table.row(vec![
-                    format!("tiled x{threads}"),
-                    format!("{t_tiled:?}"),
-                    format!("{:.2}", flops / t_tiled.as_secs_f64() / 1e9),
-                    format!("{speedup:.2}x"),
-                    "OK".into(),
-                ]);
-                // The acceptance bar: at 512³ FP32 and 4 threads the
-                // parallel engine must beat the naive kernel wall-clock.
-                if s >= 512 && threads >= 4 {
-                    assert!(
-                        speedup > 1.0,
-                        "parallel engine slower than naive at {s}³ x{threads} ({speedup:.2}x)"
-                    );
-                }
-            }
-            table.print();
         }
+        if mode.is_full() && s <= 512 {
+            let a64 = rand_f64(m * k, 3);
+            let b64 = rand_f64(k * n, 4);
+            let naive64 = |a: &[f64], b: &[f64], st: ReduceStrategy| {
+                kernels::reference_gemm_f64(a, b, m, k, n, st)
+            };
+            let _ = engine_section!(
+                &mut records, reps, &thread_counts, par_from_cli, m, k, n, "fp64", a64, b64,
+                naive64, tiled::gemm_unpacked_f64, tiled::gemm_f64
+            );
+        }
+    }
+
+    // The generic (software-precision) BF16 path: the naive reference is
+    // crate::gemm::generic_gemm (tile-blind, strided B); the blocked path
+    // is tiled::gemm_generic, which now honors TileConfig.
+    {
+        let s = mode.pick(160, 256);
+        let (m, k, n) = (s, s, s);
+        let p = Precision::Bf16;
+        let mut a = rand_f64(m * k, 5);
+        let mut b = rand_f64(k * n, 6);
+        p.quantize_slice(&mut a);
+        p.quantize_slice(&mut b);
+        let case = format!("{m}x{k}x{n}");
+        let mut table = Table::new(
+            &format!("bf16(generic) {case} [sequential]"),
+            &["engine", "best", "GFLOP/s", "speedup", "bitwise"],
+        );
+        let st = ReduceStrategy::Sequential;
+        let mut reference = Vec::new();
+        let t_naive =
+            best_of(reps, || time_once(|| reference = generic_gemm(&a, &b, m, k, n, p, st)));
+        table.row(vec![
+            "naive".into(),
+            format!("{t_naive:?}"),
+            format!("{:.2}", gflops(m, k, n, t_naive)),
+            "1.00x".into(),
+            "ref".into(),
+        ]);
+        record(&mut records, &case, "bf16(generic)", st.name(), "naive", 1,
+            gflops(m, k, n, t_naive), 1.0);
+        for &threads in &thread_counts {
+            let par = ParallelismConfig::with_threads(threads).tiles(par_from_cli.tiles);
+            let mut out = Vec::new();
+            let t = best_of(reps, || {
+                time_once(|| out = tiled::gemm_generic(&a, &b, m, k, n, p, st, &par))
+            });
+            assert!(out == reference, "generic schedule invariant violated x{threads}");
+            let speedup = t_naive.as_secs_f64() / t.as_secs_f64();
+            table.row(vec![
+                format!("blocked x{threads}"),
+                format!("{t:?}"),
+                format!("{:.2}", gflops(m, k, n, t)),
+                format!("{speedup:.2}x"),
+                "OK".into(),
+            ]);
+            record(&mut records, &case, "bf16(generic)", st.name(), "blocked", threads,
+                gflops(m, k, n, t), speedup);
+            // Acceptance: a measurable win for the blocked generic path
+            // (full mode; single-thread keeps it an apples-to-apples
+            // blocking win, not a threading win).
+            if mode.is_full() && threads == 1 {
+                assert!(
+                    speedup > 1.0,
+                    "blocked generic path not faster than naive ({speedup:.2}x)"
+                );
+            }
+        }
+        table.print();
+    }
+
+    match records.write("BENCH_gemm.json") {
+        Ok(path) => println!("\ntrajectory written to {}", path.display()),
+        Err(e) => eprintln!("\nwarning: could not write BENCH_gemm.json: {e}"),
     }
     println!("parallel_engine: all outputs bitwise-equal to the naive reference");
 }

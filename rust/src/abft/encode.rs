@@ -10,6 +10,7 @@
 //! paper's evaluation uses row checksums (single-event-upset model), and
 //! that is what [`crate::abft::FtGemm`] verifies by default.
 
+use crate::fp::Precision;
 use crate::gemm::GemmEngine;
 use crate::matrix::Matrix;
 
@@ -20,42 +21,109 @@ pub fn position_weight(j: usize) -> f64 {
     (j + 1) as f64
 }
 
+/// Both checksum reductions of every row of (input-quantized) `bq` in one
+/// shot: returns (B·r1, B·r2), *unquantized* (callers round onto their
+/// storage grid).
+///
+/// The products ride the **packed parallel engine**
+/// ([`GemmEngine::matmul_work`]) as a K×N · N×2 GEMM against the columns
+/// `[1 | w]`: for every built-in accumulation model the engine schedule
+/// of that GEMM is element-for-element the schedule of
+/// [`GemmEngine::reduce`] / [`GemmEngine::dot`] (multiplying by the exact
+/// 1.0 is a no-op rounding, and product/step roundings line up one to
+/// one), so the results are bitwise-identical to the per-row loop —
+/// verified by `routed_checksums_match_per_row_reference` below. The
+/// per-row loop is kept for exotic models whose *work* grid cannot
+/// represent the input values (where `q_work(x·1) = x` would not hold).
+fn checksum_products(bq: &[f64], k: usize, n: usize, engine: &GemmEngine) -> (Vec<f64>, Vec<f64>) {
+    if gemm_routable(engine) {
+        let mut rhs = vec![0.0f64; n * 2];
+        for j in 0..n {
+            rhs[2 * j] = 1.0;
+            rhs[2 * j + 1] = position_weight(j);
+        }
+        let cs = engine.matmul_work(bq, &rhs, k, n, 2);
+        ((0..k).map(|r| cs[2 * r]).collect(), (0..k).map(|r| cs[2 * r + 1]).collect())
+    } else {
+        let weights: Vec<f64> = (0..n).map(position_weight).collect();
+        let mut r1 = Vec::with_capacity(k);
+        let mut r2 = Vec::with_capacity(k);
+        for row in 0..k {
+            let rq = &bq[row * n..(row + 1) * n];
+            r1.push(engine.reduce(rq));
+            r2.push(engine.dot(rq, &weights));
+        }
+        (r1, r2)
+    }
+}
+
+/// One checksum reduction of every row of `bq` (r1 when `weighted` is
+/// false, r2 otherwise) — the K×N · N×1 form of [`checksum_products`]
+/// for callers that need a single column and shouldn't pay for both.
+fn checksum_column(
+    bq: &[f64],
+    k: usize,
+    n: usize,
+    engine: &GemmEngine,
+    weighted: bool,
+) -> Vec<f64> {
+    if gemm_routable(engine) {
+        let rhs: Vec<f64> =
+            (0..n).map(|j| if weighted { position_weight(j) } else { 1.0 }).collect();
+        engine.matmul_work(bq, &rhs, k, n, 1)
+    } else {
+        let weights: Vec<f64> = (0..n).map(position_weight).collect();
+        (0..k)
+            .map(|row| {
+                let rq = &bq[row * n..(row + 1) * n];
+                if weighted {
+                    engine.dot(rq, &weights)
+                } else {
+                    engine.reduce(rq)
+                }
+            })
+            .collect()
+    }
+}
+
+/// Whether this engine's checksum reductions can ride the packed GEMM:
+/// true whenever multiplying an input-grid value by exactly 1.0 and
+/// rounding to the work grid is an identity (native f32/f64 work
+/// precisions, or generic work == input). See [`checksum_products`].
+fn gemm_routable(engine: &GemmEngine) -> bool {
+    let model = engine.model();
+    matches!(model.work, Precision::F32 | Precision::F64) || model.input == model.work
+}
+
+/// `b` quantized onto the engine's input grid — the values the GEMM
+/// actually consumes, which is what the checksums must cover.
+fn input_quantized(b: &Matrix, engine: &GemmEngine) -> Vec<f64> {
+    let mut bq = b.data().to_vec();
+    engine.model().input.quantize_slice(&mut bq);
+    bq
+}
+
 /// B·r1 per row of B: the plain row sums of the *input-quantized* row
 /// (the GEMM consumes B on the input grid, so the checksum must cover
 /// exactly those values), reduced with the engine's schedule and stored on
 /// the engine's *input* grid (hardware stores the encoded columns in the
 /// operand precision).
 pub fn r1_checksum_of_b(b: &Matrix, engine: &GemmEngine) -> Vec<f64> {
-    let input = engine.model().input;
     let grid = offline_checksum_grid(engine);
-    let mut row_q = vec![0.0; b.cols()];
-    (0..b.rows())
-        .map(|k| {
-            quantize_row(b.row(k), input, &mut row_q);
-            grid.quantize(engine.reduce(&row_q))
-        })
-        .collect()
+    let bq = input_quantized(b, engine);
+    let mut r1 = checksum_column(&bq, b.rows(), b.cols(), engine, false);
+    grid.quantize_slice(&mut r1);
+    r1
 }
 
 /// B·r2 per row of B: position-weighted row sums (input-quantized data,
 /// input-grid storage).
 pub fn r2_checksum_of_b(b: &Matrix, engine: &GemmEngine) -> Vec<f64> {
-    let input = engine.model().input;
     let grid = offline_checksum_grid(engine);
-    let weights: Vec<f64> = (0..b.cols()).map(position_weight).collect();
-    let mut row_q = vec![0.0; b.cols()];
-    (0..b.rows())
-        .map(|k| {
-            quantize_row(b.row(k), input, &mut row_q);
-            grid.quantize(engine.dot(&row_q, &weights))
-        })
-        .collect()
-}
-
-fn quantize_row(src: &[f64], p: crate::fp::Precision, dst: &mut [f64]) {
-    for (d, &s) in dst.iter_mut().zip(src) {
-        *d = p.quantize(s);
-    }
+    let bq = input_quantized(b, engine);
+    let mut r2 = checksum_column(&bq, b.rows(), b.cols(), engine, true);
+    grid.quantize_slice(&mut r2);
+    r2
 }
 
 /// Storage grid of offline checksum columns: the *finer* of the input and
@@ -106,18 +174,17 @@ impl ChecksumEncoding {
 
     fn encode_b_impl(b: &Matrix, engine: &GemmEngine, wide: bool) -> ChecksumEncoding {
         let (k, n) = (b.rows(), b.cols());
-        let input = engine.model().input;
         let grid = if wide { engine.model().work } else { offline_checksum_grid(engine) };
-        let weights: Vec<f64> = (0..n).map(position_weight).collect();
+        // Checksums must cover the values the GEMM actually consumes: the
+        // input-quantized B. Both reductions of all K rows run as one
+        // K×N·N×2 product on the packed engine (see checksum_products).
+        let bq = input_quantized(b, engine);
+        let (r1, r2) = checksum_products(&bq, k, n, engine);
         let mut be = Matrix::zeros(k, n + 2);
-        let mut row_q = vec![0.0; n];
         for row in 0..k {
             be.row_mut(row)[..n].copy_from_slice(b.row(row));
-            // Checksums must cover the values the GEMM actually consumes:
-            // the input-quantized row.
-            quantize_row(b.row(row), input, &mut row_q);
-            be.set(row, n, grid.quantize(engine.reduce(&row_q)));
-            be.set(row, n + 1, grid.quantize(engine.dot(&row_q, &weights)));
+            be.set(row, n, grid.quantize(r1[row]));
+            be.set(row, n + 1, grid.quantize(r2[row]));
         }
         ChecksumEncoding { b_encoded: be, n, wide }
     }
@@ -175,12 +242,80 @@ pub fn encode_a_columns(a: &Matrix, engine: &GemmEngine) -> Matrix {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fp::Precision;
-    use crate::gemm::AccumModel;
+    use crate::gemm::{AccumModel, ReduceStrategy};
     use crate::rng::{Distribution, Xoshiro256pp};
 
     fn engine_f64() -> GemmEngine {
         GemmEngine::new(AccumModel::cpu(Precision::F64))
+    }
+
+    #[test]
+    fn routed_checksums_match_per_row_reference() {
+        // The packed-engine routing (one K×N·N×2 GEMM) must be
+        // bitwise-identical to the pre-packing implementation: per-row
+        // engine.reduce / engine.dot on the input-quantized rows. Covers
+        // all three kernel dispatch paths (f64, f32, generic) and all
+        // three strategies.
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let d = Distribution::normal_1_1();
+        let b = Matrix::sample(33, 19, &d, &mut rng);
+        let models = [
+            AccumModel::cpu(Precision::F64),          // f64 pairwise
+            AccumModel::gpu_highprec(Precision::F64), // f64 sequential
+            AccumModel::cpu(Precision::F32),          // f32 pairwise
+            AccumModel::gpu_highprec(Precision::F32), // f32 sequential
+            AccumModel::wide(Precision::Bf16),        // f32 work, bf16 input
+            AccumModel::fp8(Precision::F8E4M3),       // f32 work, fp8 input
+            AccumModel::cpu(Precision::Bf16),         // generic pairwise
+            AccumModel {
+                input: Precision::F16,
+                work: Precision::F16,
+                strategy: ReduceStrategy::Fma,
+                out: Precision::F16,
+            }, // generic fma
+        ];
+        for model in models {
+            let engine = GemmEngine::new(model);
+            let weights: Vec<f64> = (0..b.cols()).map(position_weight).collect();
+            let grid = offline_checksum_grid(&engine);
+            let mut row_q = vec![0.0; b.cols()];
+            let mut want_r1 = Vec::new();
+            let mut want_r2 = Vec::new();
+            for r in 0..b.rows() {
+                for (dst, &s) in row_q.iter_mut().zip(b.row(r)) {
+                    *dst = model.input.quantize(s);
+                }
+                want_r1.push(grid.quantize(engine.reduce(&row_q)));
+                want_r2.push(grid.quantize(engine.dot(&row_q, &weights)));
+            }
+            // Single-column routing (the standalone checksum helpers)…
+            let got_r1 = r1_checksum_of_b(&b, &engine);
+            let got_r2 = r2_checksum_of_b(&b, &engine);
+            // …and the paired K×N·N×2 routing used by encode_b.
+            let enc = ChecksumEncoding::encode_b(&b, &engine);
+            for r in 0..b.rows() {
+                assert_eq!(
+                    got_r1[r].to_bits(),
+                    want_r1[r].to_bits(),
+                    "r1 row {r} diverged under {model:?}"
+                );
+                assert_eq!(
+                    got_r2[r].to_bits(),
+                    want_r2[r].to_bits(),
+                    "r2 row {r} diverged under {model:?}"
+                );
+                assert_eq!(
+                    enc.b_encoded.get(r, b.cols()).to_bits(),
+                    want_r1[r].to_bits(),
+                    "encoded r1 row {r} diverged under {model:?}"
+                );
+                assert_eq!(
+                    enc.b_encoded.get(r, b.cols() + 1).to_bits(),
+                    want_r2[r].to_bits(),
+                    "encoded r2 row {r} diverged under {model:?}"
+                );
+            }
+        }
     }
 
     #[test]

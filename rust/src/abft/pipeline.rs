@@ -256,11 +256,16 @@ pub(crate) fn run_prepared(
 
         // Aggregate the verified partial into the running sum (work
         // precision; the single output rounding happens in finalize).
+        // Batched: the row of raw sums is formed first, then rounded in
+        // one quantize_slice pass — bitwise-identical to per-element
+        // quantize(dv + sv), one format dispatch per row instead of per
+        // element.
         for i in 0..m {
             let dst = acc.row_mut(i);
             for (dv, &sv) in dst.iter_mut().zip(bv.part.row(i)) {
-                *dv = model.work.quantize(*dv + sv);
+                *dv += sv;
             }
+            model.work.quantize_slice(dst);
         }
     }
 

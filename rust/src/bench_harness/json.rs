@@ -1,0 +1,164 @@
+//! Machine-readable bench output: the `BENCH_*.json` trajectory files.
+//!
+//! Perf work is only credible against a recorded baseline, so the perf
+//! benches (`parallel_engine`, `microkernel`) emit their measurements as
+//! a small JSON document in addition to the human tables. The files are
+//! committed at the repository root; their git history *is* the
+//! throughput trajectory future PRs regress against.
+//!
+//! No serde in the offline registry — the schema is flat enough to write
+//! by hand: a top-level object with bench metadata and an `entries`
+//! array of uniform records.
+
+use std::path::PathBuf;
+
+/// One measurement: a row of the `entries` array.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// What was measured, e.g. `"1024x1024x1024"` or `"quantize 65536"`.
+    pub case: String,
+    /// Element/precision label (`"fp32"`, `"fp64"`, `"bf16(generic)"`).
+    pub precision: String,
+    /// Reduction strategy name, or `"-"` when not applicable.
+    pub strategy: String,
+    /// Engine/variant label (`"naive"`, `"unpacked"`, `"packed"`,
+    /// `"quantize"`, `"quantize_slice"`, `"mr8nr8"` …).
+    pub engine: String,
+    /// Worker threads used (1 for single-threaded cases).
+    pub threads: usize,
+    /// Unit of `value` (`"GFLOP/s"`, `"Melem/s"`).
+    pub unit: String,
+    /// The measured throughput in `unit`s.
+    pub value: f64,
+    /// Speedup vs the case's baseline variant (1.0 for the baseline
+    /// itself).
+    pub speedup_vs_baseline: f64,
+    /// Whether the variant's output was verified bitwise-equal to the
+    /// reference (the schedule-preservation gate; always checked, never
+    /// a timing assertion).
+    pub bitwise_equal: bool,
+}
+
+/// Collects [`BenchRecord`]s for one bench binary and serializes them.
+#[derive(Debug, Clone)]
+pub struct BenchRecords {
+    bench: String,
+    records: Vec<BenchRecord>,
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+impl BenchRecords {
+    /// Start a record set for the named bench.
+    pub fn new(bench: &str) -> BenchRecords {
+        BenchRecords { bench: bench.to_string(), records: Vec::new() }
+    }
+
+    /// Append one measurement.
+    pub fn push(&mut self, r: BenchRecord) {
+        self.records.push(r);
+    }
+
+    /// Number of collected records.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Serialize to the trajectory JSON document.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", esc(&self.bench)));
+        out.push_str(&format!(
+            "  \"mode\": \"{}\",\n",
+            if super::BenchMode::from_env().is_full() { "full" } else { "quick" }
+        ));
+        out.push_str("  \"entries\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"case\": \"{}\", \"precision\": \"{}\", \"strategy\": \"{}\", \
+                 \"engine\": \"{}\", \"threads\": {}, \"unit\": \"{}\", \"value\": {:.3}, \
+                 \"speedup_vs_baseline\": {:.3}, \"bitwise_equal\": {}}}{}\n",
+                esc(&r.case),
+                esc(&r.precision),
+                esc(&r.strategy),
+                esc(&r.engine),
+                r.threads,
+                esc(&r.unit),
+                r.value,
+                r.speedup_vs_baseline,
+                r.bitwise_equal,
+                if i + 1 == self.records.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the document to `filename` at the repository root (or to
+    /// `$VABFT_BENCH_JSON` verbatim when set), returning the path.
+    pub fn write(&self, filename: &str) -> std::io::Result<PathBuf> {
+        let path = match std::env::var("VABFT_BENCH_JSON") {
+            Ok(p) if !p.is_empty() => PathBuf::from(p),
+            _ => {
+                // CARGO_MANIFEST_DIR is rust/; the trajectory lives at
+                // the workspace root next to README.md.
+                let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+                manifest.parent().map(|p| p.to_path_buf()).unwrap_or(manifest).join(filename)
+            }
+        };
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record() -> BenchRecord {
+        BenchRecord {
+            case: "64x64x64".into(),
+            precision: "fp32".into(),
+            strategy: "fma".into(),
+            engine: "packed".into(),
+            threads: 2,
+            unit: "GFLOP/s".into(),
+            value: 12.3456,
+            speedup_vs_baseline: 2.5,
+            bitwise_equal: true,
+        }
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut rs = BenchRecords::new("unit_test");
+        assert!(rs.is_empty());
+        rs.push(record());
+        rs.push(BenchRecord { engine: "naive".into(), speedup_vs_baseline: 1.0, ..record() });
+        assert_eq!(rs.len(), 2);
+        let j = rs.to_json();
+        assert!(j.contains("\"bench\": \"unit_test\""));
+        assert!(j.contains("\"value\": 12.346"));
+        assert!(j.contains("\"bitwise_equal\": true"));
+        // exactly one comma-separated entry (the last has no comma)
+        assert_eq!(j.matches("},\n").count(), 1);
+        assert!(j.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn escaping() {
+        let mut rs = BenchRecords::new("a\"b");
+        rs.push(BenchRecord { case: "x\\y".into(), ..record() });
+        let j = rs.to_json();
+        assert!(j.contains("a\\\"b"));
+        assert!(j.contains("x\\\\y"));
+    }
+}

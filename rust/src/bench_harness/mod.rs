@@ -7,6 +7,9 @@
 //! `VABFT_BENCH_FULL=1` reproduces the paper's exact sizes and trial
 //! counts.
 
+pub mod json;
+pub use json::{BenchRecord, BenchRecords};
+
 use std::time::{Duration, Instant};
 
 /// Timing statistics over repeated runs.

@@ -114,18 +114,41 @@ impl Precision {
         match self {
             Precision::F64 => x,
             Precision::F32 => x as f32 as f64,
-            Precision::Bf16 => {
-                let f = x as f32;
-                let b = f.to_bits();
-                if !f.is_finite() {
-                    return f as f64; // Inf/NaN pass through
-                }
-                let rounded = b.wrapping_add(0x7FFF + ((b >> 16) & 1));
-                f32::from_bits(rounded & 0xFFFF_0000) as f64
-            }
+            Precision::Bf16 => quantize_bf16(x),
             Precision::F16 => F16::from_f64(x).to_f64(),
             Precision::F8E4M3 => F8E4M3::from_f64(x).to_f64(),
             Precision::F8E5M2 => F8E5M2::from_f64(x).to_f64(),
+        }
+    }
+
+    /// Quantize a slice in place — the batched form of
+    /// [`Precision::quantize`], bitwise-identical element-wise.
+    ///
+    /// The format dispatch happens once per slice instead of once per
+    /// element, and the per-format inner loops are tight enough for the
+    /// compiler to vectorize (BF16/F32) or at least keep the
+    /// [`rounding::FloatSpec`] constants in registers (F16/FP8). This is
+    /// the primitive the blocked generic GEMM path
+    /// ([`crate::gemm::tiled::gemm_generic`]) and the ABFT aggregation
+    /// loop are built on; `benches/microkernel.rs` measures the win over
+    /// a per-element `quantize` loop.
+    #[inline]
+    pub fn quantize_slice(self, xs: &mut [f64]) {
+        match self {
+            Precision::F64 => {}
+            Precision::F32 => {
+                for x in xs.iter_mut() {
+                    *x = *x as f32 as f64;
+                }
+            }
+            Precision::Bf16 => {
+                for x in xs.iter_mut() {
+                    *x = quantize_bf16(*x);
+                }
+            }
+            Precision::F16 => rounding::FloatSpec::F16.quantize_slice(xs),
+            Precision::F8E4M3 => rounding::FloatSpec::E4M3.quantize_slice(xs),
+            Precision::F8E5M2 => rounding::FloatSpec::E5M2.quantize_slice(xs),
         }
     }
 
@@ -166,6 +189,21 @@ impl Precision {
     pub fn sign_bit(self) -> u32 {
         self.bits() - 1
     }
+}
+
+/// The BF16 fast path shared by [`Precision::quantize`] and
+/// [`Precision::quantize_slice`]: f64→f32 in hardware, then an integer
+/// round-to-nearest-even of the low 16 bits (see the `quantize` docs for
+/// the tie-point caveat).
+#[inline]
+fn quantize_bf16(x: f64) -> f64 {
+    let f = x as f32;
+    if !f.is_finite() {
+        return f as f64; // Inf/NaN pass through
+    }
+    let b = f.to_bits();
+    let rounded = b.wrapping_add(0x7FFF + ((b >> 16) & 1));
+    f32::from_bits(rounded & 0xFFFF_0000) as f64
 }
 
 impl std::fmt::Display for Precision {
@@ -219,6 +257,29 @@ mod tests {
                 let x = ((state >> 11) as f64 / (1u64 << 53) as f64 - 0.5) * 8.0;
                 let q = p.quantize(x);
                 assert_eq!(p.quantize(q), q, "{p:?} not idempotent at {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_slice_is_bitwise_equal_to_quantize() {
+        let mut state = 0xABCDu64;
+        for p in Precision::ALL {
+            let mut xs: Vec<f64> = (0..300)
+                .map(|i| {
+                    state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    let u = (state >> 11) as f64 / (1u64 << 53) as f64 - 0.5;
+                    match i % 3 {
+                        0 => u * 8.0,
+                        1 => u * 1e-6, // subnormal range for the narrow formats
+                        _ => u * 1e6,
+                    }
+                })
+                .collect();
+            let want: Vec<f64> = xs.iter().map(|&x| p.quantize(x)).collect();
+            p.quantize_slice(&mut xs);
+            for (got, want) in xs.iter().zip(&want) {
+                assert_eq!(got.to_bits(), want.to_bits(), "{p:?}");
             }
         }
     }

@@ -6,6 +6,16 @@
 //! formats without an infinity (E4M3), and rounding overflow into the next
 //! exponent or into Inf.
 
+/// 2^e as f64, assembled from bits. `e` must be a *normal* f64 exponent
+/// (−1022 ..= 1023), which holds for every derived constant of a ≤ 32-bit
+/// format. Replaces the `powi` calls that used to sit on the quantization
+/// hot path.
+#[inline]
+fn pow2(e: i32) -> f64 {
+    debug_assert!((-1022..=1023).contains(&e));
+    f64::from_bits(((e + 1023) as u64) << 52)
+}
+
 /// Static description of a binary floating-point format (≤ 32 bits wide).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FloatSpec {
@@ -41,26 +51,36 @@ impl FloatSpec {
     }
 
     /// Largest finite value of the format.
+    ///
+    /// Assembled directly as f64 bits (every exponent of a ≤ 32-bit format
+    /// is a normal f64 exponent), so this is a handful of integer ops — no
+    /// `powi` — and cheap enough for the `encode` hot path to call.
+    #[inline]
     pub fn max_finite(self) -> f64 {
-        let bias = self.bias();
-        if self.has_inf {
+        let (e_top, man) = if self.has_inf {
             // exp field 2^eb - 2, mantissa all ones: (2 - 2^-m) * 2^bias
-            (2.0 - (2.0f64).powi(-(self.man_bits as i32))) * (2.0f64).powi(bias)
+            (self.bias(), ((1u64 << self.man_bits) - 1) << (52 - self.man_bits))
         } else {
-            // E4M3: exp field all ones, mantissa 111...0 (all-ones is NaN)
-            let e_max = ((1 << self.exp_bits) - 1) - bias;
-            (2.0 - (2.0f64).powi(-(self.man_bits as i32 - 1))) * (2.0f64).powi(e_max)
-        }
+            // E4M3: exp field all ones, mantissa 111...0 (all-ones is NaN):
+            // (2 - 2^-(m-1)) * 2^e_max
+            let e_max = ((1 << self.exp_bits) - 1) - self.bias();
+            (e_max, ((1u64 << self.man_bits) - 2) << (52 - self.man_bits))
+        };
+        f64::from_bits((((e_top + 1023) as u64) << 52) | man)
     }
 
-    /// Smallest positive normal value, 2^(1 - bias).
+    /// Smallest positive normal value, 2^(1 - bias) (bit-assembled, no
+    /// `powi`).
+    #[inline]
     pub fn min_normal(self) -> f64 {
-        (2.0f64).powi(1 - self.bias())
+        pow2(1 - self.bias())
     }
 
-    /// Smallest positive subnormal value, 2^(1 - bias - man_bits).
+    /// Smallest positive subnormal value, 2^(1 - bias - man_bits)
+    /// (bit-assembled, no `powi`).
+    #[inline]
     pub fn min_subnormal(self) -> f64 {
-        (2.0f64).powi(1 - self.bias() - self.man_bits as i32)
+        pow2(1 - self.bias() - self.man_bits as i32)
     }
 
     /// Encoding of the canonical quiet NaN.
@@ -232,8 +252,21 @@ impl FloatSpec {
     }
 
     /// Round an f64 to the nearest representable value of this format.
+    #[inline]
     pub fn quantize(self, x: f64) -> f64 {
         self.decode(self.encode(x))
+    }
+
+    /// Quantize a slice in place — the batched form the blocked GEMM paths
+    /// use. One `self` copy is resolved before the loop, so per-`FloatSpec`
+    /// constants (bias, shifts, subnormal floor) are hoisted by inlining
+    /// instead of being re-derived per element; element-wise results are
+    /// identical to [`FloatSpec::quantize`] by construction.
+    #[inline]
+    pub fn quantize_slice(self, xs: &mut [f64]) {
+        for x in xs.iter_mut() {
+            *x = self.decode(self.encode(*x));
+        }
     }
 }
 
@@ -361,6 +394,55 @@ mod tests {
             }
             let back = s.encode(v);
             assert_eq!(s.decode(back), v, "enc {enc:#x}");
+        }
+    }
+
+    #[test]
+    fn bit_assembled_constants_match_powi_formulas() {
+        // The pow2 bit assembly must reproduce the old powi-based math
+        // exactly for every spec (these are load-bearing constants: the
+        // encode subnormal-flush and saturation branches read them).
+        for s in [FloatSpec::BF16, FloatSpec::F16, FloatSpec::E4M3, FloatSpec::E5M2] {
+            let bias = s.bias();
+            let want_max = if s.has_inf {
+                (2.0 - (2.0f64).powi(-(s.man_bits as i32))) * (2.0f64).powi(bias)
+            } else {
+                let e_max = ((1 << s.exp_bits) - 1) - bias;
+                (2.0 - (2.0f64).powi(-(s.man_bits as i32 - 1))) * (2.0f64).powi(e_max)
+            };
+            assert_eq!(s.max_finite(), want_max, "max_finite {s:?}");
+            assert_eq!(s.min_normal(), (2.0f64).powi(1 - bias), "min_normal {s:?}");
+            assert_eq!(
+                s.min_subnormal(),
+                (2.0f64).powi(1 - bias - s.man_bits as i32),
+                "min_subnormal {s:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantize_slice_matches_scalar_quantize() {
+        let mut state = 0xD1CEu64;
+        for s in [FloatSpec::BF16, FloatSpec::F16, FloatSpec::E4M3, FloatSpec::E5M2] {
+            let mut xs: Vec<f64> = (0..512)
+                .map(|i| {
+                    state = state
+                        .wrapping_mul(6364136223846793005)
+                        .wrapping_add(1442695040888963407);
+                    let u = (state >> 11) as f64 / (1u64 << 53) as f64;
+                    // Mix normal-range, subnormal-range and huge values.
+                    match i % 3 {
+                        0 => (u - 0.5) * 8.0,
+                        1 => (u - 0.5) * s.min_normal(),
+                        _ => (u - 0.5) * 1e40,
+                    }
+                })
+                .collect();
+            let want: Vec<f64> = xs.iter().map(|&x| s.quantize(x)).collect();
+            s.quantize_slice(&mut xs);
+            for (got, want) in xs.iter().zip(&want) {
+                assert_eq!(got.to_bits(), want.to_bits(), "{s:?}");
+            }
         }
     }
 

@@ -1,0 +1,296 @@
+//! Register-blocked MR×NR microkernels for the packed GEMM engine.
+//!
+//! A microkernel owns an MR×NR tile of C: the accumulators live in local
+//! variables (registers, for the monomorphized sizes) for the whole
+//! K-block, so C memory is touched exactly twice per (tile, K-block)
+//! instead of twice per K step. The operands arrive *packed*
+//! ([`crate::gemm::pack`]): per K step the kernel reads MR contiguous A
+//! values and NR contiguous B values and performs MR·NR independent
+//! multiply-accumulates.
+//!
+//! **Why this is schedule-preserving.** Every accumulator belongs to a
+//! distinct output element, and for each element the kernel performs
+//! exactly the reference schedule — one `round(mul)`+`round(add)`
+//! (sequential) or one fused `mul_add` (FMA) per K step, K ascending.
+//! The only axis being vectorized is *across independent output
+//! elements*, which is the one transformation that cannot reorder any
+//! element's K-chain (see `docs/ARCHITECTURE.md`). Ragged edges are
+//! handled by zero-padded packing: padded lanes accumulate into
+//! scratch accumulators that are never stored, so real elements see
+//! only real operands, in reference order.
+//!
+//! The pairwise strategy has no microkernel here: its reduction tree
+//! depends on the full K extent, so it is staged on packed B panels in
+//! [`crate::gemm::tiled`] instead.
+
+/// Arithmetic surface the packed engine needs from an element type.
+///
+/// Implemented for `f32` and `f64`. Each method is a single IEEE-754
+/// operation (one rounding), so a generic kernel built from them executes
+/// the exact reference rounding schedule for either type.
+pub trait Element: Copy + Default + PartialEq + Send + Sync + std::fmt::Debug + 'static {
+    /// IEEE multiply (one rounding).
+    fn mul(self, rhs: Self) -> Self;
+    /// IEEE add (one rounding).
+    fn add(self, rhs: Self) -> Self;
+    /// Fused multiply-add `self * b + c` (one rounding).
+    fn madd(self, b: Self, c: Self) -> Self;
+}
+
+impl Element for f32 {
+    #[inline(always)]
+    fn mul(self, rhs: Self) -> Self {
+        self * rhs
+    }
+    #[inline(always)]
+    fn add(self, rhs: Self) -> Self {
+        self + rhs
+    }
+    #[inline(always)]
+    fn madd(self, b: Self, c: Self) -> Self {
+        self.mul_add(b, c)
+    }
+}
+
+impl Element for f64 {
+    #[inline(always)]
+    fn mul(self, rhs: Self) -> Self {
+        self * rhs
+    }
+    #[inline(always)]
+    fn add(self, rhs: Self) -> Self {
+        self + rhs
+    }
+    #[inline(always)]
+    fn madd(self, b: Self, c: Self) -> Self {
+        self.mul_add(b, c)
+    }
+}
+
+/// Upper bound on `mr`/`nr` (the dynamic-fallback kernel keeps its
+/// accumulator tile on the stack: `MAX_MICRO² · 8 B = 8 KiB` for f64).
+pub const MAX_MICRO: usize = 32;
+
+/// One MR×NR micro-tile update: `C[0..h, 0..w] (+)= Apanel · Bpanel` over
+/// `kb` K steps, accumulators held in registers.
+///
+/// * `apanel` — packed A micro-panel, `kb × MR`, K-major (`kk*MR + r`).
+/// * `bpanel` — packed B micro-panel, `kb × NR`, K-major (`kk*NR + c`).
+/// * `c` — the C tile's top-left element; row stride `ldc`.
+/// * `h`, `w` — live tile extent (`h ≤ MR`, `w ≤ NR`); padded lanes
+///   accumulate into scratch and are not stored.
+/// * `fma` — `true` runs the FMA schedule (`madd`), `false` the
+///   sequential schedule (`mul` then `add`).
+///
+/// Dispatches to a monomorphized kernel for the supported (mr, nr)
+/// sizes and to a dynamic-size fallback otherwise (bitwise-identical,
+/// just slower).
+#[inline]
+pub fn run_micro<T: Element>(
+    fma: bool,
+    apanel: &[T],
+    bpanel: &[T],
+    kb: usize,
+    c: &mut [T],
+    ldc: usize,
+    h: usize,
+    w: usize,
+    mr: usize,
+    nr: usize,
+) {
+    match (fma, mr, nr) {
+        (false, 2, 4) => ukr::<T, 2, 4, false>(apanel, bpanel, kb, c, ldc, h, w),
+        (false, 2, 8) => ukr::<T, 2, 8, false>(apanel, bpanel, kb, c, ldc, h, w),
+        (false, 4, 4) => ukr::<T, 4, 4, false>(apanel, bpanel, kb, c, ldc, h, w),
+        (false, 4, 8) => ukr::<T, 4, 8, false>(apanel, bpanel, kb, c, ldc, h, w),
+        (false, 4, 16) => ukr::<T, 4, 16, false>(apanel, bpanel, kb, c, ldc, h, w),
+        (false, 8, 4) => ukr::<T, 8, 4, false>(apanel, bpanel, kb, c, ldc, h, w),
+        (false, 8, 8) => ukr::<T, 8, 8, false>(apanel, bpanel, kb, c, ldc, h, w),
+        (false, 8, 16) => ukr::<T, 8, 16, false>(apanel, bpanel, kb, c, ldc, h, w),
+        (false, 16, 4) => ukr::<T, 16, 4, false>(apanel, bpanel, kb, c, ldc, h, w),
+        (true, 2, 4) => ukr::<T, 2, 4, true>(apanel, bpanel, kb, c, ldc, h, w),
+        (true, 2, 8) => ukr::<T, 2, 8, true>(apanel, bpanel, kb, c, ldc, h, w),
+        (true, 4, 4) => ukr::<T, 4, 4, true>(apanel, bpanel, kb, c, ldc, h, w),
+        (true, 4, 8) => ukr::<T, 4, 8, true>(apanel, bpanel, kb, c, ldc, h, w),
+        (true, 4, 16) => ukr::<T, 4, 16, true>(apanel, bpanel, kb, c, ldc, h, w),
+        (true, 8, 4) => ukr::<T, 8, 4, true>(apanel, bpanel, kb, c, ldc, h, w),
+        (true, 8, 8) => ukr::<T, 8, 8, true>(apanel, bpanel, kb, c, ldc, h, w),
+        (true, 8, 16) => ukr::<T, 8, 16, true>(apanel, bpanel, kb, c, ldc, h, w),
+        (true, 16, 4) => ukr::<T, 16, 4, true>(apanel, bpanel, kb, c, ldc, h, w),
+        _ => ukr_dyn(fma, apanel, bpanel, kb, c, ldc, h, w, mr, nr),
+    }
+}
+
+/// The monomorphized microkernel: MR, NR and the schedule are const, so
+/// the accumulator tile is a fixed-size array the optimizer keeps in
+/// vector registers, with the NR loop vectorized across output columns.
+fn ukr<T: Element, const MR: usize, const NR: usize, const FMA: bool>(
+    apanel: &[T],
+    bpanel: &[T],
+    kb: usize,
+    c: &mut [T],
+    ldc: usize,
+    h: usize,
+    w: usize,
+) {
+    debug_assert!(apanel.len() >= kb * MR && bpanel.len() >= kb * NR);
+    debug_assert!(h <= MR && w <= NR && h >= 1);
+    let mut acc = [[T::default(); NR]; MR];
+    for (r, arow) in acc.iter_mut().enumerate().take(h) {
+        for (cc, av) in arow.iter_mut().enumerate().take(w) {
+            *av = c[r * ldc + cc];
+        }
+    }
+    for kk in 0..kb {
+        let av = &apanel[kk * MR..kk * MR + MR];
+        let bv = &bpanel[kk * NR..kk * NR + NR];
+        for (r, arow) in acc.iter_mut().enumerate() {
+            let ar = av[r];
+            if FMA {
+                for (cc, a) in arow.iter_mut().enumerate() {
+                    *a = ar.madd(bv[cc], *a);
+                }
+            } else {
+                for (cc, a) in arow.iter_mut().enumerate() {
+                    *a = a.add(ar.mul(bv[cc]));
+                }
+            }
+        }
+    }
+    for (r, arow) in acc.iter().enumerate().take(h) {
+        for (cc, av) in arow.iter().enumerate().take(w) {
+            c[r * ldc + cc] = *av;
+        }
+    }
+}
+
+/// Dynamic-size fallback for (mr, nr) pairs without a monomorphized
+/// kernel. Same algorithm and therefore bitwise-identical results; the
+/// accumulator tile lives on the stack but indices are runtime values,
+/// so it will not be held in registers. Used only for exotic `--mr/--nr`
+/// experiments.
+#[allow(clippy::too_many_arguments)]
+fn ukr_dyn<T: Element>(
+    fma: bool,
+    apanel: &[T],
+    bpanel: &[T],
+    kb: usize,
+    c: &mut [T],
+    ldc: usize,
+    h: usize,
+    w: usize,
+    mr: usize,
+    nr: usize,
+) {
+    debug_assert!(mr <= MAX_MICRO && nr <= MAX_MICRO);
+    debug_assert!(apanel.len() >= kb * mr && bpanel.len() >= kb * nr);
+    debug_assert!(h <= mr && w <= nr);
+    let mut acc = [T::default(); MAX_MICRO * MAX_MICRO];
+    for r in 0..h {
+        for cc in 0..w {
+            acc[r * nr + cc] = c[r * ldc + cc];
+        }
+    }
+    for kk in 0..kb {
+        let av = &apanel[kk * mr..kk * mr + mr];
+        let bv = &bpanel[kk * nr..kk * nr + nr];
+        for (r, &ar) in av.iter().enumerate() {
+            let arow = &mut acc[r * nr..r * nr + nr];
+            if fma {
+                for (a, &bb) in arow.iter_mut().zip(bv) {
+                    *a = ar.madd(bb, *a);
+                }
+            } else {
+                for (a, &bb) in arow.iter_mut().zip(bv) {
+                    *a = a.add(ar.mul(bb));
+                }
+            }
+        }
+    }
+    for r in 0..h {
+        for cc in 0..w {
+            c[r * ldc + cc] = acc[r * nr + cc];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference: the naive sequential/FMA schedule on unpacked operands.
+    fn reference(fma: bool, a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for kk in 0..k {
+                    let p = a[i * k + kk];
+                    let q = b[kk * n + j];
+                    if fma {
+                        acc = p.mul_add(q, acc);
+                    } else {
+                        acc += p * q;
+                    }
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn pack_for_tile(a: &[f64], b: &[f64], m: usize, k: usize, n: usize, mr: usize, nr: usize) -> (Vec<f64>, Vec<f64>) {
+        // Single micro-panel each, zero-padded to (mr, nr).
+        let mut ap = vec![0.0; k * mr];
+        for r in 0..m {
+            for kk in 0..k {
+                ap[kk * mr + r] = a[r * k + kk];
+            }
+        }
+        let mut bp = vec![0.0; k * nr];
+        for kk in 0..k {
+            for cc in 0..n {
+                bp[kk * nr + cc] = b[kk * n + cc];
+            }
+        }
+        (ap, bp)
+    }
+
+    #[test]
+    fn micro_tile_matches_reference_all_sizes() {
+        // One zero-padded tile per (mr, nr), monomorphized and dynamic.
+        let (m, k, n) = (5, 23, 7);
+        let a: Vec<f64> = (0..m * k).map(|i| ((i * 37 + 11) % 97) as f64 * 0.0625 - 2.0).collect();
+        let b: Vec<f64> = (0..k * n).map(|i| ((i * 53 + 29) % 89) as f64 * 0.03125 - 1.0).collect();
+        for (mr, nr) in [(8usize, 8usize), (8, 16), (16, 4), (5, 7), (3, 9)] {
+            if mr < m || nr < n {
+                continue;
+            }
+            let (ap, bp) = pack_for_tile(&a, &b, m, k, n, mr, nr);
+            for fma in [false, true] {
+                let want = reference(fma, &a, &b, m, k, n);
+                let mut c = vec![0.0; m * n];
+                run_micro(fma, &ap, &bp, k, &mut c, n, m, n, mr, nr);
+                assert_eq!(c, want, "mr={mr} nr={nr} fma={fma}");
+            }
+        }
+    }
+
+    #[test]
+    fn accumulates_over_split_k() {
+        // Running the kernel over two K-blocks with C carried in memory
+        // must equal one full-K run (the carried accumulator round-trips
+        // through memory exactly).
+        let (m, k, n) = (4, 31, 4);
+        let a: Vec<f64> = (0..m * k).map(|i| (i as f64).sin()).collect();
+        let b: Vec<f64> = (0..k * n).map(|i| (i as f64).cos()).collect();
+        let (mr, nr) = (4, 4);
+        let (ap, bp) = pack_for_tile(&a, &b, m, k, n, mr, nr);
+        let want = reference(false, &a, &b, m, k, n);
+        let mut c = vec![0.0; m * n];
+        let split = 17;
+        run_micro(false, &ap[..split * mr], &bp[..split * nr], split, &mut c, n, m, n, mr, nr);
+        run_micro(false, &ap[split * mr..], &bp[split * nr..], k - split, &mut c, n, m, n, mr, nr);
+        assert_eq!(c, want);
+    }
+}

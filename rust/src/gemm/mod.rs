@@ -18,25 +18,31 @@
 //! fused-kernel* verification (on the FP32 accumulator, §3.6) — the 1000×
 //! detection-granularity result.
 //!
-//! ## Execution: the tiled parallel engine
+//! ## Execution: the packed, register-blocked parallel engine
 //!
 //! Engine execution is delegated to [`tiled`]: an (MC, KC, NC)
-//! cache-blocked, [`std::thread::scope`]-parallel engine configured by
-//! [`ParallelismConfig`] (`GemmEngine::with_parallelism`). Its contract is
-//! **schedule preservation**: results are bitwise-identical to the naive
-//! reference kernels in [`kernels`] for every strategy, tile shape and
-//! thread count, because parallelism and blocking are applied only across
-//! output rows/columns — never across K inside one element's reduction
-//! chain. The rounding-schedule table above (and every calibrated e_max)
+//! cache-blocked, [`std::thread::scope`]-parallel engine whose inner
+//! loops run on *packed* operand panels ([`pack`]) through MR×NR
+//! register-blocked microkernels ([`micro`]), configured by
+//! [`ParallelismConfig`] (`GemmEngine::with_parallelism`). Its contract
+//! is **schedule preservation**: results are bitwise-identical to the
+//! naive reference kernels in [`kernels`] for every strategy, tile
+//! shape, microkernel shape and thread count, because parallelism,
+//! blocking and register tiling are applied only across output
+//! rows/columns — never across K inside one element's reduction chain.
+//! The rounding-schedule table above (and every calibrated e_max)
 //! therefore holds unchanged on the parallel engine; "make it faster"
-//! means tuning [`TileConfig`] and thread counts, not re-deriving
-//! thresholds. The invariant is locked in by `tests/tiled_equivalence.rs`.
+//! means tuning [`TileConfig`]/[`MicroConfig`] and thread counts, not
+//! re-deriving thresholds. The invariant is locked in by
+//! `tests/tiled_equivalence.rs` and the CI microkernel smoke bench.
 
 pub mod exact;
 pub mod kernels;
+pub mod micro;
+pub mod pack;
 pub mod tiled;
 
-pub use tiled::{ParallelismConfig, TileConfig};
+pub use tiled::{MicroConfig, ParallelismConfig, TileConfig};
 
 use crate::fp::Precision;
 use crate::matrix::Matrix;
@@ -250,6 +256,36 @@ impl GemmEngine {
         GemmOutput { c, acc }
     }
 
+    /// Raw work-precision GEMM on the packed parallel engine: multiply
+    /// `a` (m×k) by `b` (k×n) in the engine's work precision and
+    /// reduction strategy **without quantizing the operands to the input
+    /// grid first**.
+    ///
+    /// This is the batched form of [`GemmEngine::reduce`] /
+    /// [`GemmEngine::dot`]: column j of the result is the engine-schedule
+    /// dot product of each row of `a` with column j of `b` (for the F32
+    /// work precision the operands are first rounded to f32, exactly as
+    /// `dot_in` does). The ABFT checksum encodings ride this path so
+    /// verification arithmetic runs on the same optimized engine as the
+    /// GEMM it protects.
+    pub fn matmul_work(&self, a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+        assert_eq!(a.len(), m * k, "matmul_work: A shape mismatch");
+        assert_eq!(b.len(), k * n, "matmul_work: B shape mismatch");
+        let model = self.model;
+        match model.work {
+            Precision::F64 => tiled::gemm_f64(a, b, m, k, n, model.strategy, &self.par),
+            Precision::F32 => {
+                let a32 = kernels::to_f32_vec(a);
+                let b32 = kernels::to_f32_vec(b);
+                tiled::gemm_f32(&a32, &b32, m, k, n, model.strategy, &self.par)
+                    .into_iter()
+                    .map(|x| x as f64)
+                    .collect()
+            }
+            other => tiled::gemm_generic(a, b, m, k, n, other, model.strategy, &self.par),
+        }
+    }
+
     /// fl-sum of a slice under the engine's work precision and strategy —
     /// the primitive both ABFT verification paths are built from, so that
     /// the checksum arithmetic matches the hardware being modelled.
@@ -314,11 +350,9 @@ pub fn dot_in(a: &[f64], b: &[f64], p: Precision, strategy: ReduceStrategy) -> f
 }
 
 fn quantize_data(xs: &[f64], p: Precision) -> Vec<f64> {
-    if p == Precision::F64 {
-        xs.to_vec()
-    } else {
-        xs.iter().map(|&x| p.quantize(x)).collect()
-    }
+    let mut v = xs.to_vec();
+    p.quantize_slice(&mut v);
+    v
 }
 
 /// Slow generic reference path: every multiply and add individually

@@ -1,0 +1,148 @@
+//! Operand packing for the register-blocked GEMM engine.
+//!
+//! The microkernels in [`crate::gemm::micro`] consume *packed panels*:
+//! contiguous buffers laid out so that each K step reads MR consecutive A
+//! values and NR consecutive B values. Packing happens once per
+//! (K-block, row-panel) for A and once per (K-block, N-block) for B, and
+//! is amortized over the whole M loop / N loop respectively — an O(K·N)
+//! copy against O(M·K·N) multiply-accumulates.
+//!
+//! Packing is a pure data *relayout*: values are copied bit-for-bit (no
+//! arithmetic), and ragged edges are padded with zeros that only ever
+//! reach scratch accumulator lanes (see `micro.rs`). It therefore cannot
+//! affect the rounding schedule.
+
+/// Pack a worker's A rows for one K-block into MR-tall micro-panels.
+///
+/// Source: rows `i0 .. i0 + rows` of row-major `a` (row stride `k`),
+/// columns `k0 .. k0 + kb`. Destination layout: `ceil(rows/mr)` panels,
+/// each `kb × mr`, K-major — element `(panel p, step kk, lane r)` at
+/// `p·kb·mr + kk·mr + r` holding `A[i0 + p·mr + r][k0 + kk]`, zero for
+/// lanes past the last row.
+pub fn pack_a<T: Copy + Default>(
+    a: &[T],
+    k: usize,
+    i0: usize,
+    rows: usize,
+    k0: usize,
+    kb: usize,
+    mr: usize,
+    out: &mut Vec<T>,
+) {
+    let panels = (rows + mr - 1) / mr;
+    out.clear();
+    out.resize(panels * kb * mr, T::default());
+    for p in 0..panels {
+        let ip = p * mr;
+        let h = mr.min(rows - ip);
+        let base = p * kb * mr;
+        for r in 0..h {
+            let row0 = (i0 + ip + r) * k + k0;
+            let arow = &a[row0..row0 + kb];
+            for (kk, &v) in arow.iter().enumerate() {
+                out[base + kk * mr + r] = v;
+            }
+        }
+    }
+}
+
+/// Pack one (K-block, N-block) of B into NR-wide micro-panels.
+///
+/// Source: rows `k0 .. k0 + kb` of row-major `b` (row stride `n`),
+/// columns `j0 .. j0 + jw`. Destination layout: `ceil(jw/nr)` panels,
+/// each `kb × nr`, K-major — element `(panel q, step kk, lane c)` at
+/// `q·kb·nr + kk·nr + c` holding `B[k0 + kk][j0 + q·nr + c]`, zero for
+/// lanes past the last column.
+pub fn pack_b<T: Copy + Default>(
+    b: &[T],
+    n: usize,
+    k0: usize,
+    kb: usize,
+    j0: usize,
+    jw: usize,
+    nr: usize,
+    out: &mut Vec<T>,
+) {
+    let panels = (jw + nr - 1) / nr;
+    out.clear();
+    out.resize(panels * kb * nr, T::default());
+    for q in 0..panels {
+        let jp = j0 + q * nr;
+        let w = nr.min(j0 + jw - jp);
+        let base = q * kb * nr;
+        for kk in 0..kb {
+            let row0 = (k0 + kk) * n + jp;
+            out[base + kk * nr..base + kk * nr + w].copy_from_slice(&b[row0..row0 + w]);
+        }
+    }
+}
+
+/// Pack a full-K column strip of B contiguously: `out[kk·jw + c] =
+/// B[kk][j0 + c]`. Used by the pairwise strategy, whose reduction tree
+/// spans the whole K extent — the product buffer is then filled from
+/// contiguous memory instead of striding by `n` every K step.
+pub fn pack_b_cols<T: Copy>(b: &[T], n: usize, k: usize, j0: usize, jw: usize, out: &mut Vec<T>) {
+    out.clear();
+    out.reserve(k * jw);
+    for kk in 0..k {
+        out.extend_from_slice(&b[kk * n + j0..kk * n + j0 + jw]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_a_layout_and_padding() {
+        // 3 rows of a 5×4 A, K-block [1, 4), mr = 2 → 2 panels of 3×2.
+        let k = 4;
+        let a: Vec<f64> = (0..20).map(|x| x as f64).collect();
+        let mut out = Vec::new();
+        pack_a(&a, k, 1, 3, 1, 3, 2, &mut out);
+        assert_eq!(out.len(), 2 * 3 * 2);
+        // Panel 0, kk = 0 holds A[1][1], A[2][1] = 5, 9.
+        assert_eq!(&out[0..2], &[5.0, 9.0]);
+        // Panel 0, kk = 2 holds A[1][3], A[2][3] = 7, 11.
+        assert_eq!(&out[4..6], &[7.0, 11.0]);
+        // Panel 1 holds A[3][1..4] in lane 0 and zero padding in lane 1.
+        assert_eq!(&out[6..12], &[13.0, 0.0, 14.0, 0.0, 15.0, 0.0]);
+    }
+
+    #[test]
+    fn pack_b_layout_and_padding() {
+        // B 3×5, K-block [1, 3), columns [1, 4), nr = 2 → 2 panels of 2×2.
+        let n = 5;
+        let b: Vec<f64> = (0..15).map(|x| x as f64).collect();
+        let mut out = Vec::new();
+        pack_b(&b, n, 1, 2, 1, 3, 2, &mut out);
+        assert_eq!(out.len(), 2 * 2 * 2);
+        // Panel 0: kk=0 → B[1][1..3] = 6,7; kk=1 → B[2][1..3] = 11,12.
+        assert_eq!(&out[0..4], &[6.0, 7.0, 11.0, 12.0]);
+        // Panel 1: column 3 with zero padding.
+        assert_eq!(&out[4..8], &[8.0, 0.0, 13.0, 0.0]);
+    }
+
+    #[test]
+    fn pack_b_cols_is_contiguous_strip() {
+        let n = 4;
+        let b: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let mut out = Vec::new();
+        pack_b_cols(&b, n, 3, 1, 2, &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 5.0, 6.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn buffers_are_reusable_across_blocks() {
+        // clear + resize must fully re-fill (stale data from a previous,
+        // larger block must not leak into padding).
+        let a: Vec<f64> = (0..16).map(|x| 1.0 + x as f64).collect();
+        let mut out = Vec::new();
+        pack_a(&a, 4, 0, 4, 0, 4, 4, &mut out); // full 4×4, no padding
+        pack_a(&a, 4, 0, 3, 0, 2, 2, &mut out); // smaller block with padding
+        assert_eq!(out.len(), 2 * 2 * 2);
+        // Panel 1 lane 1 (row 3 of 3) must be zero padding, not stale data.
+        assert_eq!(out[4 + 1], 0.0);
+        assert_eq!(out[4 + 3], 0.0);
+    }
+}

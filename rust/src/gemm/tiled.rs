@@ -1,5 +1,5 @@
-//! Tiled, multi-threaded GEMM execution with a **schedule-preservation
-//! guarantee**.
+//! Tiled, packed, multi-threaded GEMM execution with a **schedule-
+//! preservation guarantee**.
 //!
 //! The naive kernels in [`crate::gemm::kernels`] define, per output
 //! element, a *rounding schedule*: the exact order in which the K products
@@ -8,7 +8,7 @@
 //! schedule — so a faster engine is only admissible if it provably does
 //! not change it.
 //!
-//! This engine gets its speed from the two transformations that are
+//! This engine gets its speed from the three transformations that are
 //! schedule-neutral, and only those:
 //!
 //! * **Parallelism across output rows.** Each worker owns a disjoint
@@ -26,11 +26,26 @@
 //!   extent (per column block) and the tree is identical to
 //!   [`crate::gemm::kernels`]'s — column-block width only changes which
 //!   *elements* share a buffer, not any element's tree.
+//! * **Packing + register blocking across independent output elements.**
+//!   Operands are repacked ([`crate::gemm::pack`]) into contiguous
+//!   micro-panels — a bit-for-bit relayout, no arithmetic — and an MR×NR
+//!   microkernel ([`crate::gemm::micro`]) keeps a tile of C accumulators
+//!   in registers for a whole K-block. The kernel vectorizes **across
+//!   output columns/rows only**: each element still receives exactly one
+//!   reference-order operation per K step on its own accumulator, which
+//!   is the single legal vectorization axis (vectorizing *along* K would
+//!   re-associate the reduction and move roundings).
 //!
-//! The resulting invariant — tiled/parallel output bitwise-equal to the
-//! naive reference for every strategy, tile shape and thread count — is
-//! enforced by `tests/tiled_equivalence.rs` and by unit tests below.
+//! The resulting invariant — packed/tiled/parallel output bitwise-equal
+//! to the naive reference for every strategy, element type, tile shape,
+//! microkernel shape and thread count — is enforced by
+//! `tests/tiled_equivalence.rs` and by unit tests below. The pre-packing
+//! engine from PR 1 is retained as [`gemm_unpacked_f32`] /
+//! [`gemm_unpacked_f64`], both as the middle rung of the bench trajectory
+//! (naive → unpacked → packed) and as an independent cross-check.
 
+use super::micro::{self, Element};
+use super::pack;
 use super::ReduceStrategy;
 use crate::fp::Precision;
 
@@ -68,7 +83,47 @@ impl Default for TileConfig {
     }
 }
 
-/// Execution configuration of the tiled engine: worker count + tiles.
+/// Microkernel (register-blocking) shape: the MR×NR tile of C
+/// accumulators held in registers by the packed engine.
+///
+/// Results are bitwise-identical for every shape (register blocking only
+/// groups *independent* output elements); the shape trades register
+/// pressure against operand reuse. Shapes with a monomorphized kernel
+/// (see [`crate::gemm::micro::run_micro`]) are fastest; anything else
+/// falls back to a dynamic-size kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MicroConfig {
+    /// Micro-tile height (rows of C per register block).
+    pub mr: usize,
+    /// Micro-tile width (columns of C per register block).
+    pub nr: usize,
+}
+
+impl MicroConfig {
+    /// Default 8×8 tile: 8 vector accumulators for AVX2-class f32, still
+    /// reasonable for f64 (see `docs/PERFORMANCE.md` for the MR/NR
+    /// tuning recipe).
+    pub const DEFAULT: MicroConfig = MicroConfig { mr: 8, nr: 8 };
+
+    /// Construct from explicit sizes (each in `1 ..= MAX_MICRO`).
+    pub fn new(mr: usize, nr: usize) -> MicroConfig {
+        assert!(
+            (1..=micro::MAX_MICRO).contains(&mr) && (1..=micro::MAX_MICRO).contains(&nr),
+            "micro-tile sizes must be in 1..={}",
+            micro::MAX_MICRO
+        );
+        MicroConfig { mr, nr }
+    }
+}
+
+impl Default for MicroConfig {
+    fn default() -> Self {
+        MicroConfig::DEFAULT
+    }
+}
+
+/// Execution configuration of the tiled engine: worker count + tiles +
+/// microkernel shape.
 ///
 /// Results are **bitwise identical for every value of this struct** (the
 /// schedule-preservation invariant); it only trades wall-clock time.
@@ -78,24 +133,30 @@ pub struct ParallelismConfig {
     pub threads: usize,
     /// Cache-blocking tile sizes.
     pub tiles: TileConfig,
+    /// Register-blocking (microkernel) shape for the packed engine.
+    pub micro: MicroConfig,
 }
 
 impl ParallelismConfig {
     /// Single-threaded, default tiles — the library default, so plain
     /// `GemmEngine::new` behaves like a deterministic serial engine.
     pub fn serial() -> ParallelismConfig {
-        ParallelismConfig { threads: 1, tiles: TileConfig::DEFAULT }
+        ParallelismConfig {
+            threads: 1,
+            tiles: TileConfig::DEFAULT,
+            micro: MicroConfig::DEFAULT,
+        }
     }
 
     /// `threads` workers, default tiles.
     pub fn with_threads(threads: usize) -> ParallelismConfig {
-        ParallelismConfig { threads: threads.max(1), tiles: TileConfig::DEFAULT }
+        ParallelismConfig { threads: threads.max(1), ..Self::serial() }
     }
 
     /// One worker per available hardware thread.
     pub fn auto() -> ParallelismConfig {
         let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        ParallelismConfig { threads, tiles: TileConfig::DEFAULT }
+        Self::with_threads(threads)
     }
 
     /// Replace the tile configuration.
@@ -104,9 +165,15 @@ impl ParallelismConfig {
         self
     }
 
-    /// Parse from CLI flags: `--threads N --mc M --kc K --nc N`
-    /// (`--threads 0` means auto). Shared by the `vabft` binary and the
-    /// bench harness mains.
+    /// Replace the microkernel shape.
+    pub fn micro(mut self, micro: MicroConfig) -> ParallelismConfig {
+        self.micro = micro;
+        self
+    }
+
+    /// Parse from CLI flags: `--threads N --mc M --kc K --nc N --mr R
+    /// --nr C` (`--threads 0` means auto). Shared by the `vabft` binary
+    /// and the bench harness mains.
     pub fn from_args(args: &crate::cli::Args) -> ParallelismConfig {
         let mut par = match args.opt_or("threads", 1usize) {
             0 => ParallelismConfig::auto(),
@@ -118,6 +185,8 @@ impl ParallelismConfig {
             args.opt_or("kc", d.kc),
             args.opt_or("nc", d.nc),
         );
+        let dm = MicroConfig::DEFAULT;
+        par.micro = MicroConfig::new(args.opt_or("mr", dm.mr), args.opt_or("nr", dm.nr));
         par
     }
 }
@@ -128,10 +197,229 @@ impl Default for ParallelismConfig {
     }
 }
 
-macro_rules! tiled_kernels {
+/// Split C into disjoint per-worker row panels and run `panel_fn` on each
+/// (on the caller's thread when `threads == 1`). The only form of
+/// parallelism in this module: workers never share an accumulator.
+fn parallel_over_rows<T, F>(c: &mut [T], m: usize, n: usize, threads: usize, panel_fn: F)
+where
+    T: Send,
+    F: Fn(&mut [T], usize, usize) + Sync,
+{
+    let threads = threads.max(1).min(m);
+    if threads == 1 {
+        panel_fn(c, 0, m);
+        return;
+    }
+    let rows_per = (m + threads - 1) / threads;
+    std::thread::scope(|s| {
+        for (ci, chunk) in c.chunks_mut(rows_per * n).enumerate() {
+            let i0 = ci * rows_per;
+            let f = &panel_fn;
+            s.spawn(move || {
+                let rows = chunk.len() / n;
+                f(chunk, i0, rows);
+            });
+        }
+    });
+}
+
+/// Packed, register-blocked, multi-threaded f32 GEMM — bitwise-equal to
+/// the naive kernel of the same strategy in [`crate::gemm::kernels`].
+pub fn gemm_f32(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    strategy: ReduceStrategy,
+    par: &ParallelismConfig,
+) -> Vec<f32> {
+    gemm_packed(a, b, m, k, n, strategy, par)
+}
+
+/// Packed, register-blocked, multi-threaded f64 GEMM — bitwise-equal to
+/// the naive kernel of the same strategy in [`crate::gemm::kernels`].
+pub fn gemm_f64(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    strategy: ReduceStrategy,
+    par: &ParallelismConfig,
+) -> Vec<f64> {
+    gemm_packed(a, b, m, k, n, strategy, par)
+}
+
+/// The shared packed implementation behind [`gemm_f32`] / [`gemm_f64`].
+fn gemm_packed<T: Element>(
+    a: &[T],
+    b: &[T],
+    m: usize,
+    k: usize,
+    n: usize,
+    strategy: ReduceStrategy,
+    par: &ParallelismConfig,
+) -> Vec<T> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut c = vec![T::default(); m * n];
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let (tiles, u) = (par.tiles, par.micro);
+    parallel_over_rows(&mut c, m, n, par.threads, |chunk, i0, rows| match strategy {
+        ReduceStrategy::Sequential => {
+            packed_seq_fma(a, b, chunk, i0, rows, k, n, false, tiles, u)
+        }
+        ReduceStrategy::Fma => packed_seq_fma(a, b, chunk, i0, rows, k, n, true, tiles, u),
+        ReduceStrategy::Pairwise => packed_pairwise(a, b, chunk, i0, rows, k, n, tiles),
+    });
+    c
+}
+
+/// One worker's packed sequential/FMA row panel.
+///
+/// Loop nest (outer → inner): K-blocks ascending (accumulator carried in
+/// C, so each element's K-chain stays in reference order) → pack A
+/// micro-panels once per K-block, amortized over the N loop → N-blocks,
+/// packing B once per (K, N)-block, amortized over the M loop → MC row
+/// groups → MR×NR microkernel tiles.
+#[allow(clippy::too_many_arguments)]
+fn packed_seq_fma<T: Element>(
+    a: &[T],
+    b: &[T],
+    c: &mut [T],
+    i0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    fma: bool,
+    t: TileConfig,
+    u: MicroConfig,
+) {
+    debug_assert_eq!(c.len(), rows * n);
+    let (mr, nr) = (u.mr, u.nr);
+    // Round the row step up to whole micro-panels so a panel never spans
+    // an mc boundary (each element is visited exactly once per K-block).
+    let mc = ((t.mc + mr - 1) / mr) * mr;
+    let mut apack: Vec<T> = Vec::new();
+    let mut bpack: Vec<T> = Vec::new();
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + t.kc).min(k);
+        let kb = k1 - k0;
+        pack::pack_a(a, k, i0, rows, k0, kb, mr, &mut apack);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + t.nc).min(n);
+            let jw = j1 - j0;
+            pack::pack_b(b, n, k0, kb, j0, jw, nr, &mut bpack);
+            let mut r0 = 0;
+            while r0 < rows {
+                let r1 = (r0 + mc).min(rows);
+                let mut ip = r0;
+                while ip < r1 {
+                    let h = mr.min(rows - ip);
+                    let apanel = &apack[(ip / mr) * kb * mr..][..kb * mr];
+                    let mut jp = 0;
+                    while jp < jw {
+                        let w = nr.min(jw - jp);
+                        let bpanel = &bpack[(jp / nr) * kb * nr..][..kb * nr];
+                        micro::run_micro(
+                            fma,
+                            apanel,
+                            bpanel,
+                            kb,
+                            &mut c[ip * n + j0 + jp..],
+                            n,
+                            h,
+                            w,
+                            mr,
+                            nr,
+                        );
+                        jp += nr;
+                    }
+                    ip += mr;
+                }
+                r0 = r1;
+            }
+            j0 = j1;
+        }
+        k0 = k1;
+    }
+}
+
+/// One worker's packed pairwise row panel: the tree shape depends on the
+/// full K, so products of one (row, column-block) are staged for the
+/// whole K extent — from a B strip packed contiguously once per
+/// (column-block, worker) — and reduced by the exact adjacent-pair /
+/// odd-carry tree of the reference kernel.
+fn packed_pairwise<T: Element>(
+    a: &[T],
+    b: &[T],
+    c: &mut [T],
+    i0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    t: TileConfig,
+) {
+    debug_assert_eq!(c.len(), rows * n);
+    let bw = t.nc.min(n).max(1);
+    let mut bpack: Vec<T> = Vec::new();
+    let mut buf = vec![T::default(); k.max(1) * bw];
+    let mut j0 = 0;
+    while j0 < n {
+        let jw = bw.min(n - j0);
+        pack::pack_b_cols(b, n, k, j0, jw, &mut bpack);
+        for r in 0..rows {
+            let arow = &a[(i0 + r) * k..(i0 + r + 1) * k];
+            // products (one rounding each), from contiguous packed B
+            for kk in 0..k {
+                let av = arow[kk];
+                let src = &bpack[kk * jw..kk * jw + jw];
+                let dst = &mut buf[kk * jw..kk * jw + jw];
+                for (d, &bv) in dst.iter_mut().zip(src) {
+                    *d = av.mul(bv);
+                }
+            }
+            // adjacent-pair tree along k, odd element carried
+            let mut len = k;
+            while len > 1 {
+                let half = len / 2;
+                for p in 0..half {
+                    let (lo, hi) = buf.split_at_mut((2 * p + 1) * jw);
+                    let dst = &mut lo[2 * p * jw..2 * p * jw + jw];
+                    let src = &hi[..jw];
+                    for (d, &s) in dst.iter_mut().zip(src) {
+                        *d = d.add(s);
+                    }
+                }
+                for p in 1..half {
+                    buf.copy_within(2 * p * jw..2 * p * jw + jw, p * jw);
+                }
+                if len % 2 == 1 {
+                    buf.copy_within((len - 1) * jw..(len - 1) * jw + jw, half * jw);
+                    len = half + 1;
+                } else {
+                    len = half;
+                }
+            }
+            c[r * n + j0..r * n + j0 + jw].copy_from_slice(&buf[..jw]);
+        }
+        j0 += jw;
+    }
+}
+
+macro_rules! unpacked_kernels {
     ($gemm:ident, $panel:ident, $ty:ty) => {
-        /// Tiled multi-threaded GEMM, bitwise-equal to the naive kernel of
-        /// the same strategy in [`crate::gemm::kernels`].
+        /// The PR-1 tiled engine: cache-blocked and multi-threaded but
+        /// streaming *unpacked* row-major operands with the accumulator
+        /// in C memory. Bitwise-equal to the naive kernel of the same
+        /// strategy (and to the packed engine) — kept as the middle rung
+        /// of the bench trajectory and as an independent cross-check of
+        /// the packed path.
         pub fn $gemm(
             a: &[$ty],
             b: &[$ty],
@@ -147,30 +435,16 @@ macro_rules! tiled_kernels {
             if m == 0 || n == 0 {
                 return c;
             }
-            let threads = par.threads.max(1).min(m);
-            if threads == 1 {
-                $panel(a, b, &mut c, 0, m, k, n, strategy, par.tiles);
-                return c;
-            }
-            // Disjoint contiguous row panels per worker; no worker ever
-            // touches another's accumulators, so the per-element schedule
-            // is untouched by construction.
-            let rows_per = (m + threads - 1) / threads;
             let tiles = par.tiles;
-            std::thread::scope(|s| {
-                for (ci, chunk) in c.chunks_mut(rows_per * n).enumerate() {
-                    let i0 = ci * rows_per;
-                    s.spawn(move || {
-                        let rows = chunk.len() / n;
-                        $panel(a, b, chunk, i0, rows, k, n, strategy, tiles);
-                    });
-                }
+            parallel_over_rows(&mut c, m, n, par.threads, |chunk, i0, rows| {
+                $panel(a, b, chunk, i0, rows, k, n, strategy, tiles);
             });
             c
         }
 
         /// One worker's row panel: rows `i0 .. i0 + rows` of C, written to
         /// `c` (a `rows × n` slice).
+        #[allow(clippy::too_many_arguments)]
         fn $panel(
             a: &[$ty],
             b: &[$ty],
@@ -245,11 +519,8 @@ macro_rules! tiled_kernels {
                         k0 = k1;
                     }
                 }
-                // Pairwise: the tree shape depends on the full K, so the
-                // products of one (row, column-block) are staged for the
-                // whole K extent and reduced by the exact adjacent-pair /
-                // odd-carry tree of the reference kernel. The column-block
-                // width (nc) decides buffer residency only.
+                // Pairwise: staged for the whole K extent per column
+                // block, identical tree to kernels.rs.
                 ReduceStrategy::Pairwise => {
                     let bw = t.nc.min(n).max(1);
                     let mut buf = vec![0 as $ty; k.max(1) * bw];
@@ -299,12 +570,16 @@ macro_rules! tiled_kernels {
     };
 }
 
-tiled_kernels!(gemm_f32, panel_f32, f32);
-tiled_kernels!(gemm_f64, panel_f64, f64);
+unpacked_kernels!(gemm_unpacked_f32, unpacked_panel_f32, f32);
+unpacked_kernels!(gemm_unpacked_f64, unpacked_panel_f64, f64);
 
 /// Tiled multi-threaded GEMM in an arbitrary (software-rounded) work
-/// precision — the generic ablation path, parallelized over rows. Every
-/// element is computed exactly as in [`crate::gemm::generic_gemm`].
+/// precision — the generic ablation path, parallelized over rows and
+/// blocked by [`TileConfig`] (K-blocks for the carried sequential/FMA
+/// accumulator, column blocks with packed B strips for both schedules).
+/// Every element is computed exactly as in [`crate::gemm::generic_gemm`]:
+/// one work-precision rounding per product and one per reduction step,
+/// in the reference order.
 pub fn gemm_generic(
     a: &[f64],
     b: &[f64],
@@ -321,35 +596,121 @@ pub fn gemm_generic(
     if m == 0 || n == 0 {
         return c;
     }
-    let threads = par.threads.max(1).min(m);
-    let panel = |a: &[f64], b: &[f64], c: &mut [f64], i0: usize, rows: usize| {
-        let mut prods = vec![0.0f64; k];
-        for r in 0..rows {
-            let arow = &a[(i0 + r) * k..(i0 + r + 1) * k];
-            for j in 0..n {
-                for (kk, pr) in prods.iter_mut().enumerate() {
-                    *pr = p.quantize(arow[kk] * b[kk * n + j]);
-                }
-                c[r * n + j] = super::generic_reduce(&prods, p, strategy);
-            }
-        }
-    };
-    if threads == 1 {
-        panel(a, b, &mut c, 0, m);
-        return c;
-    }
-    let rows_per = (m + threads - 1) / threads;
-    std::thread::scope(|s| {
-        for (ci, chunk) in c.chunks_mut(rows_per * n).enumerate() {
-            let i0 = ci * rows_per;
-            let panel = &panel;
-            s.spawn(move || {
-                let rows = chunk.len() / n;
-                panel(a, b, chunk, i0, rows);
-            });
-        }
+    let tiles = par.tiles;
+    parallel_over_rows(&mut c, m, n, par.threads, |chunk, i0, rows| {
+        generic_panel(a, b, chunk, i0, rows, k, n, p, strategy, tiles);
     });
     c
+}
+
+/// One worker's generic-precision row panel (see [`gemm_generic`]).
+#[allow(clippy::too_many_arguments)]
+fn generic_panel(
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    i0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    p: Precision,
+    strategy: ReduceStrategy,
+    t: TileConfig,
+) {
+    debug_assert_eq!(c.len(), rows * n);
+    let bw = t.nc.min(n).max(1);
+    match strategy {
+        // generic_reduce treats Sequential and Fma identically (products
+        // quantized separately, one quantized add per step), so one
+        // blocked path serves both — mirroring crate::gemm::generic_gemm.
+        // K-blocks ascend with the accumulator carried in C; each step is
+        // c = q(c + q(a·b)), batched across the column block with
+        // quantize_slice (bitwise-equal to per-element quantize).
+        ReduceStrategy::Sequential | ReduceStrategy::Fma => {
+            let mut prods = vec![0.0f64; bw];
+            let mut k0 = 0;
+            while k0 < k {
+                let k1 = (k0 + t.kc).min(k);
+                let mut j0 = 0;
+                while j0 < n {
+                    let j1 = (j0 + t.nc).min(n);
+                    let jw = j1 - j0;
+                    let mut r0 = 0;
+                    while r0 < rows {
+                        let r1 = (r0 + t.mc).min(rows);
+                        for r in r0..r1 {
+                            let arow = &a[(i0 + r) * k..(i0 + r + 1) * k];
+                            for kk in k0..k1 {
+                                let av = arow[kk];
+                                let brow = &b[kk * n + j0..kk * n + j1];
+                                let pr = &mut prods[..jw];
+                                for (d, &bv) in pr.iter_mut().zip(brow) {
+                                    *d = av * bv;
+                                }
+                                p.quantize_slice(pr);
+                                let crow = &mut c[r * n + j0..r * n + j1];
+                                for (cv, &d) in crow.iter_mut().zip(pr.iter()) {
+                                    *cv += d;
+                                }
+                                p.quantize_slice(crow);
+                            }
+                        }
+                        r0 = r1;
+                    }
+                    j0 = j1;
+                }
+                k0 = k1;
+            }
+        }
+        // Pairwise: full-K staging per (row, column-block) on a packed B
+        // strip, then the reference adjacent-pair tree with one
+        // work-precision rounding per node (batched across the block).
+        ReduceStrategy::Pairwise => {
+            let mut bpack: Vec<f64> = Vec::new();
+            let mut buf = vec![0.0f64; k.max(1) * bw];
+            let mut j0 = 0;
+            while j0 < n {
+                let jw = bw.min(n - j0);
+                pack::pack_b_cols(b, n, k, j0, jw, &mut bpack);
+                for r in 0..rows {
+                    let arow = &a[(i0 + r) * k..(i0 + r + 1) * k];
+                    for kk in 0..k {
+                        let av = arow[kk];
+                        let src = &bpack[kk * jw..kk * jw + jw];
+                        let dst = &mut buf[kk * jw..kk * jw + jw];
+                        for (d, &bv) in dst.iter_mut().zip(src) {
+                            *d = av * bv;
+                        }
+                        p.quantize_slice(dst);
+                    }
+                    let mut len = k;
+                    while len > 1 {
+                        let half = len / 2;
+                        for pp in 0..half {
+                            let (lo, hi) = buf.split_at_mut((2 * pp + 1) * jw);
+                            let dst = &mut lo[2 * pp * jw..2 * pp * jw + jw];
+                            let src = &hi[..jw];
+                            for (d, &s) in dst.iter_mut().zip(src) {
+                                *d += s;
+                            }
+                            p.quantize_slice(dst);
+                        }
+                        for pp in 1..half {
+                            buf.copy_within(2 * pp * jw..2 * pp * jw + jw, pp * jw);
+                        }
+                        if len % 2 == 1 {
+                            buf.copy_within((len - 1) * jw..(len - 1) * jw + jw, half * jw);
+                            len = half + 1;
+                        } else {
+                            len = half;
+                        }
+                    }
+                    c[r * n + j0..r * n + j0 + jw].copy_from_slice(&buf[..jw]);
+                }
+                j0 += jw;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -373,7 +734,14 @@ mod tests {
                 TileConfig::new(2, 7, 64),  // odd K blocks
                 TileConfig::new(8, 512, 16),
             ] {
-                out.push(ParallelismConfig { threads, tiles });
+                for micro in [
+                    MicroConfig::DEFAULT,
+                    MicroConfig::new(4, 8),
+                    MicroConfig::new(1, 4),
+                    MicroConfig::new(3, 5), // dynamic-fallback kernel
+                ] {
+                    out.push(ParallelismConfig { threads, tiles, micro });
+                }
             }
         }
         out
@@ -394,7 +762,9 @@ mod tests {
         for par in configs() {
             for (strategy, want) in &refs {
                 let got = gemm_f64(&a, &b, m, k, n, *strategy, &par);
-                assert_eq!(&got, want, "{strategy:?} diverged under {par:?}");
+                assert_eq!(&got, want, "packed {strategy:?} diverged under {par:?}");
+                let got_unpacked = gemm_unpacked_f64(&a, &b, m, k, n, *strategy, &par);
+                assert_eq!(&got_unpacked, want, "unpacked {strategy:?} diverged under {par:?}");
             }
         }
     }
@@ -412,7 +782,9 @@ mod tests {
         for par in configs() {
             for (strategy, want) in &refs {
                 let got = gemm_f32(&a, &b, m, k, n, *strategy, &par);
-                assert_eq!(&got, want, "{strategy:?} diverged under {par:?}");
+                assert_eq!(&got, want, "packed {strategy:?} diverged under {par:?}");
+                let got_unpacked = gemm_unpacked_f32(&a, &b, m, k, n, *strategy, &par);
+                assert_eq!(&got_unpacked, want, "unpacked {strategy:?} diverged under {par:?}");
             }
         }
     }
@@ -435,11 +807,76 @@ mod tests {
     }
 
     #[test]
+    fn generic_blocked_is_bitwise_stable_across_tile_configs() {
+        // The satellite contract for the once tile-blind generic path:
+        // every TileConfig must produce output bitwise-equal to
+        // crate::gemm::generic_gemm.
+        let (m, k, n) = (6, 40, 23);
+        let p = Precision::F16;
+        let a: Vec<f64> = rand_vec(m * k, 7).iter().map(|&x| p.quantize(x)).collect();
+        let b: Vec<f64> = rand_vec(k * n, 8).iter().map(|&x| p.quantize(x)).collect();
+        for strategy in
+            [ReduceStrategy::Sequential, ReduceStrategy::Fma, ReduceStrategy::Pairwise]
+        {
+            let want = crate::gemm::generic_gemm(&a, &b, m, k, n, p, strategy);
+            for kc in [1usize, 3, 7, 40, 256] {
+                for nc in [1usize, 5, 23, 128] {
+                    let par = ParallelismConfig::serial().tiles(TileConfig::new(4, kc, nc));
+                    let got = gemm_generic(&a, &b, m, k, n, p, strategy, &par);
+                    assert_eq!(got, want, "{strategy:?} kc={kc} nc={nc}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generic_wall_time_responds_to_kc() {
+        // gemm_generic used to ignore TileConfig entirely; now kc decides
+        // the K-block structure. With nc = 1 the per-(block, row) sweep
+        // setup costs about as much as a single K step, so kc = 1 (one K
+        // step per sweep — 8·1024·32 sweeps) must be measurably slower
+        // than kc = K (256 sweeps): the contrast is structural, not a few
+        // percent. Timing is min-of-5 to de-noise.
+        let (m, k, n) = (8, 1024, 32);
+        let p = Precision::Bf16;
+        let a: Vec<f64> = rand_vec(m * k, 9).iter().map(|&x| p.quantize(x)).collect();
+        let b: Vec<f64> = rand_vec(k * n, 10).iter().map(|&x| p.quantize(x)).collect();
+        let time = |kc: usize| {
+            let par = ParallelismConfig::serial().tiles(TileConfig::new(64, kc, 1));
+            (0..5)
+                .map(|_| {
+                    let t0 = std::time::Instant::now();
+                    std::hint::black_box(gemm_generic(
+                        &a,
+                        &b,
+                        m,
+                        k,
+                        n,
+                        p,
+                        ReduceStrategy::Sequential,
+                        &par,
+                    ));
+                    t0.elapsed()
+                })
+                .min()
+                .unwrap()
+        };
+        let coarse = time(k);
+        let fine = time(1);
+        assert!(
+            fine > coarse,
+            "generic path ignores kc: kc=1 took {fine:?}, kc={k} took {coarse:?}"
+        );
+    }
+
+    #[test]
     fn degenerate_shapes() {
         let par = ParallelismConfig::with_threads(4);
         assert!(gemm_f64(&[], &[], 0, 0, 0, ReduceStrategy::Sequential, &par).is_empty());
         // k = 0: all zeros, any shape
         let c = gemm_f64(&[], &[], 3, 0, 2, ReduceStrategy::Pairwise, &par);
+        assert_eq!(c, vec![0.0; 6]);
+        let c = gemm_f64(&[], &[], 3, 0, 2, ReduceStrategy::Sequential, &par);
         assert_eq!(c, vec![0.0; 6]);
         // single row, more threads than rows
         let c1 = gemm_f64(&[2.0, 3.0], &[10.0, 100.0], 1, 2, 1, ReduceStrategy::Sequential, &par);
@@ -449,14 +886,19 @@ mod tests {
     #[test]
     fn from_args_parses_flags() {
         let args = crate::cli::Args::parse_from(
-            "x --threads 4 --mc 32 --kc 128 --nc 64".split_whitespace().map(String::from),
+            "x --threads 4 --mc 32 --kc 128 --nc 64 --mr 4 --nr 16"
+                .split_whitespace()
+                .map(String::from),
         );
         let par = ParallelismConfig::from_args(&args);
         assert_eq!(par.threads, 4);
         assert_eq!(par.tiles, TileConfig::new(32, 128, 64));
+        assert_eq!(par.micro, MicroConfig::new(4, 16));
         let auto = crate::cli::Args::parse_from(
             "x --threads 0".split_whitespace().map(String::from),
         );
-        assert!(ParallelismConfig::from_args(&auto).threads >= 1);
+        let par = ParallelismConfig::from_args(&auto);
+        assert!(par.threads >= 1);
+        assert_eq!(par.micro, MicroConfig::DEFAULT);
     }
 }

@@ -16,19 +16,21 @@
 //!   calibration protocol, and the PJRT runtime that executes the AOT
 //!   artifacts. Python is never on the request path.
 //!
-//! ## The execution layer: tiled, parallel, schedule-preserving
+//! ## The execution layer: packed, register-blocked, schedule-preserving
 //!
-//! All GEMMs run on the cache-blocked, multi-threaded engine in
-//! [`gemm::tiled`] (configured by [`gemm::ParallelismConfig`]). Its load-
-//! bearing invariant: **every output element's K-reduction order is
+//! All GEMMs run on the packed, cache-blocked, multi-threaded engine in
+//! [`gemm::tiled`] (configured by [`gemm::ParallelismConfig`]): operands
+//! are repacked into contiguous micro-panels ([`gemm::pack`]) and driven
+//! through MR×NR register-blocked microkernels ([`gemm::micro`]). The
+//! load-bearing invariant: **every output element's K-reduction order is
 //! bitwise-identical to the naive reference kernels** in
 //! [`gemm::kernels`], for all three [`gemm::ReduceStrategy`] variants.
 //! V-ABFT's variance model characterizes *where rounding happens* along
-//! each element's accumulation chain, so the engine parallelizes and
-//! tiles only across output rows and columns — never across K within one
-//! element — and e_max calibrated on the naive kernels remains valid at
-//! any thread count or tile shape (locked in by
-//! `tests/tiled_equivalence.rs`).
+//! each element's accumulation chain, so the engine parallelizes, tiles
+//! and vectorizes only across output rows and columns — never across K
+//! within one element — and e_max calibrated on the naive kernels remains
+//! valid at any thread count, tile shape or microkernel shape (locked in
+//! by `tests/tiled_equivalence.rs` and the CI microkernel smoke bench).
 //!
 //! ## Quick start
 //!
@@ -112,7 +114,7 @@ pub mod prelude {
     };
     pub use crate::calibrate::{CalibrationProtocol, EmaxModel, EmaxTable, Platform};
     pub use crate::fp::{dd::Dd, Precision};
-    pub use crate::gemm::{AccumModel, GemmEngine, ParallelismConfig, TileConfig};
+    pub use crate::gemm::{AccumModel, GemmEngine, MicroConfig, ParallelismConfig, TileConfig};
     pub use crate::inject::{BitFlip, Campaign, CampaignConfig, FlipDirection, InjectionSite};
     pub use crate::matrix::{Matrix, RowStats};
     pub use crate::rng::{Distribution, Rng, SplitMix64, Xoshiro256pp};

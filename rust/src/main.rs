@@ -6,8 +6,8 @@
 //! vabft campaign   [--precision bf16] [--dist n11|nz|u|u01|trunc] [--trials N] [--online]
 //! vabft tightness  [--precision fp32] [--sizes 128,256,512] [--trials N]
 //! vabft gemm       [--m 512 --k 512 --n 512] [--strategy seq|fma|pairwise]
-//!                  [--threads T] [--mc M --kc K --nc N] [--reps R]
-//!                  # tiled parallel engine vs naive kernel (bitwise-checked)
+//!                  [--threads T] [--mc M --kc K --nc N] [--mr R --nr C] [--reps R]
+//!                  # packed/unpacked engines vs naive kernel (bitwise-checked)
 //! vabft gemm --prepared
 //!                  [--m 8 --k 512 --n 512] [--precision bf16] [--reps R]
 //!                  [--block-k B] [--offline] [--threads T]
@@ -257,12 +257,15 @@ fn cmd_gemm(args: &Args) {
     };
     let par = ParallelismConfig::from_args(args);
     println!(
-        "fp32 GEMM {m}x{k}x{n}, strategy {}, threads {}, tiles (mc {}, kc {}, nc {})",
+        "fp32 GEMM {m}x{k}x{n}, strategy {}, threads {}, tiles (mc {}, kc {}, nc {}), \
+         micro (mr {}, nr {})",
         strategy.name(),
         par.threads,
         par.tiles.mc,
         par.tiles.kc,
-        par.tiles.nc
+        par.tiles.nc,
+        par.micro.mr,
+        par.micro.nr
     );
 
     let mut rng = Xoshiro256pp::seed_from_u64(0xBE);
@@ -271,28 +274,42 @@ fn cmd_gemm(args: &Args) {
 
     let naive = |a: &[f32], b: &[f32]| kernels::reference_gemm_f32(a, b, m, k, n, strategy);
 
-    let mut t =
-        Table::new("Tiled parallel engine vs naive kernel", &["engine", "best", "speedup"]);
+    let mut t = Table::new(
+        "Packed / unpacked engines vs naive kernel",
+        &["engine", "best", "speedup"],
+    );
     let mut t_naive = std::time::Duration::MAX;
-    let mut t_tiled = std::time::Duration::MAX;
+    let mut t_unpacked = std::time::Duration::MAX;
+    let mut t_packed = std::time::Duration::MAX;
     let mut c_naive = Vec::new();
-    let mut c_tiled = Vec::new();
+    let mut c_unpacked = Vec::new();
+    let mut c_packed = Vec::new();
     for _ in 0..reps.max(1) {
         let mut out = Vec::new();
         let d = time_once(|| out = naive(&a, &b));
         t_naive = t_naive.min(d);
         c_naive = out;
         let mut out2 = Vec::new();
-        let d2 = time_once(|| out2 = tiled::gemm_f32(&a, &b, m, k, n, strategy, &par));
-        t_tiled = t_tiled.min(d2);
-        c_tiled = out2;
+        let d2 = time_once(|| out2 = tiled::gemm_unpacked_f32(&a, &b, m, k, n, strategy, &par));
+        t_unpacked = t_unpacked.min(d2);
+        c_unpacked = out2;
+        let mut out3 = Vec::new();
+        let d3 = time_once(|| out3 = tiled::gemm_f32(&a, &b, m, k, n, strategy, &par));
+        t_packed = t_packed.min(d3);
+        c_packed = out3;
     }
-    assert_eq!(c_naive, c_tiled, "schedule invariant violated: outputs differ");
+    assert_eq!(c_naive, c_unpacked, "schedule invariant violated: unpacked differs");
+    assert_eq!(c_naive, c_packed, "schedule invariant violated: packed differs");
     t.row(vec!["naive ikj".into(), format!("{t_naive:?}"), "1.00x".into()]);
     t.row(vec![
-        format!("tiled x{}", par.threads),
-        format!("{t_tiled:?}"),
-        format!("{:.2}x", t_naive.as_secs_f64() / t_tiled.as_secs_f64()),
+        format!("unpacked x{}", par.threads),
+        format!("{t_unpacked:?}"),
+        format!("{:.2}x", t_naive.as_secs_f64() / t_unpacked.as_secs_f64()),
+    ]);
+    t.row(vec![
+        format!("packed x{}", par.threads),
+        format!("{t_packed:?}"),
+        format!("{:.2}x", t_naive.as_secs_f64() / t_packed.as_secs_f64()),
     ]);
     t.print();
     println!("bitwise equality: OK ({} elements)", c_naive.len());

@@ -1,17 +1,21 @@
-//! Schedule-preservation property tests for the tiled parallel engine
-//! (hand-rolled generators — the proptest crate is not in the offline
-//! registry; failing cases print their full configuration).
+//! Schedule-preservation property tests for the tiled/packed parallel
+//! engine (hand-rolled generators — the proptest crate is not in the
+//! offline registry; failing cases print their full configuration).
 //!
 //! The invariant V-ABFT depends on: for randomized (m, k, n, seed,
-//! AccumModel, tile sizes, thread counts 1/2/4), the tiled engine's output
-//! **and** pre-quantization accumulator are *bitwise equal* to the naive
-//! reference kernels, for all three `ReduceStrategy` variants. The
-//! reference is computed here from `gemm::kernels` / `gemm::generic_gemm`
-//! directly — independently of the engine's dispatch code — so a
-//! regression in either layer trips the test.
+//! AccumModel, tile sizes, microkernel shapes, thread counts 1/2/4), the
+//! engine's output **and** pre-quantization accumulator are *bitwise
+//! equal* to the naive reference kernels, for all three `ReduceStrategy`
+//! variants. The reference is computed here from `gemm::kernels` /
+//! `gemm::generic_gemm` directly — independently of the engine's dispatch
+//! code — so a regression in either layer trips the test. The retained
+//! PR-1 unpacked engine is cross-checked against the same reference,
+//! giving two independent implementations that must agree with the
+//! packed path everywhere.
 
 use vabft::gemm::{
-    generic_gemm, kernels, AccumModel, GemmEngine, ParallelismConfig, ReduceStrategy, TileConfig,
+    generic_gemm, kernels, tiled, AccumModel, GemmEngine, MicroConfig, ParallelismConfig,
+    ReduceStrategy, TileConfig,
 };
 use vabft::prelude::*;
 
@@ -77,6 +81,16 @@ fn tile_grid() -> Vec<TileConfig> {
     ]
 }
 
+fn micro_grid() -> Vec<MicroConfig> {
+    vec![
+        MicroConfig::DEFAULT,       // monomorphized 8x8
+        MicroConfig::new(4, 8),     // monomorphized, asymmetric
+        MicroConfig::new(1, 4),     // single-row panels
+        MicroConfig::new(3, 5),     // dynamic-fallback kernel, coprime
+        MicroConfig::new(16, 4),    // tall panels
+    ]
+}
+
 #[test]
 fn prop_tiled_engine_bitwise_equals_naive_reference() {
     let mut cases = Cases::new(0x711ED);
@@ -93,7 +107,8 @@ fn prop_tiled_engine_bitwise_equals_naive_reference() {
             let (want_c, want_acc) = reference(model, &a, &b);
             for threads in [1usize, 2, 4] {
                 for tiles in tile_grid() {
-                    let par = ParallelismConfig { threads, tiles };
+                    let micro = micro_grid()[case % micro_grid().len()];
+                    let par = ParallelismConfig { threads, tiles, micro };
                     let got = GemmEngine::with_parallelism(model, par).matmul(&a, &b);
                     assert_eq!(
                         got.acc.data(),
@@ -105,6 +120,90 @@ fn prop_tiled_engine_bitwise_equals_naive_reference() {
                         want_c.as_slice(),
                         "case {case}: c diverged ({m}x{k}x{n}, {model:?}, {par:?})"
                     );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_packed_path_ragged_shapes() {
+    // The packed-path edge-case zoo: dimensions coprime with every
+    // default block size (MR/NR/mc/kc/nc), k = 0, n smaller than NR,
+    // single row, single column, more threads than rows. Packed AND
+    // unpacked engines vs the reference kernels, bitwise, f32 + f64.
+    let shapes: &[(usize, usize, usize)] = &[
+        (7, 61, 93),   // coprime with 8/8/64/256/128
+        (13, 257, 31), // k just past default kc, n < default nc
+        (1, 97, 257),  // single row, n crosses nc
+        (9, 0, 5),     // k = 0
+        (3, 31, 3),    // n < NR
+        (2, 16, 1),    // single column
+        (5, 129, 17),  // threads (up to 8) > m
+    ];
+    let mut cases = Cases::new(0x4A66ED);
+    let d = Distribution::uniform_pm1();
+    for &(m, k, n) in shapes {
+        let a = Matrix::sample(m, k, &d, &mut cases.rng);
+        let b = Matrix::sample(k, n, &d, &mut cases.rng);
+        let a32: Vec<f32> = a.data().iter().map(|&x| x as f32).collect();
+        let b32: Vec<f32> = b.data().iter().map(|&x| x as f32).collect();
+        for strategy in
+            [ReduceStrategy::Sequential, ReduceStrategy::Fma, ReduceStrategy::Pairwise]
+        {
+            let want64 = kernels::reference_gemm_f64(a.data(), b.data(), m, k, n, strategy);
+            let want32 = kernels::reference_gemm_f32(&a32, &b32, m, k, n, strategy);
+            for threads in [1usize, 2, 8] {
+                for tiles in tile_grid() {
+                    for micro in micro_grid() {
+                        let par = ParallelismConfig { threads, tiles, micro };
+                        let got64 = tiled::gemm_f64(a.data(), b.data(), m, k, n, strategy, &par);
+                        assert_eq!(
+                            got64, want64,
+                            "packed f64 {m}x{k}x{n} {strategy:?} {par:?}"
+                        );
+                        let got32 = tiled::gemm_f32(&a32, &b32, m, k, n, strategy, &par);
+                        assert_eq!(
+                            got32, want32,
+                            "packed f32 {m}x{k}x{n} {strategy:?} {par:?}"
+                        );
+                    }
+                    let par = ParallelismConfig { threads, tiles, micro: MicroConfig::DEFAULT };
+                    let unp64 =
+                        tiled::gemm_unpacked_f64(a.data(), b.data(), m, k, n, strategy, &par);
+                    assert_eq!(unp64, want64, "unpacked f64 {m}x{k}x{n} {strategy:?}");
+                    let unp32 = tiled::gemm_unpacked_f32(&a32, &b32, m, k, n, strategy, &par);
+                    assert_eq!(unp32, want32, "unpacked f32 {m}x{k}x{n} {strategy:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_generic_path_ragged_shapes() {
+    // Same edge-case zoo for the blocked generic (software-precision)
+    // path, against crate::gemm::generic_gemm.
+    let shapes: &[(usize, usize, usize)] =
+        &[(7, 61, 29), (1, 97, 33), (9, 0, 5), (3, 31, 3), (5, 129, 17)];
+    let mut cases = Cases::new(0x6E171C);
+    let d = Distribution::normal_1_1();
+    for &(m, k, n) in shapes {
+        for p in [Precision::Bf16, Precision::F16] {
+            let a: Vec<f64> =
+                Matrix::sample(m, k, &d, &mut cases.rng).data().iter().map(|&x| p.quantize(x)).collect();
+            let b: Vec<f64> =
+                Matrix::sample(k, n, &d, &mut cases.rng).data().iter().map(|&x| p.quantize(x)).collect();
+            for strategy in
+                [ReduceStrategy::Sequential, ReduceStrategy::Fma, ReduceStrategy::Pairwise]
+            {
+                let want = generic_gemm(&a, &b, m, k, n, p, strategy);
+                for threads in [1usize, 2, 8] {
+                    for tiles in tile_grid() {
+                        let par = ParallelismConfig::with_threads(threads).tiles(tiles);
+                        let got = tiled::gemm_generic(&a, &b, m, k, n, p, strategy, &par);
+                        assert_eq!(got, want, "generic {m}x{k}x{n} {p:?} {strategy:?} {par:?}");
+                    }
                 }
             }
         }
@@ -128,7 +227,8 @@ fn larger_shapes_cross_tile_boundaries() {
             let (want_c, want_acc) = reference(model, &a, &b);
             for threads in [1usize, 2, 4] {
                 let par = ParallelismConfig::with_threads(threads)
-                    .tiles(TileConfig::new(4, 32, 24));
+                    .tiles(TileConfig::new(4, 32, 24))
+                    .micro(MicroConfig::new(4, 8));
                 let got = GemmEngine::with_parallelism(model, par).matmul(&a, &b);
                 assert_eq!(got.acc.data(), want_acc.as_slice(), "{model:?} t={threads}");
                 assert_eq!(got.c.data(), want_c.as_slice(), "{model:?} t={threads}");
@@ -151,11 +251,13 @@ fn encoded_multiply_is_thread_invariant() {
     let base = base_engine.matmul_mixed(&a, &enc.b_encoded, enc.wide_cols());
     for threads in [2usize, 4] {
         for tiles in tile_grid() {
-            let par = ParallelismConfig { threads, tiles };
-            let engine = GemmEngine::with_parallelism(model, par);
-            let got = engine.matmul_mixed(&a, &enc.b_encoded, enc.wide_cols());
-            assert_eq!(got.acc.data(), base.acc.data(), "{par:?}");
-            assert_eq!(got.c.data(), base.c.data(), "{par:?}");
+            for micro in [MicroConfig::DEFAULT, MicroConfig::new(3, 5)] {
+                let par = ParallelismConfig { threads, tiles, micro };
+                let engine = GemmEngine::with_parallelism(model, par);
+                let got = engine.matmul_mixed(&a, &enc.b_encoded, enc.wide_cols());
+                assert_eq!(got.acc.data(), base.acc.data(), "{par:?}");
+                assert_eq!(got.c.data(), base.c.data(), "{par:?}");
+            }
         }
     }
 }
