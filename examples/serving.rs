@@ -21,7 +21,6 @@ use vabft::cli::Args;
 use vabft::coordinator::{
     Coordinator, CoordinatorConfig, GemmRequest, InjectSpec, PreparedGemmRequest,
 };
-use vabft::inject::InjectionSite;
 use vabft::prelude::*;
 
 fn main() -> vabft::error::Result<()> {
@@ -73,13 +72,11 @@ fn main() -> vabft::error::Result<()> {
             );
             let inject = if rng.next_f64() < fault_rate {
                 injected += 1;
-                Some(InjectSpec {
-                    site: InjectionSite {
-                        row: rng.uniform_u64(16) as usize,
-                        col: rng.uniform_u64(n as u64) as usize,
-                    },
-                    bit: 23 + rng.uniform_u64(6) as u32, // f32 exponent bits
-                })
+                Some(InjectSpec::output(
+                    rng.uniform_u64(16) as usize,
+                    rng.uniform_u64(n as u64) as usize,
+                    23 + rng.uniform_u64(6) as u32, // f32 exponent bits
+                ))
             } else {
                 None
             };

@@ -114,6 +114,14 @@ pub struct VerifyReport {
     pub rows_checked: usize,
     /// Rows recomputed via the escalation path.
     pub rows_recomputed: usize,
+    /// Largest |D1| seen across every checked row (∞ if any row's D1 was
+    /// non-finite). On a clean run this is the realized rounding-noise
+    /// floor — the "Actual Diff" of the paper's tightness tables.
+    pub max_abs_d1: f64,
+    /// Smallest detection threshold issued across every checked row (∞
+    /// when no rows were checked). `min_threshold / max_abs_d1` on a
+    /// clean run is the realized threshold tightness.
+    pub min_threshold: f64,
 }
 
 /// Output of [`FtGemm::multiply`].

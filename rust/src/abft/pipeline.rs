@@ -44,6 +44,10 @@ pub(crate) struct BlockVerify {
     pub part: Matrix,
     pub detections: Vec<Detection>,
     pub rows_recomputed: usize,
+    /// Largest |D1| across the block's rows (∞ on non-finite D1).
+    pub max_abs_d1: f64,
+    /// Smallest threshold issued across the block's rows.
+    pub min_threshold: f64,
 }
 
 /// The threshold context matching a policy's verification point.
@@ -83,8 +87,12 @@ pub(crate) fn verify_block(
 
     let mut detections = Vec::new();
     let mut rows_recomputed = 0usize;
+    let mut max_abs_d1 = 0.0f64;
+    let mut min_threshold = f64::INFINITY;
     for i in 0..part.rows() {
         let rc = check_row(part.row(i), cr1[i], cr2[i], thresholds[i], engine, weights);
+        max_abs_d1 = max_abs_d1.max(if rc.d1.is_finite() { rc.d1.abs() } else { f64::INFINITY });
+        min_threshold = min_threshold.min(rc.threshold);
         if !rc.flagged {
             continue;
         }
@@ -116,7 +124,7 @@ pub(crate) fn verify_block(
         }
         detections.push(det);
     }
-    BlockVerify { part, detections, rows_recomputed }
+    BlockVerify { part, detections, rows_recomputed, max_abs_d1, min_threshold }
 }
 
 /// Recompute one row of a (partial) product — a 1×bk · bk×N GEMM — the
@@ -221,6 +229,8 @@ pub(crate) fn run_prepared(
     let mut detections = Vec::new();
     let mut detection_blocks = Vec::new();
     let mut rows_recomputed = 0usize;
+    let mut max_abs_d1 = 0.0f64;
+    let mut min_threshold = f64::INFINITY;
 
     for (bi, blk) in w.blocks().iter().enumerate() {
         // Monolithic case: borrow A, no copy.
@@ -250,6 +260,8 @@ pub(crate) fn run_prepared(
         );
 
         rows_recomputed += bv.rows_recomputed;
+        max_abs_d1 = max_abs_d1.max(bv.max_abs_d1);
+        min_threshold = min_threshold.min(bv.min_threshold);
         let tagged = detection_blocks.len() + bv.detections.len();
         detection_blocks.resize(tagged, bi);
         detections.extend(bv.detections);
@@ -273,7 +285,14 @@ pub(crate) fn run_prepared(
     let c = finalize(acc, engine);
     Ok(PipelineOutput {
         c,
-        report: VerifyReport { verdict, detections, rows_checked: m * blocks, rows_recomputed },
+        report: VerifyReport {
+            verdict,
+            detections,
+            rows_checked: m * blocks,
+            rows_recomputed,
+            max_abs_d1,
+            min_threshold,
+        },
         detection_blocks,
         blocks,
     })

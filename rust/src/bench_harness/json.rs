@@ -1,18 +1,177 @@
-//! Machine-readable bench output: the `BENCH_*.json` trajectory files.
+//! Machine-readable trajectory output: the `BENCH_*.json` documents.
 //!
 //! Perf work is only credible against a recorded baseline, so the perf
 //! benches (`parallel_engine`, `microkernel`) emit their measurements as
-//! a small JSON document in addition to the human tables. The files are
-//! committed at the repository root; their git history *is* the
-//! throughput trajectory future PRs regress against.
+//! a small JSON document in addition to the human tables — and the
+//! campaign engine emits its detection-quality grid the same way
+//! (`BENCH_campaign.json`). The files are committed at the repository
+//! root; their git history *is* the trajectory future PRs regress
+//! against.
 //!
-//! No serde in the offline registry — the schema is flat enough to write
-//! by hand: a top-level object with bench metadata and an `entries`
-//! array of uniform records.
+//! All documents share one schema-versioned writer, [`JsonDoc`]: a
+//! top-level object carrying a `schema` tag, flat metadata, and a uniform
+//! `entries` array. No serde in the offline registry — the schema is flat
+//! enough to write by hand, and writing it in exactly one place is what
+//! lets [`validate_schema`] reject drift for every document at once.
+//!
+//! Determinism contract: a [`JsonDoc`] serializes byte-for-byte
+//! identically for identical content — fixed field order, fixed float
+//! formatting, no timestamps. The campaign's cross-thread-count
+//! reproducibility test relies on this.
 
 use std::path::PathBuf;
 
-/// One measurement: a row of the `entries` array.
+/// Schema tag of the perf-bench trajectory documents
+/// (`BENCH_gemm.json`, `BENCH_gemm_micro.json`).
+pub const BENCH_SCHEMA: &str = "vabft-bench/v1";
+
+/// Schema tag of the campaign detection-quality documents
+/// (`BENCH_campaign.json`).
+pub const CAMPAIGN_SCHEMA: &str = "vabft-campaign/v1";
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// One scalar value in a schema-versioned document.
+#[derive(Debug, Clone)]
+pub enum JsonValue {
+    /// String (escaped on write).
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float, fixed three decimal places (throughputs, ratios).
+    Num(f64),
+    /// Float, scientific notation with six significant decimals
+    /// (magnitudes, thresholds). Non-finite values are stringified —
+    /// JSON has no Inf/NaN literals.
+    Sci(f64),
+    /// Boolean.
+    Bool(bool),
+}
+
+impl JsonValue {
+    fn render(&self) -> String {
+        match *self {
+            JsonValue::Str(ref s) => format!("\"{}\"", esc(s)),
+            JsonValue::Int(i) => i.to_string(),
+            JsonValue::Num(x) if !x.is_finite() => format!("\"{x}\""),
+            JsonValue::Num(x) => format!("{x:.3}"),
+            JsonValue::Sci(x) if !x.is_finite() => format!("\"{x}\""),
+            JsonValue::Sci(x) => format!("{x:.6e}"),
+            JsonValue::Bool(b) => b.to_string(),
+        }
+    }
+}
+
+/// A schema-versioned JSON document: `schema` tag, flat metadata, and a
+/// uniform `entries` array. The single writer behind every committed
+/// `BENCH_*.json` file.
+#[derive(Debug, Clone)]
+pub struct JsonDoc {
+    schema: String,
+    meta: Vec<(String, JsonValue)>,
+    entries: Vec<Vec<(String, JsonValue)>>,
+}
+
+impl JsonDoc {
+    /// Empty document declaring `schema`.
+    pub fn new(schema: &str) -> JsonDoc {
+        JsonDoc { schema: schema.to_string(), meta: Vec::new(), entries: Vec::new() }
+    }
+
+    /// Append one top-level metadata field (serialized in insertion
+    /// order, before `entries`).
+    pub fn meta(&mut self, key: &str, value: JsonValue) -> &mut Self {
+        self.meta.push((key.to_string(), value));
+        self
+    }
+
+    /// Append one entry (an ordered list of `key: value` fields).
+    pub fn entry(&mut self, fields: Vec<(String, JsonValue)>) -> &mut Self {
+        self.entries.push(fields);
+        self
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no entries have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serialize deterministically (fixed order, fixed float formats).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"schema\": \"{}\",\n", esc(&self.schema)));
+        for (k, v) in &self.meta {
+            out.push_str(&format!("  \"{}\": {},\n", esc(k), v.render()));
+        }
+        out.push_str("  \"entries\": [\n");
+        for (i, fields) in self.entries.iter().enumerate() {
+            let body: Vec<String> =
+                fields.iter().map(|(k, v)| format!("\"{}\": {}", esc(k), v.render())).collect();
+            out.push_str(&format!(
+                "    {{{}}}{}\n",
+                body.join(", "),
+                if i + 1 == self.entries.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the document to `path` verbatim (an explicitly requested
+    /// destination, e.g. a CLI `--json FILE` flag — takes precedence over
+    /// any env fallback), returning the path.
+    pub fn write_to(&self, path: impl Into<PathBuf>) -> std::io::Result<PathBuf> {
+        let path = path.into();
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+
+    /// Write the document to `filename` at the repository root (or to
+    /// `$<env_override>` verbatim when that variable is set and
+    /// non-empty), returning the path.
+    pub fn write(&self, filename: &str, env_override: &str) -> std::io::Result<PathBuf> {
+        match std::env::var(env_override) {
+            Ok(p) if !p.is_empty() => self.write_to(p),
+            _ => {
+                // CARGO_MANIFEST_DIR is rust/; the trajectory lives at
+                // the workspace root next to README.md.
+                let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+                let root = manifest.parent().map(|p| p.to_path_buf()).unwrap_or(manifest);
+                self.write_to(root.join(filename))
+            }
+        }
+    }
+}
+
+/// Validate that a serialized document declares exactly `schema` and has
+/// the writer's document shape. Consumers (CI gates, trend tooling) call
+/// this before trusting a committed file; the unit tests pin it so any
+/// writer change that drifts the schema without bumping the version tag
+/// fails the build.
+pub fn validate_schema(json: &str, schema: &str) -> Result<(), String> {
+    let tag = format!("\"schema\": \"{}\"", esc(schema));
+    let first = json.lines().nth(1).unwrap_or("");
+    if first.trim().trim_end_matches(',') != tag {
+        return Err(format!(
+            "schema mismatch: expected `{tag}` as the first field, found `{}`",
+            first.trim()
+        ));
+    }
+    if !json.contains("\"entries\": [") {
+        return Err("document has no `entries` array".to_string());
+    }
+    Ok(())
+}
+
+/// One measurement: a row of a perf bench's `entries` array.
 #[derive(Debug, Clone)]
 pub struct BenchRecord {
     /// What was measured, e.g. `"1024x1024x1024"` or `"quantize 65536"`.
@@ -39,15 +198,12 @@ pub struct BenchRecord {
     pub bitwise_equal: bool,
 }
 
-/// Collects [`BenchRecord`]s for one bench binary and serializes them.
+/// Collects [`BenchRecord`]s for one bench binary and serializes them
+/// through the shared [`JsonDoc`] writer under [`BENCH_SCHEMA`].
 #[derive(Debug, Clone)]
 pub struct BenchRecords {
     bench: String,
     records: Vec<BenchRecord>,
-}
-
-fn esc(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
 impl BenchRecords {
@@ -71,51 +227,41 @@ impl BenchRecords {
         self.records.is_empty()
     }
 
+    /// Assemble the schema-versioned document.
+    pub fn to_doc(&self) -> JsonDoc {
+        let mut doc = JsonDoc::new(BENCH_SCHEMA);
+        doc.meta("bench", JsonValue::Str(self.bench.clone()));
+        doc.meta(
+            "mode",
+            JsonValue::Str(
+                if super::BenchMode::from_env().is_full() { "full" } else { "quick" }.to_string(),
+            ),
+        );
+        for r in &self.records {
+            doc.entry(vec![
+                ("case".to_string(), JsonValue::Str(r.case.clone())),
+                ("precision".to_string(), JsonValue::Str(r.precision.clone())),
+                ("strategy".to_string(), JsonValue::Str(r.strategy.clone())),
+                ("engine".to_string(), JsonValue::Str(r.engine.clone())),
+                ("threads".to_string(), JsonValue::Int(r.threads as i64)),
+                ("unit".to_string(), JsonValue::Str(r.unit.clone())),
+                ("value".to_string(), JsonValue::Num(r.value)),
+                ("speedup_vs_baseline".to_string(), JsonValue::Num(r.speedup_vs_baseline)),
+                ("bitwise_equal".to_string(), JsonValue::Bool(r.bitwise_equal)),
+            ]);
+        }
+        doc
+    }
+
     /// Serialize to the trajectory JSON document.
     pub fn to_json(&self) -> String {
-        let mut out = String::new();
-        out.push_str("{\n");
-        out.push_str(&format!("  \"bench\": \"{}\",\n", esc(&self.bench)));
-        out.push_str(&format!(
-            "  \"mode\": \"{}\",\n",
-            if super::BenchMode::from_env().is_full() { "full" } else { "quick" }
-        ));
-        out.push_str("  \"entries\": [\n");
-        for (i, r) in self.records.iter().enumerate() {
-            out.push_str(&format!(
-                "    {{\"case\": \"{}\", \"precision\": \"{}\", \"strategy\": \"{}\", \
-                 \"engine\": \"{}\", \"threads\": {}, \"unit\": \"{}\", \"value\": {:.3}, \
-                 \"speedup_vs_baseline\": {:.3}, \"bitwise_equal\": {}}}{}\n",
-                esc(&r.case),
-                esc(&r.precision),
-                esc(&r.strategy),
-                esc(&r.engine),
-                r.threads,
-                esc(&r.unit),
-                r.value,
-                r.speedup_vs_baseline,
-                r.bitwise_equal,
-                if i + 1 == self.records.len() { "" } else { "," }
-            ));
-        }
-        out.push_str("  ]\n}\n");
-        out
+        self.to_doc().to_json()
     }
 
     /// Write the document to `filename` at the repository root (or to
     /// `$VABFT_BENCH_JSON` verbatim when set), returning the path.
     pub fn write(&self, filename: &str) -> std::io::Result<PathBuf> {
-        let path = match std::env::var("VABFT_BENCH_JSON") {
-            Ok(p) if !p.is_empty() => PathBuf::from(p),
-            _ => {
-                // CARGO_MANIFEST_DIR is rust/; the trajectory lives at
-                // the workspace root next to README.md.
-                let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
-                manifest.parent().map(|p| p.to_path_buf()).unwrap_or(manifest).join(filename)
-            }
-        };
-        std::fs::write(&path, self.to_json())?;
-        Ok(path)
+        self.to_doc().write(filename, "VABFT_BENCH_JSON")
     }
 }
 
@@ -145,6 +291,7 @@ mod tests {
         rs.push(BenchRecord { engine: "naive".into(), speedup_vs_baseline: 1.0, ..record() });
         assert_eq!(rs.len(), 2);
         let j = rs.to_json();
+        assert!(j.contains("\"schema\": \"vabft-bench/v1\""));
         assert!(j.contains("\"bench\": \"unit_test\""));
         assert!(j.contains("\"value\": 12.346"));
         assert!(j.contains("\"bitwise_equal\": true"));
@@ -160,5 +307,34 @@ mod tests {
         let j = rs.to_json();
         assert!(j.contains("a\\\"b"));
         assert!(j.contains("x\\\\y"));
+    }
+
+    #[test]
+    fn schema_validation_rejects_drift() {
+        let mut rs = BenchRecords::new("drift");
+        rs.push(record());
+        let j = rs.to_json();
+        assert!(validate_schema(&j, BENCH_SCHEMA).is_ok());
+        // A different document family must not validate …
+        assert!(validate_schema(&j, CAMPAIGN_SCHEMA).is_err());
+        // … nor a bumped version …
+        assert!(validate_schema(&j, "vabft-bench/v2").is_err());
+        // … nor a schema-less or shape-less document.
+        assert!(validate_schema("{}", BENCH_SCHEMA).is_err());
+        let headless = j.replacen("\"schema\": \"vabft-bench/v1\",\n", "", 1);
+        assert!(validate_schema(&headless, BENCH_SCHEMA).is_err());
+        let mut doc = JsonDoc::new(CAMPAIGN_SCHEMA);
+        doc.meta("bench", JsonValue::Str("campaign".into()));
+        assert!(validate_schema(&doc.to_json(), CAMPAIGN_SCHEMA).is_ok());
+    }
+
+    #[test]
+    fn value_rendering_is_deterministic() {
+        assert_eq!(JsonValue::Num(12.3456).render(), "12.346");
+        assert_eq!(JsonValue::Sci(0.0012345678).render(), "1.234568e-3");
+        assert_eq!(JsonValue::Sci(f64::INFINITY).render(), "\"inf\"");
+        assert_eq!(JsonValue::Int(-3).render(), "-3");
+        assert_eq!(JsonValue::Bool(false).render(), "false");
+        assert_eq!(JsonValue::Str("a\"b".into()).render(), "\"a\\\"b\"");
     }
 }

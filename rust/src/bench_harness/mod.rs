@@ -8,7 +8,9 @@
 //! counts.
 
 pub mod json;
-pub use json::{BenchRecord, BenchRecords};
+pub use json::{
+    validate_schema, BenchRecord, BenchRecords, JsonDoc, JsonValue, BENCH_SCHEMA, CAMPAIGN_SCHEMA,
+};
 
 use std::time::{Duration, Instant};
 

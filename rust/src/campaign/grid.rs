@@ -1,0 +1,423 @@
+//! Campaign grid planning: the deterministic trial lattice.
+//!
+//! A campaign is a cross product of seven axes — storage precision ×
+//! reduction strategy × operand distribution × injection-site class ×
+//! encoding-bit class × verification point × GEMM shape — planned into
+//! [`CellSpec`]s by [`plan`]. Every random choice (operand samples, fault
+//! coordinates) derives from the campaign's single master seed through
+//! fixed [`crate::rng::Xoshiro256pp`] streams indexed by cell position,
+//! so the full grid is reproducible bit-for-bit from `(seed, config)` —
+//! at any coordinator worker count, because the engine's
+//! schedule-preservation invariant makes each trial's arithmetic
+//! thread-count-independent.
+
+use crate::fp::Precision;
+use crate::gemm::{AccumModel, ReduceStrategy};
+use crate::inject::{FaultSite, FaultSpec, SiteClass};
+use crate::rng::{Distribution, Rng, Xoshiro256pp};
+
+/// Stream tag separating fault-coordinate RNG streams from operand
+/// streams (both key off the master seed).
+const COORD_TAG: u64 = 0xC00D_1247;
+
+/// Which encoding bit a cell flips, named relative to the target
+/// precision's layout so one class means the same physical event across
+/// grids (paper Table 8's rows, collapsed to the four regimes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BitClass {
+    /// The sign bit: magnitude-preserving, error `2|v|`.
+    Sign,
+    /// Exponent MSB: the catastrophic class (overflow/underflow scale).
+    ExpMsb,
+    /// Exponent LSB: value doubles or halves.
+    ExpLsb,
+    /// Mantissa MSB: relative error up to 25%.
+    MantMsb,
+}
+
+impl BitClass {
+    /// All four classes, in campaign grid order.
+    pub const ALL: [BitClass; 4] =
+        [BitClass::Sign, BitClass::ExpMsb, BitClass::ExpLsb, BitClass::MantMsb];
+
+    /// Short lowercase name used in reports and JSON documents.
+    pub fn name(self) -> &'static str {
+        match self {
+            BitClass::Sign => "sign",
+            BitClass::ExpMsb => "exp_msb",
+            BitClass::ExpLsb => "exp_lsb",
+            BitClass::MantMsb => "mant_msb",
+        }
+    }
+
+    /// Resolve to a bit position of `p`'s encoding.
+    pub fn bit(self, p: Precision) -> u32 {
+        match self {
+            BitClass::Sign => p.sign_bit(),
+            BitClass::ExpMsb => p.sign_bit() - 1,
+            BitClass::ExpLsb => p.exponent_lsb(),
+            BitClass::MantMsb => p.exponent_lsb().saturating_sub(1),
+        }
+    }
+}
+
+/// Verification point of a cell (§3.6): fused verification reads the
+/// pre-quantization accumulator (e_max ≈ 1e-6 for FP32 datapaths),
+/// offline verification the quantized stored output (e_max ≈ 2·u_out,
+/// ≈ 1e-3 for BF16) — the ~1000× detection-granularity gap the campaign
+/// report quantifies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VerifyPoint {
+    /// Fused / online: verify the accumulator before output rounding.
+    Fused,
+    /// Offline: verify the stored (quantized) output.
+    Offline,
+}
+
+impl VerifyPoint {
+    /// Short lowercase name used in reports and JSON documents.
+    pub fn name(self) -> &'static str {
+        match self {
+            VerifyPoint::Fused => "fused",
+            VerifyPoint::Offline => "offline",
+        }
+    }
+
+    /// True for fused (pre-quantization) verification.
+    pub fn online(self) -> bool {
+        matches!(self, VerifyPoint::Fused)
+    }
+}
+
+/// Configuration of a campaign grid. Construct via [`GridConfig::quick`],
+/// [`GridConfig::full`] or [`GridConfig::smoke`] and adjust fields as
+/// needed; [`plan`] expands it into cells.
+#[derive(Debug, Clone)]
+pub struct GridConfig {
+    /// Master seed — every operand sample and fault coordinate derives
+    /// from it deterministically.
+    pub seed: u64,
+    /// Mode label recorded in the JSON document (`"quick"`, `"full"`,
+    /// `"smoke"`).
+    pub mode: String,
+    /// Storage precisions under test (each resolves to its platform
+    /// accumulation model, see [`CellSpec::model`]).
+    pub precisions: Vec<Precision>,
+    /// Reduction strategies (rounding schedules) under test.
+    pub strategies: Vec<ReduceStrategy>,
+    /// Operand distributions.
+    pub dists: Vec<Distribution>,
+    /// Injection-site classes.
+    pub sites: Vec<SiteClass>,
+    /// Encoding-bit classes.
+    pub bit_classes: Vec<BitClass>,
+    /// Site classes that additionally get offline (post-quantization)
+    /// cells; every site in `sites` always gets a fused cell.
+    pub offline_sites: Vec<SiteClass>,
+    /// GEMM shapes (M, K, N).
+    pub shapes: Vec<(usize, usize, usize)>,
+    /// Injection trials per cell (plus one clean trial per cell).
+    pub trials_per_cell: usize,
+    /// Above-threshold margin: a fault counts toward the recall gate when
+    /// its expected magnitude exceeds `margin ×` the row's threshold (or
+    /// is non-finite). With the zero-FP noise bound `noise ≤ T`, any
+    /// margin > 2 makes detection of gated faults a theorem, not a
+    /// statistic; the default of 6 additionally absorbs requantization
+    /// error on coarse output grids.
+    pub margin: f64,
+}
+
+impl GridConfig {
+    fn base(seed: u64, mode: &str) -> GridConfig {
+        GridConfig {
+            seed,
+            mode: mode.to_string(),
+            precisions: vec![Precision::Bf16, Precision::F16, Precision::F32, Precision::F64],
+            strategies: vec![
+                ReduceStrategy::Sequential,
+                ReduceStrategy::Fma,
+                ReduceStrategy::Pairwise,
+            ],
+            dists: vec![Distribution::normal_1_1(), Distribution::uniform_01()],
+            sites: SiteClass::ALL.to_vec(),
+            bit_classes: BitClass::ALL.to_vec(),
+            offline_sites: vec![SiteClass::Output],
+            shapes: vec![(8, 64, 16)],
+            trials_per_cell: 3,
+            margin: 6.0,
+        }
+    }
+
+    /// The CI-gated grid: all four storage precisions × three reduction
+    /// strategies × two distributions × four site classes × four bit
+    /// classes, fused everywhere plus offline output cells — 480 cells,
+    /// small shapes, completing well under a minute.
+    pub fn quick(seed: u64) -> GridConfig {
+        Self::base(seed, "quick")
+    }
+
+    /// The nightly grid: adds the truncated-normal distribution, offline
+    /// cells for every site class, a second paper-scale shape and more
+    /// trials per cell.
+    pub fn full(seed: u64) -> GridConfig {
+        let mut cfg = Self::base(seed, "full");
+        cfg.dists.push(Distribution::truncated_normal());
+        cfg.offline_sites = SiteClass::ALL.to_vec();
+        cfg.shapes = vec![(32, 256, 64), (128, 1024, 256)];
+        cfg.trials_per_cell = 6;
+        cfg
+    }
+
+    /// A 20-cell sub-grid for determinism tests and the push-gated CI
+    /// smoke step: BF16 + FP32, FMA only, exponent-MSB and mantissa-MSB
+    /// bits, all four site classes.
+    pub fn smoke(seed: u64) -> GridConfig {
+        let mut cfg = Self::base(seed, "smoke");
+        cfg.precisions = vec![Precision::Bf16, Precision::F32];
+        cfg.strategies = vec![ReduceStrategy::Fma];
+        cfg.dists = vec![Distribution::normal_1_1()];
+        cfg.bit_classes = vec![BitClass::ExpMsb, BitClass::MantMsb];
+        cfg.trials_per_cell = 4;
+        cfg
+    }
+}
+
+/// One planned cell: a point of the campaign lattice plus its trial
+/// budget. Cells own no results — [`crate::campaign::run`] pairs them
+/// with [`crate::campaign::CellResult`]s in planning order.
+#[derive(Debug, Clone)]
+pub struct CellSpec {
+    /// Position in planning order (also the fault-coordinate RNG stream).
+    pub index: usize,
+    /// Storage precision under test.
+    pub precision: Precision,
+    /// Reduction strategy (rounding schedule).
+    pub strategy: ReduceStrategy,
+    /// Operand distribution.
+    pub dist: Distribution,
+    /// Injection-site class.
+    pub site: SiteClass,
+    /// Encoding-bit class.
+    pub bit_class: BitClass,
+    /// Verification point.
+    pub verify: VerifyPoint,
+    /// GEMM shape (M, K, N).
+    pub shape: (usize, usize, usize),
+    /// Injection trials (one clean trial is always added).
+    pub trials: usize,
+}
+
+/// The accumulation model a campaign runs a storage precision under:
+/// wide FP32 accumulation for the sub-32-bit formats (the GPU/NPU
+/// mixed-precision model), native accumulation for FP32/FP64 — with
+/// `strategy` substituted in as the reduction schedule.
+pub fn model_for(precision: Precision, strategy: ReduceStrategy) -> AccumModel {
+    let base = match precision {
+        Precision::F32 | Precision::F64 => AccumModel::gpu_highprec(precision),
+        p => AccumModel::wide(p),
+    };
+    AccumModel { strategy, ..base }
+}
+
+impl CellSpec {
+    /// The accumulation model of this cell (see [`model_for`]).
+    pub fn model(&self) -> AccumModel {
+        model_for(self.precision, self.strategy)
+    }
+
+    /// Precision grid the cell's flips address: the verified grid (work
+    /// precision fused, output precision offline) for output and checksum
+    /// sites, the operand storage grid for operand sites.
+    pub fn flip_grid(&self) -> Precision {
+        let m = self.model();
+        match self.site {
+            SiteClass::OperandA | SiteClass::OperandB => m.input,
+            SiteClass::Output | SiteClass::Checksum => {
+                if self.verify.online() {
+                    m.work
+                } else {
+                    m.out
+                }
+            }
+        }
+    }
+
+    /// The bit position this cell flips.
+    pub fn bit(&self) -> u32 {
+        self.bit_class.bit(self.flip_grid())
+    }
+
+    /// Stream index of the cell's operand set. Cells sharing (input
+    /// precision, distribution, shape) share operands — and hence, per
+    /// coordinator, prepared weights — which is what lets the engine
+    /// amortize checksum encoding across the weight-stationary trials.
+    pub fn operand_stream(&self) -> u64 {
+        let (m, k, n) = self.shape;
+        let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a offset basis
+        let label = self.dist.label();
+        for b in self.model().input.name().bytes().chain(label.bytes()) {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h ^ ((m as u64) << 42) ^ ((k as u64) << 21) ^ n as u64
+    }
+
+    /// The cell's planned faults, deterministically derived from the
+    /// master seed: trial t's coordinates come from substream
+    /// `(seed ^ COORD_TAG, cell index)`, drawn in a fixed order.
+    pub fn faults(&self, seed: u64) -> Vec<FaultSpec> {
+        let (m, k, n) = self.shape;
+        let mut rng = Xoshiro256pp::from_stream(seed ^ COORD_TAG, self.index as u64);
+        let bit = self.bit();
+        (0..self.trials)
+            .map(|_| {
+                let row = rng.uniform_u64(m as u64) as usize;
+                let kk = rng.uniform_u64(k as u64) as usize;
+                let col = rng.uniform_u64(n as u64) as usize;
+                let site = match self.site {
+                    SiteClass::Output => FaultSite::Output { row, col },
+                    SiteClass::OperandA => FaultSite::OperandA { row, k: kk, col },
+                    SiteClass::OperandB => FaultSite::OperandB { k: kk, col },
+                    SiteClass::Checksum => FaultSite::ChecksumR1 { row },
+                };
+                FaultSpec { site, bit }
+            })
+            .collect()
+    }
+
+    /// Compact label for progress lines and failure messages.
+    pub fn label(&self) -> String {
+        let (m, k, n) = self.shape;
+        format!(
+            "{}x{}x{} {} {} {} {} {}",
+            m,
+            k,
+            n,
+            self.precision.name(),
+            self.strategy.name(),
+            self.site.name(),
+            self.bit_class.name(),
+            self.verify.name()
+        )
+    }
+}
+
+/// Expand a grid configuration into cells, in the fixed planning order
+/// (shape ⊃ precision ⊃ strategy ⊃ distribution ⊃ site ⊃ bit class ⊃
+/// verify point). The order is part of the determinism contract: cell
+/// indices seed the fault-coordinate streams.
+pub fn plan(cfg: &GridConfig) -> Vec<CellSpec> {
+    let mut cells = Vec::new();
+    for &shape in &cfg.shapes {
+        for &precision in &cfg.precisions {
+            for &strategy in &cfg.strategies {
+                for dist in &cfg.dists {
+                    for &site in &cfg.sites {
+                        for &bit_class in &cfg.bit_classes {
+                            for verify in [VerifyPoint::Fused, VerifyPoint::Offline] {
+                                if verify == VerifyPoint::Offline
+                                    && !cfg.offline_sites.contains(&site)
+                                {
+                                    continue;
+                                }
+                                cells.push(CellSpec {
+                                    index: cells.len(),
+                                    precision,
+                                    strategy,
+                                    dist: dist.clone(),
+                                    site,
+                                    bit_class,
+                                    verify,
+                                    shape,
+                                    trials: cfg.trials_per_cell,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_grid_dimensions() {
+        let cells = plan(&GridConfig::quick(1));
+        // 1 shape × 4 precisions × 3 strategies × 2 dists × (4 sites
+        // fused + 1 site offline) × 4 bit classes = 480.
+        assert_eq!(cells.len(), 480);
+        assert!(cells.iter().any(|c| c.precision == Precision::F16));
+        assert!(cells.iter().any(|c| c.verify == VerifyPoint::Offline));
+        assert!(cells
+            .iter()
+            .all(|c| c.verify == VerifyPoint::Fused || c.site == SiteClass::Output));
+        // Indices are the planning order.
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+    }
+
+    #[test]
+    fn bit_classes_resolve_within_encoding() {
+        for p in [Precision::Bf16, Precision::F16, Precision::F32, Precision::F64] {
+            for bc in BitClass::ALL {
+                assert!(bc.bit(p) < p.bits(), "{bc:?} out of range for {p}");
+            }
+        }
+        assert_eq!(BitClass::Sign.bit(Precision::Bf16), 15);
+        assert_eq!(BitClass::ExpMsb.bit(Precision::Bf16), 14);
+        assert_eq!(BitClass::ExpLsb.bit(Precision::Bf16), 7);
+        assert_eq!(BitClass::MantMsb.bit(Precision::Bf16), 6);
+    }
+
+    #[test]
+    fn faults_are_seed_deterministic_and_in_range() {
+        let cells = plan(&GridConfig::smoke(7));
+        // The whole grid's coordinate stream must depend on the seed
+        // (per-cell coincidence is possible for low-coordinate sites).
+        let all = |seed: u64| -> Vec<FaultSpec> {
+            cells.iter().flat_map(|c| c.faults(seed)).collect()
+        };
+        assert_ne!(all(42), all(43), "fault coordinates ignore the seed");
+        for c in &cells {
+            let f1 = c.faults(42);
+            let f2 = c.faults(42);
+            assert_eq!(f1, f2, "cell {} faults not reproducible", c.index);
+            let (m, k, n) = c.shape;
+            for f in &f1 {
+                assert!(f.bit < c.flip_grid().bits());
+                match f.site {
+                    FaultSite::Output { row, col } => assert!(row < m && col < n),
+                    FaultSite::OperandA { row, k: kk, col } => {
+                        assert!(row < m && kk < k && col < n)
+                    }
+                    FaultSite::OperandB { k: kk, col } => assert!(kk < k && col < n),
+                    FaultSite::ChecksumR1 { row } => assert!(row < m),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn operand_streams_shared_exactly_by_input_dist_shape() {
+        let cells = plan(&GridConfig::quick(1));
+        for x in &cells {
+            for y in &cells {
+                let same_key = x.model().input == y.model().input
+                    && x.dist == y.dist
+                    && x.shape == y.shape;
+                assert_eq!(
+                    x.operand_stream() == y.operand_stream(),
+                    same_key,
+                    "operand stream collision/split: {} vs {}",
+                    x.label(),
+                    y.label()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! Deterministic large-scale fault-injection campaign engine.
+//!
+//! The paper's headline claims — zero false positives across
+//! BF16/FP16/FP32/FP64, thresholds 6–48× tighter than A-ABFT, ~1000×
+//! finer detection granularity for fused verification — are statements
+//! about a *space* of configurations, not a single run. This module
+//! sweeps that space at scale:
+//!
+//! 1. [`plan`] expands a [`GridConfig`] into a lattice of [`CellSpec`]s
+//!    (precision × reduction strategy × distribution × injection site ×
+//!    bit class × verification point × shape), every random choice
+//!    derived from one master seed;
+//! 2. [`run`] executes the lattice through the [`crate::coordinator`]
+//!    worker pool — each cell's trials ride one `submit_batch_prepared`
+//!    batch against weights registered once, so the weight-stationary
+//!    serving path ([`crate::abft::PreparedWeights`]) amortizes checksum
+//!    encoding exactly as in production — and classifies each trial
+//!    against the margin rule (expected magnitude > margin × threshold ⇒
+//!    detection is a theorem, not a statistic);
+//! 3. [`render_tables`] / [`to_doc`] aggregate per-cell recall /
+//!    false-positive / magnitude / tightness statistics into the shapes
+//!    of paper Tables 4–9 and the schema-versioned
+//!    `BENCH_campaign.json`.
+//!
+//! **Reproducibility contract**: the same `(config, seed)` produces a
+//! byte-identical JSON document at any coordinator worker count. This
+//! holds because (a) the GEMM engine preserves every element's rounding
+//! schedule regardless of threading, (b) all sampling derives from fixed
+//! seed streams, (c) results are aggregated in planning order, and (d)
+//! nothing wall-clock-dependent is serialized. CI pins the contract —
+//! see `docs/CAMPAIGN.md` and `tests/campaign_engine.rs`.
+
+pub mod grid;
+pub mod report;
+pub mod runner;
+
+pub use grid::{model_for, plan, BitClass, CellSpec, GridConfig, VerifyPoint};
+pub use report::{render_tables, to_doc};
+pub use runner::{run, CampaignOutcome, CellResult};

@@ -1,0 +1,240 @@
+//! Campaign reporting: paper-table-shaped renderings plus the
+//! schema-versioned `BENCH_campaign.json` document.
+//!
+//! Four tables reproduce the shape of the paper's evaluation:
+//!
+//! * a recall / false-positive summary per precision × verification
+//!   point (the headline zero-FP, recall-1.0 claim);
+//! * a detection-rate ladder per site class × bit class (Tables 8/9);
+//! * threshold-tightness rows projected through
+//!   [`crate::experiments::tightness_row_from_campaign`] (Tables 4–6);
+//! * the offline ≈ 1e-3 vs fused ≈ 1e-6 e_max comparison (§3.6, Table 7's
+//!   practical recommendation — the ~1000× detection-granularity gap).
+//!
+//! The JSON document serializes one entry per grid cell through the
+//! shared [`JsonDoc`] writer. It contains no timing and no worker count,
+//! so a seeded campaign serializes byte-for-byte identically at any
+//! thread count — the reproducibility contract CI pins.
+
+use crate::bench_harness::{JsonDoc, JsonValue, CAMPAIGN_SCHEMA};
+use crate::experiments::tightness_row_from_campaign;
+use crate::gemm::ReduceStrategy;
+use crate::report::{pct, ratio, sci, Table};
+use crate::threshold::ThresholdContext;
+
+use super::grid::{model_for, VerifyPoint};
+use super::runner::{CampaignOutcome, CellResult};
+
+fn fmt_shape(shape: (usize, usize, usize)) -> String {
+    format!("{}x{}x{}", shape.0, shape.1, shape.2)
+}
+
+/// Sum clean-sweep statistics over a selection of cells, counting each
+/// distinct sweep once: the clean FPR sweep runs per operand set ×
+/// coordinator group, every cell on the set carries a copy of its
+/// numbers, and `CellResult::sweep` is the runner-assigned sweep
+/// identity. Returns `(clean_rows, false_positives)`.
+fn distinct_clean(sel: &[&CellResult]) -> (usize, usize) {
+    let mut seen: Vec<usize> = Vec::new();
+    let mut rows = 0usize;
+    let mut fps = 0usize;
+    for c in sel {
+        if !seen.contains(&c.sweep) {
+            seen.push(c.sweep);
+            rows += c.clean_rows;
+            fps += c.false_positives;
+        }
+    }
+    (rows, fps)
+}
+
+/// Render the campaign's paper-shaped tables, in print order.
+pub fn render_tables(outcome: &CampaignOutcome) -> Vec<Table> {
+    let cfg = &outcome.config;
+    let verifies = [VerifyPoint::Fused, VerifyPoint::Offline];
+
+    // 1. Recall / FP summary per precision × verification point.
+    let mut summary = Table::new(
+        "Campaign summary — above-threshold recall and false positives",
+        &[
+            "precision",
+            "verify",
+            "cells",
+            "trials",
+            "above",
+            "caught",
+            "recall %",
+            "FP",
+            "clean rows",
+        ],
+    );
+    for &p in &cfg.precisions {
+        for v in verifies {
+            let sel: Vec<&CellResult> = outcome
+                .cells
+                .iter()
+                .filter(|c| c.spec.precision == p && c.spec.verify == v)
+                .collect();
+            if sel.is_empty() {
+                continue;
+            }
+            let above: usize = sel.iter().map(|c| c.above).sum();
+            let caught: usize = sel.iter().map(|c| c.detected_above).sum();
+            let (clean_rows, fps) = distinct_clean(&sel);
+            summary.row(vec![
+                p.name().to_string(),
+                v.name().to_string(),
+                sel.len().to_string(),
+                sel.iter().map(|c| c.trials).sum::<usize>().to_string(),
+                above.to_string(),
+                caught.to_string(),
+                if above == 0 { "-".into() } else { pct(100.0 * caught as f64 / above as f64) },
+                fps.to_string(),
+                clean_rows.to_string(),
+            ]);
+        }
+    }
+
+    // 2. Detection-rate ladder per site × bit class (Tables 8/9 shape),
+    // fused cells, merged over strategies and distributions.
+    let mut headers: Vec<String> = vec!["site".into(), "bit".into()];
+    headers.extend(cfg.precisions.iter().map(|p| format!("{} DR %", p.name())));
+    let mut ladder = Table::new(
+        "Detection rate by injection site × bit class (fused; Tables 8/9 shape)",
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for &site in &cfg.sites {
+        for &bc in &cfg.bit_classes {
+            let mut row = vec![site.name().to_string(), bc.name().to_string()];
+            for &p in &cfg.precisions {
+                let sel: Vec<&CellResult> = outcome
+                    .cells
+                    .iter()
+                    .filter(|c| {
+                        c.spec.site == site
+                            && c.spec.bit_class == bc
+                            && c.spec.precision == p
+                            && c.spec.verify == VerifyPoint::Fused
+                    })
+                    .collect();
+                let trials: usize = sel.iter().map(|c| c.trials).sum();
+                let detected: usize = sel.iter().map(|c| c.detected).sum();
+                row.push(if trials == 0 {
+                    "-".into()
+                } else {
+                    pct(100.0 * detected as f64 / trials as f64)
+                });
+            }
+            ladder.row(row);
+        }
+    }
+
+    // 3. Threshold tightness on clean data (Tables 4–6 shape), projected
+    // through the experiments-layer converter.
+    let mut tight = Table::new(
+        "Threshold tightness on clean data (Tables 4–6 shape)",
+        &["precision", "verify", "shape", "Actual Diff", "A-ABFT", "V-ABFT", "A-Tight", "V-Tight"],
+    );
+    for &p in &cfg.precisions {
+        for v in verifies {
+            for &shape in &cfg.shapes {
+                let sel: Vec<&CellResult> = outcome
+                    .cells
+                    .iter()
+                    .filter(|c| {
+                        c.spec.precision == p && c.spec.verify == v && c.spec.shape == shape
+                    })
+                    .collect();
+                if sel.is_empty() {
+                    continue;
+                }
+                let actual = sel.iter().map(|c| c.clean_noise).fold(0.0, f64::max);
+                let a_thr = sel.iter().map(|c| c.aabft_threshold_max).fold(0.0, f64::max);
+                let v_thr = sel.iter().map(|c| c.threshold_max).fold(0.0, f64::max);
+                let (rows_checked, fps) = distinct_clean(&sel);
+                let rows =
+                    tightness_row_from_campaign(shape.2, actual, a_thr, v_thr, rows_checked, fps);
+                tight.row(vec![
+                    p.name().to_string(),
+                    v.name().to_string(),
+                    fmt_shape(shape),
+                    sci(rows.actual),
+                    sci(rows.aabft_threshold),
+                    sci(rows.vabft_threshold),
+                    ratio(rows.a_tight()),
+                    ratio(rows.v_tight()),
+                ]);
+            }
+        }
+    }
+
+    // 4. Offline vs fused e_max (§3.6): the detection-granularity gap.
+    let mut emax = Table::new(
+        "e_max: offline (stored output) vs fused (accumulator), §3.6",
+        &["precision", "model", "offline e_max", "fused e_max", "granularity"],
+    );
+    let k = cfg.shapes.first().map(|s| s.1).unwrap_or(1024);
+    for &p in &cfg.precisions {
+        let model = model_for(p, ReduceStrategy::Sequential);
+        let off = ThresholdContext::offline(model).emax(k);
+        let fused = ThresholdContext::online(model).emax(k);
+        emax.row(vec![
+            p.name().to_string(),
+            model.label(),
+            sci(off),
+            sci(fused),
+            ratio(off / fused),
+        ]);
+    }
+
+    vec![summary, ladder, tight, emax]
+}
+
+/// Serialize a campaign outcome as the schema-versioned
+/// `BENCH_campaign.json` document (one entry per grid cell, no timing,
+/// no thread count — byte-stable across workers).
+pub fn to_doc(outcome: &CampaignOutcome) -> JsonDoc {
+    let cfg = &outcome.config;
+    let mut doc = JsonDoc::new(CAMPAIGN_SCHEMA);
+    doc.meta("bench", JsonValue::Str("campaign".into()))
+        .meta("mode", JsonValue::Str(cfg.mode.clone()))
+        .meta("seed", JsonValue::Str(format!("0x{:x}", cfg.seed)))
+        .meta("margin", JsonValue::Num(cfg.margin))
+        .meta("cells", JsonValue::Int(outcome.cells.len() as i64))
+        .meta("trials", JsonValue::Int(outcome.total_trials() as i64))
+        .meta("above_threshold", JsonValue::Int(outcome.total_above() as i64))
+        .meta("detected_above", JsonValue::Int(outcome.total_detected_above() as i64))
+        .meta("recall_above", JsonValue::Num(outcome.recall_above()))
+        .meta("clean_rows", JsonValue::Int(outcome.total_clean_rows() as i64))
+        .meta("false_positives", JsonValue::Int(outcome.total_false_positives() as i64))
+        .meta("gates_hold", JsonValue::Bool(outcome.gates_hold()));
+    for c in &outcome.cells {
+        let s = &c.spec;
+        doc.entry(vec![
+            ("cell".to_string(), JsonValue::Int(s.index as i64)),
+            ("sweep".to_string(), JsonValue::Int(c.sweep as i64)),
+            ("shape".to_string(), JsonValue::Str(fmt_shape(s.shape))),
+            ("precision".to_string(), JsonValue::Str(s.precision.name().to_string())),
+            ("strategy".to_string(), JsonValue::Str(s.strategy.name().to_string())),
+            ("dist".to_string(), JsonValue::Str(s.dist.label())),
+            ("site".to_string(), JsonValue::Str(s.site.name().to_string())),
+            ("bit_class".to_string(), JsonValue::Str(s.bit_class.name().to_string())),
+            ("bit".to_string(), JsonValue::Int(c.bit as i64)),
+            ("verify".to_string(), JsonValue::Str(s.verify.name().to_string())),
+            ("trials".to_string(), JsonValue::Int(c.trials as i64)),
+            ("detected".to_string(), JsonValue::Int(c.detected as i64)),
+            ("above".to_string(), JsonValue::Int(c.above as i64)),
+            ("detected_above".to_string(), JsonValue::Int(c.detected_above as i64)),
+            ("detected_below".to_string(), JsonValue::Int(c.detected_below as i64)),
+            ("clean_rows".to_string(), JsonValue::Int(c.clean_rows as i64)),
+            ("false_positives".to_string(), JsonValue::Int(c.false_positives as i64)),
+            ("max_magnitude".to_string(), JsonValue::Sci(c.max_magnitude)),
+            ("clean_noise".to_string(), JsonValue::Sci(c.clean_noise)),
+            ("vabft_threshold_min".to_string(), JsonValue::Sci(c.threshold_min)),
+            ("vabft_threshold_max".to_string(), JsonValue::Sci(c.threshold_max)),
+            ("aabft_threshold_max".to_string(), JsonValue::Sci(c.aabft_threshold_max)),
+            ("tightness".to_string(), JsonValue::Sci(c.tightness())),
+        ]);
+    }
+    doc
+}

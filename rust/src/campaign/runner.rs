@@ -1,0 +1,420 @@
+//! Campaign execution: batched trials through the coordinator.
+//!
+//! [`run`] executes a planned grid by grouping cells per accumulation
+//! model × verification point, starting one [`Coordinator`] worker pool
+//! per group, registering each operand set's weights once
+//! ([`crate::abft::PreparedWeights`] — checksum encoding, B-side
+//! statistics, threshold vectors and the clean FPR sweep all amortized
+//! across every weight-stationary trial on the set), and submitting each
+//! cell's injected requests as one `submit_batch_prepared` batch.
+//!
+//! Determinism: cells are classified in planning order from responses
+//! collected in submission order; each trial's arithmetic is
+//! thread-count-independent (schedule preservation), and no wall-clock
+//! value enters a result. The same `(config, seed)` therefore produces
+//! identical [`CampaignOutcome`]s — and byte-identical JSON — at any
+//! worker count.
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+use crate::abft::{Verdict, VerifyPolicy};
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, GemmResponse, PreparedGemmRequest, WeightHandle,
+};
+use crate::gemm::AccumModel;
+use crate::inject::{FaultSite, FaultSpec};
+use crate::matrix::Matrix;
+use crate::rng::Xoshiro256pp;
+use crate::threshold::{AabftThreshold, Threshold, VabftThreshold};
+
+use super::grid::{plan, CellSpec, GridConfig, VerifyPoint};
+
+/// Stream tag separating operand-sampling RNG streams from coordinate
+/// streams (both key off the master seed).
+const OPERAND_TAG: u64 = 0x09E2_A4D5;
+
+/// Aggregated statistics of one executed grid cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    /// The planned cell.
+    pub spec: CellSpec,
+    /// Identity of the clean sweep this cell shares (index into the
+    /// campaign's distinct operand-set sweeps, assigned in execution
+    /// order) — what reports deduplicate the shared clean statistics by.
+    pub sweep: usize,
+    /// Resolved flip bit position.
+    pub bit: u32,
+    /// Injection trials executed.
+    pub trials: usize,
+    /// Trials whose fault was detected (verdict ≠ Clean).
+    pub detected: usize,
+    /// Trials whose expected verification-difference magnitude cleared
+    /// `margin ×` the row threshold (or was non-finite) — the population
+    /// the recall gate quantifies over.
+    pub above: usize,
+    /// Above-threshold trials detected — the recall-gate numerator.
+    pub detected_above: usize,
+    /// Below-threshold trials detected anyway (bonus sensitivity).
+    pub detected_below: usize,
+    /// Clean rows verified in the cell's FPR sweep. The sweep runs once
+    /// per *operand set* and is shared by every cell using it;
+    /// [`CampaignOutcome::total_clean_rows`] counts each distinct sweep
+    /// once.
+    pub clean_rows: usize,
+    /// Clean rows of the cell's (shared) sweep that flagged — must be
+    /// zero for a sound threshold.
+    pub false_positives: usize,
+    /// Largest expected fault magnitude injected (∞ for overflow flips).
+    pub max_magnitude: f64,
+    /// Largest |D1| the clean run saw — the realized rounding-noise
+    /// floor ("Actual Diff" in the paper's tightness tables).
+    pub clean_noise: f64,
+    /// Smallest V-ABFT row threshold issued on the clean run.
+    pub threshold_min: f64,
+    /// Largest V-ABFT row threshold issued on the clean run.
+    pub threshold_max: f64,
+    /// Largest A-ABFT row threshold for the same operands (tightness
+    /// baseline; not used for detection).
+    pub aabft_threshold_max: f64,
+}
+
+impl CellResult {
+    /// Above-threshold recall: 1.0 when the gate holds (and vacuously
+    /// when no trial cleared the margin).
+    pub fn recall_above(&self) -> f64 {
+        if self.above == 0 {
+            1.0
+        } else {
+            self.detected_above as f64 / self.above as f64
+        }
+    }
+
+    /// Realized V-ABFT tightness on clean data: largest threshold over
+    /// largest observed noise (lower is tighter; must stay ≥ 1).
+    pub fn tightness(&self) -> f64 {
+        self.threshold_max / self.clean_noise
+    }
+
+    /// Realized A-ABFT tightness on clean data (the baseline ratio).
+    pub fn aabft_tightness(&self) -> f64 {
+        self.aabft_threshold_max / self.clean_noise
+    }
+}
+
+/// Outcome of a full campaign run.
+#[derive(Debug, Clone)]
+pub struct CampaignOutcome {
+    /// The grid configuration that ran.
+    pub config: GridConfig,
+    /// Per-cell results, in planning order.
+    pub cells: Vec<CellResult>,
+    /// Clean rows verified across the *distinct* clean sweeps (one per
+    /// operand set per coordinator group — cells sharing operands share
+    /// a sweep, which is counted once here).
+    pub clean_rows: usize,
+    /// Flagged rows across the distinct clean sweeps (must be zero).
+    pub false_positives: usize,
+    /// One coordinator-metrics summary line per worker-pool group
+    /// (campaign counters, job totals, latency) — runtime telemetry, not
+    /// serialized into the JSON document (it is wall-clock-dependent).
+    pub group_metrics: Vec<String>,
+}
+
+impl CampaignOutcome {
+    /// Total injection trials.
+    pub fn total_trials(&self) -> usize {
+        self.cells.iter().map(|c| c.trials).sum()
+    }
+
+    /// Total above-threshold trials (the recall denominator).
+    pub fn total_above(&self) -> usize {
+        self.cells.iter().map(|c| c.above).sum()
+    }
+
+    /// Total above-threshold trials detected (the recall numerator).
+    pub fn total_detected_above(&self) -> usize {
+        self.cells.iter().map(|c| c.detected_above).sum()
+    }
+
+    /// Total clean rows verified, each distinct sweep counted once.
+    pub fn total_clean_rows(&self) -> usize {
+        self.clean_rows
+    }
+
+    /// Total clean rows that flagged (must be zero), each distinct sweep
+    /// counted once.
+    pub fn total_false_positives(&self) -> usize {
+        self.false_positives
+    }
+
+    /// Campaign-wide above-threshold recall.
+    pub fn recall_above(&self) -> f64 {
+        let above = self.total_above();
+        if above == 0 {
+            1.0
+        } else {
+            self.total_detected_above() as f64 / above as f64
+        }
+    }
+
+    /// The CI gate: recall 1.0 over the above-threshold population and
+    /// zero false positives.
+    pub fn gates_hold(&self) -> bool {
+        self.total_false_positives() == 0 && self.total_detected_above() == self.total_above()
+    }
+}
+
+/// Expected verification-difference magnitude of a realized fault, and
+/// whether it clears the recall-gate margin. `delta` is the realized
+/// source-value change; `thr` the V-ABFT row thresholds the pipeline
+/// itself used (same code path, bitwise-identical values).
+fn expected_effect(
+    fault: &FaultSpec,
+    delta: f64,
+    a: &Matrix,
+    b: &Matrix,
+    thr: &[f64],
+    margin: f64,
+) -> (f64, bool) {
+    match fault.site {
+        FaultSite::Output { row, .. } | FaultSite::ChecksumR1 { row } => {
+            let mag = delta.abs();
+            (mag, !mag.is_finite() || mag > margin * thr[row])
+        }
+        FaultSite::OperandA { row, k, col } => {
+            let mag = (delta * b.get(k, col)).abs();
+            (mag, !mag.is_finite() || mag > margin * thr[row])
+        }
+        FaultSite::OperandB { k, .. } => {
+            // Persistent B fault: row i of the struck column is perturbed
+            // by a_ik·δ. Detection is guaranteed as soon as any single
+            // row clears the margin.
+            let mut mag = 0.0f64;
+            let mut above = false;
+            for i in 0..a.rows() {
+                let e = (a.get(i, k) * delta).abs();
+                if !e.is_finite() || e > margin * thr[i] {
+                    above = true;
+                }
+                mag = mag.max(e);
+            }
+            if !delta.is_finite() {
+                above = true;
+                mag = f64::INFINITY;
+            }
+            (mag, above)
+        }
+    }
+}
+
+/// One registered operand set within a coordinator group, with the
+/// weight-side state every cell on it shares: the prepared handle, the
+/// clean FPR sweep's statistics, and both threshold vectors (the V-ABFT
+/// thresholds bitwise as the pipeline issues them, the A-ABFT baseline
+/// for tightness reporting) — computed once, reused by each cell.
+struct OperandSet {
+    stream: u64,
+    sweep: usize,
+    a: Matrix,
+    b: Matrix,
+    handle: WeightHandle,
+    thr: Vec<f64>,
+    threshold_min: f64,
+    threshold_max: f64,
+    aabft_threshold_max: f64,
+    clean_rows: usize,
+    false_positives: usize,
+    clean_noise: f64,
+}
+
+/// A cell whose trial batch is in flight: everything needed to classify
+/// it once its responses are collected (in planning order).
+struct PendingCell {
+    ci: usize,
+    oi: usize,
+    faults: Vec<FaultSpec>,
+    pending: Vec<(u64, Receiver<GemmResponse>)>,
+}
+
+/// Execute a campaign grid with `workers` coordinator worker threads per
+/// group. See the module docs for the determinism contract.
+pub fn run(cfg: &GridConfig, workers: usize) -> CampaignOutcome {
+    let cells = plan(cfg);
+    let mut results: Vec<Option<CellResult>> = cells.iter().map(|_| None).collect();
+    let mut clean_rows_total = 0usize;
+    let mut false_positives_total = 0usize;
+    let mut sweeps = 0usize;
+    let mut group_metrics: Vec<String> = Vec::new();
+
+    // Group cell indices by coordinator key (accumulation model +
+    // verification point): one worker pool per rounding schedule.
+    let mut groups: Vec<((AccumModel, VerifyPoint), Vec<usize>)> = Vec::new();
+    for (i, c) in cells.iter().enumerate() {
+        let key = (c.model(), c.verify);
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, v)) => v.push(i),
+            None => groups.push((key, vec![i])),
+        }
+    }
+
+    let vab = VabftThreshold::default();
+    let aab = AabftThreshold::paper_repro();
+    for ((model, verify), idxs) in groups {
+        let policy =
+            if verify.online() { VerifyPolicy::default() } else { VerifyPolicy::offline() };
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: workers.max(1),
+            queue_depth: 256,
+            model,
+            policy,
+            ..Default::default()
+        });
+
+        // Submission pass. Operand sets are registered once per (input,
+        // dist, shape) stream within the group and shared by its cells;
+        // the clean FPR sweep and both threshold vectors run once per
+        // set, not per cell — the weight-stationary amortization the
+        // campaign exists to exercise. Every cell's trial batch is
+        // submitted before any is collected, so the worker pool stays
+        // saturated across cell boundaries (collection order below is
+        // still planning order — determinism is unaffected).
+        let mut operands: Vec<OperandSet> = Vec::new();
+        let mut batches: Vec<PendingCell> = Vec::new();
+        for &ci in &idxs {
+            let cell = &cells[ci];
+            let stream = cell.operand_stream();
+            let oi = match operands.iter().position(|o| o.stream == stream) {
+                Some(oi) => oi,
+                None => {
+                    let (m, k, n) = cell.shape;
+                    let mut rng = Xoshiro256pp::from_stream(cfg.seed ^ OPERAND_TAG, stream);
+                    let a = Matrix::sample_in(m, k, &cell.dist, model.input, &mut rng);
+                    let b = Matrix::sample_in(k, n, &cell.dist, model.input, &mut rng);
+                    let handle = coord.register_weights(operands.len() as u32, &b);
+
+                    // Thresholds exactly as the pipeline computes them
+                    // (same prepared statistics, same context, same
+                    // implementation — bitwise-identical values).
+                    let blk = &handle.blocks()[0];
+                    let thr = vab.thresholds_prepared(&a, &blk.stats, handle.ctx());
+                    let a_thr = aab.thresholds(&a, &b, handle.ctx());
+
+                    // The set's one clean run: the FPR sweep and the
+                    // rounding-noise floor every cell on it shares.
+                    let clean = coord
+                        .call_prepared(PreparedGemmRequest {
+                            a: a.clone(),
+                            weights: Arc::clone(&handle),
+                            inject: None,
+                        })
+                        .result
+                        .expect("clean multiply failed");
+                    clean_rows_total += clean.report.rows_checked;
+                    false_positives_total += clean.report.detections.len();
+
+                    operands.push(OperandSet {
+                        stream,
+                        sweep: sweeps,
+                        a,
+                        b,
+                        handle,
+                        threshold_min: thr.iter().cloned().fold(f64::INFINITY, f64::min),
+                        threshold_max: thr.iter().cloned().fold(0.0, f64::max),
+                        aabft_threshold_max: a_thr.iter().cloned().fold(0.0, f64::max),
+                        thr,
+                        clean_rows: clean.report.rows_checked,
+                        false_positives: clean.report.detections.len(),
+                        clean_noise: clean.report.max_abs_d1,
+                    });
+                    sweeps += 1;
+                    operands.len() - 1
+                }
+            };
+            let set = &operands[oi];
+
+            // One batch per cell: the cell's injected trials.
+            let faults = cell.faults(cfg.seed);
+            let reqs: Vec<PreparedGemmRequest> = faults
+                .iter()
+                .map(|f| PreparedGemmRequest {
+                    a: set.a.clone(),
+                    weights: Arc::clone(&set.handle),
+                    inject: Some(*f),
+                })
+                .collect();
+            let pending = coord.submit_batch_prepared(reqs);
+            coord.metrics().campaign_trials.add(faults.len() as u64);
+            batches.push(PendingCell { ci, oi, faults, pending });
+        }
+
+        // Collection pass, in planning order.
+        for pc in batches {
+            let cell = &cells[pc.ci];
+            let set = &operands[pc.oi];
+            let responses: Vec<GemmResponse> = pc
+                .pending
+                .into_iter()
+                .map(|(_, rx)| rx.recv().expect("campaign worker died"))
+                .collect();
+
+            let mut res = CellResult {
+                spec: cell.clone(),
+                sweep: set.sweep,
+                bit: cell.bit(),
+                trials: 0,
+                detected: 0,
+                above: 0,
+                detected_above: 0,
+                detected_below: 0,
+                clean_rows: set.clean_rows,
+                false_positives: set.false_positives,
+                max_magnitude: 0.0,
+                clean_noise: set.clean_noise,
+                threshold_min: set.threshold_min,
+                threshold_max: set.threshold_max,
+                aabft_threshold_max: set.aabft_threshold_max,
+            };
+
+            for (f, resp) in pc.faults.iter().zip(&responses) {
+                let out = resp.result.as_ref().expect("campaign multiply failed");
+                let realized = resp.injected.expect("injection outcome missing");
+                let detected = out.report.verdict != Verdict::Clean;
+                let (mag, above) =
+                    expected_effect(f, realized.delta(), &set.a, &set.b, &set.thr, cfg.margin);
+                res.trials += 1;
+                if mag.is_finite() {
+                    res.max_magnitude = res.max_magnitude.max(mag);
+                } else {
+                    res.max_magnitude = f64::INFINITY;
+                }
+                if above {
+                    res.above += 1;
+                    if detected {
+                        res.detected_above += 1;
+                    }
+                } else if detected {
+                    res.detected_below += 1;
+                }
+                if detected {
+                    res.detected += 1;
+                }
+            }
+            results[pc.ci] = Some(res);
+            coord.metrics().campaign_cells.inc();
+        }
+        group_metrics
+            .push(format!("{} {}: {}", model.label(), verify.name(), coord.metrics().summary()));
+        coord.shutdown();
+    }
+
+    let cells_out: Vec<CellResult> =
+        results.into_iter().map(|r| r.expect("cell never executed")).collect();
+    CampaignOutcome {
+        config: cfg.clone(),
+        cells: cells_out,
+        clean_rows: clean_rows_total,
+        false_positives: false_positives_total,
+        group_metrics,
+    }
+}

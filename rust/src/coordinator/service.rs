@@ -10,7 +10,7 @@ use std::time::Instant;
 use crate::abft::{FtGemm, FtGemmOutput, PreparedWeights, Verdict, VerifyPolicy};
 use crate::fp::Precision;
 use crate::gemm::{AccumModel, GemmEngine, GemmOutput, ParallelismConfig};
-use crate::inject::{BitFlip, InjectionSite};
+use crate::inject::{apply_fault, FaultOutcome, FaultSpec};
 use crate::matrix::Matrix;
 use crate::metrics::ServiceMetrics;
 use crate::threshold::{Threshold, VabftThreshold};
@@ -24,17 +24,14 @@ pub type WeightId = u32;
 /// and stay valid even after the id is evicted or re-registered.
 pub type WeightHandle = Arc<PreparedWeights>;
 
-/// Optional fault injection attached to a request (for campaigns and
-/// demos): flips `bit` of the output element at `site` before
-/// verification.
-#[derive(Debug, Clone, Copy)]
-pub struct InjectSpec {
-    /// Output element to corrupt.
-    pub site: InjectionSite,
-    /// Bit position to flip, addressing the verified grid's encoding
-    /// (FP32 online, the output precision offline).
-    pub bit: u32,
-}
+/// Optional fault injection attached to a request (campaigns and demos):
+/// a located fault + bit, applied to the first K-block's encoded partial
+/// before verification (a single-event upset strikes once). Output and
+/// checksum flips address the verified grid (FP32 online, the output
+/// precision offline); operand flips address the operand storage grid.
+/// See [`crate::inject::FaultSpec`] — `InjectSpec::output(row, col, bit)`
+/// is the classic stored-output-element configuration.
+pub type InjectSpec = FaultSpec;
 
 /// A protected-multiply request against a registered weight id.
 #[derive(Debug)]
@@ -67,6 +64,10 @@ pub struct GemmResponse {
     pub id: u64,
     /// The protected multiply's output, or an error string.
     pub result: Result<FtGemmOutput, String>,
+    /// The realized source-value flip of the request's injection, if the
+    /// request carried one (campaign telemetry: drivers combine
+    /// `new - old` with the clean operands to classify each trial).
+    pub injected: Option<FaultOutcome>,
     /// Queue + execution time, submission to completion.
     pub latency: std::time::Duration,
 }
@@ -341,6 +342,18 @@ impl Coordinator {
         reqs.into_iter().map(|r| self.submit_tagged(r)).collect()
     }
 
+    /// Handle-based variant of [`Self::submit_batch`]: enqueue every
+    /// prepared request in order and return one `(id, receiver)` pair per
+    /// request. The campaign engine's hot path — each cell's trials ride
+    /// one batch against weights prepared once.
+    pub fn submit_batch_prepared(
+        &self,
+        reqs: Vec<PreparedGemmRequest>,
+    ) -> Vec<(u64, Receiver<GemmResponse>)> {
+        self.metrics.batches_submitted.inc();
+        reqs.into_iter().map(|r| self.submit_prepared_tagged(r)).collect()
+    }
+
     /// Convenience: submit and wait.
     pub fn call(&self, req: GemmRequest) -> GemmResponse {
         self.submit(req).recv().expect("worker dropped reply")
@@ -397,6 +410,7 @@ fn worker_loop(
                 },
                 Payload::Handle(req) => Ok((req.a, req.weights, req.inject)),
             };
+        let mut injected = None;
         let result = match resolved {
             Err(e) => Err(e),
             Ok((a, w, inject)) => {
@@ -406,18 +420,29 @@ fn worker_loop(
                         let grid = if policy.online { model.work } else { model.out };
                         // A single-event upset strikes once: inject into
                         // the first K-block's partial only, even when the
-                        // weights are prepared blockwise.
-                        let f = move |bi: usize, out: &mut GemmOutput| {
+                        // weights are prepared blockwise. The realized
+                        // flip is recorded through a Cell because the
+                        // injection hook is a shared (&dyn Fn) closure.
+                        let outcome = std::cell::Cell::new(None);
+                        let f = |bi: usize, out: &mut GemmOutput| {
                             if bi != 0 {
                                 return;
                             }
-                            let flip = BitFlip::new(spec.bit, grid);
-                            let tgt = if policy.online { &mut out.acc } else { &mut out.c };
-                            let old = tgt.get(spec.site.row, spec.site.col);
-                            let (new, _) = flip.apply(old);
-                            tgt.set(spec.site.row, spec.site.col, new);
+                            if let Some(blk) = w.blocks().first() {
+                                outcome.set(Some(apply_fault(
+                                    &spec,
+                                    policy.online,
+                                    model.input,
+                                    grid,
+                                    &a,
+                                    &blk.stats.b,
+                                    out,
+                                )));
+                            }
                         };
-                        ft.multiply_prepared(&a, &w, Some(&f))
+                        let r = ft.multiply_prepared(&a, &w, Some(&f));
+                        injected = outcome.get();
+                        r
                     }
                 };
                 run.map_err(|e| e.to_string())
@@ -443,6 +468,7 @@ fn worker_loop(
         let _ = job.reply.send(GemmResponse {
             id: job.id,
             result,
+            injected,
             latency: job.submitted.elapsed(),
         });
     }
@@ -504,8 +530,10 @@ mod tests {
         let resp = c.call(GemmRequest {
             a: activation(4),
             weight: 7,
-            inject: Some(InjectSpec { site: InjectionSite { row: 2, col: 5 }, bit: 13 }),
+            inject: Some(InjectSpec::output(2, 5, 13)),
         });
+        let realized = resp.injected.expect("injection outcome reported");
+        assert_ne!(realized.delta(), 0.0);
         let out = resp.result.expect("ok");
         assert_ne!(out.report.verdict, Verdict::Clean);
         assert!(c.metrics().faults_detected.get() >= 1);

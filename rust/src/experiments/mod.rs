@@ -9,4 +9,7 @@ pub mod tightness;
 
 pub use overhead::{run_overhead, OverheadConfig, OverheadRow};
 pub use real_model::{model_weight_profiles, run_real_model, RealModelRow, WeightProfile};
-pub use tightness::{run_tightness, validate_dd_baseline, TightnessConfig, TightnessRow};
+pub use tightness::{
+    run_tightness, tightness_row_from_campaign, validate_dd_baseline, TightnessConfig,
+    TightnessRow,
+};

@@ -11,7 +11,7 @@
 //!   factors (§2.1) — the catastrophic class ABFT must catch.
 
 use crate::fp::{Bf16, F16, Precision, F8E4M3, F8E5M2};
-use crate::gemm::AccumModel;
+use crate::gemm::{AccumModel, GemmOutput};
 use crate::matrix::Matrix;
 use crate::rng::{Distribution, Rng, Xoshiro256pp};
 
@@ -113,6 +113,237 @@ pub fn inject(c: &mut Matrix, site: InjectionSite, flip: BitFlip) -> (f64, f64, 
     let (new, dir) = flip.apply(old);
     c.set(site.row, site.col, new);
     (old, new, dir)
+}
+
+/// Class of injection site in the campaign grid taxonomy — *where* the
+/// single-event upset strikes, without coordinates.
+///
+/// The classes have different detection semantics:
+///
+/// * [`SiteClass::Output`] — a stored element of the (partial) product;
+///   the classic ABFT target, one row perturbed by the flip magnitude.
+/// * [`SiteClass::OperandA`] — a transient upset of an A register as it
+///   feeds one FMA: one output element is perturbed by `δ_a · b_kj`.
+/// * [`SiteClass::OperandB`] — a persistent upset of a stored B element
+///   *after* checksum encoding: every output row i of column j is
+///   perturbed by `a_ik · δ_b` (the Table 8 memory-fault configuration).
+/// * [`SiteClass::Checksum`] — the already-verified checksum row itself:
+///   the data columns stay clean, but verification sees `|D1|` shifted by
+///   the full flip magnitude. Campaigns must report this as its own class
+///   — a flagged checksum row is a *checksum* fault, not a data miss.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SiteClass {
+    /// Stored output / accumulator element.
+    Output,
+    /// A-operand register feeding one FMA (transient).
+    OperandA,
+    /// Stored B element after encoding (persistent).
+    OperandB,
+    /// First checksum entry (`c^{r1}`) of one row.
+    Checksum,
+}
+
+impl SiteClass {
+    /// All four classes, in campaign grid order.
+    pub const ALL: [SiteClass; 4] =
+        [SiteClass::Output, SiteClass::OperandA, SiteClass::OperandB, SiteClass::Checksum];
+
+    /// Short lowercase name used in reports and JSON documents.
+    pub fn name(self) -> &'static str {
+        match self {
+            SiteClass::Output => "output",
+            SiteClass::OperandA => "operand_a",
+            SiteClass::OperandB => "operand_b",
+            SiteClass::Checksum => "checksum",
+        }
+    }
+}
+
+/// A fully-located injection site (class + coordinates).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Stored output / accumulator element at (`row`, `col`).
+    Output {
+        /// Output row.
+        row: usize,
+        /// Output column.
+        col: usize,
+    },
+    /// Transient upset of A's element (`row`, `k`) as consumed by the FMA
+    /// producing output element (`row`, `col`).
+    OperandA {
+        /// Output (and A) row.
+        row: usize,
+        /// K index of the corrupted A element.
+        k: usize,
+        /// Output column whose accumulation consumed the bad register.
+        col: usize,
+    },
+    /// Persistent upset of stored B element (`k`, `col`): perturbs every
+    /// output row of column `col` by `a_ik · δ_b`.
+    OperandB {
+        /// K index (row of B).
+        k: usize,
+        /// Output column (column of B).
+        col: usize,
+    },
+    /// The first checksum entry (`c^{r1}`) of output row `row`.
+    ChecksumR1 {
+        /// Output row whose checksum entry is struck.
+        row: usize,
+    },
+}
+
+impl FaultSite {
+    /// The site's class (coordinates dropped).
+    pub fn class(self) -> SiteClass {
+        match self {
+            FaultSite::Output { .. } => SiteClass::Output,
+            FaultSite::OperandA { .. } => SiteClass::OperandA,
+            FaultSite::OperandB { .. } => SiteClass::OperandB,
+            FaultSite::ChecksumR1 { .. } => SiteClass::Checksum,
+        }
+    }
+}
+
+/// A located fault plus the encoding bit to flip — the unit of work of a
+/// campaign trial, and the coordinator's injection request payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Where the upset strikes.
+    pub site: FaultSite,
+    /// Bit position flipped, addressing the site's storage encoding
+    /// (verified grid for output/checksum sites, operand grid otherwise).
+    pub bit: u32,
+}
+
+impl FaultSpec {
+    /// Stored-output-element flip at (`row`, `col`) — the classic
+    /// single-event-upset configuration.
+    pub fn output(row: usize, col: usize, bit: u32) -> FaultSpec {
+        FaultSpec { site: FaultSite::Output { row, col }, bit }
+    }
+
+    /// Transient A-register flip feeding output element (`row`, `col`)
+    /// through K index `k`.
+    pub fn operand_a(row: usize, k: usize, col: usize, bit: u32) -> FaultSpec {
+        FaultSpec { site: FaultSite::OperandA { row, k, col }, bit }
+    }
+
+    /// Persistent stored-B-element flip at (`k`, `col`).
+    pub fn operand_b(k: usize, col: usize, bit: u32) -> FaultSpec {
+        FaultSpec { site: FaultSite::OperandB { k, col }, bit }
+    }
+
+    /// Checksum-row flip: the `c^{r1}` entry of output row `row`.
+    pub fn checksum(row: usize, bit: u32) -> FaultSpec {
+        FaultSpec { site: FaultSite::ChecksumR1 { row }, bit }
+    }
+}
+
+/// The realized flip at a fault's *source* value: the element that was
+/// actually struck (an output/checksum entry, or an operand element).
+/// Campaign drivers combine `new - old` with the clean operands to compute
+/// each trial's expected verification-difference magnitude.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultOutcome {
+    /// Value before the flip.
+    pub old: f64,
+    /// Value after the flip.
+    pub new: f64,
+}
+
+impl FaultOutcome {
+    /// The signed source-value change `new - old`.
+    pub fn delta(&self) -> f64 {
+        self.new - self.old
+    }
+}
+
+/// Apply a located fault to an encoded (partial) product, mutating the
+/// matrix the verification policy reads (`out.acc` online, `out.c`
+/// offline). One implementation shared by the coordinator's injection
+/// path and the campaign engine, so every site class has exactly one
+/// semantics.
+///
+/// * `online` — which of `out`'s matrices is verified (and thus struck);
+/// * `input` — operand storage precision (operand-site flips address it);
+/// * `grid` — the verified grid (output/checksum-site flips address it);
+/// * `a` / `b` — the *clean* operand (block) matrices, `a` M×K, `b` K×N;
+///   operand-site faults propagate through them exactly as the existing
+///   Table 8 campaign does: perturb the accumulator, then re-round onto
+///   the verified grid.
+///
+/// Out-of-range coordinates are clamped to the operand/product bounds
+/// (operand K indices against the *block* depth `b.rows()`, which for a
+/// blockwise-prepared weight is shallower than A), so a malformed request
+/// degrades to a nearby site instead of panicking a worker thread; when
+/// an addressed dimension is empty the fault is a no-op (`old == new`).
+/// Returns the realized source-value flip.
+pub fn apply_fault(
+    spec: &FaultSpec,
+    online: bool,
+    input: Precision,
+    grid: Precision,
+    a: &Matrix,
+    b: &Matrix,
+    out: &mut GemmOutput,
+) -> FaultOutcome {
+    let n = b.cols();
+    let tgt = if online { &mut out.acc } else { &mut out.c };
+    let rows = tgt.rows();
+    let depth = a.cols().min(b.rows());
+    let empty = match spec.site {
+        FaultSite::Output { .. } => rows == 0 || n == 0,
+        FaultSite::ChecksumR1 { .. } => rows == 0,
+        FaultSite::OperandA { .. } | FaultSite::OperandB { .. } => {
+            rows == 0 || n == 0 || depth == 0
+        }
+    };
+    if empty {
+        return FaultOutcome { old: 0.0, new: 0.0 };
+    }
+    match spec.site {
+        FaultSite::Output { row, col } => {
+            let (row, col) = (row.min(rows - 1), col.min(n - 1));
+            let flip = BitFlip::new(spec.bit, grid);
+            let old = tgt.get(row, col);
+            let (new, _) = flip.apply(old);
+            tgt.set(row, col, new);
+            FaultOutcome { old, new }
+        }
+        FaultSite::ChecksumR1 { row } => {
+            // Checksum entries live in the encoded columns beyond the N
+            // data columns: c^{r1} at column N (c^{r2} at N+1).
+            let row = row.min(rows - 1);
+            let flip = BitFlip::new(spec.bit, grid);
+            let old = tgt.get(row, n);
+            let (new, _) = flip.apply(old);
+            tgt.set(row, n, new);
+            FaultOutcome { old, new }
+        }
+        FaultSite::OperandA { row, k, col } => {
+            let (row, k, col) = (row.min(rows - 1), k.min(depth - 1), col.min(n - 1));
+            let flip = BitFlip::new(spec.bit, input);
+            let old = a.get(row, k);
+            let (new, _) = flip.apply(old);
+            let v = tgt.get(row, col);
+            tgt.set(row, col, grid.quantize(v + (new - old) * b.get(k, col)));
+            FaultOutcome { old, new }
+        }
+        FaultSite::OperandB { k, col } => {
+            let (k, col) = (k.min(depth - 1), col.min(n - 1));
+            let flip = BitFlip::new(spec.bit, input);
+            let old = b.get(k, col);
+            let (new, _) = flip.apply(old);
+            let delta = new - old;
+            for i in 0..rows {
+                let v = tgt.get(i, col);
+                tgt.set(i, col, grid.quantize(v + a.get(i, k) * delta));
+            }
+            FaultOutcome { old, new }
+        }
+    }
 }
 
 /// Where the upset strikes.
@@ -488,6 +719,88 @@ mod tests {
                 assert_eq!(br.detected_0to1, br.trials_0to1, "bit {} (OutputC)", br.bit);
             }
         }
+    }
+
+    #[test]
+    fn apply_fault_site_semantics() {
+        // 2×3 product of ones-operands, encoded width 3 data + 2 checksum
+        // columns; acc == c (identity grids) keeps the arithmetic obvious.
+        let a = Matrix::from_fn(2, 4, |_, _| 1.0);
+        let b = Matrix::from_fn(4, 3, |_, _| 1.0);
+        let enc = Matrix::from_fn(2, 5, |_, j| if j < 3 { 4.0 } else { 12.0 });
+        let mut out = GemmOutput { c: enc.clone(), acc: enc.clone() };
+
+        // Output flip: exactly one acc element changes (sign bit: 4 → −4).
+        let o = apply_fault(
+            &FaultSpec::output(1, 2, 63),
+            true,
+            Precision::F64,
+            Precision::F64,
+            &a,
+            &b,
+            &mut out,
+        );
+        assert_eq!((o.old, o.new), (4.0, -4.0));
+        assert_eq!(out.acc.get(1, 2), -4.0);
+        assert_eq!(out.acc.get(0, 2), 4.0);
+        assert_eq!(out.c.get(1, 2), 4.0, "offline matrix untouched by online flip");
+
+        // Checksum flip lands in column N, not the data columns.
+        let mut out = GemmOutput { c: enc.clone(), acc: enc.clone() };
+        let o = apply_fault(
+            &FaultSpec::checksum(0, 63),
+            true,
+            Precision::F64,
+            Precision::F64,
+            &a,
+            &b,
+            &mut out,
+        );
+        assert_eq!((o.old, o.new), (12.0, -12.0));
+        assert_eq!(out.acc.get(0, 3), -12.0);
+        assert!((0..3).all(|j| out.acc.get(0, j) == 4.0));
+
+        // OperandA (transient): one element perturbed by δ_a · b_kj = −2·1.
+        let mut out = GemmOutput { c: enc.clone(), acc: enc.clone() };
+        let o = apply_fault(
+            &FaultSpec::operand_a(0, 1, 1, 63),
+            true,
+            Precision::F64,
+            Precision::F64,
+            &a,
+            &b,
+            &mut out,
+        );
+        assert_eq!(o.delta(), -2.0);
+        assert_eq!(out.acc.get(0, 1), 2.0);
+        assert_eq!(out.acc.get(0, 0), 4.0);
+
+        // OperandB (persistent): every row of the struck column perturbed
+        // by a_ik · δ_b = 1·(−2).
+        let mut out = GemmOutput { c: enc.clone(), acc: enc };
+        let o = apply_fault(
+            &FaultSpec::operand_b(2, 1, 63),
+            true,
+            Precision::F64,
+            Precision::F64,
+            &a,
+            &b,
+            &mut out,
+        );
+        assert_eq!(o.delta(), -2.0);
+        assert_eq!(out.acc.get(0, 1), 2.0);
+        assert_eq!(out.acc.get(1, 1), 2.0);
+        assert_eq!(out.acc.get(0, 0), 4.0);
+    }
+
+    #[test]
+    fn fault_site_classes() {
+        assert_eq!(FaultSpec::output(0, 0, 1).site.class(), SiteClass::Output);
+        assert_eq!(FaultSpec::operand_a(0, 0, 0, 1).site.class(), SiteClass::OperandA);
+        assert_eq!(FaultSpec::operand_b(0, 0, 1).site.class(), SiteClass::OperandB);
+        assert_eq!(FaultSpec::checksum(0, 1).site.class(), SiteClass::Checksum);
+        assert_eq!(SiteClass::ALL.len(), 4);
+        assert_eq!(SiteClass::Checksum.name(), "checksum");
     }
 
     #[test]

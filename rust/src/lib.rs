@@ -62,6 +62,14 @@
 //! also carry the handle directly. See `docs/ARCHITECTURE.md` and
 //! `docs/PERFORMANCE.md` at the repository root.
 //!
+//! ## Detection-quality at scale
+//!
+//! The [`campaign`] module sweeps the full precision × bit-position ×
+//! injection-site × strategy × distribution × shape space as one seeded,
+//! coordinator-batched workload, emitting `BENCH_campaign.json` —
+//! byte-reproducible at any thread count, so CI pins exact expected
+//! detection counts (`vabft campaign --quick`; see `docs/CAMPAIGN.md`).
+//!
 //! See `examples/` for fault-injection campaigns, e_max calibration, a
 //! serving-style coordinator and the end-to-end training supervisor.
 
@@ -69,6 +77,7 @@
 
 pub mod bench_harness;
 pub mod calibrate;
+pub mod campaign;
 pub mod cli;
 pub mod coordinator;
 pub mod error;
@@ -113,9 +122,13 @@ pub mod prelude {
         PreparedWeights, Verdict, VerifyPolicy, VerifyReport,
     };
     pub use crate::calibrate::{CalibrationProtocol, EmaxModel, EmaxTable, Platform};
+    pub use crate::campaign::{BitClass, CellSpec, GridConfig, VerifyPoint};
     pub use crate::fp::{dd::Dd, Precision};
     pub use crate::gemm::{AccumModel, GemmEngine, MicroConfig, ParallelismConfig, TileConfig};
-    pub use crate::inject::{BitFlip, Campaign, CampaignConfig, FlipDirection, InjectionSite};
+    pub use crate::inject::{
+        BitFlip, Campaign, CampaignConfig, FaultOutcome, FaultSite, FaultSpec, FlipDirection,
+        InjectionSite, SiteClass,
+    };
     pub use crate::matrix::{Matrix, RowStats};
     pub use crate::rng::{Distribution, Rng, SplitMix64, Xoshiro256pp};
     pub use crate::threshold::{

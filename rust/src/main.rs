@@ -3,7 +3,13 @@
 //!
 //! ```text
 //! vabft calibrate  [--platform cpu|gpu|npu] [--precision fp32] [--trials N] [--online]
-//! vabft campaign   [--precision bf16] [--dist n11|nz|u|u01|trunc] [--trials N] [--online]
+//! vabft campaign   [--quick|--full|--smoke] [--seed S] [--workers W] [--json FILE]
+//!                  # deterministic campaign grid: precision x strategy x dist x
+//!                  # site x bit x verify point; writes BENCH_campaign.json and
+//!                  # exits non-zero if a detection-quality gate fails
+//! vabft campaign --table8
+//!                  [--precision bf16] [--dist n11|nz|u|u01|trunc] [--trials N] [--offline]
+//!                  # legacy single-configuration Table 8 bit ladder
 //! vabft tightness  [--precision fp32] [--sizes 128,256,512] [--trials N]
 //! vabft gemm       [--m 512 --k 512 --n 512] [--strategy seq|fma|pairwise]
 //!                  [--threads T] [--mc M --kc K --nc N] [--mr R --nr C] [--reps R]
@@ -121,7 +127,93 @@ fn cmd_calibrate(args: &Args) {
     );
 }
 
+/// The deterministic campaign grid engine (default), or the legacy
+/// Table 8 bit-ladder with `--table8`.
+///
+/// Grid mode sweeps precision × strategy × distribution × injection site
+/// × bit class × verification point from one seed, executes every trial
+/// through the coordinator, prints the paper-shaped tables and writes
+/// `BENCH_campaign.json`. Exits non-zero when a detection-quality gate
+/// fails (above-threshold recall < 1.0 or any clean false positive) —
+/// the CI contract.
 fn cmd_campaign(args: &Args) {
+    if args.flag("table8") {
+        return cmd_campaign_table8(args);
+    }
+    use vabft::campaign::{self, GridConfig};
+
+    let seed = args.opt_or("seed", 0xCA4Au64);
+    let cfg = if args.flag("full") {
+        GridConfig::full(seed)
+    } else if args.flag("smoke") {
+        GridConfig::smoke(seed)
+    } else {
+        GridConfig::quick(seed)
+    };
+    let workers = args.opt_or("workers", 4usize);
+    println!(
+        "campaign grid: mode={} seed=0x{seed:x} workers={workers} \
+         ({} precisions x {} strategies x {} dists x {} sites x {} bits)",
+        cfg.mode,
+        cfg.precisions.len(),
+        cfg.strategies.len(),
+        cfg.dists.len(),
+        cfg.sites.len(),
+        cfg.bit_classes.len(),
+    );
+    let t0 = std::time::Instant::now();
+    let outcome = campaign::run(&cfg, workers);
+    let elapsed = t0.elapsed();
+    for t in campaign::render_tables(&outcome) {
+        t.print();
+    }
+    println!("coordinator groups:");
+    for line in &outcome.group_metrics {
+        println!("  {line}");
+    }
+    println!();
+    let doc = campaign::to_doc(&outcome);
+    // An explicit --json FILE wins over the env fallback; without it the
+    // document lands at the repo root (or $VABFT_CAMPAIGN_JSON).
+    let (filename, written) = match args.opt("json") {
+        Some(f) => (f, doc.write_to(f)),
+        None => ("BENCH_campaign.json", doc.write("BENCH_campaign.json", "VABFT_CAMPAIGN_JSON")),
+    };
+    match written {
+        Ok(path) => println!(
+            "wrote {} ({} cells, {} trials) in {:.1}s",
+            path.display(),
+            outcome.cells.len(),
+            outcome.total_trials(),
+            elapsed.as_secs_f64()
+        ),
+        Err(e) => {
+            eprintln!("failed to write {filename}: {e}");
+            std::process::exit(1);
+        }
+    }
+    if !outcome.gates_hold() {
+        eprintln!(
+            "campaign gate FAILED: recall {}/{} above-threshold, {} false positives \
+             over {} clean rows",
+            outcome.total_detected_above(),
+            outcome.total_above(),
+            outcome.total_false_positives(),
+            outcome.total_clean_rows(),
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "gates OK: {}/{} above-threshold faults detected (recall 1.0), \
+         0/{} clean rows false-positive",
+        outcome.total_detected_above(),
+        outcome.total_above(),
+        outcome.total_clean_rows(),
+    );
+}
+
+/// Legacy single-configuration detection-rate ladder (paper Table 8).
+fn cmd_campaign_table8(args: &Args) {
     let precision = parse_precision(args, Precision::Bf16);
     let dist = parse_dist(args);
     let trials = args.opt_or("trials", 512usize);

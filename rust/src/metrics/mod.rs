@@ -116,6 +116,11 @@ pub struct ServiceMetrics {
     pub faults_corrected: Counter,
     /// Rows recomputed via the escalation path.
     pub rows_recomputed: Counter,
+    /// Campaign grid cells fully executed through this coordinator (the
+    /// campaign engine's progress signal).
+    pub campaign_cells: Counter,
+    /// Campaign injection trials executed through this coordinator.
+    pub campaign_trials: Counter,
     /// Submission-to-completion latency distribution.
     pub latency: Histogram,
 }
@@ -129,13 +134,16 @@ impl ServiceMetrics {
     /// One-line human-readable summary of every counter.
     pub fn summary(&self) -> String {
         format!(
-            "jobs={}/{} batches={} detected={} corrected={} recomputed_rows={} mean={:?} p95={:?}",
+            "jobs={}/{} batches={} detected={} corrected={} recomputed_rows={} \
+             campaign_cells={} campaign_trials={} mean={:?} p95={:?}",
             self.jobs_completed.get(),
             self.jobs_submitted.get(),
             self.batches_submitted.get(),
             self.faults_detected.get(),
             self.faults_corrected.get(),
             self.rows_recomputed.get(),
+            self.campaign_cells.get(),
+            self.campaign_trials.get(),
             self.latency.mean(),
             self.latency.quantile(0.95),
         )

@@ -1,0 +1,131 @@
+//! End-to-end campaign-engine regression: seeded determinism across
+//! thread counts, the pinned CI smoke cell, and the quick-grid
+//! detection-quality gates.
+//!
+//! The pinned expectations here are *theorems* of the engine, not
+//! empirically frozen numbers: an exponent-MSB flip on the fused FP32
+//! grid changes the struck value by ≥ 2 in magnitude (scale 2^±128, or
+//! Inf/NaN), which exceeds any small-shape V-ABFT threshold by orders of
+//! magnitude, so every such trial must be classified above-threshold and
+//! detected. If one of these assertions ever fires, the detection
+//! pipeline — not the test — regressed.
+
+use vabft::bench_harness::{validate_schema, CAMPAIGN_SCHEMA};
+use vabft::campaign::{self, plan, BitClass, GridConfig, VerifyPoint};
+use vabft::prelude::*;
+
+const SMOKE_SEED: u64 = 0xD5EED;
+
+#[test]
+fn quick_grid_plans_at_least_200_cells() {
+    let cells = plan(&GridConfig::quick(1));
+    assert!(cells.len() >= 200, "quick grid too small: {}", cells.len());
+    for p in [Precision::Bf16, Precision::F16, Precision::F32, Precision::F64] {
+        assert!(cells.iter().any(|c| c.precision == p), "missing precision {p}");
+    }
+    for site in SiteClass::ALL {
+        assert!(cells.iter().any(|c| c.site == site), "missing site {site:?}");
+    }
+    assert!(cells.iter().any(|c| c.verify == VerifyPoint::Offline));
+}
+
+/// Same seed ⇒ byte-identical `BENCH_campaign.json` at thread counts
+/// 1/2/4 — the campaign's reproducibility contract (the JSON contains no
+/// timing and no worker count; every trial's arithmetic is
+/// schedule-preserving).
+#[test]
+fn campaign_json_is_byte_identical_across_thread_counts() {
+    let cfg = GridConfig::smoke(SMOKE_SEED);
+    let reference = campaign::to_doc(&campaign::run(&cfg, 1)).to_json();
+    assert!(validate_schema(&reference, CAMPAIGN_SCHEMA).is_ok());
+    for workers in [2usize, 4] {
+        let json = campaign::to_doc(&campaign::run(&cfg, workers)).to_json();
+        assert_eq!(reference, json, "campaign JSON diverged at {workers} workers");
+    }
+}
+
+/// The push-gated CI smoke cell: BF16 × FMA × fused × output-site ×
+/// exponent-MSB, with pinned expected detections (see module docs for
+/// why the counts are provable).
+#[test]
+fn smoke_cell_pins_expected_detections() {
+    let cfg = GridConfig::smoke(SMOKE_SEED);
+    let outcome = campaign::run(&cfg, 2);
+    assert!(outcome.gates_hold(), "smoke gates failed");
+
+    let cell = outcome
+        .cells
+        .iter()
+        .find(|c| {
+            c.spec.precision == Precision::Bf16
+                && c.spec.site == SiteClass::Output
+                && c.spec.bit_class == BitClass::ExpMsb
+                && c.spec.verify == VerifyPoint::Fused
+        })
+        .expect("smoke grid lost its pinned cell");
+    assert_eq!(cell.bit, 30, "fused BF16 flips address the FP32 work grid");
+    assert_eq!(cell.trials, 4);
+    assert_eq!(cell.above, 4, "every exp-MSB flip must classify above-threshold");
+    assert_eq!(cell.detected, 4, "pinned expected detections");
+    assert_eq!(cell.detected_above, 4);
+    assert_eq!(cell.false_positives, 0);
+    // Zero FP per row implies the worst clean noise sat under the
+    // loosest issued threshold.
+    assert!(cell.clean_noise <= cell.threshold_max, "noise above the threshold ceiling");
+
+    // Checksum-site trials are reported as their own class — present in
+    // the grid and never silently folded into data-fault misses.
+    let checksum_cells: Vec<_> =
+        outcome.cells.iter().filter(|c| c.spec.site == SiteClass::Checksum).collect();
+    assert!(!checksum_cells.is_empty());
+    for c in &checksum_cells {
+        assert_eq!(
+            c.detected_above, c.above,
+            "checksum-site recall gate failed for cell {}",
+            c.spec.index
+        );
+    }
+}
+
+/// The full quick grid upholds the paper's headline claims: recall 1.0
+/// over the above-threshold population and zero false positives across
+/// BF16/FP16/FP32/FP64 — the same gate `vabft campaign --quick` enforces
+/// in CI.
+#[test]
+fn quick_grid_gates_hold() {
+    let outcome = campaign::run(&GridConfig::quick(0xCA4A), 4);
+    assert!(outcome.cells.len() >= 200);
+    assert_eq!(
+        outcome.total_false_positives(),
+        0,
+        "false positives over {} clean rows",
+        outcome.total_clean_rows()
+    );
+    assert_eq!(
+        outcome.total_detected_above(),
+        outcome.total_above(),
+        "recall {} over {} above-threshold trials",
+        outcome.recall_above(),
+        outcome.total_above()
+    );
+    // The grid must actually exercise the gate, with room to spare.
+    assert!(
+        outcome.total_above() >= 100,
+        "campaign too weak: only {} above-threshold faults",
+        outcome.total_above()
+    );
+    // Every *fused* exp-MSB output cell is fully detected — the theorem
+    // class: a fused-grid exponent-MSB flip changes the struck value by
+    // ≥ 2 (or to Inf/NaN), orders of magnitude above any fused
+    // threshold at these shapes. (Offline cells verify against coarse
+    // quantized-output thresholds, where sub-margin flips may
+    // legitimately sail under — those are gated by the margin rule
+    // only.)
+    for c in outcome.cells.iter().filter(|c| {
+        c.spec.site == SiteClass::Output
+            && c.spec.bit_class == BitClass::ExpMsb
+            && c.spec.verify == VerifyPoint::Fused
+    }) {
+        assert_eq!(c.detected, c.trials, "exp-MSB misses in cell {}", c.spec.index);
+    }
+}

@@ -4,7 +4,6 @@
 use std::sync::Arc;
 
 use vabft::coordinator::{Coordinator, CoordinatorConfig, GemmRequest, InjectSpec};
-use vabft::inject::InjectionSite;
 use vabft::prelude::*;
 
 fn setup(workers: usize, online: bool) -> Coordinator {
@@ -42,10 +41,11 @@ fn mixed_traffic_all_faults_caught_no_false_alarms() {
         .map(|i| {
             let inject = if i % 5 == 0 {
                 faulty += 1;
-                Some(InjectSpec {
-                    site: InjectionSite { row: (i % 8) as usize, col: (i % 48) as usize },
-                    bit: 25, // f32 exponent bit (online grid)
-                })
+                Some(InjectSpec::output(
+                    (i % 8) as usize,
+                    (i % 48) as usize,
+                    25, // f32 exponent bit (online grid)
+                ))
             } else {
                 None
             };
@@ -87,7 +87,7 @@ fn repaired_outputs_match_clean_outputs() {
             .call(GemmRequest {
                 a: a.clone(),
                 weight: 9,
-                inject: Some(InjectSpec { site: InjectionSite { row: 4, col: 7 }, bit }),
+                inject: Some(InjectSpec::output(4, 7, bit)),
             })
             .result
             .unwrap();

@@ -13,7 +13,6 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use vabft::coordinator::{Coordinator, CoordinatorConfig, GemmRequest, InjectSpec};
-use vabft::inject::InjectionSite;
 use vabft::prelude::*;
 
 const WEIGHT_K: usize = 96;
@@ -68,10 +67,11 @@ fn concurrent_batched_submitters_route_and_count_exactly() {
                             let seed = ((tid * BATCHES_PER_THREAD + batch) * BATCH + i) as u64;
                             let inject = if is_faulty(i) {
                                 injected_total.fetch_add(1, Ordering::Relaxed);
-                                Some(InjectSpec {
-                                    site: InjectionSite { row: i % 8, col: (5 * i) % WEIGHT_N },
-                                    bit: 25, // f32 exponent bit (online grid)
-                                })
+                                Some(InjectSpec::output(
+                                    i % 8,
+                                    (5 * i) % WEIGHT_N,
+                                    25, // f32 exponent bit (online grid)
+                                ))
                             } else {
                                 None
                             };

@@ -9,7 +9,6 @@ use std::sync::Arc;
 use vabft::coordinator::{
     Coordinator, CoordinatorConfig, GemmRequest, InjectSpec, PreparedGemmRequest,
 };
-use vabft::inject::InjectionSite;
 use vabft::prelude::*;
 
 const K: usize = 96;
@@ -91,7 +90,7 @@ fn detection_after_reregistration_uses_new_weights() {
         .call(GemmRequest {
             a,
             weight: 1,
-            inject: Some(InjectSpec { site: InjectionSite { row: 2, col: 5 }, bit: 25 }),
+            inject: Some(InjectSpec::output(2, 5, 25)),
         })
         .result
         .unwrap();
@@ -165,7 +164,7 @@ fn blockwise_prepared_coordinator_serves_and_invalidates() {
         .call(GemmRequest {
             a,
             weight: 5,
-            inject: Some(InjectSpec { site: InjectionSite { row: 1, col: 3 }, bit: 26 }),
+            inject: Some(InjectSpec::output(1, 3, 26)),
         })
         .result
         .unwrap();
