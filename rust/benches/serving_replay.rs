@@ -1,0 +1,157 @@
+//! Sharded serving-replay throughput bench.
+//!
+//! Replays the LLaMA-7B layer trace (published shapes, scaled) through
+//! the coordinator at a ladder of shard configurations and records the
+//! trajectory to `BENCH_serving.json` (`vabft-serving/v1`).
+//!
+//! Two gates, one per mode:
+//!
+//! * **always** — the output fingerprint must be identical across every
+//!   rung (sharding / partitioning / stealing are pure scheduling); the
+//!   bench exits non-zero on divergence, so even the quick run is a
+//!   correctness gate, never a timing assertion;
+//! * **full only** — shards=4 must reach ≥ 1.5× the shards=1 request
+//!   throughput on the LLaMA-7B trace at concurrency ≥ 8 (the scaling
+//!   claim of the serving tier; skipped on loaded quick runs).
+
+use vabft::bench_harness::{validate_schema, BenchMode, SERVING_SCHEMA};
+use vabft::coordinator::{CoordinatorConfig, PartitionPolicy};
+use vabft::gemm::{AccumModel, ParallelismConfig};
+use vabft::prelude::Precision;
+use vabft::report::Table;
+use vabft::workload::{run_replay, replay_doc, ReplayConfig, ReplayReport, ReplayRow};
+
+struct Rung {
+    shards: usize,
+    partition: PartitionPolicy,
+    steal: bool,
+}
+
+fn main() {
+    let mode = BenchMode::from_env();
+    mode.banner("serving_replay");
+
+    let seed = 0x5E12u64;
+    let cfg = ReplayConfig {
+        family: "llama-7b".to_string(),
+        scale: mode.pick(16, 4),
+        layers: mode.pick(1, 2),
+        batch: mode.pick(8, 16),
+        passes: mode.pick(2, 4),
+        concurrency: 8,
+        seed,
+    };
+    let rungs = if mode.is_full() {
+        vec![
+            Rung { shards: 1, partition: PartitionPolicy::Contiguous, steal: false },
+            Rung { shards: 2, partition: PartitionPolicy::Contiguous, steal: true },
+            Rung { shards: 2, partition: PartitionPolicy::Interleaved, steal: true },
+            Rung { shards: 4, partition: PartitionPolicy::Contiguous, steal: true },
+        ]
+    } else {
+        vec![
+            Rung { shards: 1, partition: PartitionPolicy::Contiguous, steal: false },
+            Rung { shards: 2, partition: PartitionPolicy::Contiguous, steal: true },
+            Rung { shards: 2, partition: PartitionPolicy::Interleaved, steal: false },
+        ]
+    };
+    let workers = 1usize; // per shard: the ladder scales worker count via shards
+    let reps = mode.pick(1, 2);
+
+    println!(
+        "replaying {} (scale 1/{}, {} layers, batch {}, {} passes, concurrency {})\n",
+        cfg.family, cfg.scale, cfg.layers, cfg.batch, cfg.passes, cfg.concurrency
+    );
+
+    let mut rows: Vec<ReplayRow> = Vec::new();
+    let mut t = Table::new(
+        "Serving replay — LLaMA-7B trace",
+        &["shards", "partition", "steal", "req/s", "GFLOP/s", "stolen", "speedup", "fp=="],
+    );
+    for r in &rungs {
+        let run_once = || {
+            run_replay(
+                &cfg,
+                CoordinatorConfig {
+                    workers,
+                    queue_depth: (2 * cfg.concurrency).max(16),
+                    model: AccumModel::wide(Precision::Bf16),
+                    parallelism: ParallelismConfig::serial(),
+                    shards: r.shards,
+                    partition: r.partition,
+                    steal: r.steal,
+                    ..Default::default()
+                },
+            )
+        };
+        // Best-of-reps on throughput; the fingerprint must not vary
+        // between repetitions at all.
+        let mut best: Option<ReplayReport> = None;
+        for _ in 0..reps {
+            let rep = run_once();
+            if let Some(b) = &best {
+                assert_eq!(b.fingerprint, rep.fingerprint, "replay not reproducible");
+            }
+            if best.as_ref().map(|b| rep.rps() > b.rps()).unwrap_or(true) {
+                best = Some(rep);
+            }
+        }
+        let report = best.unwrap();
+        assert_eq!(report.faulty, 0, "clean replay produced non-clean verdicts");
+        let row = ReplayRow::ladder(
+            report,
+            rows.first(),
+            r.partition.name(),
+            r.steal,
+            workers,
+            cfg.concurrency,
+        );
+        t.row(vec![
+            r.shards.to_string(),
+            r.partition.name().to_string(),
+            r.steal.to_string(),
+            format!("{:.1}", row.report.rps()),
+            format!("{:.2}", row.report.gflops()),
+            row.report.stolen.to_string(),
+            format!("{:.2}x", row.speedup_vs_baseline),
+            if row.fingerprint_equal { "yes".into() } else { "DIVERGED".into() },
+        ]);
+        rows.push(row);
+    }
+    t.print();
+
+    let doc = replay_doc(&rows, if mode.is_full() { "full" } else { "quick" });
+    let json = doc.to_json();
+    validate_schema(&json, SERVING_SCHEMA).expect("serving schema must validate");
+    match doc.write("BENCH_serving.json", "VABFT_SERVING_JSON") {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => {
+            eprintln!("failed to write BENCH_serving.json: {e}");
+            std::process::exit(1);
+        }
+    }
+
+    assert!(
+        rows.iter().all(|r| r.fingerprint_equal),
+        "output fingerprint diverged across shard configurations"
+    );
+    println!(
+        "\nfingerprint identical across {} configurations — sharding is pure scheduling",
+        rows.len()
+    );
+
+    if mode.is_full() {
+        let base = rows[0].report.rps();
+        let four = rows
+            .iter()
+            .find(|r| r.report.shards == 4)
+            .expect("full ladder includes shards=4")
+            .report
+            .rps();
+        assert!(
+            four >= 1.5 * base,
+            "shards=4 must reach ≥1.5x shards=1 throughput: {four:.1} vs {base:.1} req/s"
+        );
+        println!("scaling gate OK: shards=4 at {:.2}x shards=1", four / base);
+    }
+}

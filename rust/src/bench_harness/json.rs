@@ -29,6 +29,10 @@ pub const BENCH_SCHEMA: &str = "vabft-bench/v1";
 /// (`BENCH_campaign.json`).
 pub const CAMPAIGN_SCHEMA: &str = "vabft-campaign/v1";
 
+/// Schema tag of the serving-replay throughput documents
+/// (`BENCH_serving.json`).
+pub const SERVING_SCHEMA: &str = "vabft-serving/v1";
+
 fn esc(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }

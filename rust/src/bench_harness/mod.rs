@@ -10,6 +10,7 @@
 pub mod json;
 pub use json::{
     validate_schema, BenchRecord, BenchRecords, JsonDoc, JsonValue, BENCH_SCHEMA, CAMPAIGN_SCHEMA,
+    SERVING_SCHEMA,
 };
 
 use std::time::{Duration, Instant};

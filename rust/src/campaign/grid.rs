@@ -253,11 +253,11 @@ impl CellSpec {
     /// amortize checksum encoding across the weight-stationary trials.
     pub fn operand_stream(&self) -> u64 {
         let (m, k, n) = self.shape;
-        let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a offset basis
         let label = self.dist.label();
-        for b in self.model().input.name().bytes().chain(label.bytes()) {
-            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
-        }
+        let h = crate::rng::fnv1a(
+            crate::rng::FNV1A_OFFSET,
+            self.model().input.name().bytes().chain(label.bytes()),
+        );
         h ^ ((m as u64) << 42) ^ ((k as u64) << 21) ^ n as u64
     }
 

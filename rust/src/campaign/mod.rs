@@ -36,4 +36,4 @@ pub mod runner;
 
 pub use grid::{model_for, plan, BitClass, CellSpec, GridConfig, VerifyPoint};
 pub use report::{render_tables, to_doc};
-pub use runner::{run, CampaignOutcome, CellResult};
+pub use runner::{run, run_sharded, CampaignOutcome, CellResult};

@@ -240,6 +240,16 @@ struct PendingCell {
 /// Execute a campaign grid with `workers` coordinator worker threads per
 /// group. See the module docs for the determinism contract.
 pub fn run(cfg: &GridConfig, workers: usize) -> CampaignOutcome {
+    run_sharded(cfg, workers, 1)
+}
+
+/// [`run`] with an explicit coordinator shard count (`workers` workers
+/// *per shard*). The determinism contract extends verbatim: shard
+/// routing and cross-shard scheduling never touch a trial's arithmetic
+/// or the collection order, so the same `(config, seed)` produces
+/// byte-identical JSON at any `(workers, shards)` —
+/// `tests/campaign_engine.rs` pins both axes.
+pub fn run_sharded(cfg: &GridConfig, workers: usize, shards: usize) -> CampaignOutcome {
     let cells = plan(cfg);
     let mut results: Vec<Option<CellResult>> = cells.iter().map(|_| None).collect();
     let mut clean_rows_total = 0usize;
@@ -268,6 +278,7 @@ pub fn run(cfg: &GridConfig, workers: usize) -> CampaignOutcome {
             queue_depth: 256,
             model,
             policy,
+            shards: shards.max(1),
             ..Default::default()
         });
 

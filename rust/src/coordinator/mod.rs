@@ -20,9 +20,23 @@
 //!
 //! Built on std threads + channels (the offline registry has no tokio; a
 //! CPU-bound verification pipeline wants a thread pool, not an async
-//! reactor). Backpressure comes from the bounded submission channel.
+//! reactor). Backpressure comes from the bounded per-shard submission
+//! channels.
+//!
+//! ## Sharding
+//!
+//! The service runs as `CoordinatorConfig::shards` independent
+//! queue + worker-pool units, planned onto the machine's NUMA topology
+//! by [`partition::ShardPlan`] (groups detected from `/sys`, with a
+//! deterministic fallback). Requests route round-robin by submission id;
+//! `CoordinatorConfig::steal` lets idle shards drain backlogged
+//! neighbours (whole requests only). Sharding, the partition policy and
+//! stealing are pure scheduling — outputs, verdicts and thresholds are
+//! bitwise-invariant across all of them (`tests/shard_equivalence.rs`).
 
+pub mod partition;
 mod service;
+pub use partition::{PartitionPolicy, ShardPlan, ShardSpec, TopologyConfig, TopologyGroup};
 pub use service::{
     Coordinator, CoordinatorConfig, GemmRequest, GemmResponse, InjectSpec, PreparedGemmRequest,
     WeightHandle, WeightId,

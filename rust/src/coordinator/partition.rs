@@ -1,0 +1,353 @@
+//! NUMA-aware shard planning: topology detection, partition policies and
+//! the shard → topology-group assignment feeding the sharded
+//! [`crate::coordinator::Coordinator`].
+//!
+//! The serving tier splits its worker pool into shards, each pinned to
+//! one *topology group* (a NUMA node's CPU set, detected from
+//! `/sys/devices/system/node`, or a deterministic single-group fallback
+//! when the hierarchy is absent — containers, non-Linux, tests). A
+//! [`PartitionPolicy`] decides two things at once:
+//!
+//! * **which group each shard lands on** — `Contiguous` fills groups in
+//!   order (shard-local traffic stays on one memory node), `Interleaved`
+//!   deals shards round-robin across groups (balances bandwidth for
+//!   skewed shape mixes);
+//! * **how each shard's engine splits GEMM rows across its intra-op
+//!   threads** — the policy maps onto [`RowSplit`] and is threaded into
+//!   every worker's [`ParallelismConfig`], so the row-parallel split in
+//!   [`crate::gemm::tiled`] matches the page-placement story above it.
+//!
+//! None of this can change results: the engine's schedule-preservation
+//! invariant covers every `ParallelismConfig`, and shard assignment only
+//! decides *where* a request executes. `tests/shard_equivalence.rs` pins
+//! bitwise equality across shard counts × policies × stealing.
+//!
+//! The crate is dependency-free, so "pinning" is capacity-shaped rather
+//! than `sched_setaffinity`-enforced: a shard sized to its group's CPU
+//! count never oversubscribes the node, and the OS scheduler keeps
+//! cache-warm threads where they ran. True affinity syscalls would need
+//! libc and are deliberately out of scope.
+
+use std::path::Path;
+
+use crate::gemm::{ParallelismConfig, RowSplit};
+
+/// How shards map onto topology groups and how each shard's engine deals
+/// rows to its intra-op threads. Schedule-neutral by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PartitionPolicy {
+    /// Fill topology groups in order; engines use contiguous row panels.
+    #[default]
+    Contiguous,
+    /// Deal shards round-robin across groups; engines use interleaved
+    /// row blocks.
+    Interleaved,
+}
+
+impl PartitionPolicy {
+    /// Short lowercase name used in CLIs and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            PartitionPolicy::Contiguous => "contiguous",
+            PartitionPolicy::Interleaved => "interleaved",
+        }
+    }
+
+    /// Parse a CLI value (`contiguous` | `interleaved`).
+    pub fn parse(s: &str) -> Option<PartitionPolicy> {
+        match s {
+            "contiguous" => Some(PartitionPolicy::Contiguous),
+            "interleaved" => Some(PartitionPolicy::Interleaved),
+            _ => None,
+        }
+    }
+
+    /// The engine row-split this policy implies for shard workers.
+    pub fn row_split(self) -> RowSplit {
+        match self {
+            PartitionPolicy::Contiguous => RowSplit::Contiguous,
+            PartitionPolicy::Interleaved => RowSplit::Interleaved,
+        }
+    }
+}
+
+/// One topology group: a NUMA node id and the CPUs it owns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TopologyGroup {
+    /// Node id (the `N` of `/sys/devices/system/node/nodeN`).
+    pub id: usize,
+    /// CPU ids local to the node, ascending.
+    pub cpus: Vec<usize>,
+}
+
+/// The machine's memory topology as the coordinator sees it: one or more
+/// CPU groups, each a NUMA node (or the whole machine in the fallback).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TopologyConfig {
+    /// Topology groups, ascending by node id; never empty.
+    pub groups: Vec<TopologyGroup>,
+}
+
+impl TopologyConfig {
+    /// Detect from `/sys/devices/system/node`, falling back to
+    /// [`TopologyConfig::fallback`] when the hierarchy is missing or
+    /// unparsable (containers without sysfs, non-Linux hosts).
+    pub fn detect() -> TopologyConfig {
+        Self::from_sys(Path::new("/sys/devices/system/node")).unwrap_or_else(Self::fallback)
+    }
+
+    /// Parse `nodeN/cpulist` files under `root` (testable detection
+    /// core). Returns `None` when no node directory with a readable,
+    /// non-empty cpulist exists.
+    pub fn from_sys(root: &Path) -> Option<TopologyConfig> {
+        let entries = std::fs::read_dir(root).ok()?;
+        let mut groups = Vec::new();
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            let Some(idx) = name.strip_prefix("node") else { continue };
+            let Ok(id) = idx.parse::<usize>() else { continue };
+            let Ok(list) = std::fs::read_to_string(e.path().join("cpulist")) else { continue };
+            let cpus = parse_cpulist(list.trim());
+            if !cpus.is_empty() {
+                groups.push(TopologyGroup { id, cpus });
+            }
+        }
+        if groups.is_empty() {
+            return None;
+        }
+        groups.sort_by_key(|g| g.id);
+        Some(TopologyConfig { groups })
+    }
+
+    /// Deterministic single-group fallback: one group holding every
+    /// hardware thread the runtime reports (at least one).
+    pub fn fallback() -> TopologyConfig {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::uniform(1, n)
+    }
+
+    /// Synthetic uniform topology (tests, reproducible planning):
+    /// `groups` groups of `cpus_per_group` consecutively numbered CPUs.
+    pub fn uniform(groups: usize, cpus_per_group: usize) -> TopologyConfig {
+        let (groups, per) = (groups.max(1), cpus_per_group.max(1));
+        TopologyConfig {
+            groups: (0..groups)
+                .map(|id| TopologyGroup {
+                    id,
+                    cpus: (id * per..(id + 1) * per).collect(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Total CPUs across all groups.
+    pub fn total_cpus(&self) -> usize {
+        self.groups.iter().map(|g| g.cpus.len()).sum()
+    }
+}
+
+/// Parse a kernel cpulist string (`"0-3,8,10-11"`) into ascending CPU
+/// ids. Malformed fragments are skipped (detection falls back rather
+/// than panicking on exotic sysfs content).
+pub fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once('-') {
+            None => {
+                if let Ok(v) = part.parse::<usize>() {
+                    out.push(v);
+                }
+            }
+            Some((lo, hi)) => {
+                if let (Ok(lo), Ok(hi)) = (lo.trim().parse::<usize>(), hi.trim().parse::<usize>())
+                {
+                    if lo <= hi && hi - lo < 4096 {
+                        out.extend(lo..=hi);
+                    }
+                }
+            }
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// One planned shard: its topology group and the engine configuration
+/// its workers run with.
+#[derive(Debug, Clone)]
+pub struct ShardSpec {
+    /// Shard index (0-based).
+    pub shard: usize,
+    /// Index into [`TopologyConfig::groups`] this shard is pinned to.
+    pub group: usize,
+    /// Worker threads this shard runs.
+    pub workers: usize,
+    /// Engine config for the shard's workers: the base config with the
+    /// policy's row split applied and intra-op threads clamped to the
+    /// group's CPU count (a shard never oversubscribes its node).
+    pub parallelism: ParallelismConfig,
+}
+
+/// The full shard layout for one coordinator.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// Per-shard assignments, ascending by shard index.
+    pub shards: Vec<ShardSpec>,
+    /// The topology the plan was computed against.
+    pub topology: TopologyConfig,
+}
+
+impl ShardPlan {
+    /// Plan `shards` shards of `workers_per_shard` workers over
+    /// `topology` under `policy`. `base` is the per-worker engine
+    /// config; each shard gets it with `threads` clamped to its group's
+    /// CPU count (only when the caller asked for intra-op parallelism —
+    /// `threads == 1` stays serial). The policy's
+    /// [`PartitionPolicy::row_split`] is applied only when `base` left
+    /// the split at its default ([`RowSplit::Contiguous`]): an explicit
+    /// `Interleaved` request (e.g. a `--split` flag) is preserved.
+    pub fn plan(
+        shards: usize,
+        workers_per_shard: usize,
+        base: ParallelismConfig,
+        policy: PartitionPolicy,
+        topology: TopologyConfig,
+    ) -> ShardPlan {
+        let shards = shards.max(1);
+        // A groupless topology (hand-built) degrades to the fallback
+        // rather than panicking the planner.
+        let topology =
+            if topology.groups.is_empty() { TopologyConfig::fallback() } else { topology };
+        let ngroups = topology.groups.len();
+        let specs = (0..shards)
+            .map(|s| {
+                let group = match policy {
+                    // Evenly fill groups in order: shard s of S covers the
+                    // same group band contiguous row splits cover.
+                    PartitionPolicy::Contiguous => s * ngroups / shards,
+                    PartitionPolicy::Interleaved => s % ngroups,
+                };
+                let cpus = topology.groups[group].cpus.len().max(1);
+                let mut parallelism = base;
+                if parallelism.split == RowSplit::Contiguous {
+                    parallelism = parallelism.split(policy.row_split());
+                }
+                if parallelism.threads > 1 {
+                    parallelism.threads = parallelism.threads.min(cpus);
+                }
+                ShardSpec { shard: s, group, workers: workers_per_shard.max(1), parallelism }
+            })
+            .collect();
+        ShardPlan { shards: specs, topology }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_parsing() {
+        assert_eq!(parse_cpulist("0-3,8,10-11"), vec![0, 1, 2, 3, 8, 10, 11]);
+        assert_eq!(parse_cpulist("5"), vec![5]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("2-2"), vec![2]);
+        // malformed fragments are skipped, not fatal
+        assert_eq!(parse_cpulist("x,3-1,4"), vec![4]);
+        // duplicates collapse
+        assert_eq!(parse_cpulist("1,1,0-2"), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn fallback_is_deterministic_and_nonempty() {
+        let a = TopologyConfig::fallback();
+        let b = TopologyConfig::fallback();
+        assert_eq!(a, b);
+        assert_eq!(a.groups.len(), 1);
+        assert!(a.total_cpus() >= 1);
+    }
+
+    #[test]
+    fn detect_never_panics_and_never_returns_empty() {
+        let t = TopologyConfig::detect();
+        assert!(!t.groups.is_empty());
+        assert!(t.total_cpus() >= 1);
+        for g in &t.groups {
+            assert!(!g.cpus.is_empty());
+        }
+    }
+
+    #[test]
+    fn from_sys_reads_synthetic_tree() {
+        let root = std::env::temp_dir().join(format!("vabft-topo-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        for (node, list) in [(0usize, "0-3"), (1, "4-7")] {
+            let d = root.join(format!("node{node}"));
+            std::fs::create_dir_all(&d).unwrap();
+            std::fs::write(d.join("cpulist"), list).unwrap();
+        }
+        // A non-node entry must be ignored.
+        std::fs::create_dir_all(root.join("possible")).unwrap();
+        let t = TopologyConfig::from_sys(&root).expect("synthetic tree parses");
+        assert_eq!(t.groups.len(), 2);
+        assert_eq!(t.groups[0].cpus, vec![0, 1, 2, 3]);
+        assert_eq!(t.groups[1].cpus, vec![4, 5, 6, 7]);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn plan_policies_assign_groups_and_splits() {
+        let topo = TopologyConfig::uniform(2, 4);
+        let base = ParallelismConfig::with_threads(16);
+        let contig = ShardPlan::plan(4, 2, base, PartitionPolicy::Contiguous, topo.clone());
+        assert_eq!(
+            contig.shards.iter().map(|s| s.group).collect::<Vec<_>>(),
+            vec![0, 0, 1, 1]
+        );
+        let inter = ShardPlan::plan(4, 2, base, PartitionPolicy::Interleaved, topo);
+        assert_eq!(
+            inter.shards.iter().map(|s| s.group).collect::<Vec<_>>(),
+            vec![0, 1, 0, 1]
+        );
+        for s in contig.shards.iter().chain(&inter.shards) {
+            // intra-op threads clamped to the 4-CPU group
+            assert_eq!(s.parallelism.threads, 4);
+            assert_eq!(s.workers, 2);
+        }
+        assert_eq!(contig.shards[0].parallelism.split, RowSplit::Contiguous);
+        assert_eq!(inter.shards[0].parallelism.split, RowSplit::Interleaved);
+    }
+
+    #[test]
+    fn plan_preserves_an_explicit_row_split() {
+        // A caller-chosen Interleaved split must survive a Contiguous
+        // partition policy (the --split flag is not silently discarded).
+        let topo = TopologyConfig::uniform(1, 8);
+        let base = ParallelismConfig::with_threads(4).split(RowSplit::Interleaved);
+        let plan = ShardPlan::plan(2, 1, base, PartitionPolicy::Contiguous, topo);
+        for s in &plan.shards {
+            assert_eq!(s.parallelism.split, RowSplit::Interleaved);
+        }
+    }
+
+    #[test]
+    fn plan_keeps_serial_engines_serial() {
+        let topo = TopologyConfig::uniform(2, 8);
+        let plan = ShardPlan::plan(
+            2,
+            1,
+            ParallelismConfig::serial(),
+            PartitionPolicy::Interleaved,
+            topo,
+        );
+        for s in &plan.shards {
+            assert_eq!(s.parallelism.threads, 1, "serial stays serial");
+        }
+    }
+}

@@ -1,13 +1,32 @@
-//! The coordinator service implementation.
+//! The sharded coordinator service implementation.
+//!
+//! The service is split into *shards*: each shard owns a bounded job
+//! queue and a worker pool planned onto one topology group by
+//! [`ShardPlan`] (see [`crate::coordinator::partition`]). Requests are
+//! dealt round-robin across shards by submission id — deterministic
+//! routing, no load feedback — and an optional cross-shard work-stealing
+//! pass lets idle shards drain backlogged neighbours when the shape mix
+//! is skewed. Stealing moves **whole requests** (never rows of one
+//! GEMM), and every worker executes the same schedule-preserving
+//! pipeline, so the shard count, partition policy and steal setting are
+//! pure scheduling: outputs, verdicts and thresholds are bitwise
+//! invariant (`tests/shard_equivalence.rs`).
+//!
+//! Prepared weights live in one shared LRU (`WeightCache`) with a
+//! per-shard read-through cache in front: id lookups hit the shard-local
+//! map (one uncontended mutex per shard) and only fall through to the
+//! shared LRU on a miss or after any (re-)registration, which bumps a
+//! global generation and invalidates every shard cache at once.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::abft::{FtGemm, FtGemmOutput, PreparedWeights, Verdict, VerifyPolicy};
+use crate::coordinator::partition::{PartitionPolicy, ShardPlan, TopologyConfig};
 use crate::fp::Precision;
 use crate::gemm::{AccumModel, GemmEngine, GemmOutput, ParallelismConfig};
 use crate::inject::{apply_fault, FaultOutcome, FaultSpec};
@@ -74,9 +93,10 @@ pub struct GemmResponse {
 
 /// Coordinator configuration.
 pub struct CoordinatorConfig {
-    /// Worker threads executing protected multiplies.
+    /// Worker threads executing protected multiplies, **per shard**.
     pub workers: usize,
-    /// Bounded queue depth (backpressure: submit blocks when full).
+    /// Bounded queue depth per shard (backpressure: submit blocks when
+    /// the target shard's queue is full).
     pub queue_depth: usize,
     /// Accumulation model every worker's engine runs.
     pub model: AccumModel,
@@ -87,9 +107,11 @@ pub struct CoordinatorConfig {
     /// Per-worker GEMM engine execution config (tiles + intra-op threads).
     /// Results are identical for any value (schedule preservation); this
     /// only trades per-request latency against worker-level throughput —
-    /// keep `workers × parallelism.threads` ≤ the core count.
+    /// keep `shards × workers × parallelism.threads` ≤ the core count.
+    /// The shard plan applies the partition policy's row split and clamps
+    /// intra-op threads to each shard's topology group.
     pub parallelism: ParallelismConfig,
-    /// Capacity of the LRU cache of prepared weights, in entries.
+    /// Capacity of the shared LRU cache of prepared weights, in entries.
     /// Registering beyond it evicts the least-recently-used weight; id
     /// requests against an evicted weight error (handles stay valid).
     pub weight_capacity: usize,
@@ -97,6 +119,18 @@ pub struct CoordinatorConfig {
     /// `block_k = K`). Blockwise preparation gives per-block thresholds
     /// (tighter, paper §5.2) at the cost of one encoding per block.
     pub block_k: Option<usize>,
+    /// Number of shards (independent queue + worker-pool units). 1 =
+    /// the classic single-queue coordinator.
+    pub shards: usize,
+    /// How shards map onto topology groups and how each shard's engine
+    /// splits rows (see [`PartitionPolicy`]). Schedule-neutral.
+    pub partition: PartitionPolicy,
+    /// Enable cross-shard work stealing: idle workers opportunistically
+    /// drain other shards' queues (whole requests only).
+    pub steal: bool,
+    /// Topology to plan shards against; `None` detects from `/sys` with
+    /// a deterministic single-group fallback.
+    pub topology: Option<TopologyConfig>,
 }
 
 impl Default for CoordinatorConfig {
@@ -110,45 +144,57 @@ impl Default for CoordinatorConfig {
             parallelism: ParallelismConfig::serial(),
             weight_capacity: 1024,
             block_k: None,
+            shards: 1,
+            partition: PartitionPolicy::Contiguous,
+            steal: false,
+            topology: None,
         }
     }
 }
 
+/// An entry's recency stamp: an atomic tick shared between the LRU map
+/// and every shard cache holding the entry, so shard-local hits can
+/// refresh recency **lock-free** (two relaxed atomics) and eviction
+/// still tracks real use exactly.
+type Recency = Arc<AtomicU64>;
+
 /// LRU map of prepared weights keyed by [`WeightId`]. Insertions replace
-/// (invalidate) existing entries; lookups refresh recency; overflow evicts
-/// the least-recently-used entry.
-///
-/// Guarded by a `Mutex` (recency refresh mutates on lookup). The critical
-/// section is a map probe + `Arc` clone — nanoseconds against the
-/// µs-to-ms GEMM each request then runs; shard the cache or move to
-/// per-entry atomic ticks if worker counts ever make this contend.
+/// (invalidate) existing entries; lookups refresh recency; overflow
+/// evicts the entry with the oldest recency stamp — including stamps
+/// refreshed by shard-cache hits that never took this lock.
 struct WeightCache {
     cap: usize,
-    tick: u64,
-    map: HashMap<WeightId, (u64, WeightHandle)>,
+    map: HashMap<WeightId, (Recency, WeightHandle)>,
 }
 
 impl WeightCache {
     fn new(cap: usize) -> WeightCache {
-        WeightCache { cap: cap.max(1), tick: 0, map: HashMap::new() }
+        WeightCache { cap: cap.max(1), map: HashMap::new() }
     }
 
-    fn get(&mut self, id: WeightId) -> Option<WeightHandle> {
-        self.tick += 1;
-        let tick = self.tick;
-        self.map.get_mut(&id).map(|e| {
-            e.0 = tick;
-            Arc::clone(&e.1)
+    fn get(&mut self, id: WeightId, tick: u64) -> Option<(Recency, WeightHandle)> {
+        self.map.get(&id).map(|(r, h)| {
+            r.store(tick, Ordering::Relaxed);
+            (Arc::clone(r), Arc::clone(h))
         })
     }
 
-    fn insert(&mut self, id: WeightId, w: WeightHandle) {
-        self.tick += 1;
+    fn insert(&mut self, id: WeightId, w: WeightHandle, tick: u64) {
         // Replacement = invalidation: the old Arc is dropped here; jobs
         // dequeued after this point resolve to the new weights.
-        self.map.insert(id, (self.tick, w));
+        self.map.insert(id, (Arc::new(AtomicU64::new(tick)), w));
         if self.map.len() > self.cap {
-            let lru = self.map.iter().min_by_key(|&(_, &(t, _))| t).map(|(&k, _)| k);
+            // The just-inserted key is exempt from the overflow scan:
+            // its tick was taken before this lock, so a concurrent
+            // lock-free shard-cache hit could have stamped an older
+            // entry with a newer tick — without the exemption the scan
+            // could evict the registration it is serving.
+            let lru = self
+                .map
+                .iter()
+                .filter(|(&k, _)| k != id)
+                .min_by_key(|(_, (r, _))| r.load(Ordering::Relaxed))
+                .map(|(&k, _)| k);
             if let Some(lru) = lru {
                 self.map.remove(&lru);
             }
@@ -164,6 +210,82 @@ impl WeightCache {
     }
 }
 
+/// The shared weight store: one LRU behind a generation counter. Every
+/// insert bumps the generation (inside the cache lock), which invalidates
+/// every shard's read-through cache at once — registration is rare in
+/// serving, so coarse invalidation buys an uncontended steady-state.
+struct SharedWeights {
+    cache: Mutex<WeightCache>,
+    generation: AtomicU64,
+    /// Global recency clock; advanced lock-free by both read-throughs
+    /// and shard-cache hits.
+    tick: AtomicU64,
+}
+
+impl SharedWeights {
+    fn new(cap: usize) -> SharedWeights {
+        SharedWeights {
+            cache: Mutex::new(WeightCache::new(cap)),
+            generation: AtomicU64::new(0),
+            tick: AtomicU64::new(0),
+        }
+    }
+
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    fn insert(&self, id: WeightId, w: WeightHandle) {
+        let tick = self.next_tick();
+        let mut c = self.cache.lock().unwrap();
+        c.insert(id, w, tick);
+        // Bump inside the cache lock: a reader that loads the new
+        // generation is guaranteed to read-through to the new entry.
+        self.generation.fetch_add(1, Ordering::Release);
+    }
+}
+
+/// One shard's read-through cache in front of [`SharedWeights`]:
+/// generation-stamped handles served without touching the shared LRU
+/// lock. A hit refreshes the entry's shared recency stamp through its
+/// [`Recency`] atomic — the hottest weight stays the most recently used
+/// even when every request is a shard-local hit. A stale generation
+/// stamp (any registration since fill) clears the map and falls through.
+#[derive(Default)]
+struct ShardWeightCache {
+    map: Mutex<HashMap<WeightId, (u64, Recency, WeightHandle)>>,
+}
+
+impl ShardWeightCache {
+    /// Resolve `id`, preferring the shard-local entry when no
+    /// registration happened since it was cached.
+    fn resolve(&self, shared: &SharedWeights, id: WeightId) -> Option<WeightHandle> {
+        // Load the generation *before* any cache read: if a registration
+        // interleaves, the stamp we store is older than the bump and the
+        // next lookup revalidates — never the reverse. (Named to stay
+        // clear of the 2024-edition `gen` keyword.)
+        let generation = shared.generation.load(Ordering::Acquire);
+        {
+            let mut local = self.map.lock().unwrap();
+            match local.get(&id) {
+                Some((g, recency, h)) if *g == generation => {
+                    recency.store(shared.next_tick(), Ordering::Relaxed);
+                    return Some(Arc::clone(h));
+                }
+                Some(_) => {
+                    // Some registration invalidated everything we hold.
+                    local.clear();
+                }
+                None => {}
+            }
+        }
+        // Read-through: the shared LRU lookup refreshes recency too.
+        let (recency, h) = shared.cache.lock().unwrap().get(id, shared.next_tick())?;
+        self.map.lock().unwrap().insert(id, (generation, recency, Arc::clone(&h)));
+        Some(h)
+    }
+}
+
 enum Payload {
     ById(GemmRequest),
     Handle(PreparedGemmRequest),
@@ -175,6 +297,17 @@ struct Job {
     reply: Sender<GemmResponse>,
     submitted: Instant,
 }
+
+/// Base interval an idle worker blocks on its own queue between steal
+/// scans (only when stealing is enabled; without it workers block
+/// indefinitely). Doubles per consecutive empty scan up to
+/// `STEAL_POLL << STEAL_BACKOFF_MAX` (32 ms) so a traffic-less pool
+/// quiesces instead of spinning, while a freshly idle worker still
+/// notices a neighbour's backlog within ~0.5 ms.
+const STEAL_POLL: Duration = Duration::from_micros(500);
+
+/// Max left-shift applied to [`STEAL_POLL`] by the idle backoff.
+const STEAL_BACKOFF_MAX: u32 = 6;
 
 /// The fault-tolerant GEMM service.
 ///
@@ -208,41 +341,82 @@ struct Job {
 /// coord.shutdown();
 /// ```
 pub struct Coordinator {
-    tx: Option<SyncSender<Job>>,
+    txs: Option<Vec<SyncSender<Job>>>,
     handles: Vec<JoinHandle<()>>,
-    weights: Arc<Mutex<WeightCache>>,
+    shared: Arc<SharedWeights>,
+    /// Kept so registration can clear every shard's read-through cache
+    /// eagerly (see [`Coordinator::register_weights`]).
+    shard_caches: Vec<Arc<ShardWeightCache>>,
     metrics: Arc<ServiceMetrics>,
     next_id: AtomicU64,
     ft_template: Arc<FtGemm>,
     block_k: Option<usize>,
+    plan: ShardPlan,
+}
+
+/// Everything one worker thread needs (see [`worker_loop`]).
+struct WorkerCtx {
+    shard: usize,
+    queues: Vec<Arc<Mutex<Receiver<Job>>>>,
+    local: Arc<ShardWeightCache>,
+    shared: Arc<SharedWeights>,
+    metrics: Arc<ServiceMetrics>,
+    ft: FtGemm,
+    model: AccumModel,
+    policy: VerifyPolicy,
+    steal: bool,
 }
 
 impl Coordinator {
-    /// Start the worker pool.
+    /// Start the sharded worker pool per the config's [`ShardPlan`].
     pub fn start(cfg: CoordinatorConfig) -> Coordinator {
-        let (tx, rx) = sync_channel::<Job>(cfg.queue_depth);
-        let rx = Arc::new(Mutex::new(rx));
-        let weights = Arc::new(Mutex::new(WeightCache::new(cfg.weight_capacity)));
+        let topology = cfg.topology.clone().unwrap_or_else(TopologyConfig::detect);
+        let plan = ShardPlan::plan(
+            cfg.shards,
+            cfg.workers,
+            cfg.parallelism,
+            cfg.partition,
+            topology,
+        );
+        let nshards = plan.shards.len();
+        let shared = Arc::new(SharedWeights::new(cfg.weight_capacity));
         let metrics = Arc::new(ServiceMetrics::new());
 
+        let mut txs = Vec::with_capacity(nshards);
+        let mut queues: Vec<Arc<Mutex<Receiver<Job>>>> = Vec::with_capacity(nshards);
+        for _ in 0..nshards {
+            let (tx, rx) = sync_channel::<Job>(cfg.queue_depth.max(1));
+            txs.push(tx);
+            queues.push(Arc::new(Mutex::new(rx)));
+        }
+        let locals: Vec<Arc<ShardWeightCache>> =
+            (0..nshards).map(|_| Arc::new(ShardWeightCache::default())).collect();
+
         let mut handles = Vec::new();
-        for wid in 0..cfg.workers.max(1) {
-            let rx = Arc::clone(&rx);
-            let weights = Arc::clone(&weights);
-            let metrics = Arc::clone(&metrics);
-            let ft = FtGemm::new(
-                GemmEngine::with_parallelism(cfg.model, cfg.parallelism),
-                (cfg.threshold)(),
-                cfg.policy,
-            );
-            let model = cfg.model;
-            let policy = cfg.policy;
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("ftgemm-worker-{wid}"))
-                    .spawn(move || worker_loop(rx, weights, metrics, ft, model, policy))
-                    .expect("spawn worker"),
-            );
+        for spec in &plan.shards {
+            for wid in 0..spec.workers {
+                let ctx = WorkerCtx {
+                    shard: spec.shard,
+                    queues: queues.clone(),
+                    local: Arc::clone(&locals[spec.shard]),
+                    shared: Arc::clone(&shared),
+                    metrics: Arc::clone(&metrics),
+                    ft: FtGemm::new(
+                        GemmEngine::with_parallelism(cfg.model, spec.parallelism),
+                        (cfg.threshold)(),
+                        cfg.policy,
+                    ),
+                    model: cfg.model,
+                    policy: cfg.policy,
+                    steal: cfg.steal && nshards > 1,
+                };
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("ftgemm-s{}-w{wid}", spec.shard))
+                        .spawn(move || worker_loop(ctx))
+                        .expect("spawn worker"),
+                );
+            }
         }
         let ft_template = Arc::new(FtGemm::new(
             GemmEngine::with_parallelism(cfg.model, cfg.parallelism),
@@ -250,28 +424,50 @@ impl Coordinator {
             cfg.policy,
         ));
         Coordinator {
-            tx: Some(tx),
+            txs: Some(txs),
             handles,
-            weights,
+            shared,
+            shard_caches: locals,
             metrics,
             next_id: AtomicU64::new(0),
             ft_template,
             block_k: cfg.block_k,
+            plan,
         }
+    }
+
+    /// The shard layout this coordinator runs (topology groups, worker
+    /// counts, per-shard engine configs).
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.plan.shards.len()
     }
 
     /// Register (or replace) a weight matrix: encodes checksums and
     /// precomputes the per-block threshold statistics once, inserts the
-    /// result into the LRU cache under `id`, and returns the shared handle
-    /// for direct (id-free) submission. Re-registering an id **replaces**
-    /// the cached entry — later requests for the id never see state from
-    /// the previous matrix.
+    /// result into the shared LRU cache under `id` (invalidating every
+    /// shard's read-through cache), and returns the shared handle for
+    /// direct (id-free) submission. Re-registering an id **replaces** the
+    /// cached entry — later requests for the id never see state from the
+    /// previous matrix.
     pub fn register_weights(&self, id: WeightId, b: &Matrix) -> WeightHandle {
         let prepared = Arc::new(match self.block_k {
             None => self.ft_template.prepare(b),
             Some(bk) => self.ft_template.prepare_blockwise(b, bk),
         });
-        self.weights.lock().unwrap().insert(id, Arc::clone(&prepared));
+        self.shared.insert(id, Arc::clone(&prepared));
+        // Eagerly drop every shard's read-through entries (the generation
+        // bump already invalidates them *logically*; clearing here also
+        // releases the Arcs, so replaced/evicted PreparedWeights don't
+        // stay pinned in shards whose later traffic is handle-only and
+        // would never revalidate).
+        for c in &self.shard_caches {
+            c.map.lock().unwrap().clear();
+        }
         prepared
     }
 
@@ -281,19 +477,19 @@ impl Coordinator {
         let _ = self.register_weights(id, b);
     }
 
-    /// Whether `id` is currently resident in the weight cache (it may have
-    /// been evicted by LRU pressure or never registered).
+    /// Whether `id` is currently resident in the shared weight cache (it
+    /// may have been evicted by LRU pressure or never registered).
     pub fn weight_resident(&self, id: WeightId) -> bool {
-        self.weights.lock().unwrap().contains(id)
+        self.shared.cache.lock().unwrap().contains(id)
     }
 
-    /// Number of weight matrices currently resident in the cache.
+    /// Number of weight matrices currently resident in the shared cache.
     pub fn weights_resident(&self) -> usize {
-        self.weights.lock().unwrap().len()
+        self.shared.cache.lock().unwrap().len()
     }
 
     /// Submit a request; returns a receiver for the response. Blocks when
-    /// the queue is full (backpressure).
+    /// the target shard's queue is full (backpressure).
     pub fn submit(&self, req: GemmRequest) -> Receiver<GemmResponse> {
         self.submit_tagged(req).1
     }
@@ -321,19 +517,20 @@ impl Coordinator {
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.jobs_submitted.inc();
-        self.tx
-            .as_ref()
-            .expect("coordinator already shut down")
+        let txs = self.txs.as_ref().expect("coordinator already shut down");
+        // Deterministic round-robin routing: shard = id mod shards.
+        let shard = (id % txs.len() as u64) as usize;
+        txs[shard]
             .send(Job { id, payload, reply: reply_tx, submitted: Instant::now() })
             .expect("worker pool hung up");
         (id, reply_rx)
     }
 
     /// Batched submit: enqueue every request (in order, sharing the
-    /// backpressure of the bounded queue) and return one `(id, receiver)`
-    /// pair per request, in the same order. Requests of one batch fan out
-    /// across the worker pool and complete independently; the ids tie the
-    /// responses back to their requests.
+    /// backpressure of the bounded per-shard queues) and return one
+    /// `(id, receiver)` pair per request, in the same order. Requests of
+    /// one batch fan out round-robin across the shards and complete
+    /// independently; the ids tie the responses back to their requests.
     pub fn submit_batch(
         &self,
         reqs: Vec<GemmRequest>,
@@ -344,8 +541,8 @@ impl Coordinator {
 
     /// Handle-based variant of [`Self::submit_batch`]: enqueue every
     /// prepared request in order and return one `(id, receiver)` pair per
-    /// request. The campaign engine's hot path — each cell's trials ride
-    /// one batch against weights prepared once.
+    /// request. The campaign engine's and replay workload's hot path —
+    /// each batch rides against weights prepared once.
     pub fn submit_batch_prepared(
         &self,
         reqs: Vec<PreparedGemmRequest>,
@@ -369,9 +566,9 @@ impl Coordinator {
         &self.metrics
     }
 
-    /// Drain the queue and join all workers.
+    /// Drain every shard's queue and join all workers.
     pub fn shutdown(mut self) {
-        drop(self.tx.take());
+        drop(self.txs.take());
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -380,98 +577,178 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        drop(self.tx.take());
+        drop(self.txs.take());
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-fn worker_loop(
-    rx: Arc<Mutex<Receiver<Job>>>,
-    weights: Arc<Mutex<WeightCache>>,
-    metrics: Arc<ServiceMetrics>,
-    ft: FtGemm,
-    model: AccumModel,
-    policy: VerifyPolicy,
-) {
-    loop {
-        // Hold the lock only while receiving.
-        let job = match rx.lock().unwrap().recv() {
-            Ok(j) => j,
-            Err(_) => return, // all senders gone: shutdown
-        };
-        // Resolve the request to (activation, prepared weights, injection).
-        let resolved: Result<(Matrix, WeightHandle, Option<InjectSpec>), String> =
-            match job.payload {
-                Payload::ById(req) => match weights.lock().unwrap().get(req.weight) {
-                    None => Err(format!("unknown or evicted weight id {}", req.weight)),
-                    Some(w) => Ok((req.a, w, req.inject)),
-                },
-                Payload::Handle(req) => Ok((req.a, req.weights, req.inject)),
-            };
-        let mut injected = None;
-        let result = match resolved {
-            Err(e) => Err(e),
-            Ok((a, w, inject)) => {
-                let run = match inject {
-                    None => ft.multiply_prepared(&a, &w, None),
-                    Some(spec) => {
-                        let grid = if policy.online { model.work } else { model.out };
-                        // A single-event upset strikes once: inject into
-                        // the first K-block's partial only, even when the
-                        // weights are prepared blockwise. The realized
-                        // flip is recorded through a Cell because the
-                        // injection hook is a shared (&dyn Fn) closure.
-                        let outcome = std::cell::Cell::new(None);
-                        let f = |bi: usize, out: &mut GemmOutput| {
-                            if bi != 0 {
-                                return;
-                            }
-                            if let Some(blk) = w.blocks().first() {
-                                outcome.set(Some(apply_fault(
-                                    &spec,
-                                    policy.online,
-                                    model.input,
-                                    grid,
-                                    &a,
-                                    &blk.stats.b,
-                                    out,
-                                )));
-                            }
-                        };
-                        let r = ft.multiply_prepared(&a, &w, Some(&f));
-                        injected = outcome.get();
-                        r
-                    }
-                };
-                run.map_err(|e| e.to_string())
-            }
-        };
-        if let Ok(out) = &result {
-            match out.report.verdict {
-                Verdict::Clean => {}
-                Verdict::Corrected => {
-                    metrics.faults_detected.add(out.report.detections.len() as u64);
-                    metrics
-                        .faults_corrected
-                        .add(out.report.detections.iter().filter(|d| d.corrected).count() as u64);
-                }
-                Verdict::Recomputed | Verdict::Flagged => {
-                    metrics.faults_detected.add(out.report.detections.len() as u64);
-                    metrics.rows_recomputed.add(out.report.rows_recomputed as u64);
-                }
+/// Steal one queued job from any other shard. `try_lock` only: a
+/// contended receiver mutex means one of that shard's own workers holds
+/// it — either blocked in `recv` (queue empty, nothing to steal) or
+/// mid-`try_recv` (it is taking the job anyway) — so skipping is both
+/// deadlock-free and near-optimal; the next scan retries.
+fn try_steal(ctx: &WorkerCtx) -> Option<Job> {
+    let n = ctx.queues.len();
+    for off in 1..n {
+        let q = &ctx.queues[(ctx.shard + off) % n];
+        if let Ok(guard) = q.try_lock() {
+            if let Ok(job) = guard.try_recv() {
+                return Some(job);
             }
         }
-        metrics.jobs_completed.inc();
-        metrics.latency.record(job.submitted.elapsed());
-        let _ = job.reply.send(GemmResponse {
-            id: job.id,
-            result,
-            injected,
-            latency: job.submitted.elapsed(),
-        });
     }
+    None
+}
+
+fn worker_loop(ctx: WorkerCtx) {
+    loop {
+        match next_job(&ctx) {
+            Some((job, stolen)) => process(&ctx, job, stolen),
+            None => return,
+        }
+    }
+}
+
+/// Acquire this worker's next job: own queue first, then steal targets,
+/// then block on the own queue (briefly, when stealing, with
+/// exponential backoff across consecutive empty scans, so neighbours'
+/// backlogs are still noticed without an idle pool spinning). Returns
+/// `None` at shutdown — after the own queue is fully drained (`try_recv`
+/// yields every buffered job before `Disconnected`) and a final steal
+/// sweep found nothing; jobs still queued on other shards are drained by
+/// their own workers.
+///
+/// Every receiver lock is a temporary inside one statement here, so it
+/// is released before the job is returned — a worker never holds a queue
+/// lock while executing a GEMM. The backoff resets naturally: each call
+/// starts a fresh idle streak.
+fn next_job(ctx: &WorkerCtx) -> Option<(Job, bool)> {
+    let mut idle: u32 = 0;
+    loop {
+        let own = ctx.queues[ctx.shard].lock().unwrap().try_recv();
+        match own {
+            Ok(job) => return Some((job, false)),
+            Err(TryRecvError::Empty) => {}
+            Err(TryRecvError::Disconnected) => {
+                return if ctx.steal { try_steal(ctx).map(|j| (j, true)) } else { None };
+            }
+        }
+        if ctx.steal {
+            if let Some(job) = try_steal(ctx) {
+                return Some((job, true));
+            }
+            // Catch fresh own-queue arrivals promptly. The receiver lock
+            // is held for at most STEAL_POLL, so shard siblings never
+            // serialize behind a long sleep and stay free to poll their
+            // own queue and run steal scans of their own.
+            let blocked = ctx.queues[ctx.shard].lock().unwrap().recv_timeout(STEAL_POLL);
+            match blocked {
+                Ok(job) => return Some((job, false)),
+                Err(RecvTimeoutError::Timeout) => {
+                    // Exponential idle backoff, slept WITHOUT the
+                    // receiver lock: a traffic-less pool quiesces while
+                    // siblings keep the queue responsive. Worst-case
+                    // wake latency for a single-worker shard is the
+                    // backoff cap (STEAL_POLL << STEAL_BACKOFF_MAX).
+                    if idle > 0 {
+                        std::thread::sleep(
+                            STEAL_POLL * (1u32 << (idle - 1).min(STEAL_BACKOFF_MAX)),
+                        );
+                    }
+                    idle = idle.saturating_add(1);
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return try_steal(ctx).map(|j| (j, true));
+                }
+            }
+        } else {
+            let blocked = ctx.queues[ctx.shard].lock().unwrap().recv();
+            match blocked {
+                Ok(job) => return Some((job, false)),
+                Err(_) => return None, // all senders gone: shutdown
+            }
+        }
+    }
+}
+
+/// Execute one job end to end: resolve weights, run the protected
+/// multiply (with the request's injection, if any), record metrics, send
+/// the reply.
+fn process(ctx: &WorkerCtx, job: Job, stolen: bool) {
+    // Resolve the request to (activation, prepared weights, injection).
+    let resolved: Result<(Matrix, WeightHandle, Option<InjectSpec>), String> = match job.payload {
+        Payload::ById(req) => match ctx.local.resolve(&ctx.shared, req.weight) {
+            None => Err(format!("unknown or evicted weight id {}", req.weight)),
+            Some(w) => Ok((req.a, w, req.inject)),
+        },
+        Payload::Handle(req) => Ok((req.a, req.weights, req.inject)),
+    };
+    let mut injected = None;
+    let result = match resolved {
+        Err(e) => Err(e),
+        Ok((a, w, inject)) => {
+            let run = match inject {
+                None => ctx.ft.multiply_prepared(&a, &w, None),
+                Some(spec) => {
+                    let grid = if ctx.policy.online { ctx.model.work } else { ctx.model.out };
+                    // A single-event upset strikes once: inject into the
+                    // first K-block's partial only, even when the weights
+                    // are prepared blockwise. The realized flip is
+                    // recorded through a Cell because the injection hook
+                    // is a shared (&dyn Fn) closure.
+                    let outcome = std::cell::Cell::new(None);
+                    let f = |bi: usize, out: &mut GemmOutput| {
+                        if bi != 0 {
+                            return;
+                        }
+                        if let Some(blk) = w.blocks().first() {
+                            outcome.set(Some(apply_fault(
+                                &spec,
+                                ctx.policy.online,
+                                ctx.model.input,
+                                grid,
+                                &a,
+                                &blk.stats.b,
+                                out,
+                            )));
+                        }
+                    };
+                    let r = ctx.ft.multiply_prepared(&a, &w, Some(&f));
+                    injected = outcome.get();
+                    r
+                }
+            };
+            run.map_err(|e| e.to_string())
+        }
+    };
+    if let Ok(out) = &result {
+        match out.report.verdict {
+            Verdict::Clean => {}
+            Verdict::Corrected => {
+                ctx.metrics.faults_detected.add(out.report.detections.len() as u64);
+                ctx.metrics
+                    .faults_corrected
+                    .add(out.report.detections.iter().filter(|d| d.corrected).count() as u64);
+            }
+            Verdict::Recomputed | Verdict::Flagged => {
+                ctx.metrics.faults_detected.add(out.report.detections.len() as u64);
+                ctx.metrics.rows_recomputed.add(out.report.rows_recomputed as u64);
+            }
+        }
+    }
+    if stolen {
+        ctx.metrics.jobs_stolen.inc();
+    }
+    ctx.metrics.jobs_completed.inc();
+    ctx.metrics.latency.record(job.submitted.elapsed());
+    let _ = job.reply.send(GemmResponse {
+        id: job.id,
+        result,
+        injected,
+        latency: job.submitted.elapsed(),
+    });
 }
 
 #[cfg(test)]
@@ -644,6 +921,76 @@ mod tests {
         c.register_weights(8, &other);
         let still = c.call_prepared(PreparedGemmRequest { a, weights: handle, inject: None });
         assert_eq!(still.result.unwrap().c.data(), x.data());
+        c.shutdown();
+    }
+
+    #[test]
+    fn sharded_coordinator_routes_round_robin_and_completes() {
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            shards: 3,
+            topology: Some(TopologyConfig::uniform(1, 4)),
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg);
+        assert_eq!(c.shards(), 3);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let b = Matrix::sample_in(64, 32, &Distribution::normal_1_1(), Precision::Bf16, &mut rng);
+        c.register_weight(7, &b);
+        let reqs: Vec<GemmRequest> = (0..9)
+            .map(|i| GemmRequest { a: activation(70 + i), weight: 7, inject: None })
+            .collect();
+        let pending = c.submit_batch(reqs);
+        for (id, rx) in pending {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.id, id);
+            assert!(resp.result.is_ok());
+        }
+        assert_eq!(c.metrics().jobs_completed.get(), 9);
+        c.shutdown();
+    }
+
+    #[test]
+    fn per_shard_cache_sees_reregistration() {
+        // The generation bump must invalidate shard-local read-through
+        // entries: a re-register between two id requests on the same
+        // shard must flip the served weights.
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            shards: 2,
+            topology: Some(TopologyConfig::uniform(1, 2)),
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg);
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let b = Matrix::sample_in(64, 32, &Distribution::normal_1_1(), Precision::Bf16, &mut rng);
+        c.register_weight(3, &b);
+        let a = activation(80);
+        // Warm both shards' read-through caches and keep a reference
+        // product.
+        let before = c
+            .call(GemmRequest { a: a.clone(), weight: 3, inject: None })
+            .result
+            .unwrap()
+            .c;
+        assert!(c.call(GemmRequest { a: a.clone(), weight: 3, inject: None }).result.is_ok());
+        let mut neg = b.clone();
+        for v in neg.data_mut() {
+            *v = -*v;
+        }
+        c.register_weight(3, &neg);
+        // Both shards must now serve the negated weights: a stale
+        // shard-local entry would reproduce `before` (its own checksums
+        // are self-consistent, so only the product exposes staleness).
+        for _ in 0..2 {
+            let out = c.call(GemmRequest { a: a.clone(), weight: 3, inject: None }).result.unwrap();
+            assert_eq!(out.report.verdict, Verdict::Clean);
+            let mut maxsum = 0.0f64;
+            for (p, q) in before.data().iter().zip(out.c.data()) {
+                maxsum = maxsum.max((p + q).abs());
+            }
+            assert!(maxsum < 1e-6, "stale shard cache served old B: {maxsum}");
+        }
         c.shutdown();
     }
 

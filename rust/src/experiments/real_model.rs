@@ -34,6 +34,15 @@ pub struct WeightProfile {
     pub count: usize,
 }
 
+impl WeightProfile {
+    /// Floating-point operations of one activation GEMM against this
+    /// weight: `2·m·K·N` for an `m × rows · rows × cols` multiply (the
+    /// unit the replay workload's GFLOP/s throughput is counted in).
+    pub fn gemm_flops(&self, m: usize) -> f64 {
+        2.0 * m as f64 * self.rows as f64 * self.cols as f64
+    }
+}
+
 /// Published-architecture weight profiles, scaled by `scale` (1 = full
 /// size; quick mode uses 1/8).
 pub fn model_weight_profiles(family: &str, scale: usize) -> Vec<WeightProfile> {
@@ -141,6 +150,19 @@ pub fn run_real_model(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn gemm_flops_counts_multiply_adds() {
+        let p = WeightProfile {
+            name: "w_up",
+            rows: 4096,
+            cols: 11008,
+            std: 0.015,
+            mean: 0.0,
+            count: 1,
+        };
+        assert_eq!(p.gemm_flops(16), 2.0 * 16.0 * 4096.0 * 11008.0);
+    }
 
     #[test]
     fn profiles_exist_for_all_families() {

@@ -42,7 +42,7 @@ pub mod micro;
 pub mod pack;
 pub mod tiled;
 
-pub use tiled::{MicroConfig, ParallelismConfig, TileConfig};
+pub use tiled::{MicroConfig, ParallelismConfig, RowSplit, TileConfig};
 
 use crate::fp::Precision;
 use crate::matrix::Matrix;

@@ -122,8 +122,42 @@ impl Default for MicroConfig {
     }
 }
 
+/// How the row-parallel split assigns output rows to worker threads.
+///
+/// Both policies are schedule-neutral by construction: they only decide
+/// *which worker* owns a row, never the order of any element's
+/// K-reduction, so results are bitwise-identical under either (pinned by
+/// `tests/shard_equivalence.rs` and the unit tests below). The choice is
+/// purely a locality/load-balance trade — see
+/// [`crate::coordinator::partition`] for the NUMA rationale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RowSplit {
+    /// One contiguous row panel per worker (the classic split): each
+    /// worker streams a dense panel of C, best when C's pages are local
+    /// to the worker's memory node (first-touch / contiguous NUMA
+    /// placement).
+    #[default]
+    Contiguous,
+    /// Row blocks of at most [`TileConfig::mc`] rows (shrunk for small
+    /// M so every worker gets work) dealt round-robin across workers:
+    /// block `i` goes to worker `i mod threads`. Matches interleaved
+    /// NUMA page placement and evens out row-cost skew at the cost of
+    /// panel locality.
+    Interleaved,
+}
+
+impl RowSplit {
+    /// Short lowercase name used in CLIs and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            RowSplit::Contiguous => "contiguous",
+            RowSplit::Interleaved => "interleaved",
+        }
+    }
+}
+
 /// Execution configuration of the tiled engine: worker count + tiles +
-/// microkernel shape.
+/// microkernel shape + row-split policy.
 ///
 /// Results are **bitwise identical for every value of this struct** (the
 /// schedule-preservation invariant); it only trades wall-clock time.
@@ -135,6 +169,8 @@ pub struct ParallelismConfig {
     pub tiles: TileConfig,
     /// Register-blocking (microkernel) shape for the packed engine.
     pub micro: MicroConfig,
+    /// How output rows are dealt to the worker threads.
+    pub split: RowSplit,
 }
 
 impl ParallelismConfig {
@@ -145,6 +181,7 @@ impl ParallelismConfig {
             threads: 1,
             tiles: TileConfig::DEFAULT,
             micro: MicroConfig::DEFAULT,
+            split: RowSplit::Contiguous,
         }
     }
 
@@ -171,9 +208,15 @@ impl ParallelismConfig {
         self
     }
 
+    /// Replace the row-split policy.
+    pub fn split(mut self, split: RowSplit) -> ParallelismConfig {
+        self.split = split;
+        self
+    }
+
     /// Parse from CLI flags: `--threads N --mc M --kc K --nc N --mr R
-    /// --nr C` (`--threads 0` means auto). Shared by the `vabft` binary
-    /// and the bench harness mains.
+    /// --nr C --split contiguous|interleaved` (`--threads 0` means
+    /// auto). Shared by the `vabft` binary and the bench harness mains.
     pub fn from_args(args: &crate::cli::Args) -> ParallelismConfig {
         let mut par = match args.opt_or("threads", 1usize) {
             0 => ParallelismConfig::auto(),
@@ -187,6 +230,14 @@ impl ParallelismConfig {
         );
         let dm = MicroConfig::DEFAULT;
         par.micro = MicroConfig::new(args.opt_or("mr", dm.mr), args.opt_or("nr", dm.nr));
+        par.split = match args.opt("split").unwrap_or("contiguous") {
+            "contiguous" => RowSplit::Contiguous,
+            "interleaved" => RowSplit::Interleaved,
+            other => {
+                eprintln!("unknown row split '{other}' (contiguous|interleaved)");
+                std::process::exit(2);
+            }
+        };
         par
     }
 }
@@ -197,30 +248,62 @@ impl Default for ParallelismConfig {
     }
 }
 
-/// Split C into disjoint per-worker row panels and run `panel_fn` on each
-/// (on the caller's thread when `threads == 1`). The only form of
-/// parallelism in this module: workers never share an accumulator.
-fn parallel_over_rows<T, F>(c: &mut [T], m: usize, n: usize, threads: usize, panel_fn: F)
+/// Split C into disjoint per-worker row sets per [`RowSplit`] and run
+/// `panel_fn` on each panel (on the caller's thread when `threads == 1`).
+/// The only form of parallelism in this module: workers never share an
+/// accumulator, so the assignment policy cannot change any element's
+/// K-reduction — both splits are bitwise-identical to serial execution.
+fn parallel_over_rows<T, F>(c: &mut [T], m: usize, n: usize, par: &ParallelismConfig, panel_fn: F)
 where
     T: Send,
     F: Fn(&mut [T], usize, usize) + Sync,
 {
-    let threads = threads.max(1).min(m);
+    let threads = par.threads.max(1).min(m);
     if threads == 1 {
         panel_fn(c, 0, m);
         return;
     }
-    let rows_per = (m + threads - 1) / threads;
-    std::thread::scope(|s| {
-        for (ci, chunk) in c.chunks_mut(rows_per * n).enumerate() {
-            let i0 = ci * rows_per;
-            let f = &panel_fn;
-            s.spawn(move || {
-                let rows = chunk.len() / n;
-                f(chunk, i0, rows);
+    match par.split {
+        RowSplit::Contiguous => {
+            let rows_per = (m + threads - 1) / threads;
+            std::thread::scope(|s| {
+                for (ci, chunk) in c.chunks_mut(rows_per * n).enumerate() {
+                    let i0 = ci * rows_per;
+                    let f = &panel_fn;
+                    s.spawn(move || {
+                        let rows = chunk.len() / n;
+                        f(chunk, i0, rows);
+                    });
+                }
             });
         }
-    });
+        RowSplit::Interleaved => {
+            // Deal row blocks round-robin: block i → worker i % threads.
+            // Each block is still a contiguous panel (packing efficiency
+            // is per-block), only ownership is strided. Block height is
+            // mc, shrunk when m is small so every worker still gets work
+            // (mc-sized blocks alone would serialize any m ≤ mc GEMM).
+            let block = par.tiles.mc.min((m + threads - 1) / threads).max(1);
+            let nblocks = (m + block - 1) / block;
+            let threads = threads.min(nblocks);
+            let mut per_worker: Vec<Vec<(usize, &mut [T])>> =
+                (0..threads).map(|_| Vec::new()).collect();
+            for (bi, chunk) in c.chunks_mut(block * n).enumerate() {
+                per_worker[bi % threads].push((bi * block, chunk));
+            }
+            std::thread::scope(|s| {
+                for blocks in per_worker {
+                    let f = &panel_fn;
+                    s.spawn(move || {
+                        for (i0, chunk) in blocks {
+                            let rows = chunk.len() / n;
+                            f(chunk, i0, rows);
+                        }
+                    });
+                }
+            });
+        }
+    }
 }
 
 /// Packed, register-blocked, multi-threaded f32 GEMM — bitwise-equal to
@@ -268,7 +351,7 @@ fn gemm_packed<T: Element>(
         return c;
     }
     let (tiles, u) = (par.tiles, par.micro);
-    parallel_over_rows(&mut c, m, n, par.threads, |chunk, i0, rows| match strategy {
+    parallel_over_rows(&mut c, m, n, par, |chunk, i0, rows| match strategy {
         ReduceStrategy::Sequential => {
             packed_seq_fma(a, b, chunk, i0, rows, k, n, false, tiles, u)
         }
@@ -436,7 +519,7 @@ macro_rules! unpacked_kernels {
                 return c;
             }
             let tiles = par.tiles;
-            parallel_over_rows(&mut c, m, n, par.threads, |chunk, i0, rows| {
+            parallel_over_rows(&mut c, m, n, par, |chunk, i0, rows| {
                 $panel(a, b, chunk, i0, rows, k, n, strategy, tiles);
             });
             c
@@ -597,7 +680,7 @@ pub fn gemm_generic(
         return c;
     }
     let tiles = par.tiles;
-    parallel_over_rows(&mut c, m, n, par.threads, |chunk, i0, rows| {
+    parallel_over_rows(&mut c, m, n, par, |chunk, i0, rows| {
         generic_panel(a, b, chunk, i0, rows, k, n, p, strategy, tiles);
     });
     c
@@ -740,7 +823,9 @@ mod tests {
                     MicroConfig::new(1, 4),
                     MicroConfig::new(3, 5), // dynamic-fallback kernel
                 ] {
-                    out.push(ParallelismConfig { threads, tiles, micro });
+                    for split in [RowSplit::Contiguous, RowSplit::Interleaved] {
+                        out.push(ParallelismConfig { threads, tiles, micro, split });
+                    }
                 }
             }
         }
@@ -886,7 +971,7 @@ mod tests {
     #[test]
     fn from_args_parses_flags() {
         let args = crate::cli::Args::parse_from(
-            "x --threads 4 --mc 32 --kc 128 --nc 64 --mr 4 --nr 16"
+            "x --threads 4 --mc 32 --kc 128 --nc 64 --mr 4 --nr 16 --split interleaved"
                 .split_whitespace()
                 .map(String::from),
         );
@@ -894,11 +979,36 @@ mod tests {
         assert_eq!(par.threads, 4);
         assert_eq!(par.tiles, TileConfig::new(32, 128, 64));
         assert_eq!(par.micro, MicroConfig::new(4, 16));
+        assert_eq!(par.split, RowSplit::Interleaved);
         let auto = crate::cli::Args::parse_from(
             "x --threads 0".split_whitespace().map(String::from),
         );
         let par = ParallelismConfig::from_args(&auto);
         assert!(par.threads >= 1);
         assert_eq!(par.micro, MicroConfig::DEFAULT);
+        assert_eq!(par.split, RowSplit::Contiguous);
+    }
+
+    #[test]
+    fn interleaved_split_is_bitwise_equal_to_contiguous() {
+        // Dedicated pin of the RowSplit invariant on ragged shapes where
+        // the interleave actually strides blocks (mc smaller than m).
+        let (m, k, n) = (23, 31, 17);
+        let a = rand_vec(m * k, 11);
+        let b = rand_vec(k * n, 12);
+        for strategy in
+            [ReduceStrategy::Sequential, ReduceStrategy::Fma, ReduceStrategy::Pairwise]
+        {
+            let base = gemm_f64(&a, &b, m, k, n, strategy, &ParallelismConfig::serial());
+            for threads in [2usize, 3, 8] {
+                for mc in [1usize, 4, 64] {
+                    let par = ParallelismConfig::with_threads(threads)
+                        .tiles(TileConfig::new(mc, 7, 5))
+                        .split(RowSplit::Interleaved);
+                    let got = gemm_f64(&a, &b, m, k, n, strategy, &par);
+                    assert_eq!(got, base, "{strategy:?} t={threads} mc={mc}");
+                }
+            }
+        }
     }
 }

@@ -58,9 +58,19 @@
 //! computed with the same rounding schedule as the live path, so the warm
 //! path is bitwise-identical to encode-per-call in outputs and
 //! verification decisions. The [`coordinator`] keeps prepared weights in
-//! an LRU cache keyed by weight id (`register_weights`), and requests can
-//! also carry the handle directly. See `docs/ARCHITECTURE.md` and
-//! `docs/PERFORMANCE.md` at the repository root.
+//! a shared LRU cache keyed by weight id (`register_weights`), and
+//! requests can also carry the handle directly.
+//!
+//! At scale the coordinator runs **sharded**: N queue + worker-pool
+//! units planned onto the machine's NUMA topology
+//! ([`coordinator::partition`]), with optional cross-shard work stealing
+//! and per-shard read-through weight caches. Sharding is pure scheduling
+//! — outputs, verdicts and thresholds are bitwise-invariant across shard
+//! counts, partition policies and stealing (`tests/shard_equivalence.rs`)
+//! — and the [`workload`] module replays deterministic transformer-layer
+//! traces through it (`vabft serve-replay`, `BENCH_serving.json`). See
+//! `docs/ARCHITECTURE.md` and `docs/PERFORMANCE.md` at the repository
+//! root.
 //!
 //! ## Detection-quality at scale
 //!
@@ -92,6 +102,7 @@ pub mod rng;
 pub mod runtime;
 pub mod threshold;
 pub mod train;
+pub mod workload;
 
 pub mod abft {
     //! Algorithm-Based Fault Tolerance core: checksum encoding,
@@ -123,8 +134,11 @@ pub mod prelude {
     };
     pub use crate::calibrate::{CalibrationProtocol, EmaxModel, EmaxTable, Platform};
     pub use crate::campaign::{BitClass, CellSpec, GridConfig, VerifyPoint};
+    pub use crate::coordinator::{PartitionPolicy, TopologyConfig};
     pub use crate::fp::{dd::Dd, Precision};
-    pub use crate::gemm::{AccumModel, GemmEngine, MicroConfig, ParallelismConfig, TileConfig};
+    pub use crate::gemm::{
+        AccumModel, GemmEngine, MicroConfig, ParallelismConfig, RowSplit, TileConfig,
+    };
     pub use crate::inject::{
         BitFlip, Campaign, CampaignConfig, FaultOutcome, FaultSite, FaultSpec, FlipDirection,
         InjectionSite, SiteClass,

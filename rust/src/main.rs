@@ -3,10 +3,19 @@
 //!
 //! ```text
 //! vabft calibrate  [--platform cpu|gpu|npu] [--precision fp32] [--trials N] [--online]
-//! vabft campaign   [--quick|--full|--smoke] [--seed S] [--workers W] [--json FILE]
+//! vabft campaign   [--quick|--full|--smoke] [--seed S] [--workers W] [--shards N]
+//!                  [--json FILE]
 //!                  # deterministic campaign grid: precision x strategy x dist x
 //!                  # site x bit x verify point; writes BENCH_campaign.json and
 //!                  # exits non-zero if a detection-quality gate fails
+//! vabft serve-replay
+//!                  [--family llama-7b|gpt2|vit-b32] [--scale S] [--layers L]
+//!                  [--batch M] [--passes P] [--concurrency C] [--seed S]
+//!                  [--shards 1,2,4] [--workers W] [--partition contiguous|interleaved]
+//!                  [--steal] [--smoke] [--json FILE] [--precision bf16]
+//!                  # replay deterministic transformer-layer traces through the
+//!                  # sharded coordinator; exits non-zero if any shard count's
+//!                  # output fingerprint diverges from the baseline
 //! vabft campaign --table8
 //!                  [--precision bf16] [--dist n11|nz|u|u01|trunc] [--trials N] [--offline]
 //!                  # legacy single-configuration Table 8 bit ladder
@@ -36,13 +45,17 @@ fn main() {
     match args.subcommand.as_deref() {
         Some("calibrate") => cmd_calibrate(&args),
         Some("campaign") => cmd_campaign(&args),
+        Some("serve-replay") => cmd_serve_replay(&args),
         Some("tightness") => cmd_tightness(&args),
         Some("gemm") => cmd_gemm(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("info") | None => cmd_info(),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
-            eprintln!("usage: vabft [calibrate|campaign|tightness|gemm|artifacts|info] [--flags]");
+            eprintln!(
+                "usage: vabft [calibrate|campaign|serve-replay|tightness|gemm|artifacts|info] \
+                 [--flags]"
+            );
             std::process::exit(2);
         }
     }
@@ -151,8 +164,9 @@ fn cmd_campaign(args: &Args) {
         GridConfig::quick(seed)
     };
     let workers = args.opt_or("workers", 4usize);
+    let shards = args.opt_or("shards", 1usize);
     println!(
-        "campaign grid: mode={} seed=0x{seed:x} workers={workers} \
+        "campaign grid: mode={} seed=0x{seed:x} workers={workers} shards={shards} \
          ({} precisions x {} strategies x {} dists x {} sites x {} bits)",
         cfg.mode,
         cfg.precisions.len(),
@@ -162,7 +176,7 @@ fn cmd_campaign(args: &Args) {
         cfg.bit_classes.len(),
     );
     let t0 = std::time::Instant::now();
-    let outcome = campaign::run(&cfg, workers);
+    let outcome = campaign::run_sharded(&cfg, workers, shards);
     let elapsed = t0.elapsed();
     for t in campaign::render_tables(&outcome) {
         t.print();
@@ -261,6 +275,131 @@ fn cmd_campaign_table8(args: &Args) {
     println!(
         "clean rows checked: {}   false positives: {}",
         res.clean_rows_checked, res.false_positives
+    );
+}
+
+/// Replay deterministic transformer-layer traces through the sharded
+/// coordinator at each requested shard count, assert the output
+/// fingerprint is shard-invariant (the differential gate — exits
+/// non-zero on divergence), print the throughput ladder, and optionally
+/// write the `vabft-serving/v1` document.
+fn cmd_serve_replay(args: &Args) {
+    use vabft::coordinator::{CoordinatorConfig, PartitionPolicy};
+    use vabft::gemm::{AccumModel, ParallelismConfig};
+    use vabft::workload::{replay_doc, run_replay, ReplayConfig, ReplayRow};
+
+    let smoke = args.flag("smoke");
+    let family =
+        args.opt("family").unwrap_or(if smoke { "gpt2" } else { "llama-7b" }).to_string();
+    let seed = args.opt_or("seed", 0x5E12u64);
+    let mut cfg =
+        if smoke { ReplayConfig::smoke(&family, seed) } else { ReplayConfig::quick(&family, seed) };
+    cfg.scale = args.opt_or("scale", cfg.scale).max(1);
+    cfg.layers = args.opt_or("layers", cfg.layers).max(1);
+    cfg.batch = args.opt_or("batch", cfg.batch).max(1);
+    cfg.passes = args.opt_or("passes", cfg.passes).max(1);
+    cfg.concurrency = args.opt_or("concurrency", cfg.concurrency).max(1);
+
+    let precision = parse_precision(args, Precision::Bf16);
+    let model = if precision == Precision::F32 || precision == Precision::F64 {
+        AccumModel::gpu_highprec(precision)
+    } else {
+        AccumModel::wide(precision)
+    };
+    let workers = args.opt_or("workers", 2usize).max(1);
+    let partition = PartitionPolicy::parse(args.opt("partition").unwrap_or("contiguous"))
+        .unwrap_or_else(|| {
+            eprintln!("unknown partition policy (contiguous|interleaved)");
+            std::process::exit(2);
+        });
+    let steal = args.flag("steal");
+    let shard_counts: Vec<usize> = args
+        .opt("shards")
+        .unwrap_or(if smoke { "1,2" } else { "1,2,4" })
+        .split(',')
+        .map(|s| {
+            s.trim().parse().unwrap_or_else(|_| {
+                eprintln!("invalid --shards list '{s}'");
+                std::process::exit(2);
+            })
+        })
+        .collect();
+    println!(
+        "serve-replay: family={family} scale={} layers={} batch={} passes={} \
+         concurrency={} seed=0x{seed:x} model={} partition={} steal={steal} workers/shard={workers}",
+        cfg.scale,
+        cfg.layers,
+        cfg.batch,
+        cfg.passes,
+        cfg.concurrency,
+        model.label(),
+        partition.name(),
+    );
+
+    let mut rows: Vec<ReplayRow> = Vec::new();
+    let mut t = Table::new(
+        "Sharded serving replay",
+        &["shards", "requests", "elapsed", "req/s", "GFLOP/s", "stolen", "speedup", "fp=="],
+    );
+    for &shards in &shard_counts {
+        let ccfg = CoordinatorConfig {
+            workers,
+            queue_depth: (2 * cfg.concurrency).max(16),
+            model,
+            parallelism: ParallelismConfig::from_args(args),
+            shards: shards.max(1),
+            partition,
+            steal,
+            ..Default::default()
+        };
+        let report = run_replay(&cfg, ccfg);
+        let row = ReplayRow::ladder(
+            report,
+            rows.first(),
+            partition.name(),
+            steal,
+            workers,
+            cfg.concurrency,
+        );
+        t.row(vec![
+            shards.to_string(),
+            row.report.requests.to_string(),
+            format!("{:?}", row.report.elapsed),
+            format!("{:.1}", row.report.rps()),
+            format!("{:.2}", row.report.gflops()),
+            row.report.stolen.to_string(),
+            format!("{:.2}x", row.speedup_vs_baseline),
+            if row.fingerprint_equal { "yes".into() } else { "DIVERGED".into() },
+        ]);
+        rows.push(row);
+    }
+    t.print();
+    if let Some(f) = args.opt("json") {
+        let mode = if smoke { "smoke" } else { "custom" };
+        match replay_doc(&rows, mode).write_to(f) {
+            Ok(p) => println!("wrote {}", p.display()),
+            Err(e) => {
+                eprintln!("failed to write {f}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    if rows.iter().any(|r| !r.fingerprint_equal) {
+        eprintln!(
+            "serve-replay gate FAILED: output fingerprint diverged across shard counts \
+             (sharding must be pure scheduling)"
+        );
+        std::process::exit(1);
+    }
+    let faulty: usize = rows.iter().map(|r| r.report.faulty).sum();
+    if faulty > 0 {
+        eprintln!("serve-replay gate FAILED: {faulty} non-clean verdicts on a clean replay");
+        std::process::exit(1);
+    }
+    println!(
+        "gate OK: fingerprint identical across shards {:?}; all {} responses clean",
+        shard_counts,
+        rows.iter().map(|r| r.report.requests).sum::<usize>()
     );
 }
 
@@ -530,5 +669,7 @@ fn cmd_info() {
         }
     }
     t.print();
-    println!("subcommands: calibrate | campaign | tightness | gemm | artifacts | info");
+    println!(
+        "subcommands: calibrate | campaign | serve-replay | tightness | gemm | artifacts | info"
+    );
 }

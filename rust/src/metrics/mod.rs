@@ -116,6 +116,9 @@ pub struct ServiceMetrics {
     pub faults_corrected: Counter,
     /// Rows recomputed via the escalation path.
     pub rows_recomputed: Counter,
+    /// Jobs executed by a worker of a shard other than the one they were
+    /// routed to (cross-shard work stealing).
+    pub jobs_stolen: Counter,
     /// Campaign grid cells fully executed through this coordinator (the
     /// campaign engine's progress signal).
     pub campaign_cells: Counter,
@@ -125,16 +128,91 @@ pub struct ServiceMetrics {
     pub latency: Histogram,
 }
 
+/// A consistent point-in-time copy of every [`ServiceMetrics`] counter —
+/// what [`ServiceMetrics::snapshot`] returns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    /// Requests accepted into the queues.
+    pub jobs_submitted: u64,
+    /// Requests fully processed (including errored lookups).
+    pub jobs_completed: u64,
+    /// Batches accepted via `submit_batch`.
+    pub batches_submitted: u64,
+    /// Rows that exceeded their detection threshold.
+    pub faults_detected: u64,
+    /// Detections repaired in place via localization.
+    pub faults_corrected: u64,
+    /// Rows recomputed via the escalation path.
+    pub rows_recomputed: u64,
+    /// Jobs executed by a non-home shard (work stealing).
+    pub jobs_stolen: u64,
+    /// Campaign cells executed.
+    pub campaign_cells: u64,
+    /// Campaign trials executed.
+    pub campaign_trials: u64,
+    /// Latencies recorded.
+    pub latency_count: u64,
+}
+
 impl ServiceMetrics {
     /// All-zero metrics.
     pub fn new() -> ServiceMetrics {
         Default::default()
     }
 
+    /// One read of every counter, in a fixed order (the building block of
+    /// [`ServiceMetrics::snapshot`]).
+    fn read_all(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            jobs_submitted: self.jobs_submitted.get(),
+            jobs_completed: self.jobs_completed.get(),
+            batches_submitted: self.batches_submitted.get(),
+            faults_detected: self.faults_detected.get(),
+            faults_corrected: self.faults_corrected.get(),
+            rows_recomputed: self.rows_recomputed.get(),
+            jobs_stolen: self.jobs_stolen.get(),
+            campaign_cells: self.campaign_cells.get(),
+            campaign_trials: self.campaign_trials.get(),
+            latency_count: self.latency.count(),
+        }
+    }
+
+    /// A quiesced, mutually-consistent snapshot of every counter.
+    ///
+    /// Each counter is individually atomic, but reading them one after
+    /// another can observe a torn total (e.g. a drain loop seeing
+    /// `jobs_completed > jobs_submitted` because a worker incremented
+    /// between the two loads). This method re-reads the full counter set
+    /// until two consecutive sweeps agree — the returned value is then a
+    /// consistent cut: no counter changed while it was being assembled.
+    ///
+    /// Intended for quiesce points (after a drain, join, or shutdown).
+    /// A sweep is ~a dozen relaxed loads, so even under sustained
+    /// traffic two clean sweeps fit inside ordinary inter-update gaps;
+    /// after a burst of failed attempts the loop yields the CPU between
+    /// retries rather than spinning hot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut prev = self.read_all();
+        let mut attempts = 0u32;
+        loop {
+            let cur = self.read_all();
+            if cur == prev {
+                return cur;
+            }
+            prev = cur;
+            attempts = attempts.saturating_add(1);
+            if attempts > 16 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    }
+
     /// One-line human-readable summary of every counter.
     pub fn summary(&self) -> String {
         format!(
-            "jobs={}/{} batches={} detected={} corrected={} recomputed_rows={} \
+            "jobs={}/{} batches={} detected={} corrected={} recomputed_rows={} stolen={} \
              campaign_cells={} campaign_trials={} mean={:?} p95={:?}",
             self.jobs_completed.get(),
             self.jobs_submitted.get(),
@@ -142,6 +220,7 @@ impl ServiceMetrics {
             self.faults_detected.get(),
             self.faults_corrected.get(),
             self.rows_recomputed.get(),
+            self.jobs_stolen.get(),
             self.campaign_cells.get(),
             self.campaign_trials.get(),
             self.latency.mean(),
@@ -179,5 +258,40 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.quantile(0.5), Duration::ZERO);
         assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn snapshot_is_a_consistent_cut_under_concurrent_updates() {
+        // The writer maintains the invariant `jobs_submitted ≥
+        // jobs_completed` at every instant (submitted is always
+        // incremented first). Naive field-by-field reads can tear it —
+        // read submitted, lose the race, read a newer completed.
+        // `snapshot()` must never expose a torn pair, and must converge
+        // to the exact totals once the writer quiesces.
+        use std::sync::Arc;
+        const N: u64 = 20_000;
+        let m = Arc::new(ServiceMetrics::new());
+        let w = {
+            let m = Arc::clone(&m);
+            std::thread::spawn(move || {
+                for _ in 0..N {
+                    m.jobs_submitted.inc();
+                    m.jobs_completed.inc();
+                }
+            })
+        };
+        while !w.is_finished() {
+            let s = m.snapshot();
+            assert!(
+                s.jobs_submitted >= s.jobs_completed,
+                "torn snapshot: submitted {} < completed {}",
+                s.jobs_submitted,
+                s.jobs_completed
+            );
+        }
+        w.join().unwrap();
+        let s = m.snapshot();
+        assert_eq!((s.jobs_submitted, s.jobs_completed), (N, N));
+        assert_eq!(s, m.snapshot(), "quiesced snapshots must be stable");
     }
 }

@@ -19,6 +19,22 @@ mod xoshiro;
 pub use distributions::Distribution;
 pub use xoshiro::{SplitMix64, Xoshiro256pp};
 
+/// FNV-1a 64-bit offset basis — the canonical initial state for
+/// [`fnv1a`].
+pub const FNV1A_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold `bytes` into an FNV-1a hash state (64-bit). The crate's one
+/// stable, dependency-free byte hash: the campaign grid derives operand
+/// stream ids with it and the replay workload builds its output
+/// fingerprint from it — one implementation, so the two can never drift.
+pub fn fnv1a(h: u64, bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h = h;
+    for b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// Minimal RNG interface (the `rand_core` API surface we actually need).
 pub trait Rng {
     /// Next 64 uniformly random bits.
@@ -124,5 +140,17 @@ mod tests {
         let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
         let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
         assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Canonical FNV-1a test vectors (64-bit).
+        assert_eq!(fnv1a(FNV1A_OFFSET, std::iter::empty::<u8>()), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(FNV1A_OFFSET, *b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(FNV1A_OFFSET, *b"foobar"), 0x85944171f73967e8);
+        // Chaining two folds equals one fold over the concatenation.
+        let once = fnv1a(FNV1A_OFFSET, *b"foobar");
+        let twice = fnv1a(fnv1a(FNV1A_OFFSET, *b"foo"), *b"bar");
+        assert_eq!(once, twice);
     }
 }

@@ -1,0 +1,19 @@
+//! Serving workloads: deterministic request streams driven through the
+//! [`crate::coordinator`].
+//!
+//! Real NN inference is a *mix* of differently-shaped layer GEMMs, not
+//! one square multiply — the arithmetic-intensity spread across a
+//! model's layers is exactly what makes scheduling interesting (skewed
+//! per-request cost, weight reuse, bursty concurrency). This module
+//! turns the published layer-shape profiles of
+//! [`crate::experiments::real_model`] into replayable traces
+//! ([`replay`]) so the sharded serving tier can be load-tested and
+//! differential-tested against a workload with production structure,
+//! while staying fully seeded and machine-independent.
+
+pub mod replay;
+
+pub use replay::{
+    build_trace, replay_doc, run_replay, LayerTrace, ReplayConfig, ReplayReport, ReplayRow,
+    TraceEntry,
+};

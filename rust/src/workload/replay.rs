@@ -1,0 +1,459 @@
+//! Transformer-layer replay: a deterministic serving workload.
+//!
+//! [`build_trace`] expands a model family's published layer shapes
+//! ([`crate::experiments::real_model::model_weight_profiles`]) into a
+//! forward-pass-ordered list of GEMM requests over distinct weight
+//! tensors; [`run_replay`] registers every weight once (the
+//! weight-stationary path) and replays the trace through
+//! [`Coordinator::submit_batch_prepared`] at a configurable concurrency,
+//! one batch in flight ahead of the drain.
+//!
+//! Everything is seeded: weights and activations come from fixed RNG
+//! streams, and the report carries an order-sensitive FNV-1a
+//! **fingerprint** over every response's output bits and verdict. Two
+//! runs with the same `(config, seed)` — at any shard count, partition
+//! policy, steal setting or worker count — must produce the same
+//! fingerprint; `tests/shard_equivalence.rs` and the `serve-replay
+//! --smoke` CI step pin exactly that.
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::abft::Verdict;
+use crate::bench_harness::{JsonDoc, JsonValue, SERVING_SCHEMA};
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, GemmResponse, PreparedGemmRequest, WeightHandle,
+};
+use crate::matrix::Matrix;
+use crate::rng::{fnv1a, Distribution, Xoshiro256pp, FNV1A_OFFSET};
+
+/// Stream tags separating the replay's RNG streams (weights vs
+/// activations) from each other and from other subsystems' streams.
+const WEIGHT_TAG: u64 = 0x5E2F_11AD;
+const ACT_TAG: u64 = 0x5E2F_22BE;
+
+/// Replay workload configuration.
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    /// Model family (`"llama-7b"`, `"gpt2"`, `"vit-b32"`).
+    pub family: String,
+    /// Shape divisor (1 = published sizes; larger = scaled down).
+    pub scale: usize,
+    /// Transformer layers replayed per pass.
+    pub layers: usize,
+    /// Activation rows per request (the GEMM's M — the serving batch).
+    pub batch: usize,
+    /// Forward passes replayed over the trace.
+    pub passes: usize,
+    /// Requests per in-flight batch (`submit_batch_prepared` size; one
+    /// batch is submitted ahead of the drain, so up to 2× this many
+    /// requests are outstanding).
+    pub concurrency: usize,
+    /// Master seed for weights and activations.
+    pub seed: u64,
+}
+
+impl ReplayConfig {
+    /// Tiny deterministic configuration for CI smoke runs (sub-second).
+    pub fn smoke(family: &str, seed: u64) -> ReplayConfig {
+        ReplayConfig {
+            family: family.to_string(),
+            scale: 32,
+            layers: 1,
+            batch: 4,
+            passes: 2,
+            concurrency: 4,
+            seed,
+        }
+    }
+
+    /// Bench-quick configuration (seconds).
+    pub fn quick(family: &str, seed: u64) -> ReplayConfig {
+        ReplayConfig {
+            family: family.to_string(),
+            scale: 16,
+            layers: 2,
+            batch: 8,
+            passes: 4,
+            concurrency: 8,
+            seed,
+        }
+    }
+}
+
+/// One request of a replay trace.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    /// Layer name from the weight profile (`"wq/wk/wv/wo"`, …).
+    pub name: &'static str,
+    /// Index into the trace's distinct weights.
+    pub weight: usize,
+    /// GEMM shape (m, k, n) of the request.
+    pub m: usize,
+    /// GEMM reduction depth.
+    pub k: usize,
+    /// GEMM output columns.
+    pub n: usize,
+    /// FLOPs of this request, per
+    /// [`crate::experiments::WeightProfile::gemm_flops`] — the single
+    /// source of the FLOP-counting convention.
+    pub flops: f64,
+}
+
+/// A forward-pass-ordered trace over distinct weight tensors.
+#[derive(Debug, Clone)]
+pub struct LayerTrace {
+    /// Model family the trace was built from.
+    pub family: String,
+    /// One entry per GEMM of one forward pass, in layer order.
+    pub entries: Vec<TraceEntry>,
+    /// Distinct weight tensors: `(k, n, element distribution)` — one per
+    /// (layer, profile, instance).
+    pub weights: Vec<(usize, usize, Distribution)>,
+}
+
+impl LayerTrace {
+    /// Total FLOPs of one pass over the trace.
+    pub fn pass_flops(&self) -> f64 {
+        self.entries.iter().map(|e| e.flops).sum()
+    }
+}
+
+/// Expand `family`'s layer profiles into a replayable trace: every
+/// (layer, profile, instance) becomes one distinct weight tensor and one
+/// trace entry per forward pass, in layer order.
+pub fn build_trace(cfg: &ReplayConfig) -> LayerTrace {
+    let profiles = crate::experiments::model_weight_profiles(&cfg.family, cfg.scale.max(1));
+    let mut entries = Vec::new();
+    let mut weights = Vec::new();
+    for _layer in 0..cfg.layers.max(1) {
+        for p in &profiles {
+            for _instance in 0..p.count {
+                let widx = weights.len();
+                weights.push((
+                    p.rows,
+                    p.cols,
+                    Distribution::Normal { mean: p.mean, std: p.std },
+                ));
+                entries.push(TraceEntry {
+                    name: p.name,
+                    weight: widx,
+                    m: cfg.batch.max(1),
+                    k: p.rows,
+                    n: p.cols,
+                    flops: p.gemm_flops(cfg.batch.max(1)),
+                });
+            }
+        }
+    }
+    LayerTrace { family: cfg.family.clone(), entries, weights }
+}
+
+/// Outcome of one replay run.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    /// Model family replayed.
+    pub family: String,
+    /// Requests completed (entries × passes).
+    pub requests: usize,
+    /// Distinct weight tensors registered.
+    pub weights: usize,
+    /// Total FLOPs executed.
+    pub flops: f64,
+    /// Wall-clock time of the replay (excluding weight registration).
+    pub elapsed: Duration,
+    /// Requests completed that verified clean.
+    pub clean: usize,
+    /// Requests with any non-clean verdict (should be zero on a clean
+    /// replay).
+    pub faulty: usize,
+    /// Order-sensitive FNV-1a fingerprint over every response's output
+    /// bits and verdict, in submission order — the differential-test
+    /// contract: invariant across shards × partition × steal × workers.
+    pub fingerprint: u64,
+    /// Shards the coordinator ran.
+    pub shards: usize,
+    /// Jobs executed by a non-home shard (work stealing).
+    pub stolen: u64,
+}
+
+impl ReplayReport {
+    /// Requests per second.
+    pub fn rps(&self) -> f64 {
+        self.requests as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+
+    /// Aggregate GFLOP/s across the replay.
+    pub fn gflops(&self) -> f64 {
+        self.flops / 1e9 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Fold one response into the fingerprint state (little-endian byte
+/// order; the shared [`crate::rng::fnv1a`] hash).
+fn fold_response(h: u64, resp: &GemmResponse) -> u64 {
+    let mut h = fnv1a(h, resp.id.to_le_bytes());
+    match &resp.result {
+        Err(_) => h = fnv1a(h, u64::MAX.to_le_bytes()),
+        Ok(out) => {
+            let tag: u64 = match out.report.verdict {
+                Verdict::Clean => 0,
+                Verdict::Corrected => 1,
+                Verdict::Recomputed => 2,
+                Verdict::Flagged => 3,
+            };
+            h = fnv1a(h, tag.to_le_bytes());
+            for &v in out.c.data() {
+                h = fnv1a(h, v.to_bits().to_le_bytes());
+            }
+        }
+    }
+    h
+}
+
+/// Replay `cfg` through a coordinator started from `ccfg`. Weights are
+/// sampled and registered once (streams keyed off `cfg.seed`), then the
+/// trace is replayed `cfg.passes` times in `cfg.concurrency`-sized
+/// prepared batches, one batch submitted ahead of the drain. Responses
+/// are folded into the fingerprint in submission order.
+///
+/// The coordinator's accumulation model decides the operand grid; the
+/// caller owns `ccfg` entirely (shards, partition, steal, workers,
+/// engine parallelism) — none of it can change the fingerprint.
+pub fn run_replay(cfg: &ReplayConfig, ccfg: CoordinatorConfig) -> ReplayReport {
+    let trace = build_trace(cfg);
+    let model = ccfg.model;
+    let coord = Coordinator::start(ccfg);
+
+    // Register every distinct weight once; keep the handles (requests go
+    // through the id-free prepared path, like a production router).
+    let handles: Vec<WeightHandle> = trace
+        .weights
+        .iter()
+        .enumerate()
+        .map(|(i, (k, n, dist))| {
+            let mut rng = Xoshiro256pp::from_stream(cfg.seed ^ WEIGHT_TAG, i as u64);
+            let b = Matrix::sample_in(*k, *n, dist, model.input, &mut rng);
+            coord.register_weights(i as u32, &b)
+        })
+        .collect();
+
+    // Pre-sample one activation per trace entry (unit-normal
+    // post-layernorm statistics), reused across passes — sampling cost
+    // stays out of the timed replay.
+    let acts: Vec<Matrix> = trace
+        .entries
+        .iter()
+        .enumerate()
+        .map(|(i, e)| {
+            let mut rng = Xoshiro256pp::from_stream(cfg.seed ^ ACT_TAG, i as u64);
+            let unit = Distribution::Normal { mean: 0.0, std: 1.0 };
+            Matrix::sample_in(e.m, e.k, &unit, model.input, &mut rng)
+        })
+        .collect();
+
+    let total = trace.entries.len() * cfg.passes.max(1);
+    let mut clean = 0usize;
+    let mut faulty = 0usize;
+    let mut fingerprint = FNV1A_OFFSET;
+    let mut drain = |pending: Vec<(u64, Receiver<GemmResponse>)>| {
+        for (id, rx) in pending {
+            let resp = rx.recv().expect("replay worker died");
+            assert_eq!(resp.id, id, "replay response mis-routed");
+            match &resp.result {
+                Ok(out) if out.report.verdict == Verdict::Clean => clean += 1,
+                _ => faulty += 1,
+            }
+            fingerprint = fold_response(fingerprint, &resp);
+        }
+    };
+
+    let flops = trace.pass_flops() * cfg.passes.max(1) as f64;
+    let t0 = Instant::now();
+    let mut inflight: Option<Vec<(u64, Receiver<GemmResponse>)>> = None;
+    let mut wave: Vec<PreparedGemmRequest> = Vec::with_capacity(cfg.concurrency.max(1));
+    for _pass in 0..cfg.passes.max(1) {
+        for (i, e) in trace.entries.iter().enumerate() {
+            wave.push(PreparedGemmRequest {
+                a: acts[i].clone(),
+                weights: Arc::clone(&handles[e.weight]),
+                inject: None,
+            });
+            if wave.len() >= cfg.concurrency.max(1) {
+                let pending = coord.submit_batch_prepared(std::mem::take(&mut wave));
+                if let Some(prev) = inflight.take() {
+                    drain(prev);
+                }
+                inflight = Some(pending);
+            }
+        }
+    }
+    if !wave.is_empty() {
+        let pending = coord.submit_batch_prepared(std::mem::take(&mut wave));
+        if let Some(prev) = inflight.take() {
+            drain(prev);
+        }
+        inflight = Some(pending);
+    }
+    if let Some(prev) = inflight.take() {
+        drain(prev);
+    }
+    let elapsed = t0.elapsed();
+
+    let shards = coord.shards();
+    let stolen = coord.metrics().jobs_stolen.get();
+    coord.shutdown();
+    ReplayReport {
+        family: trace.family,
+        requests: total,
+        weights: handles.len(),
+        flops,
+        elapsed,
+        clean,
+        faulty,
+        fingerprint,
+        shards,
+        stolen,
+    }
+}
+
+/// One row of the `BENCH_serving.json` document: a replay run under one
+/// coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct ReplayRow {
+    /// The run's report.
+    pub report: ReplayReport,
+    /// Partition policy label (`"contiguous"` / `"interleaved"`).
+    pub partition: String,
+    /// Whether work stealing was enabled.
+    pub steal: bool,
+    /// Workers per shard.
+    pub workers: usize,
+    /// Batch concurrency of the replay.
+    pub concurrency: usize,
+    /// Throughput speedup vs the run's baseline row (1.0 for the
+    /// baseline itself).
+    pub speedup_vs_baseline: f64,
+    /// Whether the fingerprint matched the baseline row's (the
+    /// differential gate; always true for the baseline).
+    pub fingerprint_equal: bool,
+}
+
+impl ReplayRow {
+    /// Assemble one ladder row: speedup and fingerprint equality are
+    /// computed against `baseline` (`None` for the baseline rung
+    /// itself). The one place the ladder-comparison rule lives — shared
+    /// by the `serve-replay` CLI and `benches/serving_replay.rs`, so the
+    /// two gates cannot drift.
+    pub fn ladder(
+        report: ReplayReport,
+        baseline: Option<&ReplayRow>,
+        partition: &str,
+        steal: bool,
+        workers: usize,
+        concurrency: usize,
+    ) -> ReplayRow {
+        let (speedup_vs_baseline, fingerprint_equal) = match baseline {
+            None => (1.0, true),
+            Some(b) => (
+                report.rps() / b.report.rps().max(1e-9),
+                report.fingerprint == b.report.fingerprint,
+            ),
+        };
+        ReplayRow {
+            report,
+            partition: partition.to_string(),
+            steal,
+            workers,
+            concurrency,
+            speedup_vs_baseline,
+            fingerprint_equal,
+        }
+    }
+}
+
+/// Assemble the schema-versioned `vabft-serving/v1` document from replay
+/// rows (shared by `benches/serving_replay.rs` and `vabft serve-replay
+/// --json`). `mode` labels how the rows were produced (`"quick"` /
+/// `"full"` for the bench per [`crate::bench_harness::BenchMode`],
+/// `"smoke"` / `"custom"` for CLI runs) — the caller knows; this
+/// function does not guess from the environment.
+pub fn replay_doc(rows: &[ReplayRow], mode: &str) -> JsonDoc {
+    let mut doc = JsonDoc::new(SERVING_SCHEMA);
+    doc.meta("bench", JsonValue::Str("serving_replay".to_string()));
+    doc.meta("mode", JsonValue::Str(mode.to_string()));
+    for r in rows {
+        doc.entry(vec![
+            ("family".to_string(), JsonValue::Str(r.report.family.clone())),
+            ("shards".to_string(), JsonValue::Int(r.report.shards as i64)),
+            ("partition".to_string(), JsonValue::Str(r.partition.clone())),
+            ("steal".to_string(), JsonValue::Bool(r.steal)),
+            ("workers".to_string(), JsonValue::Int(r.workers as i64)),
+            ("concurrency".to_string(), JsonValue::Int(r.concurrency as i64)),
+            ("requests".to_string(), JsonValue::Int(r.report.requests as i64)),
+            ("rps".to_string(), JsonValue::Num(r.report.rps())),
+            ("gflops".to_string(), JsonValue::Num(r.report.gflops())),
+            ("speedup_vs_baseline".to_string(), JsonValue::Num(r.speedup_vs_baseline)),
+            ("fingerprint_equal".to_string(), JsonValue::Bool(r.fingerprint_equal)),
+        ]);
+    }
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_shapes_follow_profiles() {
+        let cfg = ReplayConfig::smoke("gpt2", 7);
+        let t = build_trace(&cfg);
+        assert_eq!(t.entries.len(), t.weights.len(), "one entry per weight per pass");
+        assert!(!t.entries.is_empty());
+        for e in &t.entries {
+            let (k, n, _) = &t.weights[e.weight];
+            assert_eq!((e.k, e.n), (*k, *n));
+            assert_eq!(e.m, cfg.batch);
+            assert_eq!(e.flops, 2.0 * e.m as f64 * e.k as f64 * e.n as f64);
+        }
+        assert!(t.pass_flops() > 0.0);
+        // layers multiply the trace
+        let two = build_trace(&ReplayConfig { layers: 2, ..cfg });
+        assert_eq!(two.entries.len(), 2 * t.entries.len());
+    }
+
+    #[test]
+    fn replay_is_clean_and_fingerprint_is_reproducible() {
+        let cfg = ReplayConfig::smoke("gpt2", 11);
+        let run = |workers: usize| {
+            run_replay(
+                &cfg,
+                CoordinatorConfig { workers, queue_depth: 32, ..Default::default() },
+            )
+        };
+        let a = run(1);
+        assert_eq!(a.faulty, 0, "clean replay must verify clean everywhere");
+        assert_eq!(a.requests, a.clean);
+        assert_eq!(a.weights, build_trace(&cfg).weights.len());
+        let b = run(3);
+        assert_eq!(a.fingerprint, b.fingerprint, "fingerprint depends on worker count");
+        assert_eq!(a.requests, b.requests);
+    }
+
+    #[test]
+    fn replay_doc_is_schema_valid() {
+        let cfg = ReplayConfig::smoke("vit-b32", 3);
+        let report =
+            run_replay(&cfg, CoordinatorConfig { workers: 2, ..Default::default() });
+        let base = ReplayRow::ladder(report, None, "contiguous", false, 2, cfg.concurrency);
+        assert_eq!(base.speedup_vs_baseline, 1.0);
+        assert!(base.fingerprint_equal);
+        let rows = vec![base];
+        let json = replay_doc(&rows, "quick").to_json();
+        crate::bench_harness::validate_schema(&json, SERVING_SCHEMA).expect("schema");
+        assert!(json.contains("\"family\": \"vit-b32\""));
+        assert!(json.contains("\"mode\": \"quick\""));
+        assert!(json.contains("\"fingerprint_equal\": true"));
+    }
+}

@@ -44,6 +44,22 @@ fn campaign_json_is_byte_identical_across_thread_counts() {
     }
 }
 
+/// The `--shards` axis of the same contract: one campaign, same seed,
+/// byte-identical JSON at shard counts 1/2/4 (workers fixed at 2 per
+/// shard). Shard routing and cross-shard scheduling never touch a
+/// trial's arithmetic or the planning-order collection — the gate CI
+/// re-runs through the release CLI (`campaign --smoke --shards 2`).
+#[test]
+fn campaign_json_is_byte_identical_across_shard_counts() {
+    let cfg = GridConfig::smoke(SMOKE_SEED);
+    let reference = campaign::to_doc(&campaign::run_sharded(&cfg, 2, 1)).to_json();
+    assert!(validate_schema(&reference, CAMPAIGN_SCHEMA).is_ok());
+    for shards in [2usize, 4] {
+        let json = campaign::to_doc(&campaign::run_sharded(&cfg, 2, shards)).to_json();
+        assert_eq!(reference, json, "campaign JSON diverged at {shards} shards");
+    }
+}
+
 /// The push-gated CI smoke cell: BF16 × FMA × fused × output-site ×
 /// exponent-MSB, with pinned expected detections (see module docs for
 /// why the counts are provable).

@@ -5,14 +5,21 @@
 //! * every response reaches the receiver tagged with its own request id,
 //!   and carries the verdict its request implies (clean ↔ Clean,
 //!   exponent-flip injected ↔ not Clean);
-//! * metrics counters add up exactly across all threads and batches;
+//! * metrics counters add up exactly across all threads and batches —
+//!   read through `ServiceMetrics::snapshot()`, the quiesced consistent
+//!   cut (field-by-field reads can tear mid-drain);
 //! * `shutdown` drains queued work without deadlock (responses submitted
-//!   before shutdown are all eventually delivered).
+//!   before shutdown are all eventually delivered), with and without
+//!   cross-shard work stealing;
+//! * a skewed shape mix (90% tiny GEMMs, 10% large) across shards with
+//!   stealing enabled starves no submitter.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use vabft::coordinator::{Coordinator, CoordinatorConfig, GemmRequest, InjectSpec};
+use vabft::coordinator::{
+    Coordinator, CoordinatorConfig, GemmRequest, InjectSpec, PartitionPolicy, TopologyConfig,
+};
 use vabft::prelude::*;
 
 const WEIGHT_K: usize = 96;
@@ -104,17 +111,19 @@ fn concurrent_batched_submitters_route_and_count_exactly() {
     });
 
     let total = (SUBMITTERS * BATCHES_PER_THREAD * BATCH) as u64;
-    let m = c.metrics();
-    assert_eq!(m.jobs_submitted.get(), total);
-    assert_eq!(m.jobs_completed.get(), total);
-    assert_eq!(m.batches_submitted.get(), (SUBMITTERS * BATCHES_PER_THREAD) as u64);
-    assert_eq!(m.latency.count(), total);
+    // Quiesced snapshot: one consistent cut across every counter (naive
+    // per-field reads can observe torn totals mid-drain).
+    let m = c.metrics().snapshot();
+    assert_eq!(m.jobs_submitted, total);
+    assert_eq!(m.jobs_completed, total);
+    assert_eq!(m.batches_submitted, (SUBMITTERS * BATCHES_PER_THREAD) as u64);
+    assert_eq!(m.latency_count, total);
     let injected = injected_total.load(Ordering::Relaxed) as u64;
     assert!(injected > 0);
     assert!(
-        m.faults_detected.get() >= injected,
+        m.faults_detected >= injected,
         "detected {} < injected {injected}",
-        m.faults_detected.get()
+        m.faults_detected
     );
     c.shutdown();
 }
@@ -128,6 +137,153 @@ fn shutdown_drains_pending_batch_without_deadlock() {
     c.shutdown(); // must not deadlock; queued jobs complete first
     for (id, rx) in pending {
         let resp = rx.recv().expect("response lost during shutdown");
+        assert_eq!(resp.id, id);
+        assert!(resp.result.is_ok());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sharded + work-stealing stress
+// ---------------------------------------------------------------------
+
+const TINY_K: usize = 24;
+const TINY_N: usize = 16;
+const BIG_K: usize = 160;
+const BIG_N: usize = 128;
+const TINY_WEIGHT: u32 = 1;
+const BIG_WEIGHT: u32 = 2;
+
+fn start_sharded(shards: usize, steal: bool, queue_depth: usize) -> Coordinator {
+    let c = Coordinator::start(CoordinatorConfig {
+        workers: 1, // one worker per shard: stealing is the only slack
+        shards,
+        steal,
+        queue_depth,
+        partition: PartitionPolicy::Interleaved,
+        topology: Some(TopologyConfig::uniform(2, 2)),
+        model: AccumModel::wide(Precision::Bf16),
+        ..Default::default()
+    });
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+    let tiny =
+        Matrix::sample_in(TINY_K, TINY_N, &Distribution::normal_1_1(), Precision::Bf16, &mut rng);
+    let big =
+        Matrix::sample_in(BIG_K, BIG_N, &Distribution::normal_1_1(), Precision::Bf16, &mut rng);
+    c.register_weight(TINY_WEIGHT, &tiny);
+    c.register_weight(BIG_WEIGHT, &big);
+    c
+}
+
+fn act_for(seed: u64, big: bool) -> Matrix {
+    let mut rng = Xoshiro256pp::from_stream(0x51A7, seed);
+    let (m, k) = if big { (96, BIG_K) } else { (4, TINY_K) };
+    Matrix::sample_in(m, k, &Distribution::normal_1_1(), Precision::Bf16, &mut rng)
+}
+
+/// The skewed-mix soak: 90% tiny + 10% large requests from concurrent
+/// submitters over 4 shards with one worker each and stealing on. Every
+/// submitter must complete (no starvation behind the large GEMMs), every
+/// response must carry its own id, and the quiesced totals must add up.
+#[test]
+fn work_stealing_soak_skewed_mix_completes_without_starvation() {
+    const SOAK_SUBMITTERS: usize = 4;
+    const SOAK_BATCHES: usize = 2;
+    const SOAK_BATCH: usize = 10; // request i is big when i % 10 == 9
+
+    let c = start_sharded(4, true, 4);
+    std::thread::scope(|s| {
+        for tid in 0..SOAK_SUBMITTERS {
+            let c = &c;
+            s.spawn(move || {
+                for batch in 0..SOAK_BATCHES {
+                    let reqs: Vec<GemmRequest> = (0..SOAK_BATCH)
+                        .map(|i| {
+                            let big = i % 10 == 9;
+                            let seed = ((tid * SOAK_BATCHES + batch) * SOAK_BATCH + i) as u64;
+                            GemmRequest {
+                                a: act_for(seed, big),
+                                weight: if big { BIG_WEIGHT } else { TINY_WEIGHT },
+                                inject: None,
+                            }
+                        })
+                        .collect();
+                    for (id, rx) in c.submit_batch(reqs) {
+                        let resp = rx.recv().expect("starved: response never arrived");
+                        assert_eq!(resp.id, id, "response mis-routed (thread {tid})");
+                        let out = resp.result.expect("request failed");
+                        assert_eq!(out.report.verdict, Verdict::Clean);
+                    }
+                }
+            });
+        }
+    });
+    let total = (SOAK_SUBMITTERS * SOAK_BATCHES * SOAK_BATCH) as u64;
+    let m = c.metrics().snapshot();
+    assert_eq!(m.jobs_submitted, total);
+    assert_eq!(m.jobs_completed, total);
+    assert_eq!(m.batches_submitted, (SOAK_SUBMITTERS * SOAK_BATCHES) as u64);
+    assert_eq!(m.latency_count, total);
+    println!("soak: {} of {total} jobs were stolen cross-shard", m.jobs_stolen);
+    c.shutdown();
+}
+
+/// Targeted steal scenario: pin shard 1's worker on one very large GEMM,
+/// give shard 0 a small one, then queue tiny requests on both shards.
+/// Shard 0's worker drains its own queue fast and must then steal shard
+/// 1's backlog instead of idling — the large job is hundreds of times
+/// the total tiny work, so a zero steal count means the steal path never
+/// engaged.
+#[test]
+fn idle_shard_steals_busy_shards_backlog() {
+    let c = start_sharded(2, true, 32);
+    // id 0 → shard 0 (small big-ish job), id 1 → shard 1 (very large).
+    let first =
+        c.submit(GemmRequest { a: act_for(1000, false), weight: TINY_WEIGHT, inject: None });
+    let mut rng = Xoshiro256pp::from_stream(0xB16, 0);
+    // ~79 MFLOP: pins shard 1's worker for many steal-poll intervals
+    // while its queue holds the tiny backlog.
+    let huge =
+        Matrix::sample_in(1920, BIG_K, &Distribution::normal_1_1(), Precision::Bf16, &mut rng);
+    let second = c.submit(GemmRequest { a: huge, weight: BIG_WEIGHT, inject: None });
+    // ids 2..42 alternate between the shards; shard 1's share queues up
+    // behind the large job.
+    let tiny: Vec<GemmRequest> = (0..40u64)
+        .map(|i| GemmRequest { a: act_for(1100 + i, false), weight: TINY_WEIGHT, inject: None })
+        .collect();
+    let pending = c.submit_batch(tiny);
+    for (id, rx) in pending {
+        let resp = rx.recv().expect("tiny request starved");
+        assert_eq!(resp.id, id);
+        assert!(resp.result.is_ok());
+    }
+    assert!(first.recv().unwrap().result.is_ok());
+    assert!(second.recv().unwrap().result.is_ok());
+    let m = c.metrics().snapshot();
+    assert_eq!(m.jobs_completed, 42);
+    assert!(
+        m.jobs_stolen >= 1,
+        "no cross-shard steal despite a pinned shard with queued backlog"
+    );
+    c.shutdown();
+}
+
+/// Drain-on-shutdown under steal: requests queued across shards at
+/// shutdown time are all still delivered (each shard's own workers drain
+/// their queue; stealers sweep what they can), with no deadlock.
+#[test]
+fn shutdown_drains_across_shards_under_steal() {
+    let c = start_sharded(4, true, 8);
+    let reqs: Vec<GemmRequest> = (0..16)
+        .map(|i| GemmRequest {
+            a: act_for(2000 + i, i % 10 == 9),
+            weight: if i % 10 == 9 { BIG_WEIGHT } else { TINY_WEIGHT },
+            inject: None,
+        })
+        .collect();
+    let pending = c.submit_batch(reqs);
+    c.shutdown(); // must not deadlock; queued jobs complete first
+    for (id, rx) in pending {
+        let resp = rx.recv().expect("response lost during sharded shutdown");
         assert_eq!(resp.id, id);
         assert!(resp.result.is_ok());
     }

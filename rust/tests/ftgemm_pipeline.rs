@@ -181,6 +181,153 @@ fn aabft_baseline_also_detects_but_with_larger_thresholds() {
     assert_ne!(out.report.verdict, Verdict::Clean);
 }
 
+// ---------------------------------------------------------------------
+// Correction round-trip regressions: for each precision × strategy, a
+// single above-threshold flip must be repaired to the *bitwise* fault-free
+// output, and the coordinator's metrics must match the verdict.
+//
+// Two repair regimes, by construction of the pipeline:
+//
+// * **Corrected** (wide/FP8 models): online correction subtracts D1 on
+//   the FP32 accumulator; the residual is verification rounding noise
+//   (~u_f32·|rowsum|), which the coarse output rounding absorbs — the
+//   corrected element re-rounds to exactly the clean output value.
+// * **Recomputed** (models whose output grid *is* the verify grid, so
+//   correction noise would survive): a recompute-only policy re-executes
+//   the flagged row on the same engine, and schedule preservation makes
+//   the recomputed row bitwise-identical to the clean run.
+// ---------------------------------------------------------------------
+
+use vabft::coordinator::{Coordinator, CoordinatorConfig, GemmRequest, InjectSpec};
+
+/// Run one (model, policy) case through a fresh coordinator: clean
+/// request, then the same activation with a single above-threshold
+/// output flip. `bit` must address an exponent bit of the model's
+/// verify grid (the FP32 work grid for wide models, the native grid
+/// otherwise); the strike lands on row 2's largest-magnitude element,
+/// so the realized |δ| is at least ~0.75× that element — orders of
+/// magnitude above the online threshold. Returns (clean output,
+/// faulty-run output, verdict, detections, recomputed, snapshot).
+fn round_trip(
+    model: AccumModel,
+    policy: VerifyPolicy,
+    bit: u32,
+    seed: u64,
+) -> (Matrix, Matrix, Verdict, usize, usize, vabft::metrics::MetricsSnapshot) {
+    let c = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        model,
+        policy,
+        ..Default::default()
+    });
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let d = Distribution::normal_1_1();
+    let b = Matrix::sample_in(48, 24, &d, model.input, &mut rng);
+    let a = Matrix::sample_in(6, 48, &d, model.input, &mut rng);
+    c.register_weight(1, &b);
+    let clean = c
+        .call(GemmRequest { a: a.clone(), weight: 1, inject: None })
+        .result
+        .expect("clean run failed");
+    assert_eq!(clean.report.verdict, Verdict::Clean, "{model:?}: clean run flagged");
+    // Strike the row's largest element: maximal detection margin.
+    let row = 2usize;
+    let col = (0..clean.c.cols())
+        .max_by(|&x, &y| {
+            clean.c.get(row, x).abs().partial_cmp(&clean.c.get(row, y).abs()).unwrap()
+        })
+        .unwrap();
+    let faulty = c
+        .call(GemmRequest { a, weight: 1, inject: Some(InjectSpec::output(row, col, bit)) })
+        .result
+        .expect("faulty run failed");
+    let snap = c.metrics().snapshot();
+    let verdict = faulty.report.verdict;
+    let detections = faulty.report.detections.len();
+    let recomputed = faulty.report.rows_recomputed;
+    c.shutdown();
+    (clean.c, faulty.c, verdict, detections, recomputed, snap)
+}
+
+/// Every strategy applied to a base accumulation model.
+fn with_strategies(base: AccumModel) -> Vec<AccumModel> {
+    [ReduceStrategy::Sequential, ReduceStrategy::Fma, ReduceStrategy::Pairwise]
+        .into_iter()
+        .map(|strategy| AccumModel { strategy, ..base })
+        .collect()
+}
+
+#[test]
+fn correction_round_trip_is_bitwise_for_wide_models() {
+    let mut seed = 700;
+    for base in [
+        AccumModel::wide(Precision::Bf16),
+        AccumModel::wide(Precision::F16),
+        AccumModel::fp8(Precision::F8E4M3),
+    ] {
+        for model in with_strategies(base) {
+            seed += 1;
+            // Bit 24 = FP32 exponent bit 1: rescales the struck value by
+            // 2^±2 (|δ| ≥ 0.75·|v|) while keeping the faulty row sum
+            // small enough that D1's own rounding noise stays far below
+            // the output grid's ulp — so correction restores the exact
+            // clean output bits.
+            let (clean, repaired, verdict, detections, recomputed, m) =
+                round_trip(model, VerifyPolicy::default(), 24, seed);
+            assert_eq!(verdict, Verdict::Corrected, "{model:?}");
+            assert_eq!(detections, 1, "{model:?}: one upset, one detection");
+            assert_eq!(recomputed, 0, "{model:?}");
+            assert_eq!(
+                repaired.data(),
+                clean.data(),
+                "{model:?}: corrected output must be bitwise-equal to the fault-free run"
+            );
+            // Metrics must match the verdict exactly.
+            assert_eq!(m.faults_detected, 1, "{model:?}");
+            assert_eq!(m.faults_corrected, 1, "{model:?}");
+            assert_eq!(m.rows_recomputed, 0, "{model:?}");
+            assert_eq!(m.jobs_completed, 2, "{model:?}");
+        }
+    }
+}
+
+#[test]
+fn recompute_round_trip_is_bitwise_for_full_precision_models() {
+    // Recompute-only policy: correction noise on a same-grid output
+    // could never be bitwise, recomputation always is.
+    let policy = VerifyPolicy {
+        online: true,
+        correct: false,
+        recompute: true,
+        reverify: false,
+        localize_tol: 0.45,
+    };
+    let mut seed = 800;
+    // Exponent bit 1 of each model's verify grid: bit 24 on FP32,
+    // bit 53 on FP64.
+    for (base, bit) in [
+        (AccumModel::gpu_highprec(Precision::F32), 24u32),
+        (AccumModel::cpu(Precision::F64), 53),
+    ] {
+        for model in with_strategies(base) {
+            seed += 1;
+            let (clean, repaired, verdict, detections, recomputed, m) =
+                round_trip(model, policy, bit, seed);
+            assert_eq!(verdict, Verdict::Recomputed, "{model:?}");
+            assert_eq!(detections, 1, "{model:?}");
+            assert_eq!(recomputed, 1, "{model:?}");
+            assert_eq!(
+                repaired.data(),
+                clean.data(),
+                "{model:?}: recomputed output must be bitwise-equal to the fault-free run"
+            );
+            assert_eq!(m.faults_detected, 1, "{model:?}");
+            assert_eq!(m.faults_corrected, 0, "{model:?}");
+            assert_eq!(m.rows_recomputed, 1, "{model:?}");
+        }
+    }
+}
+
 #[test]
 fn strategy_changes_error_but_not_results_materially() {
     // Ablation: sequential vs pairwise vs fma give the same product to

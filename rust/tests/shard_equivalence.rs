@@ -1,0 +1,289 @@
+//! The sharding differential harness: shards ∈ {1, 2, 4} × partition
+//! policies × steal on/off must produce **bitwise-identical** outputs,
+//! verdicts and per-row thresholds for the same seeds.
+//!
+//! This is the contract that makes the serving tier safe to scale:
+//! sharding, NUMA partitioning and work stealing are *pure scheduling* —
+//! they decide where a request executes, never what it computes — so
+//! every calibrated e_max and every verification decision carries over
+//! unchanged from the single-queue coordinator. A divergence here means
+//! a scheduling knob leaked into the rounding schedule, which would
+//! silently invalidate the paper's threshold model in production.
+//!
+//! The request mix deliberately exercises every observation channel:
+//! mixed activation shapes, clean and injected requests (output, operand
+//! and checksum fault sites), id-based and handle-based submission, and
+//! both monolithic and blockwise weight preparation.
+
+use std::sync::Arc;
+
+use vabft::abft::FtGemmOutput;
+use vabft::coordinator::{
+    Coordinator, CoordinatorConfig, GemmRequest, InjectSpec, PartitionPolicy,
+    PreparedGemmRequest, TopologyConfig,
+};
+use vabft::prelude::*;
+use vabft::workload::{run_replay, ReplayConfig};
+
+const K: usize = 64;
+const N: usize = 48;
+
+/// Everything a response exposes that the contract covers, with floats
+/// captured as raw bits (equality must be bitwise, not approximate).
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Obs {
+    id: u64,
+    /// Output matrix bits, row-major (empty for errored requests).
+    c_bits: Vec<u64>,
+    /// Error string for failed requests (None on success).
+    err: Option<String>,
+    verdict: Option<u8>,
+    /// Per-detection (row, localized col, D1 bits, D2 bits, threshold
+    /// bits, corrected).
+    detections: Vec<(usize, Option<usize>, u64, u64, u64, bool)>,
+    rows_checked: usize,
+    rows_recomputed: usize,
+    /// Report-level threshold telemetry, as bits.
+    min_threshold: u64,
+    max_abs_d1: u64,
+    /// Realized injected delta, as bits (0 when the request was clean).
+    injected_delta: u64,
+}
+
+fn verdict_tag(v: Verdict) -> u8 {
+    match v {
+        Verdict::Clean => 0,
+        Verdict::Corrected => 1,
+        Verdict::Recomputed => 2,
+        Verdict::Flagged => 3,
+    }
+}
+
+fn observe(id: u64, result: &Result<FtGemmOutput, String>, delta: Option<f64>) -> Obs {
+    match result {
+        Err(e) => Obs {
+            id,
+            c_bits: Vec::new(),
+            err: Some(e.clone()),
+            verdict: None,
+            detections: Vec::new(),
+            rows_checked: 0,
+            rows_recomputed: 0,
+            min_threshold: 0,
+            max_abs_d1: 0,
+            injected_delta: delta.unwrap_or(0.0).to_bits(),
+        },
+        Ok(out) => Obs {
+            id,
+            c_bits: out.c.data().iter().map(|v| v.to_bits()).collect(),
+            err: None,
+            verdict: Some(verdict_tag(out.report.verdict)),
+            detections: out
+                .report
+                .detections
+                .iter()
+                .map(|d| {
+                    let (d1, d2, t) = (d.d1.to_bits(), d.d2.to_bits(), d.threshold.to_bits());
+                    (d.row, d.col, d1, d2, t, d.corrected)
+                })
+                .collect(),
+            rows_checked: out.report.rows_checked,
+            rows_recomputed: out.report.rows_recomputed,
+            min_threshold: out.report.min_threshold.to_bits(),
+            max_abs_d1: out.report.max_abs_d1.to_bits(),
+            injected_delta: delta.unwrap_or(0.0).to_bits(),
+        },
+    }
+}
+
+fn weights(seed: u64) -> Matrix {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    Matrix::sample_in(K, N, &Distribution::normal_1_1(), Precision::Bf16, &mut rng)
+}
+
+fn activation(seed: u64, m: usize) -> Matrix {
+    let mut rng = Xoshiro256pp::from_stream(0x5EED, seed);
+    Matrix::sample_in(m, K, &Distribution::normal_1_1(), Precision::Bf16, &mut rng)
+}
+
+/// Every fifth request carries an injection, cycling through the fault
+/// sites (all above-threshold: exponent-class flips on the fused grid).
+fn inject_for(i: usize) -> Option<InjectSpec> {
+    if i % 5 != 4 {
+        return None;
+    }
+    Some(match (i / 5) % 3 {
+        0 => InjectSpec::output(i % 5, (7 * i) % N, 27),
+        1 => InjectSpec::operand_a(i % 5, (3 * i) % K, (5 * i) % N, 12),
+        _ => InjectSpec::checksum(i % 5, 26),
+    })
+}
+
+/// Run the canonical seeded request mix through one coordinator
+/// configuration and observe every response — plus the full per-row
+/// threshold vectors the registered handle issues for each activation
+/// shape (computed by the same pipeline implementation the responses
+/// used).
+fn run_config(
+    shards: usize,
+    partition: PartitionPolicy,
+    steal: bool,
+    block_k: Option<usize>,
+) -> (Vec<Obs>, Vec<Vec<u64>>) {
+    let c = Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        queue_depth: 8, // smaller than the batch: exercises backpressure
+        shards,
+        partition,
+        steal,
+        block_k,
+        // Synthetic topology: identical planning input everywhere, so
+        // the only variables are the axes under test.
+        topology: Some(TopologyConfig::uniform(2, 2)),
+        ..Default::default()
+    });
+    let b = weights(1);
+    let handle = c.register_weights(7, &b);
+
+    // Mixed shapes: serving batches of 1, 5 and 8 rows.
+    let shapes = [1usize, 5, 8];
+    let mut pending = Vec::new();
+    let mut injected = Vec::new();
+    for i in 0..24usize {
+        let a = activation(100 + i as u64, shapes[i % shapes.len()]);
+        let inject = inject_for(i);
+        injected.push(inject);
+        // Alternate id-based and handle-based submission.
+        let (id, rx) = if i % 2 == 0 {
+            c.submit_tagged(GemmRequest { a, weight: 7, inject })
+        } else {
+            c.submit_prepared_tagged(PreparedGemmRequest {
+                a,
+                weights: Arc::clone(&handle),
+                inject,
+            })
+        };
+        pending.push((id, rx));
+    }
+
+    let mut obs = Vec::new();
+    for (i, (id, rx)) in pending.into_iter().enumerate() {
+        let resp = rx.recv().expect("worker dropped reply");
+        assert_eq!(resp.id, id, "response mis-routed");
+        if injected[i].is_some() {
+            assert!(resp.injected.is_some(), "injection outcome missing on request {i}");
+        }
+        obs.push(observe(id, &resp.result, resp.injected.map(|o| o.delta())));
+    }
+
+    // The per-row threshold vectors for each activation shape, exactly
+    // as the pipeline issues them from this coordinator's prepared
+    // state.
+    let vab = VabftThreshold::default();
+    let thresholds: Vec<Vec<u64>> = shapes
+        .iter()
+        .map(|&m| {
+            let a = activation(100, m);
+            handle
+                .blocks()
+                .iter()
+                .flat_map(|blk| {
+                    vab.thresholds_prepared(&a, &blk.stats, handle.ctx())
+                        .into_iter()
+                        .map(|t| t.to_bits())
+                })
+                .collect()
+        })
+        .collect();
+
+    c.shutdown();
+    (obs, thresholds)
+}
+
+#[test]
+fn shards_partitions_and_steal_are_bitwise_equivalent() {
+    let (reference, ref_thr) = run_config(1, PartitionPolicy::Contiguous, false, None);
+    // The mix must actually exercise detection: some non-clean verdicts.
+    assert!(
+        reference.iter().any(|o| o.verdict.map(|v| v != 0).unwrap_or(false)),
+        "request mix produced no detections — the harness lost its teeth"
+    );
+    assert!(reference.iter().all(|o| o.err.is_none()));
+    for shards in [1usize, 2, 4] {
+        for partition in [PartitionPolicy::Contiguous, PartitionPolicy::Interleaved] {
+            for steal in [false, true] {
+                let (got, thr) = run_config(shards, partition, steal, None);
+                assert_eq!(
+                    got, reference,
+                    "divergence at shards={shards} partition={} steal={steal}",
+                    partition.name()
+                );
+                assert_eq!(
+                    thr, ref_thr,
+                    "per-row thresholds diverged at shards={shards} partition={} steal={steal}",
+                    partition.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn blockwise_prepared_weights_are_equally_shard_invariant() {
+    // Same contract at block_k granularity (per-K-block thresholds):
+    // K = 64 → 4 blocks of 16.
+    let (reference, ref_thr) = run_config(1, PartitionPolicy::Contiguous, false, Some(16));
+    assert!(reference.iter().all(|o| o.rows_checked % 4 == 0), "expected 4 K-blocks per check");
+    for (shards, partition, steal) in [
+        (2usize, PartitionPolicy::Interleaved, true),
+        (4, PartitionPolicy::Contiguous, true),
+        (4, PartitionPolicy::Interleaved, false),
+    ] {
+        let (got, thr) = run_config(shards, partition, steal, Some(16));
+        assert_eq!(
+            got, reference,
+            "blockwise divergence at shards={shards} partition={} steal={steal}",
+            partition.name()
+        );
+        assert_eq!(thr, ref_thr);
+    }
+}
+
+#[test]
+fn replay_fingerprint_is_shard_invariant() {
+    // The workload-level restatement: a whole transformer-layer replay's
+    // output fingerprint (every response's bits + verdict, in order) is
+    // identical across shard configurations.
+    let cfg = ReplayConfig::smoke("gpt2", 0xFACE);
+    let run = |shards: usize, partition: PartitionPolicy, steal: bool| {
+        run_replay(
+            &cfg,
+            CoordinatorConfig {
+                workers: 1,
+                queue_depth: 16,
+                shards,
+                partition,
+                steal,
+                topology: Some(TopologyConfig::uniform(2, 2)),
+                ..Default::default()
+            },
+        )
+    };
+    let base = run(1, PartitionPolicy::Contiguous, false);
+    assert_eq!(base.faulty, 0);
+    for (shards, partition, steal) in [
+        (2usize, PartitionPolicy::Contiguous, true),
+        (2, PartitionPolicy::Interleaved, false),
+        (4, PartitionPolicy::Interleaved, true),
+    ] {
+        let r = run(shards, partition, steal);
+        assert_eq!(
+            r.fingerprint,
+            base.fingerprint,
+            "replay fingerprint diverged at shards={shards} partition={} steal={steal}",
+            partition.name()
+        );
+        assert_eq!(r.requests, base.requests);
+        assert_eq!(r.faulty, 0);
+    }
+}

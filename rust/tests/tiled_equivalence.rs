@@ -108,7 +108,14 @@ fn prop_tiled_engine_bitwise_equals_naive_reference() {
             for threads in [1usize, 2, 4] {
                 for tiles in tile_grid() {
                     let micro = micro_grid()[case % micro_grid().len()];
-                    let par = ParallelismConfig { threads, tiles, micro };
+                    // Alternate the row-split policy across cases: both
+                    // must be bitwise-equal to the reference.
+                    let split = if case % 2 == 0 {
+                        RowSplit::Contiguous
+                    } else {
+                        RowSplit::Interleaved
+                    };
+                    let par = ParallelismConfig { threads, tiles, micro, split };
                     let got = GemmEngine::with_parallelism(model, par).matmul(&a, &b);
                     assert_eq!(
                         got.acc.data(),
@@ -156,7 +163,12 @@ fn prop_packed_path_ragged_shapes() {
             for threads in [1usize, 2, 8] {
                 for tiles in tile_grid() {
                     for micro in micro_grid() {
-                        let par = ParallelismConfig { threads, tiles, micro };
+                        let split = if threads % 2 == 0 {
+                            RowSplit::Interleaved
+                        } else {
+                            RowSplit::Contiguous
+                        };
+                        let par = ParallelismConfig { threads, tiles, micro, split };
                         let got64 = tiled::gemm_f64(a.data(), b.data(), m, k, n, strategy, &par);
                         assert_eq!(
                             got64, want64,
@@ -168,7 +180,12 @@ fn prop_packed_path_ragged_shapes() {
                             "packed f32 {m}x{k}x{n} {strategy:?} {par:?}"
                         );
                     }
-                    let par = ParallelismConfig { threads, tiles, micro: MicroConfig::DEFAULT };
+                    let par = ParallelismConfig {
+                        threads,
+                        tiles,
+                        micro: MicroConfig::DEFAULT,
+                        split: RowSplit::Interleaved,
+                    };
                     let unp64 =
                         tiled::gemm_unpacked_f64(a.data(), b.data(), m, k, n, strategy, &par);
                     assert_eq!(unp64, want64, "unpacked f64 {m}x{k}x{n} {strategy:?}");
@@ -252,7 +269,9 @@ fn encoded_multiply_is_thread_invariant() {
     for threads in [2usize, 4] {
         for tiles in tile_grid() {
             for micro in [MicroConfig::DEFAULT, MicroConfig::new(3, 5)] {
-                let par = ParallelismConfig { threads, tiles, micro };
+                let split =
+                    if threads == 2 { RowSplit::Interleaved } else { RowSplit::Contiguous };
+                let par = ParallelismConfig { threads, tiles, micro, split };
                 let engine = GemmEngine::with_parallelism(model, par);
                 let got = engine.matmul_mixed(&a, &enc.b_encoded, enc.wide_cols());
                 assert_eq!(got.acc.data(), base.acc.data(), "{par:?}");
