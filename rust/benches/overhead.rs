@@ -4,14 +4,33 @@
 //! The paper reports 11.98% average FT-GEMM overhead on Ascend 910B with
 //! <2% from threshold computation, vs >200% for DMR. Absolute numbers
 //! here are CPU-simulation numbers; the shape that must reproduce is
-//! threshold ≪ FT-GEMM ≪ DMR.
+//! threshold ≪ FT-GEMM ≪ DMR. The ladder includes the fused verify
+//! point (detection inside the packed GEMM epilogue) and appends every
+//! row to the shared `BENCH_gemm.json` trajectory — the same file the
+//! parallel_engine bench writes — so one committed document carries the
+//! full perf record. Full mode asserts the fused acceptance bar:
+//! < 10% overhead vs plain GEMM at 1024³.
 
-use vabft::bench_harness::BenchMode;
+use vabft::bench_harness::{BenchMode, BenchRecord, BenchRecords};
 use vabft::experiments::{run_overhead, OverheadConfig};
 use vabft::fp::Precision;
 use vabft::gemm::AccumModel;
 use vabft::report::Table;
 use vabft::rng::Distribution;
+
+/// Short machine-readable slug for a ladder row label.
+fn engine_slug(label: &str) -> &str {
+    match label {
+        "plain GEMM" => "plain",
+        "FT-GEMM (encode per call)" => "ftgemm-cold",
+        "FT-GEMM (prepared weights)" => "ftgemm-prepared",
+        "FT-GEMM (fused epilogue, prepared)" => "ftgemm-fused",
+        "DMR (2x GEMM + compare)" => "dmr",
+        "threshold only (full)" => "threshold-full",
+        "threshold only (prepared)" => "threshold-prepared",
+        other => other,
+    }
+}
 
 fn main() {
     let mode = BenchMode::from_env();
@@ -21,6 +40,7 @@ fn main() {
         vec![(128usize, 1024usize, 256usize)],
         vec![(128, 1024, 256), (512, 512, 512), (1024, 1024, 1024)],
     );
+    let mut records = BenchRecords::new("overhead");
 
     for shape in shapes {
         for model in [AccumModel::wide(Precision::Bf16), AccumModel::gpu_highprec(Precision::F32)]
@@ -33,6 +53,8 @@ fn main() {
                 seed: 0x0E0,
             };
             let rows = run_overhead(&cfg);
+            let base = rows[0].median.as_secs_f64();
+            let case = format!("{}x{}x{}", shape.0, shape.1, shape.2);
             let mut t = Table::new(
                 &format!("§6.8 — Overhead, shape {:?}, model {}", shape, model.label()),
                 &["Configuration", "median time", "overhead vs plain"],
@@ -43,9 +65,43 @@ fn main() {
                     format!("{:?}", r.median),
                     format!("{:+.2}%", r.overhead_pct),
                 ]);
+                records.push(BenchRecord {
+                    case: case.clone(),
+                    precision: model.input.name().to_string(),
+                    strategy: model.strategy.name().to_string(),
+                    engine: engine_slug(&r.label).to_string(),
+                    threads: 1,
+                    unit: "ms".into(),
+                    value: r.median.as_secs_f64() * 1e3,
+                    speedup_vs_baseline: base / r.median.as_secs_f64(),
+                    bitwise_equal: true,
+                });
             }
             t.print();
+            // Acceptance bar (full mode, 1024³): the fused verify point
+            // must stay under 10% overhead vs the unprotected GEMM.
+            if mode.is_full() && shape == (1024, 1024, 1024) {
+                let fused = rows
+                    .iter()
+                    .find(|r| r.label.contains("fused"))
+                    .expect("fused row missing from overhead ladder");
+                println!(
+                    "acceptance: fused FT-GEMM overhead at 1024³ ({}) = {:+.2}%",
+                    model.label(),
+                    fused.overhead_pct
+                );
+                assert!(
+                    fused.overhead_pct < 10.0,
+                    "fused FT-GEMM above the 10% overhead bar at 1024³: {:+.2}%",
+                    fused.overhead_pct
+                );
+            }
         }
+    }
+
+    match records.append("BENCH_gemm.json") {
+        Ok(path) => println!("\noverhead ladder appended to {}", path.display()),
+        Err(e) => eprintln!("\nwarning: could not update BENCH_gemm.json: {e}"),
     }
     println!("Paper §6.8: FT-GEMM total 11.98% avg overhead; threshold <2%; DMR >200%.");
 }

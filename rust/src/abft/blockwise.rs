@@ -17,7 +17,7 @@ use crate::abft::pipeline;
 use crate::abft::prepared::PreparedWeights;
 use crate::abft::{VerifyPolicy, VerifyReport};
 use crate::error::Result;
-use crate::gemm::GemmEngine;
+use crate::gemm::{GemmEngine, GemmOutput};
 use crate::matrix::Matrix;
 use crate::threshold::{Threshold, VabftThreshold};
 
@@ -108,6 +108,22 @@ impl BlockwiseFtGemm {
         b: &Matrix,
         mut inject: impl FnMut(usize, &mut Matrix),
     ) -> Result<BlockwiseOutput> {
+        self.run_cold(a, b, Some(move |bi: usize, o: &mut GemmOutput| inject(bi, &mut o.acc)))
+    }
+
+    /// Protected multiply without injection. Under [`VerifyPolicy::fused`]
+    /// each K-block's detection checks execute inside the packed GEMM
+    /// epilogue.
+    pub fn multiply(&self, a: &Matrix, b: &Matrix) -> Result<BlockwiseOutput> {
+        self.run_cold(a, b, None::<fn(usize, &mut GemmOutput)>)
+    }
+
+    fn run_cold<F: FnMut(usize, &mut GemmOutput)>(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        inject: Option<F>,
+    ) -> Result<BlockwiseOutput> {
         let out = pipeline::run_blocks(
             &self.engine,
             self.threshold.as_ref(),
@@ -115,7 +131,7 @@ impl BlockwiseFtGemm {
             a,
             b,
             self.block_k,
-            |bi, o| inject(bi, &mut o.acc),
+            inject,
         )?;
         Ok(BlockwiseOutput {
             c: out.c,
@@ -125,18 +141,13 @@ impl BlockwiseFtGemm {
         })
     }
 
-    /// Protected multiply without injection.
-    pub fn multiply(&self, a: &Matrix, b: &Matrix) -> Result<BlockwiseOutput> {
-        self.multiply_with_injection(a, b, |_, _| {})
-    }
-
     /// Protected multiply against prepared weights (the weight-stationary
     /// warm path): per-block encodings and statistics come from the
     /// handle, so no per-request O(K·N) work on B remains. Bitwise-equal
     /// to [`BlockwiseFtGemm::multiply`]. Errors if the handle's block
     /// granularity, model or verification point does not match.
     pub fn multiply_prepared(&self, a: &Matrix, w: &PreparedWeights) -> Result<BlockwiseOutput> {
-        self.multiply_prepared_with_injection(a, w, |_, _| {})
+        self.run_warm(a, w, None::<fn(usize, &mut GemmOutput)>)
     }
 
     /// Prepared-path multiply with per-block fault injection into the
@@ -146,6 +157,15 @@ impl BlockwiseFtGemm {
         a: &Matrix,
         w: &PreparedWeights,
         mut inject: impl FnMut(usize, &mut Matrix),
+    ) -> Result<BlockwiseOutput> {
+        self.run_warm(a, w, Some(move |bi: usize, o: &mut GemmOutput| inject(bi, &mut o.acc)))
+    }
+
+    fn run_warm<F: FnMut(usize, &mut GemmOutput)>(
+        &self,
+        a: &Matrix,
+        w: &PreparedWeights,
+        inject: Option<F>,
     ) -> Result<BlockwiseOutput> {
         crate::ensure!(
             w.block_k() == self.block_k,
@@ -159,7 +179,7 @@ impl BlockwiseFtGemm {
             &self.policy,
             a,
             w,
-            |bi, o| inject(bi, &mut o.acc),
+            inject,
         )?;
         Ok(BlockwiseOutput {
             c: out.c,

@@ -29,6 +29,15 @@ pub struct VerifyPolicy {
     /// ABFT, §3.6) instead of the stored output. ~1000× finer detection
     /// for low-precision GEMM.
     pub online: bool,
+    /// Run detection inside the packed GEMM epilogue: the checksum
+    /// dot-products and the |D1| > T comparison execute per output row as
+    /// its C tile leaves the microkernel registers, before any output
+    /// quantization (the paper's fused-kernel configuration). The epilogue
+    /// applies the identical engine-scheduled reductions the post-hoc
+    /// online verifier uses, so verdicts, reports and outputs are
+    /// bitwise-unchanged — only *where* detection runs moves. Requires
+    /// `online`; ignored when `online` is false.
+    pub fused: bool,
     /// Attempt localization + in-place correction of flagged rows.
     pub correct: bool,
     /// Recompute rows whose syndrome cannot be corrected (inconsistent
@@ -44,6 +53,7 @@ impl Default for VerifyPolicy {
     fn default() -> Self {
         VerifyPolicy {
             online: true,
+            fused: false,
             correct: true,
             recompute: true,
             localize_tol: 0.45,
@@ -59,11 +69,20 @@ impl VerifyPolicy {
         VerifyPolicy { online: false, ..Default::default() }
     }
 
+    /// Fused-epilogue verification: online detection executed inside the
+    /// packed GEMM epilogue while each C tile is still in registers,
+    /// pre-quantization (paper §3.6, the fused-kernel configuration).
+    /// Decisions are bitwise-identical to the default online policy.
+    pub fn fused() -> VerifyPolicy {
+        VerifyPolicy { online: true, fused: true, ..Default::default() }
+    }
+
     /// Detection only (no correction/recompute) — measurement
     /// configuration used by the FPR/DR experiments.
     pub fn detect_only(online: bool) -> VerifyPolicy {
         VerifyPolicy {
             online,
+            fused: false,
             correct: false,
             recompute: false,
             reverify: false,
@@ -122,6 +141,10 @@ pub struct VerifyReport {
     /// when no rows were checked). `min_threshold / max_abs_d1` on a
     /// clean run is the realized threshold tightness.
     pub min_threshold: f64,
+    /// Rows whose detection check executed inside the fused GEMM epilogue
+    /// (equal to `rows_checked` under [`VerifyPolicy::fused`], 0
+    /// otherwise).
+    pub rows_fused: usize,
 }
 
 /// Output of [`FtGemm::multiply`].
@@ -191,8 +214,19 @@ impl FtGemm {
     }
 
     /// Protected multiply: C = A·B with detection / correction per policy.
+    /// Under [`VerifyPolicy::fused`] the detection checks execute inside
+    /// the packed GEMM epilogue rather than as a post-hoc sweep.
     pub fn multiply(&self, a: &Matrix, b: &Matrix) -> Result<FtGemmOutput> {
-        self.multiply_with_injection(a, b, |_| {})
+        let out = pipeline::run_blocks(
+            &self.engine,
+            self.threshold.as_ref(),
+            &self.policy,
+            a,
+            b,
+            a.cols().max(1),
+            None::<fn(usize, &mut GemmOutput)>,
+        )?;
+        Ok(FtGemmOutput { c: out.c, report: out.report })
     }
 
     /// Protected multiply against prepared weights (serving hot path: no
@@ -220,11 +254,7 @@ impl FtGemm {
             &self.policy,
             a,
             w,
-            |bi, o| {
-                if let Some(f) = inject {
-                    f(bi, o)
-                }
-            },
+            inject.map(|f| move |bi: usize, o: &mut GemmOutput| f(bi, o)),
         )?;
         Ok(FtGemmOutput { c: out.c, report: out.report })
     }
@@ -246,11 +276,11 @@ impl FtGemm {
             a,
             b,
             a.cols().max(1),
-            |_, o| {
+            Some(move |_bi: usize, o: &mut GemmOutput| {
                 if let Some(f) = inject.take() {
                     f(o)
                 }
-            },
+            }),
         )?;
         Ok(FtGemmOutput { c: out.c, report: out.report })
     }

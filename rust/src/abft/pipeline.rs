@@ -20,10 +20,12 @@
 
 use crate::abft::encode::ChecksumEncoding;
 use crate::abft::prepared::PreparedWeights;
-use crate::abft::verify::{check_row, correct_in_place, localize, weight_vector, Localization};
+use crate::abft::verify::{
+    check_row, correct_in_place, localize, weight_vector, Localization, RowCheck,
+};
 use crate::abft::{Detection, Verdict, VerifyPolicy, VerifyReport};
 use crate::error::Result;
-use crate::gemm::{GemmEngine, GemmOutput};
+use crate::gemm::{FusedProbe, FusedRowCheck, GemmEngine, GemmOutput};
 use crate::matrix::Matrix;
 use crate::threshold::{Threshold, ThresholdContext};
 
@@ -66,12 +68,21 @@ pub(crate) fn threshold_ctx(engine: &GemmEngine, policy: &VerifyPolicy) -> Thres
 /// case) and feed the recomputation escalation path. `weights` is the
 /// position-weight vector of length `enc.n` (hoisted by callers: it
 /// depends only on N, not on the block).
+///
+/// `fused`, when present, carries the per-row detection checks already
+/// executed inside the GEMM epilogue (one entry per output row); the
+/// pipeline then consumes those verdicts instead of re-running the
+/// post-hoc sweep. The epilogue performs the identical engine-scheduled
+/// arithmetic `check_row` would, so the two sources are bitwise-equal —
+/// re-verification after an in-place correction always re-checks post-hoc
+/// (the epilogue saw the pre-correction tile).
 pub(crate) fn verify_block(
     engine: &GemmEngine,
     policy: &VerifyPolicy,
     enc: &ChecksumEncoding,
     thresholds: &[f64],
     weights: &[f64],
+    fused: Option<&[FusedRowCheck]>,
     out: GemmOutput,
     a_blk: &Matrix,
     b_blk: &Matrix,
@@ -90,7 +101,14 @@ pub(crate) fn verify_block(
     let mut max_abs_d1 = 0.0f64;
     let mut min_threshold = f64::INFINITY;
     for i in 0..part.rows() {
-        let rc = check_row(part.row(i), cr1[i], cr2[i], thresholds[i], engine, weights);
+        let rc = match fused {
+            Some(checks) => {
+                let fc = checks[i];
+                debug_assert_eq!(fc.row, i);
+                RowCheck { d1: fc.d1, d2: fc.d2, threshold: fc.threshold, flagged: fc.flagged }
+            }
+            None => check_row(part.row(i), cr1[i], cr2[i], thresholds[i], engine, weights),
+        };
         max_abs_d1 = max_abs_d1.max(if rc.d1.is_finite() { rc.d1.abs() } else { f64::INFINITY });
         min_threshold = min_threshold.min(rc.threshold);
         if !rc.flagged {
@@ -169,15 +187,18 @@ pub(crate) fn finalize(acc: Matrix, engine: &GemmEngine) -> Matrix {
 /// construction* — there is exactly one execution path.
 ///
 /// `inject(block_index, encoded_output)` is the experiment hook; it sees
-/// the *encoded* partial product (data + checksum columns).
-pub(crate) fn run_blocks(
+/// the *encoded* partial product (data + checksum columns). `None` means
+/// no injection — the distinction matters to the fused path, which can
+/// only run detection inside the GEMM epilogue when nothing mutates the
+/// product after the kernel returns.
+pub(crate) fn run_blocks<F: FnMut(usize, &mut GemmOutput)>(
     engine: &GemmEngine,
     threshold: &dyn Threshold,
     policy: &VerifyPolicy,
     a: &Matrix,
     b: &Matrix,
     block_k: usize,
-    inject: impl FnMut(usize, &mut GemmOutput),
+    inject: Option<F>,
 ) -> Result<PipelineOutput> {
     assert_eq!(
         a.cols(),
@@ -202,13 +223,23 @@ pub(crate) fn run_blocks(
 /// Per-block thresholds are evaluated at the BLOCK reduction depth, so
 /// e_max (and hence T) tightens with `block_k` exactly as on the cold
 /// path. Shape or model/policy mismatches return an error.
-pub(crate) fn run_prepared(
+///
+/// Under a fused policy (`policy.fused && policy.online`) with no
+/// injection hook, each block's detection checks execute inside the
+/// packed GEMM epilogue via [`GemmEngine::matmul_mixed_fused`] — per row,
+/// while the C tile leaves the registers and before any quantization.
+/// With an injection hook the simulated upset lands *after* the kernel
+/// returns, so the fused checks are re-swept over the mutated accumulator
+/// with [`GemmEngine::fused_sweep`] — the identical arithmetic at the
+/// identical verification point, which is what the experiment hook
+/// models (a corrupted register visible to the epilogue's checker).
+pub(crate) fn run_prepared<F: FnMut(usize, &mut GemmOutput)>(
     engine: &GemmEngine,
     threshold: &dyn Threshold,
     policy: &VerifyPolicy,
     a: &Matrix,
     w: &PreparedWeights,
-    mut inject: impl FnMut(usize, &mut GemmOutput),
+    mut inject: Option<F>,
 ) -> Result<PipelineOutput> {
     w.check_compatible(engine, policy)?;
     crate::ensure!(
@@ -224,6 +255,7 @@ pub(crate) fn run_prepared(
     let blocks = w.num_blocks();
     // Position weights depend only on N — hoisted out of the block loop.
     let weights = weight_vector(n);
+    let fused_active = policy.fused && policy.online;
 
     let mut acc = Matrix::zeros(m, n);
     let mut detections = Vec::new();
@@ -242,18 +274,51 @@ pub(crate) fn run_prepared(
             &a_own
         };
 
-        let mut out = engine.matmul_mixed(a_blk, &blk.enc.b_encoded, blk.enc.wide_cols());
-        inject(bi, &mut out);
-
         // Per-block thresholds from the cached B-side statistics; V-ABFT
-        // skips its O(K·N) pass over B entirely here.
+        // skips its O(K·N) pass over B entirely here. Resolved before the
+        // multiply so the fused epilogue can compare |D1| against T the
+        // moment each row's tile leaves the registers.
         let thresholds = threshold.thresholds_prepared(a_blk, &blk.stats, &ctx);
+
+        let (out, fused_checks) = if fused_active {
+            let probe = FusedProbe { n, weights: &weights, thresholds: &thresholds };
+            match inject.as_mut() {
+                None => {
+                    let (out, checks) = engine.matmul_mixed_fused(
+                        a_blk,
+                        &blk.enc.b_encoded,
+                        blk.enc.wide_cols(),
+                        &probe,
+                    );
+                    (out, Some(checks))
+                }
+                Some(f) => {
+                    // The simulated upset mutates the product after the
+                    // kernel returns; re-run the epilogue's checks over
+                    // the mutated accumulator at the same verification
+                    // point (pre-quantization, same arithmetic).
+                    let mut out =
+                        engine.matmul_mixed(a_blk, &blk.enc.b_encoded, blk.enc.wide_cols());
+                    f(bi, &mut out);
+                    let checks = engine.fused_sweep(&out.acc, &probe);
+                    (out, Some(checks))
+                }
+            }
+        } else {
+            let mut out = engine.matmul_mixed(a_blk, &blk.enc.b_encoded, blk.enc.wide_cols());
+            if let Some(f) = inject.as_mut() {
+                f(bi, &mut out);
+            }
+            (out, None)
+        };
+
         let bv = verify_block(
             engine,
             policy,
             &blk.enc,
             &thresholds,
             &weights,
+            fused_checks.as_deref(),
             out,
             a_blk,
             &blk.stats.b,
@@ -292,6 +357,7 @@ pub(crate) fn run_prepared(
             rows_recomputed,
             max_abs_d1,
             min_threshold,
+            rows_fused: if fused_active { m * blocks } else { 0 },
         },
         detection_blocks,
         blocks,

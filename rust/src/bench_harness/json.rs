@@ -107,6 +107,12 @@ impl JsonDoc {
         self.entries.is_empty()
     }
 
+    fn render_entry(fields: &[(String, JsonValue)]) -> String {
+        let body: Vec<String> =
+            fields.iter().map(|(k, v)| format!("\"{}\": {}", esc(k), v.render())).collect();
+        format!("{{{}}}", body.join(", "))
+    }
+
     /// Serialize deterministically (fixed order, fixed float formats).
     pub fn to_json(&self) -> String {
         let mut out = String::new();
@@ -117,16 +123,64 @@ impl JsonDoc {
         }
         out.push_str("  \"entries\": [\n");
         for (i, fields) in self.entries.iter().enumerate() {
-            let body: Vec<String> =
-                fields.iter().map(|(k, v)| format!("\"{}\": {}", esc(k), v.render())).collect();
             out.push_str(&format!(
-                "    {{{}}}{}\n",
-                body.join(", "),
+                "    {}{}\n",
+                Self::render_entry(fields),
                 if i + 1 == self.entries.len() { "" } else { "," }
             ));
         }
         out.push_str("  ]\n}\n");
         out
+    }
+
+    /// Splice this document's entries onto an existing serialized
+    /// document of the *same schema*, preserving the existing metadata
+    /// and entries verbatim. This is how several benches share one
+    /// trajectory file (`parallel_engine` writes `BENCH_gemm.json`, the
+    /// overhead bench appends its §6.8 ladder to it) without any of them
+    /// clobbering the others' measurements. Errors when `existing` fails
+    /// [`validate_schema`] for this document's schema.
+    pub fn splice_into(&self, existing: &str) -> Result<String, String> {
+        validate_schema(existing, &self.schema)?;
+        let open = existing
+            .find("\"entries\": [")
+            .ok_or_else(|| "document has no `entries` array".to_string())?;
+        let close = existing
+            .rfind(']')
+            .ok_or_else(|| "unterminated `entries` array".to_string())?;
+        if close < open {
+            return Err("malformed `entries` array".to_string());
+        }
+        let has_entries = existing[open..close].contains('{');
+        let mut out = existing[..close].trim_end().to_string();
+        for (i, fields) in self.entries.iter().enumerate() {
+            if has_entries || i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n    ");
+            out.push_str(&Self::render_entry(fields));
+        }
+        out.push_str("\n  ]\n}\n");
+        Ok(out)
+    }
+
+    /// Append this document's entries to `filename` at the repository
+    /// root (or `$<env_override>` verbatim when set and non-empty). When
+    /// the file already holds a same-schema document its metadata and
+    /// entries are preserved and the new entries are spliced on; a
+    /// missing, unreadable or foreign-schema file is overwritten fresh.
+    pub fn append(&self, filename: &str, env_override: &str) -> std::io::Result<PathBuf> {
+        let path = Self::resolve(filename, env_override);
+        match std::fs::read_to_string(&path) {
+            Ok(existing) => match self.splice_into(&existing) {
+                Ok(json) => {
+                    std::fs::write(&path, json)?;
+                    Ok(path)
+                }
+                Err(_) => self.write_to(path),
+            },
+            Err(_) => self.write_to(path),
+        }
     }
 
     /// Write the document to `path` verbatim (an explicitly requested
@@ -142,14 +196,20 @@ impl JsonDoc {
     /// `$<env_override>` verbatim when that variable is set and
     /// non-empty), returning the path.
     pub fn write(&self, filename: &str, env_override: &str) -> std::io::Result<PathBuf> {
+        self.write_to(Self::resolve(filename, env_override))
+    }
+
+    /// Resolve a trajectory destination: `$<env_override>` verbatim when
+    /// set and non-empty, else `filename` at the repository root.
+    fn resolve(filename: &str, env_override: &str) -> PathBuf {
         match std::env::var(env_override) {
-            Ok(p) if !p.is_empty() => self.write_to(p),
+            Ok(p) if !p.is_empty() => PathBuf::from(p),
             _ => {
                 // CARGO_MANIFEST_DIR is rust/; the trajectory lives at
                 // the workspace root next to README.md.
                 let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
                 let root = manifest.parent().map(|p| p.to_path_buf()).unwrap_or(manifest);
-                self.write_to(root.join(filename))
+                root.join(filename)
             }
         }
     }
@@ -267,6 +327,14 @@ impl BenchRecords {
     pub fn write(&self, filename: &str) -> std::io::Result<PathBuf> {
         self.to_doc().write(filename, "VABFT_BENCH_JSON")
     }
+
+    /// Append this record set's entries to `filename` at the repository
+    /// root (or `$VABFT_BENCH_JSON`), preserving entries another bench
+    /// already recorded in the same trajectory file. See
+    /// [`JsonDoc::splice_into`].
+    pub fn append(&self, filename: &str) -> std::io::Result<PathBuf> {
+        self.to_doc().append(filename, "VABFT_BENCH_JSON")
+    }
 }
 
 #[cfg(test)]
@@ -330,6 +398,39 @@ mod tests {
         let mut doc = JsonDoc::new(CAMPAIGN_SCHEMA);
         doc.meta("bench", JsonValue::Str("campaign".into()));
         assert!(validate_schema(&doc.to_json(), CAMPAIGN_SCHEMA).is_ok());
+    }
+
+    #[test]
+    fn splice_appends_entries_preserving_existing() {
+        let mut first = BenchRecords::new("first");
+        first.push(record());
+        let base = first.to_json();
+        let mut second = BenchRecords::new("second");
+        second.push(BenchRecord { engine: "other".into(), ..record() });
+        let merged = second.to_doc().splice_into(&base).unwrap();
+        assert!(validate_schema(&merged, BENCH_SCHEMA).is_ok());
+        // Existing metadata and entries survive; the new entry is added.
+        assert!(merged.contains("\"bench\": \"first\""));
+        assert!(merged.contains("\"engine\": \"packed\""));
+        assert!(merged.contains("\"engine\": \"other\""));
+        // Two entries → exactly one separating comma, last entry bare.
+        assert_eq!(merged.matches("},\n").count(), 1);
+        // Splicing onto the merged document again keeps growing it.
+        let grown = second.to_doc().splice_into(&merged).unwrap();
+        assert_eq!(grown.matches("},\n").count(), 2);
+        // The committed placeholder form (`"entries": []`) also accepts
+        // a first splice.
+        let placeholder = "{\n  \"schema\": \"vabft-bench/v1\",\n  \"bench\": \"x\",\n  \
+                           \"entries\": []\n}\n";
+        let seeded = second.to_doc().splice_into(placeholder).unwrap();
+        assert!(validate_schema(&seeded, BENCH_SCHEMA).is_ok());
+        assert!(seeded.contains("\"engine\": \"other\""));
+        assert_eq!(seeded.matches("},\n").count(), 0);
+        // Foreign schemas and shapeless documents are refused.
+        assert!(second.to_doc().splice_into("{}").is_err());
+        let mut campaign = JsonDoc::new(CAMPAIGN_SCHEMA);
+        campaign.entry(vec![("cell".to_string(), JsonValue::Int(0))]);
+        assert!(campaign.splice_into(&base).is_err());
     }
 
     #[test]

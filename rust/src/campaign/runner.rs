@@ -271,8 +271,11 @@ pub fn run_sharded(cfg: &GridConfig, workers: usize, shards: usize) -> CampaignO
     let vab = VabftThreshold::default();
     let aab = AabftThreshold::paper_repro();
     for ((model, verify), idxs) in groups {
+        // Fused cells run the real fused path: detection inside the packed
+        // GEMM epilogue (clean sweeps) or the same-arithmetic post-injection
+        // sweep (injected trials) — not an analytical model.
         let policy =
-            if verify.online() { VerifyPolicy::default() } else { VerifyPolicy::offline() };
+            if verify.online() { VerifyPolicy::fused() } else { VerifyPolicy::offline() };
         let coord = Coordinator::start(CoordinatorConfig {
             workers: workers.max(1),
             queue_depth: 256,

@@ -6,7 +6,11 @@
 //! dealt round-robin across shards by submission id — deterministic
 //! routing, no load feedback — and an optional cross-shard work-stealing
 //! pass lets idle shards drain backlogged neighbours when the shape mix
-//! is skewed. Stealing moves **whole requests** (never rows of one
+//! is skewed. Idle workers **park on condvars** (their shard queue's
+//! `not_empty`, or the pool-wide steal signal when stealing is on): an
+//! idle pool burns zero CPU, an enqueue wakes the workers that can
+//! serve it, and there is no polling interval anywhere.
+//! Stealing moves **whole requests** (never rows of one
 //! GEMM), and every worker executes the same schedule-preserving
 //! pipeline, so the shard count, partition policy and steal setting are
 //! pure scheduling: outputs, verdicts and thresholds are bitwise
@@ -18,12 +22,12 @@
 //! shared LRU on a miss or after any (re-)registration, which bumps a
 //! global generation and invalidates every shard cache at once.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use crate::abft::{FtGemm, FtGemmOutput, PreparedWeights, Verdict, VerifyPolicy};
 use crate::coordinator::partition::{PartitionPolicy, ShardPlan, TopologyConfig};
@@ -298,16 +302,124 @@ struct Job {
     submitted: Instant,
 }
 
-/// Base interval an idle worker blocks on its own queue between steal
-/// scans (only when stealing is enabled; without it workers block
-/// indefinitely). Doubles per consecutive empty scan up to
-/// `STEAL_POLL << STEAL_BACKOFF_MAX` (32 ms) so a traffic-less pool
-/// quiesces instead of spinning, while a freshly idle worker still
-/// notices a neighbour's backlog within ~0.5 ms.
-const STEAL_POLL: Duration = Duration::from_micros(500);
+/// State behind one shard queue's mutex: the buffered jobs plus the
+/// closed flag set at shutdown.
+struct QueueState {
+    deque: VecDeque<Job>,
+    closed: bool,
+}
 
-/// Max left-shift applied to [`STEAL_POLL`] by the idle backoff.
-const STEAL_BACKOFF_MAX: u32 = 6;
+/// One shard's bounded job queue: a mutex-guarded deque with two
+/// condvars. `not_empty` parks the shard's own workers when idle (an
+/// enqueue wakes exactly one — no polling), `not_full` parks producers
+/// at capacity (the submit-side backpressure the old `sync_channel`
+/// provided). Jobs buffered at close remain poppable until drained, so
+/// shutdown never drops accepted work.
+struct ShardQueue {
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl ShardQueue {
+    fn new(cap: usize) -> ShardQueue {
+        ShardQueue {
+            state: Mutex::new(QueueState { deque: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Bounded blocking push. Panics if the queue closed, matching the
+    /// old `SyncSender::send(..).expect("worker pool hung up")` surface.
+    fn push(&self, job: Job) {
+        let mut s = self.state.lock().unwrap();
+        while s.deque.len() >= self.cap && !s.closed {
+            s = self.not_full.wait(s).unwrap();
+        }
+        assert!(!s.closed, "worker pool hung up");
+        s.deque.push_back(job);
+        drop(s);
+        self.not_empty.notify_one();
+    }
+
+    /// Non-blocking pop — also the drain path after close: buffered jobs
+    /// keep coming out until the deque is empty.
+    fn try_pop(&self) -> Option<Job> {
+        let mut s = self.state.lock().unwrap();
+        let job = s.deque.pop_front();
+        if job.is_some() {
+            drop(s);
+            self.not_full.notify_one();
+        }
+        job
+    }
+
+    /// Blocking pop for the shard's own workers (the no-steal
+    /// configuration): parks on `not_empty` until a job arrives or the
+    /// queue closes empty (→ `None`, the shutdown return).
+    fn pop_wait(&self) -> Option<Job> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = s.deque.pop_front() {
+                drop(s);
+                self.not_full.notify_one();
+                return Some(job);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Close at shutdown: future pushes panic, parked workers and
+    /// producers all wake; buffered jobs stay poppable.
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// Pool-wide epoch-counted wakeup for steal-enabled workers. A worker
+/// snapshots the epoch *before* its scan (own queue, then every
+/// neighbour); any enqueue or shutdown during the scan bumps past the
+/// snapshot, so `wait_past` returns immediately instead of sleeping
+/// through the event — lost-wakeup-free parking with no timeout and no
+/// poll interval.
+struct StealSignal {
+    epoch: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl StealSignal {
+    fn new() -> StealSignal {
+        StealSignal { epoch: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    fn epoch(&self) -> u64 {
+        *self.epoch.lock().unwrap()
+    }
+
+    fn bump(&self) {
+        *self.epoch.lock().unwrap() += 1;
+        self.cv.notify_all();
+    }
+
+    fn wait_past(&self, seen: u64) {
+        let mut e = self.epoch.lock().unwrap();
+        while *e == seen {
+            e = self.cv.wait(e).unwrap();
+        }
+    }
+}
 
 /// The fault-tolerant GEMM service.
 ///
@@ -341,7 +453,9 @@ const STEAL_BACKOFF_MAX: u32 = 6;
 /// coord.shutdown();
 /// ```
 pub struct Coordinator {
-    txs: Option<Vec<SyncSender<Job>>>,
+    queues: Option<Vec<Arc<ShardQueue>>>,
+    steal_signal: Arc<StealSignal>,
+    steal: bool,
     handles: Vec<JoinHandle<()>>,
     shared: Arc<SharedWeights>,
     /// Kept so registration can clear every shard's read-through cache
@@ -357,7 +471,8 @@ pub struct Coordinator {
 /// Everything one worker thread needs (see [`worker_loop`]).
 struct WorkerCtx {
     shard: usize,
-    queues: Vec<Arc<Mutex<Receiver<Job>>>>,
+    queues: Vec<Arc<ShardQueue>>,
+    signal: Arc<StealSignal>,
     local: Arc<ShardWeightCache>,
     shared: Arc<SharedWeights>,
     metrics: Arc<ServiceMetrics>,
@@ -382,13 +497,9 @@ impl Coordinator {
         let shared = Arc::new(SharedWeights::new(cfg.weight_capacity));
         let metrics = Arc::new(ServiceMetrics::new());
 
-        let mut txs = Vec::with_capacity(nshards);
-        let mut queues: Vec<Arc<Mutex<Receiver<Job>>>> = Vec::with_capacity(nshards);
-        for _ in 0..nshards {
-            let (tx, rx) = sync_channel::<Job>(cfg.queue_depth.max(1));
-            txs.push(tx);
-            queues.push(Arc::new(Mutex::new(rx)));
-        }
+        let queues: Vec<Arc<ShardQueue>> =
+            (0..nshards).map(|_| Arc::new(ShardQueue::new(cfg.queue_depth.max(1)))).collect();
+        let signal = Arc::new(StealSignal::new());
         let locals: Vec<Arc<ShardWeightCache>> =
             (0..nshards).map(|_| Arc::new(ShardWeightCache::default())).collect();
 
@@ -398,6 +509,7 @@ impl Coordinator {
                 let ctx = WorkerCtx {
                     shard: spec.shard,
                     queues: queues.clone(),
+                    signal: Arc::clone(&signal),
                     local: Arc::clone(&locals[spec.shard]),
                     shared: Arc::clone(&shared),
                     metrics: Arc::clone(&metrics),
@@ -424,7 +536,9 @@ impl Coordinator {
             cfg.policy,
         ));
         Coordinator {
-            txs: Some(txs),
+            queues: Some(queues),
+            steal_signal: signal,
+            steal: cfg.steal && nshards > 1,
             handles,
             shared,
             shard_caches: locals,
@@ -517,12 +631,15 @@ impl Coordinator {
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.jobs_submitted.inc();
-        let txs = self.txs.as_ref().expect("coordinator already shut down");
+        let queues = self.queues.as_ref().expect("coordinator already shut down");
         // Deterministic round-robin routing: shard = id mod shards.
-        let shard = (id % txs.len() as u64) as usize;
-        txs[shard]
-            .send(Job { id, payload, reply: reply_tx, submitted: Instant::now() })
-            .expect("worker pool hung up");
+        let shard = (id % queues.len() as u64) as usize;
+        queues[shard].push(Job { id, payload, reply: reply_tx, submitted: Instant::now() });
+        if self.steal {
+            // Wake parked steal-enabled workers on every enqueue: any of
+            // them may legitimately serve this job.
+            self.steal_signal.bump();
+        }
         (id, reply_rx)
     }
 
@@ -568,7 +685,17 @@ impl Coordinator {
 
     /// Drain every shard's queue and join all workers.
     pub fn shutdown(mut self) {
-        drop(self.txs.take());
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        if let Some(queues) = self.queues.take() {
+            for q in &queues {
+                q.close();
+            }
+            // Wake parked steal-enabled workers so they observe closure.
+            self.steal_signal.bump();
+        }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -577,26 +704,18 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        drop(self.txs.take());
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+        self.halt();
     }
 }
 
-/// Steal one queued job from any other shard. `try_lock` only: a
-/// contended receiver mutex means one of that shard's own workers holds
-/// it — either blocked in `recv` (queue empty, nothing to steal) or
-/// mid-`try_recv` (it is taking the job anyway) — so skipping is both
-/// deadlock-free and near-optimal; the next scan retries.
+/// Steal one queued job from any other shard, scanning neighbours in a
+/// fixed rotation from this worker's shard. Each probe takes the target
+/// queue's mutex only for the deque pop — never across a GEMM.
 fn try_steal(ctx: &WorkerCtx) -> Option<Job> {
     let n = ctx.queues.len();
     for off in 1..n {
-        let q = &ctx.queues[(ctx.shard + off) % n];
-        if let Ok(guard) = q.try_lock() {
-            if let Ok(job) = guard.try_recv() {
-                return Some(job);
-            }
+        if let Some(job) = ctx.queues[(ctx.shard + off) % n].try_pop() {
+            return Some(job);
         }
     }
     None
@@ -612,64 +731,36 @@ fn worker_loop(ctx: WorkerCtx) {
 }
 
 /// Acquire this worker's next job: own queue first, then steal targets,
-/// then block on the own queue (briefly, when stealing, with
-/// exponential backoff across consecutive empty scans, so neighbours'
-/// backlogs are still noticed without an idle pool spinning). Returns
-/// `None` at shutdown — after the own queue is fully drained (`try_recv`
-/// yields every buffered job before `Disconnected`) and a final steal
-/// sweep found nothing; jobs still queued on other shards are drained by
-/// their own workers.
+/// then **park** until something changes. Without stealing the worker
+/// parks directly on its queue's `not_empty` condvar. With stealing it
+/// parks on the pool-wide steal signal, whose epoch it snapshotted
+/// *before* the scan — an enqueue (on any shard) or shutdown during the
+/// scan bumps past the snapshot and the wait returns immediately, so no
+/// wakeup can be lost and no polling interval exists. Returns `None` at
+/// shutdown, after the own queue is fully drained (`try_pop` yields
+/// every buffered job before the closed check) and a final steal sweep
+/// found nothing; jobs still queued on other shards are drained by their
+/// own workers.
 ///
-/// Every receiver lock is a temporary inside one statement here, so it
-/// is released before the job is returned — a worker never holds a queue
-/// lock while executing a GEMM. The backoff resets naturally: each call
-/// starts a fresh idle streak.
+/// Every queue lock is internal to one `ShardQueue` call, so a worker
+/// never holds a queue lock while executing a GEMM.
 fn next_job(ctx: &WorkerCtx) -> Option<(Job, bool)> {
-    let mut idle: u32 = 0;
+    if !ctx.steal {
+        return ctx.queues[ctx.shard].pop_wait().map(|j| (j, false));
+    }
+    let own = &ctx.queues[ctx.shard];
     loop {
-        let own = ctx.queues[ctx.shard].lock().unwrap().try_recv();
-        match own {
-            Ok(job) => return Some((job, false)),
-            Err(TryRecvError::Empty) => {}
-            Err(TryRecvError::Disconnected) => {
-                return if ctx.steal { try_steal(ctx).map(|j| (j, true)) } else { None };
-            }
+        let seen = ctx.signal.epoch();
+        if let Some(job) = own.try_pop() {
+            return Some((job, false));
         }
-        if ctx.steal {
-            if let Some(job) = try_steal(ctx) {
-                return Some((job, true));
-            }
-            // Catch fresh own-queue arrivals promptly. The receiver lock
-            // is held for at most STEAL_POLL, so shard siblings never
-            // serialize behind a long sleep and stay free to poll their
-            // own queue and run steal scans of their own.
-            let blocked = ctx.queues[ctx.shard].lock().unwrap().recv_timeout(STEAL_POLL);
-            match blocked {
-                Ok(job) => return Some((job, false)),
-                Err(RecvTimeoutError::Timeout) => {
-                    // Exponential idle backoff, slept WITHOUT the
-                    // receiver lock: a traffic-less pool quiesces while
-                    // siblings keep the queue responsive. Worst-case
-                    // wake latency for a single-worker shard is the
-                    // backoff cap (STEAL_POLL << STEAL_BACKOFF_MAX).
-                    if idle > 0 {
-                        std::thread::sleep(
-                            STEAL_POLL * (1u32 << (idle - 1).min(STEAL_BACKOFF_MAX)),
-                        );
-                    }
-                    idle = idle.saturating_add(1);
-                }
-                Err(RecvTimeoutError::Disconnected) => {
-                    return try_steal(ctx).map(|j| (j, true));
-                }
-            }
-        } else {
-            let blocked = ctx.queues[ctx.shard].lock().unwrap().recv();
-            match blocked {
-                Ok(job) => return Some((job, false)),
-                Err(_) => return None, // all senders gone: shutdown
-            }
+        if let Some(job) = try_steal(ctx) {
+            return Some((job, true));
         }
+        if own.is_closed() {
+            return None;
+        }
+        ctx.signal.wait_past(seen);
     }
 }
 
@@ -991,6 +1082,33 @@ mod tests {
             }
             assert!(maxsum < 1e-6, "stale shard cache served old B: {maxsum}");
         }
+        c.shutdown();
+    }
+
+    #[test]
+    fn steal_enabled_pool_parks_idle_and_wakes_on_enqueue() {
+        // Steal-enabled workers park on the pool-wide signal when idle; a
+        // lost wakeup would hang the first recv below forever. Letting the
+        // pool go fully idle between submissions exercises the
+        // park-then-wake edge on every iteration.
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            shards: 2,
+            steal: true,
+            topology: Some(TopologyConfig::uniform(1, 2)),
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg);
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let b = Matrix::sample_in(64, 32, &Distribution::normal_1_1(), Precision::Bf16, &mut rng);
+        c.register_weight(5, &b);
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        for i in 0..8 {
+            let resp = c.call(GemmRequest { a: activation(60 + i), weight: 5, inject: None });
+            assert!(resp.result.is_ok());
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(c.metrics().jobs_completed.get(), 8);
         c.shutdown();
     }
 

@@ -4,6 +4,8 @@
 //! * plain GEMM (no protection),
 //! * FT-GEMM (encode + encoded GEMM + V-ABFT threshold + verify + correct),
 //! * FT-GEMM with pre-encoded weights (the serving hot path),
+//! * FT-GEMM with the fused verify point (pre-encoded weights +
+//!   detection inside the packed GEMM epilogue, [`VerifyPolicy::fused`]),
 //! * DMR (double modular redundancy: run the GEMM twice and compare) —
 //!   the paper's >200%-overhead strawman.
 //!
@@ -68,6 +70,12 @@ pub fn run_overhead(cfg: &OverheadConfig) -> Vec<OverheadRow> {
         VerifyPolicy::default(),
     );
     let prepared = ft.prepare(&b);
+    let ft_fused = FtGemm::new(
+        GemmEngine::new(cfg.model),
+        Box::new(VabftThreshold::default()),
+        VerifyPolicy::fused(),
+    );
+    let prepared_fused = ft_fused.prepare(&b);
 
     let base = median_time(cfg.reps, || {
         std::hint::black_box(engine.matmul(&a, &b));
@@ -77,6 +85,9 @@ pub fn run_overhead(cfg: &OverheadConfig) -> Vec<OverheadRow> {
     });
     let ft_prep = median_time(cfg.reps, || {
         std::hint::black_box(ft.multiply_prepared(&a, &prepared, None).unwrap());
+    });
+    let ft_fused_t = median_time(cfg.reps, || {
+        std::hint::black_box(ft_fused.multiply_prepared(&a, &prepared_fused, None).unwrap());
     });
     let dmr = median_time(cfg.reps, || {
         let c1 = engine.matmul(&a, &b);
@@ -107,6 +118,11 @@ pub fn run_overhead(cfg: &OverheadConfig) -> Vec<OverheadRow> {
             label: "FT-GEMM (prepared weights)".into(),
             median: ft_prep,
             overhead_pct: pct(ft_prep),
+        },
+        OverheadRow {
+            label: "FT-GEMM (fused epilogue, prepared)".into(),
+            median: ft_fused_t,
+            overhead_pct: pct(ft_fused_t),
         },
         OverheadRow { label: "DMR (2x GEMM + compare)".into(), median: dmr, overhead_pct: pct(dmr) },
         OverheadRow {
@@ -139,11 +155,16 @@ mod tests {
         let rows = run_overhead(&cfg);
         let base = rows[0].median.as_secs_f64();
         let ft_prep = rows[2].median.as_secs_f64();
-        let dmr = rows[3].median.as_secs_f64();
+        let ft_fused = rows[3].median.as_secs_f64();
+        let dmr = rows[4].median.as_secs_f64();
         assert!(dmr > base * 1.5, "DMR should ≈ double: {rows:?}");
         assert!(
             ft_prep < dmr,
             "prepared FT-GEMM must beat DMR: {ft_prep} vs {dmr}"
+        );
+        assert!(
+            ft_fused < dmr,
+            "fused-epilogue FT-GEMM must beat DMR: {ft_fused} vs {dmr}"
         );
     }
 }

@@ -121,6 +121,36 @@ pub fn run_micro<T: Element>(
     }
 }
 
+/// [`run_micro`] plus a row-completion hook — the fused-verification
+/// epilogue attachment point. The kernel itself is unchanged (identical
+/// arithmetic, identical schedule); after the tile is stored, `on_row`
+/// is invoked once per live tile row with the row's panel-local index
+/// (`row0 + r`). The packed engine calls this only for the micro-tile
+/// that completes a row (final K-block, final column tile), so the hook
+/// fires exactly once per output row, at the moment the row's
+/// accumulators leave the registers — before any output quantization.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn run_micro_fused<T: Element>(
+    fma: bool,
+    apanel: &[T],
+    bpanel: &[T],
+    kb: usize,
+    c: &mut [T],
+    ldc: usize,
+    h: usize,
+    w: usize,
+    mr: usize,
+    nr: usize,
+    row0: usize,
+    on_row: &mut dyn FnMut(usize),
+) {
+    run_micro(fma, apanel, bpanel, kb, c, ldc, h, w, mr, nr);
+    for r in 0..h {
+        on_row(row0 + r);
+    }
+}
+
 /// The monomorphized microkernel: MR, NR and the schedule are const, so
 /// the accumulator tile is a fixed-size array the optimizer keeps in
 /// vector registers, with the NR loop vectorized across output columns.

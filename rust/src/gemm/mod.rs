@@ -154,6 +154,66 @@ impl AccumModel {
     }
 }
 
+/// What the fused verification epilogue needs to check one encoded
+/// product row while it is still the raw work-precision accumulator:
+/// the number of data columns (the encoded row carries the r1/r2
+/// checksums at positions `n` and `n + 1`), the position-weight vector
+/// `[1, …, n]`, and one detection threshold per output row.
+///
+/// Borrowed, not owned — the ABFT pipeline resolves thresholds per
+/// K-block *before* the multiply and lends them to the engine for the
+/// duration of the fused call.
+#[derive(Debug, Clone, Copy)]
+pub struct FusedProbe<'a> {
+    /// Number of data columns (checksums live at `n` and `n + 1`).
+    pub n: usize,
+    /// Position weights `[1, …, n]` (length `n`).
+    pub weights: &'a [f64],
+    /// Per-row detection thresholds (length = output rows).
+    pub thresholds: &'a [f64],
+}
+
+/// One row's fused verification measurements, produced in the packed
+/// microkernel epilogue (pre-quantization). Field semantics match
+/// [`crate::abft::verify::RowCheck`] — same reductions, same schedule,
+/// same comparison — plus the row index, because epilogue rows complete
+/// in worker-dependent order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FusedRowCheck {
+    /// Output row this check belongs to.
+    pub row: usize,
+    /// D1 = recomputed row sum − checksum ≈ fault magnitude.
+    pub d1: f64,
+    /// D2 = recomputed weighted row sum − weighted checksum.
+    pub d2: f64,
+    /// The detection threshold |D1| was compared against.
+    pub threshold: f64,
+    /// |D1| > threshold (or D1 non-finite).
+    pub flagged: bool,
+}
+
+/// Check one completed accumulator row against the probe — the exact
+/// arithmetic of `abft::verify::check_row` (same `reduce_in`/`dot_in`
+/// schedule, same subtraction, same comparison), applied in the fused
+/// epilogue instead of after the product is materialized.
+fn fused_check_row(
+    row: &[f64],
+    probe: &FusedProbe<'_>,
+    work: Precision,
+    strategy: ReduceStrategy,
+    i: usize,
+) -> FusedRowCheck {
+    debug_assert!(row.len() >= probe.n + 2);
+    let data = &row[..probe.n];
+    let rowsum = reduce_in(data, work, strategy);
+    let wsum = dot_in(data, probe.weights, work, strategy);
+    let d1 = rowsum - row[probe.n];
+    let d2 = wsum - row[probe.n + 1];
+    let threshold = probe.thresholds[i];
+    let flagged = !d1.is_finite() || d1.abs() > threshold;
+    FusedRowCheck { row: i, d1, d2, threshold, flagged }
+}
+
 /// Result of a modelled GEMM.
 #[derive(Debug, Clone)]
 pub struct GemmOutput {
@@ -254,6 +314,115 @@ impl GemmEngine {
             acc.clone()
         };
         GemmOutput { c, acc }
+    }
+
+    /// [`GemmEngine::matmul_mixed`] with the checksum verification fused
+    /// into the packed microkernel epilogue: as each output row's
+    /// accumulators leave the registers (final K-block, final column
+    /// tile), the row's r1/r2 reductions and the d1-vs-threshold
+    /// comparison run on the spot — per row, pre-quantization, while the
+    /// row is cache-hot. Returns the product plus one [`FusedRowCheck`]
+    /// per row, sorted by row index.
+    ///
+    /// The product is bitwise-identical to [`GemmEngine::matmul_mixed`]
+    /// (the epilogue only reads completed rows), and the checks are
+    /// bitwise-identical to running `abft::verify::check_row` on the
+    /// accumulator afterwards: the epilogue uses the same
+    /// [`reduce_in`]/[`dot_in`] schedule on the same bits. For the F32
+    /// work precision the epilogue sees `f32` rows and widens them —
+    /// exact, so `dot_in`'s internal narrowing round-trips to the
+    /// identical values the post-hoc path reads from the accumulator
+    /// matrix. Work precisions without a native kernel (the generic
+    /// ablation path) fall back to a post-GEMM sweep over the
+    /// accumulator — same arithmetic, same results, no epilogue.
+    pub fn matmul_mixed_fused(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        b_wide_cols: usize,
+        probe: &FusedProbe<'_>,
+    ) -> (GemmOutput, Vec<FusedRowCheck>) {
+        assert_eq!(a.cols(), b.rows(), "GEMM shape mismatch {}x{} · {}x{}",
+            a.rows(), a.cols(), b.rows(), b.cols());
+        assert!(b_wide_cols <= b.cols());
+        let m = self.model;
+        let (rows, k, cols) = (a.rows(), a.cols(), b.cols());
+        assert!(cols >= probe.n + 2, "fused probe needs the two checksum columns");
+        assert_eq!(probe.weights.len(), probe.n, "fused probe weight length");
+        assert_eq!(probe.thresholds.len(), rows, "fused probe threshold length");
+
+        let aq = quantize_data(a.data(), m.input);
+        let bq = if b_wide_cols == 0 {
+            quantize_data(b.data(), m.input)
+        } else {
+            let split = cols - b_wide_cols;
+            let mut out = Vec::with_capacity(b.data().len());
+            for r in 0..k {
+                let row = b.row(r);
+                out.extend(row[..split].iter().map(|&x| m.input.quantize(x)));
+                out.extend(row[split..].iter().map(|&x| m.work.quantize(x)));
+            }
+            out
+        };
+
+        let sink: std::sync::Mutex<Vec<FusedRowCheck>> =
+            std::sync::Mutex::new(Vec::with_capacity(rows));
+        let mut via_epilogue = true;
+        let acc_data: Vec<f64> = match m.work {
+            Precision::F64 => {
+                let ep = |i: usize, row: &[f64]| {
+                    let rc = fused_check_row(row, probe, m.work, m.strategy, i);
+                    sink.lock().unwrap().push(rc);
+                };
+                tiled::gemm_f64_fused(&aq, &bq, rows, k, cols, m.strategy, &self.par, &ep)
+            }
+            Precision::F32 => {
+                let a32 = kernels::to_f32_vec(&aq);
+                let b32 = kernels::to_f32_vec(&bq);
+                let ep = |i: usize, row: &[f32]| {
+                    // f32 → f64 widening is exact; dot_in/reduce_in narrow
+                    // back to the identical f32 values internally.
+                    let wide: Vec<f64> = row.iter().map(|&x| x as f64).collect();
+                    let rc = fused_check_row(&wide, probe, m.work, m.strategy, i);
+                    sink.lock().unwrap().push(rc);
+                };
+                let c =
+                    tiled::gemm_f32_fused(&a32, &b32, rows, k, cols, m.strategy, &self.par, &ep);
+                c.into_iter().map(|x| x as f64).collect()
+            }
+            other => {
+                via_epilogue = false;
+                tiled::gemm_generic(&aq, &bq, rows, k, cols, other, m.strategy, &self.par)
+            }
+        };
+        let acc = Matrix::from_vec(rows, cols, acc_data);
+        let checks = if via_epilogue {
+            let mut v = sink.into_inner().unwrap();
+            v.sort_unstable_by_key(|c| c.row);
+            debug_assert_eq!(v.len(), rows);
+            v
+        } else {
+            self.fused_sweep(&acc, probe)
+        };
+        let c = if m.quantizes_output() || m.out != m.work {
+            acc.quantized(m.out)
+        } else {
+            acc.clone()
+        };
+        (GemmOutput { c, acc }, checks)
+    }
+
+    /// Run the fused per-row checks over an already-materialized
+    /// accumulator — the arithmetic of the fused epilogue without the
+    /// fusion. Used when something (a fault-injection hook, a work
+    /// precision with no native kernel) must touch the accumulator after
+    /// the GEMM: the checks are bitwise-identical to the epilogue's
+    /// because both run `reduce_in`/`dot_in` on the same row bits.
+    pub fn fused_sweep(&self, acc: &Matrix, probe: &FusedProbe<'_>) -> Vec<FusedRowCheck> {
+        debug_assert!(acc.cols() >= probe.n + 2);
+        (0..acc.rows())
+            .map(|i| fused_check_row(acc.row(i), probe, self.model.work, self.model.strategy, i))
+            .collect()
     }
 
     /// Raw work-precision GEMM on the packed parallel engine: multiply
@@ -524,6 +693,45 @@ mod tests {
                 .map(|x| x as f64)
                 .collect();
             assert_eq!(gen, nat, "strategy {s:?}");
+        }
+    }
+
+    #[test]
+    fn fused_matmul_is_bitwise_equal_and_checks_match_the_sweep() {
+        // The fused epilogue must change nothing about the product and
+        // must produce exactly the checks a post-hoc sweep over the
+        // accumulator produces — for every kernel dispatch path (f64,
+        // f32, generic) and thread count. B's last two columns stand in
+        // for the checksum columns; their values are irrelevant to the
+        // bitwise contract.
+        let (a, b) = pair(11, 37, 23, 11);
+        let n = b.cols() - 2;
+        let weights: Vec<f64> = (1..=n).map(|j| j as f64).collect();
+        let thresholds = vec![1e-3; a.rows()];
+        let probe = FusedProbe { n, weights: &weights, thresholds: &thresholds };
+        for model in [
+            AccumModel::cpu(Precision::F64),
+            AccumModel::gpu_highprec(Precision::F32),
+            AccumModel::wide(Precision::Bf16),
+            AccumModel::cpu(Precision::Bf16), // generic path → sweep fallback
+        ] {
+            for threads in [1usize, 4] {
+                let par = ParallelismConfig::with_threads(threads)
+                    .tiles(TileConfig::new(4, 16, 8));
+                let eng = GemmEngine::with_parallelism(model, par);
+                let want = eng.matmul_mixed(&a, &b, 2);
+                let (got, checks) = eng.matmul_mixed_fused(&a, &b, 2, &probe);
+                assert_eq!(got.acc.data(), want.acc.data(), "{model:?} t={threads}");
+                assert_eq!(got.c.data(), want.c.data(), "{model:?} t={threads}");
+                let sweep = eng.fused_sweep(&want.acc, &probe);
+                assert_eq!(checks.len(), a.rows());
+                for (i, (rc, sw)) in checks.iter().zip(&sweep).enumerate() {
+                    assert_eq!(rc.row, i);
+                    assert_eq!(rc.d1.to_bits(), sw.d1.to_bits(), "{model:?} row {i}");
+                    assert_eq!(rc.d2.to_bits(), sw.d2.to_bits(), "{model:?} row {i}");
+                    assert_eq!(rc.flagged, sw.flagged);
+                }
+            }
         }
     }
 

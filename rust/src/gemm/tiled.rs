@@ -361,6 +361,96 @@ fn gemm_packed<T: Element>(
     c
 }
 
+/// [`gemm_f32`] with a fused per-row epilogue (see [`gemm_f64_fused`]).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_f32_fused(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    strategy: ReduceStrategy,
+    par: &ParallelismConfig,
+    epilogue: &(dyn Fn(usize, &[f32]) + Sync),
+) -> Vec<f32> {
+    gemm_packed_fused(a, b, m, k, n, strategy, par, epilogue)
+}
+
+/// [`gemm_f64`] with a fused per-row epilogue: `epilogue(i, row)` is
+/// invoked exactly once per output row, from the worker thread that owns
+/// the row, at the moment the row's final values leave the microkernel
+/// registers (final K-block, final column tile) — i.e. on the
+/// pre-quantization accumulator, before the caller ever stores or rounds
+/// it. The GEMM arithmetic is byte-for-byte the non-fused engine's
+/// (the epilogue only *reads* completed rows), so schedule preservation
+/// holds by construction; the fused ABFT verify point rides here.
+///
+/// Rows arrive in worker-dependent order; callers needing a
+/// deterministic order must sort by row index.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_f64_fused(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    strategy: ReduceStrategy,
+    par: &ParallelismConfig,
+    epilogue: &(dyn Fn(usize, &[f64]) + Sync),
+) -> Vec<f64> {
+    gemm_packed_fused(a, b, m, k, n, strategy, par, epilogue)
+}
+
+/// The shared packed implementation behind [`gemm_f32_fused`] /
+/// [`gemm_f64_fused`]: identical loop structure (and therefore identical
+/// bits) to [`gemm_packed`], plus the row-completion epilogue.
+#[allow(clippy::too_many_arguments)]
+fn gemm_packed_fused<T: Element>(
+    a: &[T],
+    b: &[T],
+    m: usize,
+    k: usize,
+    n: usize,
+    strategy: ReduceStrategy,
+    par: &ParallelismConfig,
+    epilogue: &(dyn Fn(usize, &[T]) + Sync),
+) -> Vec<T> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut c = vec![T::default(); m * n];
+    if m == 0 {
+        return c;
+    }
+    if n == 0 || k == 0 {
+        // Degenerate shapes never reach the microkernel: every row is
+        // already final (all zeros), so honour the exactly-once epilogue
+        // contract serially.
+        for i in 0..m {
+            epilogue(i, &c[i * n..(i + 1) * n]);
+        }
+        return c;
+    }
+    let (tiles, u) = (par.tiles, par.micro);
+    parallel_over_rows(&mut c, m, n, par, |chunk, i0, rows| match strategy {
+        ReduceStrategy::Sequential => {
+            packed_seq_fma_fused(a, b, chunk, i0, rows, k, n, false, tiles, u, epilogue)
+        }
+        ReduceStrategy::Fma => {
+            packed_seq_fma_fused(a, b, chunk, i0, rows, k, n, true, tiles, u, epilogue)
+        }
+        ReduceStrategy::Pairwise => {
+            // The pairwise tree finishes a row only after its last column
+            // strip (the tree is per column block), so the epilogue fires
+            // per panel row once the worker's whole panel is done.
+            packed_pairwise(a, b, chunk, i0, rows, k, n, tiles);
+            for r in 0..rows {
+                epilogue(i0 + r, &chunk[r * n..(r + 1) * n]);
+            }
+        }
+    });
+    c
+}
+
 /// One worker's packed sequential/FMA row panel.
 ///
 /// Loop nest (outer → inner): K-blocks ascending (accumulator carried in
@@ -422,6 +512,102 @@ fn packed_seq_fma<T: Element>(
                             nr,
                         );
                         jp += nr;
+                    }
+                    ip += mr;
+                }
+                r0 = r1;
+            }
+            j0 = j1;
+        }
+        k0 = k1;
+    }
+}
+
+/// [`packed_seq_fma`] with the fused row-completion epilogue. The loop
+/// nest, packing and microkernel calls are identical (same bits); the
+/// only addition is that the micro-tile which completes a row — final
+/// K-block, final column block, last NR tile of the row group — runs
+/// through [`micro::run_micro_fused`], whose hook records the finished
+/// rows, and the epilogue then reads each completed row directly from C
+/// while it is still the raw work-precision accumulator.
+#[allow(clippy::too_many_arguments)]
+fn packed_seq_fma_fused<T: Element>(
+    a: &[T],
+    b: &[T],
+    c: &mut [T],
+    i0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    fma: bool,
+    t: TileConfig,
+    u: MicroConfig,
+    epilogue: &(dyn Fn(usize, &[T]) + Sync),
+) {
+    debug_assert_eq!(c.len(), rows * n);
+    let (mr, nr) = (u.mr, u.nr);
+    let mc = ((t.mc + mr - 1) / mr) * mr;
+    let mut apack: Vec<T> = Vec::new();
+    let mut bpack: Vec<T> = Vec::new();
+    let mut completed: Vec<usize> = Vec::new();
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + t.kc).min(k);
+        let kb = k1 - k0;
+        pack::pack_a(a, k, i0, rows, k0, kb, mr, &mut apack);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + t.nc).min(n);
+            let jw = j1 - j0;
+            // Rows become final only in the last K-block's last N-block.
+            let final_pass = k1 == k && j1 == n;
+            pack::pack_b(b, n, k0, kb, j0, jw, nr, &mut bpack);
+            let mut r0 = 0;
+            while r0 < rows {
+                let r1 = (r0 + mc).min(rows);
+                let mut ip = r0;
+                while ip < r1 {
+                    let h = mr.min(rows - ip);
+                    let apanel = &apack[(ip / mr) * kb * mr..][..kb * mr];
+                    let mut jp = 0;
+                    while jp < jw {
+                        let w = nr.min(jw - jp);
+                        let bpanel = &bpack[(jp / nr) * kb * nr..][..kb * nr];
+                        if final_pass && jp + nr >= jw {
+                            micro::run_micro_fused(
+                                fma,
+                                apanel,
+                                bpanel,
+                                kb,
+                                &mut c[ip * n + j0 + jp..],
+                                n,
+                                h,
+                                w,
+                                mr,
+                                nr,
+                                ip,
+                                &mut |r| completed.push(r),
+                            );
+                        } else {
+                            micro::run_micro(
+                                fma,
+                                apanel,
+                                bpanel,
+                                kb,
+                                &mut c[ip * n + j0 + jp..],
+                                n,
+                                h,
+                                w,
+                                mr,
+                                nr,
+                            );
+                        }
+                        jp += nr;
+                    }
+                    // Fire while the rows are hot: their final values were
+                    // just stored from the microkernel registers.
+                    for r in completed.drain(..) {
+                        epilogue(i0 + r, &c[r * n..(r + 1) * n]);
                     }
                     ip += mr;
                 }
@@ -987,6 +1173,103 @@ mod tests {
         assert!(par.threads >= 1);
         assert_eq!(par.micro, MicroConfig::DEFAULT);
         assert_eq!(par.split, RowSplit::Contiguous);
+    }
+
+    #[test]
+    fn fused_epilogue_is_bitwise_neutral_and_fires_once_per_row() {
+        use std::sync::Mutex;
+        let (m, k, n) = (7, 29, 33);
+        let a = rand_vec(m * k, 21);
+        let b = rand_vec(k * n, 22);
+        for strategy in
+            [ReduceStrategy::Sequential, ReduceStrategy::Fma, ReduceStrategy::Pairwise]
+        {
+            let want = gemm_f64(&a, &b, m, k, n, strategy, &ParallelismConfig::serial());
+            for par in configs() {
+                let seen: Mutex<Vec<(usize, Vec<f64>)>> = Mutex::new(Vec::new());
+                let ep = |i: usize, row: &[f64]| {
+                    seen.lock().unwrap().push((i, row.to_vec()));
+                };
+                let got = gemm_f64_fused(&a, &b, m, k, n, strategy, &par, &ep);
+                assert_eq!(got, want, "fused C diverged: {strategy:?} {par:?}");
+                let mut rows = seen.into_inner().unwrap();
+                rows.sort_unstable_by_key(|(i, _)| *i);
+                assert_eq!(rows.len(), m, "epilogue count: {strategy:?} {par:?}");
+                for (i, (row, vals)) in rows.iter().enumerate() {
+                    assert_eq!(*row, i, "row skipped or fired twice: {strategy:?} {par:?}");
+                    assert_eq!(
+                        vals.as_slice(),
+                        &want[i * n..(i + 1) * n],
+                        "epilogue saw a non-final row {i}: {strategy:?} {par:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_epilogue_degenerate_shapes() {
+        use std::sync::Mutex;
+        let par = ParallelismConfig::with_threads(4);
+        // k = 0: all-zero rows, epilogue still fires once per row.
+        for strategy in [ReduceStrategy::Sequential, ReduceStrategy::Pairwise] {
+            let seen: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+            let ep = |i: usize, row: &[f64]| {
+                assert!(row.iter().all(|&v| v == 0.0));
+                seen.lock().unwrap().push(i);
+            };
+            let c = gemm_f64_fused(&[], &[], 3, 0, 2, strategy, &par, &ep);
+            assert_eq!(c, vec![0.0; 6]);
+            let mut rows = seen.into_inner().unwrap();
+            rows.sort_unstable();
+            assert_eq!(rows, vec![0, 1, 2], "{strategy:?}");
+        }
+        // Single row, more threads than rows.
+        let seen: Mutex<Vec<(usize, Vec<f64>)>> = Mutex::new(Vec::new());
+        let ep = |i: usize, row: &[f64]| {
+            seen.lock().unwrap().push((i, row.to_vec()));
+        };
+        let c = gemm_f64_fused(
+            &[2.0, 3.0],
+            &[10.0, 100.0],
+            1,
+            2,
+            1,
+            ReduceStrategy::Sequential,
+            &par,
+            &ep,
+        );
+        assert_eq!(c, vec![2.0 * 10.0 + 3.0 * 100.0]);
+        assert_eq!(seen.into_inner().unwrap(), vec![(0, c)]);
+        // m = 0: nothing to verify, no epilogue calls.
+        let ep = |_: usize, _: &[f64]| panic!("epilogue fired for m = 0");
+        assert!(gemm_f64_fused(&[], &[], 0, 0, 0, ReduceStrategy::Fma, &par, &ep).is_empty());
+    }
+
+    #[test]
+    fn fused_f32_matches_non_fused() {
+        use std::sync::Mutex;
+        let (m, k, n) = (9, 64, 33);
+        let a: Vec<f32> = rand_vec(m * k, 3).iter().map(|&x| x as f32).collect();
+        let b: Vec<f32> = rand_vec(k * n, 4).iter().map(|&x| x as f32).collect();
+        for strategy in
+            [ReduceStrategy::Sequential, ReduceStrategy::Fma, ReduceStrategy::Pairwise]
+        {
+            let want = gemm_f32(&a, &b, m, k, n, strategy, &ParallelismConfig::serial());
+            for threads in [1usize, 3] {
+                let par = ParallelismConfig::with_threads(threads)
+                    .tiles(TileConfig::new(2, 7, 16))
+                    .micro(MicroConfig::new(4, 8));
+                let count = Mutex::new(0usize);
+                let ep = |i: usize, row: &[f32]| {
+                    assert_eq!(row, &want[i * n..(i + 1) * n]);
+                    *count.lock().unwrap() += 1;
+                };
+                let got = gemm_f32_fused(&a, &b, m, k, n, strategy, &par, &ep);
+                assert_eq!(got, want, "{strategy:?} t={threads}");
+                assert_eq!(*count.lock().unwrap(), m);
+            }
+        }
     }
 
     #[test]

@@ -137,7 +137,8 @@ pub mod prelude {
     pub use crate::coordinator::{PartitionPolicy, TopologyConfig};
     pub use crate::fp::{dd::Dd, Precision};
     pub use crate::gemm::{
-        AccumModel, GemmEngine, MicroConfig, ParallelismConfig, RowSplit, TileConfig,
+        AccumModel, FusedProbe, FusedRowCheck, GemmEngine, MicroConfig, ParallelismConfig,
+        RowSplit, TileConfig,
     };
     pub use crate::inject::{
         BitFlip, Campaign, CampaignConfig, FaultOutcome, FaultSite, FaultSpec, FlipDirection,

@@ -12,10 +12,12 @@
 //!                  [--family llama-7b|gpt2|vit-b32] [--scale S] [--layers L]
 //!                  [--batch M] [--passes P] [--concurrency C] [--seed S]
 //!                  [--shards 1,2,4] [--workers W] [--partition contiguous|interleaved]
-//!                  [--steal] [--smoke] [--json FILE] [--precision bf16]
+//!                  [--steal] [--fused] [--smoke] [--json FILE] [--precision bf16]
 //!                  # replay deterministic transformer-layer traces through the
-//!                  # sharded coordinator; exits non-zero if any shard count's
-//!                  # output fingerprint diverges from the baseline
+//!                  # sharded coordinator; --fused selects the in-kernel (GEMM
+//!                  # epilogue) verify point for every request; exits non-zero
+//!                  # if any shard count's output fingerprint diverges from the
+//!                  # baseline
 //! vabft campaign --table8
 //!                  [--precision bf16] [--dist n11|nz|u|u01|trunc] [--trials N] [--offline]
 //!                  # legacy single-configuration Table 8 bit ladder
@@ -282,8 +284,13 @@ fn cmd_campaign_table8(args: &Args) {
 /// coordinator at each requested shard count, assert the output
 /// fingerprint is shard-invariant (the differential gate — exits
 /// non-zero on divergence), print the throughput ladder, and optionally
-/// write the `vabft-serving/v1` document.
+/// write the `vabft-serving/v1` document. `--fused` selects the
+/// fused-epilogue verify point (detection inside the packed GEMM kernel,
+/// [`vabft::abft::VerifyPolicy::fused`]) for every request — outputs and
+/// verdicts are bitwise-unchanged, so the fingerprint gate doubles as an
+/// end-to-end check of the fused path.
 fn cmd_serve_replay(args: &Args) {
+    use vabft::abft::VerifyPolicy;
     use vabft::coordinator::{CoordinatorConfig, PartitionPolicy};
     use vabft::gemm::{AccumModel, ParallelismConfig};
     use vabft::workload::{replay_doc, run_replay, ReplayConfig, ReplayRow};
@@ -313,6 +320,7 @@ fn cmd_serve_replay(args: &Args) {
             std::process::exit(2);
         });
     let steal = args.flag("steal");
+    let fused = args.flag("fused");
     let shard_counts: Vec<usize> = args
         .opt("shards")
         .unwrap_or(if smoke { "1,2" } else { "1,2,4" })
@@ -326,7 +334,8 @@ fn cmd_serve_replay(args: &Args) {
         .collect();
     println!(
         "serve-replay: family={family} scale={} layers={} batch={} passes={} \
-         concurrency={} seed=0x{seed:x} model={} partition={} steal={steal} workers/shard={workers}",
+         concurrency={} seed=0x{seed:x} model={} partition={} steal={steal} fused={fused} \
+         workers/shard={workers}",
         cfg.scale,
         cfg.layers,
         cfg.batch,
@@ -350,6 +359,7 @@ fn cmd_serve_replay(args: &Args) {
             shards: shards.max(1),
             partition,
             steal,
+            policy: if fused { VerifyPolicy::fused() } else { VerifyPolicy::default() },
             ..Default::default()
         };
         let report = run_replay(&cfg, ccfg);

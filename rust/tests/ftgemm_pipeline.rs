@@ -297,6 +297,7 @@ fn recompute_round_trip_is_bitwise_for_full_precision_models() {
     // could never be bitwise, recomputation always is.
     let policy = VerifyPolicy {
         online: true,
+        fused: false,
         correct: false,
         recompute: true,
         reverify: false,

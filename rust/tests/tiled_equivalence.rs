@@ -14,8 +14,8 @@
 //! packed path everywhere.
 
 use vabft::gemm::{
-    generic_gemm, kernels, tiled, AccumModel, GemmEngine, MicroConfig, ParallelismConfig,
-    ReduceStrategy, TileConfig,
+    generic_gemm, kernels, tiled, AccumModel, FusedProbe, GemmEngine, GemmOutput, MicroConfig,
+    ParallelismConfig, ReduceStrategy, TileConfig,
 };
 use vabft::prelude::*;
 
@@ -251,6 +251,211 @@ fn larger_shapes_cross_tile_boundaries() {
                 assert_eq!(got.c.data(), want_c.as_slice(), "{model:?} t={threads}");
             }
         }
+    }
+}
+
+#[test]
+fn prop_fused_probe_equals_post_hoc_sweep() {
+    // The fused-epilogue verify point: `matmul_mixed_fused` must leave
+    // the GEMM output bitwise-untouched AND produce per-row checks
+    // bitwise-identical to a post-hoc `fused_sweep` over the same
+    // accumulator — across the ragged zoo (k = 0, single row/column,
+    // n < NR, threads > m), all three strategies, the native f64/f32 and
+    // generic soft-float dispatch paths, and every parallel config.
+    let shapes: &[(usize, usize, usize)] = &[
+        (7, 61, 93),
+        (13, 257, 31),
+        (1, 97, 257),
+        (9, 0, 5),
+        (3, 31, 3),
+        (2, 16, 1),
+        (5, 129, 17),
+    ];
+    let mut cases = Cases::new(0xF05ED);
+    let d = Distribution::uniform_pm1();
+    for (si, &(m, k, n)) in shapes.iter().enumerate() {
+        let a = Matrix::sample(m, k, &d, &mut cases.rng);
+        let b = Matrix::sample(k, n, &d, &mut cases.rng);
+        let weights: Vec<f64> = (1..=n).map(|j| j as f64).collect();
+        // Alternate tight/loose row thresholds so both flag outcomes occur.
+        let thresholds: Vec<f64> = (0..m).map(|i| if i % 2 == 0 { 1e-12 } else { 1e3 }).collect();
+        for (input, work, out) in [
+            (Precision::F64, Precision::F64, Precision::F64),
+            (Precision::F32, Precision::F32, Precision::F32),
+            (Precision::Bf16, Precision::F32, Precision::Bf16),
+            (Precision::Bf16, Precision::Bf16, Precision::Bf16),
+        ] {
+            for strategy in
+                [ReduceStrategy::Sequential, ReduceStrategy::Fma, ReduceStrategy::Pairwise]
+            {
+                let model = AccumModel { input, work, strategy, out };
+                let (b_enc, wide) = if k == 0 {
+                    // Zero-depth B never reaches the encoder; hand the
+                    // engine an empty encoded operand directly.
+                    (Matrix::zeros(0, n + 2), 2)
+                } else {
+                    let enc =
+                        vabft::abft::ChecksumEncoding::encode_b_wide(&b, &GemmEngine::new(model));
+                    let wide = enc.wide_cols();
+                    (enc.b_encoded, wide)
+                };
+                let probe = FusedProbe { n, weights: &weights, thresholds: &thresholds };
+                for threads in [1usize, 2, 8] {
+                    for tiles in tile_grid() {
+                        let micro = micro_grid()[(si + threads) % micro_grid().len()];
+                        let split = if threads % 2 == 0 {
+                            RowSplit::Interleaved
+                        } else {
+                            RowSplit::Contiguous
+                        };
+                        let par = ParallelismConfig { threads, tiles, micro, split };
+                        let engine = GemmEngine::with_parallelism(model, par);
+                        let (got, checks) = engine.matmul_mixed_fused(&a, &b_enc, wide, &probe);
+                        let plain = engine.matmul_mixed(&a, &b_enc, wide);
+                        assert_eq!(
+                            got.acc.data(),
+                            plain.acc.data(),
+                            "fused acc diverged {m}x{k}x{n} {model:?} {par:?}"
+                        );
+                        assert_eq!(
+                            got.c.data(),
+                            plain.c.data(),
+                            "fused c diverged {m}x{k}x{n} {model:?} {par:?}"
+                        );
+                        assert_eq!(
+                            checks,
+                            engine.fused_sweep(&plain.acc, &probe),
+                            "fused checks diverged {m}x{k}x{n} {model:?} {par:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fused_policy_bitwise_equals_post_hoc_online() {
+    // FtGemm under `VerifyPolicy::fused()` vs the default post-hoc
+    // online policy: identical output bits and identical report
+    // measurements (max |D1|, min threshold — down to the bit) on the
+    // ragged zoo, at every precision triple, strategy and thread count.
+    // Offline verification must also leave clean outputs bitwise-equal
+    // (verification never touches a clean product).
+    let shapes: &[(usize, usize, usize)] = &[
+        (7, 61, 93),
+        (13, 257, 31),
+        (1, 97, 257),
+        (9, 0, 5),
+        (3, 31, 3),
+        (2, 16, 1),
+        (5, 129, 17),
+    ];
+    let triples = [
+        (Precision::F64, Precision::F64, Precision::F64),
+        (Precision::F32, Precision::F32, Precision::F32),
+        (Precision::Bf16, Precision::F32, Precision::Bf16),
+        (Precision::F16, Precision::F32, Precision::F16),
+        (Precision::Bf16, Precision::Bf16, Precision::Bf16),
+    ];
+    let mut cases = Cases::new(0xF0011);
+    let d = Distribution::normal_1_1();
+    for (ci, &(m, k, n)) in shapes.iter().enumerate() {
+        let a = Matrix::sample(m, k, &d, &mut cases.rng);
+        let b = Matrix::sample(k, n, &d, &mut cases.rng);
+        for (pi, &(input, work, out)) in triples.iter().enumerate() {
+            for (ti, &strategy) in
+                [ReduceStrategy::Sequential, ReduceStrategy::Fma, ReduceStrategy::Pairwise]
+                    .iter()
+                    .enumerate()
+            {
+                let model = AccumModel { input, work, strategy, out };
+                for threads in [1usize, 2, 8] {
+                    let tiles = tile_grid()[(ci + pi + ti + threads) % tile_grid().len()];
+                    let micro = micro_grid()[(ci + threads) % micro_grid().len()];
+                    let split = if (ci + threads) % 2 == 0 {
+                        RowSplit::Contiguous
+                    } else {
+                        RowSplit::Interleaved
+                    };
+                    let par = ParallelismConfig { threads, tiles, micro, split };
+                    let mk = |policy| {
+                        FtGemm::new(
+                            GemmEngine::with_parallelism(model, par),
+                            Box::new(VabftThreshold::default()),
+                            policy,
+                        )
+                    };
+                    let fused = mk(VerifyPolicy::fused()).multiply(&a, &b).unwrap();
+                    let posthoc = mk(VerifyPolicy::default()).multiply(&a, &b).unwrap();
+                    let offline = mk(VerifyPolicy::offline()).multiply(&a, &b).unwrap();
+                    let tag = format!("{m}x{k}x{n} {model:?} {par:?}");
+                    assert_eq!(fused.c.data(), posthoc.c.data(), "fused C diverged: {tag}");
+                    assert_eq!(fused.report.verdict, posthoc.report.verdict, "{tag}");
+                    assert_eq!(
+                        fused.report.detections.len(),
+                        posthoc.report.detections.len(),
+                        "{tag}"
+                    );
+                    assert_eq!(fused.report.rows_checked, posthoc.report.rows_checked, "{tag}");
+                    assert_eq!(
+                        fused.report.max_abs_d1.to_bits(),
+                        posthoc.report.max_abs_d1.to_bits(),
+                        "{tag}"
+                    );
+                    assert_eq!(
+                        fused.report.min_threshold.to_bits(),
+                        posthoc.report.min_threshold.to_bits(),
+                        "{tag}"
+                    );
+                    // The fused report says where detection ran; the
+                    // post-hoc and offline reports say it didn't.
+                    assert_eq!(fused.report.rows_fused, fused.report.rows_checked, "{tag}");
+                    assert_eq!(posthoc.report.rows_fused, 0, "{tag}");
+                    assert_eq!(offline.report.rows_fused, 0, "{tag}");
+                    // Clean inputs: the verify point must not leak into
+                    // the product at all.
+                    assert_eq!(fused.c.data(), offline.c.data(), "offline C diverged: {tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_policy_injection_decisions_match_post_hoc() {
+    // A simulated upset lands after the kernel returns; under the fused
+    // policy the pipeline re-runs the epilogue's checks over the mutated
+    // accumulator at the same verification point. Detections (row,
+    // localized column, D1/D2/threshold bits), verdicts and repaired
+    // outputs must all be bitwise-equal to the post-hoc online policy.
+    let mut rng = Xoshiro256pp::seed_from_u64(0xFA57);
+    let d = Distribution::normal_1_1();
+    for model in [AccumModel::wide(Precision::Bf16), AccumModel::gpu_highprec(Precision::F32)] {
+        let a = Matrix::sample(8, 64, &d, &mut rng);
+        let b = Matrix::sample(64, 32, &d, &mut rng);
+        let mk = |policy| {
+            FtGemm::new(GemmEngine::new(model), Box::new(VabftThreshold::default()), policy)
+        };
+        let inject = |o: &mut GemmOutput| {
+            let v = o.acc.get(3, 7);
+            o.acc.set(3, 7, v + 4.0);
+        };
+        let fused = mk(VerifyPolicy::fused()).multiply_with_injection(&a, &b, inject).unwrap();
+        let posthoc =
+            mk(VerifyPolicy::default()).multiply_with_injection(&a, &b, inject).unwrap();
+        assert_eq!(fused.report.verdict, Verdict::Corrected, "{model:?}");
+        assert_eq!(posthoc.report.verdict, Verdict::Corrected, "{model:?}");
+        assert_eq!(fused.c.data(), posthoc.c.data(), "repaired outputs must match bitwise");
+        assert_eq!(fused.report.detections.len(), 1, "{model:?}");
+        for (f, p) in fused.report.detections.iter().zip(&posthoc.report.detections) {
+            assert_eq!((f.row, f.col), (p.row, p.col), "{model:?}");
+            assert_eq!(f.d1.to_bits(), p.d1.to_bits(), "{model:?}");
+            assert_eq!(f.d2.to_bits(), p.d2.to_bits(), "{model:?}");
+            assert_eq!(f.threshold.to_bits(), p.threshold.to_bits(), "{model:?}");
+        }
+        assert_eq!(fused.report.rows_fused, fused.report.rows_checked);
+        assert_eq!(posthoc.report.rows_fused, 0);
     }
 }
 
