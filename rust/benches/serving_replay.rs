@@ -1,25 +1,39 @@
-//! Sharded serving-replay throughput bench.
+//! Sharded serving-replay throughput bench, closed and open loop.
 //!
 //! Replays the LLaMA-7B layer trace (published shapes, scaled) through
-//! the coordinator at a ladder of shard configurations and records the
-//! trajectory to `BENCH_serving.json` (`vabft-serving/v1`).
+//! the coordinator at a ladder of shard configurations, then drives the
+//! open-loop traffic engine (one rung per seeded arrival process, plus
+//! an always-recompute vs severity-aware recovery pair on a
+//! fault-injected mixed-family trace) and records the whole trajectory
+//! to `BENCH_serving.json` (`vabft-serving/v2`: tail latencies and shed
+//! rates alongside throughput).
 //!
-//! Two gates, one per mode:
+//! Gates:
 //!
-//! * **always** — the output fingerprint must be identical across every
-//!   rung (sharding / partitioning / stealing are pure scheduling); the
-//!   bench exits non-zero on divergence, so even the quick run is a
-//!   correctness gate, never a timing assertion;
+//! * **always** — the closed-loop output fingerprint must be identical
+//!   across every rung (sharding / partitioning / stealing are pure
+//!   scheduling); open-loop reruns must reproduce their fingerprints;
+//!   and severity-aware recovery must preserve every detection and every
+//!   output bit of the always-recompute run. All deterministic, so even
+//!   the quick run enforces them — never a timing assertion;
 //! * **full only** — shards=4 must reach ≥ 1.5× the shards=1 request
-//!   throughput on the LLaMA-7B trace at concurrency ≥ 8 (the scaling
-//!   claim of the serving tier; skipped on loaded quick runs).
+//!   throughput on the LLaMA-7B trace at concurrency ≥ 8, and
+//!   severity-aware recovery must not lose to always-recompute on p99
+//!   (≤ 1.10× slack for scheduler noise; it skips recompute work, so
+//!   its tail should be no worse).
 
+use std::time::Duration;
+
+use vabft::abft::VerifyPolicy;
 use vabft::bench_harness::{validate_schema, BenchMode, SERVING_SCHEMA};
 use vabft::coordinator::{CoordinatorConfig, PartitionPolicy};
 use vabft::gemm::{AccumModel, ParallelismConfig};
 use vabft::prelude::Precision;
 use vabft::report::Table;
-use vabft::workload::{run_replay, replay_doc, ReplayConfig, ReplayReport, ReplayRow};
+use vabft::workload::{
+    run_open_loop, run_replay, replay_doc, ArrivalModel, OpenLoopConfig, ReplayConfig,
+    ReplayReport, ReplayRow,
+};
 
 struct Rung {
     shards: usize,
@@ -120,17 +134,6 @@ fn main() {
     }
     t.print();
 
-    let doc = replay_doc(&rows, if mode.is_full() { "full" } else { "quick" });
-    let json = doc.to_json();
-    validate_schema(&json, SERVING_SCHEMA).expect("serving schema must validate");
-    match doc.write("BENCH_serving.json", "VABFT_SERVING_JSON") {
-        Ok(p) => println!("wrote {}", p.display()),
-        Err(e) => {
-            eprintln!("failed to write BENCH_serving.json: {e}");
-            std::process::exit(1);
-        }
-    }
-
     assert!(
         rows.iter().all(|r| r.fingerprint_equal),
         "output fingerprint diverged across shard configurations"
@@ -153,5 +156,130 @@ fn main() {
             "shards=4 must reach ≥1.5x shards=1 throughput: {four:.1} vs {base:.1} req/s"
         );
         println!("scaling gate OK: shards=4 at {:.2}x shards=1", four / base);
+    }
+
+    // ---- open loop: one rung per arrival process on the mixed trace ----
+    // Queues run deeper than the offered count so nothing sheds and the
+    // fingerprints are exact; tail latencies still include queue wait.
+    let mut ol_cfg = OpenLoopConfig::smoke(seed);
+    ol_cfg.scale = mode.pick(32, 8);
+    ol_cfg.batch = mode.pick(4, 8);
+    ol_cfg.requests = mode.pick(48, 240);
+    ol_cfg.rate = mode.pick(300.0, 600.0);
+    let ol_requests = ol_cfg.requests;
+    let ol_ccfg = move |policy: VerifyPolicy| CoordinatorConfig {
+        workers: 1,
+        queue_depth: ol_requests,
+        model: AccumModel::wide(Precision::Bf16),
+        parallelism: ParallelismConfig::serial(),
+        shards: 2,
+        policy,
+        ..Default::default()
+    };
+    let ms = |d: Duration| d.as_secs_f64() * 1e3;
+    let mut ot = Table::new(
+        "Open-loop serving — mixed llama-7b+gpt2+vit-b32 trace",
+        &["arrival", "offered", "admitted", "p50 ms", "p99 ms", "p999 ms", "SLO %", "req/s"],
+    );
+    for arrival in ArrivalModel::all() {
+        ol_cfg.arrival = arrival;
+        let r = run_open_loop(&ol_cfg, ol_ccfg(VerifyPolicy::default()));
+        if mode.is_full() {
+            let again = run_open_loop(&ol_cfg, ol_ccfg(VerifyPolicy::default()));
+            assert_eq!(r.trace_fingerprint, again.trace_fingerprint, "schedule not reproducible");
+            assert_eq!(
+                r.output_fingerprint, again.output_fingerprint,
+                "open-loop outputs not reproducible"
+            );
+        }
+        assert_eq!(r.replay.shed, 0, "deep queues must not shed");
+        assert_eq!(r.replay.faulty, 0, "clean open-loop trace produced non-clean verdicts");
+        ot.row(vec![
+            arrival.name().to_string(),
+            r.offered.to_string(),
+            r.replay.requests.to_string(),
+            format!("{:.2}", ms(r.replay.p50)),
+            format!("{:.2}", ms(r.replay.p99)),
+            format!("{:.2}", ms(r.replay.p999)),
+            format!("{:.1}", 100.0 * r.slo_attainment()),
+            format!("{:.1}", r.replay.rps()),
+        ]);
+        rows.push(ReplayRow::ladder(r.replay, None, "contiguous", false, 1, ol_cfg.requests));
+    }
+    ot.print();
+
+    // ---- severity-aware vs always-recompute on a faulted trace ----
+    // Identical seeded schedule, faults on every 3rd request (exponent
+    // upsets alternating with sub-noise checksum perturbations). The
+    // bitwise gates are deterministic and always enforced; the p99
+    // comparison is timing and gates only the full run.
+    let mut fault_cfg = ol_cfg.clone();
+    fault_cfg.arrival = ArrivalModel::Poisson;
+    fault_cfg.fault_every = 3;
+    let strict = run_open_loop(&fault_cfg, ol_ccfg(VerifyPolicy::default()));
+    let lenient = run_open_loop(&fault_cfg, ol_ccfg(VerifyPolicy::default().with_severity()));
+    assert!(strict.faults_detected > 0, "faulted trace produced no detections");
+    assert_eq!(
+        lenient.faults_detected, strict.faults_detected,
+        "severity-aware recovery must not downgrade detection"
+    );
+    assert_eq!(
+        lenient.output_fingerprint, strict.output_fingerprint,
+        "severity classification must never alter any computed output's bits"
+    );
+    assert_eq!(
+        lenient.faults_waived + lenient.rows_recomputed,
+        strict.rows_recomputed,
+        "every strict recompute must become a waiver or stay a recompute"
+    );
+    println!(
+        "severity on faulted trace: {} detections; always-recompute p99 {:.2} ms \
+         ({} rows recomputed) vs severity-aware p99 {:.2} ms ({} waived, {} recomputed)",
+        strict.faults_detected,
+        ms(strict.replay.p99),
+        strict.rows_recomputed,
+        ms(lenient.replay.p99),
+        lenient.faults_waived,
+        lenient.rows_recomputed,
+    );
+    if mode.is_full() {
+        assert!(
+            lenient.replay.p99 <= strict.replay.p99.mul_f64(1.10),
+            "severity-aware p99 must not lose to always-recompute: {:?} vs {:?}",
+            lenient.replay.p99,
+            strict.replay.p99
+        );
+        println!("severity tail gate OK: waiving does not inflate p99");
+    }
+    let rename = |mut rep: ReplayReport, label: &str| {
+        rep.family = format!("{} [{label}]", rep.family);
+        rep
+    };
+    rows.push(ReplayRow::ladder(
+        rename(strict.replay, "always-recompute"),
+        None,
+        "contiguous",
+        false,
+        1,
+        fault_cfg.requests,
+    ));
+    rows.push(ReplayRow::ladder(
+        rename(lenient.replay, "severity-aware"),
+        None,
+        "contiguous",
+        false,
+        1,
+        fault_cfg.requests,
+    ));
+
+    let doc = replay_doc(&rows, if mode.is_full() { "full" } else { "quick" });
+    let json = doc.to_json();
+    validate_schema(&json, SERVING_SCHEMA).expect("serving schema must validate");
+    match doc.write("BENCH_serving.json", "VABFT_SERVING_JSON") {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => {
+            eprintln!("failed to write BENCH_serving.json: {e}");
+            std::process::exit(1);
+        }
     }
 }

@@ -47,6 +47,17 @@ pub struct VerifyPolicy {
     pub localize_tol: f64,
     /// Re-verify corrected rows and escalate to recompute if still flagged.
     pub reverify: bool,
+    /// Severity-aware recovery (ApproxABFT-style): before escalating a
+    /// detection to row recomputation, compare the residual |D1| against
+    /// the output grid's quantization noise for that row
+    /// (`u_out · Σ|row|`). When the residual is provably below it, the
+    /// recompute could not change the quantized output meaningfully —
+    /// the detection is *waived* ([`Verdict::Waived`]) and the
+    /// tail-latency penalty of the escalation path is skipped. Detection
+    /// itself is unaffected: every flagged row is still reported, so
+    /// recall and false-positive behavior are bitwise-identical to the
+    /// non-severity policy.
+    pub severity: bool,
 }
 
 impl Default for VerifyPolicy {
@@ -58,6 +69,7 @@ impl Default for VerifyPolicy {
             recompute: true,
             localize_tol: 0.45,
             reverify: true,
+            severity: false,
         }
     }
 }
@@ -87,7 +99,16 @@ impl VerifyPolicy {
             recompute: false,
             reverify: false,
             localize_tol: 0.45,
+            severity: false,
         }
+    }
+
+    /// The same policy with severity-aware recovery enabled: detections
+    /// whose residual is provably below output-quantization noise skip
+    /// the recompute escalation ([`Verdict::Waived`]).
+    pub fn with_severity(mut self) -> VerifyPolicy {
+        self.severity = true;
+        self
     }
 }
 
@@ -102,6 +123,10 @@ pub enum Verdict {
     Recomputed,
     /// Faults detected but policy forbade repair.
     Flagged,
+    /// Every detection was either corrected in place or waived by the
+    /// severity policy (residual below output-quantization noise), and
+    /// at least one was waived — no recomputation was spent.
+    Waived,
 }
 
 /// One detected fault.
@@ -117,9 +142,16 @@ pub struct Detection {
     pub d2: f64,
     /// The detection threshold |D1| was compared against.
     pub threshold: f64,
-    /// True if the row was corrected in place; false means recomputed or
-    /// left flagged.
+    /// Severity of the detection: `|D1| / threshold` (∞ when the
+    /// threshold was zero or D1 non-finite). 1.0 is the detection floor;
+    /// large values are exponent-class upsets.
+    pub severity: f64,
+    /// True if the row was corrected in place; false means recomputed,
+    /// waived or left flagged.
     pub corrected: bool,
+    /// True if the severity policy waived this detection's recompute
+    /// escalation (residual provably below output-quantization noise).
+    pub waived: bool,
 }
 
 /// Verification report for one multiply.
@@ -133,6 +165,9 @@ pub struct VerifyReport {
     pub rows_checked: usize,
     /// Rows recomputed via the escalation path.
     pub rows_recomputed: usize,
+    /// Detections whose recompute escalation the severity policy waived
+    /// (always 0 unless [`VerifyPolicy::severity`] is set).
+    pub rows_waived: usize,
     /// Largest |D1| seen across every checked row (∞ if any row's D1 was
     /// non-finite). On a clean run this is the realized rounding-noise
     /// floor — the "Actual Diff" of the paper's tightness tables.

@@ -46,6 +46,8 @@ pub(crate) struct BlockVerify {
     pub part: Matrix,
     pub detections: Vec<Detection>,
     pub rows_recomputed: usize,
+    /// Detections whose recompute the severity policy waived.
+    pub rows_waived: usize,
     /// Largest |D1| across the block's rows (∞ on non-finite D1).
     pub max_abs_d1: f64,
     /// Smallest threshold issued across the block's rows.
@@ -98,6 +100,7 @@ pub(crate) fn verify_block(
 
     let mut detections = Vec::new();
     let mut rows_recomputed = 0usize;
+    let mut rows_waived = 0usize;
     let mut max_abs_d1 = 0.0f64;
     let mut min_threshold = f64::INFINITY;
     for i in 0..part.rows() {
@@ -120,29 +123,55 @@ pub(crate) fn verify_block(
             d1: rc.d1,
             d2: rc.d2,
             threshold: rc.threshold,
+            severity: if rc.threshold > 0.0 && rc.d1.is_finite() {
+                rc.d1.abs() / rc.threshold
+            } else {
+                f64::INFINITY
+            },
             corrected: false,
+            waived: false,
         };
+        // Residual error mass left in the row if no further repair runs:
+        // the full discrepancy when uncorrected, the post-correction
+        // re-verification difference when a correction failed to verify.
+        let mut residual = rc.d1;
         if policy.correct {
             if let Localization::Column(j) = localize(rc.d1, rc.d2, n, policy.localize_tol) {
                 det.col = Some(j);
                 correct_in_place(&mut part, i, j, rc.d1, grid);
                 det.corrected = true;
+                residual = 0.0;
                 if policy.reverify {
                     let rc2 =
                         check_row(part.row(i), cr1[i], cr2[i], thresholds[i], engine, weights);
                     if rc2.flagged {
                         det.corrected = false; // correction didn't verify
+                        residual = rc2.d1;
                     }
                 }
             }
         }
         if !det.corrected && policy.recompute {
-            recompute_row(engine, policy, a_blk, b_blk, &mut part, i);
-            rows_recomputed += 1;
+            // Severity-aware escalation: a recompute only changes the
+            // *quantized* output if the residual clears the output grid's
+            // own rounding noise for this row, u_out · Σ|row|. Below
+            // that, the escalation is provably unobservable after output
+            // quantization (ApproxABFT) — waive it. A non-finite
+            // residual never satisfies the bound, so exponent-class
+            // wreckage always recomputes.
+            let noise = model.out.unit_roundoff()
+                * part.row(i).iter().map(|v| v.abs()).sum::<f64>();
+            if policy.severity && residual.abs() <= noise {
+                det.waived = true;
+                rows_waived += 1;
+            } else {
+                recompute_row(engine, policy, a_blk, b_blk, &mut part, i);
+                rows_recomputed += 1;
+            }
         }
         detections.push(det);
     }
-    BlockVerify { part, detections, rows_recomputed, max_abs_d1, min_threshold }
+    BlockVerify { part, detections, rows_recomputed, rows_waived, max_abs_d1, min_threshold }
 }
 
 /// Recompute one row of a (partial) product — a 1×bk · bk×N GEMM — the
@@ -169,6 +198,8 @@ pub(crate) fn verdict_of(detections: &[Detection], rows_recomputed: usize) -> Ve
         Verdict::Recomputed
     } else if detections.iter().all(|d| d.corrected) {
         Verdict::Corrected
+    } else if detections.iter().all(|d| d.corrected || d.waived) {
+        Verdict::Waived
     } else {
         Verdict::Flagged
     }
@@ -261,6 +292,7 @@ pub(crate) fn run_prepared<F: FnMut(usize, &mut GemmOutput)>(
     let mut detections = Vec::new();
     let mut detection_blocks = Vec::new();
     let mut rows_recomputed = 0usize;
+    let mut rows_waived = 0usize;
     let mut max_abs_d1 = 0.0f64;
     let mut min_threshold = f64::INFINITY;
 
@@ -325,6 +357,7 @@ pub(crate) fn run_prepared<F: FnMut(usize, &mut GemmOutput)>(
         );
 
         rows_recomputed += bv.rows_recomputed;
+        rows_waived += bv.rows_waived;
         max_abs_d1 = max_abs_d1.max(bv.max_abs_d1);
         min_threshold = min_threshold.min(bv.min_threshold);
         let tagged = detection_blocks.len() + bv.detections.len();
@@ -355,6 +388,7 @@ pub(crate) fn run_prepared<F: FnMut(usize, &mut GemmOutput)>(
             detections,
             rows_checked: m * blocks,
             rows_recomputed,
+            rows_waived,
             max_abs_d1,
             min_threshold,
             rows_fused: if fused_active { m * blocks } else { 0 },

@@ -30,8 +30,11 @@ pub const BENCH_SCHEMA: &str = "vabft-bench/v1";
 pub const CAMPAIGN_SCHEMA: &str = "vabft-campaign/v1";
 
 /// Schema tag of the serving-replay throughput documents
-/// (`BENCH_serving.json`).
-pub const SERVING_SCHEMA: &str = "vabft-serving/v1";
+/// (`BENCH_serving.json`). v2 added the open-loop columns (`arrival`,
+/// `p50_ms`/`p99_ms`/`p999_ms` tail latencies, `shed_rate`); v1
+/// documents no longer validate — consumers must regenerate, not mix
+/// column sets in one trajectory file.
+pub const SERVING_SCHEMA: &str = "vabft-serving/v2";
 
 fn esc(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
@@ -431,6 +434,25 @@ mod tests {
         let mut campaign = JsonDoc::new(CAMPAIGN_SCHEMA);
         campaign.entry(vec![("cell".to_string(), JsonValue::Int(0))]);
         assert!(campaign.splice_into(&base).is_err());
+    }
+
+    #[test]
+    fn serving_schema_v2_rejects_v1_documents() {
+        // The v1 → v2 migration: v2 rows carry tail-latency and
+        // shed-rate columns v1 rows lack, so a committed v1 trajectory
+        // must be rejected outright (regenerated, never spliced into).
+        assert_eq!(SERVING_SCHEMA, "vabft-serving/v2");
+        let v1 = "{\n  \"schema\": \"vabft-serving/v1\",\n  \"bench\": \"serving_replay\",\n  \
+                  \"entries\": []\n}\n";
+        assert!(validate_schema(v1, SERVING_SCHEMA).is_err());
+        // A same-tag v2 document still validates, and a v2 doc refuses
+        // to splice onto a v1 file (forcing the fresh-overwrite path in
+        // `JsonDoc::append`).
+        let v2 = JsonDoc::new(SERVING_SCHEMA);
+        assert!(validate_schema(&v2.to_json(), SERVING_SCHEMA).is_ok());
+        let mut patch = JsonDoc::new(SERVING_SCHEMA);
+        patch.entry(vec![("rps".to_string(), JsonValue::Num(1.0))]);
+        assert!(patch.splice_into(v1).is_err());
     }
 
     #[test]

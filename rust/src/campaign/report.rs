@@ -230,7 +230,12 @@ pub fn to_doc(outcome: &CampaignOutcome) -> JsonDoc {
         .meta("recall_above", JsonValue::Num(outcome.recall_above()))
         .meta("clean_rows", JsonValue::Int(outcome.total_clean_rows() as i64))
         .meta("false_positives", JsonValue::Int(outcome.total_false_positives() as i64))
-        .meta("gates_hold", JsonValue::Bool(outcome.gates_hold()));
+        .meta("gates_hold", JsonValue::Bool(outcome.gates_hold()))
+        .meta("severity_waived", JsonValue::Int(outcome.total_severity_waived() as i64))
+        .meta(
+            "severity_no_downgrade",
+            JsonValue::Bool(outcome.severity_no_downgrade()),
+        );
     for c in &outcome.cells {
         let s = &c.spec;
         doc.entry(vec![
@@ -257,6 +262,8 @@ pub fn to_doc(outcome: &CampaignOutcome) -> JsonDoc {
             ("vabft_threshold_max".to_string(), JsonValue::Sci(c.threshold_max)),
             ("aabft_threshold_max".to_string(), JsonValue::Sci(c.aabft_threshold_max)),
             ("tightness".to_string(), JsonValue::Sci(c.tightness())),
+            ("severity_detected".to_string(), JsonValue::Int(c.severity_detected as i64)),
+            ("severity_waived".to_string(), JsonValue::Int(c.severity_waived as i64)),
         ]);
     }
     doc

@@ -77,6 +77,15 @@ pub struct CellResult {
     /// Largest A-ABFT row threshold for the same operands (tightness
     /// baseline; not used for detection).
     pub aabft_threshold_max: f64,
+    /// Trials detected under the severity-aware policy
+    /// (`policy.with_severity()`), from the axis' second pass over the
+    /// identical fault plan. Mirrors `detected` for offline cells (the
+    /// severity axis runs on online groups, where waiving applies).
+    pub severity_detected: usize,
+    /// Trials whose detection the severity pass *waived* (residual below
+    /// output-quantization noise; no recompute spent). Always ≤
+    /// `severity_detected`; 0 for offline cells.
+    pub severity_waived: usize,
 }
 
 impl CellResult {
@@ -115,6 +124,9 @@ pub struct CampaignOutcome {
     pub clean_rows: usize,
     /// Flagged rows across the distinct clean sweeps (must be zero).
     pub false_positives: usize,
+    /// Flagged rows across the severity pass's clean sweeps (must also
+    /// be zero — severity only reshapes recovery, never detection).
+    pub severity_false_positives: usize,
     /// One coordinator-metrics summary line per worker-pool group
     /// (campaign counters, job totals, latency) — runtime telemetry, not
     /// serialized into the JSON document (it is wall-clock-dependent).
@@ -162,6 +174,20 @@ impl CampaignOutcome {
     /// zero false positives.
     pub fn gates_hold(&self) -> bool {
         self.total_false_positives() == 0 && self.total_detected_above() == self.total_above()
+    }
+
+    /// Total trials the severity pass waived instead of recomputing.
+    pub fn total_severity_waived(&self) -> usize {
+        self.cells.iter().map(|c| c.severity_waived).sum()
+    }
+
+    /// The severity-axis CI gate: the severity-aware policy detects
+    /// *exactly* what the baseline policy detects, cell by cell, and its
+    /// clean sweeps stay zero-FP. Waiving reshapes recovery, never
+    /// detection — a single downgraded detection fails the campaign.
+    pub fn severity_no_downgrade(&self) -> bool {
+        self.severity_false_positives == 0
+            && self.cells.iter().all(|c| c.severity_detected == c.detected)
     }
 }
 
@@ -219,6 +245,9 @@ struct OperandSet {
     a: Matrix,
     b: Matrix,
     handle: WeightHandle,
+    /// The same weights registered on the severity-axis coordinator
+    /// (online groups only).
+    shandle: Option<WeightHandle>,
     thr: Vec<f64>,
     threshold_min: f64,
     threshold_max: f64,
@@ -235,6 +264,9 @@ struct PendingCell {
     oi: usize,
     faults: Vec<FaultSpec>,
     pending: Vec<(u64, Receiver<GemmResponse>)>,
+    /// The identical batch in flight on the severity-axis coordinator
+    /// (online groups only).
+    spending: Option<Vec<(u64, Receiver<GemmResponse>)>>,
 }
 
 /// Execute a campaign grid with `workers` coordinator worker threads per
@@ -254,6 +286,7 @@ pub fn run_sharded(cfg: &GridConfig, workers: usize, shards: usize) -> CampaignO
     let mut results: Vec<Option<CellResult>> = cells.iter().map(|_| None).collect();
     let mut clean_rows_total = 0usize;
     let mut false_positives_total = 0usize;
+    let mut severity_fp_total = 0usize;
     let mut sweeps = 0usize;
     let mut group_metrics: Vec<String> = Vec::new();
 
@@ -284,6 +317,23 @@ pub fn run_sharded(cfg: &GridConfig, workers: usize, shards: usize) -> CampaignO
             shards: shards.max(1),
             ..Default::default()
         });
+        // The severity axis: online groups re-run the *identical* fault
+        // plan and clean sweeps under the severity-aware variant of the
+        // same policy on a second coordinator. Detection decisions must
+        // match the baseline cell-for-cell (`severity_no_downgrade`);
+        // the pass only measures how many escalations turn into waivers.
+        let scoord = if verify.online() {
+            Some(Coordinator::start(CoordinatorConfig {
+                workers: workers.max(1),
+                queue_depth: 256,
+                model,
+                policy: policy.with_severity(),
+                shards: shards.max(1),
+                ..Default::default()
+            }))
+        } else {
+            None
+        };
 
         // Submission pass. Operand sets are registered once per (input,
         // dist, shape) stream within the group and shared by its cells;
@@ -327,12 +377,28 @@ pub fn run_sharded(cfg: &GridConfig, workers: usize, shards: usize) -> CampaignO
                     clean_rows_total += clean.report.rows_checked;
                     false_positives_total += clean.report.detections.len();
 
+                    // Severity-axis clean sweep: must stay zero-FP.
+                    let shandle = scoord.as_ref().map(|sc| {
+                        let sh = sc.register_weights(operands.len() as u32, &b);
+                        let sclean = sc
+                            .call_prepared(PreparedGemmRequest {
+                                a: a.clone(),
+                                weights: Arc::clone(&sh),
+                                inject: None,
+                            })
+                            .result
+                            .expect("severity clean multiply failed");
+                        severity_fp_total += sclean.report.detections.len();
+                        sh
+                    });
+
                     operands.push(OperandSet {
                         stream,
                         sweep: sweeps,
                         a,
                         b,
                         handle,
+                        shandle,
                         threshold_min: thr.iter().cloned().fold(f64::INFINITY, f64::min),
                         threshold_max: thr.iter().cloned().fold(0.0, f64::max),
                         aabft_threshold_max: a_thr.iter().cloned().fold(0.0, f64::max),
@@ -359,7 +425,21 @@ pub fn run_sharded(cfg: &GridConfig, workers: usize, shards: usize) -> CampaignO
                 .collect();
             let pending = coord.submit_batch_prepared(reqs);
             coord.metrics().campaign_trials.add(faults.len() as u64);
-            batches.push(PendingCell { ci, oi, faults, pending });
+            let spending = match (&scoord, &set.shandle) {
+                (Some(sc), Some(sh)) => {
+                    let sreqs: Vec<PreparedGemmRequest> = faults
+                        .iter()
+                        .map(|f| PreparedGemmRequest {
+                            a: set.a.clone(),
+                            weights: Arc::clone(sh),
+                            inject: Some(*f),
+                        })
+                        .collect();
+                    Some(sc.submit_batch_prepared(sreqs))
+                }
+                _ => None,
+            };
+            batches.push(PendingCell { ci, oi, faults, pending, spending });
         }
 
         // Collection pass, in planning order.
@@ -371,6 +451,11 @@ pub fn run_sharded(cfg: &GridConfig, workers: usize, shards: usize) -> CampaignO
                 .into_iter()
                 .map(|(_, rx)| rx.recv().expect("campaign worker died"))
                 .collect();
+            let sresponses: Option<Vec<GemmResponse>> = pc.spending.map(|sp| {
+                sp.into_iter()
+                    .map(|(_, rx)| rx.recv().expect("severity campaign worker died"))
+                    .collect()
+            });
 
             let mut res = CellResult {
                 spec: cell.clone(),
@@ -388,6 +473,8 @@ pub fn run_sharded(cfg: &GridConfig, workers: usize, shards: usize) -> CampaignO
                 threshold_min: set.threshold_min,
                 threshold_max: set.threshold_max,
                 aabft_threshold_max: set.aabft_threshold_max,
+                severity_detected: 0,
+                severity_waived: 0,
             };
 
             for (f, resp) in pc.faults.iter().zip(&responses) {
@@ -414,12 +501,29 @@ pub fn run_sharded(cfg: &GridConfig, workers: usize, shards: usize) -> CampaignO
                     res.detected += 1;
                 }
             }
+            match &sresponses {
+                Some(srs) => {
+                    for resp in srs {
+                        let out = resp.result.as_ref().expect("severity multiply failed");
+                        if out.report.verdict != Verdict::Clean {
+                            res.severity_detected += 1;
+                        }
+                        res.severity_waived += out.report.rows_waived.min(1);
+                    }
+                }
+                // Offline groups: the axis doesn't apply; mirror the
+                // baseline so the no-downgrade gate is vacuous here.
+                None => res.severity_detected = res.detected,
+            }
             results[pc.ci] = Some(res);
             coord.metrics().campaign_cells.inc();
         }
         group_metrics
             .push(format!("{} {}: {}", model.label(), verify.name(), coord.metrics().summary()));
         coord.shutdown();
+        if let Some(sc) = scoord {
+            sc.shutdown();
+        }
     }
 
     let cells_out: Vec<CellResult> =
@@ -429,6 +533,7 @@ pub fn run_sharded(cfg: &GridConfig, workers: usize, shards: usize) -> CampaignO
         cells: cells_out,
         clean_rows: clean_rows_total,
         false_positives: false_positives_total,
+        severity_false_positives: severity_fp_total,
         group_metrics,
     }
 }

@@ -38,6 +38,6 @@ pub mod partition;
 mod service;
 pub use partition::{PartitionPolicy, ShardPlan, ShardSpec, TopologyConfig, TopologyGroup};
 pub use service::{
-    Coordinator, CoordinatorConfig, GemmRequest, GemmResponse, InjectSpec, PreparedGemmRequest,
-    WeightHandle, WeightId,
+    Admission, Coordinator, CoordinatorConfig, GemmRequest, GemmResponse, InjectSpec,
+    PreparedGemmRequest, WeightHandle, WeightId,
 };

@@ -80,6 +80,21 @@ pub struct PreparedGemmRequest {
     pub inject: Option<InjectSpec>,
 }
 
+/// Explicit admission verdict of the non-blocking submit path
+/// ([`Coordinator::try_submit_prepared`]): the open-loop traffic engine
+/// must never block its arrival loop on a full queue, so instead of
+/// backpressure it receives either an acceptance or a load-shed verdict.
+#[derive(Debug)]
+pub enum Admission {
+    /// The request was enqueued; its response will carry this id.
+    Accepted(u64, Receiver<GemmResponse>),
+    /// The target shard's queue was full: the request was refused
+    /// *before* any compute, `jobs_shed` was incremented, and the
+    /// request is handed back untouched. Shedding never alters any
+    /// computed output's bits — a shed request simply never executes.
+    Shed(PreparedGemmRequest),
+}
+
 /// The response: the (possibly repaired) product and its verdict.
 #[derive(Debug)]
 pub struct GemmResponse {
@@ -343,6 +358,23 @@ impl ShardQueue {
         s.deque.push_back(job);
         drop(s);
         self.not_empty.notify_one();
+    }
+
+    /// Non-blocking bounded push — the open-loop admission-control path:
+    /// when the queue is at capacity the job is handed back (`Err`) so
+    /// the caller can emit an explicit load-shed verdict instead of
+    /// blocking the arrival loop. Panics if the queue closed, matching
+    /// [`ShardQueue::push`].
+    fn try_push(&self, job: Job) -> Result<(), Job> {
+        let mut s = self.state.lock().unwrap();
+        assert!(!s.closed, "worker pool hung up");
+        if s.deque.len() >= self.cap {
+            return Err(job);
+        }
+        s.deque.push_back(job);
+        drop(s);
+        self.not_empty.notify_one();
+        Ok(())
     }
 
     /// Non-blocking pop — also the drain path after close: buffered jobs
@@ -643,6 +675,39 @@ impl Coordinator {
         (id, reply_rx)
     }
 
+    /// Non-blocking handle-based submit — the admission-control path of
+    /// the open-loop traffic engine. Routes exactly like
+    /// [`Self::submit_prepared_tagged`] (deterministic round-robin by
+    /// submission id), but when the target shard's queue is full the
+    /// request is *shed*: handed back in [`Admission::Shed`] with
+    /// `jobs_shed` incremented and nothing computed. Note the submission
+    /// id is consumed either way, so under shedding the id sequence has
+    /// gaps (ids stay unique and monotone).
+    pub fn try_submit_prepared(&self, req: PreparedGemmRequest) -> Admission {
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let queues = self.queues.as_ref().expect("coordinator already shut down");
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let shard = (id % queues.len() as u64) as usize;
+        let job =
+            Job { id, payload: Payload::Handle(req), reply: reply_tx, submitted: Instant::now() };
+        match queues[shard].try_push(job) {
+            Ok(()) => {
+                self.metrics.jobs_submitted.inc();
+                if self.steal {
+                    self.steal_signal.bump();
+                }
+                Admission::Accepted(id, reply_rx)
+            }
+            Err(job) => {
+                self.metrics.jobs_shed.inc();
+                match job.payload {
+                    Payload::Handle(req) => Admission::Shed(req),
+                    Payload::ById(_) => unreachable!("try_submit_prepared enqueues handles only"),
+                }
+            }
+        }
+    }
+
     /// Batched submit: enqueue every request (in order, sharing the
     /// backpressure of the bounded per-shard queues) and return one
     /// `(id, receiver)` pair per request, in the same order. Requests of
@@ -826,6 +891,14 @@ fn process(ctx: &WorkerCtx, job: Job, stolen: bool) {
             Verdict::Recomputed | Verdict::Flagged => {
                 ctx.metrics.faults_detected.add(out.report.detections.len() as u64);
                 ctx.metrics.rows_recomputed.add(out.report.rows_recomputed as u64);
+                ctx.metrics.faults_waived.add(out.report.rows_waived as u64);
+            }
+            Verdict::Waived => {
+                ctx.metrics.faults_detected.add(out.report.detections.len() as u64);
+                ctx.metrics
+                    .faults_corrected
+                    .add(out.report.detections.iter().filter(|d| d.corrected).count() as u64);
+                ctx.metrics.faults_waived.add(out.report.rows_waived as u64);
             }
         }
     }
@@ -833,13 +906,10 @@ fn process(ctx: &WorkerCtx, job: Job, stolen: bool) {
         ctx.metrics.jobs_stolen.inc();
     }
     ctx.metrics.jobs_completed.inc();
-    ctx.metrics.latency.record(job.submitted.elapsed());
-    let _ = job.reply.send(GemmResponse {
-        id: job.id,
-        result,
-        injected,
-        latency: job.submitted.elapsed(),
-    });
+    let latency = job.submitted.elapsed();
+    ctx.metrics.latency.record(latency);
+    ctx.metrics.tail.record(latency);
+    let _ = job.reply.send(GemmResponse { id: job.id, result, injected, latency });
 }
 
 #[cfg(test)]
@@ -1109,6 +1179,65 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(1));
         }
         assert_eq!(c.metrics().jobs_completed.get(), 8);
+        c.shutdown();
+    }
+
+    #[test]
+    fn try_push_hands_the_job_back_at_capacity() {
+        let q = ShardQueue::new(1);
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let job = |id| Job {
+            id,
+            payload: Payload::ById(GemmRequest { a: Matrix::zeros(1, 1), weight: 0, inject: None }),
+            reply: tx.clone(),
+            submitted: Instant::now(),
+        };
+        assert!(q.try_push(job(0)).is_ok());
+        let back = q.try_push(job(1)).expect_err("depth-1 queue must refuse a second job");
+        assert_eq!(back.id, 1, "the refused job must come back intact");
+        // Draining frees the capacity again.
+        assert_eq!(q.try_pop().expect("buffered job").id, 0);
+        assert!(q.try_push(job(2)).is_ok());
+    }
+
+    #[test]
+    fn open_loop_admission_sheds_instead_of_blocking() {
+        // A depth-1 queue with one worker and a burst of 24 back-to-back
+        // non-blocking submissions: most must shed (the worker cannot
+        // drain multi-millisecond GEMMs at submission speed), none may
+        // block, and the metrics must account for every request exactly
+        // once as accepted or shed.
+        let cfg = CoordinatorConfig { workers: 1, queue_depth: 1, ..Default::default() };
+        let c = Coordinator::start(cfg);
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let d = Distribution::normal_1_1();
+        let b = Matrix::sample_in(96, 96, &d, Precision::Bf16, &mut rng);
+        let h = c.register_weights(1, &b);
+        let a = Matrix::sample_in(96, 96, &d, Precision::Bf16, &mut rng);
+        let mut pending = Vec::new();
+        let mut shed = 0u64;
+        for _ in 0..24 {
+            let req =
+                PreparedGemmRequest { a: a.clone(), weights: Arc::clone(&h), inject: None };
+            match c.try_submit_prepared(req) {
+                Admission::Accepted(id, rx) => pending.push((id, rx)),
+                Admission::Shed(back) => {
+                    // The shed request comes back untouched.
+                    assert_eq!(back.a.data(), a.data());
+                    shed += 1;
+                }
+            }
+        }
+        assert!(shed >= 1, "a depth-1 queue must shed under a 24-deep burst");
+        assert_eq!(c.metrics().jobs_shed.get(), shed);
+        assert_eq!(c.metrics().jobs_submitted.get(), pending.len() as u64);
+        for (id, rx) in pending {
+            let resp = rx.recv().expect("accepted requests must complete");
+            assert_eq!(resp.id, id);
+            assert!(resp.result.is_ok());
+        }
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.jobs_completed + snap.jobs_shed, 24);
         c.shutdown();
     }
 

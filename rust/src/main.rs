@@ -18,6 +18,16 @@
 //!                  # epilogue) verify point for every request; exits non-zero
 //!                  # if any shard count's output fingerprint diverges from the
 //!                  # baseline
+//! vabft serve-replay --open-loop
+//!                  [--families llama-7b,gpt2,vit-b32] [--requests N] [--rate R]
+//!                  [--arrival poisson|bursty|diurnal] [--slo MS] [--fault-every N]
+//!                  [--shards 1,2,4] [--workers W] [--partition P] [--steal]
+//!                  [--fused] [--smoke] [--json FILE] [--precision bf16] [--seed S]
+//!                  # open-loop traffic: seeded arrivals over a mixed-family
+//!                  # trace, bounded-queue admission (load-shed, never block),
+//!                  # p50/p99/p999 + SLO attainment; exits non-zero if the
+//!                  # deep-queue fingerprint ladder diverges across shard
+//!                  # counts or severity-aware recovery downgrades a detection
 //! vabft campaign --table8
 //!                  [--precision bf16] [--dist n11|nz|u|u01|trunc] [--trials N] [--offline]
 //!                  # legacy single-configuration Table 8 bit ladder
@@ -226,6 +236,19 @@ fn cmd_campaign(args: &Args) {
         outcome.total_above(),
         outcome.total_clean_rows(),
     );
+    if !outcome.severity_no_downgrade() {
+        eprintln!(
+            "campaign gate FAILED: severity-aware recovery downgraded detection \
+             ({} severity false positives; waiving must change repair, never recall)",
+            outcome.severity_false_positives,
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "severity gate OK: per-cell detection identical under waiving \
+         ({} trials waived sub-noise residuals, 0 downgrades, 0 false positives)",
+        outcome.total_severity_waived(),
+    );
 }
 
 /// Legacy single-configuration detection-rate ladder (paper Table 8).
@@ -290,6 +313,9 @@ fn cmd_campaign_table8(args: &Args) {
 /// verdicts are bitwise-unchanged, so the fingerprint gate doubles as an
 /// end-to-end check of the fused path.
 fn cmd_serve_replay(args: &Args) {
+    if args.flag("open-loop") {
+        return cmd_serve_replay_open_loop(args);
+    }
     use vabft::abft::VerifyPolicy;
     use vabft::coordinator::{CoordinatorConfig, PartitionPolicy};
     use vabft::gemm::{AccumModel, ParallelismConfig};
@@ -410,6 +436,223 @@ fn cmd_serve_replay(args: &Args) {
         "gate OK: fingerprint identical across shards {:?}; all {} responses clean",
         shard_counts,
         rows.iter().map(|r| r.report.requests).sum::<usize>()
+    );
+}
+
+/// Open-loop variant of `serve-replay` (`--open-loop`): seeded arrival
+/// processes release a mixed-family trace against the wall clock,
+/// admission goes through the bounded non-blocking queue (explicit
+/// load-shed verdicts, never a stalled arrival loop), and the report
+/// carries p50/p99/p999, shed rate and SLO attainment. Two CI gates:
+///
+/// * **determinism ladder** — the same `(config, seed)` schedule re-runs
+///   at every requested shard count with queues deep enough that nothing
+///   sheds (shedding is the one timing-dependent outcome), and the run
+///   exits non-zero if any trace or output fingerprint diverges from the
+///   baseline shard count;
+/// * **severity gate** — a fault-injected schedule replays under
+///   always-recompute and severity-aware recovery
+///   ([`vabft::abft::VerifyPolicy::with_severity`]); the run exits
+///   non-zero if the severity policy downgrades a detection or alters
+///   any computed output's bits.
+fn cmd_serve_replay_open_loop(args: &Args) {
+    use std::time::Duration;
+    use vabft::abft::VerifyPolicy;
+    use vabft::coordinator::{CoordinatorConfig, PartitionPolicy};
+    use vabft::gemm::{AccumModel, ParallelismConfig};
+    use vabft::workload::{replay_doc, run_open_loop, ArrivalModel, OpenLoopConfig, ReplayRow};
+
+    let smoke = args.flag("smoke");
+    let seed = args.opt_or("seed", 0x01E2u64);
+    let mut cfg = OpenLoopConfig::smoke(seed);
+    if let Some(f) = args.opt("families").or_else(|| args.opt("family")) {
+        cfg.families = f.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    cfg.scale = args.opt_or("scale", cfg.scale).max(1);
+    cfg.layers = args.opt_or("layers", cfg.layers).max(1);
+    cfg.batch = args.opt_or("batch", cfg.batch).max(1);
+    cfg.requests = args.opt_or("requests", if smoke { 48 } else { 120 }).max(1);
+    cfg.rate = args.opt_or("rate", cfg.rate);
+    if !(cfg.rate > 0.0 && cfg.rate.is_finite()) {
+        eprintln!("--rate must be a positive requests/second figure");
+        std::process::exit(2);
+    }
+    cfg.arrival = match args.opt("arrival") {
+        None => cfg.arrival,
+        Some(s) => ArrivalModel::parse(s).unwrap_or_else(|| {
+            eprintln!("unknown arrival model '{s}' (poisson|bursty|diurnal)");
+            std::process::exit(2);
+        }),
+    };
+    cfg.slo = match args.opt_or("slo", 250u64) {
+        0 => None,
+        ms => Some(Duration::from_millis(ms)),
+    };
+    cfg.fault_every = args.opt_or("fault-every", 0usize);
+
+    let precision = parse_precision(args, Precision::Bf16);
+    let model = if precision == Precision::F32 || precision == Precision::F64 {
+        AccumModel::gpu_highprec(precision)
+    } else {
+        AccumModel::wide(precision)
+    };
+    let workers = args.opt_or("workers", 2usize).max(1);
+    let partition = PartitionPolicy::parse(args.opt("partition").unwrap_or("contiguous"))
+        .unwrap_or_else(|| {
+            eprintln!("unknown partition policy (contiguous|interleaved)");
+            std::process::exit(2);
+        });
+    let steal = args.flag("steal");
+    let fused = args.flag("fused");
+    let base_policy = if fused { VerifyPolicy::fused() } else { VerifyPolicy::default() };
+    let shard_counts: Vec<usize> = args
+        .opt("shards")
+        .unwrap_or(if smoke { "1,2" } else { "1,2,4" })
+        .split(',')
+        .map(|s| {
+            s.trim().parse().unwrap_or_else(|_| {
+                eprintln!("invalid --shards list '{s}'");
+                std::process::exit(2);
+            })
+        })
+        .collect();
+    println!(
+        "serve-replay (open loop): families={} requests={} rate={}/s arrival={} \
+         slo={:?} fault_every={} seed=0x{seed:x} model={} partition={} steal={steal} \
+         fused={fused} workers/shard={workers}",
+        cfg.families.join("+"),
+        cfg.requests,
+        cfg.rate,
+        cfg.arrival.name(),
+        cfg.slo,
+        cfg.fault_every,
+        model.label(),
+        partition.name(),
+    );
+
+    let ccfg_for = |shards: usize, policy: VerifyPolicy| CoordinatorConfig {
+        workers,
+        // The gates run with queues at least as deep as the offered count
+        // so nothing sheds: which requests complete is then a pure
+        // function of the seed, and the fingerprints are exact.
+        queue_depth: cfg.requests,
+        model,
+        parallelism: ParallelismConfig::from_args(args),
+        shards: shards.max(1),
+        partition,
+        steal,
+        policy,
+        ..Default::default()
+    };
+
+    let mut rows: Vec<ReplayRow> = Vec::new();
+    let mut base_fps: Option<(u64, u64)> = None;
+    let mut schedule_equal = true;
+    let mut output_equal = true;
+    let mut t = Table::new(
+        "Open-loop serving replay (deep-queue determinism ladder)",
+        &["shards", "offered", "admitted", "shed%", "p50", "p99", "p999", "SLO %", "req/s", "fp=="],
+    );
+    for &shards in &shard_counts {
+        let r = run_open_loop(&cfg, ccfg_for(shards, base_policy));
+        let (btrace, bout) = *base_fps.get_or_insert((r.trace_fingerprint, r.output_fingerprint));
+        schedule_equal &= r.trace_fingerprint == btrace;
+        output_equal &= r.output_fingerprint == bout;
+        let slo_pct = 100.0 * r.slo_attainment();
+        let offered = r.offered;
+        let row = ReplayRow::ladder(
+            r.replay,
+            rows.first(),
+            partition.name(),
+            steal,
+            workers,
+            cfg.requests,
+        );
+        t.row(vec![
+            shards.to_string(),
+            offered.to_string(),
+            row.report.requests.to_string(),
+            format!("{:.1}", 100.0 * row.report.shed_rate()),
+            format!("{:?}", row.report.p50),
+            format!("{:?}", row.report.p99),
+            format!("{:?}", row.report.p999),
+            format!("{slo_pct:.1}"),
+            format!("{:.1}", row.report.rps()),
+            if row.fingerprint_equal { "yes".into() } else { "DIVERGED".into() },
+        ]);
+        rows.push(row);
+    }
+    t.print();
+    if let Some(f) = args.opt("json") {
+        let mode = if smoke { "open-loop-smoke" } else { "open-loop" };
+        match replay_doc(&rows, mode).write_to(f) {
+            Ok(p) => println!("wrote {}", p.display()),
+            Err(e) => {
+                eprintln!("failed to write {f}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    if !schedule_equal
+        || !output_equal
+        || rows.iter().any(|r| !r.fingerprint_equal || r.report.shed > 0)
+    {
+        eprintln!(
+            "serve-replay gate FAILED: open-loop fingerprint diverged across shard \
+             counts {shard_counts:?} (schedule_equal={schedule_equal} \
+             output_equal={output_equal}; deep queues must never shed)"
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "gate OK: schedule + output fingerprints identical across shards {:?}; \
+         0 of {} offered requests shed",
+        shard_counts,
+        cfg.requests * shard_counts.len(),
+    );
+
+    // Severity gate: the same faulted schedule under always-recompute vs
+    // severity-aware recovery. Detection counts and output bits must be
+    // identical — waiving may only change *how* a detection is repaired.
+    let mut gate_cfg = cfg.clone();
+    gate_cfg.fault_every = if cfg.fault_every > 0 { cfg.fault_every } else { 5 };
+    let strict = run_open_loop(&gate_cfg, ccfg_for(shard_counts[0], base_policy));
+    let lenient = run_open_loop(&gate_cfg, ccfg_for(shard_counts[0], base_policy.with_severity()));
+    if strict.faults_detected == 0 {
+        eprintln!(
+            "serve-replay gate FAILED: fault plan (every {}th request) produced no \
+             detections — severity gate is vacuous",
+            gate_cfg.fault_every
+        );
+        std::process::exit(1);
+    }
+    if lenient.faults_detected != strict.faults_detected
+        || lenient.output_fingerprint != strict.output_fingerprint
+        || strict.faults_waived != 0
+        || lenient.faults_waived + lenient.rows_recomputed != strict.rows_recomputed
+    {
+        eprintln!(
+            "serve-replay gate FAILED: severity-aware recovery downgraded the faulted \
+             replay (detections {} vs {}, waived {} vs {}, recomputed {} vs {}, \
+             output bits {})",
+            strict.faults_detected,
+            lenient.faults_detected,
+            strict.faults_waived,
+            lenient.faults_waived,
+            strict.rows_recomputed,
+            lenient.rows_recomputed,
+            if lenient.output_fingerprint == strict.output_fingerprint {
+                "identical"
+            } else {
+                "DIVERGED"
+            },
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "severity gate OK: {} detections preserved; severity waived {} of {} strict \
+         recomputes; output bits identical",
+        strict.faults_detected, lenient.faults_waived, strict.rows_recomputed,
     );
 }
 

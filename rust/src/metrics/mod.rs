@@ -101,6 +101,161 @@ impl Histogram {
     }
 }
 
+/// Sub-buckets per octave of [`TailHistogram`] (8 → at most 12.5%
+/// relative error on any quantile estimate).
+const TAIL_SUB: usize = 8;
+/// Octave groups of [`TailHistogram`]; the last bucket saturates.
+const TAIL_GROUPS: usize = 32;
+/// Fixed bucket count of [`TailHistogram`] — every histogram has exactly
+/// this many buckets, which is what makes the merge deterministic.
+pub const TAIL_BUCKETS: usize = TAIL_SUB * TAIL_GROUPS;
+
+/// Bucket index for a latency of `us` microseconds: log-linear (HDR
+/// style) — values below [`TAIL_SUB`] get exact buckets, above that each
+/// octave is split into [`TAIL_SUB`] equal-width sub-buckets.
+fn tail_index(us: u64) -> usize {
+    if us < TAIL_SUB as u64 {
+        return us as usize;
+    }
+    let msb = 63 - us.leading_zeros() as usize;
+    let group = msb - 2;
+    let sub = ((us >> (msb - 3)) & (TAIL_SUB as u64 - 1)) as usize;
+    (group * TAIL_SUB + sub).min(TAIL_BUCKETS - 1)
+}
+
+/// Inclusive upper edge (µs) of tail bucket `i` — the value quantile
+/// estimates report, so estimates never understate the true sample.
+fn tail_upper_us(i: usize) -> u64 {
+    let group = i / TAIL_SUB;
+    let sub = (i % TAIL_SUB) as u64;
+    if group == 0 {
+        return sub;
+    }
+    ((TAIL_SUB as u64 + sub + 1) << (group - 1)) - 1
+}
+
+/// Fixed-bucket log-scale latency histogram for tail quantiles
+/// (p50/p99/p999). Unlike [`Histogram`]'s coarse power-of-two buckets,
+/// each octave is split into [`TAIL_SUB`] sub-buckets, bounding the
+/// relative error of any quantile estimate by `1/TAIL_SUB`. The bucket
+/// layout is identical for every instance, so shard-local histograms
+/// merge by bucket-wise addition — associative, commutative, and
+/// independent of record order ([`TailSnapshot::merge`]).
+#[derive(Debug)]
+pub struct TailHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+}
+
+impl Default for TailHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TailHistogram {
+    /// Empty histogram.
+    pub fn new() -> TailHistogram {
+        TailHistogram {
+            buckets: (0..TAIL_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one duration.
+    #[inline]
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        self.buckets[tail_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Number of recorded durations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy of the bucket counts (a mergeable value type).
+    pub fn snapshot(&self) -> TailSnapshot {
+        TailSnapshot {
+            counts: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+/// A point-in-time copy of a [`TailHistogram`]'s buckets: the unit of
+/// deterministic cross-shard merging and quantile reporting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TailSnapshot {
+    counts: Vec<u64>,
+}
+
+impl Default for TailSnapshot {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl TailSnapshot {
+    /// All-zero snapshot (the merge identity).
+    pub fn empty() -> TailSnapshot {
+        TailSnapshot { counts: vec![0; TAIL_BUCKETS] }
+    }
+
+    /// Total samples.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Bucket-wise sum with `other` — associative and commutative by
+    /// construction (u64 addition on an identical fixed layout), so any
+    /// merge tree over shard-local histograms yields the same result.
+    pub fn merge(&self, other: &TailSnapshot) -> TailSnapshot {
+        TailSnapshot {
+            counts: self
+                .counts
+                .iter()
+                .zip(&other.counts)
+                .map(|(a, b)| a.wrapping_add(*b))
+                .collect(),
+        }
+    }
+
+    /// Quantile estimate: the inclusive upper edge of the bucket holding
+    /// the ⌈q·n⌉-th smallest sample (never understates the true sample;
+    /// overstates it by at most `1/TAIL_SUB` relative). Zero when empty.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((total as f64 * q).ceil() as u64).clamp(1, total);
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Duration::from_micros(tail_upper_us(i));
+            }
+        }
+        Duration::from_micros(tail_upper_us(TAIL_BUCKETS - 1))
+    }
+
+    /// Median latency.
+    pub fn p50(&self) -> Duration {
+        self.quantile(0.50)
+    }
+
+    /// 99th-percentile latency.
+    pub fn p99(&self) -> Duration {
+        self.quantile(0.99)
+    }
+
+    /// 99.9th-percentile latency.
+    pub fn p999(&self) -> Duration {
+        self.quantile(0.999)
+    }
+}
+
 /// Aggregated coordinator metrics.
 #[derive(Debug, Default)]
 pub struct ServiceMetrics {
@@ -124,8 +279,18 @@ pub struct ServiceMetrics {
     pub campaign_cells: Counter,
     /// Campaign injection trials executed through this coordinator.
     pub campaign_trials: Counter,
+    /// Requests refused at admission because the target shard queue was
+    /// full (open-loop load shedding — never blocks, never computes).
+    pub jobs_shed: Counter,
+    /// Detections whose recovery was waived by the severity policy: the
+    /// residual was provably below output-quantization noise, so the
+    /// recompute escalation was skipped.
+    pub faults_waived: Counter,
     /// Submission-to-completion latency distribution.
     pub latency: Histogram,
+    /// Fine-grained tail-latency histogram (p50/p99/p999) over the same
+    /// submission-to-completion durations as [`ServiceMetrics::latency`].
+    pub tail: TailHistogram,
 }
 
 /// A consistent point-in-time copy of every [`ServiceMetrics`] counter —
@@ -150,8 +315,14 @@ pub struct MetricsSnapshot {
     pub campaign_cells: u64,
     /// Campaign trials executed.
     pub campaign_trials: u64,
+    /// Requests shed at admission.
+    pub jobs_shed: u64,
+    /// Detections waived by the severity policy.
+    pub faults_waived: u64,
     /// Latencies recorded.
     pub latency_count: u64,
+    /// Tail-histogram samples recorded.
+    pub tail_count: u64,
 }
 
 impl ServiceMetrics {
@@ -173,7 +344,10 @@ impl ServiceMetrics {
             jobs_stolen: self.jobs_stolen.get(),
             campaign_cells: self.campaign_cells.get(),
             campaign_trials: self.campaign_trials.get(),
+            jobs_shed: self.jobs_shed.get(),
+            faults_waived: self.faults_waived.get(),
             latency_count: self.latency.count(),
+            tail_count: self.tail.count(),
         }
     }
 
@@ -211,20 +385,26 @@ impl ServiceMetrics {
 
     /// One-line human-readable summary of every counter.
     pub fn summary(&self) -> String {
+        let tail = self.tail.snapshot();
         format!(
-            "jobs={}/{} batches={} detected={} corrected={} recomputed_rows={} stolen={} \
-             campaign_cells={} campaign_trials={} mean={:?} p95={:?}",
+            "jobs={}/{} shed={} batches={} detected={} corrected={} waived={} \
+             recomputed_rows={} stolen={} campaign_cells={} campaign_trials={} \
+             mean={:?} p50={:?} p99={:?} p999={:?}",
             self.jobs_completed.get(),
             self.jobs_submitted.get(),
+            self.jobs_shed.get(),
             self.batches_submitted.get(),
             self.faults_detected.get(),
             self.faults_corrected.get(),
+            self.faults_waived.get(),
             self.rows_recomputed.get(),
             self.jobs_stolen.get(),
             self.campaign_cells.get(),
             self.campaign_trials.get(),
             self.latency.mean(),
-            self.latency.quantile(0.95),
+            tail.p50(),
+            tail.p99(),
+            tail.p999(),
         )
     }
 }
@@ -258,6 +438,128 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.quantile(0.5), Duration::ZERO);
         assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    /// Exact quantile of a sorted sample: the ⌈q·n⌉-th smallest value —
+    /// the definition [`TailSnapshot::quantile`] approximates.
+    fn exact_quantile(sorted: &[u64], q: f64) -> u64 {
+        let n = sorted.len() as u64;
+        let target = ((n as f64 * q).ceil() as u64).clamp(1, n);
+        sorted[(target - 1) as usize]
+    }
+
+    #[test]
+    fn tail_bucket_layout_is_monotone_and_self_consistent() {
+        // Every value must land in a bucket whose upper edge is >= the
+        // value, bucket indices must be monotone in the value, and the
+        // upper edge of bucket i must itself index back to bucket i.
+        let mut prev = 0usize;
+        for v in (0u64..4096).chain([1 << 20, 1 << 30, 1 << 40, u64::MAX]) {
+            let i = tail_index(v);
+            assert!(i >= prev, "index not monotone at {v}");
+            assert!(i < TAIL_BUCKETS);
+            if i < TAIL_BUCKETS - 1 {
+                assert!(tail_upper_us(i) >= v, "upper edge below value at {v}");
+                assert_eq!(tail_index(tail_upper_us(i)), i, "edge escapes bucket at {v}");
+            }
+            prev = i;
+        }
+    }
+
+    #[test]
+    fn tail_quantiles_track_exact_sorted_sample_quantiles() {
+        // Synthetic distributions with very different shapes; the
+        // histogram estimate must bracket the exact quantile within the
+        // documented 1/TAIL_SUB relative error (upper edge reporting:
+        // never below the exact value).
+        let mut rng = 0x9E3779B97F4A7C15u64;
+        let mut next = move || {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            rng
+        };
+        let uniform: Vec<u64> = (0..5000).map(|_| next() % 100_000).collect();
+        let heavy_tail: Vec<u64> =
+            (0..5000).map(|_| 10 + (1u64 << (next() % 20)) + next() % 7).collect();
+        let constant: Vec<u64> = vec![777; 1000];
+        for samples in [uniform, heavy_tail, constant] {
+            let h = TailHistogram::new();
+            for &s in &samples {
+                h.record(Duration::from_micros(s));
+            }
+            let snap = h.snapshot();
+            let mut sorted = samples.clone();
+            sorted.sort_unstable();
+            for q in [0.5, 0.9, 0.99, 0.999] {
+                let exact = exact_quantile(&sorted, q);
+                let est = snap.quantile(q).as_micros() as u64;
+                assert!(est >= exact, "q={q}: estimate {est} below exact {exact}");
+                let bound = exact + exact / TAIL_SUB as u64 + 1;
+                assert!(est <= bound, "q={q}: estimate {est} above bound {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn tail_merge_is_associative_and_commutative() {
+        // Three "shard-local" histograms with disjoint latency regimes.
+        let mk = |base: u64, n: u64| {
+            let h = TailHistogram::new();
+            for i in 0..n {
+                h.record(Duration::from_micros(base + i * 3));
+            }
+            h.snapshot()
+        };
+        let (a, b, c) = (mk(10, 400), mk(5_000, 300), mk(900_000, 200));
+        assert_eq!(a.merge(&b), b.merge(&a), "merge must be commutative");
+        assert_eq!(
+            a.merge(&b).merge(&c),
+            a.merge(&b.merge(&c)),
+            "merge must be associative"
+        );
+        assert_eq!(a.merge(&TailSnapshot::empty()), a, "empty is the identity");
+        let merged = a.merge(&b).merge(&c);
+        assert_eq!(merged.count(), 900);
+        // Quantiles of the merge reflect the union: the p50 sits in the
+        // mid regime, the p999 in the slow one.
+        assert!(merged.p50() >= Duration::from_micros(1_000));
+        assert!(merged.p50() < Duration::from_micros(900_000));
+        assert!(merged.p999() >= Duration::from_micros(900_000));
+    }
+
+    #[test]
+    fn tail_snapshot_never_tears_under_concurrent_records() {
+        // Mirror of `snapshot_is_a_consistent_cut…` for the tail
+        // histogram: the writer records exactly one sample per
+        // `jobs_completed` increment, completed-then-record order, so at
+        // every instant tail_count <= jobs_completed. A torn read of the
+        // two would invert that.
+        use std::sync::Arc;
+        const N: u64 = 20_000;
+        let m = Arc::new(ServiceMetrics::new());
+        let w = {
+            let m = Arc::clone(&m);
+            std::thread::spawn(move || {
+                for i in 0..N {
+                    m.jobs_completed.inc();
+                    m.tail.record(Duration::from_micros(i % 512));
+                }
+            })
+        };
+        while !w.is_finished() {
+            let s = m.snapshot();
+            assert!(
+                s.jobs_completed >= s.tail_count,
+                "torn snapshot: completed {} < tail samples {}",
+                s.jobs_completed,
+                s.tail_count
+            );
+        }
+        w.join().unwrap();
+        let s = m.snapshot();
+        assert_eq!((s.jobs_completed, s.tail_count), (N, N));
+        assert_eq!(m.tail.snapshot().count(), N);
     }
 
     #[test]

@@ -1,0 +1,644 @@
+//! Open-loop traffic engine: seeded arrival processes over a
+//! mixed-family transformer trace.
+//!
+//! The closed-loop replay ([`super::run_replay`]) measures capacity: it
+//! keeps a fixed number of requests in flight, so offered load always
+//! equals service rate and queueing never builds. Serving SLOs live in
+//! the opposite regime — requests arrive on *their own* clock, queues
+//! grow when the service falls behind, and the interesting numbers are
+//! the latency tail and the shed rate. [`run_open_loop`] drives exactly
+//! that: a seeded [`ArrivalModel`] (Poisson, bursty, diurnal) schedules
+//! request times against the wall clock, each arrival picks a GEMM from
+//! a trace mixing several model families, and admission goes through the
+//! non-blocking [`Coordinator::try_submit_prepared`] — a full shard
+//! queue yields an explicit load-shed verdict, never a stalled arrival
+//! loop.
+//!
+//! Everything except the clock is deterministic per seed: the arrival
+//! schedule, the request mix and the fault plan are pure functions of
+//! `(config, seed)` (pinned by [`build_schedule`]'s trace fingerprint),
+//! and admitted requests produce bitwise-identical outputs at any shard
+//! count, partition policy or steal setting. Timing enters only through
+//! *which* requests get shed — so the determinism gates in
+//! `tests/shard_equivalence.rs` run with queues deep enough that nothing
+//! sheds, making the output fingerprint exact.
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::abft::Verdict;
+use crate::coordinator::{
+    Admission, Coordinator, CoordinatorConfig, GemmResponse, InjectSpec, PreparedGemmRequest,
+    WeightHandle,
+};
+use crate::matrix::Matrix;
+use crate::rng::{fnv1a, Distribution, Rng, Xoshiro256pp, FNV1A_OFFSET};
+
+use super::replay::{build_trace, fold_response, LayerTrace, ReplayConfig, ReplayReport, TraceEntry};
+
+/// Stream tags separating the open-loop RNG streams (arrival clock,
+/// request mix, fault plan, weights, activations) from each other and
+/// from every other subsystem's streams.
+const ARRIVAL_TAG: u64 = 0x0A12_71AF;
+const MIX_TAG: u64 = 0x0A12_82B0;
+const FAULT_TAG: u64 = 0x0A12_93C1;
+const OL_WEIGHT_TAG: u64 = 0x0A12_A4D2;
+const OL_ACT_TAG: u64 = 0x0A12_B5E3;
+
+/// Seeded arrival process shaping the open-loop request clock.
+///
+/// All three are parameter-free beyond the offered `rate`: burst and
+/// diurnal shape constants are fixed so that a schedule is a pure
+/// function of `(model, rate, n, seed)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalModel {
+    /// Memoryless arrivals: i.i.d. exponential inter-arrival times at
+    /// the offered rate.
+    Poisson,
+    /// MMPP-style two-state modulation: arrivals alternate between a
+    /// calm state (rate/2) and a burst state (4×rate), toggling with
+    /// probability 1/16 after each arrival (expected dwell ≈ 16
+    /// arrivals). Offered load averages near the configured rate while
+    /// producing the queue-filling bursts admission control exists for.
+    Bursty,
+    /// Diurnally modulated Poisson via thinning: the instantaneous rate
+    /// follows `rate · (1 + 0.5·sin(2πt/T))` with three full cycles over
+    /// the nominal schedule span — a compressed day/night load curve.
+    Diurnal,
+}
+
+impl ArrivalModel {
+    /// Stable lowercase label (CLI flag value and JSON `arrival` column).
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalModel::Poisson => "poisson",
+            ArrivalModel::Bursty => "bursty",
+            ArrivalModel::Diurnal => "diurnal",
+        }
+    }
+
+    /// Parse a [`Self::name`] label.
+    pub fn parse(s: &str) -> Option<ArrivalModel> {
+        match s {
+            "poisson" => Some(ArrivalModel::Poisson),
+            "bursty" => Some(ArrivalModel::Bursty),
+            "diurnal" => Some(ArrivalModel::Diurnal),
+            _ => None,
+        }
+    }
+
+    /// Every model, in a fixed order (bench/campaign sweeps).
+    pub fn all() -> [ArrivalModel; 3] {
+        [ArrivalModel::Poisson, ArrivalModel::Bursty, ArrivalModel::Diurnal]
+    }
+}
+
+/// Exponential inter-arrival sample at `rate` (finite: `1-u` ∈ (0, 1]).
+fn exp_sample(rng: &mut Xoshiro256pp, rate: f64) -> f64 {
+    -(1.0 - rng.next_f64()).ln() / rate
+}
+
+/// Generate `n` arrival offsets (from the schedule start, nondecreasing)
+/// for `model` at offered `rate` requests/second. Deterministic per
+/// `(model, rate, n, seed)`; the RNG stream is disjoint from the
+/// weight/activation/mix/fault streams.
+pub fn arrival_times(model: ArrivalModel, rate: f64, n: usize, seed: u64) -> Vec<Duration> {
+    assert!(rate > 0.0 && rate.is_finite(), "offered rate must be positive");
+    let mut rng = Xoshiro256pp::from_stream(seed ^ ARRIVAL_TAG, model as u64);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    match model {
+        ArrivalModel::Poisson => {
+            for _ in 0..n {
+                t += exp_sample(&mut rng, rate);
+                out.push(Duration::from_secs_f64(t));
+            }
+        }
+        ArrivalModel::Bursty => {
+            let mut burst = false;
+            for _ in 0..n {
+                let r = if burst { 4.0 * rate } else { 0.5 * rate };
+                t += exp_sample(&mut rng, r);
+                out.push(Duration::from_secs_f64(t));
+                if rng.uniform_u64(16) == 0 {
+                    burst = !burst;
+                }
+            }
+        }
+        ArrivalModel::Diurnal => {
+            // Thinning against the peak rate 1.5·rate; three cycles over
+            // the nominal span n/rate.
+            let peak = 1.5 * rate;
+            let period = (n as f64 / rate / 3.0).max(1e-3);
+            while out.len() < n {
+                t += exp_sample(&mut rng, peak);
+                let inst = rate * (1.0 + 0.5 * (std::f64::consts::TAU * t / period).sin());
+                if rng.next_f64() * peak < inst {
+                    out.push(Duration::from_secs_f64(t));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Open-loop workload configuration.
+#[derive(Debug, Clone)]
+pub struct OpenLoopConfig {
+    /// Model families mixed into one trace (each expanded exactly like
+    /// the closed-loop replay's [`build_trace`]).
+    pub families: Vec<String>,
+    /// Shape divisor shared by every family (see [`ReplayConfig::scale`]).
+    pub scale: usize,
+    /// Transformer layers per family trace.
+    pub layers: usize,
+    /// Activation rows per request.
+    pub batch: usize,
+    /// Requests offered (arrivals generated; admitted ≤ offered).
+    pub requests: usize,
+    /// Offered arrival rate, requests/second.
+    pub rate: f64,
+    /// Arrival process shaping the request clock.
+    pub arrival: ArrivalModel,
+    /// Master seed for the arrival/mix/fault/weight/activation streams.
+    pub seed: u64,
+    /// Inject a fault into every `fault_every`-th request (0 = clean
+    /// trace). The plan alternates exponent-class output upsets
+    /// (corrected in place) with small checksum perturbations — the
+    /// unlocalizable, sub-quantization-noise class the severity policy
+    /// waives instead of recomputing.
+    pub fault_every: usize,
+    /// Latency SLO: admitted responses at or under this budget count as
+    /// hits ([`OpenLoopReport::slo_attainment`]). `None` disables.
+    pub slo: Option<Duration>,
+}
+
+impl OpenLoopConfig {
+    /// Tiny deterministic mixed-family configuration for CI smoke runs.
+    pub fn smoke(seed: u64) -> OpenLoopConfig {
+        OpenLoopConfig {
+            families: vec!["llama-7b".to_string(), "gpt2".to_string(), "vit-b32".to_string()],
+            scale: 32,
+            layers: 1,
+            batch: 4,
+            requests: 60,
+            rate: 300.0,
+            arrival: ArrivalModel::Poisson,
+            seed,
+            fault_every: 0,
+            slo: Some(Duration::from_millis(250)),
+        }
+    }
+}
+
+/// Concatenate one trace per family into a single mixed trace, re-basing
+/// weight indices so every family keeps its own distinct tensors. The
+/// combined label joins the family names with `+`.
+pub fn build_mixed_trace(cfg: &OpenLoopConfig) -> LayerTrace {
+    assert!(!cfg.families.is_empty(), "open loop needs at least one model family");
+    let mut entries: Vec<TraceEntry> = Vec::new();
+    let mut weights = Vec::new();
+    for fam in &cfg.families {
+        let sub = build_trace(&ReplayConfig {
+            family: fam.clone(),
+            scale: cfg.scale,
+            layers: cfg.layers,
+            batch: cfg.batch,
+            passes: 1,
+            concurrency: 1,
+            seed: cfg.seed,
+        });
+        let base = weights.len();
+        weights.extend(sub.weights.iter().cloned());
+        entries.extend(
+            sub.entries.iter().map(|e| TraceEntry { weight: e.weight + base, ..e.clone() }),
+        );
+    }
+    LayerTrace { family: cfg.families.join("+"), entries, weights }
+}
+
+/// One scheduled open-loop request: when it arrives, which trace entry
+/// it executes, and its planned fault (if any).
+#[derive(Debug, Clone)]
+pub struct ScheduledRequest {
+    /// Arrival offset from the schedule start.
+    pub at: Duration,
+    /// Index into the mixed trace's entries.
+    pub entry: usize,
+    /// Planned injection for this request.
+    pub inject: Option<InjectSpec>,
+}
+
+/// Expand the config into the full request schedule plus its
+/// **trace fingerprint**: an order-sensitive FNV-1a hash over every
+/// arrival time, entry choice and fault parameter. Two processes that
+/// agree on `(config, seed)` agree on this fingerprint *before* running
+/// anything — the pre-execution half of the open-loop determinism
+/// contract (the post-execution half is the output fingerprint).
+pub fn build_schedule(cfg: &OpenLoopConfig, trace: &LayerTrace) -> (Vec<ScheduledRequest>, u64) {
+    let times = arrival_times(cfg.arrival, cfg.rate, cfg.requests, cfg.seed);
+    let mut mix = Xoshiro256pp::from_stream(cfg.seed ^ MIX_TAG, 0);
+    let mut fault = Xoshiro256pp::from_stream(cfg.seed ^ FAULT_TAG, 0);
+    let mut fp = FNV1A_OFFSET;
+    let mut schedule = Vec::with_capacity(times.len());
+    for (i, at) in times.into_iter().enumerate() {
+        let entry = mix.uniform_u64(trace.entries.len() as u64) as usize;
+        let e = &trace.entries[entry];
+        let mut fault_words = [0u64; 4];
+        let inject = if cfg.fault_every > 0 && (i + 1) % cfg.fault_every == 0 {
+            let row = fault.uniform_u64(e.m as u64) as usize;
+            if fault.next_u64() & 1 == 0 {
+                // FP32 exponent bit 1 on a data element: an
+                // unmistakable upset, localized and corrected in place.
+                let col = fault.uniform_u64(e.n as u64) as usize;
+                fault_words = [1, row as u64, col as u64, 24];
+                Some(InjectSpec::output(row, col, 24))
+            } else {
+                // Mid-mantissa flip on the row checksum: detected on the
+                // verify grid, unlocalizable, and (usually) below
+                // output-quantization noise — the waive-vs-recompute
+                // decision point. Never touches output data bits.
+                fault_words = [2, row as u64, 0, 16];
+                Some(InjectSpec::checksum(row, 16))
+            }
+        } else {
+            None
+        };
+        fp = fnv1a(fp, (i as u64).to_le_bytes());
+        fp = fnv1a(fp, (at.as_nanos() as u64).to_le_bytes());
+        fp = fnv1a(fp, (entry as u64).to_le_bytes());
+        for w in fault_words {
+            fp = fnv1a(fp, w.to_le_bytes());
+        }
+        schedule.push(ScheduledRequest { at, entry, inject });
+    }
+    (schedule, fp)
+}
+
+/// Outcome of one open-loop run.
+#[derive(Debug, Clone)]
+pub struct OpenLoopReport {
+    /// The shared serving report (requests = admitted; `arrival` carries
+    /// the model name, `shed` the refusals, `p50/p99/p999` the tail).
+    pub replay: ReplayReport,
+    /// Requests offered (admitted + shed).
+    pub offered: usize,
+    /// Configured offered rate, requests/second.
+    pub rate: f64,
+    /// Arrival process used.
+    pub arrival: ArrivalModel,
+    /// Pre-execution schedule fingerprint (see [`build_schedule`]).
+    pub trace_fingerprint: u64,
+    /// Order-sensitive hash over admitted responses' output bits only
+    /// (no verdict tags): invariant between recovery policies that
+    /// differ solely in *how* they repair — e.g. severity-aware vs
+    /// always-recompute — as well as across scheduling knobs.
+    pub output_fingerprint: u64,
+    /// Detections across the run (coordinator counter).
+    pub faults_detected: u64,
+    /// In-place corrections across the run.
+    pub faults_corrected: u64,
+    /// Detections waived by the severity policy.
+    pub faults_waived: u64,
+    /// Rows recomputed across the run.
+    pub rows_recomputed: u64,
+    /// Latency SLO in force, if any.
+    pub slo: Option<Duration>,
+    /// Admitted responses with latency ≤ the SLO.
+    pub slo_hits: usize,
+}
+
+impl OpenLoopReport {
+    /// Fraction of admitted responses meeting the SLO (1.0 when no SLO
+    /// was set or nothing was admitted).
+    pub fn slo_attainment(&self) -> f64 {
+        match self.slo {
+            None => 1.0,
+            Some(_) if self.replay.requests == 0 => 1.0,
+            Some(_) => self.slo_hits as f64 / self.replay.requests as f64,
+        }
+    }
+}
+
+/// Drive the open-loop schedule through a coordinator started from
+/// `ccfg`. Weights and activations are sampled and registered exactly
+/// like the closed-loop replay (disjoint streams); then each scheduled
+/// request is released at its arrival offset — sleeping against absolute
+/// deadlines, so pacing never drifts — and admitted via the non-blocking
+/// path. Shed requests are counted and dropped; admitted responses are
+/// drained in submission order into the fingerprints, the verdict
+/// counts and the SLO tally. Tail latencies come from the coordinator's
+/// histogram, so they include queue wait.
+pub fn run_open_loop(cfg: &OpenLoopConfig, ccfg: CoordinatorConfig) -> OpenLoopReport {
+    let trace = build_mixed_trace(cfg);
+    let model = ccfg.model;
+    let coord = Coordinator::start(ccfg);
+
+    let handles: Vec<WeightHandle> = trace
+        .weights
+        .iter()
+        .enumerate()
+        .map(|(i, (k, n, dist))| {
+            let mut rng = Xoshiro256pp::from_stream(cfg.seed ^ OL_WEIGHT_TAG, i as u64);
+            let b = Matrix::sample_in(*k, *n, dist, model.input, &mut rng);
+            coord.register_weights(i as u32, &b)
+        })
+        .collect();
+    let acts: Vec<Matrix> = trace
+        .entries
+        .iter()
+        .enumerate()
+        .map(|(i, e)| {
+            let mut rng = Xoshiro256pp::from_stream(cfg.seed ^ OL_ACT_TAG, i as u64);
+            let unit = Distribution::Normal { mean: 0.0, std: 1.0 };
+            Matrix::sample_in(e.m, e.k, &unit, model.input, &mut rng)
+        })
+        .collect();
+
+    let (schedule, trace_fingerprint) = build_schedule(cfg, &trace);
+
+    let t0 = Instant::now();
+    let mut admitted: Vec<(u64, usize, Receiver<GemmResponse>)> =
+        Vec::with_capacity(schedule.len());
+    for req in &schedule {
+        if let Some(wait) = req.at.checked_sub(t0.elapsed()) {
+            if !wait.is_zero() {
+                std::thread::sleep(wait);
+            }
+        }
+        let e = &trace.entries[req.entry];
+        let prepared = PreparedGemmRequest {
+            a: acts[req.entry].clone(),
+            weights: Arc::clone(&handles[e.weight]),
+            inject: req.inject,
+        };
+        match coord.try_submit_prepared(prepared) {
+            Admission::Accepted(id, rx) => admitted.push((id, req.entry, rx)),
+            Admission::Shed(_) => {} // counted by the coordinator
+        }
+    }
+
+    let mut clean = 0usize;
+    let mut faulty = 0usize;
+    let mut flops = 0.0f64;
+    let mut fingerprint = FNV1A_OFFSET;
+    let mut output_fingerprint = FNV1A_OFFSET;
+    let mut slo_hits = 0usize;
+    let mut ord = 0u64;
+    for (id, entry, rx) in &admitted {
+        let resp = rx.recv().expect("open-loop worker died");
+        assert_eq!(resp.id, *id, "open-loop response mis-routed");
+        match &resp.result {
+            Ok(out) if out.report.verdict == Verdict::Clean => clean += 1,
+            _ => faulty += 1,
+        }
+        if let Some(slo) = cfg.slo {
+            if resp.latency <= slo {
+                slo_hits += 1;
+            }
+        }
+        flops += trace.entries[*entry].flops;
+        fingerprint = fold_response(fingerprint, &resp);
+        // Output-only fold: admission order + bits, no verdict tag —
+        // comparable across recovery policies.
+        output_fingerprint = fnv1a(output_fingerprint, ord.to_le_bytes());
+        if let Ok(out) = &resp.result {
+            for &v in out.c.data() {
+                output_fingerprint = fnv1a(output_fingerprint, v.to_bits().to_le_bytes());
+            }
+        }
+        ord += 1;
+    }
+    let elapsed = t0.elapsed();
+
+    let m = coord.metrics();
+    let shed = m.jobs_shed.get();
+    let tail = m.tail.snapshot();
+    let snap = m.snapshot();
+    let shards = coord.shards();
+    let stolen = snap.jobs_stolen;
+    coord.shutdown();
+    assert_eq!(
+        admitted.len() as u64 + shed,
+        cfg.requests as u64,
+        "every offered request must be admitted or shed"
+    );
+
+    OpenLoopReport {
+        replay: ReplayReport {
+            family: trace.family,
+            requests: admitted.len(),
+            weights: handles.len(),
+            flops,
+            elapsed,
+            clean,
+            faulty,
+            fingerprint,
+            shards,
+            stolen,
+            arrival: cfg.arrival.name().to_string(),
+            shed,
+            p50: tail.p50(),
+            p99: tail.p99(),
+            p999: tail.p999(),
+        },
+        offered: cfg.requests,
+        rate: cfg.rate,
+        arrival: cfg.arrival,
+        trace_fingerprint,
+        output_fingerprint,
+        faults_detected: snap.faults_detected,
+        faults_corrected: snap.faults_corrected,
+        faults_waived: snap.faults_waived,
+        rows_recomputed: snap.rows_recomputed,
+        slo: cfg.slo,
+        slo_hits,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_times_are_seeded_monotone_and_rate_shaped() {
+        for model in ArrivalModel::all() {
+            let a = arrival_times(model, 1000.0, 512, 42);
+            let b = arrival_times(model, 1000.0, 512, 42);
+            assert_eq!(a, b, "{}: same seed must give the same clock", model.name());
+            let c = arrival_times(model, 1000.0, 512, 43);
+            assert_ne!(a, c, "{}: different seeds must differ", model.name());
+            assert_eq!(a.len(), 512);
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "{}: non-monotone", model.name());
+            // Mean inter-arrival within a loose band of the offered rate
+            // (bursty trades ±; diurnal thins against 1.5× peak).
+            let mean = a.last().unwrap().as_secs_f64() / 512.0;
+            assert!(
+                (0.25e-3..4.0e-3).contains(&mean),
+                "{}: mean inter-arrival {mean} out of band",
+                model.name()
+            );
+        }
+        // Models shape time differently from the same seed.
+        let p = arrival_times(ArrivalModel::Poisson, 500.0, 64, 7);
+        let m = arrival_times(ArrivalModel::Bursty, 500.0, 64, 7);
+        assert_ne!(p, m);
+    }
+
+    #[test]
+    fn mixed_trace_rebases_weights_per_family() {
+        let cfg = OpenLoopConfig::smoke(9);
+        let mixed = build_mixed_trace(&cfg);
+        assert_eq!(mixed.family, "llama-7b+gpt2+vit-b32");
+        let per_family: usize = cfg
+            .families
+            .iter()
+            .map(|f| build_trace(&ReplayConfig::smoke(f, 9)).entries.len())
+            .sum();
+        assert_eq!(mixed.entries.len(), per_family);
+        assert_eq!(mixed.entries.len(), mixed.weights.len());
+        for e in &mixed.entries {
+            let (k, n, _) = &mixed.weights[e.weight];
+            assert_eq!((e.k, e.n), (*k, *n), "weight re-basing broke shape linkage");
+        }
+        // Every distinct weight is referenced exactly once (one entry
+        // per tensor per pass, as in the per-family traces).
+        let mut seen = vec![false; mixed.weights.len()];
+        for e in &mixed.entries {
+            assert!(!seen[e.weight]);
+            seen[e.weight] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn schedule_and_trace_fingerprint_are_pure_functions_of_seed() {
+        let mut cfg = OpenLoopConfig::smoke(21);
+        cfg.fault_every = 5;
+        let trace = build_mixed_trace(&cfg);
+        let (s1, f1) = build_schedule(&cfg, &trace);
+        let (s2, f2) = build_schedule(&cfg, &trace);
+        assert_eq!(f1, f2, "schedule fingerprint must be deterministic");
+        assert_eq!(s1.len(), cfg.requests);
+        assert_eq!(
+            s1.iter().map(|r| (r.at, r.entry)).collect::<Vec<_>>(),
+            s2.iter().map(|r| (r.at, r.entry)).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            s1.iter().filter(|r| r.inject.is_some()).count(),
+            cfg.requests / cfg.fault_every,
+            "fault cadence must hit exactly every fault_every-th request"
+        );
+        let mut other = cfg.clone();
+        other.seed = 22;
+        let (_, f3) = build_schedule(&other, &build_mixed_trace(&other));
+        assert_ne!(f1, f3, "different seeds must not collide");
+        // The fault plan is part of the fingerprint.
+        let mut clean = cfg.clone();
+        clean.fault_every = 0;
+        let (_, f4) = build_schedule(&clean, &trace);
+        assert_ne!(f1, f4);
+    }
+
+    #[test]
+    fn open_loop_smoke_is_clean_and_accounts_every_request() {
+        let mut cfg = OpenLoopConfig::smoke(33);
+        cfg.families = vec!["gpt2".to_string()];
+        cfg.requests = 24;
+        let r = run_open_loop(
+            &cfg,
+            CoordinatorConfig {
+                workers: 2,
+                // Deeper than the offered count: zero shed by construction.
+                queue_depth: cfg.requests,
+                ..Default::default()
+            },
+        );
+        assert_eq!(r.offered, 24);
+        assert_eq!(r.replay.shed, 0, "queue_depth ≥ offered must never shed");
+        assert_eq!(r.replay.requests, 24);
+        assert_eq!(r.replay.clean, 24);
+        assert_eq!(r.replay.faulty, 0);
+        assert_eq!(r.faults_detected, 0);
+        assert_eq!(r.replay.shed_rate(), 0.0);
+        assert!(r.replay.p50 <= r.replay.p99 && r.replay.p99 <= r.replay.p999);
+        assert!(r.slo_attainment() >= 0.0 && r.slo_attainment() <= 1.0);
+        // Same seed reruns agree on both fingerprints even at different
+        // worker counts (scheduling is pure).
+        let r2 = run_open_loop(
+            &cfg,
+            CoordinatorConfig { workers: 1, queue_depth: cfg.requests, ..Default::default() },
+        );
+        assert_eq!(r.trace_fingerprint, r2.trace_fingerprint);
+        assert_eq!(r.replay.fingerprint, r2.replay.fingerprint);
+        assert_eq!(r.output_fingerprint, r2.output_fingerprint);
+    }
+
+    #[test]
+    fn severity_policy_waives_but_never_downgrades_detection() {
+        // The serving-level severity gate: identical faulted schedule
+        // under always-recompute vs severity-aware recovery. Detection
+        // counts and output bits must match exactly; the severity run
+        // converts (some) recomputes into waivers, never into misses.
+        let mut cfg = OpenLoopConfig::smoke(55);
+        cfg.families = vec!["gpt2".to_string()];
+        cfg.requests = 30;
+        cfg.fault_every = 3;
+        let run = |severity: bool| {
+            let policy = if severity {
+                crate::abft::VerifyPolicy::default().with_severity()
+            } else {
+                crate::abft::VerifyPolicy::default()
+            };
+            run_open_loop(
+                &cfg,
+                CoordinatorConfig {
+                    workers: 2,
+                    queue_depth: cfg.requests,
+                    policy,
+                    ..Default::default()
+                },
+            )
+        };
+        let strict = run(false);
+        let lenient = run(true);
+        assert_eq!(strict.replay.shed, 0);
+        assert_eq!(lenient.replay.shed, 0);
+        assert!(strict.faults_detected > 0, "faulted schedule produced no detections");
+        assert_eq!(
+            lenient.faults_detected, strict.faults_detected,
+            "severity policy must not downgrade detection"
+        );
+        assert_eq!(lenient.faults_corrected, strict.faults_corrected);
+        assert_eq!(strict.faults_waived, 0);
+        assert_eq!(
+            lenient.faults_waived + lenient.rows_recomputed,
+            strict.rows_recomputed,
+            "every strict recompute must become a waiver or stay a recompute"
+        );
+        assert_eq!(
+            lenient.output_fingerprint, strict.output_fingerprint,
+            "severity classification must never alter any computed output's bits"
+        );
+        assert_eq!(lenient.trace_fingerprint, strict.trace_fingerprint);
+    }
+
+    #[test]
+    fn shallow_queues_shed_instead_of_blocking() {
+        let mut cfg = OpenLoopConfig::smoke(77);
+        cfg.families = vec!["gpt2".to_string()];
+        cfg.requests = 40;
+        cfg.rate = 50_000.0; // far beyond service capacity
+        let r = run_open_loop(
+            &cfg,
+            CoordinatorConfig { workers: 1, queue_depth: 1, ..Default::default() },
+        );
+        assert!(r.replay.shed > 0, "overload against depth-1 queues must shed");
+        assert_eq!(r.replay.requests as u64 + r.replay.shed, r.offered as u64);
+        assert!(r.replay.shed_rate() > 0.0 && r.replay.shed_rate() <= 1.0);
+        // Admitted work still verifies clean — shedding never corrupts.
+        assert_eq!(r.replay.faulty, 0);
+        assert_eq!(r.replay.clean, r.replay.requests);
+    }
+}

@@ -10,9 +10,19 @@
 //! ([`replay`]) so the sharded serving tier can be load-tested and
 //! differential-tested against a workload with production structure,
 //! while staying fully seeded and machine-independent.
+//!
+//! Two load regimes share the trace machinery: the closed-loop replay
+//! ([`run_replay`]; fixed in-flight window, measures capacity) and the
+//! open-loop traffic engine ([`arrivals`]; seeded arrival processes,
+//! bounded-queue admission control, tail-latency SLOs).
 
+pub mod arrivals;
 pub mod replay;
 
+pub use arrivals::{
+    arrival_times, build_mixed_trace, build_schedule, run_open_loop, ArrivalModel,
+    OpenLoopConfig, OpenLoopReport, ScheduledRequest,
+};
 pub use replay::{
     build_trace, replay_doc, run_replay, LayerTrace, ReplayConfig, ReplayReport, ReplayRow,
     TraceEntry,

@@ -176,6 +176,20 @@ pub struct ReplayReport {
     pub shards: usize,
     /// Jobs executed by a non-home shard (work stealing).
     pub stolen: u64,
+    /// Arrival process label: `"closed-loop"` for [`run_replay`], the
+    /// [`crate::workload::ArrivalModel`] name for open-loop runs.
+    pub arrival: String,
+    /// Requests refused by admission control (always 0 for the
+    /// closed-loop replay, whose bounded queues block instead of
+    /// shedding).
+    pub shed: u64,
+    /// Median end-to-end request latency (submit → response), from the
+    /// coordinator's [`crate::metrics::TailHistogram`].
+    pub p50: Duration,
+    /// 99th-percentile end-to-end request latency.
+    pub p99: Duration,
+    /// 99.9th-percentile end-to-end request latency.
+    pub p999: Duration,
 }
 
 impl ReplayReport {
@@ -188,11 +202,24 @@ impl ReplayReport {
     pub fn gflops(&self) -> f64 {
         self.flops / 1e9 / self.elapsed.as_secs_f64().max(1e-9)
     }
+
+    /// Fraction of offered requests refused by admission control
+    /// (`shed / (completed + shed)`; 0.0 when nothing was offered).
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.requests as u64 + self.shed;
+        if offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / offered as f64
+        }
+    }
 }
 
 /// Fold one response into the fingerprint state (little-endian byte
-/// order; the shared [`crate::rng::fnv1a`] hash).
-fn fold_response(h: u64, resp: &GemmResponse) -> u64 {
+/// order; the shared [`crate::rng::fnv1a`] hash). Shared with the
+/// open-loop engine so closed- and open-loop fingerprints follow one
+/// rule.
+pub(crate) fn fold_response(h: u64, resp: &GemmResponse) -> u64 {
     let mut h = fnv1a(h, resp.id.to_le_bytes());
     match &resp.result {
         Err(_) => h = fnv1a(h, u64::MAX.to_le_bytes()),
@@ -202,6 +229,7 @@ fn fold_response(h: u64, resp: &GemmResponse) -> u64 {
                 Verdict::Corrected => 1,
                 Verdict::Recomputed => 2,
                 Verdict::Flagged => 3,
+                Verdict::Waived => 4,
             };
             h = fnv1a(h, tag.to_le_bytes());
             for &v in out.c.data() {
@@ -303,6 +331,8 @@ pub fn run_replay(cfg: &ReplayConfig, ccfg: CoordinatorConfig) -> ReplayReport {
 
     let shards = coord.shards();
     let stolen = coord.metrics().jobs_stolen.get();
+    let shed = coord.metrics().jobs_shed.get();
+    let tail = coord.metrics().tail.snapshot();
     coord.shutdown();
     ReplayReport {
         family: trace.family,
@@ -315,6 +345,11 @@ pub fn run_replay(cfg: &ReplayConfig, ccfg: CoordinatorConfig) -> ReplayReport {
         fingerprint,
         shards,
         stolen,
+        arrival: "closed-loop".to_string(),
+        shed,
+        p50: tail.p50(),
+        p99: tail.p99(),
+        p999: tail.p999(),
     }
 }
 
@@ -373,19 +408,26 @@ impl ReplayRow {
     }
 }
 
-/// Assemble the schema-versioned `vabft-serving/v1` document from replay
+/// Assemble the schema-versioned `vabft-serving/v2` document from replay
 /// rows (shared by `benches/serving_replay.rs` and `vabft serve-replay
 /// --json`). `mode` labels how the rows were produced (`"quick"` /
 /// `"full"` for the bench per [`crate::bench_harness::BenchMode`],
 /// `"smoke"` / `"custom"` for CLI runs) — the caller knows; this
 /// function does not guess from the environment.
+///
+/// v2 adds the open-loop columns over v1: `arrival` (arrival-process
+/// label), tail latencies `p50_ms` / `p99_ms` / `p999_ms`, and
+/// `shed_rate` (admission-control refusals / offered). Closed-loop rows
+/// carry `arrival = "closed-loop"` and `shed_rate = 0`.
 pub fn replay_doc(rows: &[ReplayRow], mode: &str) -> JsonDoc {
+    let ms = |d: Duration| d.as_secs_f64() * 1e3;
     let mut doc = JsonDoc::new(SERVING_SCHEMA);
     doc.meta("bench", JsonValue::Str("serving_replay".to_string()));
     doc.meta("mode", JsonValue::Str(mode.to_string()));
     for r in rows {
         doc.entry(vec![
             ("family".to_string(), JsonValue::Str(r.report.family.clone())),
+            ("arrival".to_string(), JsonValue::Str(r.report.arrival.clone())),
             ("shards".to_string(), JsonValue::Int(r.report.shards as i64)),
             ("partition".to_string(), JsonValue::Str(r.partition.clone())),
             ("steal".to_string(), JsonValue::Bool(r.steal)),
@@ -394,6 +436,10 @@ pub fn replay_doc(rows: &[ReplayRow], mode: &str) -> JsonDoc {
             ("requests".to_string(), JsonValue::Int(r.report.requests as i64)),
             ("rps".to_string(), JsonValue::Num(r.report.rps())),
             ("gflops".to_string(), JsonValue::Num(r.report.gflops())),
+            ("p50_ms".to_string(), JsonValue::Num(ms(r.report.p50))),
+            ("p99_ms".to_string(), JsonValue::Num(ms(r.report.p99))),
+            ("p999_ms".to_string(), JsonValue::Num(ms(r.report.p999))),
+            ("shed_rate".to_string(), JsonValue::Num(r.report.shed_rate())),
             ("speedup_vs_baseline".to_string(), JsonValue::Num(r.speedup_vs_baseline)),
             ("fingerprint_equal".to_string(), JsonValue::Bool(r.fingerprint_equal)),
         ]);
@@ -435,6 +481,8 @@ mod tests {
         let a = run(1);
         assert_eq!(a.faulty, 0, "clean replay must verify clean everywhere");
         assert_eq!(a.requests, a.clean);
+        assert_eq!(a.shed, 0, "closed-loop replay blocks; it never sheds");
+        assert!(a.p50 <= a.p99 && a.p99 <= a.p999, "tail quantiles must be ordered");
         assert_eq!(a.weights, build_trace(&cfg).weights.len());
         let b = run(3);
         assert_eq!(a.fingerprint, b.fingerprint, "fingerprint depends on worker count");
@@ -455,5 +503,9 @@ mod tests {
         assert!(json.contains("\"family\": \"vit-b32\""));
         assert!(json.contains("\"mode\": \"quick\""));
         assert!(json.contains("\"fingerprint_equal\": true"));
+        // v2 open-loop columns are present on closed-loop rows too.
+        assert!(json.contains("\"arrival\": \"closed-loop\""));
+        assert!(json.contains("\"p99_ms\""));
+        assert!(json.contains("\"shed_rate\": 0"));
     }
 }

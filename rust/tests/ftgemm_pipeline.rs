@@ -302,6 +302,7 @@ fn recompute_round_trip_is_bitwise_for_full_precision_models() {
         recompute: true,
         reverify: false,
         localize_tol: 0.45,
+        severity: false,
     };
     let mut seed = 800;
     // Exponent bit 1 of each model's verify grid: bit 24 on FP32,
@@ -327,6 +328,153 @@ fn recompute_round_trip_is_bitwise_for_full_precision_models() {
             assert_eq!(m.rows_recomputed, 1, "{model:?}");
         }
     }
+}
+
+#[test]
+fn fused_correction_round_trip_is_bitwise_for_wide_models() {
+    // The fused-epilogue counterpart of the staged matrix above: the
+    // PR that moved verification into the packed GEMM epilogue pinned
+    // decision equality, but not the correction round-trip itself.
+    // Same contract, per precision × strategy, under
+    // `VerifyPolicy::fused()`.
+    let mut seed = 900;
+    for base in [
+        AccumModel::wide(Precision::Bf16),
+        AccumModel::wide(Precision::F16),
+        AccumModel::fp8(Precision::F8E4M3),
+    ] {
+        for model in with_strategies(base) {
+            seed += 1;
+            let (clean, repaired, verdict, detections, recomputed, m) =
+                round_trip(model, VerifyPolicy::fused(), 24, seed);
+            assert_eq!(verdict, Verdict::Corrected, "{model:?} (fused)");
+            assert_eq!(detections, 1, "{model:?} (fused): one upset, one detection");
+            assert_eq!(recomputed, 0, "{model:?} (fused)");
+            assert_eq!(
+                repaired.data(),
+                clean.data(),
+                "{model:?}: fused-path correction must be bitwise-equal to the fault-free run"
+            );
+            assert_eq!(m.faults_detected, 1, "{model:?} (fused)");
+            assert_eq!(m.faults_corrected, 1, "{model:?} (fused)");
+            assert_eq!(m.rows_recomputed, 0, "{model:?} (fused)");
+            assert_eq!(m.jobs_completed, 2, "{model:?} (fused)");
+        }
+    }
+}
+
+#[test]
+fn fused_recompute_round_trip_is_bitwise_for_full_precision_models() {
+    // Recompute-only under the fused epilogue: schedule preservation
+    // must make the recomputed row bitwise-identical whether detection
+    // ran staged or in-epilogue.
+    let policy = VerifyPolicy {
+        online: true,
+        fused: true,
+        correct: false,
+        recompute: true,
+        reverify: false,
+        localize_tol: 0.45,
+        severity: false,
+    };
+    let mut seed = 950;
+    for (base, bit) in [
+        (AccumModel::gpu_highprec(Precision::F32), 24u32),
+        (AccumModel::cpu(Precision::F64), 53),
+    ] {
+        for model in with_strategies(base) {
+            seed += 1;
+            let (clean, repaired, verdict, detections, recomputed, m) =
+                round_trip(model, policy, bit, seed);
+            assert_eq!(verdict, Verdict::Recomputed, "{model:?} (fused)");
+            assert_eq!(detections, 1, "{model:?} (fused)");
+            assert_eq!(recomputed, 1, "{model:?} (fused)");
+            assert_eq!(
+                repaired.data(),
+                clean.data(),
+                "{model:?}: fused-path recompute must be bitwise-equal to the fault-free run"
+            );
+            assert_eq!(m.faults_detected, 1, "{model:?} (fused)");
+            assert_eq!(m.faults_corrected, 0, "{model:?} (fused)");
+            assert_eq!(m.rows_recomputed, 1, "{model:?} (fused)");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Severity-aware recovery: a detection whose residual is provably below
+// output-quantization noise (|D1| ≤ u_out · Σ|row|) skips the recompute
+// escalation; everything above that bound still recomputes. Detection
+// itself is untouched by the policy — severity only decides the repair.
+// ---------------------------------------------------------------------
+
+/// Two equal perturbations in one row at columns whose syndrome midpoint
+/// falls between localization weights: detected (|D1| = 2δ above the
+/// online threshold), never localizable (D2/D1 lands ~0.5 from every
+/// integer weight), so the pipeline reaches the recompute/waive branch
+/// with residual exactly 2δ.
+fn two_site_injection(
+    model: AccumModel,
+    policy: VerifyPolicy,
+    delta: f64,
+) -> (Matrix, vabft::abft::FtGemmOutput) {
+    let ft = FtGemm::new(GemmEngine::new(model), Box::new(VabftThreshold::default()), policy);
+    let d = Distribution::uniform_01();
+    let (a, b) = operands(21, 8, 128, 64, &d);
+    let clean = ft.multiply(&a, &b).unwrap();
+    assert_eq!(clean.report.verdict, Verdict::Clean);
+    let out = ft
+        .multiply_with_injection(&a, &b, |o| {
+            for col in [3usize, 6] {
+                let v = o.acc.get(2, col);
+                o.acc.set(2, col, v + delta);
+                o.c.set(2, col, model.out.quantize(v + delta));
+            }
+        })
+        .unwrap();
+    (clean.c, out)
+}
+
+#[test]
+fn severity_waives_sub_quantization_residuals_instead_of_recomputing() {
+    // uniform-01 operands, K=128: row elements ≈ 32, Σ|row| ≈ 2048, so
+    // the waiver bound u_bf16 · Σ|row| ≈ 4 — while the online threshold
+    // sits near 1e-3. δ = 0.01 per site puts |D1| ≈ 0.02 well above
+    // detection and well below the bound.
+    let model = AccumModel::wide(Precision::Bf16);
+    let (clean, out) = two_site_injection(model, VerifyPolicy::default().with_severity(), 0.01);
+    assert_eq!(out.report.verdict, Verdict::Waived);
+    assert_eq!(out.report.rows_recomputed, 0, "waived row must not be recomputed");
+    assert_eq!(out.report.rows_waived, 1);
+    let det = &out.report.detections[0];
+    assert!(det.waived && !det.corrected);
+    assert!(det.severity >= 1.0, "a detection is at least at the threshold floor");
+    // The retained error is bounded by one output-grid ulp per element
+    // (that is the whole point of waiving).
+    assert!(
+        out.c.max_abs_diff(&clean) < 0.5,
+        "waived residual exceeded output quantization noise: {}",
+        out.c.max_abs_diff(&clean)
+    );
+
+    // The identical fault without the severity policy escalates.
+    let (clean2, strict) = two_site_injection(model, VerifyPolicy::default(), 0.01);
+    assert_eq!(strict.report.verdict, Verdict::Recomputed);
+    assert_eq!(strict.report.rows_waived, 0);
+    assert_eq!(strict.c.data(), clean2.data(), "recompute restores the clean bits");
+}
+
+#[test]
+fn severity_never_waives_above_noise_faults() {
+    // δ = 50 per site: |D1| ≈ 100 ≫ u_bf16 · Σ|row| ≈ 4. The severity
+    // policy must take the same recompute path as the strict one and
+    // restore the clean bits exactly.
+    let model = AccumModel::wide(Precision::Bf16);
+    let (clean, out) = two_site_injection(model, VerifyPolicy::default().with_severity(), 50.0);
+    assert_eq!(out.report.verdict, Verdict::Recomputed);
+    assert_eq!(out.report.rows_waived, 0, "above-noise fault must never be waived");
+    assert_eq!(out.report.rows_recomputed, 1);
+    assert_eq!(out.c.data(), clean.data(), "recomputed output must be bitwise clean");
 }
 
 #[test]

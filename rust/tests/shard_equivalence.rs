@@ -23,7 +23,9 @@ use vabft::coordinator::{
     PreparedGemmRequest, TopologyConfig,
 };
 use vabft::prelude::*;
-use vabft::workload::{run_replay, ReplayConfig};
+use vabft::workload::{
+    arrival_times, run_open_loop, run_replay, ArrivalModel, OpenLoopConfig, ReplayConfig,
+};
 
 const K: usize = 64;
 const N: usize = 48;
@@ -39,8 +41,8 @@ struct Obs {
     err: Option<String>,
     verdict: Option<u8>,
     /// Per-detection (row, localized col, D1 bits, D2 bits, threshold
-    /// bits, corrected).
-    detections: Vec<(usize, Option<usize>, u64, u64, u64, bool)>,
+    /// bits, severity bits, corrected, waived).
+    detections: Vec<(usize, Option<usize>, u64, u64, u64, u64, bool, bool)>,
     rows_checked: usize,
     rows_recomputed: usize,
     /// Report-level threshold telemetry, as bits.
@@ -56,6 +58,7 @@ fn verdict_tag(v: Verdict) -> u8 {
         Verdict::Corrected => 1,
         Verdict::Recomputed => 2,
         Verdict::Flagged => 3,
+        Verdict::Waived => 4,
     }
 }
 
@@ -84,7 +87,7 @@ fn observe(id: u64, result: &Result<FtGemmOutput, String>, delta: Option<f64>) -
                 .iter()
                 .map(|d| {
                     let (d1, d2, t) = (d.d1.to_bits(), d.d2.to_bits(), d.threshold.to_bits());
-                    (d.row, d.col, d1, d2, t, d.corrected)
+                    (d.row, d.col, d1, d2, t, d.severity.to_bits(), d.corrected, d.waived)
                 })
                 .collect(),
             rows_checked: out.report.rows_checked,
@@ -285,5 +288,86 @@ fn replay_fingerprint_is_shard_invariant() {
         );
         assert_eq!(r.requests, base.requests);
         assert_eq!(r.faulty, 0);
+    }
+}
+
+#[test]
+fn arrival_generator_is_a_pure_function_of_seed() {
+    // The pre-execution half of the open-loop contract, restated at the
+    // integration level: the request clock depends on nothing but
+    // `(model, rate, n, seed)` — no global state, no wall time.
+    for model in ArrivalModel::all() {
+        let a = arrival_times(model, 800.0, 256, 0xA1);
+        assert_eq!(a, arrival_times(model, 800.0, 256, 0xA1), "{} drifted", model.name());
+        assert_ne!(
+            a,
+            arrival_times(model, 800.0, 256, 0xA2),
+            "{} ignored its seed",
+            model.name()
+        );
+        assert_eq!(a.len(), 256);
+    }
+}
+
+#[test]
+fn open_loop_schedule_and_outputs_are_shard_invariant() {
+    // The open-loop restatement of the sharding contract, across the
+    // full grid shards × partition × steal × verify point, on a
+    // mixed-family trace that includes the faulted recovery path. Queues
+    // run deeper than the offered count so shedding — the one
+    // timing-dependent outcome in the open loop — is impossible, making
+    // every fingerprint exact. The fused epilogue rides the same grid:
+    // moving verification into the kernel must not move a single bit.
+    let mut cfg = OpenLoopConfig::smoke(0xBEA7);
+    cfg.requests = 30;
+    cfg.fault_every = 6;
+    let run = |shards: usize, partition: PartitionPolicy, steal: bool, fused: bool| {
+        run_open_loop(
+            &cfg,
+            CoordinatorConfig {
+                workers: 2,
+                queue_depth: cfg.requests,
+                shards,
+                partition,
+                steal,
+                policy: if fused { VerifyPolicy::fused() } else { VerifyPolicy::default() },
+                topology: Some(TopologyConfig::uniform(2, 2)),
+                ..Default::default()
+            },
+        )
+    };
+    let base = run(1, PartitionPolicy::Contiguous, false, false);
+    assert_eq!(base.replay.shed, 0);
+    assert!(base.faults_detected > 0, "fault cadence produced no detections");
+    for shards in [1usize, 2, 4] {
+        for partition in [PartitionPolicy::Contiguous, PartitionPolicy::Interleaved] {
+            for steal in [false, true] {
+                for fused in [false, true] {
+                    let r = run(shards, partition, steal, fused);
+                    let tag = format!(
+                        "shards={shards} partition={} steal={steal} fused={fused}",
+                        partition.name()
+                    );
+                    assert_eq!(r.replay.shed, 0, "deep queues shed at {tag}");
+                    assert_eq!(r.offered, cfg.requests, "offered count wrong at {tag}");
+                    assert_eq!(
+                        r.trace_fingerprint, base.trace_fingerprint,
+                        "schedule diverged at {tag}"
+                    );
+                    assert_eq!(
+                        r.replay.fingerprint, base.replay.fingerprint,
+                        "response fingerprint diverged at {tag}"
+                    );
+                    assert_eq!(
+                        r.output_fingerprint, base.output_fingerprint,
+                        "output bits diverged at {tag}"
+                    );
+                    assert_eq!(
+                        r.faults_detected, base.faults_detected,
+                        "detection count diverged at {tag}"
+                    );
+                }
+            }
+        }
     }
 }
