@@ -6,13 +6,79 @@
 //! carries `C^{r1} = A·B·r1` and `C^{r2} = A·B·r2` in its last two columns
 //! — computed by the same GEMM hardware/schedule as C itself.
 //!
-//! Column encoding (`A^c` with c1/c2 rows prepended) is also provided; the
-//! paper's evaluation uses row checksums (single-event-upset model), and
-//! that is what [`crate::abft::FtGemm`] verifies by default.
+//! Column encoding appends two *rows* to A instead:
+//! `A^c = [A; c1·A; c2·A]` with `c1 = 1` and `c2 = [1, 2, …, M]` — the
+//! gigacheck augmented-operand algebra. The product `C^f = A^c·B` then
+//! carries column checksums of C in its last two rows, giving an
+//! orthogonal syndrome direction that localizes the faulty *row* of a
+//! column. [`EncodingMode`] selects row-only (the paper's evaluation,
+//! single-event-upset model — the default), row+column (one-shot 2D
+//! intersection) or the grid decode (iterative row/column peeling,
+//! multi-fault bursts). All modes are orthogonal to
+//! [`crate::gemm::ReduceStrategy`], and all ride the packed operands
+//! without changing any data element's rounding schedule.
 
 use crate::fp::Precision;
 use crate::gemm::GemmEngine;
 use crate::matrix::Matrix;
+
+/// Which checksum directions ride the packed operands — orthogonal to
+/// [`crate::gemm::ReduceStrategy`] (the schedule *within* a reduction)
+/// and to the verify point (where the syndromes are read).
+///
+/// The 2D modes share the same encodings (B-side checksum columns +
+/// A-side checksum rows); they differ only in the *decode*: `RowCol`
+/// intersects row and column syndromes once, `Grid` peels iteratively
+/// (correct what is localizable, update the remaining syndromes
+/// incrementally, repeat), which recovers burst patterns one-shot 2D
+/// decoding cannot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EncodingMode {
+    /// B-side row checksums only (Eq. 1–3) — the paper's configuration
+    /// and the default. One fault per K-block localizes; multi-fault
+    /// rows fall back to recompute.
+    RowOnly,
+    /// Row + column checksums, one-shot syndrome intersection: a
+    /// row-inconsistent multi-fault pattern is repaired via the column
+    /// direction when every struck column localizes its faulty row.
+    RowCol,
+    /// Grid-like decode over the same 2D encodings: iterative row/column
+    /// peeling with incremental syndrome updates (PAPERS.md "grid-like
+    /// error-correcting codes"), correcting multi-fault bursts that
+    /// defeat one-shot 2D intersection.
+    Grid,
+}
+
+impl EncodingMode {
+    /// Every mode, in report order.
+    pub const ALL: [EncodingMode; 3] =
+        [EncodingMode::RowOnly, EncodingMode::RowCol, EncodingMode::Grid];
+
+    /// Short lowercase name used in CLIs and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            EncodingMode::RowOnly => "row",
+            EncodingMode::RowCol => "rowcol",
+            EncodingMode::Grid => "grid",
+        }
+    }
+
+    /// Parse a CLI name (`row | rowcol | grid`).
+    pub fn parse(s: &str) -> Option<EncodingMode> {
+        match s {
+            "row" | "rowonly" | "row-only" => Some(EncodingMode::RowOnly),
+            "rowcol" | "row-col" | "2d" => Some(EncodingMode::RowCol),
+            "grid" => Some(EncodingMode::Grid),
+            _ => None,
+        }
+    }
+
+    /// Whether the mode carries A-side column checksums (and hence the
+    /// column-direction thresholds and the 2D repair stages).
+    pub fn two_dimensional(self) -> bool {
+        !matches!(self, EncodingMode::RowOnly)
+    }
+}
 
 /// The linear position weight w(j) = j + 1 used by r2 (Eq. 9's
 /// `j = D2/D1 − 1` inversion assumes exactly this).
@@ -215,28 +281,123 @@ impl ChecksumEncoding {
     }
 }
 
-/// Column-checksum encoding of A: `A^c = [A; c1·A; c2·A]`, shape (M+2) × K.
-/// Provided for full Huang–Abraham coverage (2D localization, multi-error
-/// settings); engine-scheduled like the row encoding.
-pub fn encode_a_columns(a: &Matrix, engine: &GemmEngine) -> Matrix {
-    let (m, k) = (a.rows(), a.cols());
-    let input = engine.model().input;
-    let mut ae = Matrix::zeros(m + 2, k);
-    for i in 0..m {
-        ae.row_mut(i).copy_from_slice(a.row(i));
-    }
-    // c1·A and c2·A are column-wise reductions of A.
-    let mut col = vec![0.0; m];
-    let mut colw = vec![0.0; m];
-    for j in 0..k {
+/// Both column-checksum reductions of every column of (input-quantized)
+/// `aq` (M×K, row-major) in one shot: returns (c1·A, c2·A), each length
+/// K, *unquantized*.
+///
+/// The reductions ride the packed engine as one 2×M · M×K GEMM with the
+/// weight rows `[1 … 1; w(0) … w(M−1)]` on the left — the transpose of
+/// [`checksum_products`]'s routing, with the identical bitwise argument:
+/// multiplying by the exact 1.0 (or the exactly-representable small
+/// integer weight) and reducing with the engine schedule matches the
+/// per-column [`GemmEngine::reduce`]/[`GemmEngine::dot`] loop
+/// element for element (`routed_column_checksums_match_reference`
+/// pins this). The per-column fallback covers the exotic models
+/// [`gemm_routable`] excludes.
+fn column_checksum_products(
+    aq: &[f64],
+    m: usize,
+    k: usize,
+    engine: &GemmEngine,
+) -> (Vec<f64>, Vec<f64>) {
+    if gemm_routable(engine) {
+        let mut lhs = vec![0.0f64; 2 * m];
         for i in 0..m {
-            col[i] = a.get(i, j);
-            colw[i] = position_weight(i) * a.get(i, j);
+            lhs[i] = 1.0;
+            lhs[m + i] = position_weight(i);
         }
-        ae.set(m, j, input.quantize(engine.reduce(&col)));
-        ae.set(m + 1, j, input.quantize(engine.reduce(&colw)));
+        let cs = engine.matmul_work(&lhs, aq, 2, m, k);
+        (cs[..k].to_vec(), cs[k..].to_vec())
+    } else {
+        let mut col = vec![0.0; m];
+        let weights: Vec<f64> = (0..m).map(position_weight).collect();
+        let mut c1 = Vec::with_capacity(k);
+        let mut c2 = Vec::with_capacity(k);
+        for j in 0..k {
+            for i in 0..m {
+                col[i] = aq[i * k + j];
+            }
+            c1.push(engine.reduce(&col));
+            c2.push(engine.dot(&col, &weights));
+        }
+        (c1, c2)
     }
-    ae
+}
+
+/// A-side column-checksum encoding: `A^c = [A; c1·A; c2·A]`, shape
+/// (M+2) × K — the gigacheck augmented-operand form. The product
+/// `C^f = A^c·B` carries column checksums of C in its last two rows,
+/// computed by the same GEMM hardware/schedule as C itself; with a
+/// row-encoded B the corner 2×2 block is the (unused) checksum-of-
+/// checksums. The data rows of `a_encoded` are the original A bits —
+/// the checksum rows ride along without perturbing any data row's
+/// quantization or reduction schedule (pair with
+/// [`crate::gemm::GemmEngine::matmul_mixed_2d`]).
+#[derive(Debug, Clone)]
+pub struct ColumnEncoding {
+    /// `A^c = [A; c1·A; c2·A]`, shape (M+2) × K.
+    pub a_encoded: Matrix,
+    /// Original M (number of data rows in `a_encoded`).
+    pub m: usize,
+    /// Checksum rows stored in the *work* precision (online/fused
+    /// configuration) instead of the input precision — the same rule as
+    /// [`ChecksumEncoding::wide`].
+    pub wide: bool,
+}
+
+impl ColumnEncoding {
+    /// Encode A with column checksums on the offline storage grid (the
+    /// finer of input/output — the encoded rows are ordinary operands).
+    pub fn encode_a(a: &Matrix, engine: &GemmEngine) -> ColumnEncoding {
+        Self::encode_a_impl(a, engine, false)
+    }
+
+    /// Encode A with checksum rows kept in the work precision — the
+    /// online configuration, mirroring [`ChecksumEncoding::encode_b_wide`].
+    pub fn encode_a_wide(a: &Matrix, engine: &GemmEngine) -> ColumnEncoding {
+        Self::encode_a_impl(a, engine, true)
+    }
+
+    fn encode_a_impl(a: &Matrix, engine: &GemmEngine, wide: bool) -> ColumnEncoding {
+        let (m, k) = (a.rows(), a.cols());
+        let grid = if wide { engine.model().work } else { offline_checksum_grid(engine) };
+        // Checksums cover the values the GEMM actually consumes: the
+        // input-quantized A (mirrors encode_b_impl).
+        let mut aq = a.data().to_vec();
+        engine.model().input.quantize_slice(&mut aq);
+        let (c1, c2) = column_checksum_products(&aq, m, k, engine);
+        let mut ae = Matrix::zeros(m + 2, k);
+        for i in 0..m {
+            ae.row_mut(i).copy_from_slice(a.row(i));
+        }
+        for j in 0..k {
+            ae.set(m, j, grid.quantize(c1[j]));
+            ae.set(m + 1, j, grid.quantize(c2[j]));
+        }
+        ColumnEncoding { a_encoded: ae, m, wide }
+    }
+
+    /// Number of trailing rows the engine must not requantize to the
+    /// input grid (always the two checksum rows — same storage-grid
+    /// argument as [`ChecksumEncoding::wide_cols`]).
+    pub fn wide_rows(&self) -> usize {
+        2
+    }
+
+    /// Split an encoded product `C^f = A^c·B` into (C, C^{c1}, C^{c2}):
+    /// the data rows and the two column-checksum rows. `cf` may carry
+    /// row-checksum columns too (the grid product is (M+2) × (N+2)) —
+    /// the full rows are returned and the caller splits columns via
+    /// [`ChecksumEncoding::split_product`].
+    pub fn split_product(&self, cf: &Matrix) -> (Matrix, Vec<f64>, Vec<f64>) {
+        assert_eq!(cf.rows(), self.m + 2);
+        let n = cf.cols();
+        let mut c = Matrix::zeros(self.m, n);
+        for i in 0..self.m {
+            c.row_mut(i).copy_from_slice(cf.row(i));
+        }
+        (c, cf.row(self.m).to_vec(), cf.row(self.m + 1).to_vec())
+    }
 }
 
 #[cfg(test)]
@@ -369,9 +530,96 @@ mod tests {
     #[test]
     fn column_encoding_shape_and_values() {
         let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
-        let ae = encode_a_columns(&a, &engine_f64());
+        let enc = ColumnEncoding::encode_a(&a, &engine_f64());
+        let ae = &enc.a_encoded;
         assert_eq!((ae.rows(), ae.cols()), (4, 2));
+        assert_eq!(enc.m, 2);
+        assert_eq!(enc.wide_rows(), 2);
+        assert_eq!(ae.row(0), &[1.0, 2.0]);
+        assert_eq!(ae.row(1), &[3.0, 4.0]);
         assert_eq!(ae.row(2), &[4.0, 6.0]); // column sums
         assert_eq!(ae.row(3), &[1.0 + 2.0 * 3.0, 2.0 + 2.0 * 4.0]); // weighted
+    }
+
+    #[test]
+    fn routed_column_checksums_match_reference() {
+        // The 2×M·M×K routing must be bitwise-identical to the
+        // per-column engine.reduce / engine.dot loop on the
+        // input-quantized columns — same contract as
+        // routed_checksums_match_per_row_reference, transposed.
+        let mut rng = Xoshiro256pp::seed_from_u64(19);
+        let d = Distribution::normal_1_1();
+        let a = Matrix::sample(21, 17, &d, &mut rng);
+        let models = [
+            AccumModel::cpu(Precision::F64),
+            AccumModel::gpu_highprec(Precision::F64),
+            AccumModel::cpu(Precision::F32),
+            AccumModel::gpu_highprec(Precision::F32),
+            AccumModel::wide(Precision::Bf16),
+            AccumModel::fp8(Precision::F8E4M3),
+            AccumModel::cpu(Precision::Bf16),
+            AccumModel {
+                input: Precision::F16,
+                work: Precision::F16,
+                strategy: ReduceStrategy::Fma,
+                out: Precision::F16,
+            },
+        ];
+        for model in models {
+            let engine = GemmEngine::new(model);
+            let grid = offline_checksum_grid(&engine);
+            let weights: Vec<f64> = (0..a.rows()).map(position_weight).collect();
+            let mut col_q = vec![0.0; a.rows()];
+            let enc = ColumnEncoding::encode_a(&a, &engine);
+            for j in 0..a.cols() {
+                for i in 0..a.rows() {
+                    col_q[i] = model.input.quantize(a.get(i, j));
+                }
+                let want_c1 = grid.quantize(engine.reduce(&col_q));
+                let want_c2 = grid.quantize(engine.dot(&col_q, &weights));
+                assert_eq!(
+                    enc.a_encoded.get(a.rows(), j).to_bits(),
+                    want_c1.to_bits(),
+                    "c1 col {j} diverged under {model:?}"
+                );
+                assert_eq!(
+                    enc.a_encoded.get(a.rows() + 1, j).to_bits(),
+                    want_c2.to_bits(),
+                    "c2 col {j} diverged under {model:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn column_split_roundtrip_on_grid_product() {
+        // Full grid product (row + column encodings together): the
+        // column-checksum rows of C^f must be consistent with column
+        // sums of the data rows, and split_product must hand back the
+        // original data region bitwise.
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let d = Distribution::uniform_pm1();
+        let a = Matrix::sample(4, 8, &d, &mut rng);
+        let b = Matrix::sample(8, 5, &d, &mut rng);
+        let engine = engine_f64();
+        let benc = ChecksumEncoding::encode_b(&b, &engine);
+        let aenc = ColumnEncoding::encode_a(&a, &engine);
+        let cf = engine
+            .matmul_mixed_2d(&aenc.a_encoded, &benc.b_encoded, benc.wide_cols(), aenc.wide_rows())
+            .c;
+        assert_eq!((cf.rows(), cf.cols()), (6, 7));
+        let (cr, cc1, cc2) = aenc.split_product(&cf);
+        assert_eq!((cr.rows(), cr.cols()), (4, 7));
+        let plain = engine.matmul_mixed(&a, &benc.b_encoded, benc.wide_cols()).c;
+        for i in 0..4 {
+            assert_eq!(cr.row(i), plain.row(i), "data row {i} perturbed by checksum rows");
+        }
+        // Column checksum ≈ column sums of C (exact up to fp error).
+        for j in 0..5 {
+            let cs: f64 = (0..4).map(|i| cr.get(i, j)).sum();
+            let wcs: f64 = (0..4).map(|i| (i + 1) as f64 * cr.get(i, j)).sum();
+            assert!((cc1[j] - cs).abs() < 1e-12);
+            assert!((cc2[j] - wcs).abs() < 1e-12);
+        }
     }
 }

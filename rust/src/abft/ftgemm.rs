@@ -15,6 +15,7 @@
 //! implemented exactly once, there. [`crate::abft::PreparedWeights`]
 //! caches the weight-side state for either parameterization.
 
+use crate::abft::encode::EncodingMode;
 use crate::abft::pipeline;
 use crate::abft::prepared::PreparedWeights;
 use crate::error::Result;
@@ -43,7 +44,34 @@ pub struct VerifyPolicy {
     /// Recompute rows whose syndrome cannot be corrected (inconsistent
     /// localization), using the engine.
     pub recompute: bool,
-    /// Localization tolerance: max distance of D2/D1 from an integer.
+    /// Checksum geometry: row-only (classic Huang–Abraham, the default),
+    /// row + A-side column checksums (`RowCol`), or the grid mode that
+    /// iteratively peels row/column syndromes (`Grid`). Two-dimensional
+    /// modes correct row-inconsistent multi-fault patterns (row bursts,
+    /// checksum-column upsets) via the column direction before falling
+    /// back to recompute; detection itself still runs on the row
+    /// direction only, so recall and false-positive behaviour are
+    /// unchanged. Orthogonal to [`crate::gemm::ReduceStrategy`].
+    pub encoding: EncodingMode,
+    /// Localization tolerance: the maximum accepted distance of the
+    /// syndrome ratio D2/D1 from the nearest integer weight, in weight
+    /// units.
+    ///
+    /// Derivation of the 0.45 default: a single upset of magnitude δ at
+    /// column j gives D2/D1 = ((j+1)·δ + ε₂)/(δ + ε₁) = (j+1) + O(ε/δ),
+    /// where ε are rounding-noise terms bounded (via the detection
+    /// threshold T) by ε/δ < T·n/|D1| ≪ ½ for any fault worth
+    /// correcting — so true single upsets land well inside any tolerance
+    /// below 0.5. Conversely, integer weights are spaced exactly 1 apart:
+    /// any `tol ≥ 0.5` makes *every* finite ratio round to some integer
+    /// and localization can no longer reject multi-fault syndromes (the
+    /// half-integer ratio of two equal-magnitude upsets at weights w₁,
+    /// w₂ with w₁+w₂ odd sits exactly 0.5 from both neighbours). The
+    /// default 0.45 is the accept-region maximum 0.5 with a 10% guard
+    /// band against weighted-sum rounding noise: wide enough to accept
+    /// every consistent single-upset ratio, tight enough that
+    /// half-integer multi-fault ratios are always rejected as
+    /// [`crate::abft::Localization::Inconsistent`].
     pub localize_tol: f64,
     /// Re-verify corrected rows and escalate to recompute if still flagged.
     pub reverify: bool,
@@ -67,6 +95,7 @@ impl Default for VerifyPolicy {
             fused: false,
             correct: true,
             recompute: true,
+            encoding: EncodingMode::RowOnly,
             localize_tol: 0.45,
             reverify: true,
             severity: false,
@@ -97,10 +126,27 @@ impl VerifyPolicy {
             fused: false,
             correct: false,
             recompute: false,
+            encoding: EncodingMode::RowOnly,
             reverify: false,
             localize_tol: 0.45,
             severity: false,
         }
+    }
+
+    /// Grid encoding with peeling multi-fault repair — the strongest
+    /// correction mode ([`EncodingMode::Grid`]) on the default online
+    /// policy.
+    pub fn grid() -> VerifyPolicy {
+        VerifyPolicy::default().with_encoding(EncodingMode::Grid)
+    }
+
+    /// The same policy with a different checksum geometry. Fused-epilogue
+    /// detection only covers the row direction, so two-dimensional modes
+    /// verify post-hoc (at the identical verification point — decisions
+    /// are unchanged).
+    pub fn with_encoding(mut self, encoding: EncodingMode) -> VerifyPolicy {
+        self.encoding = encoding;
+        self
     }
 
     /// The same policy with severity-aware recovery enabled: detections
@@ -119,6 +165,11 @@ pub enum Verdict {
     Clean,
     /// All flagged rows were corrected in place.
     Corrected,
+    /// All flagged rows were corrected in place, and at least one needed
+    /// the column/grid direction (a row-inconsistent multi-fault pattern
+    /// repaired without recomputation). Only produced by two-dimensional
+    /// [`EncodingMode`]s.
+    CorrectedGrid,
     /// Some rows required (or would require) recomputation.
     Recomputed,
     /// Faults detected but policy forbade repair.
@@ -149,6 +200,10 @@ pub struct Detection {
     /// True if the row was corrected in place; false means recomputed,
     /// waived or left flagged.
     pub corrected: bool,
+    /// True if the correction needed the column/grid direction (the row
+    /// syndrome alone was inconsistent with a single upset). Always false
+    /// under [`EncodingMode::RowOnly`].
+    pub via_grid: bool,
     /// True if the severity policy waived this detection's recompute
     /// escalation (residual provably below output-quantization noise).
     pub waived: bool,
@@ -168,6 +223,15 @@ pub struct VerifyReport {
     /// Detections whose recompute escalation the severity policy waived
     /// (always 0 unless [`VerifyPolicy::severity`] is set).
     pub rows_waived: usize,
+    /// Rows whose repair needed the column/grid direction — corrected
+    /// without recomputation where the row syndrome alone was
+    /// inconsistent. Always 0 under [`EncodingMode::RowOnly`].
+    pub rows_corrected_grid: usize,
+    /// Row localizations that returned
+    /// [`crate::abft::Localization::Inconsistent`] (multi-fault,
+    /// checksum-column upset, or sub-noise fault) — the patterns that,
+    /// without a two-dimensional encoding, fold straight into recompute.
+    pub inconsistent_localizations: usize,
     /// Largest |D1| seen across every checked row (∞ if any row's D1 was
     /// non-finite). On a clean run this is the realized rounding-noise
     /// floor — the "Actual Diff" of the paper's tightness tables.

@@ -18,7 +18,7 @@
 //! ([`crate::gemm::tiled`]), whose schedule-preservation invariant is what
 //! keeps every threshold valid here regardless of thread count.
 
-use crate::abft::encode::ChecksumEncoding;
+use crate::abft::encode::{ChecksumEncoding, ColumnEncoding, EncodingMode};
 use crate::abft::prepared::PreparedWeights;
 use crate::abft::verify::{
     check_row, correct_in_place, localize, weight_vector, Localization, RowCheck,
@@ -48,10 +48,28 @@ pub(crate) struct BlockVerify {
     pub rows_recomputed: usize,
     /// Detections whose recompute the severity policy waived.
     pub rows_waived: usize,
+    /// Rows repaired via the column/grid direction (no recompute spent).
+    pub rows_corrected_grid: usize,
+    /// Row localizations that came back [`Localization::Inconsistent`].
+    pub inconsistent_localizations: usize,
     /// Largest |D1| across the block's rows (∞ on non-finite D1).
     pub max_abs_d1: f64,
     /// Smallest threshold issued across the block's rows.
     pub min_threshold: f64,
+}
+
+/// Column-direction repair context for two-dimensional encodings
+/// ([`EncodingMode::RowCol`] / [`EncodingMode::Grid`]): the per-column
+/// V-ABFT thresholds (via Cᵀ = Bᵀ·Aᵀ) plus the repair discipline. The
+/// column checksums themselves travel as the bottom two rows of the
+/// encoded product.
+pub(crate) struct ColDirection {
+    /// Per-column detection thresholds — the column direction's analogue
+    /// of the per-row thresholds, same algorithm, transposed roles.
+    pub thresholds: Vec<f64>,
+    /// Grid mode: iterate peeling passes with incremental syndrome
+    /// updates instead of RowCol's single column pass.
+    pub peel: bool,
 }
 
 /// The threshold context matching a policy's verification point.
@@ -85,6 +103,7 @@ pub(crate) fn verify_block(
     thresholds: &[f64],
     weights: &[f64],
     fused: Option<&[FusedRowCheck]>,
+    col: Option<&ColDirection>,
     out: GemmOutput,
     a_blk: &Matrix,
     b_blk: &Matrix,
@@ -97,13 +116,23 @@ pub(crate) fn verify_block(
     debug_assert_eq!(weights.len(), n);
     // Precision the verified elements live on:
     let grid = if policy.online { model.work } else { model.out };
+    // Two-dimensional encodings carry the column-checksum rows at the
+    // bottom of the product: repair state, not data.
+    let m_data = part.rows() - col.map_or(0, |_| 2);
 
-    let mut detections = Vec::new();
+    let mut detections: Vec<Detection> = Vec::new();
     let mut rows_recomputed = 0usize;
     let mut rows_waived = 0usize;
+    let mut rows_corrected_grid = 0usize;
+    let mut inconsistent_localizations = 0usize;
     let mut max_abs_d1 = 0.0f64;
     let mut min_threshold = f64::INFINITY;
-    for i in 0..part.rows() {
+    // Row pass: detect → localize → correct → re-verify. Rows the row
+    // syndrome alone could not repair are deferred as (detection index,
+    // residual) pairs; under a 2D encoding the column direction gets a
+    // shot at them before the recompute/waive escalation.
+    let mut pending: Vec<(usize, f64)> = Vec::new();
+    for i in 0..m_data {
         let rc = match fused {
             Some(checks) => {
                 let fc = checks[i];
@@ -129,6 +158,7 @@ pub(crate) fn verify_block(
                 f64::INFINITY
             },
             corrected: false,
+            via_grid: false,
             waived: false,
         };
         // Residual error mass left in the row if no further repair runs:
@@ -136,22 +166,77 @@ pub(crate) fn verify_block(
         // re-verification difference when a correction failed to verify.
         let mut residual = rc.d1;
         if policy.correct {
-            if let Localization::Column(j) = localize(rc.d1, rc.d2, n, policy.localize_tol) {
-                det.col = Some(j);
-                correct_in_place(&mut part, i, j, rc.d1, grid);
-                det.corrected = true;
-                residual = 0.0;
-                if policy.reverify {
-                    let rc2 =
-                        check_row(part.row(i), cr1[i], cr2[i], thresholds[i], engine, weights);
-                    if rc2.flagged {
-                        det.corrected = false; // correction didn't verify
-                        residual = rc2.d1;
+            match localize(rc.d1, rc.d2, n, policy.localize_tol) {
+                Localization::Column(j) => {
+                    det.col = Some(j);
+                    correct_in_place(&mut part, i, j, rc.d1, grid);
+                    det.corrected = true;
+                    residual = 0.0;
+                    if policy.reverify {
+                        let rc2 =
+                            check_row(part.row(i), cr1[i], cr2[i], thresholds[i], engine, weights);
+                        if rc2.flagged {
+                            det.corrected = false; // correction didn't verify
+                            residual = rc2.d1;
+                        } else if col.is_some() && !(rc2.d2.abs() <= n as f64 * rc.threshold) {
+                            // 2D-only: a near-integer multi-fault ratio can
+                            // zero D1 while D2 still carries error mass —
+                            // the weighted residual betrays the
+                            // miscorrection, and the column direction can
+                            // repair it. (Not applied under RowOnly, whose
+                            // decisions stay bitwise-pinned to the 1D
+                            // pipeline.)
+                            det.corrected = false;
+                            residual = rc2.d2;
+                        }
                     }
+                }
+                Localization::Inconsistent => {
+                    inconsistent_localizations += 1;
                 }
             }
         }
-        if !det.corrected && policy.recompute {
+        if !det.corrected {
+            pending.push((detections.len(), residual));
+        }
+        detections.push(det);
+    }
+
+    // Column/grid repair: only reached when the row direction left work
+    // undone, so clean runs and row-correctable single upsets never touch
+    // it — the column syndromes are recovery state, not a detection
+    // surface, which is what preserves the zero-FP contract by
+    // construction.
+    if let Some(cd) = col {
+        if !pending.is_empty() && policy.correct {
+            column_repair(
+                engine,
+                policy,
+                cd,
+                &mut part,
+                m_data,
+                n,
+                &cr1,
+                &cr2,
+                thresholds,
+                weights,
+                grid,
+                &mut detections,
+                &mut pending,
+                &mut rows_corrected_grid,
+            );
+        }
+    }
+
+    // Escalation for whatever is still unrepaired: severity waive or
+    // recompute, exactly as the one-dimensional pipeline.
+    for &(di, residual) in &pending {
+        let det = &mut detections[di];
+        if det.corrected {
+            continue;
+        }
+        let i = det.row;
+        if policy.recompute {
             // Severity-aware escalation: a recompute only changes the
             // *quantized* output if the residual clears the output grid's
             // own rounding noise for this row, u_out · Σ|row|. Below
@@ -159,8 +244,8 @@ pub(crate) fn verify_block(
             // quantization (ApproxABFT) — waive it. A non-finite
             // residual never satisfies the bound, so exponent-class
             // wreckage always recomputes.
-            let noise = model.out.unit_roundoff()
-                * part.row(i).iter().map(|v| v.abs()).sum::<f64>();
+            let noise =
+                model.out.unit_roundoff() * part.row(i).iter().map(|v| v.abs()).sum::<f64>();
             if policy.severity && residual.abs() <= noise {
                 det.waived = true;
                 rows_waived += 1;
@@ -169,9 +254,160 @@ pub(crate) fn verify_block(
                 rows_recomputed += 1;
             }
         }
-        detections.push(det);
     }
-    BlockVerify { part, detections, rows_recomputed, rows_waived, max_abs_d1, min_threshold }
+    BlockVerify {
+        part,
+        detections,
+        rows_recomputed,
+        rows_waived,
+        rows_corrected_grid,
+        inconsistent_localizations,
+        max_abs_d1,
+        min_threshold,
+    }
+}
+
+/// Intersect row and column syndromes to repair multi-fault patterns the
+/// row direction alone gave up on.
+///
+/// The column syndromes (plain and position-weighted, per data column,
+/// against the A-side checksum rows riding at the bottom of the product)
+/// are computed with the same engine-scheduled reductions `check_row`
+/// uses — the column analogue at the identical verification point. Each
+/// flagged column whose D2c/D1c ratio names a pending row repairs that
+/// element (Eq. 10 transposed); grid mode then updates the syndromes
+/// incrementally and iterates (peeling), which additionally unlocks
+/// row-direction repairs of the residual single faults the column pass
+/// exposed. A row only counts as repaired when an engine-checked
+/// re-verification finds **both** its syndromes clean — miscorrections
+/// cannot survive the gate, so soundness never depends on the peeling
+/// heuristics.
+///
+/// Special case, checksum-fault certification: a pending row whose
+/// weighted syndrome is clean (|D2| ≤ n·T, the weighted noise bound)
+/// while *every* column syndrome is clean can only have been hit in its
+/// C^{r1} checksum entry — the column code certifies the data intact and
+/// the repair is to touch nothing (where RowOnly burns a full row
+/// recompute; see `checksum_column_fault_recomputes`).
+#[allow(clippy::too_many_arguments)]
+fn column_repair(
+    engine: &GemmEngine,
+    policy: &VerifyPolicy,
+    cd: &ColDirection,
+    part: &mut Matrix,
+    m_data: usize,
+    n: usize,
+    cr1: &[f64],
+    cr2: &[f64],
+    thresholds: &[f64],
+    weights: &[f64],
+    grid: crate::fp::Precision,
+    detections: &mut [Detection],
+    pending: &mut [(usize, f64)],
+    rows_corrected_grid: &mut usize,
+) {
+    debug_assert_eq!(cd.thresholds.len(), n);
+    // The product's bottom two rows hold the column checksums of the data
+    // columns (the trailing entries of those rows are the unused corner).
+    let cc1: Vec<f64> = part.row(m_data).to_vec();
+    let cc2: Vec<f64> = part.row(m_data + 1).to_vec();
+    let row_weights = weight_vector(m_data);
+    let mut colbuf = vec![0.0f64; m_data];
+    let mut d1c = vec![0.0f64; n];
+    let mut d2c = vec![0.0f64; n];
+    let mut any_col_flagged = false;
+    for j in 0..n {
+        for (i, slot) in colbuf.iter_mut().enumerate() {
+            *slot = part.get(i, j);
+        }
+        d1c[j] = engine.reduce(&colbuf) - cc1[j];
+        d2c[j] = engine.dot(&colbuf, &row_weights) - cc2[j];
+        if !d1c[j].is_finite() || d1c[j].abs() > cd.thresholds[j] {
+            any_col_flagged = true;
+        }
+    }
+
+    if !any_col_flagged {
+        // Checksum-fault certification (see the function docs).
+        for p in pending.iter_mut() {
+            let det = &mut detections[p.0];
+            if det.corrected || det.col.is_some() {
+                continue;
+            }
+            if det.d2.abs() <= n as f64 * det.threshold {
+                det.corrected = true;
+                det.via_grid = true;
+                *rows_corrected_grid += 1;
+                p.1 = 0.0;
+            }
+        }
+        return; // nothing for the syndrome intersection to work on
+    }
+
+    // Peeling budget: RowCol gets exactly one column pass; Grid iterates
+    // until a pass makes no progress (bounded well above any 2–4-flip
+    // burst's worst case).
+    let max_passes = if cd.peel { 2 + pending.len() + m_data.min(n) } else { 1 };
+    for pass in 0..max_passes {
+        let mut progress = false;
+        // (a) Flagged columns whose syndrome ratio names a pending row
+        // repair that element; incremental updates keep the column
+        // syndromes current as elements are fixed.
+        for j in 0..n {
+            if !d1c[j].is_finite() || d1c[j].abs() <= cd.thresholds[j] {
+                continue;
+            }
+            if let Localization::Column(r) = localize(d1c[j], d2c[j], m_data, policy.localize_tol)
+            {
+                let is_pending = pending
+                    .iter()
+                    .any(|&(di, _)| !detections[di].corrected && detections[di].row == r);
+                if is_pending {
+                    let delta = d1c[j];
+                    correct_in_place(part, r, j, delta, grid);
+                    d1c[j] -= delta;
+                    d2c[j] -= row_weights[r] * delta;
+                    progress = true;
+                }
+            }
+        }
+        if !progress && pass > 0 {
+            break;
+        }
+        // (b) Close out pending rows. The acceptance gate is an
+        // engine-checked row re-verification with both syndromes clean;
+        // grid mode first peels a residual single fault the column
+        // corrections may have exposed in the row direction.
+        for p in pending.iter_mut() {
+            if detections[p.0].corrected {
+                continue;
+            }
+            let i = detections[p.0].row;
+            let mut rc2 = check_row(part.row(i), cr1[i], cr2[i], thresholds[i], engine, weights);
+            if cd.peel && rc2.flagged {
+                if let Localization::Column(j) = localize(rc2.d1, rc2.d2, n, policy.localize_tol)
+                {
+                    correct_in_place(part, i, j, rc2.d1, grid);
+                    d1c[j] -= rc2.d1;
+                    d2c[j] -= row_weights[i] * rc2.d1;
+                    progress = true;
+                    rc2 = check_row(part.row(i), cr1[i], cr2[i], thresholds[i], engine, weights);
+                }
+            }
+            p.1 = if rc2.flagged { rc2.d1 } else { rc2.d2 };
+            if !rc2.flagged && rc2.d2.abs() <= n as f64 * thresholds[i] {
+                let det = &mut detections[p.0];
+                det.corrected = true;
+                det.via_grid = true;
+                *rows_corrected_grid += 1;
+                p.1 = 0.0;
+                progress = true;
+            }
+        }
+        if !progress {
+            break;
+        }
+    }
 }
 
 /// Recompute one row of a (partial) product — a 1×bk · bk×N GEMM — the
@@ -197,7 +433,11 @@ pub(crate) fn verdict_of(detections: &[Detection], rows_recomputed: usize) -> Ve
     } else if rows_recomputed > 0 {
         Verdict::Recomputed
     } else if detections.iter().all(|d| d.corrected) {
-        Verdict::Corrected
+        if detections.iter().any(|d| d.via_grid) {
+            Verdict::CorrectedGrid
+        } else {
+            Verdict::Corrected
+        }
     } else if detections.iter().all(|d| d.corrected || d.waived) {
         Verdict::Waived
     } else {
@@ -286,13 +526,19 @@ pub(crate) fn run_prepared<F: FnMut(usize, &mut GemmOutput)>(
     let blocks = w.num_blocks();
     // Position weights depend only on N — hoisted out of the block loop.
     let weights = weight_vector(n);
-    let fused_active = policy.fused && policy.online;
+    // The fused epilogue covers the row direction only; two-dimensional
+    // encodings verify post-hoc at the identical verification point
+    // (pre-quantization accumulator), so decisions are unchanged.
+    let fused_active = policy.fused && policy.online && policy.encoding == EncodingMode::RowOnly;
+    let two_d = policy.encoding.two_dimensional();
 
     let mut acc = Matrix::zeros(m, n);
     let mut detections = Vec::new();
     let mut detection_blocks = Vec::new();
     let mut rows_recomputed = 0usize;
     let mut rows_waived = 0usize;
+    let mut rows_corrected_grid = 0usize;
+    let mut inconsistent_localizations = 0usize;
     let mut max_abs_d1 = 0.0f64;
     let mut min_threshold = f64::INFINITY;
 
@@ -312,7 +558,7 @@ pub(crate) fn run_prepared<F: FnMut(usize, &mut GemmOutput)>(
         // moment each row's tile leaves the registers.
         let thresholds = threshold.thresholds_prepared(a_blk, &blk.stats, &ctx);
 
-        let (out, fused_checks) = if fused_active {
+        let (out, fused_checks, col) = if fused_active {
             let probe = FusedProbe { n, weights: &weights, thresholds: &thresholds };
             match inject.as_mut() {
                 None => {
@@ -322,7 +568,7 @@ pub(crate) fn run_prepared<F: FnMut(usize, &mut GemmOutput)>(
                         blk.enc.wide_cols(),
                         &probe,
                     );
-                    (out, Some(checks))
+                    (out, Some(checks), None)
                 }
                 Some(f) => {
                     // The simulated upset mutates the product after the
@@ -333,15 +579,47 @@ pub(crate) fn run_prepared<F: FnMut(usize, &mut GemmOutput)>(
                         engine.matmul_mixed(a_blk, &blk.enc.b_encoded, blk.enc.wide_cols());
                     f(bi, &mut out);
                     let checks = engine.fused_sweep(&out.acc, &probe);
-                    (out, Some(checks))
+                    (out, Some(checks), None)
                 }
             }
+        } else if two_d {
+            // A-side column checksums ride the packed operand exactly as
+            // the B-side checksums do: the data rows keep their input
+            // quantization and reduction schedule bitwise (the
+            // matmul_mixed_2d contract), the two checksum rows come out
+            // of the same kernel as two extra output rows.
+            let cenc = if policy.online {
+                ColumnEncoding::encode_a_wide(a_blk, engine)
+            } else {
+                ColumnEncoding::encode_a(a_blk, engine)
+            };
+            let mut out = engine.matmul_mixed_2d(
+                &cenc.a_encoded,
+                &blk.enc.b_encoded,
+                blk.enc.wide_cols(),
+                cenc.wide_rows(),
+            );
+            if let Some(f) = inject.as_mut() {
+                f(bi, &mut out);
+            }
+            // Column-direction thresholds from the cached per-column B
+            // statistics (transpose-role V-ABFT); the one-shot fallback is
+            // bitwise-identical for handles prepared without them.
+            let col_thresholds = match blk.col_stats.as_ref() {
+                Some(cs) => threshold.thresholds_columns_prepared(a_blk, cs, &ctx),
+                None => threshold.thresholds_columns(a_blk, &blk.stats.b, &ctx),
+            };
+            let cd = ColDirection {
+                thresholds: col_thresholds,
+                peel: policy.encoding == EncodingMode::Grid,
+            };
+            (out, None, Some(cd))
         } else {
             let mut out = engine.matmul_mixed(a_blk, &blk.enc.b_encoded, blk.enc.wide_cols());
             if let Some(f) = inject.as_mut() {
                 f(bi, &mut out);
             }
-            (out, None)
+            (out, None, None)
         };
 
         let bv = verify_block(
@@ -351,6 +629,7 @@ pub(crate) fn run_prepared<F: FnMut(usize, &mut GemmOutput)>(
             &thresholds,
             &weights,
             fused_checks.as_deref(),
+            col.as_ref(),
             out,
             a_blk,
             &blk.stats.b,
@@ -358,6 +637,8 @@ pub(crate) fn run_prepared<F: FnMut(usize, &mut GemmOutput)>(
 
         rows_recomputed += bv.rows_recomputed;
         rows_waived += bv.rows_waived;
+        rows_corrected_grid += bv.rows_corrected_grid;
+        inconsistent_localizations += bv.inconsistent_localizations;
         max_abs_d1 = max_abs_d1.max(bv.max_abs_d1);
         min_threshold = min_threshold.min(bv.min_threshold);
         let tagged = detection_blocks.len() + bv.detections.len();
@@ -389,6 +670,8 @@ pub(crate) fn run_prepared<F: FnMut(usize, &mut GemmOutput)>(
             rows_checked: m * blocks,
             rows_recomputed,
             rows_waived,
+            rows_corrected_grid,
+            inconsistent_localizations,
             max_abs_d1,
             min_threshold,
             rows_fused: if fused_active { m * blocks } else { 0 },

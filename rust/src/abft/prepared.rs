@@ -42,13 +42,13 @@
 //! assert_eq!(cold.report.verdict, warm.report.verdict);
 //! ```
 
-use crate::abft::encode::ChecksumEncoding;
+use crate::abft::encode::{ChecksumEncoding, EncodingMode};
 use crate::abft::pipeline;
 use crate::abft::VerifyPolicy;
 use crate::error::Result;
 use crate::gemm::{AccumModel, GemmEngine};
 use crate::matrix::Matrix;
-use crate::threshold::{BSummary, PreparedBStats, ThresholdContext};
+use crate::threshold::{BSummary, PreparedBStats, PreparedColStats, ThresholdContext};
 
 /// One K-block of a prepared weight matrix: its checksum encoding plus the
 /// statistics the threshold algorithms consume.
@@ -66,6 +66,12 @@ pub struct PreparedBlock {
     /// with the extrema bound) — what [`crate::threshold::Threshold::thresholds_prepared`]
     /// consumes.
     pub stats: PreparedBStats,
+    /// Column-direction statistics (per-column stats of this B block, the
+    /// "rows of Bᵀ" role in Cᵀ = Bᵀ·Aᵀ) — what
+    /// [`crate::threshold::Threshold::thresholds_columns_prepared`]
+    /// consumes. Only populated when the handle was prepared for a
+    /// two-dimensional [`EncodingMode`]; `None` under `RowOnly`.
+    pub col_stats: Option<PreparedColStats>,
 }
 
 /// A weight matrix prepared once for repeated protected multiplies — the
@@ -96,6 +102,7 @@ pub struct PreparedWeights {
     block_k: usize,
     model: AccumModel,
     online: bool,
+    encoding: EncodingMode,
     ctx: ThresholdContext,
 }
 
@@ -140,7 +147,20 @@ impl PreparedWeights {
                 ChecksumEncoding::encode_b(&b_blk, engine)
             };
             let bsum = BSummary::of(&b_blk);
-            blocks.push(PreparedBlock { k0, k1, enc, stats: PreparedBStats { b: b_blk, bsum } });
+            // Column-direction stats only when a 2D encoding will consume
+            // them: the extra transpose pass is wasted work under RowOnly.
+            let col_stats = if policy.encoding.two_dimensional() {
+                Some(PreparedColStats::of(&b_blk))
+            } else {
+                None
+            };
+            blocks.push(PreparedBlock {
+                k0,
+                k1,
+                enc,
+                stats: PreparedBStats { b: b_blk, bsum },
+                col_stats,
+            });
         }
         PreparedWeights {
             blocks,
@@ -149,6 +169,7 @@ impl PreparedWeights {
             block_k,
             model: engine.model(),
             online: policy.online,
+            encoding: policy.encoding,
             ctx: pipeline::threshold_ctx(engine, policy),
         }
     }
@@ -195,6 +216,13 @@ impl PreparedWeights {
         self.online
     }
 
+    /// The [`EncodingMode`] the handle was prepared for. Two-dimensional
+    /// modes carry per-block column statistics; `RowOnly` handles do not,
+    /// so the mode is part of the compatibility contract.
+    pub fn encoding(&self) -> EncodingMode {
+        self.encoding
+    }
+
     /// Approximate resident size in bytes (data + encodings + statistics)
     /// — useful for sizing the coordinator's weight cache.
     pub fn bytes(&self) -> usize {
@@ -223,6 +251,12 @@ impl PreparedWeights {
             "PreparedWeights verification-point mismatch: prepared online={}, policy online={}",
             self.online,
             policy.online
+        );
+        crate::ensure!(
+            self.encoding == policy.encoding,
+            "PreparedWeights encoding mismatch: prepared {:?}, policy wants {:?}",
+            self.encoding,
+            policy.encoding
         );
         Ok(())
     }

@@ -192,6 +192,25 @@ mod tests {
     }
 
     #[test]
+    fn localize_tolerance_boundary() {
+        // The 0.45 default sits strictly below 0.5 — the point where two
+        // adjacent columns become indistinguishable. A ratio exactly
+        // halfway between integer weights (distance 0.5, the worst case,
+        // produced by e.g. same-row deltas δ at w=4 and δ at w=5:
+        // D2/D1 = 4.5) must be rejected at tol 0.45 …
+        assert_eq!(localize(2.0, 9.0, 16, 0.45), Localization::Inconsistent);
+        // … and only an explicit tol ≥ 0.5 would accept it.
+        assert_eq!(localize(2.0, 9.0, 16, 0.5), Localization::Column(4));
+        // Distances inside the tolerance are accepted (exact binary
+        // fractions, so no representation slack in the comparison):
+        // 3.4375 is 0.4375 from 3 …
+        assert_eq!(localize(1.0, 3.4375, 16, 0.45), Localization::Column(2));
+        // … while 3.46875 (0.46875 away) is rejected, from either side.
+        assert_eq!(localize(1.0, 3.46875, 16, 0.45), Localization::Inconsistent);
+        assert_eq!(localize(1.0, 2.5625, 16, 0.45), Localization::Column(2));
+    }
+
+    #[test]
     fn two_faults_in_one_row_localize_inconsistently_most_of_the_time() {
         // Under the SEU model two upsets per row are out of scope; the
         // ratio check should usually notice. Deterministic instance:

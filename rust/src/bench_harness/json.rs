@@ -26,8 +26,12 @@ use std::path::PathBuf;
 pub const BENCH_SCHEMA: &str = "vabft-bench/v1";
 
 /// Schema tag of the campaign detection-quality documents
-/// (`BENCH_campaign.json`).
-pub const CAMPAIGN_SCHEMA: &str = "vabft-campaign/v1";
+/// (`BENCH_campaign.json`). v2 added the multi-fault correction axis
+/// (`multi_cell` entries with `pattern`/`flips`/`encoding` columns and
+/// the `grid_exceeds_baseline` coverage gate in the metadata); v1
+/// documents no longer validate — consumers must regenerate, not mix
+/// single-fault-only trajectories with grid-coverage ones.
+pub const CAMPAIGN_SCHEMA: &str = "vabft-campaign/v2";
 
 /// Schema tag of the serving-replay throughput documents
 /// (`BENCH_serving.json`). v2 added the open-loop columns (`arrival`,
@@ -452,6 +456,26 @@ mod tests {
         assert!(validate_schema(&v2.to_json(), SERVING_SCHEMA).is_ok());
         let mut patch = JsonDoc::new(SERVING_SCHEMA);
         patch.entry(vec![("rps".to_string(), JsonValue::Num(1.0))]);
+        assert!(patch.splice_into(v1).is_err());
+    }
+
+    #[test]
+    fn campaign_schema_v2_rejects_v1_documents() {
+        // The v1 → v2 migration: v2 documents carry the multi-fault
+        // correction axis (`multi_cell` entries, `grid_exceeds_baseline`
+        // metadata) that v1 documents lack, so a committed v1 trajectory
+        // must be rejected outright (regenerated, never spliced into).
+        assert_eq!(CAMPAIGN_SCHEMA, "vabft-campaign/v2");
+        let v1 = "{\n  \"schema\": \"vabft-campaign/v1\",\n  \"bench\": \"campaign\",\n  \
+                  \"entries\": []\n}\n";
+        assert!(validate_schema(v1, CAMPAIGN_SCHEMA).is_err());
+        // A same-tag v2 document still validates, and a v2 doc refuses
+        // to splice onto a v1 file (forcing the fresh-overwrite path in
+        // `JsonDoc::append`).
+        let v2 = JsonDoc::new(CAMPAIGN_SCHEMA);
+        assert!(validate_schema(&v2.to_json(), CAMPAIGN_SCHEMA).is_ok());
+        let mut patch = JsonDoc::new(CAMPAIGN_SCHEMA);
+        patch.entry(vec![("cell".to_string(), JsonValue::Int(0))]);
         assert!(patch.splice_into(v1).is_err());
     }
 

@@ -11,6 +11,7 @@
 //! schedule-preservation invariant makes each trial's arithmetic
 //! thread-count-independent.
 
+use crate::abft::EncodingMode;
 use crate::fp::Precision;
 use crate::gemm::{AccumModel, ReduceStrategy};
 use crate::inject::{FaultSite, FaultSpec, SiteClass};
@@ -19,6 +20,10 @@ use crate::rng::{Distribution, Rng, Xoshiro256pp};
 /// Stream tag separating fault-coordinate RNG streams from operand
 /// streams (both key off the master seed).
 const COORD_TAG: u64 = 0xC00D_1247;
+
+/// Stream tag of the multi-fault axis' coordinate streams (disjoint from
+/// both the single-fault coordinate and the operand streams).
+const MULTI_TAG: u64 = 0x517E_BD2C;
 
 /// Which encoding bit a cell flips, named relative to the target
 /// precision's layout so one class means the same physical event across
@@ -89,6 +94,46 @@ impl VerifyPoint {
     }
 }
 
+/// Spatial arrangement of one multi-fault trial's simultaneous flips —
+/// the burst-pattern axis of the multi-fault grid. The patterns pick out
+/// the three correction regimes of the 2D encoding:
+///
+/// * [`BurstPattern::RowBurst`] — every flip in one output row: the row
+///   syndrome is inconsistent with a single upset, so the single-checksum
+///   baseline must recompute, while column/grid encodings repair each
+///   struck column from the A-side checksums.
+/// * [`BurstPattern::ColBurst`] — every flip in one output column: each
+///   affected row carries a single upset, so row localization corrects
+///   in place under every encoding (the parity case the coverage gate
+///   uses as its control).
+/// * [`BurstPattern::Scatter`] — flips at distinct rows *and* distinct
+///   columns: again one upset per row, correctable by the row direction
+///   alone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BurstPattern {
+    /// All flips strike one output row (distinct columns).
+    RowBurst,
+    /// All flips strike one output column (distinct rows).
+    ColBurst,
+    /// Flips at pairwise-distinct rows and columns.
+    Scatter,
+}
+
+impl BurstPattern {
+    /// All three patterns, in campaign grid order.
+    pub const ALL: [BurstPattern; 3] =
+        [BurstPattern::RowBurst, BurstPattern::ColBurst, BurstPattern::Scatter];
+
+    /// Short lowercase name used in reports and JSON documents.
+    pub fn name(self) -> &'static str {
+        match self {
+            BurstPattern::RowBurst => "row_burst",
+            BurstPattern::ColBurst => "col_burst",
+            BurstPattern::Scatter => "scatter",
+        }
+    }
+}
+
 /// Configuration of a campaign grid. Construct via [`GridConfig::quick`],
 /// [`GridConfig::full`] or [`GridConfig::smoke`] and adjust fields as
 /// needed; [`plan`] expands it into cells.
@@ -125,6 +170,22 @@ pub struct GridConfig {
     /// statistic; the default of 6 additionally absorbs requantization
     /// error on coarse output grids.
     pub margin: f64,
+    /// Simultaneous flip counts of the multi-fault axis (2 = the classic
+    /// double upset; larger counts model wider bursts). Empty disables
+    /// the axis.
+    pub multi_flips: Vec<usize>,
+    /// Burst patterns of the multi-fault axis.
+    pub burst_patterns: Vec<BurstPattern>,
+    /// Checksum encoding modes the multi-fault axis compares; must
+    /// include [`EncodingMode::RowOnly`] for the grid-vs-baseline
+    /// coverage gate to bind.
+    pub encodings: Vec<EncodingMode>,
+    /// Injection trials per multi-fault cell.
+    pub multi_trials_per_cell: usize,
+    /// Localization tolerance forwarded to every campaign verification
+    /// policy (see [`crate::abft::VerifyPolicy::localize_tol`] for the
+    /// derivation of the 0.45 default).
+    pub localize_tol: f64,
 }
 
 impl GridConfig {
@@ -145,6 +206,11 @@ impl GridConfig {
             shapes: vec![(8, 64, 16)],
             trials_per_cell: 3,
             margin: 6.0,
+            multi_flips: vec![2, 3],
+            burst_patterns: BurstPattern::ALL.to_vec(),
+            encodings: vec![EncodingMode::RowOnly, EncodingMode::RowCol, EncodingMode::Grid],
+            multi_trials_per_cell: 3,
+            localize_tol: 0.45,
         }
     }
 
@@ -165,6 +231,8 @@ impl GridConfig {
         cfg.offline_sites = SiteClass::ALL.to_vec();
         cfg.shapes = vec![(32, 256, 64), (128, 1024, 256)];
         cfg.trials_per_cell = 6;
+        cfg.multi_flips = vec![2, 3, 4];
+        cfg.multi_trials_per_cell = 6;
         cfg
     }
 
@@ -178,6 +246,12 @@ impl GridConfig {
         cfg.dists = vec![Distribution::normal_1_1()];
         cfg.bit_classes = vec![BitClass::ExpMsb, BitClass::MantMsb];
         cfg.trials_per_cell = 4;
+        // A minimal multi-fault slice: the divergent pattern (row burst)
+        // plus its control (column burst), grid vs the row-only baseline
+        // — 8 cells exercising the coverage gate on every smoke run.
+        cfg.multi_flips = vec![2];
+        cfg.burst_patterns = vec![BurstPattern::RowBurst, BurstPattern::ColBurst];
+        cfg.encodings = vec![EncodingMode::RowOnly, EncodingMode::Grid];
         cfg
     }
 }
@@ -252,13 +326,7 @@ impl CellSpec {
     /// coordinator, prepared weights — which is what lets the engine
     /// amortize checksum encoding across the weight-stationary trials.
     pub fn operand_stream(&self) -> u64 {
-        let (m, k, n) = self.shape;
-        let label = self.dist.label();
-        let h = crate::rng::fnv1a(
-            crate::rng::FNV1A_OFFSET,
-            self.model().input.name().bytes().chain(label.bytes()),
-        );
-        h ^ ((m as u64) << 42) ^ ((k as u64) << 21) ^ n as u64
+        operand_stream_for(self.model().input, &self.dist, self.shape)
     }
 
     /// The cell's planned faults, deterministically derived from the
@@ -299,6 +367,170 @@ impl CellSpec {
             self.verify.name()
         )
     }
+}
+
+/// The shared operand-stream key: cells (single- or multi-fault) that
+/// agree on (input precision, distribution, shape) sample identical
+/// operands — which also makes the multi-fault axis' encodings compare
+/// coverage over bitwise-identical inputs.
+pub fn operand_stream_for(input: Precision, dist: &Distribution, shape: (usize, usize, usize)) -> u64 {
+    let (m, k, n) = shape;
+    let label = dist.label();
+    let h = crate::rng::fnv1a(
+        crate::rng::FNV1A_OFFSET,
+        input.name().bytes().chain(label.bytes()),
+    );
+    h ^ ((m as u64) << 42) ^ ((k as u64) << 21) ^ n as u64
+}
+
+/// One planned multi-fault cell: a point of the (flip count × burst
+/// pattern × encoding mode) lattice. Every trial injects `flips`
+/// simultaneous output-site upsets arranged by `pattern`, verified
+/// online under `encoding` — the axis that measures which checksum
+/// geometry repairs multi-fault patterns without recomputation.
+#[derive(Debug, Clone)]
+pub struct MultiCellSpec {
+    /// Position in planning order (also the fault-coordinate RNG stream).
+    pub index: usize,
+    /// Storage precision under test.
+    pub precision: Precision,
+    /// Reduction strategy (rounding schedule).
+    pub strategy: ReduceStrategy,
+    /// Operand distribution.
+    pub dist: Distribution,
+    /// Spatial arrangement of the simultaneous flips.
+    pub pattern: BurstPattern,
+    /// Simultaneous flips per trial.
+    pub flips: usize,
+    /// Checksum encoding mode the trial is verified under.
+    pub encoding: EncodingMode,
+    /// GEMM shape (M, K, N).
+    pub shape: (usize, usize, usize),
+    /// Injection trials.
+    pub trials: usize,
+}
+
+impl MultiCellSpec {
+    /// The accumulation model of this cell (see [`model_for`]).
+    pub fn model(&self) -> AccumModel {
+        model_for(self.precision, self.strategy)
+    }
+
+    /// The bit position every flip addresses: the exponent LSB of the
+    /// verified (work) grid — the multi-fault axis runs online. An
+    /// exponent-LSB flip halves or doubles the struck accumulator value,
+    /// so each fault stays finite (correctable in place) while typically
+    /// clearing the detection threshold by orders of magnitude.
+    pub fn bit(&self) -> u32 {
+        BitClass::ExpLsb.bit(self.model().work)
+    }
+
+    /// Stream index of the cell's operand set (see [`operand_stream_for`]).
+    pub fn operand_stream(&self) -> u64 {
+        operand_stream_for(self.model().input, &self.dist, self.shape)
+    }
+
+    /// The cell's planned trials, deterministically derived from the
+    /// master seed: trial t's coordinates come from substream
+    /// `(seed ^ MULTI_TAG, cell index)`, drawn in a fixed order. Each
+    /// inner vector is one trial's simultaneous faults.
+    pub fn fault_plan(&self, seed: u64) -> Vec<Vec<FaultSpec>> {
+        let (m, _k, n) = self.shape;
+        let mut rng = Xoshiro256pp::from_stream(seed ^ MULTI_TAG, self.index as u64);
+        let bit = self.bit();
+        (0..self.trials)
+            .map(|_| match self.pattern {
+                BurstPattern::RowBurst => {
+                    let row = rng.uniform_u64(m as u64) as usize;
+                    distinct(&mut rng, n, self.flips)
+                        .into_iter()
+                        .map(|col| FaultSpec::output(row, col, bit))
+                        .collect()
+                }
+                BurstPattern::ColBurst => {
+                    let col = rng.uniform_u64(n as u64) as usize;
+                    distinct(&mut rng, m, self.flips)
+                        .into_iter()
+                        .map(|row| FaultSpec::output(row, col, bit))
+                        .collect()
+                }
+                BurstPattern::Scatter => {
+                    let rows = distinct(&mut rng, m, self.flips);
+                    let cols = distinct(&mut rng, n, self.flips);
+                    rows.into_iter()
+                        .zip(cols)
+                        .map(|(row, col)| FaultSpec::output(row, col, bit))
+                        .collect()
+                }
+            })
+            .collect()
+    }
+
+    /// Compact label for progress lines and failure messages.
+    pub fn label(&self) -> String {
+        let (m, k, n) = self.shape;
+        format!(
+            "{}x{}x{} {} {} {}x{} {}",
+            m,
+            k,
+            n,
+            self.precision.name(),
+            self.strategy.name(),
+            self.pattern.name(),
+            self.flips,
+            self.encoding.name()
+        )
+    }
+}
+
+/// `count` pairwise-distinct draws from `0..bound` (rejection sampling —
+/// deterministic given the rng state; asserts `count ≤ bound`).
+fn distinct(rng: &mut Xoshiro256pp, bound: usize, count: usize) -> Vec<usize> {
+    assert!(count <= bound, "cannot draw {count} distinct values from 0..{bound}");
+    let mut out = Vec::with_capacity(count);
+    while out.len() < count {
+        let v = rng.uniform_u64(bound as u64) as usize;
+        if !out.contains(&v) {
+            out.push(v);
+        }
+    }
+    out
+}
+
+/// Expand the multi-fault axis into cells, in the fixed planning order
+/// (precision ⊃ pattern ⊃ flip count ⊃ encoding). The axis deliberately
+/// stays compact — it fixes shape, strategy and distribution to the
+/// config's first entries, varying only the dimensions the 2D-encoding
+/// coverage gate quantifies over. Returns an empty plan when any of the
+/// multi-fault axes (or the base axes it borrows from) is empty.
+pub fn plan_multi_fault(cfg: &GridConfig) -> Vec<MultiCellSpec> {
+    let mut cells = Vec::new();
+    if cfg.shapes.is_empty() || cfg.strategies.is_empty() || cfg.dists.is_empty() {
+        return cells;
+    }
+    let shape = cfg.shapes[0];
+    let strategy = cfg.strategies[0];
+    let dist = cfg.dists[0].clone();
+    for &precision in &cfg.precisions {
+        for &pattern in &cfg.burst_patterns {
+            for &flips in &cfg.multi_flips {
+                for &encoding in &cfg.encodings {
+                    cells.push(MultiCellSpec {
+                        index: cells.len(),
+                        precision,
+                        strategy,
+                        dist: dist.clone(),
+                        pattern,
+                        flips,
+                        encoding,
+                        shape,
+                        trials: cfg.multi_trials_per_cell,
+                    });
+                }
+            }
+        }
+    }
+    cells
 }
 
 /// Expand a grid configuration into cells, in the fixed planning order
@@ -400,6 +632,67 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn multi_fault_plan_dimensions_and_determinism() {
+        let cfg = GridConfig::quick(1);
+        let cells = plan_multi_fault(&cfg);
+        // 4 precisions × 3 patterns × 2 flip counts × 3 encodings = 72.
+        assert_eq!(cells.len(), 72);
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+            let plan1 = c.fault_plan(42);
+            assert_eq!(plan1, c.fault_plan(42), "cell {i} plan not reproducible");
+            assert_eq!(plan1.len(), c.trials);
+            let (m, _, n) = c.shape;
+            for trial in &plan1 {
+                assert_eq!(trial.len(), c.flips);
+                // Every fault is an in-range output-site flip; the
+                // pattern's distinctness contract holds.
+                let mut rows = Vec::new();
+                let mut cols = Vec::new();
+                for f in trial {
+                    assert!(f.bit < c.model().work.bits());
+                    match f.site {
+                        FaultSite::Output { row, col } => {
+                            assert!(row < m && col < n);
+                            rows.push(row);
+                            cols.push(col);
+                        }
+                        other => panic!("multi-fault plan produced {other:?}"),
+                    }
+                }
+                let all_distinct = |v: &[usize]| {
+                    v.iter().all(|x| v.iter().filter(|y| *y == x).count() == 1)
+                };
+                match c.pattern {
+                    BurstPattern::RowBurst => {
+                        assert!(rows.iter().all(|&r| r == rows[0]));
+                        assert!(all_distinct(&cols));
+                    }
+                    BurstPattern::ColBurst => {
+                        assert!(cols.iter().all(|&j| j == cols[0]));
+                        assert!(all_distinct(&rows));
+                    }
+                    BurstPattern::Scatter => {
+                        assert!(all_distinct(&rows) && all_distinct(&cols));
+                    }
+                }
+            }
+        }
+        // Seed reaches the coordinates.
+        let all = |seed: u64| -> Vec<Vec<FaultSpec>> {
+            cells.iter().flat_map(|c| c.fault_plan(seed)).collect()
+        };
+        assert_ne!(all(42), all(43), "multi-fault coordinates ignore the seed");
+        // The smoke slice stays minimal but keeps the divergent pattern
+        // and both sides of the coverage gate.
+        let smoke = plan_multi_fault(&GridConfig::smoke(1));
+        assert_eq!(smoke.len(), 8);
+        assert!(smoke.iter().any(|c| c.pattern == BurstPattern::RowBurst));
+        assert!(smoke.iter().any(|c| c.encoding == EncodingMode::RowOnly));
+        assert!(smoke.iter().any(|c| c.encoding == EncodingMode::Grid));
     }
 
     #[test]

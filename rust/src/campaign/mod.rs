@@ -34,6 +34,9 @@ pub mod grid;
 pub mod report;
 pub mod runner;
 
-pub use grid::{model_for, plan, BitClass, CellSpec, GridConfig, VerifyPoint};
+pub use grid::{
+    model_for, plan, plan_multi_fault, BitClass, BurstPattern, CellSpec, GridConfig,
+    MultiCellSpec, VerifyPoint,
+};
 pub use report::{render_tables, to_doc};
-pub use runner::{run, run_sharded, CampaignOutcome, CellResult};
+pub use runner::{run, run_sharded, CampaignOutcome, CellResult, MultiCellResult};

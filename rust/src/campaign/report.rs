@@ -23,7 +23,7 @@ use crate::experiments::tightness_row_from_campaign;
 use crate::report::{pct, ratio, sci, Table};
 
 use super::grid::VerifyPoint;
-use super::runner::{CampaignOutcome, CellResult};
+use super::runner::{CampaignOutcome, CellResult, MultiCellResult};
 
 fn fmt_shape(shape: (usize, usize, usize)) -> String {
     format!("{}x{}x{}", shape.0, shape.1, shape.2)
@@ -210,7 +210,58 @@ pub fn render_tables(outcome: &CampaignOutcome) -> Vec<Table> {
         ]);
     }
 
-    vec![summary, ladder, tight, emax]
+    let mut tables = vec![summary, ladder, tight, emax];
+
+    // 5. Multi-fault correction coverage per burst pattern × encoding
+    // mode: how many simultaneous-flip trials each checksum geometry
+    // repaired without spending a recompute. Row bursts are the
+    // divergent column — the single-checksum baseline must recompute
+    // them, the 2D encodings correct via the A-side column direction.
+    if !outcome.multi_cells.is_empty() {
+        let mut headers: Vec<String> =
+            vec!["pattern".into(), "flips".into(), "trials".into()];
+        headers.extend(cfg.encodings.iter().map(|e| format!("{} corrected", e.name())));
+        let mut multi = Table::new(
+            "Multi-fault correction coverage (corrected without recompute) by encoding",
+            &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+        for &pattern in &cfg.burst_patterns {
+            for &flips in &cfg.multi_flips {
+                let sel = |e: Option<crate::abft::EncodingMode>| -> Vec<&MultiCellResult> {
+                    outcome
+                        .multi_cells
+                        .iter()
+                        .filter(|c| {
+                            c.spec.pattern == pattern
+                                && c.spec.flips == flips
+                                && e.map(|e| c.spec.encoding == e).unwrap_or(true)
+                        })
+                        .collect()
+                };
+                let any = sel(None);
+                if any.is_empty() {
+                    continue;
+                }
+                // Trials are identical across encodings (same fault
+                // plan); report one encoding's count.
+                let trials: usize = sel(Some(cfg.encodings[0]))
+                    .iter()
+                    .map(|c| c.trials)
+                    .sum();
+                let mut row =
+                    vec![pattern.name().to_string(), flips.to_string(), trials.to_string()];
+                for &e in &cfg.encodings {
+                    let corrected: usize =
+                        sel(Some(e)).iter().map(|c| c.corrected_no_recompute).sum();
+                    row.push(corrected.to_string());
+                }
+                multi.row(row);
+            }
+        }
+        tables.push(multi);
+    }
+
+    tables
 }
 
 /// Serialize a campaign outcome as the schema-versioned
@@ -235,6 +286,33 @@ pub fn to_doc(outcome: &CampaignOutcome) -> JsonDoc {
         .meta(
             "severity_no_downgrade",
             JsonValue::Bool(outcome.severity_no_downgrade()),
+        )
+        .meta("multi_cells", JsonValue::Int(outcome.multi_cells.len() as i64))
+        .meta("multi_trials", JsonValue::Int(outcome.total_multi_trials() as i64))
+        .meta("multi_clean_rows", JsonValue::Int(outcome.multi_clean_rows as i64))
+        .meta(
+            "multi_false_positives",
+            JsonValue::Int(outcome.multi_false_positives as i64),
+        )
+        .meta(
+            "multi_fault_gates_hold",
+            JsonValue::Bool(outcome.multi_fault_gates_hold()),
+        )
+        .meta(
+            "baseline_corrected_no_recompute",
+            JsonValue::Int(
+                outcome.multi_corrected_no_recompute(crate::abft::EncodingMode::RowOnly) as i64,
+            ),
+        )
+        .meta(
+            "grid_corrected_no_recompute",
+            JsonValue::Int(
+                outcome.multi_corrected_no_recompute(crate::abft::EncodingMode::Grid) as i64,
+            ),
+        )
+        .meta(
+            "grid_exceeds_baseline",
+            JsonValue::Bool(outcome.grid_exceeds_baseline()),
         );
     for c in &outcome.cells {
         let s = &c.spec;
@@ -264,6 +342,38 @@ pub fn to_doc(outcome: &CampaignOutcome) -> JsonDoc {
             ("tightness".to_string(), JsonValue::Sci(c.tightness())),
             ("severity_detected".to_string(), JsonValue::Int(c.severity_detected as i64)),
             ("severity_waived".to_string(), JsonValue::Int(c.severity_waived as i64)),
+        ]);
+    }
+    // Multi-fault axis entries ride the same document, distinguished by
+    // the `multi_cell` key (single-fault entries lead with `cell`).
+    for c in &outcome.multi_cells {
+        let s = &c.spec;
+        doc.entry(vec![
+            ("multi_cell".to_string(), JsonValue::Int(s.index as i64)),
+            ("shape".to_string(), JsonValue::Str(fmt_shape(s.shape))),
+            ("precision".to_string(), JsonValue::Str(s.precision.name().to_string())),
+            ("strategy".to_string(), JsonValue::Str(s.strategy.name().to_string())),
+            ("dist".to_string(), JsonValue::Str(s.dist.label())),
+            ("pattern".to_string(), JsonValue::Str(s.pattern.name().to_string())),
+            ("flips".to_string(), JsonValue::Int(s.flips as i64)),
+            ("encoding".to_string(), JsonValue::Str(s.encoding.name().to_string())),
+            ("bit".to_string(), JsonValue::Int(c.bit as i64)),
+            ("trials".to_string(), JsonValue::Int(c.trials as i64)),
+            ("detected".to_string(), JsonValue::Int(c.detected as i64)),
+            ("above".to_string(), JsonValue::Int(c.above as i64)),
+            ("detected_above".to_string(), JsonValue::Int(c.detected_above as i64)),
+            (
+                "corrected_no_recompute".to_string(),
+                JsonValue::Int(c.corrected_no_recompute as i64),
+            ),
+            ("rows_corrected_grid".to_string(), JsonValue::Int(c.rows_corrected_grid as i64)),
+            (
+                "inconsistent_localizations".to_string(),
+                JsonValue::Int(c.inconsistent_localizations as i64),
+            ),
+            ("rows_recomputed".to_string(), JsonValue::Int(c.rows_recomputed as i64)),
+            ("clean_rows".to_string(), JsonValue::Int(c.clean_rows as i64)),
+            ("false_positives".to_string(), JsonValue::Int(c.false_positives as i64)),
         ]);
     }
     doc

@@ -18,17 +18,18 @@
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 
-use crate::abft::{Verdict, VerifyPolicy};
+use crate::abft::{EncodingMode, Verdict, VerifyPolicy};
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, GemmResponse, PreparedGemmRequest, WeightHandle,
+    Coordinator, CoordinatorConfig, GemmResponse, InjectSpec, PreparedGemmRequest, WeightHandle,
 };
-use crate::gemm::AccumModel;
-use crate::inject::{FaultSite, FaultSpec};
+use crate::fp::Precision;
+use crate::gemm::{AccumModel, GemmEngine};
+use crate::inject::{BitFlip, FaultSite, FaultSpec};
 use crate::matrix::Matrix;
 use crate::rng::Xoshiro256pp;
 use crate::threshold::{AabftThreshold, Threshold, VabftThreshold};
 
-use super::grid::{plan, CellSpec, GridConfig, VerifyPoint};
+use super::grid::{plan, plan_multi_fault, CellSpec, GridConfig, MultiCellSpec, VerifyPoint};
 
 /// Stream tag separating operand-sampling RNG streams from coordinate
 /// streams (both key off the master seed).
@@ -111,6 +112,40 @@ impl CellResult {
     }
 }
 
+/// Aggregated statistics of one executed multi-fault cell.
+#[derive(Debug, Clone)]
+pub struct MultiCellResult {
+    /// The planned cell.
+    pub spec: MultiCellSpec,
+    /// Resolved flip bit position (exponent LSB of the work grid).
+    pub bit: u32,
+    /// Injection trials executed.
+    pub trials: usize,
+    /// Trials whose faults were detected (verdict ≠ Clean).
+    pub detected: usize,
+    /// Trials whose planned per-row net perturbation cleared `margin ×`
+    /// the row threshold (or was non-finite) on at least one row — the
+    /// population the multi-fault recall gate quantifies over.
+    pub above: usize,
+    /// Above-margin trials detected — the recall-gate numerator.
+    pub detected_above: usize,
+    /// Trials whose every detection was repaired in place — no row
+    /// recomputed. This is the coverage the grid-vs-baseline gate
+    /// compares: on row bursts the single-checksum baseline recomputes
+    /// while two-dimensional encodings correct via the column direction.
+    pub corrected_no_recompute: usize,
+    /// Rows corrected via the column/grid direction, summed over trials.
+    pub rows_corrected_grid: usize,
+    /// Row localizations that came back inconsistent, summed over trials.
+    pub inconsistent_localizations: usize,
+    /// Rows recomputed, summed over trials.
+    pub rows_recomputed: usize,
+    /// Clean rows verified in the cell's (shared) FPR sweep.
+    pub clean_rows: usize,
+    /// Clean rows of the cell's sweep that flagged — must be zero.
+    pub false_positives: usize,
+}
+
 /// Outcome of a full campaign run.
 #[derive(Debug, Clone)]
 pub struct CampaignOutcome {
@@ -118,6 +153,15 @@ pub struct CampaignOutcome {
     pub config: GridConfig,
     /// Per-cell results, in planning order.
     pub cells: Vec<CellResult>,
+    /// Multi-fault axis results, in planning order (empty when the axis
+    /// is disabled).
+    pub multi_cells: Vec<MultiCellResult>,
+    /// Clean rows verified across the multi-fault axis' distinct sweeps.
+    pub multi_clean_rows: usize,
+    /// Flagged rows across the multi-fault clean sweeps (must be zero —
+    /// column syndromes are recovery-only, so 2D encodings cannot add
+    /// false positives).
+    pub multi_false_positives: usize,
     /// Clean rows verified across the *distinct* clean sweeps (one per
     /// operand set per coordinator group — cells sharing operands share
     /// a sweep, which is counted once here).
@@ -188,6 +232,50 @@ impl CampaignOutcome {
     pub fn severity_no_downgrade(&self) -> bool {
         self.severity_false_positives == 0
             && self.cells.iter().all(|c| c.severity_detected == c.detected)
+    }
+
+    /// Total multi-fault injection trials.
+    pub fn total_multi_trials(&self) -> usize {
+        self.multi_cells.iter().map(|c| c.trials).sum()
+    }
+
+    /// Sum of corrected-without-recompute trials over the multi-fault
+    /// cells running `encoding`.
+    pub fn multi_corrected_no_recompute(&self, encoding: EncodingMode) -> usize {
+        self.multi_cells
+            .iter()
+            .filter(|c| c.spec.encoding == encoding)
+            .map(|c| c.corrected_no_recompute)
+            .sum()
+    }
+
+    /// The multi-fault detection gate: zero false positives on the axis'
+    /// clean sweeps and recall 1.0 over the above-margin multi-fault
+    /// trials, for *every* encoding mode — adding A-side checksums must
+    /// not change what is detected. Vacuously true when the axis is
+    /// empty.
+    pub fn multi_fault_gates_hold(&self) -> bool {
+        self.multi_false_positives == 0
+            && self.multi_cells.iter().all(|c| c.detected_above == c.above)
+    }
+
+    /// The grid-coverage gate: each two-dimensional encoding corrects
+    /// strictly more multi-fault trials without recomputation than the
+    /// single-checksum baseline across the identical fault plan (row
+    /// bursts are where the baseline must recompute). Vacuously true
+    /// when the axis plans no baseline or no two-dimensional cells.
+    pub fn grid_exceeds_baseline(&self) -> bool {
+        if !self.multi_cells.iter().any(|c| !c.spec.encoding.two_dimensional()) {
+            return true;
+        }
+        let base = self.multi_corrected_no_recompute(EncodingMode::RowOnly);
+        let mut two_d: Vec<EncodingMode> = Vec::new();
+        for c in &self.multi_cells {
+            if c.spec.encoding.two_dimensional() && !two_d.contains(&c.spec.encoding) {
+                two_d.push(c.spec.encoding);
+            }
+        }
+        two_d.iter().all(|&e| self.multi_corrected_no_recompute(e) > base)
     }
 }
 
@@ -267,6 +355,59 @@ struct PendingCell {
     /// The identical batch in flight on the severity-axis coordinator
     /// (online groups only).
     spending: Option<Vec<(u64, Receiver<GemmResponse>)>>,
+}
+
+/// One registered operand set within a multi-fault coordinator group:
+/// the prepared handle, the clean work-grid accumulator (what the
+/// planned online output-site flips strike), the pipeline's row
+/// thresholds for the margin gate, and the shared clean-sweep counts.
+struct MultiOperandSet {
+    stream: u64,
+    a: Matrix,
+    handle: WeightHandle,
+    acc: Matrix,
+    thr: Vec<f64>,
+    clean_rows: usize,
+    false_positives: usize,
+}
+
+/// A multi-fault cell whose trial batch is in flight.
+struct PendingMultiCell {
+    ci: usize,
+    oi: usize,
+    fault_plan: Vec<Vec<FaultSpec>>,
+    pending: Vec<(u64, Receiver<GemmResponse>)>,
+}
+
+/// Margin gate for one planned multi-fault trial: price each flip from
+/// the clean work-grid accumulator it strikes, sum deltas *per row*
+/// (simultaneous same-row flips can partially cancel in the unweighted
+/// syndrome D1 — row detection keys off the net perturbation), and gate
+/// the trial when any row's net perturbation is non-finite or clears
+/// `margin ×` that row's threshold. With the zero-FP noise bound
+/// `noise ≤ T` and margin > 2, detection of gated trials is a theorem.
+fn multi_fault_above(
+    faults: &[FaultSpec],
+    acc: &Matrix,
+    work: Precision,
+    thr: &[f64],
+    margin: f64,
+) -> bool {
+    let mut per_row: Vec<(usize, f64)> = Vec::new();
+    for f in faults {
+        let (row, col) = match f.site {
+            FaultSite::Output { row, col } => (row, col),
+            _ => continue,
+        };
+        let old = acc.get(row, col);
+        let (new, _) = BitFlip::new(f.bit, work).apply(old);
+        let delta = new - old;
+        match per_row.iter_mut().find(|(r, _)| *r == row) {
+            Some((_, s)) => *s += delta,
+            None => per_row.push((row, delta)),
+        }
+    }
+    per_row.iter().any(|&(row, s)| !s.is_finite() || s.abs() > margin * thr[row])
 }
 
 /// Execute a campaign grid with `workers` coordinator worker threads per
@@ -420,7 +561,7 @@ pub fn run_sharded(cfg: &GridConfig, workers: usize, shards: usize) -> CampaignO
                 .map(|f| PreparedGemmRequest {
                     a: set.a.clone(),
                     weights: Arc::clone(&set.handle),
-                    inject: Some(*f),
+                    inject: Some(InjectSpec::single(*f)),
                 })
                 .collect();
             let pending = coord.submit_batch_prepared(reqs);
@@ -432,7 +573,7 @@ pub fn run_sharded(cfg: &GridConfig, workers: usize, shards: usize) -> CampaignO
                         .map(|f| PreparedGemmRequest {
                             a: set.a.clone(),
                             weights: Arc::clone(sh),
-                            inject: Some(*f),
+                            inject: Some(InjectSpec::single(*f)),
                         })
                         .collect();
                     Some(sc.submit_batch_prepared(sreqs))
@@ -526,11 +667,173 @@ pub fn run_sharded(cfg: &GridConfig, workers: usize, shards: usize) -> CampaignO
         }
     }
 
+    // ---- Multi-fault axis: simultaneous flips × burst pattern ×
+    // encoding mode, compared over identical operands and fault plans.
+    // One coordinator per (model, encoding): prepared weights carry
+    // encoding-specific state (A-side column statistics for 2D modes),
+    // and the grid-vs-baseline gate needs each geometry to see the same
+    // trials through its own policy.
+    let multi_specs = plan_multi_fault(cfg);
+    let mut multi_results: Vec<Option<MultiCellResult>> =
+        multi_specs.iter().map(|_| None).collect();
+    let mut multi_clean_rows = 0usize;
+    let mut multi_fp = 0usize;
+
+    let mut mgroups: Vec<((AccumModel, EncodingMode), Vec<usize>)> = Vec::new();
+    for (i, c) in multi_specs.iter().enumerate() {
+        let key = (c.model(), c.encoding);
+        match mgroups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, v)) => v.push(i),
+            None => mgroups.push((key, vec![i])),
+        }
+    }
+
+    for ((model, encoding), idxs) in mgroups {
+        let policy = VerifyPolicy {
+            encoding,
+            localize_tol: cfg.localize_tol,
+            ..VerifyPolicy::default()
+        };
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: workers.max(1),
+            queue_depth: 256,
+            model,
+            policy,
+            shards: shards.max(1),
+            ..Default::default()
+        });
+        let engine = GemmEngine::new(model);
+
+        let mut operands: Vec<MultiOperandSet> = Vec::new();
+        let mut batches: Vec<PendingMultiCell> = Vec::new();
+        for &ci in &idxs {
+            let cell = &multi_specs[ci];
+            let stream = cell.operand_stream();
+            let oi = match operands.iter().position(|o| o.stream == stream) {
+                Some(oi) => oi,
+                None => {
+                    let (m, k, n) = cell.shape;
+                    let mut rng = Xoshiro256pp::from_stream(cfg.seed ^ OPERAND_TAG, stream);
+                    let a = Matrix::sample_in(m, k, &cell.dist, model.input, &mut rng);
+                    let b = Matrix::sample_in(k, n, &cell.dist, model.input, &mut rng);
+                    let handle = coord.register_weights(operands.len() as u32, &b);
+                    let blk = &handle.blocks()[0];
+                    let thr = vab.thresholds_prepared(&a, &blk.stats, handle.ctx());
+
+                    // The clean work-grid accumulator the online
+                    // output-site flips strike. Schedule preservation
+                    // makes the data elements bitwise-identical to the
+                    // encoded multiply at every checksum geometry, so
+                    // one unencoded product prices every planned flip.
+                    let acc = engine.matmul_mixed(&a, &b, 0).acc;
+
+                    // The set's clean FPR sweep under this encoding.
+                    let clean = coord
+                        .call_prepared(PreparedGemmRequest {
+                            a: a.clone(),
+                            weights: Arc::clone(&handle),
+                            inject: None,
+                        })
+                        .result
+                        .expect("multi-fault clean multiply failed");
+                    multi_clean_rows += clean.report.rows_checked;
+                    multi_fp += clean.report.detections.len();
+
+                    operands.push(MultiOperandSet {
+                        stream,
+                        a,
+                        handle,
+                        acc,
+                        thr,
+                        clean_rows: clean.report.rows_checked,
+                        false_positives: clean.report.detections.len(),
+                    });
+                    operands.len() - 1
+                }
+            };
+            let set = &operands[oi];
+
+            let fault_plan = cell.fault_plan(cfg.seed);
+            let reqs: Vec<PreparedGemmRequest> = fault_plan
+                .iter()
+                .map(|fs| PreparedGemmRequest {
+                    a: set.a.clone(),
+                    weights: Arc::clone(&set.handle),
+                    inject: Some(InjectSpec::multi(fs.clone())),
+                })
+                .collect();
+            let pending = coord.submit_batch_prepared(reqs);
+            coord.metrics().campaign_trials.add(fault_plan.len() as u64);
+            batches.push(PendingMultiCell { ci, oi, fault_plan, pending });
+        }
+
+        // Collection pass, in planning order.
+        for pc in batches {
+            let cell = &multi_specs[pc.ci];
+            let set = &operands[pc.oi];
+            let mut res = MultiCellResult {
+                spec: cell.clone(),
+                bit: cell.bit(),
+                trials: 0,
+                detected: 0,
+                above: 0,
+                detected_above: 0,
+                corrected_no_recompute: 0,
+                rows_corrected_grid: 0,
+                inconsistent_localizations: 0,
+                rows_recomputed: 0,
+                clean_rows: set.clean_rows,
+                false_positives: set.false_positives,
+            };
+            for (faults, (_, rx)) in pc.fault_plan.iter().zip(pc.pending) {
+                let resp = rx.recv().expect("multi-fault campaign worker died");
+                let out = resp.result.as_ref().expect("multi-fault multiply failed");
+                let detected = out.report.verdict != Verdict::Clean;
+                let above =
+                    multi_fault_above(faults, &set.acc, model.work, &set.thr, cfg.margin);
+                res.trials += 1;
+                if detected {
+                    res.detected += 1;
+                }
+                if above {
+                    res.above += 1;
+                    if detected {
+                        res.detected_above += 1;
+                    }
+                }
+                let all_corrected = matches!(
+                    out.report.verdict,
+                    Verdict::Corrected | Verdict::CorrectedGrid
+                );
+                if all_corrected && out.report.rows_recomputed == 0 {
+                    res.corrected_no_recompute += 1;
+                }
+                res.rows_corrected_grid += out.report.rows_corrected_grid;
+                res.inconsistent_localizations += out.report.inconsistent_localizations;
+                res.rows_recomputed += out.report.rows_recomputed;
+            }
+            multi_results[pc.ci] = Some(res);
+            coord.metrics().campaign_cells.inc();
+        }
+        group_metrics.push(format!(
+            "{} multi/{}: {}",
+            model.label(),
+            encoding.name(),
+            coord.metrics().summary()
+        ));
+        coord.shutdown();
+    }
+
     let cells_out: Vec<CellResult> =
         results.into_iter().map(|r| r.expect("cell never executed")).collect();
+    let multi_out: Vec<MultiCellResult> =
+        multi_results.into_iter().map(|r| r.expect("multi-fault cell never executed")).collect();
     CampaignOutcome {
         config: cfg.clone(),
         cells: cells_out,
+        multi_cells: multi_out,
+        multi_clean_rows,
+        multi_false_positives: multi_fp,
         clean_rows: clean_rows_total,
         false_positives: false_positives_total,
         severity_false_positives: severity_fp_total,

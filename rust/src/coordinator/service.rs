@@ -48,13 +48,60 @@ pub type WeightId = u32;
 pub type WeightHandle = Arc<PreparedWeights>;
 
 /// Optional fault injection attached to a request (campaigns and demos):
-/// a located fault + bit, applied to the first K-block's encoded partial
-/// before verification (a single-event upset strikes once). Output and
-/// checksum flips address the verified grid (FP32 online, the output
-/// precision offline); operand flips address the operand storage grid.
-/// See [`crate::inject::FaultSpec`] — `InjectSpec::output(row, col, bit)`
-/// is the classic stored-output-element configuration.
-pub type InjectSpec = FaultSpec;
+/// one or more located faults + bits, applied in order to the first
+/// K-block's encoded partial before verification. A single-entry spec is
+/// the classic single-event upset; multi-entry specs model multi-bit
+/// upsets and row/column bursts for the 2D-encoding campaign axis.
+/// Output and checksum flips address the verified grid (FP32 online, the
+/// output precision offline); operand flips address the operand storage
+/// grid. See [`crate::inject::FaultSpec`] —
+/// `InjectSpec::output(row, col, bit)` is the classic
+/// stored-output-element configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InjectSpec {
+    /// The faults to apply, in order, to the first K-block's partial.
+    pub faults: Vec<FaultSpec>,
+}
+
+impl InjectSpec {
+    /// A single-fault spec (the classic single-event upset).
+    pub fn single(fault: FaultSpec) -> InjectSpec {
+        InjectSpec { faults: vec![fault] }
+    }
+
+    /// A multi-fault spec: every fault strikes the same partial before
+    /// verification runs (simultaneous upsets / burst patterns).
+    pub fn multi(faults: Vec<FaultSpec>) -> InjectSpec {
+        InjectSpec { faults }
+    }
+
+    /// Single stored-output-element flip at (`row`, `col`).
+    pub fn output(row: usize, col: usize, bit: u32) -> InjectSpec {
+        Self::single(FaultSpec::output(row, col, bit))
+    }
+
+    /// Single transient A-register flip feeding output (`row`, `col`)
+    /// through K index `k`.
+    pub fn operand_a(row: usize, k: usize, col: usize, bit: u32) -> InjectSpec {
+        Self::single(FaultSpec::operand_a(row, k, col, bit))
+    }
+
+    /// Single persistent stored-B-element flip at (`k`, `col`).
+    pub fn operand_b(k: usize, col: usize, bit: u32) -> InjectSpec {
+        Self::single(FaultSpec::operand_b(k, col, bit))
+    }
+
+    /// Single checksum-row flip: the `c^{r1}` entry of output row `row`.
+    pub fn checksum(row: usize, bit: u32) -> InjectSpec {
+        Self::single(FaultSpec::checksum(row, bit))
+    }
+}
+
+impl From<FaultSpec> for InjectSpec {
+    fn from(fault: FaultSpec) -> InjectSpec {
+        InjectSpec::single(fault)
+    }
+}
 
 /// A protected-multiply request against a registered weight id.
 #[derive(Debug)]
@@ -849,26 +896,32 @@ fn process(ctx: &WorkerCtx, job: Job, stolen: bool) {
                 None => ctx.ft.multiply_prepared(&a, &w, None),
                 Some(spec) => {
                     let grid = if ctx.policy.online { ctx.model.work } else { ctx.model.out };
-                    // A single-event upset strikes once: inject into the
-                    // first K-block's partial only, even when the weights
-                    // are prepared blockwise. The realized flip is
-                    // recorded through a Cell because the injection hook
-                    // is a shared (&dyn Fn) closure.
+                    // Upsets strike the first K-block's partial only, even
+                    // when the weights are prepared blockwise; a spec may
+                    // carry several simultaneous faults (burst patterns).
+                    // The first realized flip is recorded through a Cell
+                    // because the injection hook is a shared (&dyn Fn)
+                    // closure.
                     let outcome = std::cell::Cell::new(None);
                     let f = |bi: usize, out: &mut GemmOutput| {
                         if bi != 0 {
                             return;
                         }
                         if let Some(blk) = w.blocks().first() {
-                            outcome.set(Some(apply_fault(
-                                &spec,
-                                ctx.policy.online,
-                                ctx.model.input,
-                                grid,
-                                &a,
-                                &blk.stats.b,
-                                out,
-                            )));
+                            for fault in &spec.faults {
+                                let o = apply_fault(
+                                    fault,
+                                    ctx.policy.online,
+                                    ctx.model.input,
+                                    grid,
+                                    &a,
+                                    &blk.stats.b,
+                                    out,
+                                );
+                                if outcome.get().is_none() {
+                                    outcome.set(Some(o));
+                                }
+                            }
                         }
                     };
                     let r = ctx.ft.multiply_prepared(&a, &w, Some(&f));
@@ -880,9 +933,17 @@ fn process(ctx: &WorkerCtx, job: Job, stolen: bool) {
         }
     };
     if let Ok(out) = &result {
+        // Grid-direction telemetry is verdict-independent: partial grid
+        // corrections can precede a recompute, and inconsistent
+        // localizations occur on any multi-fault row. Both are zero on
+        // clean runs.
+        ctx.metrics.faults_corrected_grid.add(out.report.rows_corrected_grid as u64);
+        ctx.metrics
+            .inconsistent_localizations
+            .add(out.report.inconsistent_localizations as u64);
         match out.report.verdict {
             Verdict::Clean => {}
-            Verdict::Corrected => {
+            Verdict::Corrected | Verdict::CorrectedGrid => {
                 ctx.metrics.faults_detected.add(out.report.detections.len() as u64);
                 ctx.metrics
                     .faults_corrected

@@ -316,6 +316,73 @@ impl GemmEngine {
         GemmOutput { c, acc }
     }
 
+    /// [`GemmEngine::matmul_mixed`] for 2D-encoded operands: the last
+    /// `a_wide_rows` rows of A (the A-side column-checksum rows) are kept
+    /// in the *work* precision instead of being quantized to the input
+    /// grid, exactly as the wide B columns are. Every data row of A and
+    /// every column of B follows the same quantization and reduction
+    /// schedule as [`GemmEngine::matmul_mixed`], so the leading
+    /// `rows − a_wide_rows` output rows are bitwise-identical to the
+    /// row-only encoding's product — the checksum rows ride along without
+    /// touching any data element's rounding schedule.
+    pub fn matmul_mixed_2d(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        b_wide_cols: usize,
+        a_wide_rows: usize,
+    ) -> GemmOutput {
+        assert_eq!(a.cols(), b.rows(), "GEMM shape mismatch {}x{} · {}x{}",
+            a.rows(), a.cols(), b.rows(), b.cols());
+        assert!(b_wide_cols <= b.cols());
+        assert!(a_wide_rows <= a.rows());
+        let m = self.model;
+        let (rows, k, cols) = (a.rows(), a.cols(), b.cols());
+
+        // Operand quantization mirrors matmul_mixed: data elements go to
+        // the input grid, checksum rows/columns to the work grid. A is
+        // row-major, so the wide A rows are one trailing slice.
+        let aq = if a_wide_rows == 0 {
+            quantize_data(a.data(), m.input)
+        } else {
+            let split = (rows - a_wide_rows) * k;
+            let mut out = Vec::with_capacity(a.data().len());
+            out.extend(a.data()[..split].iter().map(|&x| m.input.quantize(x)));
+            out.extend(a.data()[split..].iter().map(|&x| m.work.quantize(x)));
+            out
+        };
+        let bq = if b_wide_cols == 0 {
+            quantize_data(b.data(), m.input)
+        } else {
+            let split = cols - b_wide_cols;
+            let mut out = Vec::with_capacity(b.data().len());
+            for r in 0..k {
+                let row = b.row(r);
+                out.extend(row[..split].iter().map(|&x| m.input.quantize(x)));
+                out.extend(row[split..].iter().map(|&x| m.work.quantize(x)));
+            }
+            out
+        };
+
+        let acc_data: Vec<f64> = match m.work {
+            Precision::F64 => tiled::gemm_f64(&aq, &bq, rows, k, cols, m.strategy, &self.par),
+            Precision::F32 => {
+                let a32 = kernels::to_f32_vec(&aq);
+                let b32 = kernels::to_f32_vec(&bq);
+                let c = tiled::gemm_f32(&a32, &b32, rows, k, cols, m.strategy, &self.par);
+                c.into_iter().map(|x| x as f64).collect()
+            }
+            other => tiled::gemm_generic(&aq, &bq, rows, k, cols, other, m.strategy, &self.par),
+        };
+        let acc = Matrix::from_vec(rows, cols, acc_data);
+        let c = if m.quantizes_output() || m.out != m.work {
+            acc.quantized(m.out)
+        } else {
+            acc.clone()
+        };
+        GemmOutput { c, acc }
+    }
+
     /// [`GemmEngine::matmul_mixed`] with the checksum verification fused
     /// into the packed microkernel epilogue: as each output row's
     /// accumulators leave the registers (final K-block, final column
@@ -731,6 +798,42 @@ mod tests {
                     assert_eq!(rc.d2.to_bits(), sw.d2.to_bits(), "{model:?} row {i}");
                     assert_eq!(rc.flagged, sw.flagged);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_mixed_2d_preserves_data_row_schedules() {
+        // Appending wide A checksum rows must leave every data row's
+        // product bitwise-identical to the row-only call, and the
+        // zero-wide call must be exactly matmul_mixed.
+        let (a, b) = pair(9, 24, 10, 12);
+        let mut ext = a.data().to_vec();
+        for w in 0..2u32 {
+            for j in 0..a.cols() {
+                let mut s = 0.0;
+                for i in 0..a.rows() {
+                    s += a.get(i, j) * if w == 0 { 1.0 } else { (i + 1) as f64 };
+                }
+                ext.push(s);
+            }
+        }
+        let a2 = Matrix::from_vec(a.rows() + 2, a.cols(), ext);
+        for model in [
+            AccumModel::cpu(Precision::F64),
+            AccumModel::gpu_highprec(Precision::F32),
+            AccumModel::wide(Precision::Bf16),
+            AccumModel::cpu(Precision::Bf16), // generic work-precision path
+        ] {
+            let eng = GemmEngine::new(model);
+            let base = eng.matmul_mixed(&a, &b, 0);
+            let zero = eng.matmul_mixed_2d(&a, &b, 0, 0);
+            assert_eq!(zero.acc.data(), base.acc.data(), "{model:?} zero-wide acc");
+            assert_eq!(zero.c.data(), base.c.data(), "{model:?} zero-wide c");
+            let got = eng.matmul_mixed_2d(&a2, &b, 0, 2);
+            for i in 0..a.rows() {
+                assert_eq!(got.acc.row(i), base.acc.row(i), "{model:?} acc row {i}");
+                assert_eq!(got.c.row(i), base.c.row(i), "{model:?} c row {i}");
             }
         }
     }

@@ -129,8 +129,8 @@ pub mod abft {
 /// Convenient re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::abft::{
-        BlockwiseFtGemm, BlockwiseOutput, ChecksumEncoding, FtGemm, FtGemmOutput, PreparedBlock,
-        PreparedWeights, Verdict, VerifyPolicy, VerifyReport,
+        BlockwiseFtGemm, BlockwiseOutput, ChecksumEncoding, EncodingMode, FtGemm, FtGemmOutput,
+        PreparedBlock, PreparedWeights, Verdict, VerifyPolicy, VerifyReport,
     };
     pub use crate::calibrate::{CalibrationProtocol, EmaxModel, EmaxTable, Platform};
     pub use crate::campaign::{BitClass, CellSpec, GridConfig, VerifyPoint};

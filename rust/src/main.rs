@@ -4,10 +4,14 @@
 //! ```text
 //! vabft calibrate  [--platform cpu|gpu|npu] [--precision fp32] [--trials N] [--online]
 //! vabft campaign   [--quick|--full|--smoke] [--seed S] [--workers W] [--shards N]
-//!                  [--json FILE]
+//!                  [--json FILE] [--localize-tol T]
 //!                  # deterministic campaign grid: precision x strategy x dist x
-//!                  # site x bit x verify point; writes BENCH_campaign.json and
-//!                  # exits non-zero if a detection-quality gate fails
+//!                  # site x bit x verify point, plus the multi-fault axis
+//!                  # (simultaneous flips x burst pattern x encoding mode);
+//!                  # writes BENCH_campaign.json and exits non-zero if a
+//!                  # detection-quality gate fails or grid-mode corrected-
+//!                  # without-recompute coverage does not beat the single-
+//!                  # checksum baseline
 //! vabft serve-replay
 //!                  [--family llama-7b|gpt2|vit-b32] [--scale S] [--layers L]
 //!                  [--batch M] [--passes P] [--concurrency C] [--seed S]
@@ -38,8 +42,11 @@
 //! vabft gemm --prepared
 //!                  [--m 8 --k 512 --n 512] [--precision bf16] [--reps R]
 //!                  [--block-k B] [--offline] [--threads T]
+//!                  [--encoding row|rowcol|grid] [--localize-tol T]
 //!                  # weight-stationary FT-GEMM: cold encode-per-call vs
-//!                  # PreparedWeights warm path (bitwise-checked)
+//!                  # PreparedWeights warm path (bitwise-checked);
+//!                  # --encoding adds A-side column checksums (rowcol) or
+//!                  # grid peeling decode (grid)
 //! vabft artifacts  [--dir artifacts]     # list AOT artifacts
 //! vabft info                             # e_max table, subcommands
 //! ```
@@ -168,13 +175,25 @@ fn cmd_campaign(args: &Args) {
     use vabft::campaign::{self, GridConfig};
 
     let seed = args.opt_or("seed", 0xCA4Au64);
-    let cfg = if args.flag("full") {
+    let mut cfg = if args.flag("full") {
         GridConfig::full(seed)
     } else if args.flag("smoke") {
         GridConfig::smoke(seed)
     } else {
         GridConfig::quick(seed)
     };
+    // Localization acceptance tolerance for the multi-fault axis (see
+    // `VerifyPolicy::localize_tol` for the derivation of the 0.45
+    // default).
+    cfg.localize_tol = args.opt_or("localize-tol", cfg.localize_tol);
+    if !(0.0 < cfg.localize_tol && cfg.localize_tol < 0.5) {
+        eprintln!(
+            "error: --localize-tol {} out of range (0, 0.5): at 0.5 two adjacent \
+             columns become indistinguishable",
+            cfg.localize_tol
+        );
+        std::process::exit(2);
+    }
     let workers = args.opt_or("workers", 4usize);
     let shards = args.opt_or("shards", 1usize);
     println!(
@@ -248,6 +267,32 @@ fn cmd_campaign(args: &Args) {
         "severity gate OK: per-cell detection identical under waiving \
          ({} trials waived sub-noise residuals, 0 downgrades, 0 false positives)",
         outcome.total_severity_waived(),
+    );
+    if !outcome.multi_fault_gates_hold() {
+        eprintln!(
+            "campaign gate FAILED: multi-fault axis broke a detection gate \
+             ({} false positives over {} clean rows; recall must stay 1.0)",
+            outcome.multi_false_positives, outcome.multi_clean_rows,
+        );
+        std::process::exit(1);
+    }
+    if !outcome.grid_exceeds_baseline() {
+        eprintln!(
+            "campaign gate FAILED: grid-mode corrected-without-recompute coverage \
+             ({} grid vs {} row-only over {} multi-fault trials) does not strictly \
+             exceed the single-checksum baseline",
+            outcome.multi_corrected_no_recompute(vabft::abft::EncodingMode::Grid),
+            outcome.multi_corrected_no_recompute(vabft::abft::EncodingMode::RowOnly),
+            outcome.total_multi_trials(),
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "multi-fault gate OK: {} trials, grid corrected-without-recompute {} > \
+         row-only baseline {} (0 false positives)",
+        outcome.total_multi_trials(),
+        outcome.multi_corrected_no_recompute(vabft::abft::EncodingMode::Grid),
+        outcome.multi_corrected_no_recompute(vabft::abft::EncodingMode::RowOnly),
     );
 }
 
@@ -806,7 +851,7 @@ fn cmd_gemm(args: &Args) {
 /// verdicts — the prepared path is a pure amortization, never a numerical
 /// change.
 fn cmd_gemm_prepared(args: &Args) {
-    use vabft::abft::{BlockwiseFtGemm, VerifyPolicy};
+    use vabft::abft::{BlockwiseFtGemm, EncodingMode, VerifyPolicy};
     use vabft::bench_harness::time_once;
     use vabft::gemm::{AccumModel, GemmEngine, ParallelismConfig};
     use vabft::matrix::Matrix;
@@ -819,20 +864,41 @@ fn cmd_gemm_prepared(args: &Args) {
     let block_k = args.opt_or("block-k", 0usize); // 0 = monolithic
     let precision = parse_precision(args, Precision::Bf16);
     let online = !args.flag("offline");
+    let encoding = match args.opt("encoding") {
+        None => EncodingMode::RowOnly,
+        Some(s) => EncodingMode::parse(s).unwrap_or_else(|| {
+            eprintln!("unknown encoding '{s}' (row|rowcol|grid)");
+            std::process::exit(2);
+        }),
+    };
     let model = if precision == Precision::F32 || precision == Precision::F64 {
         AccumModel::gpu_highprec(precision)
     } else {
         AccumModel::wide(precision)
     };
-    let policy = if online { VerifyPolicy::default() } else { VerifyPolicy::offline() };
+    let mut policy = if online { VerifyPolicy::default() } else { VerifyPolicy::offline() };
+    policy.encoding = encoding;
+    // Localization acceptance tolerance (see `VerifyPolicy::localize_tol`
+    // for the derivation of the 0.45 default).
+    policy.localize_tol = args.opt_or("localize-tol", policy.localize_tol);
+    if !(0.0 < policy.localize_tol && policy.localize_tol < 0.5) {
+        eprintln!(
+            "error: --localize-tol {} out of range (0, 0.5): at 0.5 two adjacent \
+             columns become indistinguishable",
+            policy.localize_tol
+        );
+        std::process::exit(2);
+    }
     let par = ParallelismConfig::from_args(args);
     // Cold and warm legs must share one accumulation grouping to compare
     // bitwise; block_k = K is exactly the monolithic parameterization.
     let bk = if block_k == 0 { k.max(1) } else { block_k };
     let bw = BlockwiseFtGemm::new(GemmEngine::with_parallelism(model, par), bk, policy);
     println!(
-        "weight-stationary FT-GEMM {m}x{k}x{n}, model {}, online={online}, block_k={}",
+        "weight-stationary FT-GEMM {m}x{k}x{n}, model {}, online={online}, encoding={}, \
+         block_k={}",
         model.label(),
+        encoding.name(),
         if block_k == 0 { "K (monolithic)".to_string() } else { block_k.to_string() }
     );
 

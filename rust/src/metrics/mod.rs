@@ -286,6 +286,14 @@ pub struct ServiceMetrics {
     /// residual was provably below output-quantization noise, so the
     /// recompute escalation was skipped.
     pub faults_waived: Counter,
+    /// Rows repaired via the column/grid checksum direction — multi-fault
+    /// patterns corrected without a recompute (two-dimensional encoding
+    /// modes only).
+    pub faults_corrected_grid: Counter,
+    /// Row localizations that came back `Inconsistent` (multi-fault,
+    /// checksum-column upset, or sub-noise fault) — previously folded
+    /// silently into the recompute path.
+    pub inconsistent_localizations: Counter,
     /// Submission-to-completion latency distribution.
     pub latency: Histogram,
     /// Fine-grained tail-latency histogram (p50/p99/p999) over the same
@@ -319,6 +327,10 @@ pub struct MetricsSnapshot {
     pub jobs_shed: u64,
     /// Detections waived by the severity policy.
     pub faults_waived: u64,
+    /// Rows repaired via the column/grid checksum direction.
+    pub faults_corrected_grid: u64,
+    /// Row localizations that came back `Inconsistent`.
+    pub inconsistent_localizations: u64,
     /// Latencies recorded.
     pub latency_count: u64,
     /// Tail-histogram samples recorded.
@@ -346,6 +358,8 @@ impl ServiceMetrics {
             campaign_trials: self.campaign_trials.get(),
             jobs_shed: self.jobs_shed.get(),
             faults_waived: self.faults_waived.get(),
+            faults_corrected_grid: self.faults_corrected_grid.get(),
+            inconsistent_localizations: self.inconsistent_localizations.get(),
             latency_count: self.latency.count(),
             tail_count: self.tail.count(),
         }
@@ -388,6 +402,7 @@ impl ServiceMetrics {
         let tail = self.tail.snapshot();
         format!(
             "jobs={}/{} shed={} batches={} detected={} corrected={} waived={} \
+             grid_corrected={} inconsistent={} \
              recomputed_rows={} stolen={} campaign_cells={} campaign_trials={} \
              mean={:?} p50={:?} p99={:?} p999={:?}",
             self.jobs_completed.get(),
@@ -397,6 +412,8 @@ impl ServiceMetrics {
             self.faults_detected.get(),
             self.faults_corrected.get(),
             self.faults_waived.get(),
+            self.faults_corrected_grid.get(),
+            self.inconsistent_localizations.get(),
             self.rows_recomputed.get(),
             self.jobs_stolen.get(),
             self.campaign_cells.get(),

@@ -26,7 +26,7 @@ pub use vabft::{BSummary, VabftThreshold};
 
 use crate::calibrate::EmaxModel;
 use crate::gemm::AccumModel;
-use crate::matrix::Matrix;
+use crate::matrix::{Matrix, RowStats};
 
 /// Everything a threshold algorithm may consult about the verification
 /// setting. The decisive field is `online`: fused-kernel verification reads
@@ -107,6 +107,32 @@ pub trait Threshold: Send + Sync {
         self.thresholds(a, &prepared.b, ctx)
     }
 
+    /// Per-*column* thresholds for verifying the A-side column-checksum
+    /// direction of C = A·B (one threshold per column of C, bounding
+    /// |column checksum − column sum| on fault-free data).
+    ///
+    /// Derived by transpose symmetry: Cᵀ = Bᵀ·Aᵀ, so column j of C is
+    /// row j of a GEMM whose "A" is Bᵀ and whose "B" is Aᵀ — the row
+    /// machinery applies verbatim with the operands swapped and
+    /// transposed. The e_max reduction length becomes max(M, K) (column
+    /// sums run over the M data rows).
+    fn thresholds_columns(&self, a: &Matrix, b: &Matrix, ctx: &ThresholdContext) -> Vec<f64> {
+        self.thresholds(&b.transpose(), &a.transpose(), ctx)
+    }
+
+    /// Serving fast path for the column direction, against per-weight
+    /// state precomputed once (see [`PreparedColStats`]). The default
+    /// reuses the cached Bᵀ; V-ABFT overrides it to use only the cached
+    /// per-column statistics.
+    fn thresholds_columns_prepared(
+        &self,
+        a: &Matrix,
+        prepared: &PreparedColStats,
+        ctx: &ThresholdContext,
+    ) -> Vec<f64> {
+        self.thresholds(&prepared.bt, &a.transpose(), ctx)
+    }
+
     /// Asymptotic cost per row of A, for the complexity comparison
     /// (§4.4): V-ABFT is O(K) (one max/min/mean pass), A-ABFT O(pK).
     fn complexity(&self) -> &'static str {
@@ -132,6 +158,35 @@ impl PreparedBStats {
     /// One pass over B: clone the data and build the V-ABFT summary.
     pub fn of(b: &Matrix) -> PreparedBStats {
         PreparedBStats { b: b.clone(), bsum: BSummary::of(b) }
+    }
+}
+
+/// Per-weight state for the *column*-checksum direction, the transpose
+/// mirror of [`PreparedBStats`]: column-direction thresholds need the
+/// per-column statistics of B (the "row of A" role under Cᵀ = Bᵀ·Aᵀ),
+/// which depend only on the weight matrix and are cached once per
+/// K-block alongside the row-direction state.
+#[derive(Debug, Clone)]
+pub struct PreparedColStats {
+    /// Bᵀ — the fallback operand for algorithms without a prepared
+    /// column fast path (mirrors [`PreparedBStats::b`]).
+    pub bt: Matrix,
+    /// Per-column statistics of B (= row stats of `bt`), in column
+    /// order — the O(K) inputs of Algorithm 1 in the column direction.
+    pub cols: Vec<RowStats>,
+}
+
+impl PreparedColStats {
+    /// One transpose + one stats pass over B's columns.
+    pub fn of(b: &Matrix) -> PreparedColStats {
+        let bt = b.transpose();
+        let cols = (0..bt.rows()).map(|j| bt.row_stats_fast(j)).collect();
+        PreparedColStats { bt, cols }
+    }
+
+    /// Rows of B (the dot-product reduction length, for e_max).
+    pub fn k(&self) -> usize {
+        self.bt.cols()
     }
 }
 

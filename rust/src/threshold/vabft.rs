@@ -38,6 +38,14 @@ pub struct BSummary {
 }
 
 impl BSummary {
+    /// Summary over `m`'s *columns* — [`BSummary::of`] applied to the
+    /// transpose. This is the "B role" of the column-checksum direction
+    /// (Cᵀ = Bᵀ·Aᵀ puts Aᵀ in the B position), computed the identical
+    /// way so prepared and one-shot column thresholds agree bitwise.
+    pub fn of_columns(m: &Matrix) -> BSummary {
+        Self::of(&m.transpose())
+    }
+
     /// One pass over B's rows.
     pub fn of(b: &Matrix) -> BSummary {
         let (k, n) = (b.rows(), b.cols());
@@ -147,6 +155,24 @@ impl Threshold for VabftThreshold {
             .collect()
     }
 
+    fn thresholds_columns_prepared(
+        &self,
+        a: &Matrix,
+        prepared: &super::PreparedColStats,
+        ctx: &ThresholdContext,
+    ) -> Vec<f64> {
+        // Column direction via Cᵀ = Bᵀ·Aᵀ: B's cached per-column stats play
+        // the "rows of A" role and A's column summary plays the "B" role.
+        let asum = BSummary::of_columns(a);
+        let red_len = a.rows().max(prepared.k());
+        let emax = self.effective_emax(ctx, red_len);
+        prepared
+            .cols
+            .iter()
+            .map(|s| self.row_threshold(s, &asum, emax))
+            .collect()
+    }
+
     fn complexity(&self) -> &'static str {
         "O(n) — single max/min/mean pass"
     }
@@ -226,6 +252,27 @@ mod tests {
                 one_shot[i]
             );
         }
+    }
+
+    #[test]
+    fn prepared_column_path_is_bitwise_the_transpose_path() {
+        // The VabftThreshold override of `thresholds_columns_prepared` must
+        // agree bitwise with the trait default (one-shot transpose), which
+        // itself equals `thresholds_columns`: all three walk the same
+        // `row_stats_fast` passes in the same order.
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let d = Distribution::normal_1_1();
+        let a = Matrix::sample(7, 24, &d, &mut rng);
+        let b = Matrix::sample(24, 40, &d, &mut rng);
+        let algo = VabftThreshold::default();
+        let ctx = ctx_fp32();
+        let prepared = crate::threshold::PreparedColStats::of(&b);
+        let via_prepared = algo.thresholds_columns_prepared(&a, &prepared, &ctx);
+        let via_default = algo.thresholds(&prepared.bt, &a.transpose(), &ctx);
+        let via_columns = algo.thresholds_columns(&a, &b, &ctx);
+        assert_eq!(via_prepared.len(), b.cols());
+        assert_eq!(via_prepared, via_default);
+        assert_eq!(via_prepared, via_columns);
     }
 
     #[test]

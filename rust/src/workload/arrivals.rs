@@ -371,7 +371,7 @@ pub fn run_open_loop(cfg: &OpenLoopConfig, ccfg: CoordinatorConfig) -> OpenLoopR
         let prepared = PreparedGemmRequest {
             a: acts[req.entry].clone(),
             weights: Arc::clone(&handles[e.weight]),
-            inject: req.inject,
+            inject: req.inject.clone(),
         };
         match coord.try_submit_prepared(prepared) {
             Admission::Accepted(id, rx) => admitted.push((id, req.entry, rx)),

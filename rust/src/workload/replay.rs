@@ -230,6 +230,7 @@ pub(crate) fn fold_response(h: u64, resp: &GemmResponse) -> u64 {
                 Verdict::Recomputed => 2,
                 Verdict::Flagged => 3,
                 Verdict::Waived => 4,
+                Verdict::CorrectedGrid => 5,
             };
             h = fnv1a(h, tag.to_le_bytes());
             for &v in out.c.data() {

@@ -11,7 +11,7 @@
 //! pipeline — not the test — regressed.
 
 use vabft::bench_harness::{validate_schema, CAMPAIGN_SCHEMA};
-use vabft::campaign::{self, plan, BitClass, GridConfig, VerifyPoint};
+use vabft::campaign::{self, plan, BitClass, BurstPattern, GridConfig, VerifyPoint};
 use vabft::prelude::*;
 
 const SMOKE_SEED: u64 = 0xD5EED;
@@ -103,6 +103,45 @@ fn smoke_cell_pins_expected_detections() {
     }
 }
 
+/// The multi-fault axis of the smoke grid — the cells `campaign --smoke`
+/// gates on in CI. Row bursts (simultaneous flips in one output row)
+/// defeat row-direction localization: the D2/D1 ratio lands between
+/// column weights, so the single-checksum baseline must recompute. The
+/// grid encoding sees one fault per column in the same trial and
+/// corrects in place, which is exactly the coverage the
+/// `grid_exceeds_baseline` gate quantifies. The detection gates (recall
+/// 1.0 over above-margin trials, zero false positives on the axis'
+/// clean sweeps) must hold for *every* encoding — A-side checksums add
+/// correction power, never detection drift.
+#[test]
+fn smoke_multi_fault_axis_grid_corrects_where_baseline_recomputes() {
+    let cfg = GridConfig::smoke(SMOKE_SEED);
+    let planned = campaign::plan_multi_fault(&cfg);
+    assert!(!planned.is_empty(), "smoke grid lost its multi-fault cells");
+    assert!(planned.iter().any(|c| c.pattern == BurstPattern::RowBurst));
+    assert!(planned.iter().any(|c| c.encoding == EncodingMode::RowOnly));
+    assert!(planned.iter().any(|c| c.encoding == EncodingMode::Grid));
+
+    let outcome = campaign::run(&cfg, 2);
+    assert_eq!(outcome.multi_cells.len(), planned.len());
+    assert!(
+        outcome.multi_fault_gates_hold(),
+        "multi-fault detection gates failed: {} false positives over {} clean rows",
+        outcome.multi_false_positives,
+        outcome.multi_clean_rows
+    );
+    assert!(
+        outcome.grid_exceeds_baseline(),
+        "grid corrected-without-recompute ({}) must strictly exceed the row-only \
+         baseline ({}) over {} trials",
+        outcome.multi_corrected_no_recompute(EncodingMode::Grid),
+        outcome.multi_corrected_no_recompute(EncodingMode::RowOnly),
+        outcome.total_multi_trials()
+    );
+    // Strict excess implies the grid actually corrected something.
+    assert!(outcome.multi_corrected_no_recompute(EncodingMode::Grid) > 0);
+}
+
 /// The full quick grid upholds the paper's headline claims: recall 1.0
 /// over the above-threshold population and zero false positives across
 /// BF16/FP16/FP32/FP64 — the same gate `vabft campaign --quick` enforces
@@ -144,4 +183,14 @@ fn quick_grid_gates_hold() {
     }) {
         assert_eq!(c.detected, c.trials, "exp-MSB misses in cell {}", c.spec.index);
     }
+    // The quick grid carries the multi-fault axis too, under the same
+    // gates the nightly campaign enforces.
+    assert!(!outcome.multi_cells.is_empty(), "quick grid lost its multi-fault axis");
+    assert!(outcome.multi_fault_gates_hold(), "quick multi-fault detection gates failed");
+    assert!(
+        outcome.grid_exceeds_baseline(),
+        "quick grid coverage gate: grid {} vs baseline {}",
+        outcome.multi_corrected_no_recompute(EncodingMode::Grid),
+        outcome.multi_corrected_no_recompute(EncodingMode::RowOnly)
+    );
 }

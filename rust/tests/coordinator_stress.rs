@@ -128,6 +128,69 @@ fn concurrent_batched_submitters_route_and_count_exactly() {
     c.shutdown();
 }
 
+/// `inconsistent_localizations` and `faults_corrected_grid` flow through
+/// the quiesced snapshot exactly like `jobs_shed` — one consistent cut,
+/// no torn reads. A checksum-entry flip is deterministic fuel: integer
+/// operands make every sum exact in the work grid, so D2 is exactly zero
+/// while D1 carries the flip — the ratio falls outside [1, N] and
+/// localization is inconsistent in every trial. The row-only policy
+/// burns a recompute; the grid policy's column code certifies the data
+/// intact (all column syndromes exactly zero) and repairs without
+/// recomputing.
+#[test]
+fn inconsistent_localization_counters_flow_through_snapshot() {
+    const REQS: usize = 6;
+    for (policy, expect) in [
+        (VerifyPolicy::default(), Verdict::Recomputed),
+        (VerifyPolicy::grid(), Verdict::CorrectedGrid),
+    ] {
+        let c = Coordinator::start(CoordinatorConfig {
+            workers: 4,
+            model: AccumModel::wide(Precision::Bf16),
+            policy,
+            ..Default::default()
+        });
+        let b = Matrix::from_fn(WEIGHT_K, WEIGHT_N, |i, j| ((i + 2 * j) % 3 + 1) as f64);
+        c.register_weight(9, &b);
+        let a = Matrix::from_fn(8, WEIGHT_K, |i, j| ((2 * i + j) % 3 + 1) as f64);
+        let clean = c
+            .call(GemmRequest { a: a.clone(), weight: 9, inject: None })
+            .result
+            .expect("clean run failed");
+        assert_eq!(clean.report.verdict, Verdict::Clean);
+        let reqs: Vec<GemmRequest> = (0..REQS)
+            .map(|i| GemmRequest {
+                a: a.clone(),
+                weight: 9,
+                inject: Some(InjectSpec::checksum(i % 8, 25)),
+            })
+            .collect();
+        for (id, rx) in c.submit_batch(reqs) {
+            let resp = rx.recv().expect("worker dropped reply");
+            assert_eq!(resp.id, id);
+            let out = resp.result.expect("request failed");
+            assert_eq!(out.report.verdict, expect, "policy {:?}", policy.encoding);
+            assert_eq!(out.report.inconsistent_localizations, 1);
+            assert_eq!(
+                out.c.data(),
+                clean.c.data(),
+                "a checksum fault never touches data: output must match the clean run"
+            );
+        }
+        let m = c.metrics().snapshot();
+        assert_eq!(m.jobs_completed, (REQS + 1) as u64);
+        assert_eq!(m.inconsistent_localizations, REQS as u64);
+        if expect == Verdict::CorrectedGrid {
+            assert_eq!(m.faults_corrected_grid, REQS as u64);
+            assert_eq!(m.rows_recomputed, 0);
+        } else {
+            assert_eq!(m.faults_corrected_grid, 0);
+            assert_eq!(m.rows_recomputed, REQS as u64);
+        }
+        c.shutdown();
+    }
+}
+
 #[test]
 fn shutdown_drains_pending_batch_without_deadlock() {
     let c = start();

@@ -303,6 +303,7 @@ fn recompute_round_trip_is_bitwise_for_full_precision_models() {
         reverify: false,
         localize_tol: 0.45,
         severity: false,
+        encoding: EncodingMode::RowOnly,
     };
     let mut seed = 800;
     // Exponent bit 1 of each model's verify grid: bit 24 on FP32,
@@ -376,6 +377,7 @@ fn fused_recompute_round_trip_is_bitwise_for_full_precision_models() {
         reverify: false,
         localize_tol: 0.45,
         severity: false,
+        encoding: EncodingMode::RowOnly,
     };
     let mut seed = 950;
     for (base, bit) in [
@@ -475,6 +477,115 @@ fn severity_never_waives_above_noise_faults() {
     assert_eq!(out.report.rows_waived, 0, "above-noise fault must never be waived");
     assert_eq!(out.report.rows_recomputed, 1);
     assert_eq!(out.c.data(), clean.data(), "recomputed output must be bitwise clean");
+}
+
+// ---------------------------------------------------------------------
+// Multi-fault round-trips: two simultaneous upsets per trial. Operands
+// are small integers (|a|,|b| ≤ 1, K = 48), so every sum in every
+// model's work grid is exact — syndromes recover injected deltas
+// exactly and corrections restore the clean accumulator bitwise, for
+// ALL precisions at once.
+//
+// * Same-row pair: D2/D1 lands exactly halfway between localization
+//   weights, so the single-checksum (row-only) policy cannot localize
+//   and must recompute. The grid encoding intersects the column
+//   syndromes (one fault per column → each localizes its row), peels
+//   both upsets and returns `CorrectedGrid` with zero recomputes.
+// * Same-column pair: one fault per row, so the row direction corrects
+//   both under every encoding — the control showing the grid machinery
+//   changes nothing where row checksums already suffice.
+// ---------------------------------------------------------------------
+
+fn integer_operands(m: usize, k: usize, n: usize) -> (Matrix, Matrix) {
+    let a = Matrix::from_fn(m, k, |i, j| ((i * 7 + j * 3) % 3) as f64 - 1.0);
+    let b = Matrix::from_fn(k, n, |i, j| ((i * 5 + j * 11) % 3) as f64 - 1.0);
+    (a, b)
+}
+
+#[test]
+fn two_faults_same_row_recompute_vs_grid_correction() {
+    for model in all_models() {
+        let (a, b) = integer_operands(6, 48, 8);
+        // Columns 3 and 7, deltas +3 and +5: D1 = 8, D2 = 4·3 + 8·5 = 52,
+        // ratio 6.5 → fractional part exactly 0.5 > localize_tol — the
+        // engineered row-inconsistent pattern.
+        for (policy, expect, recomputes) in [
+            (VerifyPolicy::default(), Verdict::Recomputed, 1usize),
+            (VerifyPolicy::grid(), Verdict::CorrectedGrid, 0),
+        ] {
+            let ft = FtGemm::new(
+                GemmEngine::new(model),
+                Box::new(VabftThreshold::default()),
+                policy,
+            );
+            let clean = ft.multiply(&a, &b).unwrap();
+            assert_eq!(clean.report.verdict, Verdict::Clean, "{model:?} {:?}", policy.encoding);
+            let out = ft
+                .multiply_with_injection(&a, &b, |o| {
+                    let v3 = o.acc.get(2, 3);
+                    o.acc.set(2, 3, v3 + 3.0);
+                    let v7 = o.acc.get(2, 7);
+                    o.acc.set(2, 7, v7 + 5.0);
+                })
+                .unwrap();
+            assert_eq!(out.report.verdict, expect, "{model:?} {:?}", policy.encoding);
+            assert_eq!(
+                out.report.rows_recomputed, recomputes,
+                "{model:?} {:?}",
+                policy.encoding
+            );
+            assert_eq!(
+                out.report.inconsistent_localizations, 1,
+                "{model:?} {:?}: the same-row pair must register as row-inconsistent",
+                policy.encoding
+            );
+            if expect == Verdict::CorrectedGrid {
+                assert_eq!(out.report.rows_corrected_grid, 1, "{model:?}");
+            }
+            assert_eq!(
+                out.c.data(),
+                clean.c.data(),
+                "{model:?} {:?}: repaired output must be bitwise-equal to the fault-free run",
+                policy.encoding
+            );
+        }
+    }
+}
+
+#[test]
+fn two_faults_same_column_correct_under_every_encoding() {
+    for model in all_models() {
+        let (a, b) = integer_operands(6, 48, 8);
+        for policy in [VerifyPolicy::default(), VerifyPolicy::grid()] {
+            let ft = FtGemm::new(
+                GemmEngine::new(model),
+                Box::new(VabftThreshold::default()),
+                policy,
+            );
+            let clean = ft.multiply(&a, &b).unwrap();
+            assert_eq!(clean.report.verdict, Verdict::Clean, "{model:?} {:?}", policy.encoding);
+            let out = ft
+                .multiply_with_injection(&a, &b, |o| {
+                    for row in [1usize, 4] {
+                        let v = o.acc.get(row, 5);
+                        o.acc.set(row, 5, v + 4.0);
+                    }
+                })
+                .unwrap();
+            // One fault per row → plain row-direction correction, no
+            // recompute, no grid escalation, under both encodings.
+            assert_eq!(out.report.verdict, Verdict::Corrected, "{model:?} {:?}", policy.encoding);
+            assert_eq!(out.report.detections.len(), 2, "{model:?} {:?}", policy.encoding);
+            assert_eq!(out.report.rows_recomputed, 0, "{model:?} {:?}", policy.encoding);
+            assert_eq!(out.report.rows_corrected_grid, 0, "{model:?} {:?}", policy.encoding);
+            assert_eq!(
+                out.c.data(),
+                clean.c.data(),
+                "{model:?} {:?}: corrected output must be bitwise-equal to the fault-free run",
+                policy.encoding
+            );
+        }
+    }
 }
 
 #[test]

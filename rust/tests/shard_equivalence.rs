@@ -59,6 +59,7 @@ fn verdict_tag(v: Verdict) -> u8 {
         Verdict::Recomputed => 2,
         Verdict::Flagged => 3,
         Verdict::Waived => 4,
+        Verdict::CorrectedGrid => 5,
     }
 }
 
@@ -155,7 +156,7 @@ fn run_config(
     for i in 0..24usize {
         let a = activation(100 + i as u64, shapes[i % shapes.len()]);
         let inject = inject_for(i);
-        injected.push(inject);
+        injected.push(inject.clone());
         // Alternate id-based and handle-based submission.
         let (id, rx) = if i % 2 == 0 {
             c.submit_tagged(GemmRequest { a, weight: 7, inject })

@@ -460,6 +460,79 @@ fn fused_policy_injection_decisions_match_post_hoc() {
 }
 
 #[test]
+fn two_dimensional_encoding_is_schedule_preserving() {
+    // Invariant #7: the A-side checksum rows ride the packed operand
+    // exactly as the B-side checksum columns do — no data element's
+    // rounding schedule may change under any encoding mode. Data rows of
+    // `matmul_mixed_2d` must be bitwise-identical to the 1D encoded
+    // multiply, the full 2D product (checksum rows included) must be
+    // thread/tile/microkernel-invariant, and FtGemm's clean outputs must
+    // be bitwise-equal across all three encoding modes.
+    let mut rng = Xoshiro256pp::seed_from_u64(0x2D5C);
+    let d = Distribution::normal_1_1();
+    for model in [
+        AccumModel::wide(Precision::Bf16),
+        AccumModel::gpu_highprec(Precision::F32),
+        AccumModel::cpu(Precision::F64),
+    ] {
+        let a = Matrix::sample(9, 80, &d, &mut rng);
+        let b = Matrix::sample(80, 24, &d, &mut rng);
+        let base_engine = GemmEngine::new(model);
+        let enc = vabft::abft::ChecksumEncoding::encode_b_wide(&b, &base_engine);
+        let cenc = vabft::abft::ColumnEncoding::encode_a_wide(&a, &base_engine);
+        let plain = base_engine.matmul_mixed(&a, &enc.b_encoded, enc.wide_cols());
+        let base = base_engine.matmul_mixed_2d(
+            &cenc.a_encoded,
+            &enc.b_encoded,
+            enc.wide_cols(),
+            cenc.wide_rows(),
+        );
+        for i in 0..a.rows() {
+            assert_eq!(base.acc.row(i), plain.acc.row(i), "{model:?}: acc row {i} diverged");
+            assert_eq!(base.c.row(i), plain.c.row(i), "{model:?}: c row {i} diverged");
+        }
+        for threads in [2usize, 4] {
+            for tiles in tile_grid() {
+                for micro in [MicroConfig::DEFAULT, MicroConfig::new(3, 5)] {
+                    let split =
+                        if threads == 2 { RowSplit::Interleaved } else { RowSplit::Contiguous };
+                    let par = ParallelismConfig { threads, tiles, micro, split };
+                    let engine = GemmEngine::with_parallelism(model, par);
+                    let got = engine.matmul_mixed_2d(
+                        &cenc.a_encoded,
+                        &enc.b_encoded,
+                        enc.wide_cols(),
+                        cenc.wide_rows(),
+                    );
+                    assert_eq!(got.acc.data(), base.acc.data(), "{model:?} {par:?}");
+                    assert_eq!(got.c.data(), base.c.data(), "{model:?} {par:?}");
+                }
+            }
+        }
+        // Clean FtGemm outputs bitwise-equal across every encoding mode:
+        // the geometry changes what verification *can repair*, never what
+        // a clean multiply *produces*.
+        let mk = |encoding| {
+            FtGemm::new(
+                GemmEngine::new(model),
+                Box::new(VabftThreshold::default()),
+                VerifyPolicy::default().with_encoding(encoding),
+            )
+        };
+        let row_only = mk(EncodingMode::RowOnly).multiply(&a, &b).unwrap();
+        for encoding in [EncodingMode::RowCol, EncodingMode::Grid] {
+            let out = mk(encoding).multiply(&a, &b).unwrap();
+            assert_eq!(out.report.verdict, Verdict::Clean, "{model:?} {encoding:?}");
+            assert_eq!(
+                out.c.data(),
+                row_only.c.data(),
+                "{model:?} {encoding:?}: clean output must not depend on encoding mode"
+            );
+        }
+    }
+}
+
+#[test]
 fn encoded_multiply_is_thread_invariant() {
     // The ABFT layer multiplies *encoded* operands via matmul_mixed with
     // wide checksum columns; that path must also be schedule-invariant.
