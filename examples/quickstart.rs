@@ -18,7 +18,12 @@ fn main() -> vabft::error::Result<()> {
     // 2. A fault-tolerant GEMM executor: BF16 inputs, FP32 accumulation
     //    (the GPU/NPU "wide" model), V-ABFT thresholds, online (fused-
     //    kernel) verification with correction enabled.
-    let engine = GemmEngine::new(AccumModel::wide(Precision::Bf16));
+    //    `EngineConfig::auto()` picks worker threads and the SIMD level
+    //    for this host and folds in the `vabft autotune` manifest when
+    //    one exists — all pure scheduling, so outputs are bitwise the
+    //    same as `GemmEngine::new` (the serial scalar default).
+    let engine =
+        GemmEngine::with_config(AccumModel::wide(Precision::Bf16), EngineConfig::auto());
     let ft = FtGemm::new(engine, Box::new(VabftThreshold::default()), VerifyPolicy::default());
 
     // 3. Clean multiply: verifies clean.

@@ -11,7 +11,8 @@
 //! ```text
 //! cargo run --release --example serving -- [--requests N] [--workers W]
 //!     [--fault-rate 0.05] [--offline] [--block-k B] [--pjrt]
-//!     [--threads T] [--mc M --kc K --nc N]   # per-worker engine config
+//!     [--threads T] [--mc M --kc K --nc N] [--mr R --nr C]
+//!     [--split S] [--simd L] [--manifest FILE]   # per-worker engine config
 //! ```
 
 use std::sync::Arc;
@@ -42,9 +43,10 @@ fn main() -> vabft::error::Result<()> {
         model: AccumModel::wide(Precision::Bf16),
         policy: if online { VerifyPolicy::default() } else { VerifyPolicy::offline() },
         threshold: Arc::new(|| Box::new(VabftThreshold::default())),
-        parallelism: vabft::gemm::ParallelismConfig::from_args(&args),
+        engine: Some(EngineConfig::from_args(&args)),
         weight_capacity: 64,
         block_k: if block_k == 0 { None } else { Some(block_k) },
+        ..Default::default()
     };
     let coord = Coordinator::start(cfg);
 

@@ -9,7 +9,7 @@
 //! 4. reduction-strategy ablation — the same operands under sequential /
 //!    fma / pairwise schedules (why e_max must be per-platform).
 
-use vabft::abft::{BlockwiseFtGemm, ChecksumEncoding, VerifyPolicy};
+use vabft::abft::{ChecksumEncoding, FtGemm, VerifyGranularity, VerifyPolicy};
 use vabft::bench_harness::BenchMode;
 use vabft::fp::Precision;
 use vabft::gemm::{AccumModel, GemmEngine, ReduceStrategy};
@@ -164,13 +164,17 @@ fn blockwise_granularity(mode: &BenchMode) {
 
     // functional check: a fault below the monolithic threshold is caught
     // by the 64-deep block pipeline
-    let bw = BlockwiseFtGemm::new(GemmEngine::new(model), 64, VerifyPolicy::default());
+    let bw = FtGemm::new(
+        GemmEngine::new(model),
+        Box::new(VabftThreshold::default()),
+        VerifyPolicy::default().with_granularity(VerifyGranularity::BlockK(64)),
+    );
     let delta = t_full * 0.5;
     let out = bw
-        .multiply_with_injection(&a, &b, |bi, acc| {
+        .multiply_with_block_injection(&a, &b, |bi, o| {
             if bi == 3 {
-                let v = acc.get(2, 7);
-                acc.set(2, 7, v + delta);
+                let v = o.acc.get(2, 7);
+                o.acc.set(2, 7, v + delta);
             }
         })
         .unwrap();

@@ -1,6 +1,6 @@
 //! Microkernel-level bench + the CI **bitwise smoke gate**.
 //!
-//! Three sections:
+//! Four sections:
 //!
 //! 1. **Equality gate** — packed and unpacked engines vs the naive
 //!    reference kernels at small ragged sizes, all three strategies,
@@ -11,7 +11,12 @@
 //! 2. **MR/NR sweep** — GFLOP/s of the packed FP32 FMA path per
 //!    microkernel shape, the measured input to the tuning recipe in
 //!    `docs/PERFORMANCE.md`.
-//! 3. **quantize_slice micro-bench** — batched vs per-element
+//! 3. **SIMD dispatch sweep** — GFLOP/s of every `SimdLevel` this host
+//!    can execute (engine label `simd-<level>`), each asserted bitwise
+//!    against the scalar path first. The dispatched level's row is the
+//!    acceptance evidence that runtime dispatch beats the
+//!    autovectorized scalar build.
+//! 4. **quantize_slice micro-bench** — batched vs per-element
 //!    `Precision::quantize` on the BF16/FP16 paths (the satellite fix:
 //!    powi-free `FloatSpec` constants + one dispatch per slice).
 //!
@@ -26,7 +31,8 @@ use std::time::{Duration, Instant};
 use vabft::bench_harness::{time_once, BenchMode, BenchRecord, BenchRecords};
 use vabft::fp::Precision;
 use vabft::gemm::{
-    generic_gemm, kernels, tiled, MicroConfig, ParallelismConfig, ReduceStrategy, TileConfig,
+    cpu_features, generic_gemm, kernels, tiled, MicroConfig, ParallelismConfig, ReduceStrategy,
+    SimdLevel, TileConfig,
 };
 use vabft::report::Table;
 use vabft::rng::{Rng, Xoshiro256pp};
@@ -161,7 +167,70 @@ fn mr_nr_sweep(records: &mut BenchRecords, mode: BenchMode) {
     println!("(default 8x8 = {baseline:.2} GFLOP/s; see docs/PERFORMANCE.md for the recipe)\n");
 }
 
-/// Section 3: batched vs per-element quantization.
+/// Section 3: every SIMD level this host can run, bitwise-checked
+/// against the scalar path, then timed. `speedup_vs_baseline` is the
+/// level's throughput over the scalar row.
+fn simd_sweep(records: &mut BenchRecords, mode: BenchMode) {
+    let s = mode.pick(256, 512);
+    let (m, k, n) = (s, s, s);
+    let reps = mode.pick(2, 3);
+    let case = format!("{m}x{k}x{n}");
+    let a64 = rand_f64(m * k, 41);
+    let b64 = rand_f64(k * n, 42);
+    let a: Vec<f32> = a64.iter().map(|&x| x as f32).collect();
+    let b: Vec<f32> = b64.iter().map(|&x| x as f32).collect();
+    let strategy = ReduceStrategy::Fma;
+    println!("cpu features: {}", cpu_features());
+    let mut table = Table::new(
+        &format!("SIMD dispatch fp32 {case} [fma], 1 thread, per level"),
+        &["level", "best", "GFLOP/s", "vs scalar", "bitwise"],
+    );
+    let reference = tiled::gemm_f32(
+        &a,
+        &b,
+        m,
+        k,
+        n,
+        strategy,
+        &ParallelismConfig::serial().simd(SimdLevel::Scalar),
+    );
+    let mut scalar_g = 0.0f64;
+    for level in SimdLevel::available_levels() {
+        let par = ParallelismConfig::serial().simd(level);
+        let mut out = Vec::new();
+        let t = best_of(reps, || {
+            time_once(|| out = tiled::gemm_f32(&a, &b, m, k, n, strategy, &par))
+        });
+        assert!(out == reference, "simd-{} diverged from scalar", level.name());
+        let g = gflops(m, k, n, t);
+        if level == SimdLevel::Scalar {
+            scalar_g = g;
+        }
+        let sp = if scalar_g > 0.0 { g / scalar_g } else { 1.0 };
+        table.row(vec![
+            level.name().into(),
+            format!("{t:?}"),
+            format!("{g:.2}"),
+            format!("{sp:.2}x"),
+            "OK".into(),
+        ]);
+        records.push(BenchRecord {
+            case: case.clone(),
+            precision: "fp32".into(),
+            strategy: strategy.name().into(),
+            engine: format!("simd-{}", level.name()),
+            threads: 1,
+            unit: "GFLOP/s".into(),
+            value: g,
+            speedup_vs_baseline: sp,
+            bitwise_equal: true,
+        });
+    }
+    table.print();
+    println!("(dispatched level on this host = {})\n", SimdLevel::detect().name());
+}
+
+/// Section 4: batched vs per-element quantization.
 fn quantize_bench(records: &mut BenchRecords, mode: BenchMode) {
     let len = 1usize << mode.pick(15, 18);
     let reps = mode.pick(20, 50);
@@ -227,6 +296,7 @@ fn main() {
     let mut records = BenchRecords::new("microkernel");
     equality_gate(&mut records, mode);
     mr_nr_sweep(&mut records, mode);
+    simd_sweep(&mut records, mode);
     quantize_bench(&mut records, mode);
     match records.write("BENCH_gemm_micro.json") {
         Ok(path) => println!("\ntrajectory written to {}", path.display()),

@@ -18,7 +18,7 @@ use std::time::Duration;
 
 use vabft::bench_harness::{time_once, BenchMode, BenchRecord, BenchRecords};
 use vabft::fp::Precision;
-use vabft::gemm::{generic_gemm, kernels, tiled, ParallelismConfig, ReduceStrategy};
+use vabft::gemm::{generic_gemm, kernels, tiled, EngineConfig, ParallelismConfig, ReduceStrategy};
 use vabft::report::Table;
 use vabft::rng::{Rng, Xoshiro256pp};
 
@@ -155,7 +155,7 @@ fn main() {
     mode.banner("parallel_engine");
     let reps = mode.pick(2, 4);
     let sizes: Vec<usize> = mode.pick(vec![512], vec![512, 1024]);
-    let par_from_cli = ParallelismConfig::from_args(&vabft::cli::Args::parse());
+    let par_from_cli = EngineConfig::from_args(&vabft::cli::Args::parse()).resolve();
     let thread_counts: Vec<usize> = if par_from_cli.threads > 1 {
         vec![par_from_cli.threads]
     } else {

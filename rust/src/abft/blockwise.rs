@@ -12,6 +12,11 @@
 //! shared (private) `pipeline` module — the same
 //! detect/localize/correct/recompute implementation [`crate::abft::FtGemm`]
 //! runs at `block_k = K`, executing on the same tiled parallel engine.
+//!
+//! **Deprecated**: blockwise is now a *policy*, not a type. Use
+//! [`crate::abft::FtGemm`] with
+//! `VerifyPolicy::default().with_granularity(VerifyGranularity::BlockK(k))`
+//! — same pipeline, same bits. This wrapper remains for one release.
 
 use crate::abft::pipeline;
 use crate::abft::prepared::PreparedWeights;
@@ -38,6 +43,7 @@ pub struct BlockwiseOutput {
 /// Block-wise fault-tolerant GEMM over K tiles.
 ///
 /// ```
+/// # #![allow(deprecated)]
 /// use vabft::prelude::*;
 ///
 /// let mut rng = Xoshiro256pp::seed_from_u64(1);
@@ -56,6 +62,9 @@ pub struct BlockwiseOutput {
 /// let warm = bw.multiply_prepared(&a, &w).unwrap();
 /// assert_eq!(warm.c.data(), out.c.data());
 /// ```
+#[deprecated(
+    note = "use FtGemm with VerifyPolicy::with_granularity(VerifyGranularity::BlockK(k))"
+)]
 pub struct BlockwiseFtGemm {
     engine: GemmEngine,
     threshold: Box<dyn Threshold>,
@@ -64,6 +73,7 @@ pub struct BlockwiseFtGemm {
     pub block_k: usize,
 }
 
+#[allow(deprecated)]
 impl BlockwiseFtGemm {
     /// Build a blockwise executor with the default V-ABFT threshold.
     pub fn new(engine: GemmEngine, block_k: usize, policy: VerifyPolicy) -> BlockwiseFtGemm {
@@ -191,6 +201,7 @@ impl BlockwiseFtGemm {
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::abft::Verdict;

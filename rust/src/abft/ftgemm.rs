@@ -8,12 +8,16 @@
 //! place, and recompute rows whose syndrome is inconsistent with a single
 //! upset.
 //!
-//! [`FtGemm`] is the monolithic (`block_k = K`) parameterization of the
-//! shared (private) `pipeline` module;
-//! [`crate::abft::BlockwiseFtGemm`] is the same pipeline at
-//! `block_k = KC`. The detect/localize/correct/recompute stages are
-//! implemented exactly once, there. [`crate::abft::PreparedWeights`]
-//! caches the weight-side state for either parameterization.
+//! [`FtGemm`] is the single entry point: [`VerifyPolicy::granularity`]
+//! selects between one verification over the whole K reduction
+//! ([`VerifyGranularity::Monolithic`], `block_k = K`) and the paper's
+//! §5.2 block-wise mode ([`VerifyGranularity::BlockK`]). Both are
+//! parameterizations of the shared (private) `pipeline` module — the
+//! detect/localize/correct/recompute stages are implemented exactly
+//! once, there. [`crate::abft::PreparedWeights`] caches the weight-side
+//! state for either granularity. (The historical
+//! `crate::abft::BlockwiseFtGemm` wrapper is a deprecated alias for the
+//! `BlockK` policy.)
 
 use crate::abft::encode::EncodingMode;
 use crate::abft::pipeline;
@@ -22,6 +26,34 @@ use crate::error::Result;
 use crate::gemm::{GemmEngine, GemmOutput};
 use crate::matrix::Matrix;
 use crate::threshold::Threshold;
+
+/// How the K dimension is partitioned for verification (paper §5.2).
+///
+/// Granularity is a *verification* choice, not pure scheduling: blockwise
+/// partials are aggregated with intermediate work-precision roundings, so
+/// different granularities produce (legitimately) different bits — pick
+/// one per workload. `BlockK` buys tighter per-block thresholds
+/// (rounding-noise depth `bk` instead of `K`) and localizes faults in K.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum VerifyGranularity {
+    /// One verification over the whole K reduction (`block_k = K`).
+    #[default]
+    Monolithic,
+    /// Partition K into tiles of this depth and checksum + verify each
+    /// partial product independently before accumulating (the paper's
+    /// NPU configuration uses 1024). Zero is treated as 1.
+    BlockK(usize),
+}
+
+impl VerifyGranularity {
+    /// The concrete K-block depth for a reduction of depth `k`.
+    pub fn block_k_for(self, k: usize) -> usize {
+        match self {
+            VerifyGranularity::Monolithic => k.max(1),
+            VerifyGranularity::BlockK(bk) => bk.max(1),
+        }
+    }
+}
 
 /// What the verification pipeline is allowed to do.
 #[derive(Debug, Clone, Copy)]
@@ -86,6 +118,10 @@ pub struct VerifyPolicy {
     /// recall and false-positive behavior are bitwise-identical to the
     /// non-severity policy.
     pub severity: bool,
+    /// How the K dimension is partitioned for verification: one
+    /// monolithic check (the default) or the paper's §5.2 block-wise
+    /// mode. See [`VerifyGranularity`].
+    pub granularity: VerifyGranularity,
 }
 
 impl Default for VerifyPolicy {
@@ -99,6 +135,7 @@ impl Default for VerifyPolicy {
             localize_tol: 0.45,
             reverify: true,
             severity: false,
+            granularity: VerifyGranularity::Monolithic,
         }
     }
 }
@@ -130,6 +167,7 @@ impl VerifyPolicy {
             reverify: false,
             localize_tol: 0.45,
             severity: false,
+            granularity: VerifyGranularity::Monolithic,
         }
     }
 
@@ -154,6 +192,14 @@ impl VerifyPolicy {
     /// the recompute escalation ([`Verdict::Waived`]).
     pub fn with_severity(mut self) -> VerifyPolicy {
         self.severity = true;
+        self
+    }
+
+    /// The same policy at a different verification granularity —
+    /// `VerifyGranularity::BlockK(k)` is what `BlockwiseFtGemm` used to
+    /// spell as a separate type.
+    pub fn with_granularity(mut self, granularity: VerifyGranularity) -> VerifyPolicy {
+        self.granularity = granularity;
         self
     }
 }
@@ -251,8 +297,15 @@ pub struct VerifyReport {
 pub struct FtGemmOutput {
     /// The (possibly corrected) product, on the model's output grid.
     pub c: Matrix,
-    /// What verification saw and did.
+    /// What verification saw and did (across all K-blocks when the
+    /// policy granularity is block-wise).
     pub report: VerifyReport,
+    /// Which K-block each detection occurred in, parallel to
+    /// `report.detections` (all zeros at monolithic granularity).
+    pub detection_blocks: Vec<usize>,
+    /// Number of K-blocks the multiply was verified in (1 at monolithic
+    /// granularity).
+    pub blocks: usize,
 }
 
 /// Fault-tolerant GEMM executor.
@@ -298,23 +351,34 @@ impl FtGemm {
     }
 
     /// Precompute checksum encoding + threshold statistics for a weight
-    /// matrix at monolithic granularity (`block_k = K`) — the serving fast
+    /// matrix at the policy's verification granularity — the serving fast
     /// path: vLLM-style coordinators multiply thousands of activations
-    /// against the same weights. See [`PreparedWeights`].
+    /// against the same weights. See [`PreparedWeights`]. (The K depth of
+    /// a [`VerifyGranularity::Monolithic`] handle is pinned at prepare
+    /// time from `b.rows()`.)
     pub fn prepare(&self, b: &Matrix) -> PreparedWeights {
-        PreparedWeights::prepare(b, &self.engine, &self.policy)
+        match self.policy.granularity {
+            VerifyGranularity::Monolithic => {
+                PreparedWeights::prepare(b, &self.engine, &self.policy)
+            }
+            VerifyGranularity::BlockK(_) => {
+                let bk = self.policy.granularity.block_k_for(b.rows());
+                PreparedWeights::prepare_blockwise(b, &self.engine, &self.policy, bk)
+            }
+        }
     }
 
-    /// Precompute weight-side state at `block_k` granularity (per-K-block
-    /// encodings and statistics, paper §5.2). The resulting handle also
-    /// drives [`crate::abft::BlockwiseFtGemm::multiply_prepared`].
+    /// Precompute weight-side state at an explicit `block_k` granularity
+    /// (per-K-block encodings and statistics, paper §5.2), independent of
+    /// the policy's own granularity.
     pub fn prepare_blockwise(&self, b: &Matrix, block_k: usize) -> PreparedWeights {
         PreparedWeights::prepare_blockwise(b, &self.engine, &self.policy, block_k)
     }
 
-    /// Protected multiply: C = A·B with detection / correction per policy.
-    /// Under [`VerifyPolicy::fused`] the detection checks execute inside
-    /// the packed GEMM epilogue rather than as a post-hoc sweep.
+    /// Protected multiply: C = A·B with detection / correction per policy,
+    /// at the policy's verification granularity. Under
+    /// [`VerifyPolicy::fused`] the detection checks execute inside the
+    /// packed GEMM epilogue rather than as a post-hoc sweep.
     pub fn multiply(&self, a: &Matrix, b: &Matrix) -> Result<FtGemmOutput> {
         let out = pipeline::run_blocks(
             &self.engine,
@@ -322,10 +386,15 @@ impl FtGemm {
             &self.policy,
             a,
             b,
-            a.cols().max(1),
+            self.policy.granularity.block_k_for(a.cols()),
             None::<fn(usize, &mut GemmOutput)>,
         )?;
-        Ok(FtGemmOutput { c: out.c, report: out.report })
+        Ok(FtGemmOutput {
+            c: out.c,
+            report: out.report,
+            detection_blocks: out.detection_blocks,
+            blocks: out.blocks,
+        })
     }
 
     /// Protected multiply against prepared weights (serving hot path: no
@@ -355,18 +424,23 @@ impl FtGemm {
             w,
             inject.map(|f| move |bi: usize, o: &mut GemmOutput| f(bi, o)),
         )?;
-        Ok(FtGemmOutput { c: out.c, report: out.report })
+        Ok(FtGemmOutput {
+            c: out.c,
+            report: out.report,
+            detection_blocks: out.detection_blocks,
+            blocks: out.blocks,
+        })
     }
 
     /// Protected multiply with fault injection between compute and verify
-    /// (the experiment hook: `inject` mutates the encoded product).
+    /// (the experiment hook: `inject` mutates the encoded product; at
+    /// block-wise granularity it fires once, on the first K-block).
     pub fn multiply_with_injection(
         &self,
         a: &Matrix,
         b: &Matrix,
         inject: impl FnOnce(&mut GemmOutput),
     ) -> Result<FtGemmOutput> {
-        // Monolithic = the shared pipeline at block_k = K (one tile).
         let mut inject = Some(inject);
         let out = pipeline::run_blocks(
             &self.engine,
@@ -374,14 +448,46 @@ impl FtGemm {
             &self.policy,
             a,
             b,
-            a.cols().max(1),
+            self.policy.granularity.block_k_for(a.cols()),
             Some(move |_bi: usize, o: &mut GemmOutput| {
                 if let Some(f) = inject.take() {
                     f(o)
                 }
             }),
         )?;
-        Ok(FtGemmOutput { c: out.c, report: out.report })
+        Ok(FtGemmOutput {
+            c: out.c,
+            report: out.report,
+            detection_blocks: out.detection_blocks,
+            blocks: out.blocks,
+        })
+    }
+
+    /// Protected multiply with per-K-block fault injection:
+    /// `inject(block_index, partial)` fires once per verified K-block
+    /// (once total at monolithic granularity) — the blockwise experiment
+    /// hook the deprecated wrapper used to expose.
+    pub fn multiply_with_block_injection(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        mut inject: impl FnMut(usize, &mut GemmOutput),
+    ) -> Result<FtGemmOutput> {
+        let out = pipeline::run_blocks(
+            &self.engine,
+            self.threshold.as_ref(),
+            &self.policy,
+            a,
+            b,
+            self.policy.granularity.block_k_for(a.cols()),
+            Some(move |bi: usize, o: &mut GemmOutput| inject(bi, o)),
+        )?;
+        Ok(FtGemmOutput {
+            c: out.c,
+            report: out.report,
+            detection_blocks: out.detection_blocks,
+            blocks: out.blocks,
+        })
     }
 }
 
@@ -401,6 +507,34 @@ mod tests {
         let mut rng = Xoshiro256pp::seed_from_u64(seed);
         let d = Distribution::normal_1_1();
         (Matrix::sample(m, k, &d, &mut rng), Matrix::sample(k, n, &d, &mut rng))
+    }
+
+    #[test]
+    fn blockk_granularity_matches_blockwise_executor() {
+        // The unified FtGemm at BlockK(32) must be bit-for-bit the old
+        // BlockwiseFtGemm at block_k = 32 — same pipeline, same bits.
+        let (a, b) = operands(6, 8, 96, 16);
+        let model = AccumModel::wide(Precision::Bf16);
+        let g = ft(
+            model,
+            VerifyPolicy::default().with_granularity(VerifyGranularity::BlockK(32)),
+        );
+        let out = g.multiply(&a, &b).unwrap();
+        assert_eq!(out.blocks, 3);
+        #[allow(deprecated)]
+        let bw = crate::abft::BlockwiseFtGemm::new(
+            GemmEngine::new(model),
+            32,
+            VerifyPolicy::default(),
+        );
+        let want = bw.multiply(&a, &b).unwrap();
+        assert_eq!(out.c.data(), want.c.data());
+        assert_eq!(out.report.verdict, want.report.verdict);
+        // Prepared path inherits the policy granularity too.
+        let w = g.prepare(&b);
+        let warm = g.multiply_prepared(&a, &w, None).unwrap();
+        assert_eq!(warm.c.data(), out.c.data());
+        assert_eq!(warm.blocks, 3);
     }
 
     #[test]

@@ -263,6 +263,7 @@ impl PreparedWeights {
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::abft::{BlockwiseFtGemm, FtGemm, Verdict};

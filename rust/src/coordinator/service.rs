@@ -32,7 +32,7 @@ use std::time::Instant;
 use crate::abft::{FtGemm, FtGemmOutput, PreparedWeights, Verdict, VerifyPolicy};
 use crate::coordinator::partition::{PartitionPolicy, ShardPlan, TopologyConfig};
 use crate::fp::Precision;
-use crate::gemm::{AccumModel, GemmEngine, GemmOutput, ParallelismConfig};
+use crate::gemm::{AccumModel, EngineConfig, GemmEngine, GemmOutput, ParallelismConfig};
 use crate::inject::{apply_fault, FaultOutcome, FaultSpec};
 use crate::matrix::Matrix;
 use crate::metrics::ServiceMetrics;
@@ -177,6 +177,13 @@ pub struct CoordinatorConfig {
     /// The shard plan applies the partition policy's row split and clamps
     /// intra-op threads to each shard's topology group.
     pub parallelism: ParallelismConfig,
+    /// Unified engine configuration (tiles + microkernel + row split +
+    /// SIMD level + tuning manifest). When set it takes precedence over
+    /// [`CoordinatorConfig::parallelism`]: every worker engine is built
+    /// from it, so each request's GEMM shape gets a tuning-manifest
+    /// lookup, while the shard plan's intra-op thread clamp and row
+    /// split still apply on top. `None` falls back to `parallelism`.
+    pub engine: Option<EngineConfig>,
     /// Capacity of the shared LRU cache of prepared weights, in entries.
     /// Registering beyond it evicts the least-recently-used weight; id
     /// requests against an evicted weight error (handles stay valid).
@@ -208,6 +215,7 @@ impl Default for CoordinatorConfig {
             policy: VerifyPolicy::default(),
             threshold: Arc::new(|| Box::new(VabftThreshold::default())),
             parallelism: ParallelismConfig::serial(),
+            engine: None,
             weight_capacity: 1024,
             block_k: None,
             shards: 1,
@@ -565,13 +573,14 @@ impl Coordinator {
     /// Start the sharded worker pool per the config's [`ShardPlan`].
     pub fn start(cfg: CoordinatorConfig) -> Coordinator {
         let topology = cfg.topology.clone().unwrap_or_else(TopologyConfig::detect);
-        let plan = ShardPlan::plan(
-            cfg.shards,
-            cfg.workers,
-            cfg.parallelism,
-            cfg.partition,
-            topology,
-        );
+        // The plan clamps intra-op threads and assigns row splits from a
+        // concrete ParallelismConfig; a unified engine config resolves to
+        // one here (defaults for whatever it leaves unset).
+        let base_par = match &cfg.engine {
+            Some(e) => e.resolve(),
+            None => cfg.parallelism,
+        };
+        let plan = ShardPlan::plan(cfg.shards, cfg.workers, base_par, cfg.partition, topology);
         let nshards = plan.shards.len();
         let shared = Arc::new(SharedWeights::new(cfg.weight_capacity));
         let metrics = Arc::new(ServiceMetrics::new());
@@ -592,8 +601,20 @@ impl Coordinator {
                     local: Arc::clone(&locals[spec.shard]),
                     shared: Arc::clone(&shared),
                     metrics: Arc::clone(&metrics),
+                    // With a unified engine config, keep it unresolved so
+                    // each request's shape gets a manifest lookup — but pin
+                    // the plan's thread clamp and row split, which the
+                    // manifest must not override.
                     ft: FtGemm::new(
-                        GemmEngine::with_parallelism(cfg.model, spec.parallelism),
+                        match &cfg.engine {
+                            Some(e) => GemmEngine::with_config(
+                                cfg.model,
+                                e.clone()
+                                    .threads(spec.parallelism.threads)
+                                    .split(spec.parallelism.split),
+                            ),
+                            None => GemmEngine::with_parallelism(cfg.model, spec.parallelism),
+                        },
                         (cfg.threshold)(),
                         cfg.policy,
                     ),
@@ -610,7 +631,10 @@ impl Coordinator {
             }
         }
         let ft_template = Arc::new(FtGemm::new(
-            GemmEngine::with_parallelism(cfg.model, cfg.parallelism),
+            match &cfg.engine {
+                Some(e) => GemmEngine::with_config(cfg.model, e.clone()),
+                None => GemmEngine::with_parallelism(cfg.model, cfg.parallelism),
+            },
             (cfg.threshold)(),
             cfg.policy,
         ));
@@ -1089,6 +1113,46 @@ mod tests {
         c.register_weight(1, &b);
         // Same request through a serial coordinator must give bitwise the
         // same product (schedule preservation end to end).
+        let (cs, _) = coordinator(1);
+        cs.register_weight(1, &b);
+        let a = activation(41);
+        let x = c.call(GemmRequest { a: a.clone(), weight: 1, inject: None });
+        let y = cs.call(GemmRequest { a, weight: 1, inject: None });
+        let (x, y) = (x.result.unwrap().c, y.result.unwrap().c);
+        assert_eq!(x.data(), y.data());
+        c.shutdown();
+        cs.shutdown();
+    }
+
+    #[test]
+    fn worker_engine_config_is_applied() {
+        // A unified engine config with a tuned entry for the request's
+        // exact shape: workers must pick it up (shape-aware resolve) and
+        // the output must stay bitwise-identical to the serial default —
+        // manifest-driven tuning is pure scheduling.
+        let mut manifest = crate::runtime::TuningManifest::new("test");
+        manifest.push(crate::runtime::TunedShape {
+            label: "test/shape".into(),
+            m: 8,
+            k: 64,
+            n: 32,
+            tiles: crate::gemm::TileConfig { mc: 32, kc: 32, nc: 16 },
+            micro: crate::gemm::MicroConfig { mr: 4, nr: 8 },
+            threads: 2,
+            split: crate::gemm::RowSplit::Interleaved,
+            simd: crate::gemm::SimdLevel::Auto,
+            gflops: 1.0,
+            baseline_gflops: 1.0,
+        });
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            engine: Some(EngineConfig::new().manifest(manifest)),
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg);
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let b = Matrix::sample_in(64, 32, &Distribution::normal_1_1(), Precision::Bf16, &mut rng);
+        c.register_weight(1, &b);
         let (cs, _) = coordinator(1);
         cs.register_weight(1, &b);
         let a = activation(41);

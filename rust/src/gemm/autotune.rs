@@ -1,0 +1,450 @@
+//! `vabft autotune` — searches the tiled engine's *scheduling* space
+//! (cache tiles × microkernel shape × worker count × row split × SIMD
+//! level) per GEMM shape class and persists the winners into the
+//! [`TuningManifest`] that [`super::EngineConfig`] folds into every
+//! engine built without explicit overrides.
+//!
+//! Shape classes come from two sources: the transformer-layer traces of
+//! [`crate::workload::build_trace`] (one class per distinct (M, K, N)
+//! per model family) and the fault-campaign grid shapes of
+//! [`crate::campaign::GridConfig`]. Every candidate is measured on the
+//! FMA reduction schedule and **bitwise-checked against the serial
+//! scalar engine** before it may win — tuning can never trade bits for
+//! speed, because every point in the search space is pure scheduling
+//! (see invariant #8 in `docs/ARCHITECTURE.md`).
+//!
+//! The `--gate` pass re-measures each persisted transformer-shape winner
+//! against the untuned default configuration and fails if the tuned
+//! schedule loses (beyond a 10% measurement-noise allowance) — the
+//! nightly guard that a stale manifest cannot regress serving.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::error::{Context, Result};
+use crate::gemm::simd::{cpu_features, SimdLevel};
+use crate::gemm::tiled::{self, MicroConfig, ParallelismConfig, RowSplit, TileConfig};
+use crate::gemm::ReduceStrategy;
+use crate::rng::{Rng, Xoshiro256pp};
+use crate::runtime::{TunedShape, TuningManifest};
+use crate::workload::{build_trace, ReplayConfig};
+
+/// Search depth of an autotune run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AutotuneMode {
+    /// CI smoke: one family, a handful of candidates, sub-second shapes.
+    Smoke,
+    /// Nightly default: all families at bench-quick scale, a pruned grid.
+    #[default]
+    Quick,
+    /// Exhaustive-ish: all families, larger shapes, the full grid.
+    Full,
+}
+
+impl AutotuneMode {
+    /// Lowercase mode name used in CLI output.
+    pub fn name(self) -> &'static str {
+        match self {
+            AutotuneMode::Smoke => "smoke",
+            AutotuneMode::Quick => "quick",
+            AutotuneMode::Full => "full",
+        }
+    }
+
+    /// Timed repetitions per candidate (best-of; first rep is warmup).
+    fn reps(self) -> usize {
+        match self {
+            AutotuneMode::Smoke => 2,
+            AutotuneMode::Quick => 3,
+            AutotuneMode::Full => 5,
+        }
+    }
+}
+
+/// One shape class to tune: a labelled (M, K, N).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShapeClass {
+    /// `family/layer` for transformer shapes, `grid/MxKxN` for campaign
+    /// grid shapes.
+    pub label: String,
+    /// GEMM rows.
+    pub m: usize,
+    /// GEMM reduction depth.
+    pub k: usize,
+    /// GEMM output columns.
+    pub n: usize,
+}
+
+/// Autotune run configuration.
+#[derive(Debug, Clone)]
+pub struct AutotuneConfig {
+    /// Search depth.
+    pub mode: AutotuneMode,
+    /// Seed for the deterministic operand samples.
+    pub seed: u64,
+    /// Manifest destination.
+    pub path: PathBuf,
+}
+
+/// The shape classes a mode tunes: deduplicated transformer-layer GEMM
+/// shapes per family, then the campaign grid shapes.
+pub fn shape_classes(mode: AutotuneMode) -> Vec<ShapeClass> {
+    let families: &[&str] = match mode {
+        AutotuneMode::Smoke => &["gpt2"],
+        _ => &["llama-7b", "gpt2", "vit-b32"],
+    };
+    let mut out: Vec<ShapeClass> = Vec::new();
+    let mut push = |label: String, m: usize, k: usize, n: usize| {
+        if !out.iter().any(|s| (s.m, s.k, s.n) == (m, k, n)) {
+            out.push(ShapeClass { label, m, k, n });
+        }
+    };
+    for family in families {
+        let cfg = match mode {
+            AutotuneMode::Smoke => ReplayConfig::smoke(family, 0),
+            AutotuneMode::Quick => ReplayConfig::quick(family, 0),
+            AutotuneMode::Full => {
+                let mut c = ReplayConfig::quick(family, 0);
+                c.scale = 8;
+                c.batch = 16;
+                c
+            }
+        };
+        for e in build_trace(&cfg).entries {
+            push(format!("{family}/{}", e.name), e.m, e.k, e.n);
+        }
+    }
+    // Campaign grid shapes (GridConfig::quick / ::nightly).
+    let grid: &[(usize, usize, usize)] = match mode {
+        AutotuneMode::Smoke => &[(8, 64, 16)],
+        AutotuneMode::Quick => &[(8, 64, 16), (32, 256, 64)],
+        AutotuneMode::Full => &[(8, 64, 16), (32, 256, 64), (128, 1024, 256)],
+    };
+    for &(m, k, n) in grid {
+        push(format!("grid/{m}x{k}x{n}"), m, k, n);
+    }
+    out
+}
+
+/// One point of the search space.
+type Candidate = (TileConfig, MicroConfig, usize, RowSplit, SimdLevel);
+
+/// The candidate grid for a mode. The untuned default schedule is always
+/// candidate 0, so the winner can never lose to it on the measurements
+/// that picked it.
+fn candidates(mode: AutotuneMode) -> Vec<Candidate> {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let tiles: Vec<TileConfig> = match mode {
+        AutotuneMode::Smoke => vec![TileConfig::DEFAULT, TileConfig { mc: 32, kc: 128, nc: 64 }],
+        AutotuneMode::Quick => vec![
+            TileConfig::DEFAULT,
+            TileConfig { mc: 32, kc: 128, nc: 64 },
+            TileConfig { mc: 96, kc: 256, nc: 192 },
+        ],
+        AutotuneMode::Full => vec![
+            TileConfig::DEFAULT,
+            TileConfig { mc: 32, kc: 128, nc: 64 },
+            TileConfig { mc: 96, kc: 256, nc: 192 },
+            TileConfig { mc: 128, kc: 512, nc: 256 },
+        ],
+    };
+    let micros: Vec<MicroConfig> = match mode {
+        AutotuneMode::Smoke => vec![MicroConfig::DEFAULT],
+        _ => vec![
+            MicroConfig::DEFAULT,
+            MicroConfig { mr: 4, nr: 16 },
+            MicroConfig { mr: 8, nr: 16 },
+        ],
+    };
+    let mut threads = vec![1usize];
+    if hw > 1 {
+        if matches!(mode, AutotuneMode::Full) && hw > 3 {
+            threads.push(hw / 2);
+        }
+        threads.push(hw);
+    }
+    let splits: Vec<RowSplit> = match mode {
+        AutotuneMode::Smoke => vec![RowSplit::Contiguous],
+        _ => vec![RowSplit::Contiguous, RowSplit::Interleaved],
+    };
+    let simds = SimdLevel::available_levels();
+
+    let mut out = vec![(
+        TileConfig::DEFAULT,
+        MicroConfig::DEFAULT,
+        1,
+        RowSplit::Contiguous,
+        SimdLevel::Auto,
+    )];
+    for &t in &tiles {
+        for &u in &micros {
+            for &th in &threads {
+                for &sp in &splits {
+                    for &sl in &simds {
+                        let c = (t, u, th, sp, sl);
+                        if !out.contains(&c) {
+                            out.push(c);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Deterministic operands in [-1, 1) for a shape.
+fn operands(m: usize, k: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Xoshiro256pp::from_stream(0xA070_73E5, seed);
+    let mut fill = |len: usize| -> Vec<f32> {
+        (0..len).map(|_| rng.uniform(-1.0, 1.0) as f32).collect()
+    };
+    (fill(m * k), fill(k * n))
+}
+
+/// Best-of-`reps` throughput of one candidate on the FMA schedule,
+/// plus its output for the bitwise check. The first rep doubles as
+/// warmup (packing buffers, thread spawn) since best-of discards it
+/// unless it was genuinely fastest.
+fn measure(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    par: &ParallelismConfig,
+    reps: usize,
+) -> (f64, Vec<f32>) {
+    let mut best = f64::INFINITY;
+    let mut out = Vec::new();
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        let c = tiled::gemm_f32(a, b, m, k, n, ReduceStrategy::Fma, par);
+        best = best.min(t0.elapsed().as_secs_f64().max(1e-9));
+        out = c;
+    }
+    (2.0 * m as f64 * k as f64 * n as f64 / best / 1e9, out)
+}
+
+fn par_of(c: &Candidate) -> ParallelismConfig {
+    ParallelismConfig {
+        threads: c.2,
+        tiles: c.0,
+        micro: c.1,
+        split: c.3,
+        simd: c.4,
+    }
+}
+
+/// Run the search and persist the manifest. Returns the manifest after
+/// verifying it reloads byte-identically from `cfg.path`.
+pub fn run(cfg: &AutotuneConfig) -> Result<TuningManifest> {
+    let shapes = shape_classes(cfg.mode);
+    let cands = candidates(cfg.mode);
+    let reps = cfg.mode.reps();
+    println!(
+        "autotune[{}]: {} shape classes x {} candidates (cpu {})",
+        cfg.mode.name(),
+        shapes.len(),
+        cands.len(),
+        cpu_features()
+    );
+
+    let mut manifest = TuningManifest::new(cpu_features());
+    for (si, s) in shapes.iter().enumerate() {
+        let (a, b) = operands(s.m, s.k, s.n, cfg.seed ^ si as u64);
+        // Scalar serial reference: the bitwise ground truth every
+        // candidate must reproduce.
+        let reference = tiled::gemm_f32(
+            &a,
+            &b,
+            s.m,
+            s.k,
+            s.n,
+            ReduceStrategy::Fma,
+            &ParallelismConfig { simd: SimdLevel::Scalar, ..ParallelismConfig::serial() },
+        );
+
+        let mut baseline = 0.0f64;
+        let mut best: Option<(f64, &Candidate)> = None;
+        for (ci, c) in cands.iter().enumerate() {
+            let (gflops, out) = measure(s.m, s.k, s.n, &a, &b, &par_of(c), reps);
+            crate::ensure!(
+                out.iter().zip(&reference).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "autotune: candidate {:?} is not bitwise-equal to the scalar \
+                 serial engine at {} ({}x{}x{})",
+                c,
+                s.label,
+                s.m,
+                s.k,
+                s.n
+            );
+            if ci == 0 {
+                baseline = gflops;
+            }
+            let better = match best {
+                None => true,
+                Some((g, _)) => gflops > g,
+            };
+            if better {
+                best = Some((gflops, c));
+            }
+        }
+        let (gflops, c) = best.expect("candidate grid is never empty");
+        println!(
+            "autotune[{}]: {:<24} {}x{}x{} -> mc={} kc={} nc={} mr={} nr={} \
+             threads={} split={} simd={} ({:.2} gflops, baseline {:.2})",
+            cfg.mode.name(),
+            s.label,
+            s.m,
+            s.k,
+            s.n,
+            c.0.mc,
+            c.0.kc,
+            c.0.nc,
+            c.1.mr,
+            c.1.nr,
+            c.2,
+            c.3.name(),
+            c.4.resolve().name(),
+            gflops,
+            baseline
+        );
+        manifest.push(TunedShape {
+            label: s.label.clone(),
+            m: s.m,
+            k: s.k,
+            n: s.n,
+            tiles: c.0,
+            micro: c.1,
+            threads: c.2,
+            split: c.3,
+            simd: c.4.resolve(),
+            gflops,
+            baseline_gflops: baseline,
+        });
+    }
+
+    manifest
+        .save(&cfg.path)
+        .with_context(|| format!("autotune: writing manifest to {}", cfg.path.display()))?;
+    let reloaded = TuningManifest::load(&cfg.path)
+        .with_context(|| format!("autotune: re-reading {}", cfg.path.display()))?;
+    crate::ensure!(
+        reloaded == manifest,
+        "autotune: manifest did not round-trip through {}",
+        cfg.path.display()
+    );
+    println!(
+        "autotune[{}]: wrote {} shapes to {}",
+        cfg.mode.name(),
+        manifest.entries.len(),
+        cfg.path.display()
+    );
+    Ok(manifest)
+}
+
+/// Gate pass: re-measure each persisted *transformer* shape (labels not
+/// under `grid/`) with its tuned schedule vs the untuned default, and
+/// fail if any tuned schedule is more than 10% slower — the allowance
+/// covers run-to-run measurement noise, nothing else.
+pub fn gate(manifest: &TuningManifest, seed: u64) -> Result<usize> {
+    let mut checked = 0usize;
+    let mut losses: Vec<String> = Vec::new();
+    for (i, e) in manifest.entries.iter().enumerate() {
+        if e.label.starts_with("grid/") {
+            continue;
+        }
+        checked += 1;
+        let (a, b) = operands(e.m, e.k, e.n, seed ^ i as u64);
+        let tuned_par = ParallelismConfig {
+            threads: e.threads.max(1),
+            tiles: e.tiles,
+            micro: e.micro,
+            split: e.split,
+            simd: e.simd,
+        };
+        let (tuned, _) = measure(e.m, e.k, e.n, &a, &b, &tuned_par, 3);
+        let (default, _) = measure(e.m, e.k, e.n, &a, &b, &ParallelismConfig::serial(), 3);
+        let verdict = if tuned >= 0.9 * default { "ok" } else { "LOSS" };
+        println!(
+            "autotune gate: {:<24} {}x{}x{} tuned {:.2} vs default {:.2} gflops [{}]",
+            e.label, e.m, e.k, e.n, tuned, default, verdict
+        );
+        if tuned < 0.9 * default {
+            losses.push(format!(
+                "{} ({}x{}x{}): tuned {:.2} < default {:.2} gflops",
+                e.label, e.m, e.k, e.n, tuned, default
+            ));
+        }
+    }
+    crate::ensure!(
+        losses.is_empty(),
+        "autotune gate: tuned schedule loses to the untuned default at {} \
+         transformer shape(s):\n  {}",
+        losses.len(),
+        losses.join("\n  ")
+    );
+    Ok(checked)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_shape_classes_are_small_and_deduped() {
+        let shapes = shape_classes(AutotuneMode::Smoke);
+        assert!(!shapes.is_empty());
+        assert!(shapes.len() <= 8, "smoke must stay tiny, got {}", shapes.len());
+        for (i, s) in shapes.iter().enumerate() {
+            assert!(s.m > 0 && s.k > 0 && s.n > 0);
+            for t in &shapes[i + 1..] {
+                assert_ne!((s.m, s.k, s.n), (t.m, t.k, t.n), "duplicate shape {}", s.label);
+            }
+        }
+        // Both sources are represented.
+        assert!(shapes.iter().any(|s| s.label.starts_with("gpt2/")));
+        assert!(shapes.iter().any(|s| s.label.starts_with("grid/")));
+    }
+
+    #[test]
+    fn candidate_grid_leads_with_the_untuned_default() {
+        for mode in [AutotuneMode::Smoke, AutotuneMode::Quick, AutotuneMode::Full] {
+            let cands = candidates(mode);
+            assert_eq!(
+                cands[0],
+                (
+                    TileConfig::DEFAULT,
+                    MicroConfig::DEFAULT,
+                    1,
+                    RowSplit::Contiguous,
+                    SimdLevel::Auto
+                )
+            );
+            // No duplicate points — the search never measures twice.
+            for (i, c) in cands.iter().enumerate() {
+                assert!(!cands[i + 1..].contains(c), "duplicate candidate {c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn smoke_run_round_trips_and_gates() {
+        let path = std::env::temp_dir()
+            .join(format!("vabft-autotune-test-{}.tsv", std::process::id()));
+        let cfg = AutotuneConfig { mode: AutotuneMode::Smoke, seed: 7, path: path.clone() };
+        let manifest = run(&cfg).unwrap();
+        assert!(!manifest.entries.is_empty());
+        assert_eq!(TuningManifest::load(&path).unwrap(), manifest);
+        // Every persisted level is concrete and executable here.
+        for e in &manifest.entries {
+            assert_ne!(e.simd, SimdLevel::Auto);
+            assert!(e.simd.is_available());
+            assert!(e.gflops > 0.0 && e.baseline_gflops > 0.0);
+        }
+        let checked = gate(&manifest, 7).unwrap();
+        assert!(checked > 0);
+        std::fs::remove_file(&path).ok();
+    }
+}

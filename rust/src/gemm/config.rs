@@ -1,0 +1,356 @@
+//! [`EngineConfig`]: the one construction surface for engine execution.
+//!
+//! Before this module, callers assembled execution state from four
+//! free-standing pieces — [`ParallelismConfig`], [`TileConfig`],
+//! [`MicroConfig`], [`RowSplit`] — and a manifest lookup they had to
+//! remember to do themselves. `EngineConfig` collapses that into one
+//! builder:
+//!
+//! ```
+//! use vabft::prelude::*;
+//!
+//! // Auto: detected CPU features + tuning manifest (when present).
+//! let auto = EngineConfig::auto();
+//! // Explicit overrides always win over the manifest.
+//! let cfg = EngineConfig::new().threads(4).tile(32, 128, 64).micro(4, 16);
+//! let engine = GemmEngine::with_config(AccumModel::wide(Precision::Bf16), cfg);
+//! assert_eq!(engine.parallelism().threads, 4);
+//! # let _ = auto;
+//! ```
+//!
+//! Unset fields resolve per shape: [`EngineConfig::resolve_for`] consults
+//! the loaded [`TuningManifest`] for the nearest tuned shape class and
+//! fills only the fields the caller left open, so `--mr 4` on the CLI
+//! still pins MR even when the manifest disagrees. Everything this type
+//! chooses is *scheduling* — by the schedule-preservation invariant the
+//! results are bitwise-identical for every resolution.
+
+use super::simd::{cpu_features, SimdLevel};
+use super::tiled::{MicroConfig, ParallelismConfig, RowSplit, TileConfig};
+use crate::runtime::TuningManifest;
+
+/// Builder for engine execution configuration: threads, cache tiles,
+/// microkernel shape, row split, SIMD level, and an optional tuning
+/// manifest that fills whatever the caller leaves unset.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EngineConfig {
+    /// `None` = 1 worker; `Some(0)` = one worker per hardware thread.
+    threads: Option<usize>,
+    tiles: Option<TileConfig>,
+    micro: Option<MicroConfig>,
+    split: Option<RowSplit>,
+    simd: Option<SimdLevel>,
+    manifest: Option<TuningManifest>,
+}
+
+impl EngineConfig {
+    /// Empty configuration: every field unset, no manifest. Resolves to
+    /// [`ParallelismConfig::serial`] — the deterministic library default.
+    pub fn new() -> EngineConfig {
+        EngineConfig::default()
+    }
+
+    /// Hands-off configuration: one worker per hardware thread, SIMD
+    /// level from CPU detection, and the tuning manifest at
+    /// [`TuningManifest::default_path`] when one is present and valid
+    /// (quietly skipped otherwise — auto must never fail).
+    pub fn auto() -> EngineConfig {
+        EngineConfig {
+            threads: Some(0),
+            manifest: TuningManifest::load_default().ok().flatten(),
+            ..EngineConfig::default()
+        }
+    }
+
+    /// Set the worker-thread count (`0` = one per hardware thread).
+    pub fn threads(mut self, threads: usize) -> EngineConfig {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Set the cache-blocking tile sizes (all must be positive).
+    pub fn tile(self, mc: usize, kc: usize, nc: usize) -> EngineConfig {
+        self.tiles(TileConfig::new(mc, kc, nc))
+    }
+
+    /// Set the cache-blocking tile configuration.
+    pub fn tiles(mut self, tiles: TileConfig) -> EngineConfig {
+        self.tiles = Some(tiles);
+        self
+    }
+
+    /// Set the microkernel (register-block) shape.
+    pub fn micro(self, mr: usize, nr: usize) -> EngineConfig {
+        self.micro_config(MicroConfig::new(mr, nr))
+    }
+
+    /// Set the microkernel shape from a [`MicroConfig`].
+    pub fn micro_config(mut self, micro: MicroConfig) -> EngineConfig {
+        self.micro = Some(micro);
+        self
+    }
+
+    /// Set the row-split policy.
+    pub fn split(mut self, split: RowSplit) -> EngineConfig {
+        self.split = Some(split);
+        self
+    }
+
+    /// Force a SIMD dispatch level (for A/B testing; `Auto` re-enables
+    /// detection).
+    pub fn simd(mut self, simd: SimdLevel) -> EngineConfig {
+        self.simd = Some(simd);
+        self
+    }
+
+    /// Attach a tuning manifest; its per-shape winners fill whatever
+    /// fields are still unset at [`EngineConfig::resolve_for`] time.
+    pub fn manifest(mut self, manifest: TuningManifest) -> EngineConfig {
+        self.manifest = Some(manifest);
+        self
+    }
+
+    /// The attached tuning manifest, if any.
+    pub fn manifest_ref(&self) -> Option<&TuningManifest> {
+        self.manifest.as_ref()
+    }
+
+    /// Resolve shape-blind: unset fields take the library defaults
+    /// (1 worker, [`TileConfig::DEFAULT`], [`MicroConfig::DEFAULT`],
+    /// contiguous split, auto SIMD). The manifest is ignored here — it is
+    /// keyed by shape; use [`EngineConfig::resolve_for`] when one is
+    /// known.
+    pub fn resolve(&self) -> ParallelismConfig {
+        let threads = match self.threads {
+            None => 1,
+            Some(0) => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            Some(t) => t,
+        };
+        ParallelismConfig {
+            threads,
+            tiles: self.tiles.unwrap_or(TileConfig::DEFAULT),
+            micro: self.micro.unwrap_or(MicroConfig::DEFAULT),
+            split: self.split.unwrap_or_default(),
+            simd: self.simd.unwrap_or_default(),
+        }
+    }
+
+    /// Resolve for one GEMM shape: explicit fields always win; fields
+    /// left unset take the nearest tuned shape class from the manifest
+    /// (when attached and within [`TuningManifest::lookup`]'s distance
+    /// cap), then the library defaults. Pure scheduling — the returned
+    /// configuration never changes a result bit.
+    pub fn resolve_for(&self, m: usize, k: usize, n: usize) -> ParallelismConfig {
+        let mut base = self.resolve();
+        if let Some(entry) = self.manifest.as_ref().and_then(|man| man.lookup(m, k, n)) {
+            if self.tiles.is_none() {
+                base.tiles = entry.tiles;
+            }
+            if self.micro.is_none() {
+                base.micro = entry.micro;
+            }
+            // `Some(0)` asked for auto threads; tuned counts refine both
+            // that and the unset default.
+            if !matches!(self.threads, Some(t) if t > 0) {
+                base.threads = entry.threads.max(1);
+            }
+            if self.split.is_none() {
+                base.split = entry.split;
+            }
+            if self.simd.is_none() {
+                base.simd = entry.simd;
+            }
+        }
+        base
+    }
+
+    /// The shared CLI flag helper (`gemm`, `campaign`, `serve-replay`,
+    /// `autotune` and the benches all call exactly this): reads
+    /// `--threads N` (0 = auto), `--mc/--kc/--nc`, `--mr/--nr`,
+    /// `--split contiguous|interleaved`,
+    /// `--simd auto|scalar|avx2|avx512|neon` and `--manifest PATH`.
+    ///
+    /// Flags that are absent stay *unset* (so the manifest may fill
+    /// them); present-but-invalid values exit with a usage error, and a
+    /// forced `--simd` level the CPU cannot run is rejected up front
+    /// rather than silently demoted. Without `--manifest`, the default
+    /// manifest path is tried and quietly skipped when absent; an
+    /// explicit `--manifest` that fails to load is fatal. Successful
+    /// loads print one `tuning manifest: …` line (CI greps for it).
+    pub fn from_args(args: &crate::cli::Args) -> EngineConfig {
+        let mut cfg = EngineConfig::new();
+        if args.opt("threads").is_some() {
+            cfg.threads = Some(args.opt_or("threads", 1usize));
+        }
+        if args.opt("mc").is_some() || args.opt("kc").is_some() || args.opt("nc").is_some() {
+            let d = TileConfig::DEFAULT;
+            cfg.tiles = Some(TileConfig::new(
+                args.opt_or("mc", d.mc),
+                args.opt_or("kc", d.kc),
+                args.opt_or("nc", d.nc),
+            ));
+        }
+        if args.opt("mr").is_some() || args.opt("nr").is_some() {
+            let d = MicroConfig::DEFAULT;
+            cfg.micro = Some(MicroConfig::new(args.opt_or("mr", d.mr), args.opt_or("nr", d.nr)));
+        }
+        if let Some(s) = args.opt("split") {
+            cfg.split = Some(RowSplit::parse(s).unwrap_or_else(|| {
+                eprintln!("error: invalid value '{s}' for --split (contiguous|interleaved)");
+                std::process::exit(2);
+            }));
+        }
+        if let Some(s) = args.opt("simd") {
+            let level = SimdLevel::parse(s).unwrap_or_else(|| {
+                eprintln!("error: invalid value '{s}' for --simd (auto|scalar|avx2|avx512|neon)");
+                std::process::exit(2);
+            });
+            if !level.is_available() {
+                eprintln!("error: --simd {level} is unavailable on this CPU ({})", cpu_features());
+                std::process::exit(2);
+            }
+            cfg.simd = Some(level);
+        }
+        match args.opt("manifest") {
+            Some(path) => {
+                let p = std::path::Path::new(path);
+                match TuningManifest::load(p) {
+                    Ok(man) => {
+                        println!(
+                            "tuning manifest: loaded {} shapes from {} (cpu {})",
+                            man.entries.len(),
+                            p.display(),
+                            man.cpu
+                        );
+                        cfg.manifest = Some(man);
+                    }
+                    Err(e) => {
+                        eprintln!("error: --manifest {path}: {e}");
+                        std::process::exit(1);
+                    }
+                }
+            }
+            None => match TuningManifest::load_default() {
+                Ok(Some(man)) => {
+                    println!(
+                        "tuning manifest: loaded {} shapes from {} (cpu {})",
+                        man.entries.len(),
+                        TuningManifest::default_path().display(),
+                        man.cpu
+                    );
+                    cfg.manifest = Some(man);
+                }
+                Ok(None) => {}
+                Err(e) => eprintln!("warning: ignoring default tuning manifest: {e}"),
+            },
+        }
+        cfg
+    }
+}
+
+/// A fully-specified [`ParallelismConfig`] is an [`EngineConfig`] with
+/// every field pinned (and no manifest) — the migration shim for call
+/// sites built before the builder existed.
+impl From<ParallelismConfig> for EngineConfig {
+    fn from(par: ParallelismConfig) -> EngineConfig {
+        let ParallelismConfig { threads, tiles, micro, split, simd } = par;
+        EngineConfig {
+            threads: Some(threads),
+            tiles: Some(tiles),
+            micro: Some(micro),
+            split: Some(split),
+            simd: Some(simd),
+            manifest: None,
+        }
+    }
+}
+
+/// Shape-blind resolution ([`EngineConfig::resolve`]).
+impl From<EngineConfig> for ParallelismConfig {
+    fn from(cfg: EngineConfig) -> ParallelismConfig {
+        cfg.resolve()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::TunedShape;
+
+    fn tuned_entry(m: usize, k: usize, n: usize) -> TunedShape {
+        TunedShape {
+            label: "test".to_string(),
+            m,
+            k,
+            n,
+            tiles: TileConfig { mc: 16, kc: 32, nc: 48 },
+            micro: MicroConfig { mr: 4, nr: 16 },
+            threads: 3,
+            split: RowSplit::Interleaved,
+            simd: SimdLevel::Scalar,
+            gflops: 2.0,
+            baseline_gflops: 1.0,
+        }
+    }
+
+    #[test]
+    fn empty_config_resolves_to_serial() {
+        assert_eq!(EngineConfig::new().resolve(), ParallelismConfig::serial());
+        assert_eq!(EngineConfig::new().resolve_for(64, 64, 64), ParallelismConfig::serial());
+    }
+
+    #[test]
+    fn auto_resolves_to_hardware_threads() {
+        let par = EngineConfig::auto().resolve();
+        assert!(par.threads >= 1);
+        assert_eq!(par.tiles, TileConfig::DEFAULT);
+    }
+
+    #[test]
+    fn manifest_fills_only_unset_fields() {
+        let mut man = TuningManifest::new("test");
+        man.push(tuned_entry(64, 64, 64));
+        let cfg = EngineConfig::new().manifest(man).tile(8, 8, 8).threads(2);
+        let par = cfg.resolve_for(64, 64, 64);
+        // Explicit wins.
+        assert_eq!(par.tiles, TileConfig { mc: 8, kc: 8, nc: 8 });
+        assert_eq!(par.threads, 2);
+        // Unset fields come from the tuned entry.
+        assert_eq!(par.micro, MicroConfig { mr: 4, nr: 16 });
+        assert_eq!(par.split, RowSplit::Interleaved);
+        assert_eq!(par.simd, SimdLevel::Scalar);
+        // A shape far from every tuned class falls back to defaults.
+        let far = cfg.resolve_for(1, 1_000_000, 1);
+        assert_eq!(far.micro, MicroConfig::DEFAULT);
+    }
+
+    #[test]
+    fn parallelism_round_trips_through_engine_config() {
+        let par = ParallelismConfig::with_threads(5)
+            .tiles(TileConfig::new(4, 16, 8))
+            .micro(MicroConfig::new(2, 4))
+            .split(RowSplit::Interleaved)
+            .simd(SimdLevel::Scalar);
+        let cfg: EngineConfig = par.into();
+        assert_eq!(ParallelismConfig::from(cfg.clone()), par);
+        // And the manifest cannot override pinned fields.
+        let mut man = TuningManifest::new("test");
+        man.push(tuned_entry(8, 8, 8));
+        assert_eq!(cfg.manifest(man).resolve_for(8, 8, 8), par);
+    }
+
+    #[test]
+    fn from_args_distinguishes_absent_from_default() {
+        let args = crate::cli::Args::parse_from(
+            ["gemm", "--mr", "4", "--nr", "16"].map(String::from),
+        );
+        let cfg = EngineConfig::from_args(&args);
+        let mut man = TuningManifest::new("test");
+        man.push(tuned_entry(64, 64, 64));
+        let par = cfg.manifest(man).resolve_for(64, 64, 64);
+        // --mr/--nr were given: pinned.
+        assert_eq!(par.micro, MicroConfig { mr: 4, nr: 16 });
+        // --mc/--kc/--nc were not: the manifest fills them.
+        assert_eq!(par.tiles, TileConfig { mc: 16, kc: 32, nc: 48 });
+    }
+}

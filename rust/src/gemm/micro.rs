@@ -22,6 +22,14 @@
 //! The pairwise strategy has no microkernel here: its reduction tree
 //! depends on the full K extent, so it is staged on packed B panels in
 //! [`crate::gemm::tiled`] instead.
+//!
+//! For `f32`/`f64` the scalar kernels below are fronted by the explicit
+//! `std::arch` SIMD kernels in [`crate::gemm::simd`], selected per call
+//! by a resolved [`SimdLevel`] — bitwise-identical by construction (the
+//! SIMD kernels vectorize the same across-outputs axis) and enforced by
+//! `tests/simd_dispatch.rs`.
+
+use super::simd::{self, SimdLevel};
 
 /// Arithmetic surface the packed engine needs from an element type.
 ///
@@ -35,6 +43,28 @@ pub trait Element: Copy + Default + PartialEq + Send + Sync + std::fmt::Debug + 
     fn add(self, rhs: Self) -> Self;
     /// Fused multiply-add `self * b + c` (one rounding).
     fn madd(self, b: Self, c: Self) -> Self;
+
+    /// Attempt the micro-tile update with an explicit SIMD kernel
+    /// ([`crate::gemm::simd`]) at the given (already resolved) level.
+    /// Returns `false` when no kernel covers this type / ISA / (mr, nr)
+    /// combination, in which case the caller must run the scalar kernel
+    /// — which produces the same bits, since SIMD kernels vectorize only
+    /// across independent output columns. The default declines.
+    fn run_simd(
+        _level: SimdLevel,
+        _fma: bool,
+        _apanel: &[Self],
+        _bpanel: &[Self],
+        _kb: usize,
+        _c: &mut [Self],
+        _ldc: usize,
+        _h: usize,
+        _w: usize,
+        _mr: usize,
+        _nr: usize,
+    ) -> bool {
+        false
+    }
 }
 
 impl Element for f32 {
@@ -50,6 +80,22 @@ impl Element for f32 {
     fn madd(self, b: Self, c: Self) -> Self {
         self.mul_add(b, c)
     }
+    #[inline]
+    fn run_simd(
+        level: SimdLevel,
+        fma: bool,
+        apanel: &[f32],
+        bpanel: &[f32],
+        kb: usize,
+        c: &mut [f32],
+        ldc: usize,
+        h: usize,
+        w: usize,
+        mr: usize,
+        nr: usize,
+    ) -> bool {
+        simd::run_f32(level, fma, apanel, bpanel, kb, c, ldc, h, w, mr, nr)
+    }
 }
 
 impl Element for f64 {
@@ -64,6 +110,22 @@ impl Element for f64 {
     #[inline(always)]
     fn madd(self, b: Self, c: Self) -> Self {
         self.mul_add(b, c)
+    }
+    #[inline]
+    fn run_simd(
+        level: SimdLevel,
+        fma: bool,
+        apanel: &[f64],
+        bpanel: &[f64],
+        kb: usize,
+        c: &mut [f64],
+        ldc: usize,
+        h: usize,
+        w: usize,
+        mr: usize,
+        nr: usize,
+    ) -> bool {
+        simd::run_f64(level, fma, apanel, bpanel, kb, c, ldc, h, w, mr, nr)
     }
 }
 
@@ -81,12 +143,18 @@ pub const MAX_MICRO: usize = 32;
 ///   accumulate into scratch and are not stored.
 /// * `fma` — `true` runs the FMA schedule (`madd`), `false` the
 ///   sequential schedule (`mul` then `add`).
+/// * `simd` — a **resolved** [`SimdLevel`] (never `Auto`; the engine
+///   resolves once per GEMM call). Non-`Scalar` levels first offer the
+///   tile to [`Element::run_simd`]; a declined tile (or `Scalar`) runs
+///   the scalar kernels below. Either way the bits are identical —
+///   dispatch is pure scheduling.
 ///
 /// Dispatches to a monomorphized kernel for the supported (mr, nr)
 /// sizes and to a dynamic-size fallback otherwise (bitwise-identical,
 /// just slower).
 #[inline]
 pub fn run_micro<T: Element>(
+    simd: SimdLevel,
     fma: bool,
     apanel: &[T],
     bpanel: &[T],
@@ -98,6 +166,11 @@ pub fn run_micro<T: Element>(
     mr: usize,
     nr: usize,
 ) {
+    if simd != SimdLevel::Scalar
+        && T::run_simd(simd, fma, apanel, bpanel, kb, c, ldc, h, w, mr, nr)
+    {
+        return;
+    }
     match (fma, mr, nr) {
         (false, 2, 4) => ukr::<T, 2, 4, false>(apanel, bpanel, kb, c, ldc, h, w),
         (false, 2, 8) => ukr::<T, 2, 8, false>(apanel, bpanel, kb, c, ldc, h, w),
@@ -132,6 +205,7 @@ pub fn run_micro<T: Element>(
 #[allow(clippy::too_many_arguments)]
 #[inline]
 pub fn run_micro_fused<T: Element>(
+    simd: SimdLevel,
     fma: bool,
     apanel: &[T],
     bpanel: &[T],
@@ -145,7 +219,7 @@ pub fn run_micro_fused<T: Element>(
     row0: usize,
     on_row: &mut dyn FnMut(usize),
 ) {
-    run_micro(fma, apanel, bpanel, kb, c, ldc, h, w, mr, nr);
+    run_micro(simd, fma, apanel, bpanel, kb, c, ldc, h, w, mr, nr);
     for r in 0..h {
         on_row(row0 + r);
     }
@@ -300,8 +374,15 @@ mod tests {
             for fma in [false, true] {
                 let want = reference(fma, &a, &b, m, k, n);
                 let mut c = vec![0.0; m * n];
-                run_micro(fma, &ap, &bp, k, &mut c, n, m, n, mr, nr);
+                run_micro(SimdLevel::Scalar, fma, &ap, &bp, k, &mut c, n, m, n, mr, nr);
                 assert_eq!(c, want, "mr={mr} nr={nr} fma={fma}");
+                // Every available explicit level must produce the same
+                // bits through the public entry point.
+                for level in SimdLevel::available_levels() {
+                    let mut c = vec![0.0; m * n];
+                    run_micro(level, fma, &ap, &bp, k, &mut c, n, m, n, mr, nr);
+                    assert_eq!(c, want, "mr={mr} nr={nr} fma={fma} {level}");
+                }
             }
         }
     }
@@ -317,10 +398,14 @@ mod tests {
         let (mr, nr) = (4, 4);
         let (ap, bp) = pack_for_tile(&a, &b, m, k, n, mr, nr);
         let want = reference(false, &a, &b, m, k, n);
-        let mut c = vec![0.0; m * n];
         let split = 17;
-        run_micro(false, &ap[..split * mr], &bp[..split * nr], split, &mut c, n, m, n, mr, nr);
-        run_micro(false, &ap[split * mr..], &bp[split * nr..], k - split, &mut c, n, m, n, mr, nr);
-        assert_eq!(c, want);
+        for level in SimdLevel::available_levels() {
+            let mut c = vec![0.0; m * n];
+            let (ap1, bp1) = (&ap[..split * mr], &bp[..split * nr]);
+            run_micro(level, false, ap1, bp1, split, &mut c, n, m, n, mr, nr);
+            let (ap2, bp2) = (&ap[split * mr..], &bp[split * nr..]);
+            run_micro(level, false, ap2, bp2, k - split, &mut c, n, m, n, mr, nr);
+            assert_eq!(c, want, "{level}");
+        }
     }
 }

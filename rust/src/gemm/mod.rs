@@ -23,8 +23,9 @@
 //! Engine execution is delegated to [`tiled`]: an (MC, KC, NC)
 //! cache-blocked, [`std::thread::scope`]-parallel engine whose inner
 //! loops run on *packed* operand panels ([`pack`]) through MR×NR
-//! register-blocked microkernels ([`micro`]), configured by
-//! [`ParallelismConfig`] (`GemmEngine::with_parallelism`). Its contract
+//! register-blocked microkernels ([`micro`], runtime-dispatched to
+//! explicit SIMD variants by [`simd`]), configured by the
+//! [`EngineConfig`] builder (`GemmEngine::with_config`). Its contract
 //! is **schedule preservation**: results are bitwise-identical to the
 //! naive reference kernels in [`kernels`] for every strategy, tile
 //! shape, microkernel shape and thread count, because parallelism,
@@ -36,12 +37,18 @@
 //! re-deriving thresholds. The invariant is locked in by
 //! `tests/tiled_equivalence.rs` and the CI microkernel smoke bench.
 
+pub mod autotune;
+pub mod config;
 pub mod exact;
 pub mod kernels;
 pub mod micro;
 pub mod pack;
+pub mod simd;
 pub mod tiled;
 
+pub use autotune::{AutotuneConfig, AutotuneMode};
+pub use config::EngineConfig;
+pub use simd::{cpu_features, SimdLevel};
 pub use tiled::{MicroConfig, ParallelismConfig, RowSplit, TileConfig};
 
 use crate::fp::Precision;
@@ -226,23 +233,35 @@ pub struct GemmOutput {
 
 /// Executes GEMMs and reductions under an [`AccumModel`], on the tiled
 /// parallel engine ([`tiled`]).
+///
+/// Execution is configured by an [`EngineConfig`]: each GEMM call
+/// resolves it *for that call's shape* ([`EngineConfig::resolve_for`]),
+/// so an engine built with `EngineConfig::auto()` picks tuned blocking
+/// per layer shape from the tuning manifest. Resolution is pure
+/// scheduling — results are bitwise-identical whatever it returns.
 #[derive(Debug, Clone)]
 pub struct GemmEngine {
     model: AccumModel,
-    par: ParallelismConfig,
+    config: EngineConfig,
 }
 
 impl GemmEngine {
     /// Serial engine (1 worker, default tiles). Numerically identical to
-    /// every other [`ParallelismConfig`] by the schedule-preservation
+    /// every other [`EngineConfig`] by the schedule-preservation
     /// invariant.
     pub fn new(model: AccumModel) -> GemmEngine {
-        GemmEngine { model, par: ParallelismConfig::serial() }
+        GemmEngine { model, config: EngineConfig::new() }
     }
 
-    /// Engine with an explicit execution configuration.
+    /// Engine with an execution configuration builder.
+    pub fn with_config(model: AccumModel, config: EngineConfig) -> GemmEngine {
+        GemmEngine { model, config }
+    }
+
+    /// Engine with a fully-pinned execution configuration (every field of
+    /// `par` is explicit; no manifest lookups happen).
     pub fn with_parallelism(model: AccumModel, par: ParallelismConfig) -> GemmEngine {
-        GemmEngine { model, par }
+        Self::with_config(model, par.into())
     }
 
     /// The accumulation model this engine executes.
@@ -250,14 +269,27 @@ impl GemmEngine {
         self.model
     }
 
-    /// The execution (threads + tiles) configuration.
+    /// The execution configuration builder.
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    /// The execution configuration, resolved shape-blind
+    /// ([`EngineConfig::resolve`]). Per-call resolution may differ when a
+    /// tuning manifest is attached.
     pub fn parallelism(&self) -> ParallelismConfig {
-        self.par
+        self.config.resolve()
     }
 
     /// Swap the execution configuration (does not change results).
+    pub fn set_config(&mut self, config: EngineConfig) {
+        self.config = config;
+    }
+
+    /// Swap in a fully-pinned execution configuration (does not change
+    /// results).
     pub fn set_parallelism(&mut self, par: ParallelismConfig) {
-        self.par = par;
+        self.config = par.into();
     }
 
     /// C = A·B under the engine's accumulation model.
@@ -295,15 +327,17 @@ impl GemmEngine {
 
         // 2. Multiply-accumulate in the work precision, on the tiled
         //    parallel engine (bitwise-equal to the reference kernels).
+        //    The execution config resolves per shape (pure scheduling).
+        let par = self.config.resolve_for(rows, k, cols);
         let acc_data: Vec<f64> = match m.work {
-            Precision::F64 => tiled::gemm_f64(&aq, &bq, rows, k, cols, m.strategy, &self.par),
+            Precision::F64 => tiled::gemm_f64(&aq, &bq, rows, k, cols, m.strategy, &par),
             Precision::F32 => {
                 let a32 = kernels::to_f32_vec(&aq);
                 let b32 = kernels::to_f32_vec(&bq);
-                let c = tiled::gemm_f32(&a32, &b32, rows, k, cols, m.strategy, &self.par);
+                let c = tiled::gemm_f32(&a32, &b32, rows, k, cols, m.strategy, &par);
                 c.into_iter().map(|x| x as f64).collect()
             }
-            other => tiled::gemm_generic(&aq, &bq, rows, k, cols, other, m.strategy, &self.par),
+            other => tiled::gemm_generic(&aq, &bq, rows, k, cols, other, m.strategy, &par),
         };
         let acc = Matrix::from_vec(rows, cols, acc_data);
 
@@ -364,15 +398,16 @@ impl GemmEngine {
             out
         };
 
+        let par = self.config.resolve_for(rows, k, cols);
         let acc_data: Vec<f64> = match m.work {
-            Precision::F64 => tiled::gemm_f64(&aq, &bq, rows, k, cols, m.strategy, &self.par),
+            Precision::F64 => tiled::gemm_f64(&aq, &bq, rows, k, cols, m.strategy, &par),
             Precision::F32 => {
                 let a32 = kernels::to_f32_vec(&aq);
                 let b32 = kernels::to_f32_vec(&bq);
-                let c = tiled::gemm_f32(&a32, &b32, rows, k, cols, m.strategy, &self.par);
+                let c = tiled::gemm_f32(&a32, &b32, rows, k, cols, m.strategy, &par);
                 c.into_iter().map(|x| x as f64).collect()
             }
-            other => tiled::gemm_generic(&aq, &bq, rows, k, cols, other, m.strategy, &self.par),
+            other => tiled::gemm_generic(&aq, &bq, rows, k, cols, other, m.strategy, &par),
         };
         let acc = Matrix::from_vec(rows, cols, acc_data);
         let c = if m.quantizes_output() || m.out != m.work {
@@ -435,13 +470,14 @@ impl GemmEngine {
         let sink: std::sync::Mutex<Vec<FusedRowCheck>> =
             std::sync::Mutex::new(Vec::with_capacity(rows));
         let mut via_epilogue = true;
+        let par = self.config.resolve_for(rows, k, cols);
         let acc_data: Vec<f64> = match m.work {
             Precision::F64 => {
                 let ep = |i: usize, row: &[f64]| {
                     let rc = fused_check_row(row, probe, m.work, m.strategy, i);
                     sink.lock().unwrap().push(rc);
                 };
-                tiled::gemm_f64_fused(&aq, &bq, rows, k, cols, m.strategy, &self.par, &ep)
+                tiled::gemm_f64_fused(&aq, &bq, rows, k, cols, m.strategy, &par, &ep)
             }
             Precision::F32 => {
                 let a32 = kernels::to_f32_vec(&aq);
@@ -453,13 +489,12 @@ impl GemmEngine {
                     let rc = fused_check_row(&wide, probe, m.work, m.strategy, i);
                     sink.lock().unwrap().push(rc);
                 };
-                let c =
-                    tiled::gemm_f32_fused(&a32, &b32, rows, k, cols, m.strategy, &self.par, &ep);
+                let c = tiled::gemm_f32_fused(&a32, &b32, rows, k, cols, m.strategy, &par, &ep);
                 c.into_iter().map(|x| x as f64).collect()
             }
             other => {
                 via_epilogue = false;
-                tiled::gemm_generic(&aq, &bq, rows, k, cols, other, m.strategy, &self.par)
+                tiled::gemm_generic(&aq, &bq, rows, k, cols, other, m.strategy, &par)
             }
         };
         let acc = Matrix::from_vec(rows, cols, acc_data);
@@ -508,17 +543,18 @@ impl GemmEngine {
         assert_eq!(a.len(), m * k, "matmul_work: A shape mismatch");
         assert_eq!(b.len(), k * n, "matmul_work: B shape mismatch");
         let model = self.model;
+        let par = self.config.resolve_for(m, k, n);
         match model.work {
-            Precision::F64 => tiled::gemm_f64(a, b, m, k, n, model.strategy, &self.par),
+            Precision::F64 => tiled::gemm_f64(a, b, m, k, n, model.strategy, &par),
             Precision::F32 => {
                 let a32 = kernels::to_f32_vec(a);
                 let b32 = kernels::to_f32_vec(b);
-                tiled::gemm_f32(&a32, &b32, m, k, n, model.strategy, &self.par)
+                tiled::gemm_f32(&a32, &b32, m, k, n, model.strategy, &par)
                     .into_iter()
                     .map(|x| x as f64)
                     .collect()
             }
-            other => tiled::gemm_generic(a, b, m, k, n, other, model.strategy, &self.par),
+            other => tiled::gemm_generic(a, b, m, k, n, other, model.strategy, &par),
         }
     }
 

@@ -1,0 +1,691 @@
+//! Explicit `std::arch` SIMD microkernels behind runtime CPU-feature
+//! dispatch.
+//!
+//! The scalar microkernels in [`crate::gemm::micro`] rely on the
+//! autovectorizer finding the one legal vector axis. This module makes
+//! that axis explicit: hand-written AVX2+FMA kernels on x86-64 and NEON
+//! kernels on aarch64, selected at runtime by [`SimdLevel`] and CPU
+//! feature detection.
+//!
+//! **Why these kernels are schedule-preserving.** Each vector register
+//! holds accumulators for *independent output columns* of one output
+//! row. Per K step the kernel broadcasts one A value, loads NR packed B
+//! values, and performs one vector op per accumulator register — so lane
+//! `j` executes exactly the scalar schedule for element `(i, j)`:
+//! `acc = acc + round(a·b)` (sequential — `add(mul)` with the same
+//! operand order as [`crate::gemm::micro::Element::add`]) or one fused
+//! `acc = fma(a, b, acc)` per step, K ascending. Vector IEEE-754 ops are
+//! lane-wise exact copies of their scalar counterparts, so the output is
+//! **bitwise-identical** to the scalar microkernel — there is no
+//! within-K vectorization, no horizontal reduction, no re-association
+//! anywhere. Ragged tiles reuse the packing contract: padded A rows are
+//! simply skipped (they are never stored) and partial-width C columns go
+//! through a zero-padded stack buffer, with the padded B lanes being the
+//! zeros the packer wrote.
+//!
+//! Dispatch never changes results, only speed — [`SimdLevel`] is part of
+//! [`crate::gemm::ParallelismConfig`] and is covered by the same bitwise
+//! equivalence suites as threads/tiles/micro shapes
+//! (`tests/simd_dispatch.rs`, `tests/tiled_equivalence.rs`).
+//!
+//! **AVX-512 note.** 512-bit `_mm512_*` intrinsics are not stable on
+//! this crate's MSRV (1.74), so [`SimdLevel::Avx512`] — selected only
+//! when `avx512f` is actually detected, and recorded as such in tuning
+//! manifests — dispatches the widest kernels stable `std::arch` can
+//! express: the 256-bit AVX2+FMA set, double-pumped for NR = 16. True
+//! 512-bit kernels can slot in behind the same level without touching
+//! any interface once the intrinsics stabilize.
+
+/// Instruction-set level for the explicit GEMM microkernels.
+///
+/// A pure scheduling knob: every level produces bitwise-identical
+/// outputs (see the module docs); forcing a level that the host cannot
+/// execute silently falls back to [`SimdLevel::Scalar`] at
+/// [`SimdLevel::resolve`] time (CLIs reject it loudly instead).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum SimdLevel {
+    /// Detect at runtime and use the widest available level.
+    #[default]
+    Auto,
+    /// The portable scalar microkernels (autovectorized at best).
+    Scalar,
+    /// 256-bit AVX2 + FMA kernels (x86-64).
+    Avx2,
+    /// AVX-512-capable hosts (requires `avx512f`): dispatches the widest
+    /// kernels stable `std::arch` offers at this crate's MSRV — the
+    /// 256-bit AVX2+FMA set, double-pumped for NR = 16 (see the module
+    /// docs). Kept as a distinct level so manifests and bench rows
+    /// record the detected ISA truthfully.
+    Avx512,
+    /// 128-bit NEON kernels (aarch64).
+    Neon,
+}
+
+impl SimdLevel {
+    /// Every level, detection order (widest first within each arch).
+    pub const ALL: [SimdLevel; 5] =
+        [SimdLevel::Auto, SimdLevel::Scalar, SimdLevel::Avx2, SimdLevel::Avx512, SimdLevel::Neon];
+
+    /// Short lowercase name used in CLIs, manifests and bench rows.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Auto => "auto",
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Avx512 => "avx512",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// Parse a [`SimdLevel::name`] string (`auto|scalar|avx2|avx512|neon`).
+    pub fn parse(s: &str) -> Option<SimdLevel> {
+        SimdLevel::ALL.iter().copied().find(|l| l.name() == s)
+    }
+
+    /// Whether this host can execute the level's kernels right now.
+    /// `Auto` and `Scalar` are always available; explicit levels require
+    /// both the right target arch and runtime CPU-feature detection.
+    pub fn is_available(self) -> bool {
+        match self {
+            SimdLevel::Auto | SimdLevel::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx2 => {
+                std::arch::is_x86_feature_detected!("avx2")
+                    && std::arch::is_x86_feature_detected!("fma")
+            }
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx512 => {
+                SimdLevel::Avx2.is_available() && std::arch::is_x86_feature_detected!("avx512f")
+            }
+            #[cfg(target_arch = "aarch64")]
+            SimdLevel::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+            _ => false,
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Neon => false,
+            #[cfg(target_arch = "aarch64")]
+            SimdLevel::Avx2 | SimdLevel::Avx512 => false,
+        }
+    }
+
+    /// The widest level this host can execute (never `Auto`; `Scalar`
+    /// when no explicit kernels apply). Detection is cached.
+    pub fn detect() -> SimdLevel {
+        static DETECTED: std::sync::OnceLock<SimdLevel> = std::sync::OnceLock::new();
+        *DETECTED.get_or_init(|| {
+            for level in [SimdLevel::Avx512, SimdLevel::Avx2, SimdLevel::Neon] {
+                if level.is_available() {
+                    return level;
+                }
+            }
+            SimdLevel::Scalar
+        })
+    }
+
+    /// Resolve to a concrete executable level: `Auto` becomes
+    /// [`SimdLevel::detect`], an unavailable forced level degrades to
+    /// `Scalar` (bitwise-identical — dispatch is pure scheduling).
+    pub fn resolve(self) -> SimdLevel {
+        match self {
+            SimdLevel::Auto => SimdLevel::detect(),
+            level if level.is_available() => level,
+            _ => SimdLevel::Scalar,
+        }
+    }
+
+    /// The distinct concrete levels this host can execute, `Scalar`
+    /// first — the sweep axis for equivalence tests and A/B benches.
+    pub fn available_levels() -> Vec<SimdLevel> {
+        let mut out = vec![SimdLevel::Scalar];
+        for level in [SimdLevel::Avx2, SimdLevel::Avx512, SimdLevel::Neon] {
+            if level.is_available() {
+                out.push(level);
+            }
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for SimdLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Detected CPU-feature label recorded in tuning manifests and bench
+/// rows (e.g. `avx2+fma`, `avx2+fma+avx512f`, `neon`, `scalar`).
+pub fn cpu_features() -> String {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let mut feats: Vec<&str> = Vec::new();
+        if std::arch::is_x86_feature_detected!("avx2") {
+            feats.push("avx2");
+        }
+        if std::arch::is_x86_feature_detected!("fma") {
+            feats.push("fma");
+        }
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            feats.push("avx512f");
+        }
+        if feats.is_empty() {
+            "x86-64-baseline".to_string()
+        } else {
+            feats.join("+")
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            "neon".to_string()
+        } else {
+            "aarch64-baseline".to_string()
+        }
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        "scalar".to_string()
+    }
+}
+
+/// Explicit-SIMD f32 micro-tile update, bitwise-identical to the scalar
+/// [`crate::gemm::micro::run_micro`] path. Returns `false` when no
+/// kernel covers this (level, mr, nr) — the caller then runs the scalar
+/// kernel, which produces the same bits.
+pub(crate) fn run_f32(
+    level: SimdLevel,
+    fma: bool,
+    apanel: &[f32],
+    bpanel: &[f32],
+    kb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    h: usize,
+    w: usize,
+    mr: usize,
+    nr: usize,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    if matches!(level, SimdLevel::Avx2 | SimdLevel::Avx512) && SimdLevel::Avx2.is_available() {
+        // SAFETY: avx2+fma verified available on this CPU just above.
+        return unsafe { x86::run_f32(fma, apanel, bpanel, kb, c, ldc, h, w, mr, nr) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if level == SimdLevel::Neon && SimdLevel::Neon.is_available() {
+        // SAFETY: neon verified available on this CPU just above.
+        return unsafe { neon::run_f32(fma, apanel, bpanel, kb, c, ldc, h, w, mr, nr) };
+    }
+    let _ = (level, fma, apanel, bpanel, kb, c, ldc, h, w, mr, nr);
+    false
+}
+
+/// Explicit-SIMD f64 micro-tile update (see [`run_f32`]).
+pub(crate) fn run_f64(
+    level: SimdLevel,
+    fma: bool,
+    apanel: &[f64],
+    bpanel: &[f64],
+    kb: usize,
+    c: &mut [f64],
+    ldc: usize,
+    h: usize,
+    w: usize,
+    mr: usize,
+    nr: usize,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    if matches!(level, SimdLevel::Avx2 | SimdLevel::Avx512) && SimdLevel::Avx2.is_available() {
+        // SAFETY: avx2+fma verified available on this CPU just above.
+        return unsafe { x86::run_f64(fma, apanel, bpanel, kb, c, ldc, h, w, mr, nr) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if level == SimdLevel::Neon && SimdLevel::Neon.is_available() {
+        // SAFETY: neon verified available on this CPU just above.
+        return unsafe { neon::run_f64(fma, apanel, bpanel, kb, c, ldc, h, w, mr, nr) };
+    }
+    let _ = (level, fma, apanel, bpanel, kb, c, ldc, h, w, mr, nr);
+    false
+}
+
+/// Generates one monomorphic SIMD microkernel: MR accumulator rows × NV
+/// vector registers of LANES columns each (NR = NV·LANES). The loop body
+/// mirrors the scalar `ukr` exactly — same operand order, one vector op
+/// per element per K step, K ascending — so every lane is bitwise-equal
+/// to the scalar schedule. Written as a macro over (MR, NV) literals
+/// because `#[target_feature]` cannot be combined with const generics on
+/// the MSRV toolchain.
+macro_rules! simd_ukr {
+    ($name:ident, $ty:ty, $vty:ty, $lanes:expr, $mr:expr, $nv:expr,
+     $feature:literal, $setzero:ident, $loadu:ident, $storeu:ident,
+     $set1:ident, $fmadd:ident, $add:ident, $mul:ident) => {
+        #[target_feature(enable = $feature)]
+        unsafe fn $name(
+            fma: bool,
+            apanel: &[$ty],
+            bpanel: &[$ty],
+            kb: usize,
+            c: &mut [$ty],
+            ldc: usize,
+            h: usize,
+            w: usize,
+        ) {
+            const MR: usize = $mr;
+            const NV: usize = $nv;
+            const LANES: usize = $lanes;
+            const NR: usize = NV * LANES;
+            debug_assert!(apanel.len() >= kb * MR && bpanel.len() >= kb * NR);
+            debug_assert!(h >= 1 && h <= MR && w <= NR);
+            let mut acc = [[$setzero(); NV]; MR];
+            let mut buf = [0 as $ty; LANES];
+            // Load the live C tile: full vectors directly, the ragged
+            // tail through a zero-padded stack buffer. Padded lanes are
+            // scratch that is never stored — exactly the scalar
+            // kernel's padded-accumulator contract.
+            for r in 0..h {
+                for v in 0..NV {
+                    let lo = v * LANES;
+                    if lo >= w {
+                        break;
+                    }
+                    let take = (w - lo).min(LANES);
+                    acc[r][v] = if take == LANES {
+                        $loadu(c.as_ptr().add(r * ldc + lo))
+                    } else {
+                        buf = [0 as $ty; LANES];
+                        buf[..take].copy_from_slice(&c[r * ldc + lo..r * ldc + lo + take]);
+                        $loadu(buf.as_ptr())
+                    };
+                }
+            }
+            // K ascending; per step: broadcast one A value per row, one
+            // vector op per accumulator register. Lane j of register
+            // (r, v) is element (r, v·LANES + j)'s scalar schedule.
+            if fma {
+                for kk in 0..kb {
+                    let bp = bpanel.as_ptr().add(kk * NR);
+                    let mut bv = [$setzero(); NV];
+                    for v in 0..NV {
+                        bv[v] = $loadu(bp.add(v * LANES));
+                    }
+                    let ap = apanel.as_ptr().add(kk * MR);
+                    for r in 0..h {
+                        let av = $set1(*ap.add(r));
+                        for v in 0..NV {
+                            // acc = fma(a, b, acc): one rounding, the
+                            // scalar `madd` per lane.
+                            acc[r][v] = $fmadd(av, bv[v], acc[r][v]);
+                        }
+                    }
+                }
+            } else {
+                for kk in 0..kb {
+                    let bp = bpanel.as_ptr().add(kk * NR);
+                    let mut bv = [$setzero(); NV];
+                    for v in 0..NV {
+                        bv[v] = $loadu(bp.add(v * LANES));
+                    }
+                    let ap = apanel.as_ptr().add(kk * MR);
+                    for r in 0..h {
+                        let av = $set1(*ap.add(r));
+                        for v in 0..NV {
+                            // acc = acc + round(a·b): two roundings in
+                            // the scalar `add(mul)` operand order.
+                            acc[r][v] = $add(acc[r][v], $mul(av, bv[v]));
+                        }
+                    }
+                }
+            }
+            for r in 0..h {
+                for v in 0..NV {
+                    let lo = v * LANES;
+                    if lo >= w {
+                        break;
+                    }
+                    let take = (w - lo).min(LANES);
+                    if take == LANES {
+                        $storeu(c.as_mut_ptr().add(r * ldc + lo), acc[r][v]);
+                    } else {
+                        $storeu(buf.as_mut_ptr(), acc[r][v]);
+                        c[r * ldc + lo..r * ldc + lo + take].copy_from_slice(&buf[..take]);
+                    }
+                }
+            }
+        }
+    };
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! AVX2+FMA kernels: 8-lane f32 / 4-lane f64 256-bit registers,
+    //! NR = 16 shapes double-pumped over two registers.
+    use std::arch::x86_64::*;
+
+    macro_rules! x86_f32 {
+        ($name:ident, $mr:expr, $nv:expr) => {
+            simd_ukr!(
+                $name, f32, __m256, 8, $mr, $nv, "avx2,fma", _mm256_setzero_ps,
+                _mm256_loadu_ps, _mm256_storeu_ps, _mm256_set1_ps, _mm256_fmadd_ps,
+                _mm256_add_ps, _mm256_mul_ps
+            );
+        };
+    }
+    macro_rules! x86_f64 {
+        ($name:ident, $mr:expr, $nv:expr) => {
+            simd_ukr!(
+                $name, f64, __m256d, 4, $mr, $nv, "avx2,fma", _mm256_setzero_pd,
+                _mm256_loadu_pd, _mm256_storeu_pd, _mm256_set1_pd, _mm256_fmadd_pd,
+                _mm256_add_pd, _mm256_mul_pd
+            );
+        };
+    }
+
+    x86_f32!(ukr_f32_2x8, 2, 1);
+    x86_f32!(ukr_f32_4x8, 4, 1);
+    x86_f32!(ukr_f32_8x8, 8, 1);
+    x86_f32!(ukr_f32_4x16, 4, 2);
+    x86_f32!(ukr_f32_8x16, 8, 2);
+
+    x86_f64!(ukr_f64_2x4, 2, 1);
+    x86_f64!(ukr_f64_4x4, 4, 1);
+    x86_f64!(ukr_f64_8x4, 8, 1);
+    x86_f64!(ukr_f64_16x4, 16, 1);
+    x86_f64!(ukr_f64_2x8, 2, 2);
+    x86_f64!(ukr_f64_4x8, 4, 2);
+    x86_f64!(ukr_f64_8x8, 8, 2);
+    x86_f64!(ukr_f64_4x16, 4, 4);
+    x86_f64!(ukr_f64_8x16, 8, 4);
+
+    /// # Safety
+    /// Caller must have verified avx2+fma via CPU-feature detection.
+    pub(super) unsafe fn run_f32(
+        fma: bool,
+        apanel: &[f32],
+        bpanel: &[f32],
+        kb: usize,
+        c: &mut [f32],
+        ldc: usize,
+        h: usize,
+        w: usize,
+        mr: usize,
+        nr: usize,
+    ) -> bool {
+        match (mr, nr) {
+            (2, 8) => ukr_f32_2x8(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (4, 8) => ukr_f32_4x8(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (8, 8) => ukr_f32_8x8(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (4, 16) => ukr_f32_4x16(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (8, 16) => ukr_f32_8x16(fma, apanel, bpanel, kb, c, ldc, h, w),
+            _ => return false,
+        }
+        true
+    }
+
+    /// # Safety
+    /// Caller must have verified avx2+fma via CPU-feature detection.
+    pub(super) unsafe fn run_f64(
+        fma: bool,
+        apanel: &[f64],
+        bpanel: &[f64],
+        kb: usize,
+        c: &mut [f64],
+        ldc: usize,
+        h: usize,
+        w: usize,
+        mr: usize,
+        nr: usize,
+    ) -> bool {
+        match (mr, nr) {
+            (2, 4) => ukr_f64_2x4(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (4, 4) => ukr_f64_4x4(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (8, 4) => ukr_f64_8x4(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (16, 4) => ukr_f64_16x4(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (2, 8) => ukr_f64_2x8(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (4, 8) => ukr_f64_4x8(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (8, 8) => ukr_f64_8x8(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (4, 16) => ukr_f64_4x16(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (8, 16) => ukr_f64_8x16(fma, apanel, bpanel, kb, c, ldc, h, w),
+            _ => return false,
+        }
+        true
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON kernels: 4-lane f32 / 2-lane f64 128-bit registers, wider NR
+    //! shapes multi-pumped across registers.
+    use std::arch::aarch64::*;
+
+    /// `vfmaq` takes the addend first (`acc + a·b`); adapt to the
+    /// `fma(a, b, acc)` argument order the shared macro expects.
+    #[inline(always)]
+    unsafe fn fma_f32(a: float32x4_t, b: float32x4_t, acc: float32x4_t) -> float32x4_t {
+        vfmaq_f32(acc, a, b)
+    }
+    /// See [`fma_f32`].
+    #[inline(always)]
+    unsafe fn fma_f64(a: float64x2_t, b: float64x2_t, acc: float64x2_t) -> float64x2_t {
+        vfmaq_f64(acc, a, b)
+    }
+    /// Zero register (macro expects a no-arg constructor).
+    #[inline(always)]
+    unsafe fn zero_f32() -> float32x4_t {
+        vdupq_n_f32(0.0)
+    }
+    /// See [`zero_f32`].
+    #[inline(always)]
+    unsafe fn zero_f64() -> float64x2_t {
+        vdupq_n_f64(0.0)
+    }
+
+    macro_rules! neon_f32 {
+        ($name:ident, $mr:expr, $nv:expr) => {
+            simd_ukr!(
+                $name, f32, float32x4_t, 4, $mr, $nv, "neon", zero_f32, vld1q_f32,
+                vst1q_f32, vdupq_n_f32, fma_f32, vaddq_f32, vmulq_f32
+            );
+        };
+    }
+    macro_rules! neon_f64 {
+        ($name:ident, $mr:expr, $nv:expr) => {
+            simd_ukr!(
+                $name, f64, float64x2_t, 2, $mr, $nv, "neon", zero_f64, vld1q_f64,
+                vst1q_f64, vdupq_n_f64, fma_f64, vaddq_f64, vmulq_f64
+            );
+        };
+    }
+
+    neon_f32!(ukr_f32_2x4, 2, 1);
+    neon_f32!(ukr_f32_4x4, 4, 1);
+    neon_f32!(ukr_f32_8x4, 8, 1);
+    neon_f32!(ukr_f32_16x4, 16, 1);
+    neon_f32!(ukr_f32_2x8, 2, 2);
+    neon_f32!(ukr_f32_4x8, 4, 2);
+    neon_f32!(ukr_f32_8x8, 8, 2);
+    neon_f32!(ukr_f32_4x16, 4, 4);
+    neon_f32!(ukr_f32_8x16, 8, 4);
+
+    neon_f64!(ukr_f64_2x4, 2, 2);
+    neon_f64!(ukr_f64_4x4, 4, 2);
+    neon_f64!(ukr_f64_8x4, 8, 2);
+    neon_f64!(ukr_f64_16x4, 16, 2);
+    neon_f64!(ukr_f64_4x8, 4, 4);
+    neon_f64!(ukr_f64_8x8, 8, 4);
+
+    /// # Safety
+    /// Caller must have verified neon via CPU-feature detection.
+    pub(super) unsafe fn run_f32(
+        fma: bool,
+        apanel: &[f32],
+        bpanel: &[f32],
+        kb: usize,
+        c: &mut [f32],
+        ldc: usize,
+        h: usize,
+        w: usize,
+        mr: usize,
+        nr: usize,
+    ) -> bool {
+        match (mr, nr) {
+            (2, 4) => ukr_f32_2x4(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (4, 4) => ukr_f32_4x4(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (8, 4) => ukr_f32_8x4(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (16, 4) => ukr_f32_16x4(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (2, 8) => ukr_f32_2x8(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (4, 8) => ukr_f32_4x8(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (8, 8) => ukr_f32_8x8(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (4, 16) => ukr_f32_4x16(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (8, 16) => ukr_f32_8x16(fma, apanel, bpanel, kb, c, ldc, h, w),
+            _ => return false,
+        }
+        true
+    }
+
+    /// # Safety
+    /// Caller must have verified neon via CPU-feature detection.
+    pub(super) unsafe fn run_f64(
+        fma: bool,
+        apanel: &[f64],
+        bpanel: &[f64],
+        kb: usize,
+        c: &mut [f64],
+        ldc: usize,
+        h: usize,
+        w: usize,
+        mr: usize,
+        nr: usize,
+    ) -> bool {
+        match (mr, nr) {
+            (2, 4) => ukr_f64_2x4(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (4, 4) => ukr_f64_4x4(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (8, 4) => ukr_f64_8x4(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (16, 4) => ukr_f64_16x4(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (4, 8) => ukr_f64_4x8(fma, apanel, bpanel, kb, c, ldc, h, w),
+            (8, 8) => ukr_f64_8x8(fma, apanel, bpanel, kb, c, ldc, h, w),
+            _ => return false,
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::micro;
+
+    /// Candidate micro-shapes across both element widths and ISAs; the
+    /// dispatchers return `false` for uncovered pairs, which the test
+    /// treats as "scalar fallback, nothing to compare".
+    const SHAPES: [(usize, usize); 10] =
+        [(2, 4), (2, 8), (4, 4), (4, 8), (4, 16), (8, 4), (8, 8), (8, 16), (16, 4), (3, 5)];
+
+    fn fill_f64(len: usize, seed: u64) -> Vec<f64> {
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(seed);
+        let d = crate::rng::Distribution::uniform_pm1();
+        (0..len).map(|_| d.sample(&mut rng)).collect()
+    }
+
+    /// One packed tile per (mr, nr): SIMD output (when a kernel claims
+    /// the shape) must be bitwise-equal to the scalar microkernel, at
+    /// full and at ragged (h, w) extents.
+    #[test]
+    fn simd_tiles_bitwise_equal_scalar() {
+        for level in SimdLevel::available_levels() {
+            if level == SimdLevel::Scalar {
+                continue;
+            }
+            for &(mr, nr) in &SHAPES {
+                for fma in [false, true] {
+                    for (h, w) in [(mr, nr), (mr - 1, nr - 1), (1, 1)] {
+                        let kb = 29;
+                        let ap64 = fill_f64(kb * mr, 0xA0 + mr as u64);
+                        let bp64 = fill_f64(kb * nr, 0xB0 + nr as u64);
+                        let c064 = fill_f64(h * nr, 0xC0);
+                        // f64 lane check
+                        let mut want = c064.clone();
+                        micro::run_micro(
+                            SimdLevel::Scalar,
+                            fma,
+                            &ap64,
+                            &bp64,
+                            kb,
+                            &mut want,
+                            nr,
+                            h,
+                            w,
+                            mr,
+                            nr,
+                        );
+                        let mut got = c064.clone();
+                        if run_f64(level, fma, &ap64, &bp64, kb, &mut got, nr, h, w, mr, nr) {
+                            assert_eq!(got, want, "f64 {level} {mr}x{nr} fma={fma} h={h} w={w}");
+                        } else {
+                            assert_eq!(got, c064, "claimed-false kernel wrote: f64 {level}");
+                        }
+                        // f32 lane check
+                        let ap32: Vec<f32> = ap64.iter().map(|&x| x as f32).collect();
+                        let bp32: Vec<f32> = bp64.iter().map(|&x| x as f32).collect();
+                        let c032: Vec<f32> = c064.iter().map(|&x| x as f32).collect();
+                        let mut want = c032.clone();
+                        micro::run_micro(
+                            SimdLevel::Scalar,
+                            fma,
+                            &ap32,
+                            &bp32,
+                            kb,
+                            &mut want,
+                            nr,
+                            h,
+                            w,
+                            mr,
+                            nr,
+                        );
+                        let mut got = c032.clone();
+                        if run_f32(level, fma, &ap32, &bp32, kb, &mut got, nr, h, w, mr, nr) {
+                            assert_eq!(got, want, "f32 {level} {mr}x{nr} fma={fma} h={h} w={w}");
+                        } else {
+                            assert_eq!(got, c032, "claimed-false kernel wrote: f32 {level}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn level_parse_name_round_trip() {
+        for level in SimdLevel::ALL {
+            assert_eq!(SimdLevel::parse(level.name()), Some(level));
+        }
+        assert_eq!(SimdLevel::parse("sse9"), None);
+        assert_eq!(SimdLevel::default(), SimdLevel::Auto);
+    }
+
+    #[test]
+    fn resolve_is_concrete_and_executable() {
+        for level in SimdLevel::ALL {
+            let resolved = level.resolve();
+            assert_ne!(resolved, SimdLevel::Auto, "{level} resolved to Auto");
+            assert!(resolved.is_available(), "{level} resolved to unavailable {resolved}");
+        }
+        assert_eq!(SimdLevel::Auto.resolve(), SimdLevel::detect());
+        // Forcing a level the host lacks degrades to Scalar, never traps.
+        for level in [SimdLevel::Avx2, SimdLevel::Avx512, SimdLevel::Neon] {
+            if !level.is_available() {
+                assert_eq!(level.resolve(), SimdLevel::Scalar);
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_and_unknown_shapes_decline() {
+        let (ap, bp) = (vec![1.0f32; 8], vec![1.0f32; 8]);
+        let mut c = vec![0.0f32; 4];
+        // Scalar never claims a tile; exotic shapes fall through too.
+        assert!(!run_f32(SimdLevel::Scalar, true, &ap, &bp, 1, &mut c, 2, 2, 2, 8, 8));
+        for level in SimdLevel::available_levels() {
+            assert!(!run_f32(level, true, &ap, &bp, 1, &mut c, 2, 2, 2, 3, 5));
+        }
+        assert_eq!(c, vec![0.0; 4]);
+        assert!(!cpu_features().is_empty());
+    }
+}

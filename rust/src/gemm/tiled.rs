@@ -46,6 +46,7 @@
 
 use super::micro::{self, Element};
 use super::pack;
+use super::simd::SimdLevel;
 use super::ReduceStrategy;
 use crate::fp::Precision;
 
@@ -154,6 +155,15 @@ impl RowSplit {
             RowSplit::Interleaved => "interleaved",
         }
     }
+
+    /// Parse a [`RowSplit::name`] string (`contiguous|interleaved`).
+    pub fn parse(s: &str) -> Option<RowSplit> {
+        match s {
+            "contiguous" => Some(RowSplit::Contiguous),
+            "interleaved" => Some(RowSplit::Interleaved),
+            _ => None,
+        }
+    }
 }
 
 /// Execution configuration of the tiled engine: worker count + tiles +
@@ -171,6 +181,11 @@ pub struct ParallelismConfig {
     pub micro: MicroConfig,
     /// How output rows are dealt to the worker threads.
     pub split: RowSplit,
+    /// SIMD dispatch level for the f32/f64 microkernels
+    /// ([`crate::gemm::simd`]); resolved once per GEMM call. Like every
+    /// other field, pure scheduling — outputs are bitwise-identical at
+    /// any level.
+    pub simd: SimdLevel,
 }
 
 impl ParallelismConfig {
@@ -182,6 +197,7 @@ impl ParallelismConfig {
             tiles: TileConfig::DEFAULT,
             micro: MicroConfig::DEFAULT,
             split: RowSplit::Contiguous,
+            simd: SimdLevel::Auto,
         }
     }
 
@@ -214,31 +230,23 @@ impl ParallelismConfig {
         self
     }
 
-    /// Parse from CLI flags: `--threads N --mc M --kc K --nc N --mr R
-    /// --nr C --split contiguous|interleaved` (`--threads 0` means
-    /// auto). Shared by the `vabft` binary and the bench harness mains.
+    /// Replace the SIMD dispatch level.
+    pub fn simd(mut self, simd: SimdLevel) -> ParallelismConfig {
+        self.simd = simd;
+        self
+    }
+
+    /// Parse from CLI flags (`--threads N --mc M --kc K --nc N --mr R
+    /// --nr C --split contiguous|interleaved`, `--threads 0` = auto).
+    ///
+    /// Superseded by [`crate::gemm::EngineConfig::from_args`], the one
+    /// shared flag helper — it additionally understands `--simd` and
+    /// `--manifest`, and distinguishes "flag absent" from "flag at its
+    /// default" so tuning manifests can fill the gaps. This shim
+    /// delegates there and resolves immediately (shape-blind).
+    #[deprecated(note = "use EngineConfig::from_args, which also handles --simd/--manifest")]
     pub fn from_args(args: &crate::cli::Args) -> ParallelismConfig {
-        let mut par = match args.opt_or("threads", 1usize) {
-            0 => ParallelismConfig::auto(),
-            t => ParallelismConfig::with_threads(t),
-        };
-        let d = TileConfig::DEFAULT;
-        par.tiles = TileConfig::new(
-            args.opt_or("mc", d.mc),
-            args.opt_or("kc", d.kc),
-            args.opt_or("nc", d.nc),
-        );
-        let dm = MicroConfig::DEFAULT;
-        par.micro = MicroConfig::new(args.opt_or("mr", dm.mr), args.opt_or("nr", dm.nr));
-        par.split = match args.opt("split").unwrap_or("contiguous") {
-            "contiguous" => RowSplit::Contiguous,
-            "interleaved" => RowSplit::Interleaved,
-            other => {
-                eprintln!("unknown row split '{other}' (contiguous|interleaved)");
-                std::process::exit(2);
-            }
-        };
-        par
+        super::config::EngineConfig::from_args(args).resolve()
     }
 }
 
@@ -351,11 +359,14 @@ fn gemm_packed<T: Element>(
         return c;
     }
     let (tiles, u) = (par.tiles, par.micro);
+    // Resolve SIMD dispatch once per GEMM call (pure scheduling — every
+    // level is bitwise-identical), not per micro-tile.
+    let s = par.simd.resolve();
     parallel_over_rows(&mut c, m, n, par, |chunk, i0, rows| match strategy {
         ReduceStrategy::Sequential => {
-            packed_seq_fma(a, b, chunk, i0, rows, k, n, false, tiles, u)
+            packed_seq_fma(a, b, chunk, i0, rows, k, n, false, tiles, u, s)
         }
-        ReduceStrategy::Fma => packed_seq_fma(a, b, chunk, i0, rows, k, n, true, tiles, u),
+        ReduceStrategy::Fma => packed_seq_fma(a, b, chunk, i0, rows, k, n, true, tiles, u, s),
         ReduceStrategy::Pairwise => packed_pairwise(a, b, chunk, i0, rows, k, n, tiles),
     });
     c
@@ -431,12 +442,13 @@ fn gemm_packed_fused<T: Element>(
         return c;
     }
     let (tiles, u) = (par.tiles, par.micro);
+    let s = par.simd.resolve();
     parallel_over_rows(&mut c, m, n, par, |chunk, i0, rows| match strategy {
         ReduceStrategy::Sequential => {
-            packed_seq_fma_fused(a, b, chunk, i0, rows, k, n, false, tiles, u, epilogue)
+            packed_seq_fma_fused(a, b, chunk, i0, rows, k, n, false, tiles, u, s, epilogue)
         }
         ReduceStrategy::Fma => {
-            packed_seq_fma_fused(a, b, chunk, i0, rows, k, n, true, tiles, u, epilogue)
+            packed_seq_fma_fused(a, b, chunk, i0, rows, k, n, true, tiles, u, s, epilogue)
         }
         ReduceStrategy::Pairwise => {
             // The pairwise tree finishes a row only after its last column
@@ -470,6 +482,7 @@ fn packed_seq_fma<T: Element>(
     fma: bool,
     t: TileConfig,
     u: MicroConfig,
+    s: SimdLevel,
 ) {
     debug_assert_eq!(c.len(), rows * n);
     let (mr, nr) = (u.mr, u.nr);
@@ -500,6 +513,7 @@ fn packed_seq_fma<T: Element>(
                         let w = nr.min(jw - jp);
                         let bpanel = &bpack[(jp / nr) * kb * nr..][..kb * nr];
                         micro::run_micro(
+                            s,
                             fma,
                             apanel,
                             bpanel,
@@ -542,6 +556,7 @@ fn packed_seq_fma_fused<T: Element>(
     fma: bool,
     t: TileConfig,
     u: MicroConfig,
+    s: SimdLevel,
     epilogue: &(dyn Fn(usize, &[T]) + Sync),
 ) {
     debug_assert_eq!(c.len(), rows * n);
@@ -575,6 +590,7 @@ fn packed_seq_fma_fused<T: Element>(
                         let bpanel = &bpack[(jp / nr) * kb * nr..][..kb * nr];
                         if final_pass && jp + nr >= jw {
                             micro::run_micro_fused(
+                                s,
                                 fma,
                                 apanel,
                                 bpanel,
@@ -590,6 +606,7 @@ fn packed_seq_fma_fused<T: Element>(
                             );
                         } else {
                             micro::run_micro(
+                                s,
                                 fma,
                                 apanel,
                                 bpanel,
@@ -1010,7 +1027,12 @@ mod tests {
                     MicroConfig::new(3, 5), // dynamic-fallback kernel
                 ] {
                     for split in [RowSplit::Contiguous, RowSplit::Interleaved] {
-                        out.push(ParallelismConfig { threads, tiles, micro, split });
+                        // Auto exercises the host's widest explicit
+                        // kernels, Scalar pins the reference path — both
+                        // must be bitwise-identical.
+                        for simd in [SimdLevel::Scalar, SimdLevel::Auto] {
+                            out.push(ParallelismConfig { threads, tiles, micro, split, simd });
+                        }
                     }
                 }
             }
@@ -1155,9 +1177,11 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)] // pins the shim's behavior until it is removed
     fn from_args_parses_flags() {
         let args = crate::cli::Args::parse_from(
-            "x --threads 4 --mc 32 --kc 128 --nc 64 --mr 4 --nr 16 --split interleaved"
+            "x --threads 4 --mc 32 --kc 128 --nc 64 --mr 4 --nr 16 --split interleaved \
+             --simd scalar"
                 .split_whitespace()
                 .map(String::from),
         );
@@ -1166,6 +1190,7 @@ mod tests {
         assert_eq!(par.tiles, TileConfig::new(32, 128, 64));
         assert_eq!(par.micro, MicroConfig::new(4, 16));
         assert_eq!(par.split, RowSplit::Interleaved);
+        assert_eq!(par.simd, SimdLevel::Scalar);
         let auto = crate::cli::Args::parse_from(
             "x --threads 0".split_whitespace().map(String::from),
         );
@@ -1173,6 +1198,7 @@ mod tests {
         assert!(par.threads >= 1);
         assert_eq!(par.micro, MicroConfig::DEFAULT);
         assert_eq!(par.split, RowSplit::Contiguous);
+        assert_eq!(par.simd, SimdLevel::Auto);
     }
 
     #[test]

@@ -19,9 +19,12 @@
 //! ## The execution layer: packed, register-blocked, schedule-preserving
 //!
 //! All GEMMs run on the packed, cache-blocked, multi-threaded engine in
-//! [`gemm::tiled`] (configured by [`gemm::ParallelismConfig`]): operands
-//! are repacked into contiguous micro-panels ([`gemm::pack`]) and driven
-//! through MR×NR register-blocked microkernels ([`gemm::micro`]). The
+//! [`gemm::tiled`] (configured by the [`gemm::EngineConfig`] builder,
+//! which folds in the `vabft autotune` tuning manifest and detected CPU
+//! features): operands are repacked into contiguous micro-panels
+//! ([`gemm::pack`]) and driven through MR×NR register-blocked
+//! microkernels ([`gemm::micro`], runtime-dispatched to explicit
+//! AVX2/NEON SIMD variants by [`gemm::simd`]). The
 //! load-bearing invariant: **every output element's K-reduction order is
 //! bitwise-identical to the naive reference kernels** in
 //! [`gemm::kernels`], for all three [`gemm::ReduceStrategy`] variants.
@@ -109,10 +112,12 @@ pub mod abft {
     //! verification, localization and online correction (paper §2.2),
     //! plus block-wise tiling (§5.2).
     //!
-    //! [`FtGemm`] (monolithic, block_k = K) and [`BlockwiseFtGemm`]
-    //! (per-K-block verification) are two parameterizations of one shared
-    //! verification pipeline (the private `pipeline` module); both accept
-    //! [`PreparedWeights`] for the weight-stationary serving fast path.
+    //! [`FtGemm`] is the single entry point; [`VerifyGranularity`] on
+    //! the policy selects monolithic (block_k = K) or per-K-block
+    //! verification, both parameterizations of one shared verification
+    //! pipeline (the private `pipeline` module). [`PreparedWeights`]
+    //! provides the weight-stationary serving fast path at either
+    //! granularity. The old per-K-block wrapper type is deprecated.
     pub mod blockwise;
     pub mod encode;
     pub mod ftgemm;
@@ -128,17 +133,19 @@ pub mod abft {
 
 /// Convenient re-exports for downstream users and the examples.
 pub mod prelude {
+    #[allow(deprecated)]
+    pub use crate::abft::BlockwiseFtGemm;
     pub use crate::abft::{
-        BlockwiseFtGemm, BlockwiseOutput, ChecksumEncoding, EncodingMode, FtGemm, FtGemmOutput,
-        PreparedBlock, PreparedWeights, Verdict, VerifyPolicy, VerifyReport,
+        BlockwiseOutput, ChecksumEncoding, EncodingMode, FtGemm, FtGemmOutput, PreparedBlock,
+        PreparedWeights, Verdict, VerifyGranularity, VerifyPolicy, VerifyReport,
     };
     pub use crate::calibrate::{CalibrationProtocol, EmaxModel, EmaxTable, Platform};
     pub use crate::campaign::{BitClass, CellSpec, GridConfig, VerifyPoint};
     pub use crate::coordinator::{PartitionPolicy, TopologyConfig};
     pub use crate::fp::{dd::Dd, Precision};
     pub use crate::gemm::{
-        AccumModel, FusedProbe, FusedRowCheck, GemmEngine, MicroConfig, ParallelismConfig,
-        RowSplit, TileConfig,
+        cpu_features, AccumModel, EngineConfig, FusedProbe, FusedRowCheck, GemmEngine,
+        MicroConfig, ParallelismConfig, RowSplit, SimdLevel, TileConfig,
     };
     pub use crate::inject::{
         BitFlip, Campaign, CampaignConfig, FaultOutcome, FaultSite, FaultSpec, FlipDirection,
@@ -146,6 +153,7 @@ pub mod prelude {
     };
     pub use crate::matrix::{Matrix, RowStats};
     pub use crate::rng::{Distribution, Rng, SplitMix64, Xoshiro256pp};
+    pub use crate::runtime::{TunedShape, TuningManifest};
     pub use crate::threshold::{
         AabftThreshold, AnalyticalThreshold, SeaThreshold, Threshold, VabftThreshold,
     };

@@ -36,9 +36,21 @@
 //!                  [--precision bf16] [--dist n11|nz|u|u01|trunc] [--trials N] [--offline]
 //!                  # legacy single-configuration Table 8 bit ladder
 //! vabft tightness  [--precision fp32] [--sizes 128,256,512] [--trials N]
-//! vabft gemm       [--m 512 --k 512 --n 512] [--strategy seq|fma|pairwise]
-//!                  [--threads T] [--mc M --kc K --nc N] [--mr R --nr C] [--reps R]
-//!                  # packed/unpacked engines vs naive kernel (bitwise-checked)
+//! vabft gemm       [--m 512 --k 512 --n 512] [--strategy seq|fma|pairwise] [--reps R]
+//!                  [--threads T] [--mc M --kc K --nc N] [--mr R --nr C]
+//!                  [--split contiguous|interleaved] [--simd auto|scalar|avx2|avx512|neon]
+//!                  [--manifest FILE]
+//!                  # packed/unpacked engines vs naive kernel (bitwise-checked);
+//!                  # engine flags not given explicitly come from the tuning
+//!                  # manifest (if one exists) via EngineConfig::from_args
+//! vabft autotune   [--smoke|--quick|--full] [--seed S] [--manifest FILE] [--gate]
+//!                  # search (mc,kc,nc) x (mr,nr) x threads x split x simd per
+//!                  # shape class (transformer-layer traces + campaign grid
+//!                  # shapes), bitwise-check every candidate against the scalar
+//!                  # serial engine, persist winners to the tuning manifest
+//!                  # that gemm / serve-replay / the coordinator load at
+//!                  # startup; --gate re-measures tuned vs untuned default and
+//!                  # exits non-zero if the tuned schedule loses
 //! vabft gemm --prepared
 //!                  [--m 8 --k 512 --n 512] [--precision bf16] [--reps R]
 //!                  [--block-k B] [--offline] [--threads T]
@@ -67,13 +79,14 @@ fn main() {
         Some("serve-replay") => cmd_serve_replay(&args),
         Some("tightness") => cmd_tightness(&args),
         Some("gemm") => cmd_gemm(&args),
+        Some("autotune") => cmd_autotune(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("info") | None => cmd_info(),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
             eprintln!(
-                "usage: vabft [calibrate|campaign|serve-replay|tightness|gemm|artifacts|info] \
-                 [--flags]"
+                "usage: vabft [calibrate|campaign|serve-replay|tightness|gemm|autotune|\
+                 artifacts|info] [--flags]"
             );
             std::process::exit(2);
         }
@@ -363,7 +376,7 @@ fn cmd_serve_replay(args: &Args) {
     }
     use vabft::abft::VerifyPolicy;
     use vabft::coordinator::{CoordinatorConfig, PartitionPolicy};
-    use vabft::gemm::{AccumModel, ParallelismConfig};
+    use vabft::gemm::{AccumModel, EngineConfig};
     use vabft::workload::{replay_doc, run_replay, ReplayConfig, ReplayRow};
 
     let smoke = args.flag("smoke");
@@ -416,6 +429,9 @@ fn cmd_serve_replay(args: &Args) {
         partition.name(),
     );
 
+    // One engine configuration for every shard count: CLI overrides plus
+    // the tuning manifest (loaded once, here, at startup).
+    let engine_cfg = EngineConfig::from_args(args);
     let mut rows: Vec<ReplayRow> = Vec::new();
     let mut t = Table::new(
         "Sharded serving replay",
@@ -426,7 +442,7 @@ fn cmd_serve_replay(args: &Args) {
             workers,
             queue_depth: (2 * cfg.concurrency).max(16),
             model,
-            parallelism: ParallelismConfig::from_args(args),
+            engine: Some(engine_cfg.clone()),
             shards: shards.max(1),
             partition,
             steal,
@@ -504,7 +520,7 @@ fn cmd_serve_replay_open_loop(args: &Args) {
     use std::time::Duration;
     use vabft::abft::VerifyPolicy;
     use vabft::coordinator::{CoordinatorConfig, PartitionPolicy};
-    use vabft::gemm::{AccumModel, ParallelismConfig};
+    use vabft::gemm::{AccumModel, EngineConfig};
     use vabft::workload::{replay_doc, run_open_loop, ArrivalModel, OpenLoopConfig, ReplayRow};
 
     let smoke = args.flag("smoke");
@@ -575,6 +591,9 @@ fn cmd_serve_replay_open_loop(args: &Args) {
         partition.name(),
     );
 
+    // One engine configuration for every gate run: CLI overrides plus the
+    // tuning manifest (loaded once, here, at startup).
+    let engine_cfg = EngineConfig::from_args(args);
     let ccfg_for = |shards: usize, policy: VerifyPolicy| CoordinatorConfig {
         workers,
         // The gates run with queues at least as deep as the offered count
@@ -582,7 +601,7 @@ fn cmd_serve_replay_open_loop(args: &Args) {
         // function of the seed, and the fingerprints are exact.
         queue_depth: cfg.requests,
         model,
-        parallelism: ParallelismConfig::from_args(args),
+        engine: Some(engine_cfg.clone()),
         shards: shards.max(1),
         partition,
         steal,
@@ -767,9 +786,9 @@ fn cmd_gemm(args: &Args) {
         return cmd_gemm_prepared(args);
     }
     use vabft::bench_harness::time_once;
-    use vabft::gemm::{kernels, tiled, ParallelismConfig, ReduceStrategy};
-    use vabft::rng::Xoshiro256pp;
+    use vabft::gemm::{kernels, tiled, EngineConfig, ReduceStrategy};
     use vabft::rng::Rng;
+    use vabft::rng::Xoshiro256pp;
 
     let m = args.opt_or("m", 512usize);
     let k = args.opt_or("k", 512usize);
@@ -784,17 +803,21 @@ fn cmd_gemm(args: &Args) {
             std::process::exit(2);
         }
     };
-    let par = ParallelismConfig::from_args(args);
+    // Flags not given explicitly are filled from the tuning manifest (if
+    // one exists) for this exact shape, then from the defaults.
+    let par = EngineConfig::from_args(args).resolve_for(m, k, n);
     println!(
         "fp32 GEMM {m}x{k}x{n}, strategy {}, threads {}, tiles (mc {}, kc {}, nc {}), \
-         micro (mr {}, nr {})",
+         micro (mr {}, nr {}), split {}, simd {}",
         strategy.name(),
         par.threads,
         par.tiles.mc,
         par.tiles.kc,
         par.tiles.nc,
         par.micro.mr,
-        par.micro.nr
+        par.micro.nr,
+        par.split.name(),
+        par.simd.resolve().name()
     );
 
     let mut rng = Xoshiro256pp::seed_from_u64(0xBE);
@@ -851,9 +874,9 @@ fn cmd_gemm(args: &Args) {
 /// verdicts — the prepared path is a pure amortization, never a numerical
 /// change.
 fn cmd_gemm_prepared(args: &Args) {
-    use vabft::abft::{BlockwiseFtGemm, EncodingMode, VerifyPolicy};
+    use vabft::abft::{EncodingMode, FtGemm, VerifyGranularity, VerifyPolicy};
     use vabft::bench_harness::time_once;
-    use vabft::gemm::{AccumModel, GemmEngine, ParallelismConfig};
+    use vabft::gemm::{AccumModel, EngineConfig, GemmEngine};
     use vabft::matrix::Matrix;
     use vabft::rng::Xoshiro256pp;
 
@@ -889,11 +912,16 @@ fn cmd_gemm_prepared(args: &Args) {
         );
         std::process::exit(2);
     }
-    let par = ParallelismConfig::from_args(args);
+    let ecfg = EngineConfig::from_args(args);
     // Cold and warm legs must share one accumulation grouping to compare
     // bitwise; block_k = K is exactly the monolithic parameterization.
     let bk = if block_k == 0 { k.max(1) } else { block_k };
-    let bw = BlockwiseFtGemm::new(GemmEngine::with_parallelism(model, par), bk, policy);
+    policy = policy.with_granularity(VerifyGranularity::BlockK(bk));
+    let bw = FtGemm::new(
+        GemmEngine::with_config(model, ecfg),
+        Box::new(VabftThreshold::default()),
+        policy,
+    );
     println!(
         "weight-stationary FT-GEMM {m}x{k}x{n}, model {}, online={online}, encoding={}, \
          block_k={}",
@@ -922,7 +950,7 @@ fn cmd_gemm_prepared(args: &Args) {
         t_cold = t_cold.min(dur);
         cold = out;
         let mut out2 = None;
-        let dur2 = time_once(|| out2 = Some(bw.multiply_prepared(&a, &prepared).unwrap()));
+        let dur2 = time_once(|| out2 = Some(bw.multiply_prepared(&a, &prepared, None).unwrap()));
         t_warm = t_warm.min(dur2);
         warm = out2;
     }
@@ -943,6 +971,46 @@ fn cmd_gemm_prepared(args: &Args) {
     t.print();
     println!("prepare (once): {t_prepare:?}  —  amortized across every request");
     println!("bitwise equality + identical verdicts: OK");
+}
+
+/// `vabft autotune`: search the tiled engine's scheduling space per shape
+/// class and persist the winners into the tuning manifest that
+/// [`vabft::gemm::EngineConfig`] (and hence `gemm`, `serve-replay` and
+/// the coordinator) folds into every engine built without explicit
+/// overrides. See [`vabft::gemm::autotune`].
+fn cmd_autotune(args: &Args) {
+    use vabft::gemm::{autotune, AutotuneConfig, AutotuneMode};
+    use vabft::runtime::TuningManifest;
+
+    let mode = if args.flag("smoke") {
+        AutotuneMode::Smoke
+    } else if args.flag("full") {
+        AutotuneMode::Full
+    } else {
+        AutotuneMode::Quick
+    };
+    let seed = args.opt_or("seed", 0xA070u64);
+    let path = match args.opt("manifest") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => TuningManifest::default_path(),
+    };
+    let cfg = AutotuneConfig { mode, seed, path };
+    let manifest = match autotune::run(&cfg) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("autotune failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    if args.flag("gate") {
+        match autotune::gate(&manifest, seed) {
+            Ok(n) => println!("autotune gate OK: {n} transformer shape(s) checked"),
+            Err(e) => {
+                eprintln!("{e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
 }
 
 fn cmd_artifacts(args: &Args) {
@@ -989,6 +1057,7 @@ fn cmd_info() {
     }
     t.print();
     println!(
-        "subcommands: calibrate | campaign | serve-replay | tightness | gemm | artifacts | info"
+        "subcommands: calibrate | campaign | serve-replay | tightness | gemm | autotune | \
+         artifacts | info"
     );
 }

@@ -5,12 +5,22 @@
 //! `name \t file \t key=value \t key=value …` — trivially parseable without
 //! a JSON dependency (serde is not in the offline registry); aot.py also
 //! writes a human-oriented manifest.json with the same content.
+//!
+//! This module also owns the **tuning manifest** ([`TuningManifest`]): the
+//! schema-versioned TSV written by `vabft autotune` that records, per
+//! shape class, the fastest measured execution configuration (tiles ×
+//! microkernel × threads × row-split × SIMD level). Consumers
+//! ([`crate::gemm::EngineConfig`], the coordinator shards, `serve-replay`)
+//! load it at startup; every recorded choice is pure *scheduling*, so a
+//! stale or missing manifest can cost wall-clock time but can never change
+//! a result bit.
 
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::anyhow;
 use crate::error::{Context, Result};
+use crate::gemm::{MicroConfig, RowSplit, SimdLevel, TileConfig};
 
 /// One artifact: a lowered HLO-text module plus its metadata
 /// (shapes, dtypes, parameter layouts — whatever the producer recorded).
@@ -86,6 +96,246 @@ impl Manifest {
     }
 }
 
+/// Schema tag a tuning manifest must declare on its first non-comment
+/// line (`schema\t<tag>`). Bumped whenever the record format changes, so
+/// stale manifests are rejected instead of silently misread.
+pub const TUNING_SCHEMA: &str = "vabft-tuning/v1";
+
+/// One autotuned winner: the fastest measured execution configuration for
+/// a shape class, plus the measurements that picked it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedShape {
+    /// Human-readable shape-class label (e.g. `llama-7b/attn.qkv`).
+    pub label: String,
+    /// Output rows of the shape class.
+    pub m: usize,
+    /// Reduction depth of the shape class.
+    pub k: usize,
+    /// Output columns of the shape class.
+    pub n: usize,
+    /// Winning cache-blocking tile sizes.
+    pub tiles: TileConfig,
+    /// Winning microkernel (register-block) shape.
+    pub micro: MicroConfig,
+    /// Winning worker-thread count.
+    pub threads: usize,
+    /// Winning row-split policy.
+    pub split: RowSplit,
+    /// Winning SIMD dispatch level.
+    pub simd: SimdLevel,
+    /// Measured throughput of the winner (GFLOP/s).
+    pub gflops: f64,
+    /// Measured throughput of the default configuration (GFLOP/s).
+    pub baseline_gflops: f64,
+}
+
+/// The autotuner's persisted output: per-shape-class winners plus the CPU
+/// feature string they were measured on.
+///
+/// Format (TSV, `#` comments allowed anywhere):
+///
+/// ```text
+/// schema\tvabft-tuning/v1
+/// cpu\tavx2+fma
+/// shape\tlabel=…\tm=…\tk=…\tn=…\tmc=…\tkc=…\tnc=…\tmr=…\tnr=…\t…
+/// ```
+///
+/// The `schema` line must come first; a missing or mismatched tag is a
+/// hard parse error (the stale-manifest guard).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TuningManifest {
+    /// CPU feature string ([`crate::gemm::cpu_features`]) of the machine
+    /// the winners were measured on.
+    pub cpu: String,
+    /// Per-shape-class winners, in file order.
+    pub entries: Vec<TunedShape>,
+}
+
+impl TuningManifest {
+    /// Empty manifest tagged with a CPU feature string.
+    pub fn new(cpu: impl Into<String>) -> TuningManifest {
+        TuningManifest { cpu: cpu.into(), entries: Vec::new() }
+    }
+
+    /// Append a tuned shape class.
+    pub fn push(&mut self, entry: TunedShape) {
+        self.entries.push(entry);
+    }
+
+    /// Read and parse a tuning manifest file.
+    pub fn load(path: &Path) -> Result<TuningManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Parse tuning-manifest text (see the type docs for the format).
+    pub fn parse(text: &str) -> Result<TuningManifest> {
+        let mut man = TuningManifest::default();
+        let mut saw_schema = false;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut fields = line.split('\t');
+            let tag = fields.next().unwrap_or_default();
+            if !saw_schema {
+                let got = fields.next().unwrap_or_default();
+                crate::ensure!(
+                    tag == "schema" && got == TUNING_SCHEMA,
+                    "line {}: tuning manifest must open with 'schema\\t{}', got {:?}",
+                    lineno + 1,
+                    TUNING_SCHEMA,
+                    line
+                );
+                saw_schema = true;
+                continue;
+            }
+            match tag {
+                "cpu" => man.cpu = fields.next().unwrap_or_default().to_string(),
+                "shape" => {
+                    let mut kv: HashMap<&str, &str> = HashMap::new();
+                    for f in fields {
+                        if let Some((k, v)) = f.split_once('=') {
+                            kv.insert(k.trim(), v.trim());
+                        }
+                    }
+                    man.entries.push(Self::entry_from(&kv, lineno + 1)?);
+                }
+                other => {
+                    return Err(anyhow!("line {}: unknown record {:?}", lineno + 1, other));
+                }
+            }
+        }
+        crate::ensure!(saw_schema, "tuning manifest has no schema line");
+        Ok(man)
+    }
+
+    fn entry_from(kv: &HashMap<&str, &str>, lineno: usize) -> Result<TunedShape> {
+        fn field<T: std::str::FromStr>(
+            kv: &HashMap<&str, &str>,
+            key: &str,
+            lineno: usize,
+        ) -> Result<T> {
+            kv.get(key)
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| anyhow!("line {lineno}: missing or invalid {key}"))
+        }
+        let split_s: String = field(kv, "split", lineno)?;
+        let split = RowSplit::parse(&split_s)
+            .ok_or_else(|| anyhow!("line {lineno}: invalid split {split_s:?}"))?;
+        let simd_s: String = field(kv, "simd", lineno)?;
+        let simd = SimdLevel::parse(&simd_s)
+            .ok_or_else(|| anyhow!("line {lineno}: invalid simd {simd_s:?}"))?;
+        let (mc, kc, nc) = (field(kv, "mc", lineno)?, field(kv, "kc", lineno)?,
+            field(kv, "nc", lineno)?);
+        crate::ensure!(mc > 0 && kc > 0 && nc > 0, "line {lineno}: tile sizes must be positive");
+        let (mr, nr): (usize, usize) = (field(kv, "mr", lineno)?, field(kv, "nr", lineno)?);
+        let micro_ok = (1..=crate::gemm::micro::MAX_MICRO).contains(&mr)
+            && (1..=crate::gemm::micro::MAX_MICRO).contains(&nr);
+        crate::ensure!(micro_ok, "line {lineno}: micro-tile sizes out of range");
+        Ok(TunedShape {
+            label: kv.get("label").unwrap_or(&"").to_string(),
+            m: field(kv, "m", lineno)?,
+            k: field(kv, "k", lineno)?,
+            n: field(kv, "n", lineno)?,
+            tiles: TileConfig { mc, kc, nc },
+            micro: MicroConfig { mr, nr },
+            threads: field(kv, "threads", lineno)?,
+            split,
+            simd,
+            gflops: field(kv, "gflops", lineno)?,
+            baseline_gflops: field(kv, "baseline_gflops", lineno)?,
+        })
+    }
+
+    /// Serialize to the TSV format [`TuningManifest::parse`] reads.
+    /// Floats use `Display` (shortest round-trip form), so
+    /// save → load → save is byte-stable.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# vabft tuning manifest — regenerate with `vabft autotune`\n");
+        out.push_str(&format!("schema\t{TUNING_SCHEMA}\n"));
+        if !self.cpu.is_empty() {
+            out.push_str(&format!("cpu\t{}\n", self.cpu));
+        }
+        for e in &self.entries {
+            out.push_str(&format!(
+                "shape\tlabel={}\tm={}\tk={}\tn={}\tmc={}\tkc={}\tnc={}\tmr={}\tnr={}\t\
+                 threads={}\tsplit={}\tsimd={}\tgflops={}\tbaseline_gflops={}\n",
+                e.label,
+                e.m,
+                e.k,
+                e.n,
+                e.tiles.mc,
+                e.tiles.kc,
+                e.tiles.nc,
+                e.micro.mr,
+                e.micro.nr,
+                e.threads,
+                e.split.name(),
+                e.simd.name(),
+                e.gflops,
+                e.baseline_gflops,
+            ));
+        }
+        out
+    }
+
+    /// Write the manifest to `path` (see [`TuningManifest::to_text`]).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_text())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Find the tuned entry closest to an (m, k, n) shape: an exact match
+    /// when one exists, else the entry minimizing the symmetric
+    /// log-ratio distance `|ln(m'/m)| + |ln(k'/k)| + |ln(n'/n)|`, capped
+    /// so wildly different shapes fall back to defaults instead of
+    /// inheriting someone else's blocking. Ties resolve to the earliest
+    /// entry, so lookup is deterministic for a fixed file.
+    pub fn lookup(&self, m: usize, k: usize, n: usize) -> Option<&TunedShape> {
+        const MAX_DIST: f64 = 3.0;
+        let d = |a: usize, b: usize| ((a as f64 + 1.0) / (b as f64 + 1.0)).ln().abs();
+        let mut best: Option<(&TunedShape, f64)> = None;
+        for e in &self.entries {
+            let dist = d(e.m, m) + d(e.k, k) + d(e.n, n);
+            match best {
+                Some((_, bd)) if bd <= dist => {}
+                _ => best = Some((e, dist)),
+            }
+        }
+        best.filter(|&(_, dist)| dist <= MAX_DIST).map(|(e, _)| e)
+    }
+
+    /// Default manifest location: `$VABFT_TUNING_MANIFEST` verbatim when
+    /// set and non-empty, else `vabft-tuning.tsv` at the workspace root.
+    pub fn default_path() -> PathBuf {
+        match std::env::var("VABFT_TUNING_MANIFEST") {
+            Ok(p) if !p.is_empty() => PathBuf::from(p),
+            _ => {
+                // CARGO_MANIFEST_DIR is rust/; the tuning manifest lives
+                // at the workspace root next to README.md.
+                let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+                let root = manifest.parent().map(|p| p.to_path_buf()).unwrap_or(manifest);
+                root.join("vabft-tuning.tsv")
+            }
+        }
+    }
+
+    /// Load from [`TuningManifest::default_path`]. An absent file is
+    /// `Ok(None)` (no tuning is a valid state — the engine uses built-in
+    /// defaults); a present but corrupt or stale-schema file is an error.
+    pub fn load_default() -> Result<Option<TuningManifest>> {
+        let path = Self::default_path();
+        if !path.exists() {
+            return Ok(None);
+        }
+        Self::load(&path).map(Some)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,5 +364,78 @@ mod tests {
     #[test]
     fn malformed_line_errors() {
         assert!(Manifest::parse("onlyname\n").is_err());
+    }
+
+    fn tuned(label: &str, m: usize, k: usize, n: usize) -> TunedShape {
+        TunedShape {
+            label: label.to_string(),
+            m,
+            k,
+            n,
+            tiles: TileConfig { mc: 32, kc: 128, nc: 64 },
+            micro: MicroConfig { mr: 4, nr: 16 },
+            threads: 4,
+            split: RowSplit::Interleaved,
+            simd: SimdLevel::Scalar,
+            gflops: 12.375,
+            baseline_gflops: 10.0625,
+        }
+    }
+
+    #[test]
+    fn tuning_manifest_round_trips() {
+        let mut man = TuningManifest::new("avx2+fma");
+        man.push(tuned("llama-7b/qkv", 256, 4096, 12288));
+        man.push(tuned("grid/64", 64, 64, 66));
+        let text = man.to_text();
+        let back = TuningManifest::parse(&text).unwrap();
+        assert_eq!(back, man);
+        // Byte-stability: save → load → save is the identity.
+        assert_eq!(back.to_text(), text);
+    }
+
+    #[test]
+    fn tuning_manifest_rejects_stale_or_corrupt() {
+        // Wrong schema tag (a v0 file, or a future v2) must be rejected.
+        let stale = "schema\tvabft-tuning/v0\ncpu\tneon\n";
+        assert!(TuningManifest::parse(stale).is_err());
+        // Missing schema line entirely.
+        assert!(TuningManifest::parse("cpu\tneon\n").is_err());
+        assert!(TuningManifest::parse("").is_err());
+        // Corrupt shape records: missing field, bad number, bad enum,
+        // out-of-range micro tile.
+        let head = format!("schema\t{TUNING_SCHEMA}\n");
+        for bad in [
+            "shape\tlabel=x\tm=8\tk=8\n",
+            "shape\tlabel=x\tm=eight\tk=8\tn=8\tmc=1\tkc=1\tnc=1\tmr=1\tnr=1\t\
+             threads=1\tsplit=contiguous\tsimd=scalar\tgflops=1\tbaseline_gflops=1\n",
+            "shape\tlabel=x\tm=8\tk=8\tn=8\tmc=1\tkc=1\tnc=1\tmr=1\tnr=1\t\
+             threads=1\tsplit=diagonal\tsimd=scalar\tgflops=1\tbaseline_gflops=1\n",
+            "shape\tlabel=x\tm=8\tk=8\tn=8\tmc=1\tkc=1\tnc=1\tmr=1\tnr=99\t\
+             threads=1\tsplit=contiguous\tsimd=scalar\tgflops=1\tbaseline_gflops=1\n",
+            "shape\tlabel=x\tm=8\tk=8\tn=8\tmc=0\tkc=1\tnc=1\tmr=1\tnr=1\t\
+             threads=1\tsplit=contiguous\tsimd=scalar\tgflops=1\tbaseline_gflops=1\n",
+        ] {
+            let text = format!("{head}{bad}");
+            assert!(TuningManifest::parse(&text).is_err(), "accepted: {bad}");
+        }
+        // Unknown record kinds are errors, not silently skipped.
+        assert!(TuningManifest::parse(&format!("{head}mystery\t1\n")).is_err());
+    }
+
+    #[test]
+    fn tuning_lookup_prefers_exact_then_nearest_with_cap() {
+        let mut man = TuningManifest::new("scalar");
+        man.push(tuned("small", 64, 64, 64));
+        man.push(tuned("large", 4096, 4096, 4096));
+        // Exact hit.
+        assert_eq!(man.lookup(64, 64, 64).unwrap().label, "small");
+        // Near miss maps to the closest class.
+        assert_eq!(man.lookup(96, 64, 48).unwrap().label, "small");
+        assert_eq!(man.lookup(2048, 4096, 8192).unwrap().label, "large");
+        // A shape unlike anything tuned falls back to defaults (None).
+        assert!(man.lookup(1, 1_000_000, 1).is_none());
+        // Empty manifest never matches.
+        assert!(TuningManifest::new("x").lookup(8, 8, 8).is_none());
     }
 }

@@ -14,7 +14,7 @@
 
 mod manifest;
 pub mod xla_stub;
-pub use manifest::{ArtifactEntry, Manifest};
+pub use manifest::{ArtifactEntry, Manifest, TunedShape, TuningManifest, TUNING_SCHEMA};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

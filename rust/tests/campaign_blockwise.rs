@@ -1,9 +1,10 @@
 //! Fault-campaign regression over the unified blockwise pipeline.
 //!
 //! A seeded campaign of single-event upsets (exponent and high-mantissa
-//! bit flips on the FP32 accumulator) through `BlockwiseFtGemm` — i.e.
-//! the shared FT pipeline at `block_k = KC` — asserting, for BF16-wide
-//! and FP32 accumulation models:
+//! bit flips on the FP32 accumulator) through `FtGemm` at
+//! `VerifyGranularity::BlockK` — i.e. the shared FT pipeline at
+//! `block_k = KC` — asserting, for BF16-wide and FP32 accumulation
+//! models:
 //!
 //! * detection recall = 1.0 for every fault whose magnitude clears the
 //!   row's V-ABFT threshold with margin (detection is then a theorem, not
@@ -16,7 +17,7 @@
 //! Sizes are small (8×128×16, 4 K-blocks) so the whole campaign stays
 //! well under 10 s in CI.
 
-use vabft::abft::{BlockwiseFtGemm, Verdict, VerifyPolicy};
+use vabft::abft::{FtGemm, Verdict, VerifyGranularity, VerifyPolicy};
 use vabft::gemm::GemmEngine;
 use vabft::prelude::*;
 use vabft::threshold::{Threshold, ThresholdContext};
@@ -48,7 +49,11 @@ fn run_campaign(model: AccumModel, seed_base: u64) {
     // Exponent bits (24–27) and high-mantissa bits (20–22) of the FP32
     // accumulator grid — the verify grid of the online policy.
     let bits: [u32; 7] = [20, 21, 22, 24, 25, 26, 27];
-    let bw = BlockwiseFtGemm::new(GemmEngine::new(model), BLOCK_K, VerifyPolicy::default());
+    let bw = FtGemm::new(
+        GemmEngine::new(model),
+        Box::new(VabftThreshold::default()),
+        VerifyPolicy::default().with_granularity(VerifyGranularity::BlockK(BLOCK_K)),
+    );
 
     let mut rng = Xoshiro256pp::seed_from_u64(seed_base ^ 0xCA3);
     let mut above_threshold = 0usize;
@@ -74,12 +79,12 @@ fn run_campaign(model: AccumModel, seed_base: u64) {
 
             let mut delta = 0.0f64;
             let out = bw
-                .multiply_with_injection(&a, &b, |bi, acc| {
+                .multiply_with_block_injection(&a, &b, |bi, o| {
                     if bi == block {
-                        let old = acc.get(row, col);
+                        let old = o.acc.get(row, col);
                         let (new, _) = flip.apply(old);
                         delta = new - old;
-                        acc.set(row, col, new);
+                        o.acc.set(row, col, new);
                     }
                 })
                 .unwrap();

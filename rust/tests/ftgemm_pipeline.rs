@@ -304,6 +304,7 @@ fn recompute_round_trip_is_bitwise_for_full_precision_models() {
         localize_tol: 0.45,
         severity: false,
         encoding: EncodingMode::RowOnly,
+        granularity: VerifyGranularity::Monolithic,
     };
     let mut seed = 800;
     // Exponent bit 1 of each model's verify grid: bit 24 on FP32,
@@ -378,6 +379,7 @@ fn fused_recompute_round_trip_is_bitwise_for_full_precision_models() {
         localize_tol: 0.45,
         severity: false,
         encoding: EncodingMode::RowOnly,
+        granularity: VerifyGranularity::Monolithic,
     };
     let mut seed = 950;
     for (base, bit) in [

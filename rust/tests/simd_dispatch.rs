@@ -1,0 +1,245 @@
+//! SIMD dispatch matrix: every kernel level this host can execute must be
+//! bitwise-identical to the scalar serial engine — across ragged shapes
+//! (coprime dims, n smaller than NR, K = 0, more threads than rows),
+//! both element types, all three reduction strategies, and both the
+//! staged and the fused-epilogue paths. SIMD dispatch vectorizes only
+//! across independent output columns, so this is the schedule-
+//! preservation invariant extended to the instruction level.
+//!
+//! Also locks the tuning-manifest contract: a saved manifest round-trips
+//! through [`vabft::gemm::EngineConfig`]'s shape-aware resolution, and a
+//! corrupt or stale-schema manifest is rejected rather than silently
+//! misconfiguring the engine.
+
+use std::sync::Mutex;
+
+use vabft::gemm::{
+    tiled, EngineConfig, MicroConfig, ParallelismConfig, ReduceStrategy, RowSplit, SimdLevel,
+    TileConfig,
+};
+use vabft::rng::{Rng, Xoshiro256pp};
+use vabft::runtime::{TunedShape, TuningManifest};
+
+/// Ragged shape zoo: coprime dims, n < every NR, k = 0, single row,
+/// m smaller than any thread count under test.
+const SHAPES: &[(usize, usize, usize)] =
+    &[(7, 13, 5), (3, 31, 17), (5, 16, 3), (4, 0, 8), (1, 37, 23), (16, 24, 33)];
+
+const STRATEGIES: [ReduceStrategy; 3] =
+    [ReduceStrategy::Sequential, ReduceStrategy::Fma, ReduceStrategy::Pairwise];
+
+/// Small tiles so even tiny shapes cross block boundaries.
+const TILES: TileConfig = TileConfig { mc: 8, kc: 16, nc: 8 };
+
+const MICROS: [MicroConfig; 3] = [
+    MicroConfig { mr: 8, nr: 8 },
+    MicroConfig { mr: 4, nr: 16 },
+    MicroConfig { mr: 2, nr: 8 },
+];
+
+fn scalar_par() -> ParallelismConfig {
+    ParallelismConfig {
+        threads: 1,
+        tiles: TILES,
+        micro: MicroConfig::DEFAULT,
+        split: RowSplit::Contiguous,
+        simd: SimdLevel::Scalar,
+    }
+}
+
+fn fill_f32(len: usize, rng: &mut Xoshiro256pp) -> Vec<f32> {
+    (0..len).map(|_| rng.uniform(-1.0, 1.0) as f32).collect()
+}
+
+fn fill_f64(len: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
+    (0..len).map(|_| rng.uniform(-1.0, 1.0)).collect()
+}
+
+/// The full dispatch matrix for one element type, via the given runner.
+fn sweep<T: Copy + PartialEq + std::fmt::Debug>(
+    mut gemm: impl FnMut(usize, usize, usize, ReduceStrategy, &ParallelismConfig) -> Vec<T>,
+) {
+    let levels = SimdLevel::available_levels();
+    assert!(levels.contains(&SimdLevel::Scalar));
+    for &(m, k, n) in SHAPES {
+        for strategy in STRATEGIES {
+            let reference = gemm(m, k, n, strategy, &scalar_par());
+            for &level in &levels {
+                for threads in [1usize, 3] {
+                    for micro in MICROS {
+                        for split in [RowSplit::Contiguous, RowSplit::Interleaved] {
+                            let par = ParallelismConfig {
+                                threads,
+                                tiles: TILES,
+                                micro,
+                                split,
+                                simd: level,
+                            };
+                            let out = gemm(m, k, n, strategy, &par);
+                            assert_eq!(
+                                out, reference,
+                                "divergence: {m}x{k}x{n} {strategy:?} level={} \
+                                 threads={threads} micro={}x{} split={}",
+                                level.name(),
+                                micro.mr,
+                                micro.nr,
+                                split.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dispatch_matrix_f32_staged() {
+    // Operands derive deterministically from the shape so the reference
+    // and every candidate see identical inputs.
+    sweep(|m, k, n, strategy, par| {
+        let mut sr = Xoshiro256pp::seed_from_u64((m * 73 + k * 31 + n) as u64);
+        let a = fill_f32(m * k, &mut sr);
+        let b = fill_f32(k * n, &mut sr);
+        tiled::gemm_f32(&a, &b, m, k, n, strategy, par)
+    });
+}
+
+#[test]
+fn dispatch_matrix_f64_staged() {
+    sweep(|m, k, n, strategy, par| {
+        let mut sr = Xoshiro256pp::seed_from_u64((m * 73 + k * 31 + n) as u64 ^ 0xF64);
+        let a = fill_f64(m * k, &mut sr);
+        let b = fill_f64(k * n, &mut sr);
+        tiled::gemm_f64(&a, &b, m, k, n, strategy, par)
+    });
+}
+
+/// Fused-epilogue path: outputs AND the rows observed by the epilogue
+/// (pre-store, in registers) must match the scalar engine bitwise at
+/// every dispatch level.
+#[test]
+fn dispatch_matrix_f32_fused_epilogue() {
+    sweep(|m, k, n, strategy, par| {
+        let mut sr = Xoshiro256pp::seed_from_u64((m * 73 + k * 31 + n) as u64 ^ 0xF5D);
+        let a = fill_f32(m * k, &mut sr);
+        let b = fill_f32(k * n, &mut sr);
+        let seen: Mutex<Vec<Vec<f32>>> = Mutex::new(vec![Vec::new(); m]);
+        let c = tiled::gemm_f32_fused(&a, &b, m, k, n, strategy, par, &|i, row| {
+            seen.lock().unwrap()[i] = row.to_vec();
+        });
+        // Fold the epilogue observations into the compared value so a
+        // fused-path divergence is caught even if the stored C agrees.
+        let mut out = c;
+        for row in seen.into_inner().unwrap() {
+            out.extend_from_slice(&row);
+        }
+        out
+    });
+}
+
+#[test]
+fn dispatch_matrix_f64_fused_epilogue() {
+    sweep(|m, k, n, strategy, par| {
+        let mut sr = Xoshiro256pp::seed_from_u64((m * 73 + k * 31 + n) as u64 ^ 0xFD64);
+        let a = fill_f64(m * k, &mut sr);
+        let b = fill_f64(k * n, &mut sr);
+        let seen: Mutex<Vec<Vec<f64>>> = Mutex::new(vec![Vec::new(); m]);
+        let c = tiled::gemm_f64_fused(&a, &b, m, k, n, strategy, par, &|i, row| {
+            seen.lock().unwrap()[i] = row.to_vec();
+        });
+        let mut out = c;
+        for row in seen.into_inner().unwrap() {
+            out.extend_from_slice(&row);
+        }
+        out
+    });
+}
+
+/// A forced level that this host cannot execute must fall back to scalar
+/// (resolve(), not a crash or a wrong-bits kernel).
+#[test]
+fn unavailable_levels_resolve_to_scalar() {
+    for level in [SimdLevel::Avx2, SimdLevel::Avx512, SimdLevel::Neon] {
+        if !level.is_available() {
+            assert_eq!(level.resolve(), SimdLevel::Scalar);
+        }
+    }
+    assert_eq!(SimdLevel::Scalar.resolve(), SimdLevel::Scalar);
+    assert_eq!(SimdLevel::Auto.resolve(), SimdLevel::detect());
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("vabft-simd-dispatch-{}-{name}.tsv", std::process::id()))
+}
+
+/// Save → load → shape-aware resolve: the tuned schedule for an exact
+/// shape comes back field-for-field; an unrelated shape (beyond the
+/// nearest-neighbour cap) resolves to the defaults; explicit builder
+/// overrides always beat the manifest.
+#[test]
+fn manifest_round_trips_through_engine_config() {
+    let mut manifest = TuningManifest::new("test-cpu");
+    manifest.push(TunedShape {
+        label: "gpt2/attn".into(),
+        m: 8,
+        k: 96,
+        n: 32,
+        tiles: TileConfig { mc: 32, kc: 48, nc: 16 },
+        micro: MicroConfig { mr: 4, nr: 16 },
+        threads: 2,
+        split: RowSplit::Interleaved,
+        simd: SimdLevel::Scalar,
+        gflops: 12.375,
+        baseline_gflops: 10.0625,
+    });
+    let path = tmp("roundtrip");
+    manifest.save(&path).unwrap();
+    let loaded = TuningManifest::load(&path).unwrap();
+    assert_eq!(loaded, manifest);
+
+    let cfg = EngineConfig::new().manifest(loaded);
+    let tuned = cfg.resolve_for(8, 96, 32);
+    assert_eq!(tuned.tiles, TileConfig { mc: 32, kc: 48, nc: 16 });
+    assert_eq!(tuned.micro, MicroConfig { mr: 4, nr: 16 });
+    assert_eq!(tuned.threads, 2);
+    assert_eq!(tuned.split, RowSplit::Interleaved);
+    assert_eq!(tuned.simd, SimdLevel::Scalar);
+
+    // Far-away shape: beyond the lookup cap, nothing is filled in.
+    let far = cfg.resolve_for(4096, 1, 4096);
+    assert_eq!(far, ParallelismConfig::serial());
+
+    // Explicit builder overrides beat the manifest at the tuned shape.
+    let pinned = cfg.clone().threads(5).micro(8, 8).resolve_for(8, 96, 32);
+    assert_eq!(pinned.threads, 5);
+    assert_eq!(pinned.micro, MicroConfig::DEFAULT);
+    assert_eq!(pinned.tiles, TileConfig { mc: 32, kc: 48, nc: 16 });
+
+    std::fs::remove_file(&path).ok();
+}
+
+/// Corrupt or stale-schema manifests must be load errors, never a
+/// silently misconfigured engine.
+#[test]
+fn corrupt_and_stale_manifests_are_rejected() {
+    let stale = tmp("stale");
+    std::fs::write(&stale, "schema\tvabft-tuning/v0\ncpu\tx\n").unwrap();
+    assert!(TuningManifest::load(&stale).is_err(), "stale schema must be rejected");
+
+    let corrupt = tmp("corrupt");
+    std::fs::write(
+        &corrupt,
+        "schema\tvabft-tuning/v1\ncpu\tx\nshape\tlabel=a\tm=8\tk=not-a-number\tn=4\n",
+    )
+    .unwrap();
+    assert!(TuningManifest::load(&corrupt).is_err(), "corrupt record must be rejected");
+
+    let truncated = tmp("truncated");
+    std::fs::write(&truncated, "").unwrap();
+    assert!(TuningManifest::load(&truncated).is_err(), "empty file must be rejected");
+
+    for p in [stale, corrupt, truncated] {
+        std::fs::remove_file(&p).ok();
+    }
+}

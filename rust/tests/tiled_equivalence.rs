@@ -3,10 +3,10 @@
 //! offline registry; failing cases print their full configuration).
 //!
 //! The invariant V-ABFT depends on: for randomized (m, k, n, seed,
-//! AccumModel, tile sizes, microkernel shapes, thread counts 1/2/4), the
-//! engine's output **and** pre-quantization accumulator are *bitwise
-//! equal* to the naive reference kernels, for all three `ReduceStrategy`
-//! variants. The reference is computed here from `gemm::kernels` /
+//! AccumModel, tile sizes, microkernel shapes, thread counts 1/2/4, and
+//! every SIMD dispatch level this host can execute), the engine's output
+//! **and** pre-quantization accumulator are *bitwise equal* to the naive
+//! reference kernels, for all three `ReduceStrategy` variants. The reference is computed here from `gemm::kernels` /
 //! `gemm::generic_gemm` directly — independently of the engine's dispatch
 //! code — so a regression in either layer trips the test. The retained
 //! PR-1 unpacked engine is cross-checked against the same reference,
@@ -94,6 +94,7 @@ fn micro_grid() -> Vec<MicroConfig> {
 #[test]
 fn prop_tiled_engine_bitwise_equals_naive_reference() {
     let mut cases = Cases::new(0x711ED);
+    let levels = SimdLevel::available_levels();
     for case in 0..24 {
         let (m, k, n) = (cases.dims(1, 12), cases.dims(1, 48), cases.dims(1, 32));
         let (input, work, out) = cases.precisions();
@@ -115,7 +116,11 @@ fn prop_tiled_engine_bitwise_equals_naive_reference() {
                     } else {
                         RowSplit::Interleaved
                     };
-                    let par = ParallelismConfig { threads, tiles, micro, split };
+                    // Rotate the SIMD dispatch level across cases too:
+                    // vectorization is per output column, so every level
+                    // must reproduce the scalar bits.
+                    let simd = levels[(case + threads) % levels.len()];
+                    let par = ParallelismConfig { threads, tiles, micro, split, simd };
                     let got = GemmEngine::with_parallelism(model, par).matmul(&a, &b);
                     assert_eq!(
                         got.acc.data(),
@@ -149,6 +154,7 @@ fn prop_packed_path_ragged_shapes() {
         (5, 129, 17),  // threads (up to 8) > m
     ];
     let mut cases = Cases::new(0x4A66ED);
+    let levels = SimdLevel::available_levels();
     let d = Distribution::uniform_pm1();
     for &(m, k, n) in shapes {
         let a = Matrix::sample(m, k, &d, &mut cases.rng);
@@ -163,28 +169,35 @@ fn prop_packed_path_ragged_shapes() {
             for threads in [1usize, 2, 8] {
                 for tiles in tile_grid() {
                     for micro in micro_grid() {
-                        let split = if threads % 2 == 0 {
-                            RowSplit::Interleaved
-                        } else {
-                            RowSplit::Contiguous
-                        };
-                        let par = ParallelismConfig { threads, tiles, micro, split };
-                        let got64 = tiled::gemm_f64(a.data(), b.data(), m, k, n, strategy, &par);
-                        assert_eq!(
-                            got64, want64,
-                            "packed f64 {m}x{k}x{n} {strategy:?} {par:?}"
-                        );
-                        let got32 = tiled::gemm_f32(&a32, &b32, m, k, n, strategy, &par);
-                        assert_eq!(
-                            got32, want32,
-                            "packed f32 {m}x{k}x{n} {strategy:?} {par:?}"
-                        );
+                        // Every SIMD level this host can run, on every
+                        // ragged shape: dispatched microkernels must be
+                        // bitwise-equal to the scalar path.
+                        for &simd in &levels {
+                            let split = if threads % 2 == 0 {
+                                RowSplit::Interleaved
+                            } else {
+                                RowSplit::Contiguous
+                            };
+                            let par = ParallelismConfig { threads, tiles, micro, split, simd };
+                            let got64 =
+                                tiled::gemm_f64(a.data(), b.data(), m, k, n, strategy, &par);
+                            assert_eq!(
+                                got64, want64,
+                                "packed f64 {m}x{k}x{n} {strategy:?} {par:?}"
+                            );
+                            let got32 = tiled::gemm_f32(&a32, &b32, m, k, n, strategy, &par);
+                            assert_eq!(
+                                got32, want32,
+                                "packed f32 {m}x{k}x{n} {strategy:?} {par:?}"
+                            );
+                        }
                     }
                     let par = ParallelismConfig {
                         threads,
                         tiles,
                         micro: MicroConfig::DEFAULT,
                         split: RowSplit::Interleaved,
+                        simd: SimdLevel::Scalar,
                     };
                     let unp64 =
                         tiled::gemm_unpacked_f64(a.data(), b.data(), m, k, n, strategy, &par);
@@ -243,12 +256,16 @@ fn larger_shapes_cross_tile_boundaries() {
         ] {
             let (want_c, want_acc) = reference(model, &a, &b);
             for threads in [1usize, 2, 4] {
-                let par = ParallelismConfig::with_threads(threads)
-                    .tiles(TileConfig::new(4, 32, 24))
-                    .micro(MicroConfig::new(4, 8));
-                let got = GemmEngine::with_parallelism(model, par).matmul(&a, &b);
-                assert_eq!(got.acc.data(), want_acc.as_slice(), "{model:?} t={threads}");
-                assert_eq!(got.c.data(), want_c.as_slice(), "{model:?} t={threads}");
+                for &simd in &SimdLevel::available_levels() {
+                    let par = ParallelismConfig::with_threads(threads)
+                        .tiles(TileConfig::new(4, 32, 24))
+                        .micro(MicroConfig::new(4, 8))
+                        .simd(simd);
+                    let got = GemmEngine::with_parallelism(model, par).matmul(&a, &b);
+                    let tag = format!("{model:?} t={threads} simd={}", simd.name());
+                    assert_eq!(got.acc.data(), want_acc.as_slice(), "{tag}");
+                    assert_eq!(got.c.data(), want_c.as_slice(), "{tag}");
+                }
             }
         }
     }
@@ -272,6 +289,7 @@ fn prop_fused_probe_equals_post_hoc_sweep() {
         (5, 129, 17),
     ];
     let mut cases = Cases::new(0xF05ED);
+    let levels = SimdLevel::available_levels();
     let d = Distribution::uniform_pm1();
     for (si, &(m, k, n)) in shapes.iter().enumerate() {
         let a = Matrix::sample(m, k, &d, &mut cases.rng);
@@ -302,31 +320,38 @@ fn prop_fused_probe_equals_post_hoc_sweep() {
                 let probe = FusedProbe { n, weights: &weights, thresholds: &thresholds };
                 for threads in [1usize, 2, 8] {
                     for tiles in tile_grid() {
-                        let micro = micro_grid()[(si + threads) % micro_grid().len()];
-                        let split = if threads % 2 == 0 {
-                            RowSplit::Interleaved
-                        } else {
-                            RowSplit::Contiguous
-                        };
-                        let par = ParallelismConfig { threads, tiles, micro, split };
-                        let engine = GemmEngine::with_parallelism(model, par);
-                        let (got, checks) = engine.matmul_mixed_fused(&a, &b_enc, wide, &probe);
-                        let plain = engine.matmul_mixed(&a, &b_enc, wide);
-                        assert_eq!(
-                            got.acc.data(),
-                            plain.acc.data(),
-                            "fused acc diverged {m}x{k}x{n} {model:?} {par:?}"
-                        );
-                        assert_eq!(
-                            got.c.data(),
-                            plain.c.data(),
-                            "fused c diverged {m}x{k}x{n} {model:?} {par:?}"
-                        );
-                        assert_eq!(
-                            checks,
-                            engine.fused_sweep(&plain.acc, &probe),
-                            "fused checks diverged {m}x{k}x{n} {model:?} {par:?}"
-                        );
+                        // Sweep every dispatchable SIMD level through the
+                        // fused-epilogue kernels too: the epilogue reads
+                        // rows straight out of the microkernel store, so a
+                        // vector-width bug shows up here first.
+                        for &simd in &levels {
+                            let micro = micro_grid()[(si + threads) % micro_grid().len()];
+                            let split = if threads % 2 == 0 {
+                                RowSplit::Interleaved
+                            } else {
+                                RowSplit::Contiguous
+                            };
+                            let par = ParallelismConfig { threads, tiles, micro, split, simd };
+                            let engine = GemmEngine::with_parallelism(model, par);
+                            let (got, checks) =
+                                engine.matmul_mixed_fused(&a, &b_enc, wide, &probe);
+                            let plain = engine.matmul_mixed(&a, &b_enc, wide);
+                            assert_eq!(
+                                got.acc.data(),
+                                plain.acc.data(),
+                                "fused acc diverged {m}x{k}x{n} {model:?} {par:?}"
+                            );
+                            assert_eq!(
+                                got.c.data(),
+                                plain.c.data(),
+                                "fused c diverged {m}x{k}x{n} {model:?} {par:?}"
+                            );
+                            assert_eq!(
+                                checks,
+                                engine.fused_sweep(&plain.acc, &probe),
+                                "fused checks diverged {m}x{k}x{n} {model:?} {par:?}"
+                            );
+                        }
                     }
                 }
             }
@@ -359,6 +384,7 @@ fn prop_fused_policy_bitwise_equals_post_hoc_online() {
         (Precision::Bf16, Precision::Bf16, Precision::Bf16),
     ];
     let mut cases = Cases::new(0xF0011);
+    let levels = SimdLevel::available_levels();
     let d = Distribution::normal_1_1();
     for (ci, &(m, k, n)) in shapes.iter().enumerate() {
         let a = Matrix::sample(m, k, &d, &mut cases.rng);
@@ -378,7 +404,8 @@ fn prop_fused_policy_bitwise_equals_post_hoc_online() {
                     } else {
                         RowSplit::Interleaved
                     };
-                    let par = ParallelismConfig { threads, tiles, micro, split };
+                    let simd = levels[(ci + pi + ti + threads) % levels.len()];
+                    let par = ParallelismConfig { threads, tiles, micro, split, simd };
                     let mk = |policy| {
                         FtGemm::new(
                             GemmEngine::with_parallelism(model, par),
@@ -494,18 +521,23 @@ fn two_dimensional_encoding_is_schedule_preserving() {
         for threads in [2usize, 4] {
             for tiles in tile_grid() {
                 for micro in [MicroConfig::DEFAULT, MicroConfig::new(3, 5)] {
-                    let split =
-                        if threads == 2 { RowSplit::Interleaved } else { RowSplit::Contiguous };
-                    let par = ParallelismConfig { threads, tiles, micro, split };
-                    let engine = GemmEngine::with_parallelism(model, par);
-                    let got = engine.matmul_mixed_2d(
-                        &cenc.a_encoded,
-                        &enc.b_encoded,
-                        enc.wide_cols(),
-                        cenc.wide_rows(),
-                    );
-                    assert_eq!(got.acc.data(), base.acc.data(), "{model:?} {par:?}");
-                    assert_eq!(got.c.data(), base.c.data(), "{model:?} {par:?}");
+                    for &simd in &SimdLevel::available_levels() {
+                        let split = if threads == 2 {
+                            RowSplit::Interleaved
+                        } else {
+                            RowSplit::Contiguous
+                        };
+                        let par = ParallelismConfig { threads, tiles, micro, split, simd };
+                        let engine = GemmEngine::with_parallelism(model, par);
+                        let got = engine.matmul_mixed_2d(
+                            &cenc.a_encoded,
+                            &enc.b_encoded,
+                            enc.wide_cols(),
+                            cenc.wide_rows(),
+                        );
+                        assert_eq!(got.acc.data(), base.acc.data(), "{model:?} {par:?}");
+                        assert_eq!(got.c.data(), base.c.data(), "{model:?} {par:?}");
+                    }
                 }
             }
         }
@@ -547,13 +579,15 @@ fn encoded_multiply_is_thread_invariant() {
     for threads in [2usize, 4] {
         for tiles in tile_grid() {
             for micro in [MicroConfig::DEFAULT, MicroConfig::new(3, 5)] {
-                let split =
-                    if threads == 2 { RowSplit::Interleaved } else { RowSplit::Contiguous };
-                let par = ParallelismConfig { threads, tiles, micro, split };
-                let engine = GemmEngine::with_parallelism(model, par);
-                let got = engine.matmul_mixed(&a, &enc.b_encoded, enc.wide_cols());
-                assert_eq!(got.acc.data(), base.acc.data(), "{par:?}");
-                assert_eq!(got.c.data(), base.c.data(), "{par:?}");
+                for &simd in &SimdLevel::available_levels() {
+                    let split =
+                        if threads == 2 { RowSplit::Interleaved } else { RowSplit::Contiguous };
+                    let par = ParallelismConfig { threads, tiles, micro, split, simd };
+                    let engine = GemmEngine::with_parallelism(model, par);
+                    let got = engine.matmul_mixed(&a, &enc.b_encoded, enc.wide_cols());
+                    assert_eq!(got.acc.data(), base.acc.data(), "{par:?}");
+                    assert_eq!(got.c.data(), base.c.data(), "{par:?}");
+                }
             }
         }
     }
