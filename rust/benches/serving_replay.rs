@@ -1,23 +1,29 @@
 //! Sharded serving-replay throughput bench, closed and open loop.
 //!
 //! Replays the LLaMA-7B layer trace (published shapes, scaled) through
-//! the coordinator at a ladder of shard configurations, then drives the
-//! open-loop traffic engine (one rung per seeded arrival process, plus
-//! an always-recompute vs severity-aware recovery pair on a
-//! fault-injected mixed-family trace) and records the whole trajectory
-//! to `BENCH_serving.json` (`vabft-serving/v2`: tail latencies and shed
-//! rates alongside throughput).
+//! the coordinator at a ladder of shard configurations, runs the
+//! planned-vs-uniform protection A/B on the mixed three-family trace,
+//! then drives the open-loop traffic engine (one rung per seeded arrival
+//! process, plus an always-recompute vs severity-aware recovery pair on
+//! a fault-injected mixed-family trace) and records the whole trajectory
+//! to `BENCH_serving.json` (`vabft-serving/v3`: per-row protection-plan
+//! labels alongside tail latencies, shed rates and throughput).
 //!
 //! Gates:
 //!
 //! * **always** — the closed-loop output fingerprint must be identical
 //!   across every rung (sharding / partitioning / stealing are pure
-//!   scheduling); open-loop reruns must reproduce their fingerprints;
-//!   and severity-aware recovery must preserve every detection and every
-//!   output bit of the always-recompute run. All deterministic, so even
-//!   the quick run enforces them — never a timing assertion;
+//!   scheduling); the planner-driven arm must reproduce the uniform
+//!   arm's fingerprint bit-for-bit (invariant #9: neutral plan selection
+//!   is pure scheduling too); open-loop reruns must reproduce their
+//!   fingerprints; and severity-aware recovery must preserve every
+//!   detection and every output bit of the always-recompute run. All
+//!   deterministic, so even the quick run enforces them — never a
+//!   timing assertion;
 //! * **full only** — shards=4 must reach ≥ 1.5× the shards=1 request
-//!   throughput on the LLaMA-7B trace at concurrency ≥ 8, and
+//!   throughput on the LLaMA-7B trace at concurrency ≥ 8, the planned
+//!   arm must not lose request throughput to uniform ABFT on the mixed
+//!   trace (per-layer scheme choice has to pay for itself), and
 //!   severity-aware recovery must not lose to always-recompute on p99
 //!   (≤ 1.10× slack for scheduler noise; it skips recompute work, so
 //!   its tail should be no worse).
@@ -28,11 +34,12 @@ use vabft::abft::VerifyPolicy;
 use vabft::bench_harness::{validate_schema, BenchMode, SERVING_SCHEMA};
 use vabft::coordinator::{CoordinatorConfig, PartitionPolicy};
 use vabft::gemm::{AccumModel, ParallelismConfig};
+use vabft::planner::{CostModel, Planner, PlannerConfig, ProtectionPlan, ProtectionScheme};
 use vabft::prelude::Precision;
 use vabft::report::Table;
 use vabft::workload::{
-    run_open_loop, run_replay, replay_doc, ArrivalModel, OpenLoopConfig, ReplayConfig,
-    ReplayReport, ReplayRow,
+    build_trace, run_open_loop, run_replay, run_replay_planned, replay_doc, ArrivalModel,
+    OpenLoopConfig, ReplayConfig, ReplayReport, ReplayRow,
 };
 
 struct Rung {
@@ -157,6 +164,96 @@ fn main() {
         );
         println!("scaling gate OK: shards=4 at {:.2}x shards=1", four / base);
     }
+
+    // ---- planned vs uniform protection on the mixed trace ----
+    // The planner calibrates every neutral scheme on the trace's own
+    // shapes and assigns a scheme per layer; invariant #9 makes the
+    // planned arm's fingerprint a bitwise gate in every mode, and the
+    // full run additionally requires the plan to pay for itself.
+    let mixed_cfg = ReplayConfig {
+        family: "mixed".to_string(),
+        scale: mode.pick(32, 8),
+        layers: 1,
+        batch: mode.pick(4, 8),
+        passes: mode.pick(1, 2),
+        concurrency: 8,
+        seed,
+    };
+    let trace = build_trace(&mixed_cfg);
+    let pcfg = PlannerConfig::default();
+    let schemes: Vec<ProtectionScheme> = ProtectionScheme::vocabulary(pcfg.block_k)
+        .into_iter()
+        .filter(|s| s.is_schedule_neutral())
+        .collect();
+    let mut cost = CostModel::new();
+    let mut shapes: Vec<(usize, usize, usize)> = Vec::new();
+    for e in &ProtectionPlan::uniform_for(&trace).entries {
+        if !shapes.contains(&(e.m, e.k, e.n)) {
+            shapes.push((e.m, e.k, e.n));
+        }
+    }
+    for &(m, k, n) in &shapes {
+        cost.calibrate_shape(
+            AccumModel::wide(Precision::Bf16),
+            m,
+            k,
+            n,
+            &schemes,
+            pcfg.calibration_reps,
+        );
+    }
+    let plan = Planner::new(pcfg, cost).plan_trace(&trace);
+    println!("\nprotection plan over the mixed trace: {}", plan.summary());
+    let plan_ccfg = || CoordinatorConfig {
+        workers: 1,
+        queue_depth: (2 * mixed_cfg.concurrency).max(16),
+        model: AccumModel::wide(Precision::Bf16),
+        parallelism: ParallelismConfig::serial(),
+        shards: 2,
+        ..Default::default()
+    };
+    let best_of = |plan: Option<&ProtectionPlan>| {
+        let mut best: Option<ReplayReport> = None;
+        for _ in 0..reps {
+            let rep = run_replay_planned(&mixed_cfg, plan_ccfg(), plan);
+            if let Some(b) = &best {
+                assert_eq!(b.fingerprint, rep.fingerprint, "planned replay not reproducible");
+            }
+            if best.as_ref().map(|b| rep.rps() > b.rps()).unwrap_or(true) {
+                best = Some(rep);
+            }
+        }
+        best.unwrap()
+    };
+    let uniform = best_of(None);
+    let planned = best_of(Some(&plan));
+    assert_eq!(uniform.faulty, 0, "clean uniform replay produced non-clean verdicts");
+    assert_eq!(planned.faulty, 0, "clean planned replay produced non-clean verdicts");
+    assert_eq!(
+        planned.fingerprint, uniform.fingerprint,
+        "planned replay must reproduce the uniform fingerprint bit-for-bit (invariant #9)"
+    );
+    println!(
+        "planned vs uniform on mixed trace: {:.1} vs {:.1} req/s (fingerprints identical)",
+        planned.rps(),
+        uniform.rps()
+    );
+    if mode.is_full() {
+        assert!(
+            planned.rps() >= uniform.rps(),
+            "planned protection must not lose to uniform ABFT on the mixed trace: \
+             {:.1} vs {:.1} req/s",
+            planned.rps(),
+            uniform.rps()
+        );
+        println!("plan gate OK: planned throughput >= uniform on the mixed trace");
+    }
+    let urow = ReplayRow::ladder(uniform, None, "contiguous", false, 1, mixed_cfg.concurrency);
+    let prow = ReplayRow::ladder(planned, Some(&urow), "contiguous", false, 1, mixed_cfg.concurrency)
+        .with_plan(plan.mode.label());
+    assert!(prow.fingerprint_equal, "planned row must match the uniform baseline");
+    rows.push(urow);
+    rows.push(prow);
 
     // ---- open loop: one rung per arrival process on the mixed trace ----
     // Queues run deeper than the offered count so nothing sheds and the

@@ -15,9 +15,7 @@
 //! parameterizations of the shared (private) `pipeline` module — the
 //! detect/localize/correct/recompute stages are implemented exactly
 //! once, there. [`crate::abft::PreparedWeights`] caches the weight-side
-//! state for either granularity. (The historical
-//! `crate::abft::BlockwiseFtGemm` wrapper is a deprecated alias for the
-//! `BlockK` policy.)
+//! state for either granularity.
 
 use crate::abft::encode::EncodingMode;
 use crate::abft::pipeline;
@@ -195,9 +193,8 @@ impl VerifyPolicy {
         self
     }
 
-    /// The same policy at a different verification granularity —
-    /// `VerifyGranularity::BlockK(k)` is what `BlockwiseFtGemm` used to
-    /// spell as a separate type.
+    /// The same policy at a different verification granularity (see
+    /// [`VerifyGranularity`]).
     pub fn with_granularity(mut self, granularity: VerifyGranularity) -> VerifyPolicy {
         self.granularity = granularity;
         self
@@ -400,11 +397,9 @@ impl FtGemm {
     /// Protected multiply against prepared weights (serving hot path: no
     /// re-encoding, no O(K·N) statistics pass over B). Outputs and
     /// verification decisions are bitwise-identical to the cold path *at
-    /// the handle's block granularity*: to [`FtGemm::multiply`] for a
-    /// monolithic handle ([`FtGemm::prepare`]), to
-    /// [`crate::abft::BlockwiseFtGemm::multiply`] at the matching
-    /// `block_k` for a blockwise handle — blockwise partials are
-    /// aggregated with intermediate work-precision roundings, so the two
+    /// the handle's block granularity*: to [`FtGemm::multiply`] under the
+    /// matching [`VerifyGranularity`] — blockwise partials are aggregated
+    /// with intermediate work-precision roundings, so the two
     /// granularities legitimately differ from each other by O(u).
     ///
     /// `inject`, if given, is the experiment hook: it is invoked once per
@@ -465,8 +460,8 @@ impl FtGemm {
 
     /// Protected multiply with per-K-block fault injection:
     /// `inject(block_index, partial)` fires once per verified K-block
-    /// (once total at monolithic granularity) — the blockwise experiment
-    /// hook the deprecated wrapper used to expose.
+    /// (once total at monolithic granularity) — the block-attribution
+    /// experiment hook.
     pub fn multiply_with_block_injection(
         &self,
         a: &Matrix,
@@ -481,6 +476,76 @@ impl FtGemm {
             b,
             self.policy.granularity.block_k_for(a.cols()),
             Some(move |bi: usize, o: &mut GemmOutput| inject(bi, o)),
+        )?;
+        Ok(FtGemmOutput {
+            c: out.c,
+            report: out.report,
+            detection_blocks: out.detection_blocks,
+            blocks: out.blocks,
+        })
+    }
+
+    /// [`FtGemm::multiply_prepared`] under an explicit per-request policy
+    /// (the protection-plan dispatch hook: one executor serves handles
+    /// prepared under different planner schemes). The policy must be
+    /// compatible with the handle — same model, verification point and
+    /// encoding — exactly as [`crate::abft::PreparedWeights`] checks.
+    pub fn multiply_prepared_with_policy(
+        &self,
+        a: &Matrix,
+        w: &PreparedWeights,
+        policy: &VerifyPolicy,
+        inject: Option<&dyn Fn(usize, &mut GemmOutput)>,
+    ) -> Result<FtGemmOutput> {
+        let out = pipeline::run_prepared(
+            &self.engine,
+            self.threshold.as_ref(),
+            policy,
+            a,
+            w,
+            inject.map(|f| move |bi: usize, o: &mut GemmOutput| f(bi, o)),
+        )?;
+        Ok(FtGemmOutput {
+            c: out.c,
+            report: out.report,
+            detection_blocks: out.detection_blocks,
+            blocks: out.blocks,
+        })
+    }
+
+    /// Dual-compute replication against prepared weights: run the encoded
+    /// multiply twice on the identical schedule, compare the two legs
+    /// bitwise, and recover any divergent row by recomputation (policy
+    /// permitting). No thresholds are consulted — the detector is exact
+    /// equality of independent executions — and the clean-path output is
+    /// bitwise-identical to [`FtGemm::multiply_prepared`] on the same
+    /// handle (the first leg *is* that execution). `inject` corrupts only
+    /// the first leg, mirroring a transient upset in one execution.
+    pub fn multiply_replicated(
+        &self,
+        a: &Matrix,
+        w: &PreparedWeights,
+        inject: Option<&dyn Fn(usize, &mut GemmOutput)>,
+    ) -> Result<FtGemmOutput> {
+        self.multiply_replicated_with_policy(a, w, &self.policy, inject)
+    }
+
+    /// [`FtGemm::multiply_replicated`] under an explicit per-request
+    /// policy (the planner's [`crate::planner::ProtectionScheme::Replicate`]
+    /// dispatch path).
+    pub fn multiply_replicated_with_policy(
+        &self,
+        a: &Matrix,
+        w: &PreparedWeights,
+        policy: &VerifyPolicy,
+        inject: Option<&dyn Fn(usize, &mut GemmOutput)>,
+    ) -> Result<FtGemmOutput> {
+        let out = pipeline::run_replicated(
+            &self.engine,
+            policy,
+            a,
+            w,
+            inject.map(|f| move |bi: usize, o: &mut GemmOutput| f(bi, o)),
         )?;
         Ok(FtGemmOutput {
             c: out.c,
@@ -510,9 +575,10 @@ mod tests {
     }
 
     #[test]
-    fn blockk_granularity_matches_blockwise_executor() {
-        // The unified FtGemm at BlockK(32) must be bit-for-bit the old
-        // BlockwiseFtGemm at block_k = 32 — same pipeline, same bits.
+    fn blockk_granularity_cold_and_warm_agree() {
+        // BlockK(32) over K = 96 verifies three blocks; the cold path and
+        // the prepared (warm) path must agree bit-for-bit — same
+        // pipeline, same bits.
         let (a, b) = operands(6, 8, 96, 16);
         let model = AccumModel::wide(Precision::Bf16);
         let g = ft(
@@ -521,20 +587,166 @@ mod tests {
         );
         let out = g.multiply(&a, &b).unwrap();
         assert_eq!(out.blocks, 3);
-        #[allow(deprecated)]
-        let bw = crate::abft::BlockwiseFtGemm::new(
-            GemmEngine::new(model),
-            32,
-            VerifyPolicy::default(),
-        );
-        let want = bw.multiply(&a, &b).unwrap();
-        assert_eq!(out.c.data(), want.c.data());
-        assert_eq!(out.report.verdict, want.report.verdict);
+        assert_eq!(out.report.verdict, Verdict::Clean);
         // Prepared path inherits the policy granularity too.
         let w = g.prepare(&b);
         let warm = g.multiply_prepared(&a, &w, None).unwrap();
         assert_eq!(warm.c.data(), out.c.data());
         assert_eq!(warm.blocks, 3);
+    }
+
+    #[test]
+    fn blockwise_matches_monolithic_product() {
+        let (a, b) = operands(1, 8, 96, 16);
+        let model = AccumModel::wide(Precision::Bf16);
+        let g = ft(model, VerifyPolicy::default().with_granularity(VerifyGranularity::BlockK(32)));
+        let out = g.multiply(&a, &b).unwrap();
+        assert_eq!(out.report.verdict, Verdict::Clean);
+        assert_eq!(out.blocks, 3);
+        // numerically close to the monolithic engine result (different
+        // accumulation grouping → small fp differences)
+        let mono = GemmEngine::new(model).matmul(&a, &b);
+        assert!(out.c.max_abs_diff(&mono.c) < 0.1, "{}", out.c.max_abs_diff(&mono.c));
+    }
+
+    #[test]
+    fn ragged_last_block() {
+        let (a, b) = operands(2, 4, 50, 8); // 50 = 32 + 18
+        let model = AccumModel::cpu(Precision::F64);
+        let g = ft(model, VerifyPolicy::default().with_granularity(VerifyGranularity::BlockK(32)));
+        let out = g.multiply(&a, &b).unwrap();
+        assert_eq!(out.blocks, 2);
+        assert_eq!(out.report.verdict, Verdict::Clean);
+        let mono = GemmEngine::new(model).matmul(&a, &b);
+        assert!(out.c.max_abs_diff(&mono.c) < 1e-10);
+    }
+
+    #[test]
+    fn fault_is_attributed_to_its_block_and_corrected() {
+        let (a, b) = operands(3, 8, 128, 16);
+        let model = AccumModel::wide(Precision::Bf16);
+        let g = ft(model, VerifyPolicy::default().with_granularity(VerifyGranularity::BlockK(64)));
+        let clean = g.multiply(&a, &b).unwrap();
+        let out = g
+            .multiply_with_block_injection(&a, &b, |bi, acc| {
+                if bi == 1 {
+                    let v = acc.get(5, 3);
+                    acc.set(5, 3, v + 8.0);
+                }
+            })
+            .unwrap();
+        assert_eq!(out.report.verdict, Verdict::Corrected);
+        assert_eq!(out.detection_blocks, vec![1], "fault must localize to block 1");
+        assert_eq!(out.report.detections[0].row, 5);
+        assert_eq!(out.report.detections[0].col, Some(3));
+        assert!(out.c.max_abs_diff(&clean.c) < 1e-2);
+    }
+
+    #[test]
+    fn per_block_thresholds_are_tighter_than_monolithic() {
+        // The point of §5.2: depth-bk verification beats depth-K. Compare
+        // the V-ABFT threshold of one block against the full-K threshold.
+        use crate::threshold::{Threshold, ThresholdContext};
+        let (a, b) = operands(4, 4, 1024, 64);
+        let model = AccumModel::npu_fp32();
+        let ctx = ThresholdContext::offline(model);
+        let vab = VabftThreshold::default();
+        let t_full = vab.thresholds(&a, &b, &ctx)[0];
+        let a_blk = Matrix::from_fn(4, 128, |i, j| a.get(i, j));
+        let b_blk = Matrix::from_fn(128, 64, |i, j| b.get(i, j));
+        let t_blk = vab.thresholds(&a_blk, &b_blk, &ctx)[0];
+        assert!(
+            t_blk < t_full / 2.0,
+            "block threshold {t_blk} should be ≪ full {t_full}"
+        );
+    }
+
+    #[test]
+    fn blockwise_results_independent_of_engine_parallelism() {
+        // The unified pipeline runs on the tiled engine; per-block partials
+        // (and hence thresholds, detections and outputs) must not depend on
+        // the engine's thread count.
+        use crate::gemm::ParallelismConfig;
+        let (a, b) = operands(5, 6, 96, 12);
+        let model = AccumModel::wide(Precision::Bf16);
+        let policy = VerifyPolicy::default().with_granularity(VerifyGranularity::BlockK(32));
+        let serial = ft(model, policy);
+        let parallel = FtGemm::new(
+            GemmEngine::with_parallelism(model, ParallelismConfig::with_threads(4)),
+            Box::new(VabftThreshold::default()),
+            policy,
+        );
+        let x = serial.multiply(&a, &b).unwrap();
+        let y = parallel.multiply(&a, &b).unwrap();
+        assert_eq!(x.c.data(), y.c.data(), "blockwise output must be thread-invariant");
+        assert_eq!(x.report.verdict, y.report.verdict);
+    }
+
+    #[test]
+    fn replication_clean_path_is_bitwise_identical_to_abft() {
+        // Invariant #9's replication leg: the first replica *is* the
+        // protected execution, so a clean replicated multiply returns the
+        // exact bits of the ABFT path on the same handle.
+        let (a, b) = operands(7, 8, 64, 16);
+        for model in [AccumModel::wide(Precision::Bf16), AccumModel::npu_fp32()] {
+            let g = ft(model, VerifyPolicy::default());
+            let w = g.prepare(&b);
+            let abft = g.multiply_prepared(&a, &w, None).unwrap();
+            let rep = g.multiply_replicated(&a, &w, None).unwrap();
+            assert_eq!(rep.c.data(), abft.c.data(), "{model:?}");
+            assert_eq!(rep.report.verdict, Verdict::Clean);
+            assert!(rep.report.detections.is_empty());
+        }
+    }
+
+    #[test]
+    fn replication_detects_and_recovers_injected_divergence() {
+        let (a, b) = operands(8, 8, 64, 16);
+        let model = AccumModel::wide(Precision::Bf16);
+        let g = ft(model, VerifyPolicy::default());
+        let w = g.prepare(&b);
+        let clean = g.multiply_prepared(&a, &w, None).unwrap();
+        // Data-element upset: detected, attributed to its column, and the
+        // recovered output is bitwise the clean product.
+        let inj = |_bi: usize, o: &mut GemmOutput| {
+            let v = o.acc.get(3, 5);
+            o.acc.set(3, 5, v + 4.0);
+            o.c.set(3, 5, Precision::Bf16.quantize(v + 4.0));
+        };
+        let out = g.multiply_replicated(&a, &w, Some(&inj)).unwrap();
+        assert_eq!(out.report.verdict, Verdict::Recomputed);
+        assert_eq!(out.report.detections.len(), 1);
+        assert_eq!(out.report.detections[0].row, 3);
+        assert_eq!(out.report.detections[0].col, Some(5));
+        assert_eq!(out.c.data(), clean.c.data(), "recovery must be exact");
+        // Checksum-column upset (col n = 16 is C·e): still detected —
+        // replication compares every encoded column — recall 1.0 on
+        // checksum sites too.
+        let inj_cs = |_bi: usize, o: &mut GemmOutput| {
+            let v = o.acc.get(2, 16);
+            o.acc.set(2, 16, v + 100.0);
+        };
+        let out = g.multiply_replicated(&a, &w, Some(&inj_cs)).unwrap();
+        assert_ne!(out.report.verdict, Verdict::Clean);
+        assert_eq!(out.report.detections[0].row, 2);
+        assert_eq!(out.report.detections[0].col, None, "checksum site has no data column");
+        assert_eq!(out.c.data(), clean.c.data());
+    }
+
+    #[test]
+    fn replication_detect_only_flags_without_repair() {
+        let (a, b) = operands(9, 4, 32, 8);
+        let model = AccumModel::cpu(Precision::F64);
+        let g = ft(model, VerifyPolicy::detect_only(true));
+        let w = g.prepare(&b);
+        let inj = |_bi: usize, o: &mut GemmOutput| {
+            let v = o.acc.get(1, 2);
+            o.acc.set(1, 2, v + 1.0);
+            o.c.set(1, 2, v + 1.0);
+        };
+        let out = g.multiply_replicated(&a, &w, Some(&inj)).unwrap();
+        assert_eq!(out.report.verdict, Verdict::Flagged);
+        assert_eq!(out.report.rows_recomputed, 0);
     }
 
     #[test]

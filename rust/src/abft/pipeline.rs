@@ -1,8 +1,7 @@
 //! The shared FT-GEMM verification pipeline.
 //!
-//! [`crate::abft::FtGemm`] and [`crate::abft::BlockwiseFtGemm`] used to be
-//! two divergent code paths; they are now two parameterizations of the
-//! K-tiled pipeline in this module:
+//! [`crate::abft::FtGemm`]'s monolithic and block-wise modes are two
+//! parameterizations of the K-tiled pipeline in this module:
 //!
 //! * **monolithic** — `block_k = K`: one tile, one encode/verify pass
 //!   (the classic Huang–Abraham shape);
@@ -675,6 +674,159 @@ pub(crate) fn run_prepared<F: FnMut(usize, &mut GemmOutput)>(
             max_abs_d1,
             min_threshold,
             rows_fused: if fused_active { m * blocks } else { 0 },
+        },
+        detection_blocks,
+        blocks,
+    })
+}
+
+/// Dual-compute replication against a [`PreparedWeights`] handle: per
+/// prepared K-block, execute the cached encoded multiply **twice** on the
+/// identical schedule and compare the two legs bit-for-bit at the
+/// policy's verification point (pre-quantization accumulator online,
+/// stored C offline). Any divergent element is a detection; divergent
+/// rows are recovered by recomputation (policy permitting), then verified
+/// partials aggregate exactly as [`run_prepared`] aggregates them.
+///
+/// Properties the planner and the campaign rely on:
+///
+/// * **Clean path is bitwise the ABFT path.** The first leg runs the
+///   same `matmul_mixed` call, injection hook and aggregation loop as
+///   [`run_prepared`]'s staged path; the second leg and the comparison
+///   read but never write. A clean replicated multiply therefore returns
+///   the exact bits of the staged ABFT multiply on the same handle —
+///   replication is a pure verifier swap (invariant #9).
+/// * **No thresholds.** The detector is exact inequality of two
+///   executions of a deterministic schedule, so the false-positive rate
+///   is structurally zero and detection covers *every* encoded column —
+///   including the checksum columns ABFT can only certify indirectly
+///   (`col` is `None` for a divergence in a checksum column).
+/// * **Fused policies run staged.** Replication has no epilogue checks
+///   to fuse; the comparison is the verification.
+///
+/// `inject` corrupts only the first leg — the model of a transient upset
+/// in one of two independent executions.
+pub(crate) fn run_replicated<F: FnMut(usize, &mut GemmOutput)>(
+    engine: &GemmEngine,
+    policy: &VerifyPolicy,
+    a: &Matrix,
+    w: &PreparedWeights,
+    mut inject: Option<F>,
+) -> Result<PipelineOutput> {
+    w.check_compatible(engine, policy)?;
+    crate::ensure!(
+        policy.encoding == EncodingMode::RowOnly,
+        "replication verifies by bitwise comparison; prepare the handle RowOnly \
+         (two-dimensional encodings add repair state replication never consults)"
+    );
+    crate::ensure!(
+        a.cols() == w.k(),
+        "FT-GEMM shape mismatch: A is {}x{}, prepared weights cover K = {}",
+        a.rows(),
+        a.cols(),
+        w.k()
+    );
+    let (m, n) = (a.rows(), w.n());
+    let model = engine.model();
+    let blocks = w.num_blocks();
+
+    let mut acc = Matrix::zeros(m, n);
+    let mut detections: Vec<Detection> = Vec::new();
+    let mut detection_blocks = Vec::new();
+    let mut rows_recomputed = 0usize;
+    let mut max_abs_d1 = 0.0f64;
+
+    for (bi, blk) in w.blocks().iter().enumerate() {
+        let a_own;
+        let a_blk: &Matrix = if blk.k0 == 0 && blk.k1 == w.k() {
+            a
+        } else {
+            a_own = Matrix::from_fn(m, blk.k1 - blk.k0, |i, j| a.get(i, blk.k0 + j));
+            &a_own
+        };
+
+        // Leg 1: the protected execution (the injection hook lands here).
+        let mut leg = engine.matmul_mixed(a_blk, &blk.enc.b_encoded, blk.enc.wide_cols());
+        if let Some(f) = inject.as_mut() {
+            f(bi, &mut leg);
+        }
+        // Leg 2: the shadow execution — same operands, same schedule.
+        let shadow = engine.matmul_mixed(a_blk, &blk.enc.b_encoded, blk.enc.wide_cols());
+
+        // Compare at the policy's verification point, over every encoded
+        // column. Bit comparison via to_bits: plain `!=` would miss
+        // nothing here (identical schedules cannot produce +0.0 vs -0.0)
+        // but would treat two identical NaN payloads as divergent.
+        let (src, ref_src) = if policy.online {
+            (&leg.acc, &shadow.acc)
+        } else {
+            (&leg.c, &shadow.c)
+        };
+        let wide = src.cols();
+        let mut divergent_rows: Vec<usize> = Vec::new();
+        for i in 0..m {
+            let mut first: Option<(usize, f64)> = None;
+            for j in 0..wide {
+                let (x, y) = (src.get(i, j), ref_src.get(i, j));
+                if x.to_bits() != y.to_bits() {
+                    let d = x - y;
+                    max_abs_d1 =
+                        max_abs_d1.max(if d.is_finite() { d.abs() } else { f64::INFINITY });
+                    if first.is_none() {
+                        first = Some((j, d));
+                    }
+                }
+            }
+            if let Some((j, d)) = first {
+                divergent_rows.push(i);
+                detections.push(Detection {
+                    row: i,
+                    col: if j < n { Some(j) } else { None },
+                    d1: d,
+                    d2: 0.0,
+                    threshold: 0.0,
+                    severity: f64::INFINITY,
+                    corrected: false,
+                    via_grid: false,
+                    waived: false,
+                });
+                detection_blocks.push(bi);
+            }
+        }
+
+        let (mut part, _cr1, _cr2) = blk.enc.split_product(src);
+        if policy.recompute {
+            for &i in &divergent_rows {
+                recompute_row(engine, policy, a_blk, &blk.stats.b, &mut part, i);
+                rows_recomputed += 1;
+            }
+        }
+
+        // Aggregate exactly as run_prepared does (bitwise-identical loop).
+        for i in 0..m {
+            let dst = acc.row_mut(i);
+            for (dv, &sv) in dst.iter_mut().zip(part.row(i)) {
+                *dv += sv;
+            }
+            model.work.quantize_slice(dst);
+        }
+    }
+
+    let verdict = verdict_of(&detections, rows_recomputed);
+    let c = finalize(acc, engine);
+    Ok(PipelineOutput {
+        c,
+        report: VerifyReport {
+            verdict,
+            detections,
+            rows_checked: m * blocks,
+            rows_recomputed,
+            rows_waived: 0,
+            rows_corrected_grid: 0,
+            inconsistent_localizations: 0,
+            max_abs_d1,
+            min_threshold: f64::INFINITY,
+            rows_fused: 0,
         },
         detection_blocks,
         blocks,

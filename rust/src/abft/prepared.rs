@@ -18,9 +18,9 @@
 //!
 //! The handle is block-granular: prepared at `block_k = K` it drives the
 //! monolithic [`crate::abft::FtGemm`] path, prepared at `block_k = KC` it
-//! drives [`crate::abft::BlockwiseFtGemm`] with per-K-block encodings and
-//! statistics (paper §5.2), each block verified at its own (tighter)
-//! reduction depth.
+//! drives [`crate::abft::VerifyGranularity::BlockK`] verification with
+//! per-K-block encodings and statistics (paper §5.2), each block verified
+//! at its own (tighter) reduction depth.
 //!
 //! ```
 //! use vabft::prelude::*;
@@ -104,6 +104,7 @@ pub struct PreparedWeights {
     online: bool,
     encoding: EncodingMode,
     ctx: ThresholdContext,
+    protection: Option<crate::planner::PlanEntry>,
 }
 
 impl PreparedWeights {
@@ -171,7 +172,23 @@ impl PreparedWeights {
             online: policy.online,
             encoding: policy.encoding,
             ctx: pipeline::threshold_ctx(engine, policy),
+            protection: None,
         }
+    }
+
+    /// Attach a protection-plan entry: the planner's scheme decision rides
+    /// the weight handle, so workers dispatch per request without ever
+    /// re-consulting the planner. Scheduling metadata only — the encodings
+    /// and statistics are untouched.
+    pub fn with_protection(mut self, entry: crate::planner::PlanEntry) -> PreparedWeights {
+        self.protection = Some(entry);
+        self
+    }
+
+    /// The protection-plan entry riding this handle, if one was attached
+    /// at registration ([`PreparedWeights::with_protection`]).
+    pub fn protection(&self) -> Option<&crate::planner::PlanEntry> {
+        self.protection.as_ref()
     }
 
     /// K (rows of the prepared weight matrix).
@@ -263,10 +280,9 @@ impl PreparedWeights {
 }
 
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
-    use crate::abft::{BlockwiseFtGemm, FtGemm, Verdict};
+    use crate::abft::{FtGemm, Verdict, VerifyGranularity};
     use crate::fp::Precision;
     use crate::gemm::ReduceStrategy;
     use crate::rng::{Distribution, Xoshiro256pp};
@@ -310,15 +326,37 @@ mod tests {
     fn warm_blockwise_is_bitwise_identical() {
         let (a, b) = operands(2, 6, 100, 16); // ragged: 100 = 3×32 + 4
         let model = AccumModel::wide(Precision::Bf16);
-        let bw = BlockwiseFtGemm::new(GemmEngine::new(model), 32, VerifyPolicy::default());
-        let cold = bw.multiply(&a, &b).unwrap();
-        let w = bw.prepare(&b);
+        let g = ft(model, VerifyPolicy::default().with_granularity(VerifyGranularity::BlockK(32)));
+        let cold = g.multiply(&a, &b).unwrap();
+        let w = g.prepare(&b);
         assert_eq!(w.num_blocks(), 4);
         assert_eq!(w.block_k(), 32);
-        let warm = bw.multiply_prepared(&a, &w).unwrap();
+        let warm = g.multiply_prepared(&a, &w, None).unwrap();
         assert_eq!(cold.c.data(), warm.c.data());
         assert_eq!(cold.report.verdict, warm.report.verdict);
         assert_eq!(cold.blocks, warm.blocks);
+    }
+
+    #[test]
+    fn protection_entry_rides_the_handle() {
+        let (_, b) = operands(8, 1, 32, 16);
+        let engine = GemmEngine::new(AccumModel::wide(Precision::Bf16));
+        let w = PreparedWeights::prepare(&b, &engine, &VerifyPolicy::default());
+        assert!(w.protection().is_none());
+        let entry = crate::planner::PlanEntry {
+            weight: 3,
+            name: "attn.qkv".to_string(),
+            m: 4,
+            k: 32,
+            n: 16,
+            intensity: crate::planner::arithmetic_intensity(4, 32, 16),
+            scheme: crate::planner::ProtectionScheme::Fused,
+            predicted_ns: 123.0,
+        };
+        let w = w.with_protection(entry);
+        let got = w.protection().expect("entry attached");
+        assert_eq!(got.weight, 3);
+        assert_eq!(got.scheme, crate::planner::ProtectionScheme::Fused);
     }
 
     #[test]

@@ -28,17 +28,21 @@ pub const BENCH_SCHEMA: &str = "vabft-bench/v1";
 /// Schema tag of the campaign detection-quality documents
 /// (`BENCH_campaign.json`). v2 added the multi-fault correction axis
 /// (`multi_cell` entries with `pattern`/`flips`/`encoding` columns and
-/// the `grid_exceeds_baseline` coverage gate in the metadata); v1
-/// documents no longer validate — consumers must regenerate, not mix
-/// single-fault-only trajectories with grid-coverage ones.
-pub const CAMPAIGN_SCHEMA: &str = "vabft-campaign/v2";
+/// the `grid_exceeds_baseline` coverage gate in the metadata); v3 adds
+/// the protection-plan axis (`plan_cell` entries validating every
+/// planner-selectable scheme plus the `plan_gates_hold` /
+/// `replication_bitwise_equal` metadata gates). Older documents no
+/// longer validate — consumers must regenerate, not mix column sets in
+/// one trajectory file.
+pub const CAMPAIGN_SCHEMA: &str = "vabft-campaign/v3";
 
 /// Schema tag of the serving-replay throughput documents
 /// (`BENCH_serving.json`). v2 added the open-loop columns (`arrival`,
-/// `p50_ms`/`p99_ms`/`p999_ms` tail latencies, `shed_rate`); v1
-/// documents no longer validate — consumers must regenerate, not mix
-/// column sets in one trajectory file.
-pub const SERVING_SCHEMA: &str = "vabft-serving/v2";
+/// `p50_ms`/`p99_ms`/`p999_ms` tail latencies, `shed_rate`); v3 adds
+/// the `plan` column (`"uniform"` / `"auto"`) for the planned-vs-uniform
+/// A/B pair. Older documents no longer validate — consumers must
+/// regenerate, not mix column sets in one trajectory file.
+pub const SERVING_SCHEMA: &str = "vabft-serving/v3";
 
 fn esc(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
@@ -441,42 +445,51 @@ mod tests {
     }
 
     #[test]
-    fn serving_schema_v2_rejects_v1_documents() {
-        // The v1 → v2 migration: v2 rows carry tail-latency and
-        // shed-rate columns v1 rows lack, so a committed v1 trajectory
-        // must be rejected outright (regenerated, never spliced into).
-        assert_eq!(SERVING_SCHEMA, "vabft-serving/v2");
-        let v1 = "{\n  \"schema\": \"vabft-serving/v1\",\n  \"bench\": \"serving_replay\",\n  \
-                  \"entries\": []\n}\n";
-        assert!(validate_schema(v1, SERVING_SCHEMA).is_err());
-        // A same-tag v2 document still validates, and a v2 doc refuses
-        // to splice onto a v1 file (forcing the fresh-overwrite path in
-        // `JsonDoc::append`).
-        let v2 = JsonDoc::new(SERVING_SCHEMA);
-        assert!(validate_schema(&v2.to_json(), SERVING_SCHEMA).is_ok());
-        let mut patch = JsonDoc::new(SERVING_SCHEMA);
-        patch.entry(vec![("rps".to_string(), JsonValue::Num(1.0))]);
-        assert!(patch.splice_into(v1).is_err());
+    fn serving_schema_v3_rejects_older_documents() {
+        // The v2 → v3 migration: v3 rows carry the `plan` column
+        // (planned-vs-uniform A/B) that v1/v2 rows lack, so committed
+        // older trajectories must be rejected outright (regenerated,
+        // never spliced into).
+        assert_eq!(SERVING_SCHEMA, "vabft-serving/v3");
+        for old in ["vabft-serving/v1", "vabft-serving/v2"] {
+            let doc = format!(
+                "{{\n  \"schema\": \"{old}\",\n  \"bench\": \"serving_replay\",\n  \
+                 \"entries\": []\n}}\n"
+            );
+            assert!(validate_schema(&doc, SERVING_SCHEMA).is_err());
+            // A v3 doc refuses to splice onto an older file (forcing the
+            // fresh-overwrite path in `JsonDoc::append`).
+            let mut patch = JsonDoc::new(SERVING_SCHEMA);
+            patch.entry(vec![("rps".to_string(), JsonValue::Num(1.0))]);
+            assert!(patch.splice_into(&doc).is_err());
+        }
+        // A same-tag v3 document still validates.
+        let v3 = JsonDoc::new(SERVING_SCHEMA);
+        assert!(validate_schema(&v3.to_json(), SERVING_SCHEMA).is_ok());
     }
 
     #[test]
-    fn campaign_schema_v2_rejects_v1_documents() {
-        // The v1 → v2 migration: v2 documents carry the multi-fault
-        // correction axis (`multi_cell` entries, `grid_exceeds_baseline`
-        // metadata) that v1 documents lack, so a committed v1 trajectory
-        // must be rejected outright (regenerated, never spliced into).
-        assert_eq!(CAMPAIGN_SCHEMA, "vabft-campaign/v2");
-        let v1 = "{\n  \"schema\": \"vabft-campaign/v1\",\n  \"bench\": \"campaign\",\n  \
-                  \"entries\": []\n}\n";
-        assert!(validate_schema(v1, CAMPAIGN_SCHEMA).is_err());
-        // A same-tag v2 document still validates, and a v2 doc refuses
-        // to splice onto a v1 file (forcing the fresh-overwrite path in
-        // `JsonDoc::append`).
-        let v2 = JsonDoc::new(CAMPAIGN_SCHEMA);
-        assert!(validate_schema(&v2.to_json(), CAMPAIGN_SCHEMA).is_ok());
-        let mut patch = JsonDoc::new(CAMPAIGN_SCHEMA);
-        patch.entry(vec![("cell".to_string(), JsonValue::Int(0))]);
-        assert!(patch.splice_into(v1).is_err());
+    fn campaign_schema_v3_rejects_older_documents() {
+        // The v2 → v3 migration: v3 documents carry the protection-plan
+        // axis (`plan_cell` entries, `plan_gates_hold` metadata) that
+        // v1/v2 documents lack, so committed older trajectories must be
+        // rejected outright (regenerated, never spliced into).
+        assert_eq!(CAMPAIGN_SCHEMA, "vabft-campaign/v3");
+        for old in ["vabft-campaign/v1", "vabft-campaign/v2"] {
+            let doc = format!(
+                "{{\n  \"schema\": \"{old}\",\n  \"bench\": \"campaign\",\n  \
+                 \"entries\": []\n}}\n"
+            );
+            assert!(validate_schema(&doc, CAMPAIGN_SCHEMA).is_err());
+            // A v3 doc refuses to splice onto an older file (forcing the
+            // fresh-overwrite path in `JsonDoc::append`).
+            let mut patch = JsonDoc::new(CAMPAIGN_SCHEMA);
+            patch.entry(vec![("cell".to_string(), JsonValue::Int(0))]);
+            assert!(patch.splice_into(&doc).is_err());
+        }
+        // A same-tag v3 document still validates.
+        let v3 = JsonDoc::new(CAMPAIGN_SCHEMA);
+        assert!(validate_schema(&v3.to_json(), CAMPAIGN_SCHEMA).is_ok());
     }
 
     #[test]

@@ -25,6 +25,10 @@ const COORD_TAG: u64 = 0xC00D_1247;
 /// both the single-fault coordinate and the operand streams).
 const MULTI_TAG: u64 = 0x517E_BD2C;
 
+/// Stream tag of the protection-plan axis' coordinate streams (disjoint
+/// from the single-fault, multi-fault and operand streams).
+const PLAN_TAG: u64 = 0x9AF7_71E3;
+
 /// Which encoding bit a cell flips, named relative to the target
 /// precision's layout so one class means the same physical event across
 /// grids (paper Table 8's rows, collapsed to the four regimes).
@@ -483,6 +487,108 @@ impl MultiCellSpec {
     }
 }
 
+/// One planned protection-plan cell: a point of the (precision ×
+/// protection scheme) lattice validating that *every* scheme the
+/// per-layer planner may select detects injected faults with recall 1.0
+/// and zero false positives on clean sweeps — regardless of what the
+/// cost model would have chosen. The axis is what licenses the planner
+/// to pick any vocabulary member on measured cost alone.
+#[derive(Debug, Clone)]
+pub struct PlanCellSpec {
+    /// Position in planning order (also the fault-coordinate RNG stream).
+    pub index: usize,
+    /// Storage precision under test.
+    pub precision: Precision,
+    /// Reduction strategy (rounding schedule).
+    pub strategy: ReduceStrategy,
+    /// Operand distribution.
+    pub dist: Distribution,
+    /// The protection scheme under test.
+    pub scheme: crate::planner::ProtectionScheme,
+    /// GEMM shape (M, K, N).
+    pub shape: (usize, usize, usize),
+    /// Injection trials (one clean trial is always added).
+    pub trials: usize,
+}
+
+impl PlanCellSpec {
+    /// The accumulation model of this cell (see [`model_for`]).
+    pub fn model(&self) -> AccumModel {
+        model_for(self.precision, self.strategy)
+    }
+
+    /// The bit position every flip addresses: the exponent MSB of the
+    /// verified (work) grid. Normal accumulator magnitudes keep that bit
+    /// clear, so the flip always explodes the struck value by many
+    /// orders of magnitude — detection is guaranteed for every scheme
+    /// (threshold-based or bitwise-compared), no margin gate needed.
+    pub fn bit(&self) -> u32 {
+        BitClass::ExpMsb.bit(self.model().work)
+    }
+
+    /// Stream index of the cell's operand set (see [`operand_stream_for`]).
+    pub fn operand_stream(&self) -> u64 {
+        operand_stream_for(self.model().input, &self.dist, self.shape)
+    }
+
+    /// The cell's planned faults, deterministically derived from the
+    /// master seed: trial t's coordinates come from substream
+    /// `(seed ^ PLAN_TAG, cell index)`, drawn in a fixed order. All
+    /// output-site flips — the accumulator upset every scheme must catch.
+    pub fn faults(&self, seed: u64) -> Vec<FaultSpec> {
+        let (m, _k, n) = self.shape;
+        let mut rng = Xoshiro256pp::from_stream(seed ^ PLAN_TAG, self.index as u64);
+        let bit = self.bit();
+        (0..self.trials)
+            .map(|_| {
+                let row = rng.uniform_u64(m as u64) as usize;
+                let col = rng.uniform_u64(n as u64) as usize;
+                FaultSpec::output(row, col, bit)
+            })
+            .collect()
+    }
+
+    /// Compact label for progress lines and failure messages.
+    pub fn label(&self) -> String {
+        let (m, k, n) = self.shape;
+        format!("{}x{}x{} {} {}", m, k, n, self.precision.name(), self.scheme.label())
+    }
+}
+
+/// Expand the protection-plan axis into cells, in the fixed planning
+/// order (precision ⊃ scheme vocabulary). Like the multi-fault axis it
+/// stays compact — shape, strategy and distribution fix to the config's
+/// first entries; the dimension under test is the planner's full scheme
+/// vocabulary, including the non-schedule-neutral `BlockK` member the
+/// default planner only emits when explicitly enabled. Returns an empty
+/// plan when the borrowed base axes are empty.
+pub fn plan_protection(cfg: &GridConfig) -> Vec<PlanCellSpec> {
+    let mut cells = Vec::new();
+    if cfg.shapes.is_empty() || cfg.strategies.is_empty() || cfg.dists.is_empty() {
+        return cells;
+    }
+    let shape = cfg.shapes[0];
+    let strategy = cfg.strategies[0];
+    let dist = cfg.dists[0].clone();
+    // Split the shape's reduction into two K-blocks so the BlockK cell
+    // exercises real per-block verification.
+    let block_k = (shape.1 / 2).max(1);
+    for &precision in &cfg.precisions {
+        for scheme in crate::planner::ProtectionScheme::vocabulary(block_k) {
+            cells.push(PlanCellSpec {
+                index: cells.len(),
+                precision,
+                strategy,
+                dist: dist.clone(),
+                scheme,
+                shape,
+                trials: cfg.trials_per_cell,
+            });
+        }
+    }
+    cells
+}
+
 /// `count` pairwise-distinct draws from `0..bound` (rejection sampling —
 /// deterministic given the rng state; asserts `count ≤ bound`).
 fn distinct(rng: &mut Xoshiro256pp, bound: usize, count: usize) -> Vec<usize> {
@@ -693,6 +799,47 @@ mod tests {
         assert!(smoke.iter().any(|c| c.pattern == BurstPattern::RowBurst));
         assert!(smoke.iter().any(|c| c.encoding == EncodingMode::RowOnly));
         assert!(smoke.iter().any(|c| c.encoding == EncodingMode::Grid));
+    }
+
+    #[test]
+    fn plan_axis_covers_the_full_scheme_vocabulary() {
+        use crate::planner::ProtectionScheme;
+        let cfg = GridConfig::quick(1);
+        let cells = plan_protection(&cfg);
+        // 4 precisions × 5 schemes = 20 cells, indexed in planning order.
+        assert_eq!(cells.len(), 4 * ProtectionScheme::vocabulary(1).len());
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+        for &p in &cfg.precisions {
+            for scheme in ProtectionScheme::vocabulary((cfg.shapes[0].1 / 2).max(1)) {
+                assert!(
+                    cells.iter().any(|c| c.precision == p && c.scheme == scheme),
+                    "missing plan cell {p} {}",
+                    scheme.label()
+                );
+            }
+        }
+        // Faults are reproducible, in range, and strike the output site
+        // at the work grid's exponent MSB.
+        for c in &cells {
+            let f1 = c.faults(42);
+            assert_eq!(f1, c.faults(42), "plan cell {} not reproducible", c.index);
+            assert_eq!(f1.len(), c.trials);
+            let (m, _, n) = c.shape;
+            for f in &f1 {
+                assert_eq!(f.bit, BitClass::ExpMsb.bit(c.model().work));
+                match f.site {
+                    FaultSite::Output { row, col } => assert!(row < m && col < n),
+                    other => panic!("plan axis produced {other:?}"),
+                }
+            }
+        }
+        // Seed reaches the coordinates.
+        let all = |seed: u64| -> Vec<FaultSpec> {
+            cells.iter().flat_map(|c| c.faults(seed)).collect()
+        };
+        assert_ne!(all(42), all(43), "plan-axis coordinates ignore the seed");
     }
 
     #[test]

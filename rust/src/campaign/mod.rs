@@ -35,8 +35,10 @@ pub mod report;
 pub mod runner;
 
 pub use grid::{
-    model_for, plan, plan_multi_fault, BitClass, BurstPattern, CellSpec, GridConfig,
-    MultiCellSpec, VerifyPoint,
+    model_for, plan, plan_multi_fault, plan_protection, BitClass, BurstPattern, CellSpec,
+    GridConfig, MultiCellSpec, PlanCellSpec, VerifyPoint,
 };
 pub use report::{render_tables, to_doc};
-pub use runner::{run, run_sharded, CampaignOutcome, CellResult, MultiCellResult};
+pub use runner::{
+    run, run_sharded, CampaignOutcome, CellResult, MultiCellResult, PlanCellResult,
+};

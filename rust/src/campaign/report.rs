@@ -23,7 +23,7 @@ use crate::experiments::tightness_row_from_campaign;
 use crate::report::{pct, ratio, sci, Table};
 
 use super::grid::VerifyPoint;
-use super::runner::{CampaignOutcome, CellResult, MultiCellResult};
+use super::runner::{CampaignOutcome, CellResult, MultiCellResult, PlanCellResult};
 
 fn fmt_shape(shape: (usize, usize, usize)) -> String {
     format!("{}x{}x{}", shape.0, shape.1, shape.2)
@@ -261,6 +261,41 @@ pub fn render_tables(outcome: &CampaignOutcome) -> Vec<Table> {
         tables.push(multi);
     }
 
+    // 6. Protection-plan scheme validation: detection and bitwise
+    // recovery per planner-selectable scheme, summed over precisions.
+    // Every scheme must show recall 1.0 and zero FPs — the evidence that
+    // lets the arithmetic-intensity planner choose on cost alone.
+    if !outcome.plan_cells.is_empty() {
+        let mut plan = Table::new(
+            "Protection-plan scheme validation (recall / FP / bitwise recovery)",
+            &["scheme", "cells", "trials", "detected", "FP", "clean rows", "bitwise repaired"],
+        );
+        let mut schemes: Vec<String> = Vec::new();
+        for c in &outcome.plan_cells {
+            let label = c.spec.scheme.label();
+            if !schemes.contains(&label) {
+                schemes.push(label);
+            }
+        }
+        for label in schemes {
+            let sel: Vec<&PlanCellResult> = outcome
+                .plan_cells
+                .iter()
+                .filter(|c| c.spec.scheme.label() == label)
+                .collect();
+            plan.row(vec![
+                label,
+                sel.len().to_string(),
+                sel.iter().map(|c| c.trials).sum::<usize>().to_string(),
+                sel.iter().map(|c| c.detected).sum::<usize>().to_string(),
+                sel.iter().map(|c| c.false_positives).sum::<usize>().to_string(),
+                sel.iter().map(|c| c.clean_rows).sum::<usize>().to_string(),
+                sel.iter().map(|c| c.repaired_bitwise).sum::<usize>().to_string(),
+            ]);
+        }
+        tables.push(plan);
+    }
+
     tables
 }
 
@@ -313,6 +348,19 @@ pub fn to_doc(outcome: &CampaignOutcome) -> JsonDoc {
         .meta(
             "grid_exceeds_baseline",
             JsonValue::Bool(outcome.grid_exceeds_baseline()),
+        )
+        .meta("plan_cells", JsonValue::Int(outcome.plan_cells.len() as i64))
+        .meta("plan_trials", JsonValue::Int(outcome.total_plan_trials() as i64))
+        .meta("plan_detected", JsonValue::Int(outcome.total_plan_detected() as i64))
+        .meta("plan_clean_rows", JsonValue::Int(outcome.plan_clean_rows as i64))
+        .meta(
+            "plan_false_positives",
+            JsonValue::Int(outcome.plan_false_positives as i64),
+        )
+        .meta("plan_gates_hold", JsonValue::Bool(outcome.plan_gates_hold()))
+        .meta(
+            "replication_bitwise_equal",
+            JsonValue::Bool(outcome.replication_bitwise_equal()),
         );
     for c in &outcome.cells {
         let s = &c.spec;
@@ -374,6 +422,24 @@ pub fn to_doc(outcome: &CampaignOutcome) -> JsonDoc {
             ("rows_recomputed".to_string(), JsonValue::Int(c.rows_recomputed as i64)),
             ("clean_rows".to_string(), JsonValue::Int(c.clean_rows as i64)),
             ("false_positives".to_string(), JsonValue::Int(c.false_positives as i64)),
+        ]);
+    }
+    // Protection-plan axis entries, distinguished by the `plan_cell` key.
+    for c in &outcome.plan_cells {
+        let s = &c.spec;
+        doc.entry(vec![
+            ("plan_cell".to_string(), JsonValue::Int(s.index as i64)),
+            ("shape".to_string(), JsonValue::Str(fmt_shape(s.shape))),
+            ("precision".to_string(), JsonValue::Str(s.precision.name().to_string())),
+            ("strategy".to_string(), JsonValue::Str(s.strategy.name().to_string())),
+            ("dist".to_string(), JsonValue::Str(s.dist.label())),
+            ("scheme".to_string(), JsonValue::Str(s.scheme.label())),
+            ("bit".to_string(), JsonValue::Int(c.bit as i64)),
+            ("trials".to_string(), JsonValue::Int(c.trials as i64)),
+            ("detected".to_string(), JsonValue::Int(c.detected as i64)),
+            ("clean_rows".to_string(), JsonValue::Int(c.clean_rows as i64)),
+            ("false_positives".to_string(), JsonValue::Int(c.false_positives as i64)),
+            ("repaired_bitwise".to_string(), JsonValue::Int(c.repaired_bitwise as i64)),
         ]);
     }
     doc

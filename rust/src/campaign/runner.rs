@@ -29,7 +29,10 @@ use crate::matrix::Matrix;
 use crate::rng::Xoshiro256pp;
 use crate::threshold::{AabftThreshold, Threshold, VabftThreshold};
 
-use super::grid::{plan, plan_multi_fault, CellSpec, GridConfig, MultiCellSpec, VerifyPoint};
+use super::grid::{
+    plan, plan_multi_fault, plan_protection, CellSpec, GridConfig, MultiCellSpec, PlanCellSpec,
+    VerifyPoint,
+};
 
 /// Stream tag separating operand-sampling RNG streams from coordinate
 /// streams (both key off the master seed).
@@ -146,6 +149,31 @@ pub struct MultiCellResult {
     pub false_positives: usize,
 }
 
+/// Aggregated statistics of one executed protection-plan cell.
+#[derive(Debug, Clone)]
+pub struct PlanCellResult {
+    /// The planned cell.
+    pub spec: PlanCellSpec,
+    /// Resolved flip bit position (exponent MSB of the work grid).
+    pub bit: u32,
+    /// Injection trials executed.
+    pub trials: usize,
+    /// Trials whose fault was detected (verdict ≠ Clean) — must equal
+    /// `trials`: every planner-selectable scheme owes recall 1.0 on the
+    /// guaranteed-visible exponent-MSB upset.
+    pub detected: usize,
+    /// Clean rows verified in the cell's clean sweep (run under the
+    /// cell's own scheme policy).
+    pub clean_rows: usize,
+    /// Clean rows that flagged — must be zero for every scheme.
+    pub false_positives: usize,
+    /// Injected trials whose recovered output was bitwise-equal to the
+    /// cell's fault-free reference. Gated at 100% for the replication
+    /// scheme (recovery is recomputation from clean inputs); recorded
+    /// informationally for syndrome-corrected schemes.
+    pub repaired_bitwise: usize,
+}
+
 /// Outcome of a full campaign run.
 #[derive(Debug, Clone)]
 pub struct CampaignOutcome {
@@ -162,6 +190,14 @@ pub struct CampaignOutcome {
     /// column syndromes are recovery-only, so 2D encodings cannot add
     /// false positives).
     pub multi_false_positives: usize,
+    /// Protection-plan axis results, in planning order (empty when the
+    /// borrowed base axes are empty).
+    pub plan_cells: Vec<PlanCellResult>,
+    /// Clean rows verified across the plan axis' per-scheme sweeps.
+    pub plan_clean_rows: usize,
+    /// Flagged rows across the plan axis' clean sweeps (must be zero —
+    /// no scheme the planner can select may add false positives).
+    pub plan_false_positives: usize,
     /// Clean rows verified across the *distinct* clean sweeps (one per
     /// operand set per coordinator group — cells sharing operands share
     /// a sweep, which is counted once here).
@@ -257,6 +293,40 @@ impl CampaignOutcome {
     pub fn multi_fault_gates_hold(&self) -> bool {
         self.multi_false_positives == 0
             && self.multi_cells.iter().all(|c| c.detected_above == c.above)
+    }
+
+    /// Total protection-plan injection trials.
+    pub fn total_plan_trials(&self) -> usize {
+        self.plan_cells.iter().map(|c| c.trials).sum()
+    }
+
+    /// Total protection-plan trials detected.
+    pub fn total_plan_detected(&self) -> usize {
+        self.plan_cells.iter().map(|c| c.detected).sum()
+    }
+
+    /// The protection-plan gate: every scheme the per-layer planner may
+    /// select detects every injected trial (recall 1.0, cell by cell —
+    /// the exponent-MSB upset is guaranteed visible) and its clean
+    /// sweeps stay zero-FP. Vacuously true when the axis is empty. This
+    /// is what licenses the planner to choose schemes on measured cost
+    /// alone: protection quality is uniform across the vocabulary.
+    pub fn plan_gates_hold(&self) -> bool {
+        self.plan_false_positives == 0
+            && self.plan_cells.iter().all(|c| c.detected == c.trials)
+    }
+
+    /// The replication-recovery gate: every injected trial of a
+    /// dual-compute (replication) cell recovered an output bitwise-equal
+    /// to the fault-free reference — replication repairs by recomputing
+    /// divergent rows from clean inputs, so anything short of bitwise
+    /// equality is a recovery bug. Vacuously true when the axis plans no
+    /// replication cells.
+    pub fn replication_bitwise_equal(&self) -> bool {
+        self.plan_cells
+            .iter()
+            .filter(|c| c.spec.scheme == crate::planner::ProtectionScheme::Replicate)
+            .all(|c| c.repaired_bitwise == c.trials)
     }
 
     /// The grid-coverage gate: each two-dimensional encoding corrects
@@ -824,16 +894,123 @@ pub fn run_sharded(cfg: &GridConfig, workers: usize, shards: usize) -> CampaignO
         coord.shutdown();
     }
 
+    // ---- Protection-plan axis: every scheme of the planner's
+    // vocabulary validated through the production path — a `PlanEntry`
+    // registered on the weight handle via `register_weights_planned`, so
+    // the worker's scheme dispatch (staged / fused / grid / block-K /
+    // replicated) is exactly what a planned serving run executes. Trials
+    // run serially per cell in planning order; every trial's arithmetic
+    // is schedule-preserved, so the axis is byte-stable at any
+    // `(workers, shards)` like the rest of the campaign.
+    let plan_specs = plan_protection(cfg);
+    let mut plan_results: Vec<Option<PlanCellResult>> =
+        plan_specs.iter().map(|_| None).collect();
+    let mut plan_clean_rows = 0usize;
+    let mut plan_fp = 0usize;
+
+    let mut pgroups: Vec<(AccumModel, Vec<usize>)> = Vec::new();
+    for (i, c) in plan_specs.iter().enumerate() {
+        let key = c.model();
+        match pgroups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, v)) => v.push(i),
+            None => pgroups.push((key, vec![i])),
+        }
+    }
+
+    for (model, idxs) in pgroups {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: workers.max(1),
+            queue_depth: 256,
+            model,
+            shards: shards.max(1),
+            ..Default::default()
+        });
+        for &ci in &idxs {
+            let cell = &plan_specs[ci];
+            let (m, k, n) = cell.shape;
+            let mut rng =
+                Xoshiro256pp::from_stream(cfg.seed ^ OPERAND_TAG, cell.operand_stream());
+            let a = Matrix::sample_in(m, k, &cell.dist, model.input, &mut rng);
+            let b = Matrix::sample_in(k, n, &cell.dist, model.input, &mut rng);
+            let entry = crate::planner::PlanEntry {
+                weight: ci,
+                name: cell.scheme.label(),
+                m,
+                k,
+                n,
+                intensity: crate::planner::arithmetic_intensity(m, k, n),
+                scheme: cell.scheme,
+                predicted_ns: 0.0,
+            };
+            let handle = coord.register_weights_planned(ci as u32, &b, &entry);
+
+            // Per-scheme clean sweep: the fault-free reference for the
+            // bitwise-recovery gate, and the axis' zero-FP evidence.
+            let clean = coord
+                .call_prepared(PreparedGemmRequest {
+                    a: a.clone(),
+                    weights: Arc::clone(&handle),
+                    inject: None,
+                })
+                .result
+                .expect("plan-axis clean multiply failed");
+            plan_clean_rows += clean.report.rows_checked;
+            plan_fp += clean.report.detections.len();
+
+            let faults = cell.faults(cfg.seed);
+            coord.metrics().campaign_trials.add(faults.len() as u64);
+            let mut res = PlanCellResult {
+                spec: cell.clone(),
+                bit: cell.bit(),
+                trials: 0,
+                detected: 0,
+                clean_rows: clean.report.rows_checked,
+                false_positives: clean.report.detections.len(),
+                repaired_bitwise: 0,
+            };
+            for f in &faults {
+                let resp = coord.call_prepared(PreparedGemmRequest {
+                    a: a.clone(),
+                    weights: Arc::clone(&handle),
+                    inject: Some(InjectSpec::single(*f)),
+                });
+                let out = resp.result.expect("plan-axis multiply failed");
+                res.trials += 1;
+                if out.report.verdict != Verdict::Clean {
+                    res.detected += 1;
+                }
+                let bitwise = out
+                    .c
+                    .data()
+                    .iter()
+                    .zip(clean.c.data())
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+                if bitwise {
+                    res.repaired_bitwise += 1;
+                }
+            }
+            plan_results[ci] = Some(res);
+            coord.metrics().campaign_cells.inc();
+        }
+        group_metrics.push(format!("{} plan: {}", model.label(), coord.metrics().summary()));
+        coord.shutdown();
+    }
+
     let cells_out: Vec<CellResult> =
         results.into_iter().map(|r| r.expect("cell never executed")).collect();
     let multi_out: Vec<MultiCellResult> =
         multi_results.into_iter().map(|r| r.expect("multi-fault cell never executed")).collect();
+    let plan_out: Vec<PlanCellResult> =
+        plan_results.into_iter().map(|r| r.expect("plan cell never executed")).collect();
     CampaignOutcome {
         config: cfg.clone(),
         cells: cells_out,
         multi_cells: multi_out,
         multi_clean_rows,
         multi_false_positives: multi_fp,
+        plan_cells: plan_out,
+        plan_clean_rows,
+        plan_false_positives: plan_fp,
         clean_rows: clean_rows_total,
         false_positives: false_positives_total,
         severity_false_positives: severity_fp_total,

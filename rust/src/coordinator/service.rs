@@ -694,6 +694,35 @@ impl Coordinator {
         let _ = self.register_weights(id, b);
     }
 
+    /// Register a weight matrix under a protection-plan entry: the weight
+    /// is prepared under the entry's scheme-derived policy (encoding,
+    /// verification point, granularity) and the entry rides the handle,
+    /// so workers dispatch each request to the planned verifier without
+    /// re-consulting the planner. Inherits the coordinator policy's
+    /// recovery knobs (correct / recompute / severity / …); the scheme
+    /// only chooses *which verifier runs* (invariant #9).
+    pub fn register_weights_planned(
+        &self,
+        id: WeightId,
+        b: &Matrix,
+        entry: &crate::planner::PlanEntry,
+    ) -> WeightHandle {
+        let policy = entry.scheme.policy(self.ft_template.policy());
+        let engine = self.ft_template.engine();
+        let prepared = match entry.scheme {
+            crate::planner::ProtectionScheme::BlockK(bk) => {
+                PreparedWeights::prepare_blockwise(b, engine, &policy, bk.max(1))
+            }
+            _ => PreparedWeights::prepare(b, engine, &policy),
+        };
+        let prepared = Arc::new(prepared.with_protection(entry.clone()));
+        self.shared.insert(id, Arc::clone(&prepared));
+        for c in &self.shard_caches {
+            c.map.lock().unwrap().clear();
+        }
+        prepared
+    }
+
     /// Whether `id` is currently resident in the shared weight cache (it
     /// may have been evicted by LRU pressure or never registered).
     pub fn weight_resident(&self, id: WeightId) -> bool {
@@ -916,10 +945,26 @@ fn process(ctx: &WorkerCtx, job: Job, stolen: bool) {
     let result = match resolved {
         Err(e) => Err(e),
         Ok((a, w, inject)) => {
+            // Planned dispatch: a protection-plan entry riding the handle
+            // swaps the verifier per request (invariant #9). The effective
+            // policy derives from the entry's scheme, inheriting the
+            // coordinator policy's recovery knobs; un-planned handles run
+            // the coordinator policy untouched.
+            let scheme = w.protection().map(|p| p.scheme);
+            let eff = match scheme {
+                Some(s) => s.policy(ctx.policy),
+                None => ctx.policy,
+            };
             let run = match inject {
-                None => ctx.ft.multiply_prepared(&a, &w, None),
+                None => match scheme {
+                    Some(crate::planner::ProtectionScheme::Replicate) => {
+                        ctx.ft.multiply_replicated_with_policy(&a, &w, &eff, None)
+                    }
+                    Some(_) => ctx.ft.multiply_prepared_with_policy(&a, &w, &eff, None),
+                    None => ctx.ft.multiply_prepared(&a, &w, None),
+                },
                 Some(spec) => {
-                    let grid = if ctx.policy.online { ctx.model.work } else { ctx.model.out };
+                    let grid = if eff.online { ctx.model.work } else { ctx.model.out };
                     // Upsets strike the first K-block's partial only, even
                     // when the weights are prepared blockwise; a spec may
                     // carry several simultaneous faults (burst patterns).
@@ -935,7 +980,7 @@ fn process(ctx: &WorkerCtx, job: Job, stolen: bool) {
                             for fault in &spec.faults {
                                 let o = apply_fault(
                                     fault,
-                                    ctx.policy.online,
+                                    eff.online,
                                     ctx.model.input,
                                     grid,
                                     &a,
@@ -948,7 +993,13 @@ fn process(ctx: &WorkerCtx, job: Job, stolen: bool) {
                             }
                         }
                     };
-                    let r = ctx.ft.multiply_prepared(&a, &w, Some(&f));
+                    let r = match scheme {
+                        Some(crate::planner::ProtectionScheme::Replicate) => {
+                            ctx.ft.multiply_replicated_with_policy(&a, &w, &eff, Some(&f))
+                        }
+                        Some(_) => ctx.ft.multiply_prepared_with_policy(&a, &w, &eff, Some(&f)),
+                        None => ctx.ft.multiply_prepared(&a, &w, Some(&f)),
+                    };
                     injected = outcome.get();
                     r
                 }

@@ -235,19 +235,6 @@ impl ParallelismConfig {
         self.simd = simd;
         self
     }
-
-    /// Parse from CLI flags (`--threads N --mc M --kc K --nc N --mr R
-    /// --nr C --split contiguous|interleaved`, `--threads 0` = auto).
-    ///
-    /// Superseded by [`crate::gemm::EngineConfig::from_args`], the one
-    /// shared flag helper — it additionally understands `--simd` and
-    /// `--manifest`, and distinguishes "flag absent" from "flag at its
-    /// default" so tuning manifests can fill the gaps. This shim
-    /// delegates there and resolves immediately (shape-blind).
-    #[deprecated(note = "use EngineConfig::from_args, which also handles --simd/--manifest")]
-    pub fn from_args(args: &crate::cli::Args) -> ParallelismConfig {
-        super::config::EngineConfig::from_args(args).resolve()
-    }
 }
 
 impl Default for ParallelismConfig {
@@ -1177,15 +1164,16 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)] // pins the shim's behavior until it is removed
-    fn from_args_parses_flags() {
+    fn engine_config_flags_resolve_to_parallelism() {
+        // The one shared flag helper ([`crate::gemm::EngineConfig`])
+        // resolves CLI flags into a ParallelismConfig; pin the mapping.
         let args = crate::cli::Args::parse_from(
             "x --threads 4 --mc 32 --kc 128 --nc 64 --mr 4 --nr 16 --split interleaved \
              --simd scalar"
                 .split_whitespace()
                 .map(String::from),
         );
-        let par = ParallelismConfig::from_args(&args);
+        let par = crate::gemm::EngineConfig::from_args(&args).resolve();
         assert_eq!(par.threads, 4);
         assert_eq!(par.tiles, TileConfig::new(32, 128, 64));
         assert_eq!(par.micro, MicroConfig::new(4, 16));
@@ -1194,7 +1182,7 @@ mod tests {
         let auto = crate::cli::Args::parse_from(
             "x --threads 0".split_whitespace().map(String::from),
         );
-        let par = ParallelismConfig::from_args(&auto);
+        let par = crate::gemm::EngineConfig::from_args(&auto).resolve();
         assert!(par.threads >= 1);
         assert_eq!(par.micro, MicroConfig::DEFAULT);
         assert_eq!(par.split, RowSplit::Contiguous);

@@ -100,6 +100,7 @@ pub mod gemm;
 pub mod inject;
 pub mod matrix;
 pub mod metrics;
+pub mod planner;
 pub mod report;
 pub mod rng;
 pub mod runtime;
@@ -117,14 +118,12 @@ pub mod abft {
     //! verification, both parameterizations of one shared verification
     //! pipeline (the private `pipeline` module). [`PreparedWeights`]
     //! provides the weight-stationary serving fast path at either
-    //! granularity. The old per-K-block wrapper type is deprecated.
-    pub mod blockwise;
+    //! granularity.
     pub mod encode;
     pub mod ftgemm;
     pub(crate) mod pipeline;
     pub mod prepared;
     pub mod verify;
-    pub use blockwise::*;
     pub use encode::*;
     pub use ftgemm::*;
     pub use prepared::*;
@@ -133,11 +132,9 @@ pub mod abft {
 
 /// Convenient re-exports for downstream users and the examples.
 pub mod prelude {
-    #[allow(deprecated)]
-    pub use crate::abft::BlockwiseFtGemm;
     pub use crate::abft::{
-        BlockwiseOutput, ChecksumEncoding, EncodingMode, FtGemm, FtGemmOutput, PreparedBlock,
-        PreparedWeights, Verdict, VerifyGranularity, VerifyPolicy, VerifyReport,
+        ChecksumEncoding, EncodingMode, FtGemm, FtGemmOutput, PreparedBlock, PreparedWeights,
+        Verdict, VerifyGranularity, VerifyPolicy, VerifyReport,
     };
     pub use crate::calibrate::{CalibrationProtocol, EmaxModel, EmaxTable, Platform};
     pub use crate::campaign::{BitClass, CellSpec, GridConfig, VerifyPoint};
@@ -152,6 +149,10 @@ pub mod prelude {
         InjectionSite, SiteClass,
     };
     pub use crate::matrix::{Matrix, RowStats};
+    pub use crate::planner::{
+        arithmetic_intensity, CostModel, CostObservation, PlanEntry, PlanMode, Planner,
+        PlannerConfig, ProtectionPlan, ProtectionScheme,
+    };
     pub use crate::rng::{Distribution, Rng, SplitMix64, Xoshiro256pp};
     pub use crate::runtime::{TunedShape, TuningManifest};
     pub use crate::threshold::{

@@ -7,21 +7,26 @@
 //!                  [--json FILE] [--localize-tol T]
 //!                  # deterministic campaign grid: precision x strategy x dist x
 //!                  # site x bit x verify point, plus the multi-fault axis
-//!                  # (simultaneous flips x burst pattern x encoding mode);
+//!                  # (simultaneous flips x burst pattern x encoding mode) and
+//!                  # the protection-plan axis (every planner scheme x
+//!                  # precision, recall / FP / bitwise-recovery gated);
 //!                  # writes BENCH_campaign.json and exits non-zero if a
-//!                  # detection-quality gate fails or grid-mode corrected-
+//!                  # detection-quality gate fails, grid-mode corrected-
 //!                  # without-recompute coverage does not beat the single-
-//!                  # checksum baseline
+//!                  # checksum baseline, or a plan-axis gate breaks
 //! vabft serve-replay
-//!                  [--family llama-7b|gpt2|vit-b32] [--scale S] [--layers L]
+//!                  [--family llama-7b|gpt2|vit-b32|mixed] [--scale S] [--layers L]
 //!                  [--batch M] [--passes P] [--concurrency C] [--seed S]
 //!                  [--shards 1,2,4] [--workers W] [--partition contiguous|interleaved]
-//!                  [--steal] [--fused] [--smoke] [--json FILE] [--precision bf16]
+//!                  [--steal] [--fused] [--plan auto|uniform] [--smoke]
+//!                  [--json FILE] [--precision bf16]
 //!                  # replay deterministic transformer-layer traces through the
 //!                  # sharded coordinator; --fused selects the in-kernel (GEMM
-//!                  # epilogue) verify point for every request; exits non-zero
-//!                  # if any shard count's output fingerprint diverges from the
-//!                  # baseline
+//!                  # epilogue) verify point for every request; --plan auto adds
+//!                  # a planner-driven arm per shard count (cost-model scheme
+//!                  # per layer) that must reproduce the uniform fingerprint
+//!                  # bit-for-bit; exits non-zero if any arm's output
+//!                  # fingerprint diverges from the baseline
 //! vabft serve-replay --open-loop
 //!                  [--families llama-7b,gpt2,vit-b32] [--requests N] [--rate R]
 //!                  [--arrival poisson|bursty|diurnal] [--slo MS] [--fault-every N]
@@ -307,6 +312,35 @@ fn cmd_campaign(args: &Args) {
         outcome.multi_corrected_no_recompute(vabft::abft::EncodingMode::Grid),
         outcome.multi_corrected_no_recompute(vabft::abft::EncodingMode::RowOnly),
     );
+    if !outcome.plan_gates_hold() {
+        eprintln!(
+            "campaign gate FAILED: protection-plan axis broke a detection gate \
+             ({}/{} injected faults detected, {} false positives over {} clean rows; \
+             every planner scheme must hold recall 1.0 with zero FP)",
+            outcome.total_plan_detected(),
+            outcome.total_plan_trials(),
+            outcome.plan_false_positives,
+            outcome.plan_clean_rows,
+        );
+        std::process::exit(1);
+    }
+    if !outcome.replication_bitwise_equal() {
+        eprintln!(
+            "campaign gate FAILED: replication recovery produced an output that is \
+             not bitwise-equal to the fault-free reference (recomputation from clean \
+             inputs admits no tolerance)"
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "plan gate OK: {} scheme cells, {}/{} injected faults detected through \
+         planned dispatch, 0/{} clean rows false-positive, replication recovery \
+         bitwise-equal",
+        outcome.plan_cells.len(),
+        outcome.total_plan_detected(),
+        outcome.total_plan_trials(),
+        outcome.plan_clean_rows,
+    );
 }
 
 /// Legacy single-configuration detection-rate ladder (paper Table 8).
@@ -365,11 +399,17 @@ fn cmd_campaign_table8(args: &Args) {
 /// coordinator at each requested shard count, assert the output
 /// fingerprint is shard-invariant (the differential gate — exits
 /// non-zero on divergence), print the throughput ladder, and optionally
-/// write the `vabft-serving/v1` document. `--fused` selects the
+/// write the `vabft-serving/v3` document. `--fused` selects the
 /// fused-epilogue verify point (detection inside the packed GEMM kernel,
 /// [`vabft::abft::VerifyPolicy::fused`]) for every request — outputs and
 /// verdicts are bitwise-unchanged, so the fingerprint gate doubles as an
-/// end-to-end check of the fused path.
+/// end-to-end check of the fused path. `--plan auto` adds the planned
+/// arm of the A/B: the arithmetic-intensity planner (cost model seeded
+/// from the tuning manifest, calibrated on the trace's own shapes)
+/// assigns a protection scheme per layer, and every planned run must
+/// reproduce the uniform run's fingerprint bit-for-bit — the default
+/// plan vocabulary is schedule-neutral (invariant #9), so divergence is
+/// a dispatch bug, not noise.
 fn cmd_serve_replay(args: &Args) {
     if args.flag("open-loop") {
         return cmd_serve_replay_open_loop(args);
@@ -377,7 +417,11 @@ fn cmd_serve_replay(args: &Args) {
     use vabft::abft::VerifyPolicy;
     use vabft::coordinator::{CoordinatorConfig, PartitionPolicy};
     use vabft::gemm::{AccumModel, EngineConfig};
-    use vabft::workload::{replay_doc, run_replay, ReplayConfig, ReplayRow};
+    use vabft::planner::{CostModel, Planner, PlannerConfig, ProtectionPlan};
+    use vabft::runtime::TuningManifest;
+    use vabft::workload::{
+        build_trace, replay_doc, run_replay, run_replay_planned, ReplayConfig, ReplayRow,
+    };
 
     let smoke = args.flag("smoke");
     let family =
@@ -405,6 +449,11 @@ fn cmd_serve_replay(args: &Args) {
         });
     let steal = args.flag("steal");
     let fused = args.flag("fused");
+    let plan_mode = args.opt("plan").unwrap_or("uniform");
+    if plan_mode != "auto" && plan_mode != "uniform" {
+        eprintln!("unknown --plan '{plan_mode}' (auto|uniform)");
+        std::process::exit(2);
+    }
     let shard_counts: Vec<usize> = args
         .opt("shards")
         .unwrap_or(if smoke { "1,2" } else { "1,2,4" })
@@ -419,7 +468,7 @@ fn cmd_serve_replay(args: &Args) {
     println!(
         "serve-replay: family={family} scale={} layers={} batch={} passes={} \
          concurrency={} seed=0x{seed:x} model={} partition={} steal={steal} fused={fused} \
-         workers/shard={workers}",
+         plan={plan_mode} workers/shard={workers}",
         cfg.scale,
         cfg.layers,
         cfg.batch,
@@ -432,24 +481,60 @@ fn cmd_serve_replay(args: &Args) {
     // One engine configuration for every shard count: CLI overrides plus
     // the tuning manifest (loaded once, here, at startup).
     let engine_cfg = EngineConfig::from_args(args);
+
+    // `--plan auto`: build the protection plan once, before the ladder.
+    // The cost model's analytic prior is seeded from the tuning
+    // manifest's measured GFLOP/s, then overridden by a calibration pass
+    // that times every neutral scheme on each distinct trace shape —
+    // scheme choice is measured economics, never a hard-coded rule.
+    let plan: Option<ProtectionPlan> = if plan_mode == "auto" {
+        use vabft::planner::ProtectionScheme;
+        let trace = build_trace(&cfg);
+        let mut cost = CostModel::new();
+        if let Ok(Some(man)) = TuningManifest::load_default() {
+            cost.seed_from_manifest(&man);
+        }
+        let pcfg = PlannerConfig::default();
+        let schemes: Vec<ProtectionScheme> = ProtectionScheme::vocabulary(pcfg.block_k)
+            .into_iter()
+            .filter(|s| s.is_schedule_neutral())
+            .collect();
+        let mut shapes: Vec<(usize, usize, usize)> = Vec::new();
+        for e in &ProtectionPlan::uniform_for(&trace).entries {
+            if !shapes.contains(&(e.m, e.k, e.n)) {
+                shapes.push((e.m, e.k, e.n));
+            }
+        }
+        for &(m, k, n) in &shapes {
+            cost.calibrate_shape(model, m, k, n, &schemes, pcfg.calibration_reps);
+        }
+        let p = Planner::new(pcfg, cost).plan_trace(&trace);
+        println!("protection plan (auto): {}", p.summary());
+        Some(p)
+    } else {
+        None
+    };
+
     let mut rows: Vec<ReplayRow> = Vec::new();
     let mut t = Table::new(
         "Sharded serving replay",
-        &["shards", "requests", "elapsed", "req/s", "GFLOP/s", "stolen", "speedup", "fp=="],
+        &["shards", "plan", "requests", "elapsed", "req/s", "GFLOP/s", "stolen", "speedup", "fp=="],
     );
+    let mk_ccfg = |shards: usize| CoordinatorConfig {
+        workers,
+        queue_depth: (2 * cfg.concurrency).max(16),
+        model,
+        engine: Some(engine_cfg.clone()),
+        shards: shards.max(1),
+        partition,
+        steal,
+        policy: if fused { VerifyPolicy::fused() } else { VerifyPolicy::default() },
+        ..Default::default()
+    };
     for &shards in &shard_counts {
-        let ccfg = CoordinatorConfig {
-            workers,
-            queue_depth: (2 * cfg.concurrency).max(16),
-            model,
-            engine: Some(engine_cfg.clone()),
-            shards: shards.max(1),
-            partition,
-            steal,
-            policy: if fused { VerifyPolicy::fused() } else { VerifyPolicy::default() },
-            ..Default::default()
-        };
-        let report = run_replay(&cfg, ccfg);
+        // The uniform arm always runs: it is the fingerprint baseline
+        // every planned run must match bit-for-bit.
+        let report = run_replay(&cfg, mk_ccfg(shards));
         let row = ReplayRow::ladder(
             report,
             rows.first(),
@@ -458,17 +543,20 @@ fn cmd_serve_replay(args: &Args) {
             workers,
             cfg.concurrency,
         );
-        t.row(vec![
-            shards.to_string(),
-            row.report.requests.to_string(),
-            format!("{:?}", row.report.elapsed),
-            format!("{:.1}", row.report.rps()),
-            format!("{:.2}", row.report.gflops()),
-            row.report.stolen.to_string(),
-            format!("{:.2}x", row.speedup_vs_baseline),
-            if row.fingerprint_equal { "yes".into() } else { "DIVERGED".into() },
-        ]);
-        rows.push(row);
+        push_replay_row(&mut t, &mut rows, shards, row);
+        if let Some(p) = &plan {
+            let report = run_replay_planned(&cfg, mk_ccfg(shards), Some(p));
+            let row = ReplayRow::ladder(
+                report,
+                rows.first(),
+                partition.name(),
+                steal,
+                workers,
+                cfg.concurrency,
+            )
+            .with_plan(p.mode.label());
+            push_replay_row(&mut t, &mut rows, shards, row);
+        }
     }
     t.print();
     if let Some(f) = args.opt("json") {
@@ -484,7 +572,8 @@ fn cmd_serve_replay(args: &Args) {
     if rows.iter().any(|r| !r.fingerprint_equal) {
         eprintln!(
             "serve-replay gate FAILED: output fingerprint diverged across shard counts \
-             (sharding must be pure scheduling)"
+             or plan arms (sharding and neutral plan selection must be pure scheduling \
+             — invariant #9)"
         );
         std::process::exit(1);
     }
@@ -494,10 +583,33 @@ fn cmd_serve_replay(args: &Args) {
         std::process::exit(1);
     }
     println!(
-        "gate OK: fingerprint identical across shards {:?}; all {} responses clean",
+        "gate OK: fingerprint identical across shards {:?} (plan={plan_mode}); \
+         all {} responses clean",
         shard_counts,
         rows.iter().map(|r| r.report.requests).sum::<usize>()
     );
+}
+
+/// Append one replay-ladder row to the printed table and the collected
+/// row set (shared by the uniform and planned arms of `serve-replay`).
+fn push_replay_row(
+    t: &mut Table,
+    rows: &mut Vec<vabft::workload::ReplayRow>,
+    shards: usize,
+    row: vabft::workload::ReplayRow,
+) {
+    t.row(vec![
+        shards.to_string(),
+        row.plan.clone(),
+        row.report.requests.to_string(),
+        format!("{:?}", row.report.elapsed),
+        format!("{:.1}", row.report.rps()),
+        format!("{:.2}", row.report.gflops()),
+        row.report.stolen.to_string(),
+        format!("{:.2}x", row.speedup_vs_baseline),
+        if row.fingerprint_equal { "yes".into() } else { "DIVERGED".into() },
+    ]);
+    rows.push(row);
 }
 
 /// Open-loop variant of `serve-replay` (`--open-loop`): seeded arrival

@@ -84,12 +84,18 @@ impl Histogram {
     }
 
     /// Approximate quantile (upper edge of the bucket containing it).
+    ///
+    /// `target` is clamped to `1..=total` exactly like
+    /// [`TailSnapshot::quantile`]: without the clamp, `q` at (or
+    /// rounding up past) 1.0 could demand more samples than exist and
+    /// fall off the bucket scan into the sentinel edge — a bogus
+    /// ~4.5-year p100 instead of the max occupied bucket.
     pub fn quantile(&self, q: f64) -> Duration {
         let total = self.count();
         if total == 0 {
             return Duration::ZERO;
         }
-        let target = (total as f64 * q).ceil() as u64;
+        let target = ((total as f64 * q).ceil() as u64).clamp(1, total);
         let mut acc = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
             acc += b.load(Ordering::Relaxed);
@@ -516,6 +522,102 @@ mod tests {
                 assert!(est <= bound, "q={q}: estimate {est} above bound {bound}");
             }
         }
+    }
+
+    #[test]
+    fn quantile_edge_cases_are_pinned() {
+        // Empty histograms report zero at every q — an empty shard
+        // merged into a BENCH_serving row must contribute Duration::ZERO,
+        // not a sentinel edge.
+        let empty = TailSnapshot::empty();
+        for q in [0.0, 0.5, 1.0, 1.5] {
+            assert_eq!(empty.quantile(q), Duration::ZERO, "empty tail at q={q}");
+        }
+        let h = Histogram::new();
+        for q in [0.0, 0.5, 1.0, 1.5] {
+            assert_eq!(h.quantile(q), Duration::ZERO, "empty coarse at q={q}");
+        }
+
+        // q = 1.0 (and anything that rounds past the sample count) must
+        // return the max occupied bucket's edge, never overrun the scan.
+        let h = Histogram::new();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(3000));
+        let max_edge = h.quantile(1.0);
+        assert!(max_edge >= Duration::from_micros(3000));
+        assert!(max_edge < Duration::from_micros(1 << 40), "fell off the scan");
+        assert_eq!(h.quantile(1.5), max_edge, "q>1 must clamp to the max sample");
+
+        let t = TailHistogram::new();
+        t.record(Duration::from_micros(250));
+        t.record(Duration::from_micros(9_000));
+        let snap = t.snapshot();
+        let top = snap.quantile(1.0);
+        assert!(top >= Duration::from_micros(9_000));
+        assert!(top <= Duration::from_micros(9_000 + 9_000 / TAIL_SUB as u64 + 1));
+        assert_eq!(snap.quantile(2.0), top, "q>1 must clamp to the max sample");
+        // q = 0.0 still reports the smallest occupied bucket (the
+        // ⌈q·n⌉-th sample clamps to the 1st), not zero.
+        assert!(snap.quantile(0.0) >= Duration::from_micros(250));
+        assert!(snap.quantile(0.0) < Duration::from_micros(9_000));
+    }
+
+    #[test]
+    fn single_bucket_saturation_collapses_all_quantiles() {
+        // Every sample in one bucket: p50 == p99 == p999 == that
+        // bucket's upper edge, whether one sample or millions of
+        // logical samples (bucket counts near u64 range still scan
+        // without overflow because the clamp caps target at total).
+        let t = TailHistogram::new();
+        for _ in 0..1000 {
+            t.record(Duration::from_micros(777));
+        }
+        let snap = t.snapshot();
+        let edge = Duration::from_micros(tail_upper_us(tail_index(777)));
+        assert_eq!(snap.p50(), edge);
+        assert_eq!(snap.p99(), edge);
+        assert_eq!(snap.p999(), edge);
+        assert_eq!(snap.quantile(1.0), edge);
+
+        // The saturating last bucket behaves the same: huge latencies
+        // all collapse onto the final edge.
+        let t = TailHistogram::new();
+        t.record(Duration::from_micros(u64::MAX));
+        t.record(Duration::from_micros(u64::MAX / 2));
+        let snap = t.snapshot();
+        let last = Duration::from_micros(tail_upper_us(TAIL_BUCKETS - 1));
+        assert_eq!(snap.p50(), last);
+        assert_eq!(snap.p999(), last);
+    }
+
+    #[test]
+    fn tail_merge_with_empty_and_mismatched_histories_is_exact() {
+        // Merging an empty shard must not perturb any quantile — the
+        // exact failure mode behind a corrupted BENCH_serving merge row.
+        let t = TailHistogram::new();
+        for us in [10u64, 40, 90, 2_000, 55_000] {
+            t.record(Duration::from_micros(us));
+        }
+        let snap = t.snapshot();
+        let merged = snap.merge(&TailSnapshot::empty());
+        assert_eq!(merged, snap);
+        for q in [0.5, 0.99, 0.999, 1.0] {
+            assert_eq!(merged.quantile(q), snap.quantile(q), "q={q} drifted");
+        }
+        // And the merge of two snapshots equals the histogram that
+        // recorded both sample sets directly.
+        let a = TailHistogram::new();
+        let b = TailHistogram::new();
+        let both = TailHistogram::new();
+        for us in [10u64, 40, 90] {
+            a.record(Duration::from_micros(us));
+            both.record(Duration::from_micros(us));
+        }
+        for us in [2_000u64, 55_000] {
+            b.record(Duration::from_micros(us));
+            both.record(Duration::from_micros(us));
+        }
+        assert_eq!(a.snapshot().merge(&b.snapshot()), both.snapshot());
     }
 
     #[test]

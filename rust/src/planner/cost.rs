@@ -1,0 +1,350 @@
+//! Measured cost model behind the protection planner.
+//!
+//! Scheme choice is an economics question — "is a second multiply cheaper
+//! than checksum verification *here*?" — and the honest way to answer it
+//! is to measure. The model holds [`CostObservation`]s (minimum-of-reps
+//! wall-clock timings of a scheme on a shape, recorded by
+//! [`CostModel::calibrate_shape`]) and answers [`CostModel::predict`]
+//! queries by nearest-neighbour lookup in the same smoothed log-ratio
+//! shape metric the tuning manifest uses, scaled by the flop ratio
+//! between the observed and queried shapes. Shapes no observation covers
+//! fall back to a documented analytic prior seeded from the autotuner's
+//! measured GFLOP/s ([`CostModel::seed_from_manifest`]).
+//!
+//! Timing noise can change which scheme the planner picks; it can never
+//! change result bits. The default planner vocabulary is
+//! schedule-neutral (invariant #9), so a noisy calibration at worst
+//! costs wall-clock time — detection recall and output bits are
+//! identical under every scheme it can emit.
+
+use std::time::Instant;
+
+use crate::abft::{FtGemm, VerifyPolicy};
+use crate::gemm::{AccumModel, GemmEngine};
+use crate::matrix::Matrix;
+use crate::rng::{Distribution, Xoshiro256pp};
+use crate::runtime::TuningManifest;
+use crate::threshold::VabftThreshold;
+
+use super::ProtectionScheme;
+
+/// Seed stream tag for calibration operands (disjoint from the replay
+/// weight/activation tags, so calibration never replays serving data).
+const CAL_TAG: u64 = 0x5E2F_33CF;
+
+/// Shapes further than this (summed log-ratio over m, k, n) from every
+/// observation fall back to the analytic prior — same cap as
+/// [`TuningManifest::lookup`].
+const MAX_DIST: f64 = 3.0;
+
+/// One timed measurement: `scheme` on an `m × k · k × n` multiply took
+/// `ns` nanoseconds (minimum over calibration reps).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostObservation {
+    /// The scheme that was timed.
+    pub scheme: ProtectionScheme,
+    /// Output rows of the timed shape.
+    pub m: usize,
+    /// Reduction depth of the timed shape.
+    pub k: usize,
+    /// Output columns of the timed shape.
+    pub n: usize,
+    /// Measured per-request cost in nanoseconds.
+    pub ns: f64,
+}
+
+/// Per-scheme cost model: measured observations first, analytic prior as
+/// the fallback. See the module docs.
+#[derive(Debug, Clone, Default)]
+pub struct CostModel {
+    observations: Vec<CostObservation>,
+    /// Throughput prior (GFLOP/s) used to convert the analytic model's
+    /// flop-equivalent units to nanoseconds; 0.0 = unseeded (treated
+    /// as 1.0, which preserves the analytic *ordering* — the only thing
+    /// argmin needs).
+    gflops_prior: f64,
+}
+
+impl CostModel {
+    /// Empty model: every prediction uses the analytic prior.
+    pub fn new() -> CostModel {
+        CostModel::default()
+    }
+
+    /// Number of recorded observations.
+    pub fn len(&self) -> usize {
+        self.observations.len()
+    }
+
+    /// True when no observation has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.observations.is_empty()
+    }
+
+    /// Record a measurement (also the deterministic-test entry point: the
+    /// planner's choice logic can be exercised with synthetic costs).
+    pub fn observe(&mut self, obs: CostObservation) {
+        self.observations.push(obs);
+    }
+
+    /// Seed the analytic prior from the autotuner's persisted manifest:
+    /// the median measured GFLOP/s across tuned shape classes. Purely a
+    /// unit conversion for the fallback path — measured observations
+    /// always win over the prior.
+    pub fn seed_from_manifest(&mut self, man: &TuningManifest) {
+        let mut rates: Vec<f64> =
+            man.entries.iter().map(|e| e.gflops).filter(|g| *g > 0.0).collect();
+        if rates.is_empty() {
+            return;
+        }
+        rates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        self.gflops_prior = rates[rates.len() / 2];
+    }
+
+    /// The seeded throughput prior (0.0 when unseeded).
+    pub fn gflops_prior(&self) -> f64 {
+        self.gflops_prior
+    }
+
+    /// Time each scheme on one shape and record the minimum over `reps`
+    /// repetitions. Operands are seeded from the shape (deterministic
+    /// data, non-deterministic timings — see the module docs for why
+    /// that is safe). Weight preparation happens outside the timed
+    /// region: serving amortizes it across thousands of requests.
+    pub fn calibrate_shape(
+        &mut self,
+        model: AccumModel,
+        m: usize,
+        k: usize,
+        n: usize,
+        schemes: &[ProtectionScheme],
+        reps: usize,
+    ) {
+        let substream = ((m as u64) << 42) ^ ((k as u64) << 21) ^ n as u64;
+        let mut rng = Xoshiro256pp::from_stream(CAL_TAG, substream);
+        let d = Distribution::normal_1_1();
+        let b = Matrix::sample_in(k, n, &d, model.input, &mut rng);
+        let a = Matrix::sample_in(m, k, &d, model.input, &mut rng);
+        for &scheme in schemes {
+            let policy = scheme.policy(VerifyPolicy::default());
+            let ft = FtGemm::new(
+                GemmEngine::new(model),
+                Box::new(VabftThreshold::default()),
+                policy,
+            );
+            let w = ft.prepare(&b);
+            let mut best = f64::INFINITY;
+            for _ in 0..reps.max(1) {
+                let t = Instant::now();
+                let out = match scheme {
+                    ProtectionScheme::Replicate => ft.multiply_replicated(&a, &w, None),
+                    _ => ft.multiply_prepared(&a, &w, None),
+                };
+                let ns = t.elapsed().as_nanos() as f64;
+                if out.is_ok() {
+                    best = best.min(ns.max(1.0));
+                }
+            }
+            if best.is_finite() {
+                self.observe(CostObservation { scheme, m, k, n, ns: best });
+            }
+        }
+    }
+
+    /// Predicted per-request cost (nanoseconds) of `scheme` on a shape:
+    /// the nearest observation of the same scheme (within [`MAX_DIST`]),
+    /// scaled by the flop ratio between query and observation; otherwise
+    /// the analytic prior. Equidistant observations tie-break on content
+    /// (smaller `(m, k, n)`), mirroring the tuning-manifest rule.
+    pub fn predict(&self, scheme: ProtectionScheme, m: usize, k: usize, n: usize) -> f64 {
+        let d = |a: usize, b: usize| ((a as f64 + 1.0) / (b as f64 + 1.0)).ln().abs();
+        let mut best: Option<(&CostObservation, f64)> = None;
+        for o in self.observations.iter().filter(|o| o.scheme == scheme) {
+            let dist = d(o.m, m) + d(o.k, k) + d(o.n, n);
+            let better = match &best {
+                Some((bo, bd)) => {
+                    dist < *bd || (dist == *bd && (o.m, o.k, o.n) < (bo.m, bo.k, bo.n))
+                }
+                None => true,
+            };
+            if better {
+                best = Some((o, dist));
+            }
+        }
+        if let Some((o, dist)) = best {
+            if dist <= MAX_DIST {
+                return o.ns * (flops(m, k, n) / flops(o.m, o.k, o.n));
+            }
+        }
+        self.analytic(scheme, m, k, n)
+    }
+
+    /// Analytic prior, in flop-equivalent units converted to ns via the
+    /// manifest-seeded throughput. The structure encodes what the timed
+    /// paths actually do:
+    ///
+    /// - every ABFT scheme pays a fixed per-request term (threshold
+    ///   context, per-row statistics plumbing, verdict bookkeeping) plus
+    ///   verification *traffic* — bandwidth passes over A (statistics)
+    ///   and C (checksum sweep), costed at [`PASS_COST`] flop-equivalents
+    ///   per element because a memory pass is not a flop;
+    /// - fused ABFT saves the separate pass over C;
+    /// - grid encodings double the statistics traffic (both directions);
+    /// - per-K-block verification repeats the fixed work per block;
+    /// - replication pays the multiply twice plus a bitwise compare, and
+    ///   almost none of the fixed ABFT term.
+    ///
+    /// The crossover this produces — replication wins on small/skinny
+    /// shapes where [`ABFT_FIXED`] dominates, ABFT wins as soon as flops
+    /// do — is the arithmetic-intensity story; calibration replaces it
+    /// with measurements wherever the planner has seen the shape class.
+    fn analytic(&self, scheme: ProtectionScheme, m: usize, k: usize, n: usize) -> f64 {
+        /// Flop-equivalents per element of a verification bandwidth pass.
+        const PASS_COST: f64 = 16.0;
+        /// Fixed per-request ABFT overhead, in flop-equivalents.
+        const ABFT_FIXED: f64 = 8192.0;
+        let (mf, kf, nf) = (m.max(1) as f64, k.max(1) as f64, n.max(1) as f64);
+        let f = flops(m, k, n);
+        let units = match scheme {
+            ProtectionScheme::Full => {
+                1.08 * f + ABFT_FIXED + PASS_COST * (mf * kf + 2.0 * mf * nf)
+            }
+            ProtectionScheme::Fused => {
+                1.03 * f + ABFT_FIXED + PASS_COST * (mf * kf + mf * nf)
+            }
+            ProtectionScheme::Grid => {
+                1.15 * f + ABFT_FIXED + 2.0 * PASS_COST * (mf * kf + mf * nf)
+            }
+            ProtectionScheme::BlockK(bk) => {
+                let blocks = (kf / (*bk).max(1) as f64).ceil().max(1.0);
+                1.10 * f + blocks * ABFT_FIXED + PASS_COST * (mf * kf + 2.0 * mf * nf)
+            }
+            ProtectionScheme::Replicate => 2.0 * f + 256.0 + 4.0 * mf * nf,
+        };
+        let gflops = if self.gflops_prior > 0.0 { self.gflops_prior } else { 1.0 };
+        units / gflops
+    }
+}
+
+/// Flop count of an `m × k · k × n` multiply (with degenerate-shape
+/// guards matching [`super::arithmetic_intensity`]).
+fn flops(m: usize, k: usize, n: usize) -> f64 {
+    2.0 * m.max(1) as f64 * k.max(1) as f64 * n.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::Precision;
+    use crate::gemm::{MicroConfig, RowSplit, SimdLevel, TileConfig};
+    use crate::runtime::TunedShape;
+
+    fn obs(scheme: ProtectionScheme, m: usize, k: usize, n: usize, ns: f64) -> CostObservation {
+        CostObservation { scheme, m, k, n, ns }
+    }
+
+    #[test]
+    fn predict_prefers_measurements_and_scales_by_flops() {
+        let mut cm = CostModel::new();
+        cm.observe(obs(ProtectionScheme::Full, 64, 256, 256, 1_000.0));
+        // Exact hit returns the measurement verbatim.
+        assert_eq!(cm.predict(ProtectionScheme::Full, 64, 256, 256), 1_000.0);
+        // A nearby shape with 2× the flops predicts 2× the cost.
+        let p = cm.predict(ProtectionScheme::Full, 128, 256, 256);
+        assert!((p - 2_000.0).abs() < 1e-9, "got {p}");
+        // A wildly different shape ignores the observation (analytic
+        // fallback — tiny shape, so far below the scaled measurement).
+        let far = cm.predict(ProtectionScheme::Full, 1, 1, 1);
+        assert!(far < 1_000.0);
+        // Observations only inform their own scheme.
+        let fused = cm.predict(ProtectionScheme::Fused, 64, 256, 256);
+        assert_ne!(fused, 1_000.0);
+    }
+
+    #[test]
+    fn predict_tie_breaks_on_content_not_insertion_order() {
+        // (127+1)^2 = (63+1)*(255+1): both observations sit exactly ln 2
+        // from the query on the m axis (the manifest test's fixture).
+        let a = obs(ProtectionScheme::Full, 63, 127, 127, 500.0);
+        let b = obs(ProtectionScheme::Full, 255, 127, 127, 900.0);
+        let mut fwd = CostModel::new();
+        fwd.observe(a.clone());
+        fwd.observe(b.clone());
+        let mut rev = CostModel::new();
+        rev.observe(b);
+        rev.observe(a);
+        let q = |cm: &CostModel| cm.predict(ProtectionScheme::Full, 127, 127, 127);
+        assert_eq!(q(&fwd), q(&rev));
+        // Smaller (m, k, n) wins: the 63-row observation, scaled 127/63
+        // in flops (k and n match).
+        let expect = 500.0 * flops(127, 127, 127) / flops(63, 127, 127);
+        assert!((q(&fwd) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn analytic_prior_encodes_the_intensity_crossover() {
+        let cm = CostModel::new();
+        // Tiny shape: fixed ABFT cost dominates, replication is cheapest.
+        let tiny = |s: ProtectionScheme| cm.predict(s, 1, 64, 64);
+        assert!(tiny(ProtectionScheme::Replicate) < tiny(ProtectionScheme::Full));
+        assert!(tiny(ProtectionScheme::Replicate) < tiny(ProtectionScheme::Fused));
+        // Compute-rich shape: a second multiply can't win.
+        let big = |s: ProtectionScheme| cm.predict(s, 512, 512, 512);
+        assert!(big(ProtectionScheme::Fused) < big(ProtectionScheme::Replicate));
+        assert!(big(ProtectionScheme::Full) < big(ProtectionScheme::Replicate));
+        // Fused beats staged everywhere (same checks, one less pass).
+        assert!(big(ProtectionScheme::Fused) < big(ProtectionScheme::Full));
+        // Every scheme in the vocabulary predicts finite positive cost.
+        for s in ProtectionScheme::vocabulary(64) {
+            let p = cm.predict(s, 8, 256, 32);
+            assert!(p.is_finite() && p > 0.0, "{}: {p}", s.label());
+        }
+    }
+
+    #[test]
+    fn manifest_seeding_rescales_the_prior_only() {
+        let mut man = TuningManifest::new("scalar");
+        man.push(TunedShape {
+            label: "x".to_string(),
+            m: 64,
+            k: 64,
+            n: 64,
+            tiles: TileConfig { mc: 32, kc: 128, nc: 64 },
+            micro: MicroConfig { mr: 4, nr: 16 },
+            threads: 1,
+            split: RowSplit::Contiguous,
+            simd: SimdLevel::Scalar,
+            gflops: 4.0,
+            baseline_gflops: 2.0,
+        });
+        let mut seeded = CostModel::new();
+        seeded.seed_from_manifest(&man);
+        assert_eq!(seeded.gflops_prior(), 4.0);
+        let unseeded = CostModel::new();
+        // 4 GFLOP/s prior → analytic predictions shrink 4×; ordering is
+        // unchanged, so the planner's choice is too.
+        let a = unseeded.predict(ProtectionScheme::Full, 32, 128, 128);
+        let b = seeded.predict(ProtectionScheme::Full, 32, 128, 128);
+        assert!((a / b - 4.0).abs() < 1e-9);
+        // Measurements are never rescaled.
+        seeded.observe(obs(ProtectionScheme::Full, 32, 128, 128, 777.0));
+        assert_eq!(seeded.predict(ProtectionScheme::Full, 32, 128, 128), 777.0);
+        // An empty manifest leaves the prior unseeded.
+        let mut cm = CostModel::new();
+        cm.seed_from_manifest(&TuningManifest::new("scalar"));
+        assert_eq!(cm.gflops_prior(), 0.0);
+    }
+
+    #[test]
+    fn calibration_records_every_scheme() {
+        let mut cm = CostModel::new();
+        let model = AccumModel::wide(Precision::Bf16);
+        let schemes = ProtectionScheme::vocabulary(16);
+        cm.calibrate_shape(model, 4, 48, 8, &schemes, 1);
+        assert_eq!(cm.len(), schemes.len());
+        for s in schemes {
+            let p = cm.predict(s, 4, 48, 8);
+            assert!(p.is_finite() && p >= 1.0, "{}: {p}", s.label());
+        }
+    }
+}

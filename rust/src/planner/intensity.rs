@@ -1,0 +1,47 @@
+//! Arithmetic intensity of a GEMM shape.
+//!
+//! "Arithmetic-Intensity-Guided Fault Tolerance" observes that the best
+//! protection scheme flips between replication and ABFT depending on how
+//! many flops a kernel performs per byte it moves: ABFT's O(n) advantage
+//! is an advantage over *recomputation*, and for small or skinny layers
+//! (ViT heads, GPT-2 MLPs at low batch) the fixed per-request costs of
+//! checksum verification can exceed the cost of simply running the
+//! multiply twice. The planner uses the intensity as a *candidate
+//! filter* — which schemes are worth measuring for a shape — while the
+//! measured cost model ([`crate::planner::CostModel`]) makes the final
+//! call.
+
+/// Flops per byte of an `m × k · k × n` GEMM with f64 operands:
+/// `2mkn / 8(mk + kn + mn)`.
+///
+/// Intuition anchors: a square `s³` GEMM has intensity `s/12` (grows
+/// without bound — compute-rich), while an `m=1` GEMV is pinned below
+/// `1/4` flops/byte no matter how large k and n get (bandwidth-bound —
+/// the regime where dual-compute replication is competitive).
+pub fn arithmetic_intensity(m: usize, k: usize, n: usize) -> f64 {
+    let (m, k, n) = (m.max(1) as f64, k.max(1) as f64, n.max(1) as f64);
+    let flops = 2.0 * m * k * n;
+    let bytes = 8.0 * (m * k + k * n + m * n);
+    flops / bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intensity_orders_shapes_sensibly() {
+        // Square GEMMs grow in intensity with size.
+        assert!(arithmetic_intensity(256, 256, 256) > arithmetic_intensity(64, 64, 64));
+        // A batch-1 GEMV is bandwidth-bound: intensity < 1/4 flops/byte
+        // regardless of the weight shape.
+        assert!(arithmetic_intensity(1, 4096, 4096) < 0.25);
+        assert!(arithmetic_intensity(1, 1 << 20, 1 << 20) < 0.25);
+        // Square s³ ≈ s/12.
+        let s = 384;
+        let got = arithmetic_intensity(s, s, s);
+        assert!((got - s as f64 / 12.0).abs() / got < 1e-9);
+        // Degenerate shapes don't divide by zero.
+        assert!(arithmetic_intensity(0, 0, 0).is_finite());
+    }
+}

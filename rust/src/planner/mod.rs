@@ -1,0 +1,478 @@
+//! Arithmetic-intensity-guided per-layer protection planner.
+//!
+//! Uniform ABFT is the wrong call for every layer of a real serving
+//! trace: large square GEMMs amortize checksum verification into noise
+//! (and want it fused into the epilogue), while small or skinny layers
+//! pay fixed per-request costs — per-row threshold statistics over A,
+//! checksum dot products — that can rival the multiply itself, where
+//! dual-compute replication is the cheaper detector. This module picks a
+//! [`ProtectionScheme`] per replay-trace layer from the shape's
+//! [`arithmetic_intensity`] (candidate filter) and a **measured**
+//! [`CostModel`] (final call), seeded from the autotuner's
+//! [`crate::runtime::TuningManifest`] and refined by a small calibration
+//! pass that times each candidate scheme on the trace's own shapes.
+//!
+//! The emitted [`ProtectionPlan`] rides the weight handle: the
+//! coordinator's `register_weights_planned` prepares each weight under
+//! its entry's scheme and workers dispatch on it per request — requests
+//! never re-consult the planner.
+//!
+//! **Invariant #9 (plan selection is pure scheduling).** Every scheme the
+//! default planner emits — staged ABFT, fused-epilogue ABFT, grid
+//! encodings, dual-compute replication — preserves each output element's
+//! rounding schedule bit-for-bit, so a planned replay and a uniform-ABFT
+//! replay produce identical outputs, verdicts and fingerprints on clean
+//! traffic; the plan changes *which verifier runs*, never the data. The
+//! one scheme that is **not** schedule-neutral is
+//! [`ProtectionScheme::BlockK`]: per-K-block verification aggregates
+//! partials with intermediate work-precision roundings (a data-path
+//! choice, documented on [`crate::abft::VerifyGranularity`]), so the
+//! planner only emits it when [`PlannerConfig::allow_block_k`] is
+//! explicitly set — the campaign's plan axis still validates its
+//! detection quality like every other scheme.
+
+pub mod cost;
+pub mod intensity;
+
+pub use cost::{CostModel, CostObservation};
+pub use intensity::arithmetic_intensity;
+
+use crate::abft::{EncodingMode, VerifyGranularity, VerifyPolicy};
+use crate::workload::LayerTrace;
+
+/// One protection scheme the planner can assign to a layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ProtectionScheme {
+    /// Staged (post-hoc) monolithic online ABFT — the uniform baseline:
+    /// row checksums verified against the pre-quantization accumulator
+    /// after the kernel returns.
+    Full,
+    /// Online ABFT with detection fused into the packed GEMM epilogue —
+    /// same decisions, same bits, one less pass over C.
+    Fused,
+    /// Grid (2-D) encoding with peeling multi-fault repair
+    /// ([`EncodingMode::Grid`]) — row bursts and checksum upsets are
+    /// corrected without recomputation.
+    Grid,
+    /// Per-K-block verification at this block depth
+    /// ([`VerifyGranularity::BlockK`]) — tighter thresholds and K-local
+    /// fault attribution. **Not schedule-neutral**: blockwise partial
+    /// aggregation legitimately changes output bits, so the default
+    /// planner never emits it (see the module docs, invariant #9).
+    BlockK(usize),
+    /// Dual-compute replication: run the multiply twice on the identical
+    /// schedule, compare accumulators bitwise, recompute divergent rows.
+    /// No thresholds, no checksum verification — the detector of choice
+    /// when ABFT's fixed per-request costs exceed a second (small)
+    /// multiply.
+    Replicate,
+}
+
+impl ProtectionScheme {
+    /// Every scheme the planner can emit — the campaign's plan axis
+    /// enumerates this vocabulary so each scheme's recall and
+    /// false-positive behavior is validated whether or not the current
+    /// cost model happens to pick it.
+    pub fn vocabulary(block_k: usize) -> Vec<ProtectionScheme> {
+        vec![
+            ProtectionScheme::Full,
+            ProtectionScheme::Fused,
+            ProtectionScheme::Grid,
+            ProtectionScheme::BlockK(block_k.max(1)),
+            ProtectionScheme::Replicate,
+        ]
+    }
+
+    /// Stable display label (used in plan summaries, bench rows and
+    /// campaign cell keys).
+    pub fn label(&self) -> String {
+        match self {
+            ProtectionScheme::Full => "full".to_string(),
+            ProtectionScheme::Fused => "fused".to_string(),
+            ProtectionScheme::Grid => "grid".to_string(),
+            ProtectionScheme::BlockK(bk) => format!("block{bk}"),
+            ProtectionScheme::Replicate => "replicate".to_string(),
+        }
+    }
+
+    /// True when executing under this scheme reproduces the uniform
+    /// (monolithic) path's output bits on clean data — every scheme
+    /// except [`ProtectionScheme::BlockK`], whose per-block aggregation
+    /// is a different rounding schedule.
+    pub fn is_schedule_neutral(&self) -> bool {
+        !matches!(self, ProtectionScheme::BlockK(_))
+    }
+
+    /// Derive the concrete [`VerifyPolicy`] this scheme runs under,
+    /// inheriting the recovery knobs (correct / recompute / reverify /
+    /// severity / localization tolerance) from `base`. Every scheme
+    /// verifies online (the pre-quantization accumulator): that is both
+    /// the paper's recommended verification point and what keeps plan
+    /// dispatch a pure verifier swap.
+    pub fn policy(&self, base: VerifyPolicy) -> VerifyPolicy {
+        let mut p = base;
+        p.online = true;
+        p.fused = false;
+        p.encoding = EncodingMode::RowOnly;
+        p.granularity = VerifyGranularity::Monolithic;
+        match self {
+            ProtectionScheme::Full | ProtectionScheme::Replicate => {}
+            ProtectionScheme::Fused => p.fused = true,
+            ProtectionScheme::Grid => p.encoding = EncodingMode::Grid,
+            ProtectionScheme::BlockK(bk) => {
+                p.granularity = VerifyGranularity::BlockK((*bk).max(1))
+            }
+        }
+        p
+    }
+}
+
+/// How a replay chose its per-layer protection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanMode {
+    /// Planner-chosen mixed protection.
+    Auto,
+    /// Uniform staged ABFT on every layer (the baseline arm of the A/B).
+    Uniform,
+}
+
+impl PlanMode {
+    /// Stable label for bench rows and CLI output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlanMode::Auto => "auto",
+            PlanMode::Uniform => "uniform",
+        }
+    }
+}
+
+/// The planner's decision for one distinct weight tensor.
+#[derive(Debug, Clone)]
+pub struct PlanEntry {
+    /// Index into the trace's distinct weights.
+    pub weight: usize,
+    /// Layer name from the weight profile.
+    pub name: String,
+    /// Representative request shape (m, k, n) the decision was made for.
+    pub m: usize,
+    /// GEMM reduction depth.
+    pub k: usize,
+    /// GEMM output columns.
+    pub n: usize,
+    /// Arithmetic intensity of the shape (flops/byte).
+    pub intensity: f64,
+    /// The chosen protection scheme.
+    pub scheme: ProtectionScheme,
+    /// The cost model's predicted per-request cost under the chosen
+    /// scheme, in nanoseconds (0.0 when no measurement or prior existed).
+    pub predicted_ns: f64,
+}
+
+/// A per-layer protection plan over a replay trace's distinct weights.
+#[derive(Debug, Clone)]
+pub struct ProtectionPlan {
+    /// How the plan was produced.
+    pub mode: PlanMode,
+    /// One entry per distinct weight, in weight-index order.
+    pub entries: Vec<PlanEntry>,
+}
+
+impl ProtectionPlan {
+    /// The entry for a weight index, if the plan covers it.
+    pub fn entry_for(&self, weight: usize) -> Option<&PlanEntry> {
+        self.entries.iter().find(|e| e.weight == weight)
+    }
+
+    /// Uniform staged-ABFT plan over a trace — the baseline arm of the
+    /// planned-vs-uniform A/B, routed through the same planned
+    /// registration path so the two arms differ only in scheme choice.
+    pub fn uniform_for(trace: &LayerTrace) -> ProtectionPlan {
+        let entries = distinct_weight_shapes(trace)
+            .into_iter()
+            .map(|(weight, name, m, k, n)| PlanEntry {
+                weight,
+                name,
+                intensity: arithmetic_intensity(m, k, n),
+                m,
+                k,
+                n,
+                scheme: ProtectionScheme::Full,
+                predicted_ns: 0.0,
+            })
+            .collect();
+        ProtectionPlan { mode: PlanMode::Uniform, entries }
+    }
+
+    /// Count of entries per scheme label, in label order — the one-line
+    /// plan summary the CLI prints.
+    pub fn summary(&self) -> String {
+        let mut counts: Vec<(String, usize)> = Vec::new();
+        for e in &self.entries {
+            let label = e.scheme.label();
+            match counts.iter_mut().find(|(l, _)| *l == label) {
+                Some((_, c)) => *c += 1,
+                None => counts.push((label, 1)),
+            }
+        }
+        counts.sort();
+        let parts: Vec<String> =
+            counts.iter().map(|(l, c)| format!("{l}={c}")).collect();
+        format!("{} layers: {}", self.entries.len(), parts.join(" "))
+    }
+}
+
+/// Planner knobs. The defaults emit only schedule-neutral schemes
+/// (invariant #9); `allow_block_k` opts into the blockwise data path for
+/// workloads that registered their weights blockwise anyway.
+#[derive(Debug, Clone)]
+pub struct PlannerConfig {
+    /// Shapes at or below this arithmetic intensity (flops/byte) get
+    /// dual-compute replication as a candidate. Above it, a second
+    /// multiply can never beat checksum verification, so the candidate
+    /// is not even measured.
+    pub replicate_max_intensity: f64,
+    /// Emit [`ProtectionScheme::BlockK`] for deep-K layers. Off by
+    /// default: blockwise aggregation changes output bits (see the
+    /// module docs).
+    pub allow_block_k: bool,
+    /// Block depth used when `allow_block_k` is set and K is at least
+    /// four blocks deep.
+    pub block_k: usize,
+    /// Plan for multi-fault coverage: restrict candidates to the schemes
+    /// that repair row-inconsistent bursts (grid encodings, replication)
+    /// instead of cost-optimal single-upset protection.
+    pub multi_fault: bool,
+    /// Timed repetitions per (shape, scheme) in the calibration pass;
+    /// the minimum over reps is recorded (classic bench hygiene).
+    pub calibration_reps: usize,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            replicate_max_intensity: 8.0,
+            allow_block_k: false,
+            block_k: 64,
+            multi_fault: false,
+            calibration_reps: 2,
+        }
+    }
+}
+
+/// The planner: a candidate filter (arithmetic intensity) over a measured
+/// cost model.
+#[derive(Debug)]
+pub struct Planner {
+    cfg: PlannerConfig,
+    cost: CostModel,
+}
+
+impl Planner {
+    /// Build a planner over a cost model (seed it from the tuning
+    /// manifest and/or calibrate it first — see [`CostModel`]).
+    pub fn new(cfg: PlannerConfig, cost: CostModel) -> Planner {
+        Planner { cfg, cost }
+    }
+
+    /// The cost model the planner consults.
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cost
+    }
+
+    /// Candidate schemes for a shape, in deterministic preference order
+    /// (ties in predicted cost resolve to the earliest candidate — the
+    /// uniform baseline first, so an uninformative cost model degrades to
+    /// uniform ABFT, never to an exotic scheme).
+    pub fn candidates(&self, m: usize, k: usize, n: usize) -> Vec<ProtectionScheme> {
+        let intensity = arithmetic_intensity(m, k, n);
+        if self.cfg.multi_fault {
+            // Multi-fault coverage: only the schemes that repair
+            // row-inconsistent bursts qualify; cost picks among them.
+            let mut c = vec![ProtectionScheme::Grid];
+            if intensity <= self.cfg.replicate_max_intensity {
+                c.push(ProtectionScheme::Replicate);
+            }
+            return c;
+        }
+        let mut c = vec![ProtectionScheme::Full, ProtectionScheme::Fused];
+        if self.cfg.allow_block_k && k >= 4 * self.cfg.block_k {
+            c.push(ProtectionScheme::BlockK(self.cfg.block_k));
+        }
+        if intensity <= self.cfg.replicate_max_intensity {
+            c.push(ProtectionScheme::Replicate);
+        }
+        c
+    }
+
+    /// Plan one shape: pick the candidate with the lowest predicted
+    /// per-request cost (strictly-less comparison over the deterministic
+    /// candidate order, so equal costs keep the earlier, safer scheme).
+    pub fn plan_shape(
+        &self,
+        weight: usize,
+        name: &str,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> PlanEntry {
+        let mut best = ProtectionScheme::Full;
+        let mut best_ns = f64::INFINITY;
+        for s in self.candidates(m, k, n) {
+            let ns = self.cost.predict(s, m, k, n);
+            if ns < best_ns {
+                best = s;
+                best_ns = ns;
+            }
+        }
+        PlanEntry {
+            weight,
+            name: name.to_string(),
+            m,
+            k,
+            n,
+            intensity: arithmetic_intensity(m, k, n),
+            scheme: best,
+            predicted_ns: if best_ns.is_finite() { best_ns } else { 0.0 },
+        }
+    }
+
+    /// Plan a whole replay trace: one entry per distinct weight, using
+    /// the first trace entry referencing each weight as the
+    /// representative request shape.
+    pub fn plan_trace(&self, trace: &LayerTrace) -> ProtectionPlan {
+        let entries = distinct_weight_shapes(trace)
+            .into_iter()
+            .map(|(weight, name, m, k, n)| self.plan_shape(weight, &name, m, k, n))
+            .collect();
+        ProtectionPlan { mode: PlanMode::Auto, entries }
+    }
+}
+
+/// (weight index, layer name, m, k, n) per distinct weight of a trace, in
+/// weight-index order, shaped by the first entry referencing each weight.
+fn distinct_weight_shapes(trace: &LayerTrace) -> Vec<(usize, String, usize, usize, usize)> {
+    let mut shapes = Vec::with_capacity(trace.weights.len());
+    for (widx, (k, n, _)) in trace.weights.iter().enumerate() {
+        let entry = trace.entries.iter().find(|e| e.weight == widx);
+        let (m, name) = match entry {
+            Some(e) => (e.m, e.name.to_string()),
+            None => (1, format!("w{widx}")),
+        };
+        shapes.push((widx, name, m, *k, *n));
+    }
+    shapes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{build_trace, ReplayConfig};
+
+    #[test]
+    fn scheme_policies_derive_from_base() {
+        let base = VerifyPolicy::default().with_severity();
+        let full = ProtectionScheme::Full.policy(base);
+        assert!(full.online && !full.fused && full.severity);
+        assert_eq!(full.encoding, EncodingMode::RowOnly);
+        let fused = ProtectionScheme::Fused.policy(base);
+        assert!(fused.fused && fused.online);
+        let grid = ProtectionScheme::Grid.policy(base);
+        assert_eq!(grid.encoding, EncodingMode::Grid);
+        let bk = ProtectionScheme::BlockK(32).policy(base);
+        assert_eq!(bk.granularity, VerifyGranularity::BlockK(32));
+        // Neutrality split: exactly BlockK is non-neutral.
+        for s in ProtectionScheme::vocabulary(64) {
+            assert_eq!(
+                s.is_schedule_neutral(),
+                !matches!(s, ProtectionScheme::BlockK(_)),
+                "{}",
+                s.label()
+            );
+        }
+    }
+
+    #[test]
+    fn planner_is_cost_driven_and_intensity_filtered() {
+        // A synthetic cost model that makes replication cheap on the
+        // skinny shape and fused cheap on the big one.
+        let mut cm = CostModel::new();
+        cm.observe(CostObservation {
+            scheme: ProtectionScheme::Replicate,
+            m: 1,
+            k: 256,
+            n: 64,
+            ns: 100.0,
+        });
+        cm.observe(CostObservation { scheme: ProtectionScheme::Full, m: 1, k: 256, n: 64, ns: 300.0 });
+        cm.observe(CostObservation { scheme: ProtectionScheme::Fused, m: 1, k: 256, n: 64, ns: 250.0 });
+        cm.observe(CostObservation {
+            scheme: ProtectionScheme::Fused,
+            m: 256,
+            k: 256,
+            n: 256,
+            ns: 1000.0,
+        });
+        cm.observe(CostObservation {
+            scheme: ProtectionScheme::Full,
+            m: 256,
+            k: 256,
+            n: 256,
+            ns: 1200.0,
+        });
+        let p = Planner::new(PlannerConfig::default(), cm);
+
+        // Skinny, bandwidth-bound: replication is a candidate and wins on
+        // measured cost.
+        let skinny = p.plan_shape(0, "gemv", 1, 256, 64);
+        assert!(skinny.intensity <= 8.0);
+        assert_eq!(skinny.scheme, ProtectionScheme::Replicate);
+        assert!(skinny.predicted_ns > 0.0);
+
+        // Big square: replication is not even a candidate; fused wins.
+        let big = p.plan_shape(1, "ffn", 256, 256, 256);
+        assert!(!p.candidates(256, 256, 256).contains(&ProtectionScheme::Replicate));
+        assert_eq!(big.scheme, ProtectionScheme::Fused);
+
+        // BlockK never emitted by default, even for deep K.
+        assert!(!p.candidates(8, 4096, 64).iter().any(|s| matches!(s, ProtectionScheme::BlockK(_))));
+        let p2 = Planner::new(
+            PlannerConfig { allow_block_k: true, ..PlannerConfig::default() },
+            CostModel::new(),
+        );
+        assert!(p2.candidates(8, 4096, 64).iter().any(|s| matches!(s, ProtectionScheme::BlockK(_))));
+    }
+
+    #[test]
+    fn uninformative_cost_model_degrades_to_uniform() {
+        // With no observations and no priors, every candidate predicts
+        // the same analytic fallback ordering — the tie-break keeps the
+        // baseline for equal costs, and the analytic prior never makes
+        // replication beat ABFT on a compute-rich shape.
+        let p = Planner::new(PlannerConfig::default(), CostModel::new());
+        let e = p.plan_shape(0, "wq", 64, 512, 512);
+        assert!(e.scheme == ProtectionScheme::Full || e.scheme == ProtectionScheme::Fused);
+        assert!(e.scheme.is_schedule_neutral());
+    }
+
+    #[test]
+    fn trace_plan_covers_every_weight_and_uniform_is_full() {
+        let cfg = ReplayConfig::smoke("gpt2", 3);
+        let trace = build_trace(&cfg);
+        let plan = Planner::new(PlannerConfig::default(), CostModel::new()).plan_trace(&trace);
+        assert_eq!(plan.mode, PlanMode::Auto);
+        assert_eq!(plan.entries.len(), trace.weights.len());
+        for (i, e) in plan.entries.iter().enumerate() {
+            assert_eq!(e.weight, i);
+            assert!(e.scheme.is_schedule_neutral(), "default plan must be neutral");
+            assert!(e.intensity > 0.0);
+        }
+        assert!(!plan.summary().is_empty());
+
+        let uni = ProtectionPlan::uniform_for(&trace);
+        assert_eq!(uni.mode, PlanMode::Uniform);
+        assert_eq!(uni.entries.len(), trace.weights.len());
+        assert!(uni.entries.iter().all(|e| e.scheme == ProtectionScheme::Full));
+        assert!(uni.entry_for(0).is_some());
+        assert!(uni.entry_for(usize::MAX).is_none());
+    }
+}

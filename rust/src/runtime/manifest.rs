@@ -293,17 +293,30 @@ impl TuningManifest {
     /// when one exists, else the entry minimizing the symmetric
     /// log-ratio distance `|ln(m'/m)| + |ln(k'/k)| + |ln(n'/n)|`, capped
     /// so wildly different shapes fall back to defaults instead of
-    /// inheriting someone else's blocking. Ties resolve to the earliest
-    /// entry, so lookup is deterministic for a fixed file.
+    /// inheriting someone else's blocking.
+    ///
+    /// Equidistant entries tie-break on *content* — the smaller
+    /// `(m, k, n, label)` tuple wins — never on file position, so two
+    /// manifests holding the same entries in different orders resolve
+    /// every query identically. (Earliest-entry tie-breaking looked
+    /// deterministic but made resolution a function of write order: two
+    /// autotune runs that persisted the same winners in different orders
+    /// could hand the same GEMM different tile configs.)
     pub fn lookup(&self, m: usize, k: usize, n: usize) -> Option<&TunedShape> {
         const MAX_DIST: f64 = 3.0;
         let d = |a: usize, b: usize| ((a as f64 + 1.0) / (b as f64 + 1.0)).ln().abs();
+        let key = |e: &TunedShape| (e.m, e.k, e.n, e.label.clone());
         let mut best: Option<(&TunedShape, f64)> = None;
         for e in &self.entries {
             let dist = d(e.m, m) + d(e.k, k) + d(e.n, n);
-            match best {
-                Some((_, bd)) if bd <= dist => {}
-                _ => best = Some((e, dist)),
+            let better = match &best {
+                Some((be, bd)) => {
+                    dist < *bd || (dist == *bd && key(e) < key(be))
+                }
+                None => true,
+            };
+            if better {
+                best = Some((e, dist));
             }
         }
         best.filter(|&(_, dist)| dist <= MAX_DIST).map(|(e, _)| e)
@@ -437,5 +450,49 @@ mod tests {
         assert!(man.lookup(1, 1_000_000, 1).is_none());
         // Empty manifest never matches.
         assert!(TuningManifest::new("x").lookup(8, 8, 8).is_none());
+    }
+
+    #[test]
+    fn tuning_lookup_tie_break_is_independent_of_entry_order() {
+        // Two entries equidistant (in summed log-ratio) from the query
+        // (127, 127, 127): the smoothed distance uses (x + 1), so pick
+        // m values with (127+1)^2 = (63+1)*(255+1) — both sit exactly
+        // ln 2 away on the m axis. Whichever file order they were
+        // persisted in, the same entry must win — the content tie-break
+        // prefers the smaller (m, k, n, label) tuple.
+        let lo = tuned("lo", 63, 127, 127);
+        let hi = tuned("hi", 255, 127, 127);
+        let d = |a: usize, b: usize| ((a as f64 + 1.0) / (b as f64 + 1.0)).ln().abs();
+        let dist = |e: &TunedShape| d(e.m, 127) + d(e.k, 127) + d(e.n, 127);
+        assert!(
+            (dist(&lo) - dist(&hi)).abs() < 1e-12,
+            "test fixture must be equidistant: {} vs {}",
+            dist(&lo),
+            dist(&hi)
+        );
+
+        let mut fwd = TuningManifest::new("scalar");
+        fwd.push(lo.clone());
+        fwd.push(hi.clone());
+        let mut rev = TuningManifest::new("scalar");
+        rev.push(hi);
+        rev.push(lo);
+
+        let a = fwd.lookup(127, 127, 127).expect("within cap");
+        let b = rev.lookup(127, 127, 127).expect("within cap");
+        assert_eq!(a.label, b.label, "tie resolution depends on entry order");
+        // And specifically the smaller (m, k, n, label) tuple wins.
+        assert_eq!(a.label, "lo");
+
+        // Identical shapes differing only by label also resolve by
+        // content, not position.
+        let mut m1 = TuningManifest::new("scalar");
+        m1.push(tuned("beta", 64, 64, 64));
+        m1.push(tuned("alpha", 64, 64, 64));
+        let mut m2 = TuningManifest::new("scalar");
+        m2.push(tuned("alpha", 64, 64, 64));
+        m2.push(tuned("beta", 64, 64, 64));
+        assert_eq!(m1.lookup(64, 64, 64).unwrap().label, "alpha");
+        assert_eq!(m2.lookup(64, 64, 64).unwrap().label, "alpha");
     }
 }

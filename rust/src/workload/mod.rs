@@ -24,6 +24,6 @@ pub use arrivals::{
     OpenLoopConfig, OpenLoopReport, ScheduledRequest,
 };
 pub use replay::{
-    build_trace, replay_doc, run_replay, LayerTrace, ReplayConfig, ReplayReport, ReplayRow,
-    TraceEntry,
+    build_trace, replay_doc, run_replay, run_replay_planned, LayerTrace, ReplayConfig,
+    ReplayReport, ReplayRow, TraceEntry,
 };

@@ -123,7 +123,26 @@ impl LayerTrace {
 /// Expand `family`'s layer profiles into a replayable trace: every
 /// (layer, profile, instance) becomes one distinct weight tensor and one
 /// trace entry per forward pass, in layer order.
+///
+/// The pseudo-family `"mixed"` concatenates the three published
+/// families (`llama-7b`, `gpt2`, `vit-b32`) back to back with weight
+/// indices re-based — the heterogeneous trace the protection planner is
+/// benchmarked on, mixing attention/MLP shapes across very different
+/// arithmetic intensities.
 pub fn build_trace(cfg: &ReplayConfig) -> LayerTrace {
+    if cfg.family == "mixed" {
+        let mut entries = Vec::new();
+        let mut weights = Vec::new();
+        for fam in ["llama-7b", "gpt2", "vit-b32"] {
+            let sub = build_trace(&ReplayConfig { family: fam.to_string(), ..cfg.clone() });
+            let base = weights.len();
+            weights.extend(sub.weights.iter().cloned());
+            entries.extend(
+                sub.entries.iter().map(|e| TraceEntry { weight: e.weight + base, ..e.clone() }),
+            );
+        }
+        return LayerTrace { family: "mixed".to_string(), entries, weights };
+    }
     let profiles = crate::experiments::model_weight_profiles(&cfg.family, cfg.scale.max(1));
     let mut entries = Vec::new();
     let mut weights = Vec::new();
@@ -251,6 +270,21 @@ pub(crate) fn fold_response(h: u64, resp: &GemmResponse) -> u64 {
 /// caller owns `ccfg` entirely (shards, partition, steal, workers,
 /// engine parallelism) — none of it can change the fingerprint.
 pub fn run_replay(cfg: &ReplayConfig, ccfg: CoordinatorConfig) -> ReplayReport {
+    run_replay_planned(cfg, ccfg, None)
+}
+
+/// [`run_replay`] with an optional per-weight [`ProtectionPlan`]: weights
+/// with a plan entry are registered through
+/// [`Coordinator::register_weights_planned`] so the planner-chosen
+/// scheme rides the handle and drives worker-side verification;
+/// unplanned weights (and `plan = None`) take the uniform staged-ABFT
+/// path. Invariant #9: a plan built from schedule-neutral schemes must
+/// leave the fingerprint bitwise-identical to the uniform run.
+pub fn run_replay_planned(
+    cfg: &ReplayConfig,
+    ccfg: CoordinatorConfig,
+    plan: Option<&crate::planner::ProtectionPlan>,
+) -> ReplayReport {
     let trace = build_trace(cfg);
     let model = ccfg.model;
     let coord = Coordinator::start(ccfg);
@@ -264,7 +298,10 @@ pub fn run_replay(cfg: &ReplayConfig, ccfg: CoordinatorConfig) -> ReplayReport {
         .map(|(i, (k, n, dist))| {
             let mut rng = Xoshiro256pp::from_stream(cfg.seed ^ WEIGHT_TAG, i as u64);
             let b = Matrix::sample_in(*k, *n, dist, model.input, &mut rng);
-            coord.register_weights(i as u32, &b)
+            match plan.and_then(|p| p.entry_for(i)) {
+                Some(entry) => coord.register_weights_planned(i as u32, &b, entry),
+                None => coord.register_weights(i as u32, &b),
+            }
         })
         .collect();
 
@@ -374,6 +411,9 @@ pub struct ReplayRow {
     /// Whether the fingerprint matched the baseline row's (the
     /// differential gate; always true for the baseline).
     pub fingerprint_equal: bool,
+    /// Protection-plan label for the run (`"uniform"` for unplanned
+    /// replays, `"auto"` for planner-driven ones) — the v3 A/B axis.
+    pub plan: String,
 }
 
 impl ReplayRow {
@@ -405,21 +445,31 @@ impl ReplayRow {
             concurrency,
             speedup_vs_baseline,
             fingerprint_equal,
+            plan: "uniform".to_string(),
         }
+    }
+
+    /// Re-label the row's protection plan (ladder rows default to
+    /// `"uniform"`).
+    pub fn with_plan(mut self, plan: &str) -> ReplayRow {
+        self.plan = plan.to_string();
+        self
     }
 }
 
-/// Assemble the schema-versioned `vabft-serving/v2` document from replay
+/// Assemble the schema-versioned `vabft-serving/v3` document from replay
 /// rows (shared by `benches/serving_replay.rs` and `vabft serve-replay
 /// --json`). `mode` labels how the rows were produced (`"quick"` /
 /// `"full"` for the bench per [`crate::bench_harness::BenchMode`],
 /// `"smoke"` / `"custom"` for CLI runs) — the caller knows; this
 /// function does not guess from the environment.
 ///
-/// v2 adds the open-loop columns over v1: `arrival` (arrival-process
+/// v2 added the open-loop columns over v1: `arrival` (arrival-process
 /// label), tail latencies `p50_ms` / `p99_ms` / `p999_ms`, and
 /// `shed_rate` (admission-control refusals / offered). Closed-loop rows
-/// carry `arrival = "closed-loop"` and `shed_rate = 0`.
+/// carry `arrival = "closed-loop"` and `shed_rate = 0`. v3 adds the
+/// `plan` column (`"uniform"` / `"auto"`) for the planned-vs-uniform
+/// A/B pair.
 pub fn replay_doc(rows: &[ReplayRow], mode: &str) -> JsonDoc {
     let ms = |d: Duration| d.as_secs_f64() * 1e3;
     let mut doc = JsonDoc::new(SERVING_SCHEMA);
@@ -428,6 +478,7 @@ pub fn replay_doc(rows: &[ReplayRow], mode: &str) -> JsonDoc {
     for r in rows {
         doc.entry(vec![
             ("family".to_string(), JsonValue::Str(r.report.family.clone())),
+            ("plan".to_string(), JsonValue::Str(r.plan.clone())),
             ("arrival".to_string(), JsonValue::Str(r.report.arrival.clone())),
             ("shards".to_string(), JsonValue::Int(r.report.shards as i64)),
             ("partition".to_string(), JsonValue::Str(r.partition.clone())),
@@ -508,5 +559,69 @@ mod tests {
         assert!(json.contains("\"arrival\": \"closed-loop\""));
         assert!(json.contains("\"p99_ms\""));
         assert!(json.contains("\"shed_rate\": 0"));
+        // v3: every row carries its protection-plan label.
+        assert!(json.contains("vabft-serving/v3"));
+        assert!(json.contains("\"plan\": \"uniform\""));
+    }
+
+    #[test]
+    fn mixed_trace_concatenates_families_with_rebased_weights() {
+        let cfg = ReplayConfig::smoke("mixed", 5);
+        let mixed = build_trace(&cfg);
+        assert_eq!(mixed.family, "mixed");
+        let mut entries = 0;
+        let mut weights = 0;
+        for fam in ["llama-7b", "gpt2", "vit-b32"] {
+            let sub = build_trace(&ReplayConfig { family: fam.to_string(), ..cfg.clone() });
+            entries += sub.entries.len();
+            weights += sub.weights.len();
+        }
+        assert_eq!(mixed.entries.len(), entries);
+        assert_eq!(mixed.weights.len(), weights);
+        // Re-based weight indices stay consistent with the weight table.
+        for e in &mixed.entries {
+            let (k, n, _) = &mixed.weights[e.weight];
+            assert_eq!((e.k, e.n), (*k, *n));
+        }
+        // The heterogeneous trace spans more than one reduction depth —
+        // the property the planner's intensity split depends on.
+        let mut ks: Vec<usize> = mixed.entries.iter().map(|e| e.k).collect();
+        ks.sort_unstable();
+        ks.dedup();
+        assert!(ks.len() > 1, "mixed trace must mix shapes");
+    }
+
+    #[test]
+    fn neutral_plan_replay_matches_uniform_bitwise() {
+        use crate::planner::{PlanEntry, PlanMode, ProtectionPlan, ProtectionScheme};
+        let cfg = ReplayConfig::smoke("gpt2", 13);
+        let trace = build_trace(&cfg);
+        // Cycle the schedule-neutral schemes across the trace's weights.
+        let neutral =
+            [ProtectionScheme::Full, ProtectionScheme::Fused, ProtectionScheme::Replicate];
+        let entries: Vec<PlanEntry> = trace
+            .weights
+            .iter()
+            .enumerate()
+            .map(|(i, (k, n, _))| PlanEntry {
+                weight: i,
+                name: format!("w{i}"),
+                m: cfg.batch,
+                k: *k,
+                n: *n,
+                intensity: crate::planner::arithmetic_intensity(cfg.batch, *k, *n),
+                scheme: neutral[i % neutral.len()],
+                predicted_ns: 0.0,
+            })
+            .collect();
+        let plan = ProtectionPlan { mode: PlanMode::Auto, entries };
+        let ccfg = || CoordinatorConfig { workers: 2, ..Default::default() };
+        let uniform = run_replay(&cfg, ccfg());
+        let planned = run_replay_planned(&cfg, ccfg(), Some(&plan));
+        assert_eq!(planned.faulty, 0, "planned clean replay must verify clean");
+        assert_eq!(
+            planned.fingerprint, uniform.fingerprint,
+            "invariant #9: schedule-neutral plans cannot change output bits"
+        );
     }
 }

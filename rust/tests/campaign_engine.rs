@@ -142,6 +142,65 @@ fn smoke_multi_fault_axis_grid_corrects_where_baseline_recomputes() {
     assert!(outcome.multi_corrected_no_recompute(EncodingMode::Grid) > 0);
 }
 
+/// The protection-plan axis of the smoke grid — the cells that license
+/// the per-layer planner to choose schemes on measured cost alone.
+/// Every member of the planner's vocabulary (full, fused, grid, block-K,
+/// replicate) must detect every injected exponent-MSB upset through the
+/// *production* planned-dispatch path (a `PlanEntry` riding the weight
+/// handle) with zero clean-sweep false positives, and the replication
+/// scheme must recover an output bitwise-equal to the fault-free
+/// reference — its recovery is recomputation from clean inputs, so
+/// anything less is a bug, not noise.
+#[test]
+fn smoke_plan_axis_validates_every_scheme() {
+    use vabft::planner::ProtectionScheme;
+    let cfg = GridConfig::smoke(SMOKE_SEED);
+    let planned = campaign::plan_protection(&cfg);
+    assert!(!planned.is_empty(), "smoke grid lost its plan cells");
+    // The axis covers the full vocabulary per precision.
+    for scheme in ["full", "fused", "grid", "replicate"] {
+        assert!(
+            planned.iter().any(|c| c.scheme.label() == scheme),
+            "plan axis missing scheme {scheme}"
+        );
+    }
+    assert!(
+        planned.iter().any(|c| matches!(c.scheme, ProtectionScheme::BlockK(_))),
+        "plan axis missing the block-K scheme"
+    );
+
+    let outcome = campaign::run(&cfg, 2);
+    assert_eq!(outcome.plan_cells.len(), planned.len());
+    assert!(
+        outcome.plan_gates_hold(),
+        "plan gates failed: {} detected of {} trials, {} false positives over {} clean rows",
+        outcome.total_plan_detected(),
+        outcome.total_plan_trials(),
+        outcome.plan_false_positives,
+        outcome.plan_clean_rows
+    );
+    for c in &outcome.plan_cells {
+        assert_eq!(
+            c.detected, c.trials,
+            "scheme {} missed an injected fault",
+            c.spec.scheme.label()
+        );
+        assert_eq!(c.false_positives, 0, "scheme {} flagged clean rows", c.spec.scheme.label());
+    }
+    assert!(
+        outcome.replication_bitwise_equal(),
+        "replication recovery must be bitwise-equal to the fault-free reference"
+    );
+    // The gate is not vacuous: replication cells recovered real trials.
+    let rep_trials: usize = outcome
+        .plan_cells
+        .iter()
+        .filter(|c| c.spec.scheme == ProtectionScheme::Replicate)
+        .map(|c| c.repaired_bitwise)
+        .sum();
+    assert!(rep_trials > 0, "no replication trials recovered");
+}
+
 /// The full quick grid upholds the paper's headline claims: recall 1.0
 /// over the above-threshold population and zero false positives across
 /// BF16/FP16/FP32/FP64 — the same gate `vabft campaign --quick` enforces
@@ -193,4 +252,9 @@ fn quick_grid_gates_hold() {
         outcome.multi_corrected_no_recompute(EncodingMode::Grid),
         outcome.multi_corrected_no_recompute(EncodingMode::RowOnly)
     );
+    // And the protection-plan axis, under the same gates the planner
+    // smoke step enforces.
+    assert!(!outcome.plan_cells.is_empty(), "quick grid lost its plan axis");
+    assert!(outcome.plan_gates_hold(), "quick plan gates failed");
+    assert!(outcome.replication_bitwise_equal(), "quick replication recovery gate failed");
 }

@@ -22,9 +22,11 @@ use vabft::coordinator::{
     Coordinator, CoordinatorConfig, GemmRequest, InjectSpec, PartitionPolicy,
     PreparedGemmRequest, TopologyConfig,
 };
+use vabft::planner::{PlanMode, ProtectionPlan, ProtectionScheme};
 use vabft::prelude::*;
 use vabft::workload::{
-    arrival_times, run_open_loop, run_replay, ArrivalModel, OpenLoopConfig, ReplayConfig,
+    arrival_times, build_trace, run_open_loop, run_replay, run_replay_planned, ArrivalModel,
+    OpenLoopConfig, ReplayConfig,
 };
 
 const K: usize = 64;
@@ -288,6 +290,107 @@ fn replay_fingerprint_is_shard_invariant() {
             partition.name()
         );
         assert_eq!(r.requests, base.requests);
+        assert_eq!(r.faulty, 0);
+    }
+}
+
+/// The protection-plan restatement of the sharding contract (invariant
+/// #9): a replay whose weights are registered under an explicit *mixed*
+/// plan — full, fused, grid and replicate schemes cycling across the
+/// trace's layers — must produce (a) the same fingerprint at every shard
+/// count and (b) the *uniform* replay's fingerprint, because every
+/// scheme the default planner emits preserves each output element's
+/// rounding schedule. Plan dispatch decides which verifier runs, never
+/// what the GEMM computes.
+#[test]
+fn mixed_protection_plan_replay_is_shard_invariant_and_matches_uniform() {
+    let cfg = ReplayConfig::smoke("gpt2", 0xFACE);
+    let trace = build_trace(&cfg);
+    let mut plan = ProtectionPlan::uniform_for(&trace);
+    plan.mode = PlanMode::Auto;
+    let cycle = [
+        ProtectionScheme::Full,
+        ProtectionScheme::Fused,
+        ProtectionScheme::Grid,
+        ProtectionScheme::Replicate,
+    ];
+    assert!(
+        plan.entries.len() >= cycle.len(),
+        "trace too small to exercise every neutral scheme: {} weights",
+        plan.entries.len()
+    );
+    for (i, e) in plan.entries.iter_mut().enumerate() {
+        e.scheme = cycle[i % cycle.len()];
+    }
+
+    let run = |shards: usize, plan: Option<&ProtectionPlan>| {
+        run_replay_planned(
+            &cfg,
+            CoordinatorConfig {
+                workers: 2,
+                queue_depth: 16,
+                shards,
+                topology: Some(TopologyConfig::uniform(2, 2)),
+                ..Default::default()
+            },
+            plan,
+        )
+    };
+    let uniform = run(1, None);
+    assert_eq!(uniform.faulty, 0);
+    let base = run(1, Some(&plan));
+    assert_eq!(base.faulty, 0, "clean replay flagged under a mixed plan");
+    assert_eq!(
+        base.fingerprint, uniform.fingerprint,
+        "a neutral mixed plan must be invisible in output bits (invariant #9)"
+    );
+    for shards in [2usize, 4] {
+        let r = run(shards, Some(&plan));
+        assert_eq!(
+            r.fingerprint, base.fingerprint,
+            "mixed-plan fingerprint diverged at shards={shards}"
+        );
+        assert_eq!(r.requests, base.requests);
+        assert_eq!(r.faulty, 0);
+    }
+}
+
+/// Block-K is the one plan scheme that is *not* schedule-neutral
+/// (per-K-block aggregation is a different rounding schedule, documented
+/// on `VerifyGranularity`), so its fingerprint may legitimately differ
+/// from the uniform replay's — but it must still be identical across
+/// shard counts: the data-path choice rides the weight handle, and
+/// scheduling still never touches it.
+#[test]
+fn block_k_plan_replay_is_shard_invariant() {
+    let cfg = ReplayConfig::smoke("gpt2", 0xFACE);
+    let trace = build_trace(&cfg);
+    let mut plan = ProtectionPlan::uniform_for(&trace);
+    plan.mode = PlanMode::Auto;
+    for e in plan.entries.iter_mut() {
+        e.scheme = ProtectionScheme::BlockK((e.k / 4).max(1));
+    }
+    let run = |shards: usize| {
+        run_replay_planned(
+            &cfg,
+            CoordinatorConfig {
+                workers: 2,
+                queue_depth: 16,
+                shards,
+                topology: Some(TopologyConfig::uniform(2, 2)),
+                ..Default::default()
+            },
+            Some(&plan),
+        )
+    };
+    let base = run(1);
+    assert_eq!(base.faulty, 0, "clean replay flagged under a block-K plan");
+    for shards in [2usize, 4] {
+        let r = run(shards);
+        assert_eq!(
+            r.fingerprint, base.fingerprint,
+            "block-K plan fingerprint diverged at shards={shards}"
+        );
         assert_eq!(r.faulty, 0);
     }
 }
